@@ -1,0 +1,111 @@
+//! Fleet OTA: an edge server pushes models to a fleet of IoT devices over
+//! TCP, reproducing the paper's network-traffic experiment (§4.3.1,
+//! Figs 13/14) with *measured wire bytes*, plus the staged-provisioning
+//! flow NestQuant enables: push section A first (devices come online in
+//! part-bit mode immediately), stream section B later as a delta.
+//!
+//! ```bash
+//! cargo run --release --example fleet_ota [arch] [devices]
+//! ```
+
+use anyhow::Result;
+use nestquant::device::{transmission_seconds, RPI_4B};
+use nestquant::transport::{pull_frames, Frame, FrameKind, Meter, PushServer};
+
+fn push(frames: Vec<Frame>, devices: usize) -> Result<u64> {
+    let n = frames.len();
+    let server = PushServer::serve_frames(frames, devices)?;
+    let mut handles = Vec::new();
+    for _ in 0..devices {
+        let addr = server.addr;
+        handles.push(std::thread::spawn(move || {
+            let meter = Meter::default();
+            pull_frames(addr, n, &meter).map(|_| meter.snapshot().1)
+        }));
+    }
+    let mut received = 0;
+    for h in handles {
+        received += h.join().unwrap()?;
+    }
+    let (sent, _) = server.join();
+    assert_eq!(sent, received, "wire accounting must balance");
+    Ok(sent)
+}
+
+fn file_frame(path: &std::path::Path, kind: FrameKind) -> Result<Frame> {
+    Ok(Frame {
+        kind,
+        name: path.file_name().unwrap().to_string_lossy().into_owned(),
+        payload: std::fs::read(path)?,
+    })
+}
+
+fn main() -> Result<()> {
+    let root = nestquant::artifacts_dir();
+    let mut args = std::env::args().skip(1);
+    let arch = args.next().unwrap_or_else(|| "cnn_m".into());
+    let devices: usize = args.next().map(|s| s.parse()).transpose()?.unwrap_or(8);
+
+    println!("== fleet OTA: pushing {arch} to {devices} devices (localhost TCP, measured) ==\n");
+
+    // Deployment A: FP32 model.
+    let fp32 = push(
+        vec![file_frame(&root.join(format!("nq/{arch}_fp32.nq")), FrameKind::ModelFull)?],
+        devices,
+    )?;
+
+    // Deployment B: diverse bitwidths (INT8 + INT4 separately).
+    let diverse = push(
+        vec![
+            file_frame(&root.join(format!("nq/{arch}_int8.nq")), FrameKind::ModelFull)?,
+            file_frame(&root.join(format!("nq/{arch}_int4.nq")), FrameKind::ModelFull)?,
+        ],
+        devices,
+    )?;
+
+    // Deployment C: one NestQuant container (both models in one file).
+    let nest_path = root.join(format!("nq/{arch}_n8h4.nq"));
+    let nest = push(vec![file_frame(&nest_path, FrameKind::ModelFull)?], devices)?;
+
+    // Deployment D: staged provisioning — section A now, section B later.
+    let container = nestquant::container::read(&nest_path, true)?;
+    let blob = std::fs::read(&nest_path)?;
+    let split = container.section_b_offset as usize;
+    let stage_a = push(
+        vec![Frame {
+            kind: FrameKind::ModelPart,
+            name: format!("{arch}.secA"),
+            payload: blob[..split].to_vec(),
+        }],
+        devices,
+    )?;
+    let stage_b = push(
+        vec![Frame {
+            kind: FrameKind::ModelDelta,
+            name: format!("{arch}.secB"),
+            payload: blob[split..].to_vec(),
+        }],
+        devices,
+    )?;
+
+    let row = |name: &str, bytes: u64| {
+        println!(
+            "  {name:<28} {:>10.2} MB wire   ~{:>6.2}s on {} fleet-wide",
+            bytes as f64 / 1e6,
+            transmission_seconds(&RPI_4B, bytes),
+            RPI_4B.name
+        );
+    };
+    row("FP32", fp32);
+    row("diverse INT8+INT4", diverse);
+    row("NestQuant INT(8|4)", nest);
+    row("  staged: section A first", stage_a);
+    row("  staged: section B delta", stage_b);
+    println!(
+        "\nNestQuant vs diverse: {:.1}% less traffic; vs FP32: {:.1}% less",
+        (1.0 - nest as f64 / diverse as f64) * 100.0,
+        (1.0 - nest as f64 / fp32 as f64) * 100.0
+    );
+    println!("staged provisioning gets devices serving after {:.1}% of the bytes", stage_a as f64 / nest as f64 * 100.0);
+    Ok(())
+}

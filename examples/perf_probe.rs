@@ -1,0 +1,27 @@
+// perf probe: a0 vs a8 latency per arch
+use nestquant::container::{self, TensorData};
+use nestquant::runtime::{Engine, Manifest};
+fn main() -> anyhow::Result<()> {
+    let root = nestquant::artifacts_dir();
+    let m = Manifest::load(&root)?;
+    let engine = Engine::cpu()?;
+    for arch in ["cnn_m", "vit_s"] {
+        let spec = m.model(arch)?;
+        let c = container::read(&m.abs(&spec.fp32_container), false)?;
+        let mut bufs = Vec::new();
+        for (t, p) in c.tensors.iter().zip(&spec.params) {
+            if let TensorData::Fp32(v) = &t.data { bufs.push(engine.upload(v, &p.shape)?); }
+        }
+        let (x, _) = m.load_val()?;
+        let il = m.img * m.img * m.channels;
+        let input = engine.upload(&x[..m.batch * il], &[m.batch, m.img, m.img, m.channels])?;
+        for act in [0u8, 8] {
+            let exe = engine.load_hlo(&m.abs(&spec.hlo[&act]))?;
+            let t0 = std::time::Instant::now();
+            let iters = 10;
+            for _ in 0..iters { let _ = exe.run(&input, &bufs)?; }
+            println!("{arch} a{act}: {:.1}ms/batch", t0.elapsed().as_secs_f64()*1000.0/iters as f64);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Quickstart: load a NestQuant model, classify an image, switch between
+//! full-bit and part-bit, and see what each switch actually costs.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use nestquant::coordinator::Coordinator;
+
+fn main() -> Result<()> {
+    let root = nestquant::artifacts_dir();
+    let arch = std::env::args().nth(1).unwrap_or_else(|| "cnn_m".into());
+
+    // One .nq container holds BOTH models: INT8 full-bit and INT4 part-bit.
+    let mut coord = Coordinator::new(&root, &arch, 8, 4)?;
+    let (sec_a, sec_b) = coord.manager.section_bytes();
+    println!("container sections: w_high+scales {:.1}KB | w_low {:.1}KB",
+             sec_a as f64 / 1e3, sec_b as f64 / 1e3);
+
+    // 1. Launch in part-bit mode — reads only section A.
+    let cost = coord.manager.load_part_bit(&mut coord.ledger)?;
+    println!("\n[part-bit launch] paged in {:.1}KB in {:.2}ms",
+             cost.page_in_bytes as f64 / 1e3, cost.micros as f64 / 1e3);
+
+    // Classify a validation image.
+    let (x, y) = coord.manifest.load_val()?;
+    let img_len = coord.manifest.img * coord.manifest.img * coord.manifest.channels;
+    let mut batch = vec![0f32; coord.manifest.batch * img_len];
+    batch[..img_len].copy_from_slice(&x[..img_len]);
+    let logits = coord.infer_batch(&batch)?;
+    let pred = argmax(&logits[..coord.manifest.num_classes]);
+    println!("[part-bit] image 0: predicted class {pred}, label {}", y[0]);
+
+    // 2. Upgrade to full-bit: page in w_low ONLY (zero page-out).
+    let cost = coord.manager.upgrade(&mut coord.ledger)?;
+    println!("\n[upgrade] paged in {:.1}KB, paged out 0B, in {:.2}ms",
+             cost.page_in_bytes as f64 / 1e3, cost.micros as f64 / 1e3);
+    let logits = coord.infer_batch(&batch)?;
+    println!("[full-bit] image 0: predicted class {}", argmax(&logits[..coord.manifest.num_classes]));
+
+    // 3. Accuracy of both variants over the validation set.
+    let full_acc = coord.eval_accuracy(Some(1024))?;
+    let cost = coord.manager.downgrade(&mut coord.ledger)?;
+    println!("\n[downgrade] paged out {:.1}KB, paged in 0B, in {:.2}ms",
+             cost.page_out_bytes as f64 / 1e3, cost.micros as f64 / 1e3);
+    let part_acc = coord.eval_accuracy(Some(1024))?;
+    println!("\naccuracy@1024: full-bit INT8 = {full_acc:.3}, part-bit INT4 = {part_acc:.3}");
+    println!("\n{}", coord.metrics.summary());
+    Ok(())
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0
+}

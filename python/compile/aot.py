@@ -1,0 +1,150 @@
+"""AOT lowering: JAX model graphs → HLO text artifacts for the Rust runtime.
+
+Emits HLO *text* (not serialized HloModuleProto): the image's
+xla_extension 0.5.1 rejects jax≥0.5 protos (64-bit instruction ids); the
+text parser reassigns ids and round-trips cleanly — see
+/opt/xla-example/README.md.
+
+Per architecture we lower three graphs at the serving batch size, one per
+activation config: a0 (FP32 baseline), a6 (INT6 nesting), a8 (INT8
+nesting). Weights are HLO *arguments*, so Rust switches between FP32 /
+full-bit / part-bit by swapping weight buffers — the executable never
+changes (this is what makes model switching cheap on-device).
+
+Also exports the validation set and golden logits as raw little-endian
+binaries (Rust has no npz reader), plus artifacts/manifest.json describing
+everything.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data, model, quantizer, train
+
+BATCH = 16
+ACT_CONFIGS = (0, 6, 8)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(arch: str, act_bits: int) -> str:
+    specs = model.param_specs(arch)
+    x_spec = jax.ShapeDtypeStruct((BATCH, model.IMG, model.IMG, 3), jnp.float32)
+    p_specs = [jax.ShapeDtypeStruct(s.shape, jnp.float32) for s in specs]
+
+    def fn(x, *params):
+        return (model.forward(arch, list(params), x, act_bits),)
+
+    lowered = jax.jit(fn).lower(x_spec, *p_specs)
+    return to_hlo_text(lowered)
+
+
+def _write_raw(path: str, arr: np.ndarray, dtype) -> None:
+    np.ascontiguousarray(arr, dtype=dtype).tofile(path)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--archs", nargs="*", default=list(model.ARCHS))
+    args = ap.parse_args()
+
+    # The shipped HLO must contain the real Pallas kernel lowering.
+    os.environ["NESTQUANT_KERNELS"] = "pallas"
+
+    hlodir = os.path.join(args.out, "hlo")
+    ddir = os.path.join(args.out, "data")
+    edir = os.path.join(ddir, "expected")
+    for d in (hlodir, ddir, edir):
+        os.makedirs(d, exist_ok=True)
+
+    ds = data.load(cache_dir=ddir)
+    _write_raw(os.path.join(ddir, "val_x.f32"), ds["x_val"], np.float32)
+    _write_raw(os.path.join(ddir, "val_y.u32"), ds["y_val"], np.uint32)
+
+    manifest = {
+        "batch": BATCH,
+        "img": model.IMG,
+        "channels": 3,
+        "num_classes": model.NUM_CLASSES,
+        "data": {
+            "val_x": "data/val_x.f32",
+            "val_y": "data/val_y.u32",
+            "count": int(len(ds["y_val"])),
+        },
+        "models": {},
+    }
+
+    sample = jnp.asarray(ds["x_val"][:BATCH])
+    for arch in args.archs:
+        specs = model.param_specs(arch)
+        entry = {
+            "params": [
+                {"name": s.name, "shape": list(s.shape), "quantized": s.quantized}
+                for s in specs
+            ],
+            "hlo": {},
+            "containers": {
+                "fp32": f"nq/{arch}_fp32.nq",
+                "mono": {str(k): f"nq/{arch}_int{k}.nq" for k in (2, 3, 4, 5, 6, 7, 8)},
+            },
+            "expected": {},
+        }
+        params = train.load_params(os.path.join(args.out, "weights", f"{arch}.npz"))
+        for act in ACT_CONFIGS:
+            path = os.path.join(hlodir, f"{arch}_a{act}.hlo.txt")
+            if not os.path.exists(path):
+                print(f"[aot] lowering {arch} a{act} ...", flush=True)
+                text = lower_model(arch, act)
+                with open(path, "w") as f:
+                    f.write(text)
+            entry["hlo"][str(act)] = f"hlo/{arch}_a{act}.hlo.txt"
+
+        # Golden logits through the *Pallas* graph for Rust cross-checks:
+        # (fp32 weights, a0) and (INT8 full-bit weights, a8).
+        logits_fp32 = np.asarray(
+            jax.jit(lambda x, *ps: model.forward(arch, list(ps), x, 0))(sample, *params)
+        )
+        mask = [s.quantized for s in specs]
+        w_ints, scales = quantizer.quantize_model(params, mask, 8, "adaptive")
+        dq = quantizer.dequant_model(params, w_ints, scales)
+        logits_int8 = np.asarray(
+            jax.jit(lambda x, *ps: model.forward(arch, list(ps), x, 8))(sample, *dq)
+        )
+        _write_raw(os.path.join(edir, f"{arch}_a0_fp32.f32"), logits_fp32, np.float32)
+        _write_raw(os.path.join(edir, f"{arch}_a8_int8.f32"), logits_int8, np.float32)
+        entry["expected"]["a0_fp32"] = f"data/expected/{arch}_a0_fp32.f32"
+        entry["expected"]["a8_int8"] = f"data/expected/{arch}_a8_int8.f32"
+
+        # NestQuant containers written by compile.nestquant; list what exists.
+        nest = {}
+        for n in (8, 6):
+            for h in range(2, n):
+                rel = f"nq/{arch}_n{n}h{h}.nq"
+                if os.path.exists(os.path.join(args.out, rel)):
+                    nest[f"{n}|{h}"] = rel
+        entry["containers"]["nest"] = nest
+        manifest["models"][arch] = entry
+        print(f"[aot] {arch} done", flush=True)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print("[aot] manifest written", flush=True)
+
+
+if __name__ == "__main__":
+    main()

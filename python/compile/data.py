@@ -1,0 +1,100 @@
+"""SynthShapes: the procedural stand-in for ImageNet-1K.
+
+The paper evaluates on ImageNet-1K, which is unavailable here (repro band
+0/5). SynthShapes is a deterministic, seeded 10-class 24x24x3 image
+classification task whose classes are parametric textures/shapes with
+per-sample jitter (phase, color, position, noise). It is hard enough that
+quantization perturbations measurably move top-1 accuracy — which is the
+only property the NestQuant evaluation needs from the dataset (DESIGN.md
+§2) — while being trainable to high accuracy in seconds at build time.
+
+Class taxonomy:
+  0 horizontal bars   1 vertical bars    2 checkerboard   3 ring
+  4 cross             5 diagonal stripes 6 radial gradient 7 blob square
+  8 half-plane        9 dot grid
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+IMG = 24
+CHANNELS = 3
+NUM_CLASSES = 10
+TRAIN_N = 8192
+VAL_N = 2048
+SEED = 20250710
+
+
+def _coords() -> tuple[np.ndarray, np.ndarray]:
+    ys, xs = np.mgrid[0:IMG, 0:IMG].astype(np.float32)
+    return ys, xs
+
+
+def _sample(cls: int, rng: np.random.Generator) -> np.ndarray:
+    ys, xs = _coords()
+    period = rng.uniform(3.0, 6.0)
+    phase = rng.uniform(0, period)
+    cx, cy = rng.uniform(7, IMG - 7, size=2)
+    if cls == 0:
+        base = ((ys + phase) % period < period / 2).astype(np.float32)
+    elif cls == 1:
+        base = ((xs + phase) % period < period / 2).astype(np.float32)
+    elif cls == 2:
+        base = ((((xs + phase) // (period / 2)) + ((ys + phase) // (period / 2))) % 2)
+    elif cls == 3:
+        r = np.sqrt((xs - cx) ** 2 + (ys - cy) ** 2)
+        r0 = rng.uniform(4, 8)
+        base = (np.abs(r - r0) < 1.8).astype(np.float32)
+    elif cls == 4:
+        wdt = rng.uniform(1.5, 3.0)
+        base = ((np.abs(xs - cx) < wdt) | (np.abs(ys - cy) < wdt)).astype(np.float32)
+    elif cls == 5:
+        base = (((xs + ys + phase) % period) < period / 2).astype(np.float32)
+    elif cls == 6:
+        r = np.sqrt((xs - cx) ** 2 + (ys - cy) ** 2)
+        base = np.clip(1.0 - r / rng.uniform(10, 16), 0, 1)
+    elif cls == 7:
+        half = rng.uniform(3, 6)
+        base = ((np.abs(xs - cx) < half) & (np.abs(ys - cy) < half)).astype(np.float32)
+    elif cls == 8:
+        theta = rng.uniform(0, 2 * np.pi)
+        base = (((xs - IMG / 2) * np.cos(theta) + (ys - IMG / 2) * np.sin(theta)) > 0)
+        base = base.astype(np.float32)
+    else:  # 9: dot grid
+        sp = rng.uniform(4, 7)
+        base = ((((xs + phase) % sp) < 2) & (((ys + phase) % sp) < 2)).astype(np.float32)
+
+    fg = rng.uniform(0.4, 1.0, size=3).astype(np.float32)
+    bg = rng.uniform(0.0, 0.35, size=3).astype(np.float32)
+    img = base[..., None] * fg + (1 - base[..., None]) * bg
+    img += rng.normal(0, 0.06, size=img.shape).astype(np.float32)
+    return np.clip(img, 0.0, 1.0).astype(np.float32)
+
+
+def make_split(n: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """Generate `n` (image, label) pairs deterministically from `seed`."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, NUM_CLASSES, size=n).astype(np.int32)
+    imgs = np.stack([_sample(int(c), rng) for c in labels])
+    return imgs, labels
+
+
+def load(cache_dir: str | None = None) -> dict[str, np.ndarray]:
+    """Train/val splits, optionally cached as .npz under `cache_dir`."""
+    if cache_dir:
+        import os
+
+        path = os.path.join(cache_dir, "synthshapes.npz")
+        if os.path.exists(path):
+            z = np.load(path)
+            return {k: z[k] for k in z.files}
+    xtr, ytr = make_split(TRAIN_N, SEED)
+    xva, yva = make_split(VAL_N, SEED + 1)
+    out = {"x_train": xtr, "y_train": ytr, "x_val": xva, "y_val": yva}
+    if cache_dir:
+        import os
+
+        os.makedirs(cache_dir, exist_ok=True)
+        np.savez_compressed(os.path.join(cache_dir, "synthshapes.npz"), **out)
+    return out

@@ -1,0 +1,12 @@
+"""L1: Pallas kernels for NestQuant's compute hot-spots.
+
+- ``quantize``: activation fake-quant (absmax reduction + elementwise pass)
+- ``matmul``:   fused activation-quantized tiled matmul
+- ``nesting``:  integer weight decompose / residual / recompose
+- ``ref``:      pure-jnp oracle for all of the above
+
+All Pallas kernels run with interpret=True so the lowered HLO executes on
+the CPU PJRT plugin (see /opt/xla-example/README.md).
+"""
+
+from . import matmul, nesting, quantize, ref  # noqa: F401

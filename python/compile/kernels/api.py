@@ -1,0 +1,47 @@
+"""Backend dispatch for the L1 kernels.
+
+The L2 models call this facade. Backend selection:
+
+  * ``pallas`` (default) — the real Pallas kernels (interpret=True). Used
+    when lowering the shipped artifacts so the HLO contains the kernels'
+    op structure.
+  * ``ref`` — the pure-jnp oracle. Used for the large PTQ accuracy sweeps
+    (hundreds of evals) where interpret-mode grid loops are pure overhead.
+
+pytest asserts the two backends agree to float tolerance on kernel outputs
+and on whole-model logits, so sweep numbers and shipped-artifact numbers
+are interchangeable (python/tests/test_backends.py).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+from . import matmul as _pallas_mm
+from . import quantize as _pallas_q
+from . import ref as _ref
+
+_ENV = "NESTQUANT_KERNELS"
+
+
+def backend() -> str:
+    b = os.environ.get(_ENV, "pallas")
+    if b not in ("pallas", "ref"):
+        raise ValueError(f"{_ENV} must be 'pallas' or 'ref', got {b!r}")
+    return b
+
+
+def fake_quant_dynamic(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    if bits == 0:
+        return x
+    if backend() == "pallas":
+        return _pallas_q.fake_quant_dynamic(x, bits)
+    return _ref.fake_quant_dynamic(x, bits)
+
+
+def qmatmul(x: jnp.ndarray, w: jnp.ndarray, bits: int) -> jnp.ndarray:
+    if backend() == "pallas":
+        return _pallas_mm.qmatmul(x, w, bits)
+    return _ref.qmatmul(x, w, bits)

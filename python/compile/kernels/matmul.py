@@ -1,0 +1,85 @@
+"""L1 Pallas kernel: activation-quantized tiled matmul (the hot-spot).
+
+``qmatmul(x, w, bits)`` computes ``fake_quant(x) @ w`` as one fused Pallas
+kernel: the activation tile is quantize-dequantized in VMEM right before
+feeding the MXU-shaped dot, so the quantized activation never round-trips
+to HBM. Weights arrive already dequantized (the Rust device dequantizes
+packed integers at page-in; see rust/src/coordinator/manager.rs).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): grid tiles the output into
+(BM, BN) blocks with a K-loop as the innermost grid axis; BM=BN=BK=128
+matches the 128x128 MXU systolic array, and the f32 accumulator lives in
+the output VMEM block across K steps (revisited output block). VMEM
+footprint per step = BM*BK + BK*BN + BM*BN floats ≈ 192 KiB, far under
+the ~16 MiB/core budget. interpret=True for CPU-PJRT execution.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .quantize import absmax
+
+_BM = 128
+_BN = 128
+_BK = 128
+
+
+def _cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b
+
+
+def _qmatmul_kernel(x_ref, w_ref, s_ref, o_ref, *, bits: int, nk: int):
+    """One (BM, BN) output tile; K is the innermost grid axis."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    if bits:
+        lo, hi = ref.int_min_max(bits)
+        s = s_ref[0, 0]
+        x = jnp.clip(jnp.round(x / s), lo, hi) * s
+    o_ref[...] += jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def qmatmul(x: jnp.ndarray, w: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """fake_quant(x, bits) @ w with 2-D x (M,K) and w (K,N); bits=0 → plain."""
+    m, kdim = x.shape
+    k2, n = w.shape
+    assert kdim == k2, (x.shape, w.shape)
+    if bits == 0:
+        # FP32 graph: no quantization, and training must differentiate
+        # through this path — use the native dot (Pallas interpret kernels
+        # are inference-only).
+        return x @ w
+    s = absmax(x, bits)
+
+    bm, bn, bk = min(_BM, m), min(_BN, n), min(_BK, kdim)
+    gm, gn, gk = _cdiv(m, bm), _cdiv(n, bn), _cdiv(kdim, bk)
+    # Pad to block multiples; zero-padding is exact for matmul and for
+    # fake-quant (scale is computed on the unpadded tensor; fq(0) == 0).
+    xp = jnp.pad(x, ((0, gm * bm - m), (0, gk * bk - kdim)))
+    wp = jnp.pad(w, ((0, gk * bk - kdim), (0, gn * bn - n)))
+
+    out = pl.pallas_call(
+        functools.partial(_qmatmul_kernel, bits=bits, nk=gk),
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((gm * bm, gn * bn), jnp.float32),
+        interpret=True,
+    )(xp, wp, jnp.asarray(s, jnp.float32).reshape(1, 1))
+    return out[:m, :n]

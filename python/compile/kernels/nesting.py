@@ -1,0 +1,108 @@
+"""L1 Pallas kernels: integer weight decomposition / recomposition.
+
+The bit-level core of NestQuant (paper §3.2, Fig 2): splitting an INTn
+tensor into a higher-h-bit tensor and a lower-(l+1)-bit residual, and the
+inverse recomposition performed at model-upgrade time. The Rust device
+does the production recompose (rust/src/nest/); these kernels exist so the
+*same* math is available inside JAX graphs (pipeline validation, ablation
+sweeps) and are checked against ref.py and against Rust via the container
+round-trip tests.
+
+Integers travel as int32 lanes (Pallas interpret mode has no narrow int
+vector types on CPU); the value ranges are enforced by the kernels'
+clipping, exactly as the packed INTk storage enforces them on disk.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+_BLOCK = 65536  # see quantize.py: 256 KiB VMEM blocks, minimal grid steps
+
+
+def _cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b
+
+
+def _decompose_kernel(w_ref, hi_ref, lo_ref, *, n: int, h: int, compensate: bool):
+    """BitShift split of one tile: hi = w >> l (arithmetic), lo = residual."""
+    l = n - h
+    w = w_ref[...]
+    hi = jnp.floor_divide(w, 2**l)  # arithmetic right shift for signed ints
+    res = w - hi * (2**l)
+    bits = l + 1 if compensate else l
+    rlo, rhi = ref.int_min_max(bits)
+    hi_ref[...] = hi
+    lo_ref[...] = jnp.clip(res, rlo, rhi)
+
+
+def _residual_kernel(w_ref, hi_ref, lo_ref, *, n: int, h: int, compensate: bool):
+    """Residual w_low = clip(w_int - w_high * 2^l) for an arbitrary w_high."""
+    l = n - h
+    bits = l + 1 if compensate else l
+    rlo, rhi = ref.int_min_max(bits)
+    lo_ref[...] = jnp.clip(w_ref[...] - hi_ref[...] * (2**l), rlo, rhi)
+
+
+def _recompose_kernel(hi_ref, lo_ref, o_ref, *, l: int):
+    o_ref[...] = hi_ref[...] * (2**l) + lo_ref[...]
+
+
+def _tiled_call(kernel, outs, *arrays):
+    """Run an elementwise kernel over 1-D tiles of identically-shaped arrays."""
+    shape = arrays[0].shape
+    size = arrays[0].size
+    padded = _cdiv(size, _BLOCK) * _BLOCK
+    flats = []
+    for a in arrays:
+        f = a.reshape(-1)
+        if padded != size:
+            f = jnp.pad(f, (0, padded - size))
+        flats.append(f.reshape(1, padded))
+    nblk = padded // _BLOCK
+    spec = pl.BlockSpec((1, _BLOCK), lambda i: (0, i))
+    res = pl.pallas_call(
+        kernel,
+        grid=(nblk,),
+        in_specs=[spec] * len(arrays),
+        out_specs=[spec] * outs if outs > 1 else spec,
+        out_shape=(
+            [jax.ShapeDtypeStruct((1, padded), jnp.int32) for _ in range(outs)]
+            if outs > 1
+            else jax.ShapeDtypeStruct((1, padded), jnp.int32)
+        ),
+        interpret=True,
+    )(*flats)
+    if outs == 1:
+        res = (res,)
+    return tuple(r.reshape(-1)[:size].reshape(shape) for r in res)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3))
+def decompose_shift(w_int: jnp.ndarray, n: int, h: int, compensate: bool = True):
+    """BitShift decomposition (Eq. 7): returns (w_high, w_low)."""
+    k = functools.partial(_decompose_kernel, n=n, h=h, compensate=compensate)
+    return _tiled_call(k, 2, w_int.astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3, 4))
+def residual_low(w_int: jnp.ndarray, w_high: jnp.ndarray, n: int, h: int,
+                 compensate: bool = True):
+    """w_low for an arbitrary (adaptively-rounded) w_high (Eq. 11)."""
+    k = functools.partial(_residual_kernel, n=n, h=h, compensate=compensate)
+    (lo,) = _tiled_call(k, 1, w_int.astype(jnp.int32), w_high.astype(jnp.int32))
+    return lo
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def recompose(w_high: jnp.ndarray, w_low: jnp.ndarray, l: int):
+    """Upgrade path (Eq. 6): w_int = w_high * 2^l + w_low."""
+    k = functools.partial(_recompose_kernel, l=l)
+    (w,) = _tiled_call(k, 1, w_high.astype(jnp.int32), w_low.astype(jnp.int32))
+    return w

@@ -1,0 +1,110 @@
+"""L1 Pallas kernels: activation fake-quantization.
+
+The fake-quant (quantize → dequantize) of activations is applied in front
+of every conv/dense layer of the L2 models (paper §4.2 uses A8 for INT8
+nesting and A6 for INT6 nesting). The scale is a dynamic per-tensor
+max-abs reduction computed by a first Pallas pass; the elementwise
+round/clip/rescale is a second tiled pass.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret mode lowers the kernel into
+plain HLO ops that ship inside ``artifacts/*.hlo.txt``.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the elementwise pass is
+VPU-shaped — blocks are (8·k, 128)-aligned tiles streamed HBM→VMEM by the
+BlockSpec grid; the reduction pass accumulates per-block maxima in a
+(1, 1) SMEM-like scratch output.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Tile edge for the elementwise grid. 64Ki f32 lanes = 256 KiB per VMEM
+# block — well inside the ~16 MiB/core budget, and two orders of magnitude
+# fewer grid steps than a 512-lane tile (each interpret-mode grid step
+# lowers to an XLA loop iteration, so step count dominates CPU latency;
+# on TPU the same choice amortizes the HBM->VMEM pipeline).
+_BLOCK = 65536
+
+
+def _cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b
+
+
+def _absmax_kernel(x_ref, o_ref):
+    """Grid-wide max|x| accumulated into a (1,1) output block."""
+    i = pl.program_id(0)
+    block_max = jnp.max(jnp.abs(x_ref[...]))
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[0, 0] = block_max
+
+    @pl.when(i != 0)
+    def _acc():
+        o_ref[0, 0] = jnp.maximum(o_ref[0, 0], block_max)
+
+
+def _fake_quant_kernel(x_ref, s_ref, o_ref, *, bits: int):
+    """Elementwise s*clip(round(x/s), lo, hi) over one tile."""
+    lo, hi = ref.int_min_max(bits)
+    s = s_ref[0, 0]
+    q = jnp.clip(jnp.round(x_ref[...] / s), lo, hi)
+    o_ref[...] = q * s
+
+
+def _pad_to_block(flat: jnp.ndarray) -> jnp.ndarray:
+    pad = _cdiv(flat.shape[0], _BLOCK) * _BLOCK - flat.shape[0]
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def absmax(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Dynamic per-tensor activation scale via a Pallas reduction pass."""
+    flat = _pad_to_block(x.reshape(-1)).reshape(1, -1)
+    nblk = flat.shape[1] // _BLOCK
+    m = pl.pallas_call(
+        _absmax_kernel,
+        grid=(nblk,),
+        in_specs=[pl.BlockSpec((1, _BLOCK), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), x.dtype),
+        interpret=True,
+    )(flat)
+    _, hi = ref.int_min_max(bits)
+    return jnp.maximum(m[0, 0], 1e-8) / hi
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def fake_quant(x: jnp.ndarray, scale: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Tiled fake-quant of `x` with a given scalar scale."""
+    shape = x.shape
+    flat = _pad_to_block(x.reshape(-1)).reshape(1, -1)
+    nblk = flat.shape[1] // _BLOCK
+    s = jnp.asarray(scale, x.dtype).reshape(1, 1)
+    y = pl.pallas_call(
+        functools.partial(_fake_quant_kernel, bits=bits),
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec((1, _BLOCK), lambda i: (0, i)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, _BLOCK), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct(flat.shape, x.dtype),
+        interpret=True,
+    )(flat, s)
+    return y.reshape(-1)[: x.size].reshape(shape)
+
+
+def fake_quant_dynamic(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Dynamic per-tensor fake-quant (scale pass + elementwise pass)."""
+    return fake_quant(x, absmax(x, bits), bits)

@@ -1,0 +1,87 @@
+"""Pure-jnp oracle for every L1 Pallas kernel.
+
+These are the *correctness references*: small, obviously-right jnp
+implementations of the same math the Pallas kernels compute. pytest
+(``python/tests/``) asserts allclose between each kernel and its ref over
+hypothesis-driven shape/bitwidth sweeps. Nothing here is ever lowered into
+the shipped artifacts.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def int_min_max(bits: int) -> tuple[int, int]:
+    """Signed-integer range [min, max] for a `bits`-bit type (paper §3.1)."""
+    return -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+
+
+def act_scale(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Dynamic per-tensor activation scale: max|x| / (2^{b-1}-1).
+
+    Data-free (computed from the live batch), matching the A-bit settings
+    of paper §4.2 without a calibration set.
+    """
+    _, hi = int_min_max(bits)
+    return jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / hi
+
+
+def fake_quant(x: jnp.ndarray, scale: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Quantize-dequantize: s * clip(round(x/s), min, max). Eq. (2)+(3)."""
+    lo, hi = int_min_max(bits)
+    q = jnp.clip(jnp.round(x / scale), lo, hi)
+    return q * scale
+
+
+def fake_quant_dynamic(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """fake_quant with the dynamic per-tensor scale."""
+    return fake_quant(x, act_scale(x, bits), bits)
+
+
+def qmatmul(x: jnp.ndarray, w: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Activation-quantized matmul: fq(x) @ w.
+
+    `w` arrives already dequantized (the device dequantizes packed weights
+    at page-in time), so only the activation side is quantized in-graph.
+    bits==0 disables activation quantization (FP32 baseline).
+    """
+    if bits:
+        x = fake_quant_dynamic(x, bits)
+    return x @ w
+
+
+def decompose_shift(w_int: jnp.ndarray, n: int, h: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """BitShift integer weight decomposition (paper Eq. 6/7, Fig 2).
+
+    w_high = arithmetic-right-shift(w_int, l)  (== floor(w_int / 2^l))
+    w_low  = w_int - w_high * 2^l              (in [0, 2^l-1] for shift)
+    """
+    l = n - h
+    w_high = jnp.floor_divide(w_int, 2**l)
+    w_low = w_int - w_high * (2**l)
+    return w_high, w_low
+
+
+def residual_low(w_int: jnp.ndarray, w_high: jnp.ndarray, n: int, h: int,
+                 compensate: bool = True) -> jnp.ndarray:
+    """Lower-bit residual for an arbitrary w_high (paper Eq. 11 + §3.3.2).
+
+    Without compensation the residual is clipped to signed INTl; with the
+    extra 1-bit it is clipped to signed INT(l+1), which §3.3.2 proves is
+    lossless: residual range ⊆ [-2^l, 2^l - 1].
+    """
+    l = n - h
+    bits = l + 1 if compensate else l
+    lo, hi = int_min_max(bits)
+    return jnp.clip(w_int - w_high * (2**l), lo, hi)
+
+
+def recompose(w_high: jnp.ndarray, w_low: jnp.ndarray, l: int) -> jnp.ndarray:
+    """Full-bit recomposition: w_high * 2^l + w_low (paper Eq. 6)."""
+    return w_high * (2**l) + w_low
+
+
+def dequant(w_int: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """ŵ = s · w_int (paper Eq. 3); scale broadcasts over the last axis."""
+    return w_int.astype(jnp.float32) * scale

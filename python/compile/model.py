@@ -1,0 +1,350 @@
+"""L2: the model zoo — JAX forward passes calling the L1 Pallas kernels.
+
+The paper's zoo (ResNet/DenseNet/ResNeXt, MobileNet/ShuffleNet/
+EfficientNet, ViT/DeiT/Swin) is replaced by three families at laptop scale
+(DESIGN.md §2): residual CNNs (`cnn_t/s/m/l`), depthwise-separable CNNs
+(`mobile_t/s`), and pre-norm ViTs (`vit_t/s`). The family split is what
+matters: the paper's Eq. 12 / Fig 7 claims are about how the critical
+nested combination moves across families and sizes.
+
+Design contract with the Rust runtime:
+  * ``forward(arch, params, x, act_bits)`` is a pure function; `params` is
+    a flat, deterministically-ordered list matching ``param_specs(arch)``.
+  * Weights enter as *arguments*, already dequantized — one lowered HLO per
+    (arch, act_bits) serves FP32 / full-bit / part-bit by swapping buffers.
+  * Every dense layer goes through the fused Pallas ``qmatmul``; every conv
+    input goes through the Pallas ``fake_quant`` pair; `act_bits == 0`
+    disables activation quantization (FP32 baseline graph).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import api as kapi
+
+NUM_CLASSES = 10
+IMG = 24
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """One model parameter: name, shape, and whether it is weight-quantized."""
+
+    name: str
+    shape: tuple[int, ...]
+    quantized: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class CnnArch:
+    name: str
+    stem: int
+    blocks: tuple[tuple[int, int], ...]  # (channels, stride) per residual block
+
+
+@dataclasses.dataclass(frozen=True)
+class MobileArch:
+    name: str
+    stem: int
+    blocks: tuple[tuple[int, int], ...]  # (channels, stride) per ds-block
+
+
+@dataclasses.dataclass(frozen=True)
+class VitArch:
+    name: str
+    dim: int
+    depth: int
+    heads: int
+    mlp_ratio: float
+    patch: int
+
+
+ARCHS: dict[str, object] = {
+    "cnn_t": CnnArch("cnn_t", 8, ((8, 1),)),
+    "cnn_s": CnnArch("cnn_s", 16, ((16, 1), (32, 2))),
+    "cnn_m": CnnArch("cnn_m", 24, ((24, 1), (48, 2), (48, 1))),
+    "cnn_l": CnnArch("cnn_l", 32, ((32, 1), (64, 2), (64, 1), (128, 2), (128, 1))),
+    "mobile_t": MobileArch("mobile_t", 16, ((24, 2), (32, 1))),
+    "mobile_s": MobileArch("mobile_s", 24, ((32, 2), (48, 1), (64, 2))),
+    "vit_t": VitArch("vit_t", 48, 2, 4, 2.0, 6),
+    "vit_s": VitArch("vit_s", 96, 4, 4, 2.0, 4),
+}
+
+FAMILIES = {
+    "cnn": ["cnn_t", "cnn_s", "cnn_m", "cnn_l"],
+    "mobile": ["mobile_t", "mobile_s"],
+    "vit": ["vit_t", "vit_s"],
+}
+
+
+def family_of(arch_name: str) -> str:
+    for fam, members in FAMILIES.items():
+        if arch_name in members:
+            return fam
+    raise KeyError(arch_name)
+
+
+# --------------------------------------------------------------------------
+# Parameter specs
+# --------------------------------------------------------------------------
+
+
+def param_specs(arch_name: str) -> list[ParamSpec]:
+    """Deterministic flat parameter order for an architecture."""
+    arch = ARCHS[arch_name]
+    if isinstance(arch, CnnArch):
+        return _cnn_specs(arch)
+    if isinstance(arch, MobileArch):
+        return _mobile_specs(arch)
+    if isinstance(arch, VitArch):
+        return _vit_specs(arch)
+    raise TypeError(arch)
+
+
+def _cnn_specs(a: CnnArch) -> list[ParamSpec]:
+    specs = [
+        ParamSpec("stem.w", (3, 3, 3, a.stem), True),
+        ParamSpec("stem.b", (a.stem,), False),
+    ]
+    cin = a.stem
+    for i, (ch, stride) in enumerate(a.blocks):
+        p = f"block{i}"
+        specs += [
+            ParamSpec(f"{p}.conv1.w", (3, 3, cin, ch), True),
+            ParamSpec(f"{p}.conv1.b", (ch,), False),
+            ParamSpec(f"{p}.conv2.w", (3, 3, ch, ch), True),
+            ParamSpec(f"{p}.conv2.b", (ch,), False),
+        ]
+        if stride != 1 or cin != ch:
+            specs += [
+                ParamSpec(f"{p}.proj.w", (1, 1, cin, ch), True),
+                ParamSpec(f"{p}.proj.b", (ch,), False),
+            ]
+        cin = ch
+    specs += [
+        ParamSpec("head.w", (cin, NUM_CLASSES), True),
+        ParamSpec("head.b", (NUM_CLASSES,), False),
+    ]
+    return specs
+
+
+def _mobile_specs(a: MobileArch) -> list[ParamSpec]:
+    specs = [
+        ParamSpec("stem.w", (3, 3, 3, a.stem), True),
+        ParamSpec("stem.b", (a.stem,), False),
+    ]
+    cin = a.stem
+    for i, (ch, stride) in enumerate(a.blocks):
+        p = f"block{i}"
+        specs += [
+            # depthwise 3x3: HWIO with feature_group_count=cin → (3,3,1,cin)
+            ParamSpec(f"{p}.dw.w", (3, 3, 1, cin), True),
+            ParamSpec(f"{p}.dw.b", (cin,), False),
+            # pointwise 1x1 implemented as a dense qmatmul
+            ParamSpec(f"{p}.pw.w", (cin, ch), True),
+            ParamSpec(f"{p}.pw.b", (ch,), False),
+        ]
+        cin = ch
+    specs += [
+        ParamSpec("head.w", (cin, NUM_CLASSES), True),
+        ParamSpec("head.b", (NUM_CLASSES,), False),
+    ]
+    return specs
+
+
+def _vit_specs(a: VitArch) -> list[ParamSpec]:
+    tokens = (IMG // a.patch) ** 2
+    pdim = a.patch * a.patch * 3
+    hidden = int(a.dim * a.mlp_ratio)
+    specs = [
+        ParamSpec("embed.w", (pdim, a.dim), True),
+        ParamSpec("embed.b", (a.dim,), False),
+        ParamSpec("pos", (tokens, a.dim), False),
+    ]
+    for i in range(a.depth):
+        p = f"layer{i}"
+        specs += [
+            ParamSpec(f"{p}.ln1.g", (a.dim,), False),
+            ParamSpec(f"{p}.ln1.b", (a.dim,), False),
+            ParamSpec(f"{p}.qkv.w", (a.dim, 3 * a.dim), True),
+            ParamSpec(f"{p}.qkv.b", (3 * a.dim,), False),
+            ParamSpec(f"{p}.proj.w", (a.dim, a.dim), True),
+            ParamSpec(f"{p}.proj.b", (a.dim,), False),
+            ParamSpec(f"{p}.ln2.g", (a.dim,), False),
+            ParamSpec(f"{p}.ln2.b", (a.dim,), False),
+            ParamSpec(f"{p}.mlp1.w", (a.dim, hidden), True),
+            ParamSpec(f"{p}.mlp1.b", (hidden,), False),
+            ParamSpec(f"{p}.mlp2.w", (hidden, a.dim), True),
+            ParamSpec(f"{p}.mlp2.b", (a.dim,), False),
+        ]
+    specs += [
+        ParamSpec("final_ln.g", (a.dim,), False),
+        ParamSpec("final_ln.b", (a.dim,), False),
+        ParamSpec("head.w", (a.dim, NUM_CLASSES), True),
+        ParamSpec("head.b", (NUM_CLASSES,), False),
+    ]
+    return specs
+
+
+def init_params(arch_name: str, seed: int = 0) -> list[np.ndarray]:
+    """He/trunc-normal init in the spec order (numpy, build-time only)."""
+    rng = np.random.default_rng(seed)
+    params: list[np.ndarray] = []
+    for spec in param_specs(arch_name):
+        if spec.name.endswith(".g"):  # layernorm gain
+            params.append(np.ones(spec.shape, np.float32))
+        elif spec.name.endswith(".b") or spec.name == "pos":
+            if spec.name == "pos":
+                params.append(rng.normal(0, 0.02, spec.shape).astype(np.float32))
+            else:
+                params.append(np.zeros(spec.shape, np.float32))
+        else:
+            fan_in = int(np.prod(spec.shape[:-1]))
+            std = math.sqrt(2.0 / max(fan_in, 1))
+            params.append(rng.normal(0, std, spec.shape).astype(np.float32))
+    return params
+
+
+def model_nbytes_fp32(arch_name: str) -> int:
+    """FP32 "model size" (paper's D_fp32): total parameter bytes."""
+    return sum(4 * int(np.prod(s.shape)) for s in param_specs(arch_name))
+
+
+# --------------------------------------------------------------------------
+# Forward passes
+# --------------------------------------------------------------------------
+
+
+def _fq(x: jnp.ndarray, act_bits: int) -> jnp.ndarray:
+    return kapi.fake_quant_dynamic(x, act_bits) if act_bits else x
+
+
+def _conv(x, w, b, stride=1, groups=1):
+    y = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+    )
+    return y + b
+
+
+def _dense(x2d, w, b, act_bits):
+    return kapi.qmatmul(x2d, w, act_bits) + b
+
+
+def _layernorm(x, g, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-6) * g + b
+
+
+class _P:
+    """Cursor over the flat param list, keyed by spec order."""
+
+    def __init__(self, params):
+        self.params = list(params)
+        self.i = 0
+
+    def take(self, k: int = 1):
+        out = self.params[self.i : self.i + k]
+        self.i += k
+        return out[0] if k == 1 else out
+
+    def done(self):
+        assert self.i == len(self.params), (self.i, len(self.params))
+
+
+def forward(arch_name: str, params: list, x: jnp.ndarray, act_bits: int) -> jnp.ndarray:
+    """Logits for a batch of NHWC images in [0,1]."""
+    arch = ARCHS[arch_name]
+    if isinstance(arch, CnnArch):
+        return _cnn_forward(arch, params, x, act_bits)
+    if isinstance(arch, MobileArch):
+        return _mobile_forward(arch, params, x, act_bits)
+    if isinstance(arch, VitArch):
+        return _vit_forward(arch, params, x, act_bits)
+    raise TypeError(arch)
+
+
+def _cnn_forward(a: CnnArch, params, x, act_bits):
+    p = _P(params)
+    w, b = p.take(2)
+    y = jax.nn.relu(_conv(_fq(x, act_bits), w, b))
+    cin = a.stem
+    for ch, stride in a.blocks:
+        w1, b1, w2, b2 = p.take(4)
+        z = jax.nn.relu(_conv(_fq(y, act_bits), w1, b1, stride=stride))
+        z = _conv(_fq(z, act_bits), w2, b2)
+        if stride != 1 or cin != ch:
+            pw, pb = p.take(2)
+            y = _conv(_fq(y, act_bits), pw, pb, stride=stride)
+        y = jax.nn.relu(y + z)
+        cin = ch
+    y = jnp.mean(y, axis=(1, 2))  # global average pool
+    hw, hb = p.take(2)
+    logits = _dense(y, hw, hb, act_bits)
+    p.done()
+    return logits
+
+
+def _mobile_forward(a: MobileArch, params, x, act_bits):
+    p = _P(params)
+    w, b = p.take(2)
+    y = jax.nn.relu(_conv(_fq(x, act_bits), w, b))
+    cin = a.stem
+    for ch, stride in a.blocks:
+        dw, db, pw, pb = p.take(4)
+        y = jax.nn.relu(_conv(_fq(y, act_bits), dw, db, stride=stride, groups=cin))
+        bsz, hh, ww, _ = y.shape
+        flat = y.reshape(bsz * hh * ww, cin)
+        y = jax.nn.relu(_dense(flat, pw, pb, act_bits)).reshape(bsz, hh, ww, ch)
+        cin = ch
+    y = jnp.mean(y, axis=(1, 2))
+    hw, hb = p.take(2)
+    logits = _dense(y, hw, hb, act_bits)
+    p.done()
+    return logits
+
+
+def _vit_forward(a: VitArch, params, x, act_bits):
+    p = _P(params)
+    bsz = x.shape[0]
+    g = IMG // a.patch
+    # patchify: (B, g, patch, g, patch, C) → (B, tokens, patch*patch*C)
+    xp = x.reshape(bsz, g, a.patch, g, a.patch, 3)
+    xp = xp.transpose(0, 1, 3, 2, 4, 5).reshape(bsz, g * g, a.patch * a.patch * 3)
+    ew, eb = p.take(2)
+    tok = _dense(xp.reshape(bsz * g * g, -1), ew, eb, act_bits).reshape(bsz, g * g, a.dim)
+    tok = tok + p.take(1)
+    tokens = g * g
+    head_dim = a.dim // a.heads
+    for _ in range(a.depth):
+        g1, b1, qkvw, qkvb, pw, pb, g2, b2, m1w, m1b, m2w, m2b = p.take(12)
+        y = _layernorm(tok, g1, b1)
+        qkv = _dense(y.reshape(bsz * tokens, a.dim), qkvw, qkvb, act_bits)
+        qkv = qkv.reshape(bsz, tokens, 3, a.heads, head_dim)
+        q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+        attn = jnp.einsum("bthd,bshd->bhts", q, k) / math.sqrt(head_dim)
+        attn = jax.nn.softmax(attn, axis=-1)
+        o = jnp.einsum("bhts,bshd->bthd", attn, v).reshape(bsz * tokens, a.dim)
+        tok = tok + _dense(o, pw, pb, act_bits).reshape(bsz, tokens, a.dim)
+        y = _layernorm(tok, g2, b2)
+        hdn = _dense(y.reshape(bsz * tokens, a.dim), m1w, m1b, act_bits)
+        hdn = jax.nn.gelu(hdn)
+        out = _dense(hdn, m2w, m2b, act_bits).reshape(bsz, tokens, a.dim)
+        tok = tok + out
+    fg, fb = p.take(2)
+    y = _layernorm(tok, fg, fb).mean(axis=1)
+    hw, hb = p.take(2)
+    logits = _dense(y, hw, hb, act_bits)
+    p.done()
+    return logits

@@ -1,0 +1,205 @@
+"""The `.nq` container: NestQuant's on-disk model format.
+
+Binary little-endian format shared bit-for-bit with the Rust side
+(`rust/src/container/`). Three kinds:
+
+  kind 0 "nest"  — the NestQuant model: per-tensor scales + packed w_high
+                   in *section A*, all packed w_low blobs in *section B*.
+                   A part-bit launch reads only section A; an upgrade
+                   page-in reads exactly section B (one contiguous read —
+                   this is what makes Table 11's zero-overhead claims
+                   literal file operations).
+  kind 1 "mono"  — a single-bitwidth packed INTk model (the diverse-
+                   bitwidths baseline stores one of these per bitwidth).
+  kind 2 "fp32"  — raw FP32 tensors (the uncompressed baseline).
+
+Layout:
+  magic "NESTQNT1" | u32 version=1 | u8 kind | u8 n | u8 h | u8 act_bits
+  u32 name_len + name | u32 meta_len + meta(JSON)
+  u32 num_tensors | u64 section_b_offset (0 if none)
+  section A, per tensor:
+    u32 name_len + name | u8 ptype (0 quantized, 1 fp32) | u8 ndim | u32×ndim dims
+    ptype 1: f32 × prod(dims)
+    ptype 0: u32 n_scales + f32×n_scales (last-axis channels)
+             kind 0: u8 h_bits  | u32 n_words | u64×n_words  (packed w_high)
+             kind 1: u8 bits    | u32 n_words | u64×n_words  (packed w_int)
+  section B (kind 0 only), per quantized tensor in section-A order:
+    u8 low_bits | u32 n_words | u64×n_words                 (packed w_low)
+"""
+
+from __future__ import annotations
+
+import io
+import json
+import struct
+
+import numpy as np
+
+from . import packbits
+
+MAGIC = b"NESTQNT1"
+VERSION = 1
+KIND_NEST, KIND_MONO, KIND_FP32 = 0, 1, 2
+
+
+def _w(buf: io.BytesIO, fmt: str, *vals) -> None:
+    buf.write(struct.pack("<" + fmt, *vals))
+
+
+def _wbytes(buf: io.BytesIO, b: bytes) -> None:
+    _w(buf, "I", len(b))
+    buf.write(b)
+
+
+def _wpacked(buf: io.BytesIO, values: np.ndarray, bits: int) -> None:
+    words = packbits.pack(values, bits)
+    _w(buf, "B", bits)
+    _w(buf, "I", len(words))
+    buf.write(words.tobytes())
+
+
+class Tensor:
+    """One tensor going into a container."""
+
+    def __init__(self, name: str, *, fp32: np.ndarray | None = None,
+                 scales: np.ndarray | None = None, shape=None,
+                 w_high: np.ndarray | None = None, high_bits: int = 0,
+                 w_low: np.ndarray | None = None, low_bits: int = 0,
+                 w_int: np.ndarray | None = None, int_bits: int = 0):
+        self.name = name
+        self.fp32 = fp32
+        self.scales = scales
+        self.shape = tuple(shape) if shape is not None else tuple(fp32.shape)
+        self.w_high, self.high_bits = w_high, high_bits
+        self.w_low, self.low_bits = w_low, low_bits
+        self.w_int, self.int_bits = w_int, int_bits
+
+
+def write_container(path: str, kind: int, name: str, tensors: list[Tensor],
+                    n: int = 0, h: int = 0, act_bits: int = 0,
+                    meta: dict | None = None) -> dict:
+    """Write a container; returns byte accounting {total, section_a, section_b}."""
+    head = io.BytesIO()
+    head.write(MAGIC)
+    _w(head, "I", VERSION)
+    _w(head, "BBBB", kind, n, h, act_bits)
+    _wbytes(head, name.encode())
+    _wbytes(head, json.dumps(meta or {}).encode())
+    _w(head, "I", len(tensors))
+
+    sec_a = io.BytesIO()
+    for t in tensors:
+        _wbytes(sec_a, t.name.encode())
+        ptype = 1 if t.fp32 is not None else 0
+        _w(sec_a, "BB", ptype, len(t.shape))
+        for d in t.shape:
+            _w(sec_a, "I", d)
+        if ptype == 1:
+            sec_a.write(np.ascontiguousarray(t.fp32, np.float32).tobytes())
+        else:
+            sc = np.ascontiguousarray(t.scales, np.float32)
+            _w(sec_a, "I", sc.size)
+            sec_a.write(sc.tobytes())
+            if kind == KIND_NEST:
+                _wpacked(sec_a, t.w_high, t.high_bits)
+            elif kind == KIND_MONO:
+                _wpacked(sec_a, t.w_int, t.int_bits)
+            else:
+                raise ValueError("fp32 container cannot hold quantized tensors")
+
+    sec_b = io.BytesIO()
+    if kind == KIND_NEST:
+        for t in tensors:
+            if t.fp32 is None:
+                _wpacked(sec_b, t.w_low, t.low_bits)
+
+    header = head.getvalue()
+    a = sec_a.getvalue()
+    b = sec_b.getvalue()
+    # section_b_offset goes right after num_tensors; account for its 8 bytes
+    off = len(header) + 8 + len(a) if b else 0
+    with open(path, "wb") as f:
+        f.write(header)
+        f.write(struct.pack("<Q", off))
+        f.write(a)
+        f.write(b)
+    return {
+        "total": len(header) + 8 + len(a) + len(b),
+        "section_a": len(header) + 8 + len(a),
+        "section_b": len(b),
+    }
+
+
+# -------------------------- reader (for tests) ----------------------------
+
+
+class _R:
+    def __init__(self, data: bytes):
+        self.d = data
+        self.o = 0
+
+    def take(self, fmt: str):
+        vals = struct.unpack_from("<" + fmt, self.d, self.o)
+        self.o += struct.calcsize("<" + fmt)
+        return vals if len(vals) > 1 else vals[0]
+
+    def bytes_(self) -> bytes:
+        n = self.take("I")
+        b = self.d[self.o : self.o + n]
+        self.o += n
+        return b
+
+    def raw(self, n: int) -> bytes:
+        b = self.d[self.o : self.o + n]
+        self.o += n
+        return b
+
+
+def read_container(path: str, *, part_bit_only: bool = False) -> dict:
+    """Parse a container back into numpy (tests + tooling; Rust has its own)."""
+    data = open(path, "rb").read()
+    r = _R(data)
+    assert r.raw(8) == MAGIC, "bad magic"
+    version = r.take("I")
+    assert version == VERSION
+    kind, n, h, act_bits = r.take("BBBB")
+    name = r.bytes_().decode()
+    meta = json.loads(r.bytes_().decode() or "{}")
+    num = r.take("I")
+    off_b = r.take("Q")
+    tensors = []
+    for _ in range(num):
+        tname = r.bytes_().decode()
+        ptype, ndim = r.take("BB")
+        dims = tuple(r.take("I") for _ in range(ndim))
+        count = int(np.prod(dims)) if dims else 1
+        t = {"name": tname, "shape": dims}
+        if ptype == 1:
+            t["fp32"] = np.frombuffer(r.raw(4 * count), np.float32).reshape(dims)
+        else:
+            ns = r.take("I")
+            t["scales"] = np.frombuffer(r.raw(4 * ns), np.float32)
+            bits = r.take("B")
+            nw = r.take("I")
+            words = np.frombuffer(r.raw(8 * nw), np.uint64)
+            vals = packbits.unpack(words, bits, count).reshape(dims)
+            if kind == KIND_NEST:
+                t["w_high"], t["high_bits"] = vals, bits
+            else:
+                t["w_int"], t["int_bits"] = vals, bits
+        tensors.append(t)
+    if kind == KIND_NEST and not part_bit_only:
+        assert off_b == r.o, (off_b, r.o)
+        for t in tensors:
+            if "w_high" in t:
+                bits = r.take("B")
+                nw = r.take("I")
+                words = np.frombuffer(r.raw(8 * nw), np.uint64)
+                count = int(np.prod(t["shape"]))
+                t["w_low"] = packbits.unpack(words, bits, count).reshape(t["shape"])
+                t["low_bits"] = bits
+    return {
+        "kind": kind, "n": n, "h": h, "act_bits": act_bits,
+        "name": name, "meta": meta, "tensors": tensors,
+        "section_b_offset": off_b,
+    }

@@ -1,0 +1,89 @@
+"""Packed-bit tensors: k-bit signed integers packed into u64 words.
+
+This module defines the *bit-layout contract* shared with the Rust side
+(`rust/src/bits/`): element ``i`` of a flattened tensor lives in word
+``i // lanes`` at bit offset ``(i % lanes) * k`` where ``lanes = 64 // k``,
+stored as a two's-complement ``k``-bit field. The final partial word is
+zero-padded. Changing anything here breaks on-device loading — the Rust
+test-suite round-trips containers written by this module.
+
+The packing algorithm follows the packed-bit tensor approach of
+Petersen et al. (distquant / difflogic), cited as [38,39] in the paper.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+MIN_BITS = 2
+MAX_BITS = 16
+
+
+def lanes(bits: int) -> int:
+    """Number of k-bit lanes per 64-bit word."""
+    _check_bits(bits)
+    return 64 // bits
+
+
+def _check_bits(bits: int) -> None:
+    if not (MIN_BITS <= bits <= MAX_BITS):
+        raise ValueError(f"bits must be in [{MIN_BITS},{MAX_BITS}], got {bits}")
+
+
+def int_range(bits: int) -> tuple[int, int]:
+    """[min, max] of a signed `bits`-bit integer."""
+    _check_bits(bits)
+    return -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+
+
+def pack(values: np.ndarray, bits: int) -> np.ndarray:
+    """Pack signed integers (any int dtype) into a u64 word array.
+
+    Values must already be within the signed `bits`-bit range.
+    Returns a 1-D uint64 array of ceil(len / lanes) words.
+    """
+    _check_bits(bits)
+    flat = np.ascontiguousarray(values).reshape(-1).astype(np.int64)
+    lo, hi = int_range(bits)
+    if flat.size and (flat.min() < lo or flat.max() > hi):
+        raise ValueError(
+            f"values out of signed INT{bits} range [{lo},{hi}]: "
+            f"[{flat.min()},{flat.max()}]"
+        )
+    n_lanes = lanes(bits)
+    n_words = (flat.size + n_lanes - 1) // n_lanes
+    mask = np.uint64((1 << bits) - 1)
+    # two's-complement field
+    fields = (flat.astype(np.uint64)) & mask
+    padded = np.zeros(n_words * n_lanes, dtype=np.uint64)
+    padded[: flat.size] = fields
+    padded = padded.reshape(n_words, n_lanes)
+    words = np.zeros(n_words, dtype=np.uint64)
+    for lane in range(n_lanes):
+        words |= padded[:, lane] << np.uint64(lane * bits)
+    return words
+
+
+def unpack(words: np.ndarray, bits: int, count: int) -> np.ndarray:
+    """Unpack `count` signed `bits`-bit integers from u64 words (int32 out)."""
+    _check_bits(bits)
+    words = np.ascontiguousarray(words, dtype=np.uint64)
+    n_lanes = lanes(bits)
+    need = (count + n_lanes - 1) // n_lanes
+    if words.size < need:
+        raise ValueError(f"need {need} words for {count} x INT{bits}, got {words.size}")
+    mask = np.uint64((1 << bits) - 1)
+    sign_bit = np.uint64(1 << (bits - 1))
+    out = np.empty(words.size * n_lanes, dtype=np.int64)
+    for lane in range(n_lanes):
+        field = (words >> np.uint64(lane * bits)) & mask
+        # sign-extend
+        signed = field.astype(np.int64) - ((field & sign_bit).astype(np.int64) << 1)
+        out[lane::n_lanes] = signed
+    return out[:count].astype(np.int32)
+
+
+def packed_nbytes(count: int, bits: int) -> int:
+    """On-disk bytes for `count` packed `bits`-bit elements."""
+    n_lanes = lanes(bits)
+    return 8 * ((count + n_lanes - 1) // n_lanes)

@@ -1,0 +1,155 @@
+"""Weight quantization: scales, RTN, and SQuant-style adaptive rounding.
+
+Implements the build-time (server-side) half of paper Algorithm 1:
+
+  Step 1 — INTn quantization of FP32 weights: per-output-channel symmetric
+  scales (Eq. 2), rounding by RTN or by the data-free Hessian-based
+  adaptive rounding of SQuant [19] (diagonal-Hessian ⇒ per-channel
+  accumulated-error cancellation via rounding flips).
+
+  Step 2 — secondary INTh quantization of w_int/2^l with the *same*
+  adaptive rounding (Eq. 9), plus the BitShift / RTN baselines of Table 6.
+
+Everything here is numpy (build path); the Pallas kernels / Rust port are
+validated against these functions.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import packbits
+
+
+def int_min_max(bits: int) -> tuple[int, int]:
+    return -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+
+
+def channel_scales(w: np.ndarray, bits: int) -> np.ndarray:
+    """Symmetric per-output-channel scales over the last axis (Eq. 2)."""
+    _, hi = int_min_max(bits)
+    flat = np.abs(w.reshape(-1, w.shape[-1]))
+    amax = flat.max(axis=0)
+    return np.maximum(amax, 1e-12).astype(np.float32) / hi
+
+
+def quantize_rtn(w: np.ndarray, scales: np.ndarray, bits: int) -> np.ndarray:
+    """Round-to-nearest quantization → int32 in signed `bits` range."""
+    lo, hi = int_min_max(bits)
+    t = w / scales  # scales broadcast over last axis
+    return np.clip(np.round(t), lo, hi).astype(np.int32)
+
+
+def _flip_round(t: np.ndarray, bits: int) -> np.ndarray:
+    """SQuant-style adaptive rounding of real-valued targets `t`.
+
+    Per output channel (last axis): start from RTN, then flip the rounding
+    direction of the elements with the largest fractional residues until
+    the channel's accumulated rounding error (the diagonal-Hessian proxy
+    for Eq. 5/9) is within ±0.5. Flips move a value by exactly ±1, so every
+    element stays an "up-or-down" rounding of its target — the same search
+    space as AdaRound/SQuant.
+    """
+    lo, hi = int_min_max(bits)
+    t2 = t.reshape(-1, t.shape[-1]).T.copy()  # (channels, elems)
+    base = np.round(t2)
+    frac = t2 - base  # in [-0.5, 0.5]
+    # Accumulated per-channel error BEFORE clipping; flips correct it.
+    err = frac.sum(axis=1)
+    k = np.round(err).astype(np.int64)  # number of flips per channel
+    order_up = np.argsort(-frac, axis=1)  # most-positive residue first
+    order_dn = np.argsort(frac, axis=1)  # most-negative residue first
+    n_ch, n_el = t2.shape
+    for c in range(n_ch):
+        kc = int(k[c])
+        if kc > 0:
+            idx = order_up[c, : min(kc, n_el)]
+            base[c, idx] += 1.0  # round those up
+        elif kc < 0:
+            idx = order_dn[c, : min(-kc, n_el)]
+            base[c, idx] -= 1.0
+    base = np.clip(base, lo, hi)
+    return base.T.reshape(t.shape).astype(np.int32)
+
+
+def quantize_adaptive(w: np.ndarray, scales: np.ndarray, bits: int) -> np.ndarray:
+    """Step-1 adaptive rounding of FP32 weights (SQuant-style, data-free)."""
+    return _flip_round(w / scales, bits)
+
+
+# --------------------------------------------------------------------------
+# Secondary quantization (the nesting step) — paper §3.2.1/§3.2.3
+# --------------------------------------------------------------------------
+
+METHODS = ("bitshift", "rtn", "adaptive")
+
+
+def nest_high(w_int: np.ndarray, n: int, h: int, method: str) -> np.ndarray:
+    """w_high from w_int by one of Table 6's rounding methods."""
+    l = n - h
+    lo, hi = int_min_max(h)
+    t = w_int.astype(np.float64) / (1 << l)
+    if method == "bitshift":
+        return np.clip(np.floor(t), lo, hi).astype(np.int32)
+    if method == "rtn":
+        return np.clip(np.round(t), lo, hi).astype(np.int32)
+    if method == "adaptive":
+        return _flip_round(t, h)
+    raise ValueError(f"unknown nesting method {method!r}")
+
+
+def nest_low(w_int: np.ndarray, w_high: np.ndarray, n: int, h: int,
+             compensate: bool = True) -> np.ndarray:
+    """w_low = clip(w_int - w_high·2^l) to INTl (or INT(l+1) compensated)."""
+    l = n - h
+    lo, hi = int_min_max(l + 1 if compensate else l)
+    return np.clip(w_int - (w_high.astype(np.int64) << l), lo, hi).astype(np.int32)
+
+
+def recompose(w_high: np.ndarray, w_low: np.ndarray, l: int) -> np.ndarray:
+    return ((w_high.astype(np.int64) << l) + w_low).astype(np.int32)
+
+
+def dequant(w_int: np.ndarray, scales: np.ndarray) -> np.ndarray:
+    return (w_int.astype(np.float32) * scales).astype(np.float32)
+
+
+# --------------------------------------------------------------------------
+# Whole-model helpers
+# --------------------------------------------------------------------------
+
+
+def quantize_model(params: list[np.ndarray], quant_mask: list[bool], n: int,
+                   method: str = "adaptive"):
+    """Quantize a flat param list → (w_ints, scales) with None for fp32 params."""
+    w_ints: list = []
+    scales: list = []
+    for p, q in zip(params, quant_mask):
+        if not q:
+            w_ints.append(None)
+            scales.append(None)
+            continue
+        s = channel_scales(p, n)
+        wi = quantize_adaptive(p, s, n) if method == "adaptive" else quantize_rtn(p, s, n)
+        w_ints.append(wi)
+        scales.append(s)
+    return w_ints, scales
+
+
+def dequant_model(params, w_ints, scales):
+    """FP32 param list with quantized tensors replaced by dequantized ones."""
+    out = []
+    for p, wi, s in zip(params, w_ints, scales):
+        out.append(p if wi is None else dequant(wi, s))
+    return out
+
+
+def packed_model_nbytes(w_ints, scales, params, bits: int) -> int:
+    """Ideal packed size: packed ints + fp32 scales + fp32 params."""
+    total = 0
+    for p, wi, s in zip(params, w_ints, scales):
+        if wi is None:
+            total += 4 * p.size
+        else:
+            total += packbits.packed_nbytes(wi.size, bits) + 4 * s.size
+    return total

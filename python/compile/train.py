@@ -1,0 +1,180 @@
+"""Build-time training of the model zoo on SynthShapes.
+
+Runs once under ``make artifacts``; produces ``artifacts/weights/*.npz``
+(FP32 parameters in spec order) plus per-model FP32 val accuracy in
+``artifacts/weights/train_log.json``. No Python from here ever runs on the
+request path.
+
+Optimizer is a self-contained Adam (optax is not available offline).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data, model
+
+EPOCHS = {
+    "cnn_t": 18,
+    "cnn_s": 14,
+    "cnn_m": 12,
+    "cnn_l": 10,
+    "mobile_t": 16,
+    "mobile_s": 12,
+    "vit_t": 20,
+    "vit_s": 14,
+}
+BATCH = 128
+LR = 2e-3
+WD = 1e-4
+
+
+def _adam_init(params):
+    return {
+        "m": [jnp.zeros_like(p) for p in params],
+        "v": [jnp.zeros_like(p) for p in params],
+        "t": jnp.zeros((), jnp.int32),
+    }
+
+
+def _adam_update(params, grads, st, lr):
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    t = st["t"] + 1
+    m = [b1 * m + (1 - b1) * g for m, g in zip(st["m"], grads)]
+    v = [b2 * v + (1 - b2) * g * g for v, g in zip(st["v"], grads)]
+    mhat = [mi / (1 - b1 ** t.astype(jnp.float32)) for mi in m]
+    vhat = [vi / (1 - b2 ** t.astype(jnp.float32)) for vi in v]
+    new = [
+        p - lr * (mh / (jnp.sqrt(vh) + eps) + WD * p)
+        for p, mh, vh in zip(params, mhat, vhat)
+    ]
+    return new, {"m": m, "v": v, "t": t}
+
+
+def _loss_fn(arch, params, x, y):
+    logits = model.forward(arch, params, x, act_bits=0)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+_EVAL_CACHE: dict = {}
+
+
+def _eval_fn(arch: str, act_bits: int):
+    """Cached jitted argmax-forward; the PTQ sweeps run hundreds of evals
+    and must not recompile each time."""
+    import os
+
+    key = (arch, act_bits, os.environ.get("NESTQUANT_KERNELS", "pallas"))
+    if key not in _EVAL_CACHE:
+        _EVAL_CACHE[key] = jax.jit(
+            lambda ps, xb: jnp.argmax(model.forward(arch, ps, xb, act_bits), axis=-1)
+        )
+    return _EVAL_CACHE[key]
+
+
+def evaluate(arch: str, params, x: np.ndarray, y: np.ndarray, act_bits: int,
+             batch: int = 256) -> float:
+    """Top-1 accuracy, batched (shared by train.py and nestquant.py)."""
+    fwd = _eval_fn(arch, act_bits)
+    params = [jnp.asarray(p) for p in params]
+    correct = 0
+    for i in range(0, len(x), batch):
+        xb = jnp.asarray(x[i : i + batch])
+        pred = np.asarray(fwd(params, xb))
+        correct += int((pred == y[i : i + batch]).sum())
+    return correct / len(x)
+
+
+def train_one(arch: str, ds: dict, seed: int = 0, epochs: int | None = None,
+              verbose: bool = True) -> tuple[list, float]:
+    """Train one architecture; returns (params, val_acc)."""
+    params = [jnp.asarray(p) for p in model.init_params(arch, seed=seed)]
+    st = _adam_init(params)
+    step = jax.jit(
+        lambda ps, s, xb, yb, lr: _step(arch, ps, s, xb, yb, lr)
+    )
+    xtr, ytr = ds["x_train"], ds["y_train"]
+    n = len(xtr)
+    rng = np.random.default_rng(seed + 1)
+    nepochs = epochs if epochs is not None else EPOCHS[arch]
+    total_steps = nepochs * (n // BATCH)
+    k = 0
+    t0 = time.time()
+    for ep in range(nepochs):
+        order = rng.permutation(n)
+        for i in range(0, n - BATCH + 1, BATCH):
+            idx = order[i : i + BATCH]
+            lr = LR * 0.5 * (1 + np.cos(np.pi * k / total_steps))
+            params, st, loss = step(
+                params, st, jnp.asarray(xtr[idx]), jnp.asarray(ytr[idx]),
+                jnp.float32(lr),
+            )
+            k += 1
+        if verbose and (ep % 4 == 0 or ep == nepochs - 1):
+            acc = evaluate(arch, params, ds["x_val"][:512], ds["y_val"][:512], 0)
+            print(f"  [{arch}] epoch {ep+1}/{nepochs} loss={float(loss):.3f} "
+                  f"val@512={acc:.3f} ({time.time()-t0:.0f}s)", flush=True)
+    val_acc = evaluate(arch, params, ds["x_val"], ds["y_val"], 0)
+    return [np.asarray(p) for p in params], val_acc
+
+
+def _step(arch, params, st, xb, yb, lr):
+    loss, grads = jax.value_and_grad(lambda ps: _loss_fn(arch, ps, xb, yb))(params)
+    params, st = _adam_update(params, grads, st, lr)
+    return params, st, loss
+
+
+def save_params(path: str, arch: str, params: list[np.ndarray]) -> None:
+    specs = model.param_specs(arch)
+    assert len(specs) == len(params)
+    np.savez(path, **{f"{i:03d}|{s.name}": p for i, (s, p) in enumerate(zip(specs, params))})
+
+
+def load_params(path: str) -> list[np.ndarray]:
+    z = np.load(path)
+    keys = sorted(z.files, key=lambda k: int(k.split("|")[0]))
+    return [z[k] for k in keys]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--archs", nargs="*", default=list(model.ARCHS))
+    ap.add_argument("--epochs", type=int, default=None, help="override per-arch epochs")
+    args = ap.parse_args()
+
+    wdir = os.path.join(args.out, "weights")
+    os.makedirs(wdir, exist_ok=True)
+    ds = data.load(cache_dir=os.path.join(args.out, "data"))
+
+    logf = os.path.join(wdir, "train_log.json")
+    log = json.load(open(logf)) if os.path.exists(logf) else {}
+    for arch in args.archs:
+        path = os.path.join(wdir, f"{arch}.npz")
+        if os.path.exists(path) and arch in log:
+            print(f"[train] {arch}: cached ({log[arch]['val_acc']:.3f})", flush=True)
+            continue
+        print(f"[train] {arch} ...", flush=True)
+        t0 = time.time()
+        params, acc = train_one(arch, ds, epochs=args.epochs)
+        save_params(path, arch, params)
+        log[arch] = {
+            "val_acc": acc,
+            "train_seconds": round(time.time() - t0, 1),
+            "params": int(sum(p.size for p in params)),
+            "fp32_bytes": model.model_nbytes_fp32(arch),
+        }
+        json.dump(log, open(logf, "w"), indent=2)
+        print(f"[train] {arch} done: val_acc={acc:.3f}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Artifact integrity: manifest, HLO text, report JSONs (skips until
+`make artifacts` has run). This is the Python-side mirror of the Rust
+integration suite's artifact checks."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    return json.load(open(os.path.join(ART, "manifest.json")))
+
+
+def test_manifest_models_complete(manifest):
+    from compile import model
+
+    assert set(manifest["models"]) == set(model.ARCHS)
+    for arch, entry in manifest["models"].items():
+        specs = model.param_specs(arch)
+        assert len(entry["params"]) == len(specs)
+        for p, s in zip(entry["params"], specs):
+            assert p["name"] == s.name
+            assert tuple(p["shape"]) == s.shape
+            assert p["quantized"] == s.quantized
+
+
+def test_all_referenced_files_exist(manifest):
+    for entry in manifest["models"].values():
+        for rel in entry["hlo"].values():
+            assert os.path.exists(os.path.join(ART, rel)), rel
+        assert os.path.exists(os.path.join(ART, entry["containers"]["fp32"]))
+        for rel in entry["containers"]["mono"].values():
+            assert os.path.exists(os.path.join(ART, rel)), rel
+        for rel in entry["containers"]["nest"].values():
+            assert os.path.exists(os.path.join(ART, rel)), rel
+
+
+def test_hlo_text_declares_params(manifest):
+    """The lowered HLO's entry layout must carry 1 input + all params."""
+    arch = "cnn_t"
+    entry = manifest["models"][arch]
+    text = open(os.path.join(ART, entry["hlo"]["8"])).read()
+    head = text.splitlines()[0]
+    assert "entry_computation_layout" in head
+    # input + every parameter appears as an f32 tensor in the layout
+    assert head.count("f32[") >= 1 + len(entry["params"])
+
+
+def test_val_data_consistent(manifest):
+    d = manifest["data"]
+    y = np.fromfile(os.path.join(ART, d["val_y"]), dtype=np.uint32)
+    x = np.fromfile(os.path.join(ART, d["val_x"]), dtype=np.float32)
+    assert len(y) == d["count"]
+    img = manifest["img"]
+    assert len(x) == d["count"] * img * img * manifest["channels"]
+    assert x.min() >= 0.0 and x.max() <= 1.0
+
+
+def test_accuracy_report_structure():
+    acc = json.load(open(os.path.join(ART, "report", "accuracy.json")))
+    for arch, a in acc.items():
+        assert 0.0 <= a["fp32"] <= 1.0
+        for n in ("8", "6"):
+            nest = a["nest"][n]
+            full = nest["full"]
+            # full-bit ≈ the monolithic model at the same bits (same w_int)
+            assert abs(full - a["mono"][n][f"a{n}"]) < 0.02, arch
+            for h, cell in nest["h"].items():
+                assert 0.0 <= cell["part"] <= 1.0
+                # compensated full is asserted exact by the pipeline itself
+
+
+def test_sizes_report_consistency():
+    sizes = json.load(open(os.path.join(ART, "report", "sizes.json")))
+    for arch, s in sizes.items():
+        for key, info in s["nest"].items():
+            assert info["section_a"] + info["section_b"] == info["total"], (arch, key)
+            n, h = map(int, key.split("|"))
+            # nest container strictly smaller than the diverse pair
+            diverse = s["mono"][str(n)] + s["mono"][str(h)]
+            assert info["total"] < diverse, (arch, key)
+        # mono sizes monotone in bits
+        monos = [s["mono"][str(k)] for k in range(2, 9)]
+        assert monos == sorted(monos), arch
+
+
+def test_golden_logits_finite(manifest):
+    for arch, entry in manifest["models"].items():
+        for rel in entry["expected"].values():
+            g = np.fromfile(os.path.join(ART, rel), dtype=np.float32)
+            assert len(g) == manifest["batch"] * manifest["num_classes"]
+            assert np.isfinite(g).all(), arch

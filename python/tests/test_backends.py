@@ -1,0 +1,72 @@
+"""Pallas vs ref backend equivalence on whole-model logits.
+
+The PTQ sweeps run on the `ref` backend for speed while the shipped HLO
+is lowered from the `pallas` backend; this test is what licenses treating
+their numbers as interchangeable.
+"""
+
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import data, model
+
+
+def _logits(arch, params, x, act_bits, backend):
+    os.environ["NESTQUANT_KERNELS"] = backend
+    try:
+        fn = jax.jit(lambda ps, xb: model.forward(arch, ps, xb, act_bits))
+        return np.asarray(fn(params, x))
+    finally:
+        os.environ["NESTQUANT_KERNELS"] = "pallas"
+
+
+@pytest.mark.parametrize("arch", ["cnn_t", "mobile_t", "vit_t"])
+@pytest.mark.parametrize("act_bits", [0, 6, 8])
+def test_backends_agree(arch, act_bits):
+    rng = np.random.default_rng(42)
+    params = model.init_params(arch, seed=3)
+    x = rng.random((4, model.IMG, model.IMG, 3)).astype(np.float32)
+    lp = _logits(arch, params, x, act_bits, "pallas")
+    lr = _logits(arch, params, x, act_bits, "ref")
+    np.testing.assert_allclose(lp, lr, atol=2e-4, rtol=1e-4)
+
+
+def test_param_specs_match_init():
+    for arch in model.ARCHS:
+        specs = model.param_specs(arch)
+        params = model.init_params(arch)
+        assert len(specs) == len(params)
+        for s, p in zip(specs, params):
+            assert tuple(p.shape) == s.shape, s.name
+
+
+def test_forward_batch_independence_fp32():
+    """With act_bits=0, row i of a batch must not depend on other rows."""
+    arch = "cnn_t"
+    params = model.init_params(arch, seed=1)
+    rng = np.random.default_rng(0)
+    x = rng.random((8, model.IMG, model.IMG, 3)).astype(np.float32)
+    full = _logits(arch, params, x, 0, "ref")
+    x2 = x.copy()
+    x2[4:] = rng.random((4, model.IMG, model.IMG, 3))
+    part = _logits(arch, params, x2, 0, "ref")
+    np.testing.assert_allclose(full[:4], part[:4], atol=2e-5, rtol=1e-5)
+
+
+def test_zero_padding_keeps_predictions():
+    """The L3 dynamic batcher zero-pads partial batches. With *dynamic*
+    per-tensor activation scales, zero rows can only shrink the batch max,
+    so logits shift by at most one quantization step — argmax on real
+    inputs must be stable. (This is the batcher's correctness contract.)"""
+    arch = "cnn_t"
+    params = [np.asarray(p) for p in model.init_params(arch, seed=1)]
+    ds = data.make_split(8, 123)
+    x = ds[0]
+    full = _logits(arch, params, x, 8, "ref")
+    xpad = np.concatenate([x, np.zeros_like(x)])  # pad to 16
+    padded = _logits(arch, params, xpad, 8, "ref")[:8]
+    assert (np.argmax(full, -1) == np.argmax(padded, -1)).mean() >= 0.9
+    np.testing.assert_allclose(full, padded, atol=0.15)

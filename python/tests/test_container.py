@@ -1,0 +1,103 @@
+"""`.nq` container format: roundtrip, sectioning, corruption handling."""
+
+import os
+
+import numpy as np
+import pytest
+
+from compile import nqformat, packbits, quantizer as qz
+
+
+def _nest_container(tmp_path, n=8, h=4, elems=100, channels=5, seed=0):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(0, 0.3, (elems, channels)).astype(np.float32)
+    s = qz.channel_scales(w, n)
+    wi = qz.quantize_adaptive(w, s, n)
+    wh = qz.nest_high(wi, n, h, "adaptive")
+    wl = qz.nest_low(wi, wh, n, h, compensate=True)
+    bias = rng.normal(size=(channels,)).astype(np.float32)
+    tensors = [
+        nqformat.Tensor("layer.w", scales=s, shape=w.shape,
+                        w_high=wh, high_bits=h, w_low=wl, low_bits=n - h + 1),
+        nqformat.Tensor("layer.b", fp32=bias),
+    ]
+    path = os.path.join(tmp_path, "m.nq")
+    info = nqformat.write_container(path, nqformat.KIND_NEST, "toy", tensors,
+                                    n=n, h=h, act_bits=n, meta={"k": 1})
+    return path, info, (wi, wh, wl, s, bias)
+
+
+def test_nest_roundtrip(tmp_path):
+    path, info, (wi, wh, wl, s, bias) = _nest_container(tmp_path)
+    got = nqformat.read_container(path)
+    assert got["kind"] == nqformat.KIND_NEST
+    assert (got["n"], got["h"]) == (8, 4)
+    assert got["meta"] == {"k": 1}
+    t0, t1 = got["tensors"]
+    np.testing.assert_array_equal(t0["w_high"], wh)
+    np.testing.assert_array_equal(t0["w_low"], wl)
+    np.testing.assert_allclose(t0["scales"], s)
+    np.testing.assert_allclose(t1["fp32"], bias)
+    # recompose from the container == original w_int
+    rec = qz.recompose(t0["w_high"], t0["w_low"], 4)
+    np.testing.assert_array_equal(rec, wi)
+
+
+def test_part_bit_only_read_skips_section_b(tmp_path):
+    """A part-bit launch parses section A only — w_low never touched."""
+    path, info, _ = _nest_container(tmp_path)
+    got = nqformat.read_container(path, part_bit_only=True)
+    assert "w_low" not in got["tensors"][0]
+    assert got["section_b_offset"] == info["section_a"]
+    assert info["section_a"] + info["section_b"] == info["total"]
+    assert os.path.getsize(path) == info["total"]
+
+
+def test_section_b_is_contiguous_tail(tmp_path):
+    """Downgrade == drop the file tail; upgrade == read it back."""
+    path, info, (wi, wh, wl, s, _) = _nest_container(tmp_path, n=8, h=5)
+    blob = open(path, "rb").read()
+    tail = blob[info["section_a"]:]
+    # parse the single w_low blob manually: u8 bits, u32 nwords, words
+    bits = tail[0]
+    assert bits == 8 - 5 + 1
+    nwords = int.from_bytes(tail[1:5], "little")
+    words = np.frombuffer(tail[5 : 5 + 8 * nwords], np.uint64)
+    vals = packbits.unpack(words, bits, wl.size).reshape(wl.shape)
+    np.testing.assert_array_equal(vals, wl)
+
+
+def test_mono_and_fp32_roundtrip(tmp_path):
+    rng = np.random.default_rng(1)
+    w = rng.normal(0, 0.3, (40, 8)).astype(np.float32)
+    s = qz.channel_scales(w, 4)
+    wi = qz.quantize_rtn(w, s, 4)
+    path = os.path.join(tmp_path, "mono.nq")
+    nqformat.write_container(path, nqformat.KIND_MONO, "toy", [
+        nqformat.Tensor("w", scales=s, shape=w.shape, w_int=wi, int_bits=4)
+    ], n=4)
+    got = nqformat.read_container(path)
+    np.testing.assert_array_equal(got["tensors"][0]["w_int"], wi)
+
+    path2 = os.path.join(tmp_path, "fp32.nq")
+    nqformat.write_container(path2, nqformat.KIND_FP32, "toy", [
+        nqformat.Tensor("w", fp32=w)
+    ])
+    got2 = nqformat.read_container(path2)
+    np.testing.assert_allclose(got2["tensors"][0]["fp32"], w)
+
+
+def test_bad_magic_rejected(tmp_path):
+    path = os.path.join(tmp_path, "bad.nq")
+    with open(path, "wb") as f:
+        f.write(b"NOTAMODL" + b"\x00" * 64)
+    with pytest.raises(AssertionError):
+        nqformat.read_container(path)
+
+
+def test_empty_container(tmp_path):
+    path = os.path.join(tmp_path, "empty.nq")
+    info = nqformat.write_container(path, nqformat.KIND_FP32, "none", [])
+    got = nqformat.read_container(path)
+    assert got["tensors"] == []
+    assert info["section_b"] == 0

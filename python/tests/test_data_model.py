@@ -1,0 +1,94 @@
+"""Dataset and model-zoo invariants."""
+
+import numpy as np
+import pytest
+
+from compile import data, model
+
+
+# ------------------------------- dataset ----------------------------------
+
+
+def test_dataset_deterministic():
+    a = data.make_split(64, 123)
+    b = data.make_split(64, 123)
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+
+
+def test_dataset_seed_sensitivity():
+    a = data.make_split(64, 123)
+    b = data.make_split(64, 124)
+    assert not np.array_equal(a[0], b[0])
+
+
+def test_dataset_ranges_and_shapes():
+    x, y = data.make_split(128, 7)
+    assert x.shape == (128, data.IMG, data.IMG, 3)
+    assert x.dtype == np.float32
+    assert x.min() >= 0.0 and x.max() <= 1.0
+    assert y.min() >= 0 and y.max() < data.NUM_CLASSES
+
+
+def test_dataset_class_coverage():
+    _, y = data.make_split(500, 11)
+    assert len(np.unique(y)) == data.NUM_CLASSES
+
+
+def test_train_val_disjoint_seeds():
+    """Train and val come from different seeds — no leakage by construction."""
+    assert data.SEED + 1 != data.SEED
+
+
+# ------------------------------- models -----------------------------------
+
+
+@pytest.mark.parametrize("arch", list(model.ARCHS))
+def test_forward_shapes_all_archs(arch):
+    import os
+
+    os.environ["NESTQUANT_KERNELS"] = "ref"
+    try:
+        params = model.init_params(arch, seed=0)
+        x = np.random.default_rng(0).random((2, model.IMG, model.IMG, 3)).astype(np.float32)
+        logits = np.asarray(model.forward(arch, params, x, act_bits=0))
+        assert logits.shape == (2, model.NUM_CLASSES)
+        assert np.isfinite(logits).all()
+    finally:
+        os.environ.pop("NESTQUANT_KERNELS", None)
+
+
+def test_init_deterministic():
+    a = model.init_params("cnn_s", seed=5)
+    b = model.init_params("cnn_s", seed=5)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_quantized_mask_covers_compute_weights():
+    """Every ≥2-D parameter (conv/dense weight) is quantized; every 1-D
+    (bias/LN/pos handled as 2-D pos exception) is not — matching the
+    paper's weight-only quantization."""
+    for arch in model.ARCHS:
+        for s in model.param_specs(arch):
+            if s.name == "pos":
+                assert not s.quantized
+            elif len(s.shape) >= 2:
+                assert s.quantized, f"{arch}:{s.name}"
+            else:
+                assert not s.quantized, f"{arch}:{s.name}"
+
+
+def test_family_sizes_monotone():
+    """Within each family the zoo is strictly increasing in size — the
+    Fig 7 x-axis needs this."""
+    for fam, members in model.FAMILIES.items():
+        sizes = [model.model_nbytes_fp32(m) for m in members]
+        assert sizes == sorted(sizes) and len(set(sizes)) == len(sizes), fam
+
+
+def test_family_of():
+    assert model.family_of("cnn_l") == "cnn"
+    assert model.family_of("vit_t") == "vit"
+    with pytest.raises(KeyError):
+        model.family_of("resnet50")

@@ -1,0 +1,185 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes/bitwidths; assert_allclose against ref.py. This
+is the core correctness signal for the compute that ships inside the HLO
+artifacts.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul as kmm
+from compile.kernels import nesting as kn
+from compile.kernels import quantize as kq
+from compile.kernels import ref
+
+BITS = st.sampled_from([2, 3, 4, 5, 6, 7, 8])
+
+
+def _arr(rng, shape, scale=3.0):
+    return jnp.asarray(rng.normal(0, scale, shape).astype(np.float32))
+
+
+# ------------------------------ fake_quant --------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 2000),
+    bits=BITS,
+    seed=st.integers(0, 2**31),
+)
+def test_fake_quant_matches_ref(n, bits, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (n,))
+    got = kq.fake_quant_dynamic(x, bits)
+    want = ref.fake_quant_dynamic(x, bits)
+    np.testing.assert_allclose(got, want, atol=1e-6, rtol=0)
+
+
+def test_fake_quant_2d_shapes():
+    rng = np.random.default_rng(0)
+    for shape in [(1, 1), (16, 24, 24, 3), (5, 7, 11)]:
+        x = _arr(rng, shape)
+        got = kq.fake_quant_dynamic(x, 8)
+        want = ref.fake_quant_dynamic(x, 8)
+        np.testing.assert_allclose(got, want, atol=1e-6)
+        assert got.shape == x.shape
+
+
+def test_fake_quant_idempotent():
+    """fq(fq(x)) == fq(x): quantized values are fixed points."""
+    rng = np.random.default_rng(1)
+    x = _arr(rng, (500,))
+    once = kq.fake_quant_dynamic(x, 6)
+    twice = kq.fake_quant_dynamic(once, 6)
+    np.testing.assert_allclose(once, twice, atol=1e-6)
+
+
+def test_fake_quant_levels():
+    """Output takes at most 2^bits distinct values."""
+    rng = np.random.default_rng(2)
+    x = _arr(rng, (4096,))
+    for bits in (2, 3, 4):
+        y = np.asarray(kq.fake_quant_dynamic(x, bits))
+        assert len(np.unique(y)) <= 2**bits
+
+
+def test_fake_quant_zero_input():
+    x = jnp.zeros((64,), jnp.float32)
+    y = kq.fake_quant_dynamic(x, 8)
+    np.testing.assert_array_equal(np.asarray(y), 0)
+
+
+# ------------------------------- qmatmul ----------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 300),
+    n=st.integers(1, 40),
+    bits=st.sampled_from([0, 4, 6, 8]),
+    seed=st.integers(0, 2**31),
+)
+def test_qmatmul_matches_ref(m, k, n, bits, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (m, k), 1.0)
+    w = _arr(rng, (k, n), 1.0)
+    got = kmm.qmatmul(x, w, bits)
+    want = ref.qmatmul(x, w, bits)
+    np.testing.assert_allclose(got, want, atol=1e-3, rtol=1e-4)
+
+
+def test_qmatmul_multi_block():
+    """Shapes crossing the 128-tile boundary exercise the K-loop + grid."""
+    rng = np.random.default_rng(3)
+    x = _arr(rng, (130, 257), 1.0)
+    w = _arr(rng, (257, 140), 1.0)
+    got = kmm.qmatmul(x, w, 8)
+    want = ref.qmatmul(x, w, 8)
+    np.testing.assert_allclose(got, want, atol=1e-2, rtol=1e-4)
+
+
+def test_qmatmul_bits0_is_plain_matmul():
+    rng = np.random.default_rng(4)
+    x = _arr(rng, (8, 32))
+    w = _arr(rng, (32, 8))
+    np.testing.assert_allclose(kmm.qmatmul(x, w, 0), x @ w, atol=1e-5)
+
+
+# --------------------------- nesting kernels ------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.sampled_from([8, 6]),
+    h=st.integers(2, 7),
+    size=st.integers(1, 3000),
+    seed=st.integers(0, 2**31),
+)
+def test_decompose_recompose_lossless(n, h, size, seed):
+    """Compensated decompose∘recompose is the identity (paper §3.3.2)."""
+    if h >= n:
+        return
+    rng = np.random.default_rng(seed)
+    lo, hi = ref.int_min_max(n)
+    w = jnp.asarray(rng.integers(lo, hi + 1, size=(size,)).astype(np.int32))
+    w_high, w_low = kn.decompose_shift(w, n, h, compensate=True)
+    rec = kn.recompose(w_high, w_low, n - h)
+    np.testing.assert_array_equal(np.asarray(rec), np.asarray(w))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.sampled_from([8, 6]),
+    h=st.integers(2, 7),
+    seed=st.integers(0, 2**31),
+)
+def test_decompose_matches_ref(n, h, seed):
+    if h >= n:
+        return
+    rng = np.random.default_rng(seed)
+    lo, hi = ref.int_min_max(n)
+    w = jnp.asarray(rng.integers(lo, hi + 1, size=(777,)).astype(np.int32))
+    gh, gl = kn.decompose_shift(w, n, h)
+    rh, rl = ref.decompose_shift(w, n, h)
+    np.testing.assert_array_equal(np.asarray(gh), np.asarray(rh))
+    # kernel clips residual to the compensated range; shift residual fits
+    np.testing.assert_array_equal(np.asarray(gl), np.asarray(rl))
+
+
+def test_decompose_ranges_exhaustive_int8():
+    """All 256 int8 values: w_high within INTh, compensated w_low within
+    INT(l+1) — the §3.3.2 containment proof, checked exhaustively."""
+    w = jnp.arange(-128, 128, dtype=jnp.int32)
+    for h in range(2, 8):
+        l = 8 - h
+        w_high, w_low = kn.decompose_shift(w, 8, h, compensate=True)
+        hlo, hhi = ref.int_min_max(h)
+        llo, lhi = ref.int_min_max(l + 1)
+        assert int(jnp.min(w_high)) >= hlo and int(jnp.max(w_high)) <= hhi
+        assert int(jnp.min(w_low)) >= llo and int(jnp.max(w_low)) <= lhi
+        rec = kn.recompose(w_high, w_low, l)
+        np.testing.assert_array_equal(np.asarray(rec), np.asarray(w))
+
+
+@settings(max_examples=20, deadline=None)
+@given(h=st.integers(2, 7), seed=st.integers(0, 2**31))
+def test_residual_low_arbitrary_high(h, seed):
+    """residual_low must agree with ref for adaptively-perturbed w_high."""
+    n = 8
+    if h >= n:
+        return
+    rng = np.random.default_rng(seed)
+    lo, hi = ref.int_min_max(n)
+    w = jnp.asarray(rng.integers(lo, hi + 1, size=(512,)).astype(np.int32))
+    base, _ = ref.decompose_shift(w, n, h)
+    hlo, hhi = ref.int_min_max(h)
+    jitter = rng.integers(-1, 2, size=(512,)).astype(np.int32)
+    w_high = jnp.clip(base + jitter, hlo, hhi).astype(jnp.int32)
+    got = kn.residual_low(w, w_high, n, h, True)
+    want = ref.residual_low(w, w_high, n, h, True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -1,0 +1,73 @@
+"""Packed-bit tensor layout: the Python↔Rust interchange contract."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import packbits
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    bits=st.integers(2, 16),
+    n=st.integers(0, 2000),
+    seed=st.integers(0, 2**31),
+)
+def test_pack_unpack_roundtrip(bits, n, seed):
+    rng = np.random.default_rng(seed)
+    lo, hi = packbits.int_range(bits)
+    vals = rng.integers(lo, hi + 1, size=n).astype(np.int32)
+    words = packbits.pack(vals, bits)
+    back = packbits.unpack(words, bits, n)
+    np.testing.assert_array_equal(back, vals)
+
+
+def test_pack_extremes_all_bits():
+    for bits in range(2, 17):
+        lo, hi = packbits.int_range(bits)
+        vals = np.array([lo, hi, 0, -1, 1, lo, hi], dtype=np.int64)
+        back = packbits.unpack(packbits.pack(vals, bits), bits, len(vals))
+        np.testing.assert_array_equal(back, vals)
+
+
+def test_known_layout_int4():
+    """Golden words pin the LSB-first lane layout shared with Rust."""
+    vals = np.array([1, 2, 3, -1], dtype=np.int32)
+    words = packbits.pack(vals, 4)
+    # lanes: 0x1 | 0x2<<4 | 0x3<<8 | 0xF<<12
+    assert words.tolist() == [0x1 | (0x2 << 4) | (0x3 << 8) | (0xF << 12)]
+
+
+def test_known_layout_int3_spans_words():
+    vals = np.arange(-4, 4, dtype=np.int32)  # 8 values, 21 lanes/word
+    words = packbits.pack(np.tile(vals, 4), 3)  # 32 values → 2 words
+    assert len(words) == 2
+    back = packbits.unpack(words, 3, 32)
+    np.testing.assert_array_equal(back, np.tile(vals, 4))
+
+
+def test_out_of_range_rejected():
+    with pytest.raises(ValueError):
+        packbits.pack(np.array([8]), 4)  # INT4 max is 7
+    with pytest.raises(ValueError):
+        packbits.pack(np.array([-9]), 4)
+
+
+def test_packed_nbytes():
+    assert packbits.packed_nbytes(0, 4) == 0
+    assert packbits.packed_nbytes(16, 4) == 8  # exactly one word
+    assert packbits.packed_nbytes(17, 4) == 16
+    assert packbits.packed_nbytes(21, 3) == 8
+    assert packbits.packed_nbytes(22, 3) == 16
+
+
+def test_bad_bits_rejected():
+    with pytest.raises(ValueError):
+        packbits.pack(np.array([0]), 1)
+    with pytest.raises(ValueError):
+        packbits.unpack(np.zeros(1, np.uint64), 17, 1)
+
+
+def test_unpack_insufficient_words():
+    with pytest.raises(ValueError):
+        packbits.unpack(np.zeros(1, np.uint64), 4, 17)

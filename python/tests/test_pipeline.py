@@ -1,0 +1,71 @@
+"""PTQ pipeline invariants on a toy model (fast; no trained weights)."""
+
+import numpy as np
+import pytest
+
+from compile import model, nestquant, quantizer as qz
+
+
+@pytest.fixture(scope="module")
+def toy():
+    arch = "cnn_t"
+    params = [np.asarray(p) for p in model.init_params(arch, seed=9)]
+    mask = [s.quantized for s in model.param_specs(arch)]
+    w_ints, scales = qz.quantize_model(params, mask, 8, "adaptive")
+    return arch, params, mask, w_ints, scales
+
+
+def test_quantize_model_masks(toy):
+    arch, params, mask, w_ints, scales = toy
+    for q, wi, s in zip(mask, w_ints, scales):
+        assert (wi is not None) == q
+        assert (s is not None) == q
+
+
+def test_full_bit_recompose_exact_model_level(toy):
+    """Compensated part+low recomposition reproduces w_int for every layer
+    and every h — the model-level §3.3.2 guarantee the pipeline asserts."""
+    arch, params, mask, w_ints, scales = toy
+    for h in (3, 4, 5, 6, 7):
+        rec = nestquant._nest_params(params, w_ints, scales, 8, h, "adaptive",
+                                     part=False, compensate=True)
+        full = qz.dequant_model(params, w_ints, scales)
+        for a, b in zip(rec, full):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_part_bit_scale_inflation(toy):
+    """Part-bit dequant uses s·2^l (Eq. 10): values land on the coarser grid."""
+    arch, params, mask, w_ints, scales = toy
+    out = nestquant._nest_params(params, w_ints, scales, 8, 4, "adaptive", part=True)
+    for spec, p, wi, s, o in zip(model.param_specs(arch), params, w_ints, scales, out):
+        if wi is None:
+            assert o is p
+        else:
+            grid = s * 16  # l = 4
+            q = o / grid
+            np.testing.assert_allclose(q, np.round(q), atol=1e-4)
+
+
+def test_nest_tensors_bit_budget(toy):
+    arch, params, mask, w_ints, scales = toy
+    tensors = nestquant.nest_tensors(arch, params, w_ints, scales, 8, 5)
+    for t in tensors:
+        if t.fp32 is None:
+            assert t.high_bits == 5
+            assert t.low_bits == 4  # l+1 = 8-5+1
+            lo, hi = qz.int_min_max(5)
+            assert t.w_high.min() >= lo and t.w_high.max() <= hi
+
+
+def test_critical_h_rule():
+    accs = {2: 0.05, 3: 0.10, 4: 0.62, 5: 0.68, 6: 0.70, 7: 0.71}
+    assert nestquant.critical_h(accs, 0.71) == 4
+    assert nestquant.critical_h({2: 0.0}, 0.7) is None
+
+
+def test_eq12_pattern_bands():
+    assert nestquant.eq12_pattern(int(10e6), 8, 30, 300) == 5
+    assert nestquant.eq12_pattern(int(100e6), 8, 30, 300) == 4
+    assert nestquant.eq12_pattern(int(400e6), 8, 30, 300) == 3
+    assert nestquant.eq12_pattern(int(10e6), 6, 30, 300) == 4

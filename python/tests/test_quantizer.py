@@ -1,0 +1,153 @@
+"""Quantizer: scales, RTN, SQuant-style flips, nesting math (paper §3)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quantizer as qz
+
+
+def _w(seed, shape=(64, 32)):
+    return np.random.default_rng(seed).normal(0, 0.5, shape).astype(np.float32)
+
+
+# ------------------------------- scales -----------------------------------
+
+
+def test_channel_scales_shape_and_coverage():
+    w = _w(0)
+    s = qz.channel_scales(w, 8)
+    assert s.shape == (32,)
+    # RTN at the computed scale may not clip: |w/s| <= 127 per channel
+    t = np.abs(w / s)
+    assert t.max() <= 127.0 + 1e-4
+
+
+def test_scales_positive_even_for_zero_channel():
+    w = np.zeros((16, 4), np.float32)
+    s = qz.channel_scales(w, 8)
+    assert (s > 0).all()
+
+
+# --------------------------------- RTN ------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(bits=st.sampled_from([3, 4, 6, 8]), seed=st.integers(0, 2**31))
+def test_rtn_within_range(bits, seed):
+    w = _w(seed)
+    s = qz.channel_scales(w, bits)
+    wi = qz.quantize_rtn(w, s, bits)
+    lo, hi = qz.int_min_max(bits)
+    assert wi.min() >= lo and wi.max() <= hi
+
+
+def test_rtn_error_bound():
+    """|w - s*w_int| <= s/2 elementwise when no clipping occurs."""
+    w = _w(1)
+    s = qz.channel_scales(w, 8)
+    wi = qz.quantize_rtn(w, s, 8)
+    err = np.abs(w - wi * s)
+    assert (err <= s / 2 + 1e-7).all()
+
+
+# --------------------------- adaptive rounding -----------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(bits=st.sampled_from([4, 6, 8]), seed=st.integers(0, 2**31))
+def test_adaptive_is_up_or_down_rounding(bits, seed):
+    """Every adaptively-rounded value is floor or ceil of its target —
+    the AdaRound/SQuant search space."""
+    w = _w(seed)
+    s = qz.channel_scales(w, bits)
+    wi = qz.quantize_adaptive(w, s, bits)
+    t = w / s
+    lo, hi = qz.int_min_max(bits)
+    ok = (wi == np.clip(np.floor(t), lo, hi)) | (wi == np.clip(np.ceil(t), lo, hi))
+    assert ok.all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31))
+def test_adaptive_channel_error_cancellation(seed):
+    """Accumulated per-channel rounding error stays within ±0.5+1 of zero,
+    vs RTN which can drift ~sqrt(N) — the diagonal-Hessian objective."""
+    w = _w(seed, (256, 16))
+    s = qz.channel_scales(w, 8)
+    wi_ad = qz.quantize_adaptive(w, s, 8)
+    err_ad = np.abs((w / s - wi_ad).sum(axis=0))
+    assert (err_ad <= 1.5).all(), err_ad.max()
+
+
+def test_adaptive_beats_rtn_on_channel_error():
+    w = _w(7, (512, 8))
+    s = qz.channel_scales(w, 8)
+    e_ad = np.abs((w / s - qz.quantize_adaptive(w, s, 8)).sum(axis=0))
+    e_rtn = np.abs((w / s - qz.quantize_rtn(w, s, 8)).sum(axis=0))
+    assert e_ad.mean() <= e_rtn.mean() + 1e-9
+
+
+# ------------------------------- nesting ----------------------------------
+
+
+@pytest.mark.parametrize("method", qz.METHODS)
+@pytest.mark.parametrize("n,h", [(8, 4), (8, 5), (8, 7), (6, 4), (6, 3)])
+def test_nest_high_range(method, n, h):
+    rng = np.random.default_rng(0)
+    lo, hi = qz.int_min_max(n)
+    wi = rng.integers(lo, hi + 1, size=1000).astype(np.int32)
+    wh = qz.nest_high(wi, n, h, method)
+    hlo, hhi = qz.int_min_max(h)
+    assert wh.min() >= hlo and wh.max() <= hhi
+
+
+@pytest.mark.parametrize("method", qz.METHODS)
+@pytest.mark.parametrize("n,h", [(8, 3), (8, 4), (8, 6), (6, 4), (6, 5)])
+def test_compensated_recompose_lossless_all_values(method, n, h):
+    """THE paper claim (§3.3.2): with the extra 1-bit, recomposition is
+    exact for every representable INTn value and every rounding method."""
+    lo, hi = qz.int_min_max(n)
+    wi = np.arange(lo, hi + 1, dtype=np.int32)
+    wh = qz.nest_high(wi, n, h, method)
+    wl = qz.nest_low(wi, wh, n, h, compensate=True)
+    rec = qz.recompose(wh, wl, n - h)
+    np.testing.assert_array_equal(rec, wi)
+    # and w_low really fits in (l+1) signed bits
+    llo, lhi = qz.int_min_max(n - h + 1)
+    assert wl.min() >= llo and wl.max() <= lhi
+
+
+@pytest.mark.parametrize("n,h", [(8, 4), (8, 5), (6, 4)])
+def test_uncompensated_recompose_is_lossy(n, h):
+    """Without the extra bit, RoundingUp-style w_high loses information
+    (Table 7's non-zero error counts)."""
+    lo, hi = qz.int_min_max(n)
+    wi = np.arange(lo, hi + 1, dtype=np.int32)
+    wh = qz.nest_high(wi, n, h, "rtn")
+    wl = qz.nest_low(wi, wh, n, h, compensate=False)
+    rec = qz.recompose(wh, wl, n - h)
+    assert (rec != wi).any()
+
+
+def test_paper_fig9_worked_example():
+    """Fig 9: w_int=-67, INT(8|4): BitShift w_high=-5, clipped w_low=7 →
+    recomposed -73 (error 6); compensated w_low=13 → exact."""
+    wi = np.array([-67], dtype=np.int32)
+    wh = qz.nest_high(wi, 8, 4, "bitshift")
+    assert wh[0] == -5
+    wl_nc = qz.nest_low(wi, wh, 8, 4, compensate=False)
+    assert wl_nc[0] == 7
+    assert qz.recompose(wh, wl_nc, 4)[0] == -73
+    wl_c = qz.nest_low(wi, wh, 8, 4, compensate=True)
+    assert wl_c[0] == 13
+    assert qz.recompose(wh, wl_c, 4)[0] == -67
+
+
+def test_dequant_scale_inflation():
+    """Eq. 10: part-bit dequant uses s_high = s * 2^l."""
+    wi = np.array([[-128, 64]], dtype=np.int32)
+    s = np.array([0.01, 0.02], dtype=np.float32)
+    wh = qz.nest_high(wi, 8, 4, "bitshift")
+    deq = qz.dequant(wh, s * 16)
+    np.testing.assert_allclose(deq, wh.astype(np.float32) * s * 16)

@@ -1,0 +1,66 @@
+"""Generate + verify golden vectors for the Rust stats substrate.
+
+scipy is the ground truth. This test writes
+``artifacts/golden/stats_golden.json`` consumed by
+``rust/src/stats/`` unit tests (cargo test reads the same file), and
+verifies the JSON is self-consistent. Deterministic inputs → the file is
+reproducible byte-for-byte.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+from scipy import stats as sps
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "golden")
+
+
+def _cases():
+    rng = np.random.default_rng(777)
+    cases = []
+    for i, (na, nb) in enumerate([(50, 50), (200, 100), (1000, 1000), (31, 97)]):
+        a = rng.normal(0, 1, na)
+        b = rng.normal(0.2 * i, 1 + 0.1 * i, nb)
+        cases.append((a, b))
+    # ties case (integers)
+    a = rng.integers(-5, 6, 300).astype(float)
+    b = rng.integers(-4, 7, 300).astype(float)
+    cases.append((a, b))
+    return cases
+
+
+def test_write_golden():
+    os.makedirs(OUT, exist_ok=True)
+    out = []
+    for a, b in _cases():
+        n = min(len(a), len(b))
+        pear = sps.pearsonr(a[:n], b[:n])
+        spear = sps.spearmanr(a[:n], b[:n])
+        kend = sps.kendalltau(a[:n], b[:n])
+        ranksum = sps.ranksums(a, b)
+        mean_a = float(np.mean(a))
+        out.append({
+            "a": a.tolist(),
+            "b": b.tolist(),
+            "pearson": float(pear.statistic),
+            "spearman": float(spear.statistic),
+            "kendall": float(kend.statistic),
+            "wilcoxon_z": float(ranksum.statistic),
+            "wilcoxon_p": float(ranksum.pvalue),
+            "mean_a": mean_a,
+            "std_a": float(np.std(a, ddof=1)),
+            "percentile_a_2_5": float(np.percentile(a, 2.5)),
+            "percentile_a_97_5": float(np.percentile(a, 97.5)),
+        })
+    with open(os.path.join(OUT, "stats_golden.json"), "w") as f:
+        json.dump(out, f)
+    assert len(out) == 5
+
+
+def test_goldens_sane():
+    for a, b in _cases():
+        n = min(len(a), len(b))
+        r = sps.pearsonr(a[:n], b[:n]).statistic
+        assert -1 <= r <= 1

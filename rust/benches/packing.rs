@@ -1,0 +1,44 @@
+//! Bench: packed-bit tensor substrate (S1) — pack/unpack throughput per
+//! bitwidth, and the decompose/recompose bit ops (S2). Companion to
+//! Tables 8–11: these ops sit on every switch path.
+
+use nestquant::bits::{int_range, PackedTensor};
+use nestquant::nest::{self, NestConfig, Rounding};
+use nestquant::util::benchkit::Bench;
+use nestquant::util::prng::Rng;
+
+const N: usize = 1_000_000;
+
+fn main() {
+    let b = Bench::default();
+    let mut rng = Rng::new(42);
+
+    for bits in [3u8, 4, 5, 8] {
+        let (lo, hi) = int_range(bits);
+        let vals: Vec<i32> = (0..N).map(|_| rng.int(lo as i64, hi as i64) as i32).collect();
+        let packed = PackedTensor::pack(&vals, bits).unwrap();
+
+        b.run_throughput(&format!("pack INT{bits} x1M"), N as f64 / 1e6, "Melem", || {
+            std::hint::black_box(PackedTensor::pack(&vals, bits).unwrap());
+        });
+        let mut out = Vec::with_capacity(N);
+        b.run_throughput(&format!("unpack INT{bits} x1M"), N as f64 / 1e6, "Melem", || {
+            packed.unpack_into(&mut out);
+            std::hint::black_box(&out);
+        });
+    }
+
+    // decompose / recompose over INT8 (the upgrade/downgrade hot ops)
+    let (lo, hi) = int_range(8);
+    let w: Vec<i32> = (0..N).map(|_| rng.int(lo as i64, hi as i64) as i32).collect();
+    let cfg = NestConfig::new(8, 4).unwrap();
+    let (hs, ls) = nest::decompose(&w, cfg, Rounding::Rtn, true);
+    b.run_throughput("decompose INT(8|4) x1M", N as f64 / 1e6, "Melem", || {
+        std::hint::black_box(nest::decompose(&w, cfg, Rounding::Rtn, true));
+    });
+    let mut rec = Vec::with_capacity(N);
+    b.run_throughput("recompose INT(8|4) x1M", N as f64 / 1e6, "Melem", || {
+        nest::recompose_into(&hs, &ls, cfg.l(), &mut rec);
+        std::hint::black_box(&rec);
+    });
+}

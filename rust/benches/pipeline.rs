@@ -1,0 +1,71 @@
+//! Bench: end-to-end inference through the full L3→PJRT stack — batch
+//! latency and request throughput per architecture and activation
+//! config, plus batcher overhead. The serving-side companion to the
+//! paper's deployment claims (and the §Perf L3 target).
+
+use std::time::Duration;
+
+use nestquant::coordinator::Coordinator;
+use nestquant::util::benchkit::Bench;
+
+fn main() {
+    let root = nestquant::artifacts_dir();
+    if !root.join("manifest.json").exists() {
+        println!("bench: SKIP pipeline (run `make artifacts` first)");
+        return;
+    }
+    let b = Bench::quick();
+
+    for arch in ["cnn_t", "cnn_m", "cnn_l", "mobile_s", "vit_t", "vit_s"] {
+        let mut c = match Coordinator::new(&root, arch, 8, 4) {
+            Ok(c) => c,
+            Err(_) => continue,
+        };
+        c.manager.load_full_bit(&mut c.ledger).unwrap();
+        let (x, _) = c.manifest.load_val().unwrap();
+        let img_len = c.manifest.img * c.manifest.img * c.manifest.channels;
+        let batch = c.manifest.batch;
+        let input = &x[..batch * img_len];
+
+        let s = b.run(&format!("{arch} a8 full-bit batch16 infer"), || {
+            std::hint::black_box(c.infer_batch(input).unwrap());
+        });
+        println!(
+            "bench: {arch:<44}        throughput {:>12.1} req/s (batch {batch})",
+            batch as f64 / s.mean.as_secs_f64()
+        );
+    }
+
+    // batcher overhead: assemble/respond without any model execution
+    {
+        use nestquant::coordinator::batcher::{self, BatcherConfig, Request};
+        use std::sync::mpsc;
+        use std::time::Instant;
+        let cfg = BatcherConfig {
+            batch_size: 16,
+            image_len: 24 * 24 * 3,
+            max_wait: Duration::from_millis(5),
+        };
+        let image = vec![0.5f32; cfg.image_len];
+        let logits = vec![0.1f32; 16 * 10];
+        b.run("batcher assemble+respond x16 (no model)", || {
+            let (tx, rx) = mpsc::channel();
+            let mut replies = Vec::new();
+            for _ in 0..16 {
+                let (rtx, rrx) = mpsc::channel();
+                replies.push(rrx);
+                tx.send(Request {
+                    image: image.clone(),
+                    reply: rtx,
+                    enqueued: Instant::now(),
+                })
+                .unwrap();
+            }
+            let batch = batcher::next_batch(&rx, &cfg).unwrap();
+            batcher::respond(batch, &logits, 10);
+            for r in &replies {
+                r.recv().unwrap().unwrap();
+            }
+        });
+    }
+}

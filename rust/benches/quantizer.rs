@@ -1,0 +1,54 @@
+//! Bench: quantizer substrate (S3) — Table 1's companion measured on
+//! this device: RTN vs SQuant-style adaptive rounding, plus dequant
+//! (the per-switch materialization cost).
+
+use nestquant::quant;
+use nestquant::util::benchkit::Bench;
+use nestquant::util::prng::Rng;
+
+fn main() {
+    let b = Bench::default();
+    let mut rng = Rng::new(7);
+
+    for (rows, ch) in [(4096usize, 64usize), (16384, 128)] {
+        let n = rows * ch;
+        let w: Vec<f32> = (0..n).map(|_| (rng.normal() * 0.4) as f32).collect();
+        let scales = quant::channel_scales(&w, ch, 8).unwrap();
+
+        b.run_throughput(
+            &format!("channel_scales {rows}x{ch}"),
+            n as f64 / 1e6,
+            "Melem",
+            || {
+                std::hint::black_box(quant::channel_scales(&w, ch, 8).unwrap());
+            },
+        );
+        b.run_throughput(
+            &format!("quantize_rtn {rows}x{ch}"),
+            n as f64 / 1e6,
+            "Melem",
+            || {
+                std::hint::black_box(quant::quantize_rtn(&w, &scales, 8));
+            },
+        );
+        b.run_throughput(
+            &format!("quantize_adaptive(squant) {rows}x{ch}"),
+            n as f64 / 1e6,
+            "Melem",
+            || {
+                std::hint::black_box(quant::quantize_adaptive(&w, &scales, 8));
+            },
+        );
+        let wi = quant::quantize_rtn(&w, &scales, 8);
+        let mut out = Vec::with_capacity(n);
+        b.run_throughput(
+            &format!("dequant {rows}x{ch}"),
+            n as f64 / 1e6,
+            "Melem",
+            || {
+                quant::dequant(&wi, &scales, &mut out);
+                std::hint::black_box(&out);
+            },
+        );
+    }
+}

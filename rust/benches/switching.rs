@@ -1,0 +1,63 @@
+//! Bench: the switching hot path (Table 11's latency companion) —
+//! part-bit launch, upgrade, downgrade, and the diverse-bitwidths
+//! baseline's full swap, measured on real artifacts through the real
+//! ModelManager (container I/O + unpack + recompose + dequant + PJRT
+//! buffer upload).
+
+use nestquant::coordinator::{Coordinator, DiverseBitwidths};
+use nestquant::device::MemoryLedger;
+use nestquant::runtime::{Engine, Manifest};
+use nestquant::util::benchkit::Bench;
+
+fn main() {
+    let root = nestquant::artifacts_dir();
+    if !root.join("manifest.json").exists() {
+        println!("bench: SKIP switching (run `make artifacts` first)");
+        return;
+    }
+    let b = Bench::quick();
+    let manifest = Manifest::load(&root).unwrap();
+
+    for arch in ["cnn_t", "cnn_m", "cnn_l", "vit_s"] {
+        if !manifest.models.contains_key(arch) {
+            continue;
+        }
+        let spec = manifest.model(arch).unwrap();
+        let Some(_) = spec.nest_container(8, 4) else { continue };
+        let mut c = match Coordinator::new(&root, arch, 8, 4) {
+            Ok(c) => c,
+            Err(e) => {
+                println!("bench: SKIP {arch}: {e:#}");
+                continue;
+            }
+        };
+        let (sec_a, sec_b) = c.manager.section_bytes();
+        println!(
+            "bench: --- {arch}: sections {:.1}/{:.1} KB ---",
+            sec_a as f64 / 1e3,
+            sec_b as f64 / 1e3
+        );
+
+        b.run(&format!("{arch} part-bit launch"), || {
+            c.manager.load_part_bit(&mut c.ledger).unwrap();
+            c.manager.unload(&mut c.ledger).unwrap();
+        });
+        c.manager.load_part_bit(&mut c.ledger).unwrap();
+        b.run(&format!("{arch} upgrade+downgrade cycle"), || {
+            c.manager.upgrade(&mut c.ledger).unwrap();
+            c.manager.downgrade(&mut c.ledger).unwrap();
+        });
+        c.manager.unload(&mut c.ledger).unwrap();
+
+        // diverse-bitwidths baseline: full INT8 ⇄ INT4 swap
+        let engine = Engine::cpu().unwrap();
+        let mut base =
+            DiverseBitwidths::new(&engine, spec.clone(), 8, &root, &[8, 4]).unwrap();
+        let mut ledger = MemoryLedger::new(u64::MAX / 2);
+        base.switch_to(8, &mut ledger).unwrap();
+        b.run(&format!("{arch} DIVERSE swap INT8<->INT4"), || {
+            base.switch_to(4, &mut ledger).unwrap();
+            base.switch_to(8, &mut ledger).unwrap();
+        });
+    }
+}

@@ -1,0 +1,243 @@
+//! Packed-bit tensors: k-bit signed integers in u64 words (S1).
+//!
+//! Bit-layout contract shared with `python/compile/packbits.py`: element
+//! `i` lives in word `i / lanes` at bit offset `(i % lanes) * k`,
+//! `lanes = 64 / k`, two's-complement field, zero-padded final word.
+//! The paper deploys arbitrary-bitwidth weights this way ([38,39], §3.3.3)
+//! because no on-device DL library supports sub-8-bit dtypes (Table 3).
+
+use anyhow::{bail, ensure, Result};
+
+pub const MIN_BITS: u8 = 2;
+pub const MAX_BITS: u8 = 16;
+
+/// Lanes (elements) per 64-bit word for a `bits`-bit type.
+#[inline]
+pub fn lanes(bits: u8) -> usize {
+    64 / bits as usize
+}
+
+/// Signed range [min, max] of a `bits`-bit integer.
+#[inline]
+pub fn int_range(bits: u8) -> (i32, i32) {
+    (-(1 << (bits - 1)), (1 << (bits - 1)) - 1)
+}
+
+fn check_bits(bits: u8) -> Result<()> {
+    ensure!(
+        (MIN_BITS..=MAX_BITS).contains(&bits),
+        "bits must be in [{MIN_BITS},{MAX_BITS}], got {bits}"
+    );
+    Ok(())
+}
+
+/// An immutable packed tensor of `len` signed `bits`-bit integers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedTensor {
+    bits: u8,
+    len: usize,
+    words: Vec<u64>,
+}
+
+impl PackedTensor {
+    /// Pack `values` (each within the signed `bits` range) into words.
+    pub fn pack(values: &[i32], bits: u8) -> Result<Self> {
+        check_bits(bits)?;
+        let (lo, hi) = int_range(bits);
+        let n_lanes = lanes(bits);
+        let n_words = values.len().div_ceil(n_lanes);
+        let mask = (1u64 << bits) - 1;
+        let mut words = vec![0u64; n_words];
+        for (i, &v) in values.iter().enumerate() {
+            if v < lo || v > hi {
+                bail!("value {v} out of signed INT{bits} range [{lo},{hi}] at index {i}");
+            }
+            let field = (v as i64 as u64) & mask;
+            words[i / n_lanes] |= field << ((i % n_lanes) * bits as usize);
+        }
+        Ok(PackedTensor {
+            bits,
+            len: values.len(),
+            words,
+        })
+    }
+
+    /// Adopt existing words (e.g. read from a container). Validates length.
+    pub fn from_words(words: Vec<u64>, bits: u8, len: usize) -> Result<Self> {
+        check_bits(bits)?;
+        let need = len.div_ceil(lanes(bits));
+        ensure!(
+            words.len() == need,
+            "INT{bits} x {len} needs {need} words, got {}",
+            words.len()
+        );
+        Ok(PackedTensor { bits, len, words })
+    }
+
+    pub fn bits(&self) -> u8 {
+        self.bits
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// On-disk payload bytes (words only).
+    pub fn nbytes(&self) -> usize {
+        self.words.len() * 8
+    }
+
+    /// Element at `i`, sign-extended.
+    #[inline]
+    pub fn get(&self, i: usize) -> i32 {
+        debug_assert!(i < self.len);
+        let n_lanes = lanes(self.bits);
+        let word = self.words[i / n_lanes];
+        let shift = (i % n_lanes) * self.bits as usize;
+        let field = (word >> shift) & ((1u64 << self.bits) - 1);
+        sign_extend(field, self.bits)
+    }
+
+    /// Unpack everything into i32s.
+    pub fn unpack(&self) -> Vec<i32> {
+        let mut out = Vec::with_capacity(self.len);
+        self.unpack_into(&mut out);
+        out
+    }
+
+    /// Unpack into a caller buffer (hot path: avoids realloc on re-page-in).
+    pub fn unpack_into(&self, out: &mut Vec<i32>) {
+        out.clear();
+        out.reserve(self.len);
+        let n_lanes = lanes(self.bits);
+        let bits = self.bits as usize;
+        let mask = (1u64 << bits) - 1;
+        let full_words = self.len / n_lanes;
+        // word-at-a-time main loop: one load per `lanes` outputs
+        for w in 0..full_words {
+            let mut word = self.words[w];
+            for _ in 0..n_lanes {
+                out.push(sign_extend(word & mask, self.bits));
+                word >>= bits;
+            }
+        }
+        for i in full_words * n_lanes..self.len {
+            out.push(self.get(i));
+        }
+    }
+
+    /// Iterator over the values without materializing.
+    pub fn iter(&self) -> impl Iterator<Item = i32> + '_ {
+        (0..self.len).map(move |i| self.get(i))
+    }
+}
+
+#[inline]
+fn sign_extend(field: u64, bits: u8) -> i32 {
+    let shift = 64 - bits as u32;
+    (((field << shift) as i64) >> shift) as i32
+}
+
+/// Ideal packed payload size in bytes for `count` `bits`-bit elements.
+pub fn packed_nbytes(count: usize, bits: u8) -> usize {
+    count.div_ceil(lanes(bits)) * 8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, vec_i64};
+
+    #[test]
+    fn golden_layout_int4_matches_python() {
+        let t = PackedTensor::pack(&[1, 2, 3, -1], 4).unwrap();
+        assert_eq!(t.words(), &[0x1 | (0x2 << 4) | (0x3 << 8) | (0xF << 12)]);
+    }
+
+    #[test]
+    fn golden_layout_int3_spans_words() {
+        let vals: Vec<i32> = (-4..4).cycle().take(32).collect();
+        let t = PackedTensor::pack(&vals, 3).unwrap();
+        assert_eq!(t.words().len(), 2);
+        assert_eq!(t.unpack(), vals);
+    }
+
+    #[test]
+    fn roundtrip_extremes_all_bits() {
+        for bits in MIN_BITS..=MAX_BITS {
+            let (lo, hi) = int_range(bits);
+            let vals = [lo, hi, 0, -1, 1, lo, hi];
+            let t = PackedTensor::pack(&vals, bits).unwrap();
+            assert_eq!(t.unpack(), vals, "bits={bits}");
+            for (i, &v) in vals.iter().enumerate() {
+                assert_eq!(t.get(i), v);
+            }
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip_random() {
+        for bits in [2u8, 3, 4, 5, 6, 7, 8, 11, 16] {
+            let (lo, hi) = int_range(bits);
+            check(
+                &format!("pack-roundtrip-{bits}"),
+                60,
+                move |r, s| vec_i64(r, s, 2000, lo as i64, hi as i64),
+                move |vals| {
+                    let v32: Vec<i32> = vals.iter().map(|&v| v as i32).collect();
+                    let t = PackedTensor::pack(&v32, bits).unwrap();
+                    t.unpack() == v32 && t.nbytes() == packed_nbytes(v32.len(), bits)
+                },
+            );
+        }
+    }
+
+    #[test]
+    fn out_of_range_rejected() {
+        assert!(PackedTensor::pack(&[8], 4).is_err());
+        assert!(PackedTensor::pack(&[-9], 4).is_err());
+        assert!(PackedTensor::pack(&[0], 1).is_err());
+        assert!(PackedTensor::pack(&[0], 17).is_err());
+    }
+
+    #[test]
+    fn from_words_validates_length() {
+        assert!(PackedTensor::from_words(vec![0], 4, 17).is_err());
+        assert!(PackedTensor::from_words(vec![0, 0], 4, 17).is_ok());
+    }
+
+    #[test]
+    fn empty_tensor() {
+        let t = PackedTensor::pack(&[], 5).unwrap();
+        assert!(t.is_empty());
+        assert_eq!(t.nbytes(), 0);
+        assert_eq!(t.unpack(), Vec::<i32>::new());
+    }
+
+    #[test]
+    fn packed_nbytes_matches_python() {
+        assert_eq!(packed_nbytes(0, 4), 0);
+        assert_eq!(packed_nbytes(16, 4), 8);
+        assert_eq!(packed_nbytes(17, 4), 16);
+        assert_eq!(packed_nbytes(21, 3), 8);
+        assert_eq!(packed_nbytes(22, 3), 16);
+    }
+
+    #[test]
+    fn unpack_into_reuses_buffer() {
+        let t = PackedTensor::pack(&[1, -2, 3], 8).unwrap();
+        let mut buf = Vec::with_capacity(100);
+        t.unpack_into(&mut buf);
+        assert_eq!(buf, vec![1, -2, 3]);
+        t.unpack_into(&mut buf);
+        assert_eq!(buf, vec![1, -2, 3]);
+    }
+}

@@ -1,0 +1,649 @@
+//! `.nq` container reader/writer (S5) — byte-compatible with
+//! `python/compile/nqformat.py` (see that module's layout doc).
+//!
+//! The crucial affordance is *sectioned reads*: a part-bit launch parses
+//! section A only (`read_part`); the upgrade path reads section B as one
+//! contiguous tail (`read_section_b`). Those two byte counts ARE the
+//! paper's page-in/page-out overheads (Table 11).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::bits::{packed_nbytes, PackedTensor};
+
+pub const MAGIC: &[u8; 8] = b"NESTQNT1";
+pub const VERSION: u32 = 1;
+
+/// Container kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    /// NestQuant: w_high in section A, w_low in section B.
+    Nest,
+    /// Monolithic packed INTk model.
+    Mono,
+    /// Raw FP32 model.
+    Fp32,
+}
+
+impl Kind {
+    fn from_u8(v: u8) -> Result<Kind> {
+        Ok(match v {
+            0 => Kind::Nest,
+            1 => Kind::Mono,
+            2 => Kind::Fp32,
+            _ => bail!("unknown container kind {v}"),
+        })
+    }
+
+    fn as_u8(self) -> u8 {
+        match self {
+            Kind::Nest => 0,
+            Kind::Mono => 1,
+            Kind::Fp32 => 2,
+        }
+    }
+}
+
+/// Payload of one tensor.
+#[derive(Debug, Clone)]
+pub enum TensorData {
+    /// FP32 parameter (bias, layernorm, pos-emb).
+    Fp32(Vec<f32>),
+    /// NestQuant weight: per-channel scales + packed w_high (+ w_low once
+    /// section B has been paged in).
+    Nest {
+        scales: Vec<f32>,
+        w_high: PackedTensor,
+        w_low: Option<PackedTensor>,
+    },
+    /// Monolithic packed weight.
+    Mono {
+        scales: Vec<f32>,
+        w_int: PackedTensor,
+    },
+}
+
+/// One tensor: name, logical shape, payload.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    pub fn count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// A parsed container.
+#[derive(Debug, Clone)]
+pub struct Container {
+    pub kind: Kind,
+    pub n: u8,
+    pub h: u8,
+    pub act_bits: u8,
+    pub name: String,
+    pub meta: String,
+    pub tensors: Vec<Tensor>,
+    /// Byte offset of section B (0 when absent).
+    pub section_b_offset: u64,
+    /// Total file size in bytes.
+    pub file_len: u64,
+}
+
+impl Container {
+    /// Section-A bytes == part-bit page-in cost (D_high in §4.3.3).
+    pub fn section_a_bytes(&self) -> u64 {
+        if self.section_b_offset == 0 {
+            self.file_len
+        } else {
+            self.section_b_offset
+        }
+    }
+
+    /// Section-B bytes == upgrade page-in / downgrade page-out (D_low).
+    pub fn section_b_bytes(&self) -> u64 {
+        if self.section_b_offset == 0 {
+            0
+        } else {
+            self.file_len - self.section_b_offset
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// reading
+// ---------------------------------------------------------------------------
+
+struct Cursor<'a> {
+    d: &'a [u8],
+    o: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn raw(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.o + n <= self.d.len(), "truncated container at {}", self.o);
+        let s = &self.d[self.o..self.o + n];
+        self.o += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.raw(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.raw(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.raw(8)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        ensure!(n < 1 << 20, "unreasonable string length {n}");
+        Ok(String::from_utf8(self.raw(n)?.to_vec())?)
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let b = self.raw(4 * n)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn packed(&mut self, count: usize) -> Result<(u8, PackedTensor)> {
+        let bits = self.u8()?;
+        let nw = self.u32()? as usize;
+        let b = self.raw(8 * nw)?;
+        let words: Vec<u64> = b
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok((bits, PackedTensor::from_words(words, bits, count)?))
+    }
+}
+
+/// Read a container. `part_bit_only` stops after section A (w_low = None):
+/// this is the *part-bit launch* read path and touches no section-B bytes.
+pub fn read(path: &Path, part_bit_only: bool) -> Result<Container> {
+    let data = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    parse(&data, part_bit_only).with_context(|| format!("parsing {}", path.display()))
+}
+
+/// Parse from memory (transport hands over received bytes directly).
+pub fn parse(data: &[u8], part_bit_only: bool) -> Result<Container> {
+    let mut c = Cursor { d: data, o: 0 };
+    ensure!(c.raw(8)? == MAGIC, "bad magic");
+    let version = c.u32()?;
+    ensure!(version == VERSION, "unsupported version {version}");
+    let kind = Kind::from_u8(c.u8()?)?;
+    let n = c.u8()?;
+    let h = c.u8()?;
+    let act_bits = c.u8()?;
+    let name = c.str()?;
+    let meta = c.str()?;
+    let num = c.u32()? as usize;
+    ensure!(num < 100_000, "unreasonable tensor count {num}");
+    let off_b = c.u64()?;
+
+    let mut tensors = Vec::with_capacity(num);
+    for _ in 0..num {
+        let tname = c.str()?;
+        let ptype = c.u8()?;
+        let ndim = c.u8()? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(c.u32()? as usize);
+        }
+        let count: usize = shape.iter().product();
+        let data = match (ptype, kind) {
+            (1, _) => TensorData::Fp32(c.f32s(count)?),
+            (0, Kind::Nest) => {
+                let ns = c.u32()? as usize;
+                let scales = c.f32s(ns)?;
+                let (bits, w_high) = c.packed(count)?;
+                ensure!(bits == h, "w_high bits {bits} != header h {h}");
+                TensorData::Nest {
+                    scales,
+                    w_high,
+                    w_low: None,
+                }
+            }
+            (0, Kind::Mono) => {
+                let ns = c.u32()? as usize;
+                let scales = c.f32s(ns)?;
+                let (bits, w_int) = c.packed(count)?;
+                ensure!(bits == n, "w_int bits {bits} != header n {n}");
+                TensorData::Mono { scales, w_int }
+            }
+            (0, Kind::Fp32) => bail!("fp32 container cannot hold quantized tensors"),
+            (p, _) => bail!("unknown ptype {p}"),
+        };
+        tensors.push(Tensor {
+            name: tname,
+            shape,
+            data,
+        });
+    }
+
+    let mut container = Container {
+        kind,
+        n,
+        h,
+        act_bits,
+        name,
+        meta,
+        tensors,
+        section_b_offset: off_b,
+        file_len: data.len() as u64,
+    };
+
+    if kind == Kind::Nest {
+        ensure!(off_b as usize == c.o, "section B offset mismatch: {} vs {}", off_b, c.o);
+        if !part_bit_only {
+            attach_section_b(&mut container, &data[off_b as usize..])?;
+        }
+    } else {
+        ensure!(off_b == 0, "non-nest container with section B");
+        ensure!(c.o == data.len(), "trailing bytes");
+    }
+    Ok(container)
+}
+
+/// Parse section-B bytes (the upgrade page-in blob) into w_low tensors.
+pub fn attach_section_b(container: &mut Container, blob: &[u8]) -> Result<()> {
+    ensure!(container.kind == Kind::Nest, "section B only exists for nest containers");
+    let expect_low = container.n - container.h + 1;
+    let mut c = Cursor { d: blob, o: 0 };
+    for t in &mut container.tensors {
+        let count = t.shape.iter().product();
+        if let TensorData::Nest { w_low, .. } = &mut t.data {
+            let (bits, packed) = c.packed(count)?;
+            ensure!(bits == expect_low, "w_low bits {bits} != l+1 {expect_low}");
+            *w_low = Some(packed);
+        }
+    }
+    ensure!(c.o == blob.len(), "trailing bytes in section B");
+    Ok(())
+}
+
+/// Read only the section-B tail from disk (the literal upgrade page-in).
+pub fn read_section_b(path: &Path, container: &mut Container) -> Result<u64> {
+    ensure!(container.section_b_offset > 0, "container has no section B");
+    let mut f = std::fs::File::open(path)?;
+    use std::io::Seek;
+    f.seek(std::io::SeekFrom::Start(container.section_b_offset))?;
+    let mut blob = Vec::new();
+    f.read_to_end(&mut blob)?;
+    let nbytes = blob.len() as u64;
+    attach_section_b(container, &blob)?;
+    Ok(nbytes)
+}
+
+// ---------------------------------------------------------------------------
+// writing
+// ---------------------------------------------------------------------------
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_packed(out: &mut Vec<u8>, t: &PackedTensor) {
+    out.push(t.bits());
+    out.extend_from_slice(&(t.words().len() as u32).to_le_bytes());
+    for w in t.words() {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+}
+
+/// Serialize a container to bytes (the Python writer's exact layout).
+pub fn serialize(c: &Container) -> Result<Vec<u8>> {
+    let mut head = Vec::new();
+    head.extend_from_slice(MAGIC);
+    head.extend_from_slice(&VERSION.to_le_bytes());
+    head.extend_from_slice(&[c.kind.as_u8(), c.n, c.h, c.act_bits]);
+    put_str(&mut head, &c.name);
+    put_str(&mut head, &c.meta);
+    head.extend_from_slice(&(c.tensors.len() as u32).to_le_bytes());
+
+    let mut sec_a = Vec::new();
+    let mut sec_b = Vec::new();
+    for t in &c.tensors {
+        put_str(&mut sec_a, &t.name);
+        let ptype = match &t.data {
+            TensorData::Fp32(_) => 1u8,
+            _ => 0,
+        };
+        sec_a.push(ptype);
+        sec_a.push(t.shape.len() as u8);
+        for &d in &t.shape {
+            sec_a.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        match &t.data {
+            TensorData::Fp32(vals) => {
+                ensure!(vals.len() == t.count(), "{}: fp32 len mismatch", t.name);
+                for v in vals {
+                    sec_a.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            TensorData::Nest {
+                scales,
+                w_high,
+                w_low,
+            } => {
+                ensure!(c.kind == Kind::Nest, "nest tensor in non-nest container");
+                sec_a.extend_from_slice(&(scales.len() as u32).to_le_bytes());
+                for s in scales {
+                    sec_a.extend_from_slice(&s.to_le_bytes());
+                }
+                put_packed(&mut sec_a, w_high);
+                let low = w_low
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("{}: missing w_low for write", t.name))?;
+                put_packed(&mut sec_b, low);
+            }
+            TensorData::Mono { scales, w_int } => {
+                ensure!(c.kind == Kind::Mono, "mono tensor in non-mono container");
+                sec_a.extend_from_slice(&(scales.len() as u32).to_le_bytes());
+                for s in scales {
+                    sec_a.extend_from_slice(&s.to_le_bytes());
+                }
+                put_packed(&mut sec_a, w_int);
+            }
+        }
+    }
+
+    let off = if sec_b.is_empty() {
+        0u64
+    } else {
+        (head.len() + 8 + sec_a.len()) as u64
+    };
+    let mut out = head;
+    out.extend_from_slice(&off.to_le_bytes());
+    out.extend_from_slice(&sec_a);
+    out.extend_from_slice(&sec_b);
+    Ok(out)
+}
+
+/// Write a container file; returns (total, section_a, section_b) bytes.
+pub fn write(path: &Path, c: &Container) -> Result<(u64, u64, u64)> {
+    let bytes = serialize(c)?;
+    let total = bytes.len() as u64;
+    let sec_b = if c.kind == Kind::Nest {
+        let mut n = 0u64;
+        for t in &c.tensors {
+            if let TensorData::Nest { w_low: Some(l), .. } = &t.data {
+                n += 5 + l.nbytes() as u64; // u8 bits + u32 nwords + words
+            }
+        }
+        n
+    } else {
+        0
+    };
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(&bytes)?;
+    Ok((total, total - sec_b, sec_b))
+}
+
+/// Ideal (paper §4.3.3) byte split for a nest container of `counts`
+/// quantized elements: D_high ≈ h/(h+l+1)·D, D_low ≈ (l+1)/(h+l+1)·D.
+pub fn ideal_split(counts: &[usize], n: u8, h: u8) -> (u64, u64) {
+    let l1 = n - h + 1;
+    let mut hi = 0u64;
+    let mut lo = 0u64;
+    for &c in counts {
+        hi += packed_nbytes(c, h) as u64;
+        lo += packed_nbytes(c, l1) as u64;
+    }
+    (hi, lo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nest::{self, NestConfig};
+    use crate::quant;
+    use crate::util::prng::Rng;
+
+    fn toy_container(seed: u64, n: u8, h: u8) -> Container {
+        let mut rng = Rng::new(seed);
+        let channels = 6;
+        let rows = 40;
+        let w: Vec<f32> = (0..rows * channels)
+            .map(|_| (rng.normal() * 0.4) as f32)
+            .collect();
+        let scales = quant::channel_scales(&w, channels, n).unwrap();
+        let w_int = quant::quantize_adaptive(&w, &scales, n);
+        let cfg = NestConfig::new(n, h).unwrap();
+        let wh = quant::nest_high(&w_int, channels, cfg, quant::NestMethod::Adaptive);
+        let wl: Vec<i32> = w_int
+            .iter()
+            .zip(&wh)
+            .map(|(&wi, &whv)| nest::low_of(wi, whv, cfg, true))
+            .collect();
+        let bias: Vec<f32> = (0..channels).map(|_| rng.f32()).collect();
+        Container {
+            kind: Kind::Nest,
+            n,
+            h,
+            act_bits: n,
+            name: "toy".into(),
+            meta: "{\"k\":1}".into(),
+            tensors: vec![
+                Tensor {
+                    name: "layer.w".into(),
+                    shape: vec![rows, channels],
+                    data: TensorData::Nest {
+                        scales,
+                        w_high: PackedTensor::pack(&wh, h).unwrap(),
+                        w_low: Some(PackedTensor::pack(&wl, n - h + 1).unwrap()),
+                    },
+                },
+                Tensor {
+                    name: "layer.b".into(),
+                    shape: vec![channels],
+                    data: TensorData::Fp32(bias),
+                },
+            ],
+            section_b_offset: 0,
+            file_len: 0,
+        }
+    }
+
+    #[test]
+    fn roundtrip_nest() {
+        let c = toy_container(1, 8, 4);
+        let bytes = serialize(&c).unwrap();
+        let back = parse(&bytes, false).unwrap();
+        assert_eq!(back.kind, Kind::Nest);
+        assert_eq!((back.n, back.h, back.act_bits), (8, 4, 8));
+        assert_eq!(back.name, "toy");
+        assert_eq!(back.tensors.len(), 2);
+        match (&c.tensors[0].data, &back.tensors[0].data) {
+            (
+                TensorData::Nest {
+                    scales: s1,
+                    w_high: h1,
+                    w_low: Some(l1),
+                },
+                TensorData::Nest {
+                    scales: s2,
+                    w_high: h2,
+                    w_low: Some(l2),
+                },
+            ) => {
+                assert_eq!(s1, s2);
+                assert_eq!(h1.unpack(), h2.unpack());
+                assert_eq!(l1.unpack(), l2.unpack());
+            }
+            _ => panic!("wrong payload"),
+        }
+    }
+
+    #[test]
+    fn part_bit_read_stops_at_section_a() {
+        let c = toy_container(2, 8, 5);
+        let bytes = serialize(&c).unwrap();
+        let part = parse(&bytes, true).unwrap();
+        match &part.tensors[0].data {
+            TensorData::Nest { w_low, .. } => assert!(w_low.is_none()),
+            _ => panic!(),
+        }
+        assert!(part.section_b_offset > 0);
+        assert_eq!(
+            part.section_a_bytes() + part.section_b_bytes(),
+            bytes.len() as u64
+        );
+    }
+
+    #[test]
+    fn section_b_attach_after_part_read() {
+        let c = toy_container(3, 6, 4);
+        let bytes = serialize(&c).unwrap();
+        let mut part = parse(&bytes, true).unwrap();
+        let off = part.section_b_offset as usize;
+        attach_section_b(&mut part, &bytes[off..]).unwrap();
+        match &part.tensors[0].data {
+            TensorData::Nest {
+                w_low: Some(l), ..
+            } => {
+                assert_eq!(l.bits(), 3); // 6-4+1
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn recompose_from_container_is_lossless() {
+        let n = 8;
+        let h = 4;
+        let c = toy_container(4, n, h);
+        let bytes = serialize(&c).unwrap();
+        let back = parse(&bytes, false).unwrap();
+        if let TensorData::Nest {
+            w_high,
+            w_low: Some(w_low),
+            ..
+        } = &back.tensors[0].data
+        {
+            let hs = w_high.unpack();
+            let ls = w_low.unpack();
+            let mut rec = Vec::new();
+            nest::recompose_into(&hs, &ls, n - h, &mut rec);
+            // every value must be a valid INTn
+            let (lo, hi) = crate::bits::int_range(n);
+            assert!(rec.iter().all(|&v| v >= lo && v <= hi));
+        } else {
+            panic!()
+        }
+    }
+
+    #[test]
+    fn corruption_rejected() {
+        let c = toy_container(5, 8, 4);
+        let mut bytes = serialize(&c).unwrap();
+        // bad magic
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(parse(&bad, false).is_err());
+        // truncation (anywhere) must error, not panic
+        for cut in [10, 40, bytes.len() / 2, bytes.len() - 3] {
+            assert!(parse(&bytes[..cut], false).is_err(), "cut={cut}");
+        }
+        // version bump
+        bytes[8] = 99;
+        assert!(parse(&bytes, false).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip_with_section_b_read() {
+        let dir = std::env::temp_dir().join("nq_container_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("toy.nq");
+        let c = toy_container(6, 8, 6);
+        let (total, a, b) = write(&path, &c).unwrap();
+        assert_eq!(total, a + b);
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), total);
+        let mut part = read(&path, true).unwrap();
+        let paged = read_section_b(&path, &mut part).unwrap();
+        assert_eq!(paged, b);
+        match &part.tensors[0].data {
+            TensorData::Nest { w_low: Some(_), .. } => {}
+            _ => panic!("w_low not attached"),
+        }
+    }
+
+    #[test]
+    fn mono_and_fp32_roundtrip() {
+        let mut rng = Rng::new(7);
+        let w: Vec<f32> = (0..64).map(|_| rng.f32() - 0.5).collect();
+        let scales = quant::channel_scales(&w, 4, 4).unwrap();
+        let wi = quant::quantize_rtn(&w, &scales, 4);
+        let mono = Container {
+            kind: Kind::Mono,
+            n: 4,
+            h: 0,
+            act_bits: 4,
+            name: "m".into(),
+            meta: String::new(),
+            tensors: vec![Tensor {
+                name: "w".into(),
+                shape: vec![16, 4],
+                data: TensorData::Mono {
+                    scales,
+                    w_int: PackedTensor::pack(&wi, 4).unwrap(),
+                },
+            }],
+            section_b_offset: 0,
+            file_len: 0,
+        };
+        let bytes = serialize(&mono).unwrap();
+        let back = parse(&bytes, false).unwrap();
+        assert_eq!(back.kind, Kind::Mono);
+        match &back.tensors[0].data {
+            TensorData::Mono { w_int, .. } => assert_eq!(w_int.unpack(), wi),
+            _ => panic!(),
+        }
+
+        let fp = Container {
+            kind: Kind::Fp32,
+            n: 0,
+            h: 0,
+            act_bits: 0,
+            name: "f".into(),
+            meta: String::new(),
+            tensors: vec![Tensor {
+                name: "w".into(),
+                shape: vec![64],
+                data: TensorData::Fp32(w.clone()),
+            }],
+            section_b_offset: 0,
+            file_len: 0,
+        };
+        let bytes = serialize(&fp).unwrap();
+        let back = parse(&bytes, false).unwrap();
+        match &back.tensors[0].data {
+            TensorData::Fp32(vals) => assert_eq!(vals, &w),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn ideal_split_proportions() {
+        // INT(8|6): D_high/D ≈ 6/9, D_low/D ≈ 3/9 (±packing roundup)
+        let counts = vec![64 * 21]; // multiple of every lane count used
+        let (hi, lo) = ideal_split(&counts, 8, 6);
+        let total = (hi + lo) as f64;
+        assert!((hi as f64 / total - 6.0 / 9.0).abs() < 0.02);
+        assert!((lo as f64 / total - 3.0 / 9.0).abs() < 0.02);
+    }
+}

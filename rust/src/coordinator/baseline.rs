@@ -1,0 +1,141 @@
+//! Diverse-bitwidths baseline: the deployment the paper compares against
+//! (Fig 1, Tables 9–11) — one monolithic packed INTk container per
+//! bitwidth, switching by full unload + full load.
+//!
+//! NestQuant's win is exactly that this baseline pays `size(INTa)`
+//! page-out plus `size(INTb)` page-in per switch, while NestQuant moves
+//! only section B.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::container::{self, Kind, TensorData};
+use crate::device::MemoryLedger;
+use crate::quant;
+use crate::runtime::{Engine, Executable, ModelSpec};
+
+use super::manager::SwitchCost;
+
+/// Diverse-bitwidths deployment of one architecture: a set of monolithic
+/// INTk models, at most one resident at a time.
+pub struct DiverseBitwidths {
+    spec: ModelSpec,
+    engine: Engine,
+    exe: Executable,
+    /// bits → (path, file bytes)
+    models: BTreeMap<u8, (PathBuf, u64)>,
+    active: Option<u8>,
+    weight_bufs: Vec<crate::runtime::DeviceBuffer>,
+}
+
+impl DiverseBitwidths {
+    /// `bits` selects which INTk containers to register.
+    pub fn new(
+        engine: &Engine,
+        spec: ModelSpec,
+        act_bits: u8,
+        artifacts_root: &std::path::Path,
+        bits: &[u8],
+    ) -> Result<DiverseBitwidths> {
+        let hlo_rel = spec
+            .hlo
+            .get(&act_bits)
+            .ok_or_else(|| anyhow::anyhow!("no a{act_bits} HLO for {}", spec.name))?;
+        let exe = engine.load_hlo(&artifacts_root.join(hlo_rel))?;
+        let mut models = BTreeMap::new();
+        for &k in bits {
+            let rel = spec
+                .mono_containers
+                .get(&k)
+                .ok_or_else(|| anyhow::anyhow!("no INT{k} container for {}", spec.name))?;
+            let path = artifacts_root.join(rel);
+            let bytes = std::fs::metadata(&path)
+                .with_context(|| path.display().to_string())?
+                .len();
+            models.insert(k, (path, bytes));
+        }
+        Ok(DiverseBitwidths {
+            spec,
+            engine: engine.clone(),
+            exe,
+            models,
+            active: None,
+            weight_bufs: Vec::new(),
+        })
+    }
+
+    pub fn active(&self) -> Option<u8> {
+        self.active
+    }
+
+    pub fn model_bytes(&self, bits: u8) -> Option<u64> {
+        self.models.get(&bits).map(|(_, b)| *b)
+    }
+
+    /// Total storage the baseline consumes on disk (all bitwidths).
+    pub fn total_storage(&self) -> u64 {
+        self.models.values().map(|(_, b)| *b).sum()
+    }
+
+    /// Switch to the INTk model: page out the active one entirely, page
+    /// in the new one entirely (the Fig 1 deployment's cost model).
+    pub fn switch_to(&mut self, bits: u8, ledger: &mut MemoryLedger) -> Result<SwitchCost> {
+        let t0 = Instant::now();
+        let (path, in_bytes) = self
+            .models
+            .get(&bits)
+            .ok_or_else(|| anyhow::anyhow!("INT{bits} not registered"))?
+            .clone();
+        let mut out_bytes = 0;
+        if let Some(cur) = self.active {
+            let (_, b) = self.models[&cur];
+            ledger.page_out(b).context("baseline page-out")?;
+            out_bytes = b;
+            self.weight_bufs.clear();
+        }
+        ledger.page_in(in_bytes).context("baseline page-in")?;
+        let c = container::read(&path, false)?;
+        ensure!(c.kind == Kind::Mono, "baseline requires mono containers");
+        let mut bufs = Vec::with_capacity(c.tensors.len());
+        let mut scratch_int = Vec::new();
+        let mut scratch_f32 = Vec::new();
+        for (t, spec) in c.tensors.iter().zip(&self.spec.params) {
+            ensure!(t.name == spec.name, "tensor order mismatch");
+            match &t.data {
+                TensorData::Fp32(vals) => {
+                    scratch_f32.clear();
+                    scratch_f32.extend_from_slice(vals);
+                }
+                TensorData::Mono { scales, w_int } => {
+                    w_int.unpack_into(&mut scratch_int);
+                    quant::dequant(&scratch_int, scales, &mut scratch_f32);
+                }
+                TensorData::Nest { .. } => anyhow::bail!("nest tensor in mono container"),
+            }
+            bufs.push(self.engine.upload(&scratch_f32, &spec.shape)?);
+        }
+        self.weight_bufs = bufs;
+        self.active = Some(bits);
+        Ok(SwitchCost {
+            page_in_bytes: in_bytes,
+            page_out_bytes: out_bytes,
+            micros: t0.elapsed().as_micros(),
+        })
+    }
+
+    /// Run a padded batch through the active model.
+    pub fn infer(
+        &self,
+        batch: &[f32],
+        batch_size: usize,
+        img: usize,
+        channels: usize,
+    ) -> Result<Vec<f32>> {
+        ensure!(self.active.is_some(), "no active baseline model");
+        let x = self.engine.upload(batch, &[batch_size, img, img, channels])?;
+        self.exe.run(&x, &self.weight_bufs)
+    }
+}

@@ -1,0 +1,215 @@
+//! Dynamic batcher: collect inference requests into fixed-size padded
+//! batches (the AOT executables are shape-specialized at `batch`).
+//!
+//! vLLM-router-style behaviour at IoT scale: a batch closes when it is
+//! full OR when the oldest request has waited `max_wait`; partial batches
+//! are zero-padded (safe: zero rows cannot raise the dynamic activation
+//! scale — see python/tests/test_backends.py).
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// One queued request: the flattened image + a reply channel.
+pub struct Request {
+    pub image: Vec<f32>,
+    pub reply: mpsc::Sender<Reply>,
+    pub enqueued: Instant,
+}
+
+/// The reply: logits for this image (or an error string).
+pub type Reply = Result<Vec<f32>, String>;
+
+/// A closed batch ready for execution.
+pub struct Batch {
+    /// Zero-padded flattened input, `batch_size * img * img * ch`.
+    pub input: Vec<f32>,
+    /// The live requests (≤ batch_size), in input order.
+    pub requests: Vec<Request>,
+    /// Wall time the oldest member waited before the batch closed.
+    pub oldest_wait: Duration,
+}
+
+/// Batch assembly parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    pub batch_size: usize,
+    pub image_len: usize,
+    pub max_wait: Duration,
+}
+
+/// Pull requests off `rx` and form one batch. Returns None when the
+/// channel is closed and drained. Blocks up to `max_wait` past the first
+/// request.
+pub fn next_batch(rx: &mpsc::Receiver<Request>, cfg: &BatcherConfig) -> Option<Batch> {
+    // Block for the first request.
+    let first = rx.recv().ok()?;
+    let deadline = Instant::now() + cfg.max_wait;
+    let mut requests = vec![first];
+    while requests.len() < cfg.batch_size {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(r) => requests.push(r),
+            Err(mpsc::RecvTimeoutError::Timeout) => break,
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(assemble(requests, cfg))
+}
+
+fn assemble(requests: Vec<Request>, cfg: &BatcherConfig) -> Batch {
+    let mut input = vec![0f32; cfg.batch_size * cfg.image_len];
+    for (i, r) in requests.iter().enumerate() {
+        debug_assert_eq!(r.image.len(), cfg.image_len);
+        input[i * cfg.image_len..(i + 1) * cfg.image_len].copy_from_slice(&r.image);
+    }
+    let oldest_wait = requests
+        .iter()
+        .map(|r| r.enqueued.elapsed())
+        .max()
+        .unwrap_or_default();
+    Batch {
+        input,
+        requests,
+        oldest_wait,
+    }
+}
+
+/// Distribute logits rows back to the batch's requests.
+pub fn respond(batch: Batch, logits: &[f32], num_classes: usize) {
+    for (i, r) in batch.requests.into_iter().enumerate() {
+        let row = logits[i * num_classes..(i + 1) * num_classes].to_vec();
+        let _ = r.reply.send(Ok(row)); // receiver may have gone away
+    }
+}
+
+/// Fail every request in the batch (executor error path).
+pub fn respond_error(batch: Batch, msg: &str) {
+    for r in batch.requests {
+        let _ = r.reply.send(Err(msg.to_string()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn cfg() -> BatcherConfig {
+        BatcherConfig {
+            batch_size: 4,
+            image_len: 8,
+            max_wait: Duration::from_millis(30),
+        }
+    }
+
+    fn req(v: f32, tx_reply: &mut Vec<mpsc::Receiver<Reply>>) -> Request {
+        let (tx, rx) = mpsc::channel();
+        tx_reply.push(rx);
+        Request {
+            image: vec![v; 8],
+            reply: tx,
+            enqueued: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn full_batch_closes_immediately() {
+        let (tx, rx) = mpsc::channel();
+        let mut replies = Vec::new();
+        for i in 0..4 {
+            tx.send(req(i as f32, &mut replies)).unwrap();
+        }
+        let t0 = Instant::now();
+        let b = next_batch(&rx, &cfg()).unwrap();
+        assert!(t0.elapsed() < Duration::from_millis(25), "waited for timeout");
+        assert_eq!(b.requests.len(), 4);
+        assert_eq!(b.input.len(), 32);
+        assert_eq!(&b.input[0..8], &[0.0; 8]);
+        assert_eq!(&b.input[24..32], &[3.0; 8]);
+    }
+
+    #[test]
+    fn partial_batch_closes_on_timeout_and_pads() {
+        let (tx, rx) = mpsc::channel();
+        let mut replies = Vec::new();
+        tx.send(req(7.0, &mut replies)).unwrap();
+        tx.send(req(8.0, &mut replies)).unwrap();
+        let b = next_batch(&rx, &cfg()).unwrap();
+        assert_eq!(b.requests.len(), 2);
+        // padding rows are zero
+        assert_eq!(&b.input[16..32], &[0.0; 16]);
+    }
+
+    #[test]
+    fn never_exceeds_batch_size() {
+        let (tx, rx) = mpsc::channel();
+        let mut replies = Vec::new();
+        for i in 0..10 {
+            tx.send(req(i as f32, &mut replies)).unwrap();
+        }
+        let b = next_batch(&rx, &cfg()).unwrap();
+        assert_eq!(b.requests.len(), 4);
+        // the rest remain queued for the next batch
+        let b2 = next_batch(&rx, &cfg()).unwrap();
+        assert_eq!(b2.requests.len(), 4);
+        assert_eq!(&b2.input[0..8], &[4.0; 8]);
+    }
+
+    #[test]
+    fn closed_channel_returns_none() {
+        let (tx, rx) = mpsc::channel::<Request>();
+        drop(tx);
+        assert!(next_batch(&rx, &cfg()).is_none());
+    }
+
+    #[test]
+    fn respond_routes_rows() {
+        let (tx, rx) = mpsc::channel();
+        let mut replies = Vec::new();
+        tx.send(req(1.0, &mut replies)).unwrap();
+        tx.send(req(2.0, &mut replies)).unwrap();
+        let b = next_batch(&rx, &cfg()).unwrap();
+        let logits: Vec<f32> = (0..4 * 10).map(|i| i as f32).collect();
+        respond(b, &logits, 10);
+        let r0 = replies[0].recv().unwrap().unwrap();
+        let r1 = replies[1].recv().unwrap().unwrap();
+        assert_eq!(r0, (0..10).map(|i| i as f32).collect::<Vec<_>>());
+        assert_eq!(r1, (10..20).map(|i| i as f32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn no_starvation_under_trickle() {
+        // a slow producer: each request must still be answered within
+        // ~max_wait, not held until a full batch forms
+        let (tx, rx) = mpsc::channel();
+        let producer = thread::spawn(move || {
+            let mut replies = Vec::new();
+            for i in 0..3 {
+                let (rtx, rrx) = mpsc::channel();
+                replies.push(rrx);
+                tx.send(Request {
+                    image: vec![i as f32; 8],
+                    reply: rtx,
+                    enqueued: Instant::now(),
+                })
+                .unwrap();
+                thread::sleep(Duration::from_millis(45)); // > max_wait
+            }
+            replies
+        });
+        let mut batches = 0;
+        while let Some(b) = next_batch(&rx, &cfg()) {
+            assert_eq!(b.requests.len(), 1, "trickle must form singleton batches");
+            respond(b, &vec![0.0; 40], 10);
+            batches += 1;
+        }
+        assert_eq!(batches, 3);
+        let replies = producer.join().unwrap();
+        for r in replies {
+            assert!(r.recv().unwrap().is_ok());
+        }
+    }
+}

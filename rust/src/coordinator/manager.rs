@@ -1,0 +1,322 @@
+//! ModelManager: the on-device NestQuant switching mechanism (§3.3).
+//!
+//! Holds one `.nq` container and the compiled executable for its
+//! architecture, and realizes the paper's three switch transitions:
+//!
+//! * **part-bit launch** — read section A only; dequantize `w_high` with
+//!   the inflated scale `s·2^l` (Eq. 10).
+//! * **upgrade** — page in section B (the only bytes moved), recompose
+//!   `w_int = w_high·2^l + w_low` (Eq. 6), dequantize with `s`.
+//!   Zero page-out.
+//! * **downgrade** — drop `w_low` and the full-bit weights; rebuild the
+//!   part-bit weights from `w_high` already in memory. Zero page-in.
+//!
+//! Memory accounting follows the paper's convention (§4.3.3): the ledger
+//! tracks *packed* bytes (what a packed-int runtime holds). The PJRT CPU
+//! backend computes in f32, so dequantized buffers exist at the XLA
+//! boundary exactly as the paper's PyTorch deployment dequantizes for
+//! compute; the packed accounting is what Table 11 reports.
+//!
+//! Hot path: weights live as device-resident PJRT buffers, rebuilt only
+//! on a switch; a request uploads just its input batch.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::container::{self, Container, Kind, TensorData};
+use crate::device::MemoryLedger;
+use crate::nest;
+use crate::quant;
+use crate::runtime::{Engine, Executable, ModelSpec};
+
+/// Which weights are currently active.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// Part-bit model: INTh weights at scale s·2^l.
+    PartBit,
+    /// Full-bit model: recomposed INTn weights at scale s.
+    FullBit,
+}
+
+/// Latency + byte cost of one switch operation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SwitchCost {
+    pub page_in_bytes: u64,
+    pub page_out_bytes: u64,
+    pub micros: u128,
+}
+
+/// The manager's observable state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum State {
+    Unloaded,
+    Active(Variant),
+}
+
+/// One model's switching state machine + weight materialization.
+pub struct ModelManager {
+    spec: ModelSpec,
+    engine: Engine,
+    exe: Executable,
+    container_path: PathBuf,
+    container: Option<Container>,
+    /// Packed section sizes (bytes) for ledger accounting.
+    sec_a_bytes: u64,
+    sec_b_bytes: u64,
+    /// Device-resident weight buffers for the active variant.
+    weight_bufs: Vec<crate::runtime::DeviceBuffer>,
+    /// Cached part-bit buffers. Legitimate: they derive only from w_high
+    /// (+ scales), which stays resident in BOTH states by design — so a
+    /// downgrade becomes a pointer swap instead of an unpack+dequant+
+    /// upload pass (§Perf L3). Full-bit buffers are never cached across a
+    /// downgrade: they derive from the paged-out w_low.
+    part_bufs: Vec<crate::runtime::DeviceBuffer>,
+    state: State,
+    /// Scratch buffers reused across switches (no realloc on the path).
+    scratch_high: Vec<i32>,
+    scratch_low: Vec<i32>,
+    scratch_int: Vec<i32>,
+    scratch_f32: Vec<f32>,
+}
+
+impl ModelManager {
+    /// Create a manager for `spec` over the nest container at
+    /// `container_rel`, serving with the `act_bits` graph.
+    pub fn new(
+        engine: &Engine,
+        spec: ModelSpec,
+        act_bits: u8,
+        artifacts_root: &std::path::Path,
+        container_rel: &str,
+    ) -> Result<ModelManager> {
+        let hlo_rel = spec
+            .hlo
+            .get(&act_bits)
+            .ok_or_else(|| anyhow::anyhow!("no a{act_bits} HLO for {}", spec.name))?;
+        let exe = engine.load_hlo(&artifacts_root.join(hlo_rel))?;
+        let container_path = artifacts_root.join(container_rel);
+        // probe sizes without keeping data
+        let probe = container::read(&container_path, true)?;
+        ensure!(probe.kind == Kind::Nest, "manager requires a nest container");
+        Ok(ModelManager {
+            spec,
+            engine: engine.clone(),
+            exe,
+            sec_a_bytes: probe.section_a_bytes(),
+            sec_b_bytes: probe.section_b_bytes(),
+            container_path,
+            container: None,
+            weight_bufs: Vec::new(),
+            part_bufs: Vec::new(),
+            state: State::Unloaded,
+            scratch_high: Vec::new(),
+            scratch_low: Vec::new(),
+            scratch_int: Vec::new(),
+            scratch_f32: Vec::new(),
+        })
+    }
+
+    pub fn state(&self) -> State {
+        self.state
+    }
+
+    pub fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    /// Nest config (n, h) of the loaded container.
+    pub fn nest_config(&self) -> Option<nest::NestConfig> {
+        self.container
+            .as_ref()
+            .and_then(|c| nest::NestConfig::new(c.n, c.h).ok())
+    }
+
+    /// Packed bytes of {w_high + scales + fp32 params} / {w_low}.
+    pub fn section_bytes(&self) -> (u64, u64) {
+        (self.sec_a_bytes, self.sec_b_bytes)
+    }
+
+    /// Launch the part-bit model: section-A read only (Eq. 10 dequant).
+    pub fn load_part_bit(&mut self, ledger: &mut MemoryLedger) -> Result<SwitchCost> {
+        let t0 = Instant::now();
+        ensure!(self.state == State::Unloaded, "load_part_bit from {:?}", self.state);
+        ledger.page_in(self.sec_a_bytes).context("part-bit page-in")?;
+        let c = container::read(&self.container_path, true)?;
+        self.materialize(&c, Variant::PartBit)?;
+        self.container = Some(c);
+        self.state = State::Active(Variant::PartBit);
+        Ok(SwitchCost {
+            page_in_bytes: self.sec_a_bytes,
+            page_out_bytes: 0,
+            micros: t0.elapsed().as_micros(),
+        })
+    }
+
+    /// Launch directly as full-bit (whole-file read).
+    pub fn load_full_bit(&mut self, ledger: &mut MemoryLedger) -> Result<SwitchCost> {
+        let t0 = Instant::now();
+        ensure!(self.state == State::Unloaded, "load_full_bit from {:?}", self.state);
+        ledger
+            .page_in(self.sec_a_bytes + self.sec_b_bytes)
+            .context("full-bit page-in")?;
+        let c = container::read(&self.container_path, false)?;
+        self.materialize(&c, Variant::FullBit)?;
+        self.container = Some(c);
+        self.state = State::Active(Variant::FullBit);
+        Ok(SwitchCost {
+            page_in_bytes: self.sec_a_bytes + self.sec_b_bytes,
+            page_out_bytes: 0,
+            micros: t0.elapsed().as_micros(),
+        })
+    }
+
+    /// Upgrade part-bit → full-bit: page in section B, recompose.
+    /// **Zero page-out** — the NestQuant claim of Table 11.
+    pub fn upgrade(&mut self, ledger: &mut MemoryLedger) -> Result<SwitchCost> {
+        let t0 = Instant::now();
+        ensure!(
+            self.state == State::Active(Variant::PartBit),
+            "upgrade from {:?}",
+            self.state
+        );
+        ledger.page_in(self.sec_b_bytes).context("upgrade page-in")?;
+        let mut c = self.container.take().expect("container loaded");
+        container::read_section_b(&self.container_path, &mut c)?;
+        // stash the current part-bit buffers for an O(1) later downgrade
+        let part = std::mem::take(&mut self.weight_bufs);
+        self.materialize(&c, Variant::FullBit)?;
+        self.part_bufs = part;
+        self.container = Some(c);
+        self.state = State::Active(Variant::FullBit);
+        Ok(SwitchCost {
+            page_in_bytes: self.sec_b_bytes,
+            page_out_bytes: 0,
+            micros: t0.elapsed().as_micros(),
+        })
+    }
+
+    /// Downgrade full-bit → part-bit: drop w_low. **Zero page-in** — the
+    /// part-bit weights are rebuilt from w_high already resident.
+    pub fn downgrade(&mut self, ledger: &mut MemoryLedger) -> Result<SwitchCost> {
+        let t0 = Instant::now();
+        ensure!(
+            self.state == State::Active(Variant::FullBit),
+            "downgrade from {:?}",
+            self.state
+        );
+        let mut c = self.container.take().expect("container loaded");
+        for t in &mut c.tensors {
+            if let TensorData::Nest { w_low, .. } = &mut t.data {
+                *w_low = None; // page out
+            }
+        }
+        ledger.page_out(self.sec_b_bytes).context("downgrade page-out")?;
+        if self.part_bufs.is_empty() {
+            self.materialize(&c, Variant::PartBit)?;
+        } else {
+            // hot path: the part-bit buffers derive from the still-resident
+            // w_high — swap them in without touching the packed data
+            self.weight_bufs = std::mem::take(&mut self.part_bufs);
+        }
+        self.container = Some(c);
+        self.state = State::Active(Variant::PartBit);
+        Ok(SwitchCost {
+            page_in_bytes: 0,
+            page_out_bytes: self.sec_b_bytes,
+            micros: t0.elapsed().as_micros(),
+        })
+    }
+
+    /// Unload everything (diverse-bitwidths baseline switching path).
+    pub fn unload(&mut self, ledger: &mut MemoryLedger) -> Result<SwitchCost> {
+        let bytes = match self.state {
+            State::Unloaded => 0,
+            State::Active(Variant::PartBit) => self.sec_a_bytes,
+            State::Active(Variant::FullBit) => self.sec_a_bytes + self.sec_b_bytes,
+        };
+        ledger.page_out(bytes)?;
+        self.container = None;
+        self.weight_bufs.clear();
+        self.part_bufs.clear();
+        self.state = State::Unloaded;
+        Ok(SwitchCost {
+            page_in_bytes: 0,
+            page_out_bytes: bytes,
+            micros: 0,
+        })
+    }
+
+    /// Dequantize the container into device-resident weight buffers.
+    fn materialize(&mut self, c: &Container, variant: Variant) -> Result<()> {
+        ensure!(
+            c.tensors.len() == self.spec.params.len(),
+            "container/spec tensor count mismatch: {} vs {}",
+            c.tensors.len(),
+            self.spec.params.len()
+        );
+        let cfg = nest::NestConfig::new(c.n, c.h)?;
+        let mut bufs = Vec::with_capacity(c.tensors.len());
+        for (t, spec) in c.tensors.iter().zip(&self.spec.params) {
+            ensure!(t.name == spec.name, "tensor order: {} vs {}", t.name, spec.name);
+            ensure!(t.shape == spec.shape, "{}: shape mismatch", t.name);
+            let out = &mut self.scratch_f32;
+            match &t.data {
+                TensorData::Fp32(vals) => {
+                    out.clear();
+                    out.extend_from_slice(vals);
+                }
+                TensorData::Nest {
+                    scales,
+                    w_high,
+                    w_low,
+                } => match variant {
+                    Variant::PartBit => {
+                        w_high.unpack_into(&mut self.scratch_high);
+                        let inflated: Vec<f32> =
+                            scales.iter().map(|&s| s * cfg.scale_inflation()).collect();
+                        quant::dequant(&self.scratch_high, &inflated, out);
+                    }
+                    Variant::FullBit => {
+                        let low = w_low
+                            .as_ref()
+                            .ok_or_else(|| anyhow::anyhow!("{}: w_low not paged in", t.name))?;
+                        w_high.unpack_into(&mut self.scratch_high);
+                        low.unpack_into(&mut self.scratch_low);
+                        nest::recompose_into(
+                            &self.scratch_high,
+                            &self.scratch_low,
+                            cfg.l(),
+                            &mut self.scratch_int,
+                        );
+                        quant::dequant(&self.scratch_int, scales, out);
+                    }
+                },
+                TensorData::Mono { .. } => bail!("mono tensor in nest container"),
+            }
+            bufs.push(self.engine.upload(out, &spec.shape)?);
+        }
+        self.weight_bufs = bufs;
+        Ok(())
+    }
+
+    /// Run a padded batch (flattened NHWC) through the active model.
+    pub fn infer(
+        &self,
+        batch: &[f32],
+        batch_size: usize,
+        img: usize,
+        channels: usize,
+    ) -> Result<Vec<f32>> {
+        ensure!(self.state != State::Unloaded, "no active model");
+        ensure!(
+            batch.len() == batch_size * img * img * channels,
+            "batch size mismatch: {} vs {}",
+            batch.len(),
+            batch_size * img * img * channels
+        );
+        let x = self.engine.upload(batch, &[batch_size, img, img, channels])?;
+        self.exe.run(&x, &self.weight_bufs)
+    }
+}

@@ -1,0 +1,290 @@
+//! L3 coordinator (S9): the paper's system contribution as a serving
+//! stack — NestQuant model switching driven by a resource policy, behind
+//! a dynamically-batched inference loop.
+//!
+//! ```text
+//!   TCP clients ──frames──▶ server ──mpsc──▶ batcher ──▶ ModelManager ──▶ PJRT
+//!                                             ▲                │
+//!   ResourceTrace ──▶ PolicyState ── switch ──┘          MemoryLedger
+//! ```
+
+pub mod baseline;
+pub mod batcher;
+pub mod manager;
+pub mod metrics;
+pub mod monitor;
+pub mod policy;
+pub mod server;
+
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+pub use baseline::DiverseBitwidths;
+pub use manager::{ModelManager, State, SwitchCost, Variant};
+pub use metrics::Metrics;
+pub use policy::{Decision, PolicyState, SwitchPolicy};
+
+use crate::device::{DeviceProfile, MemoryLedger, ResourceTrace, RPI_4B};
+use crate::runtime::{Engine, Manifest};
+
+/// Everything needed to serve one NestQuant model on one device.
+pub struct Coordinator {
+    pub manifest: Manifest,
+    pub manager: ModelManager,
+    pub ledger: MemoryLedger,
+    pub profile: DeviceProfile,
+    pub metrics: std::sync::Arc<Metrics>,
+    root: PathBuf,
+}
+
+impl Coordinator {
+    /// Build a coordinator for `arch` with the INT(n|h) nest container.
+    pub fn new(root: &std::path::Path, arch: &str, n: u8, h: u8) -> Result<Coordinator> {
+        let manifest = Manifest::load(root)?;
+        let spec = manifest.model(arch)?.clone();
+        let container_rel = spec
+            .nest_container(n, h)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no INT({n}|{h}) container for {arch}; available: {:?}",
+                    spec.nest_containers.keys().collect::<Vec<_>>()
+                )
+            })?
+            .to_string();
+        let engine = Engine::cpu()?;
+        let manager = ModelManager::new(&engine, spec, n, root, &container_rel)
+            .with_context(|| format!("manager for {arch} INT({n}|{h})"))?;
+        Ok(Coordinator {
+            manifest,
+            manager,
+            ledger: MemoryLedger::new(RPI_4B.mem_bytes),
+            profile: RPI_4B,
+            metrics: std::sync::Arc::new(Metrics::default()),
+            root: root.to_path_buf(),
+        })
+    }
+
+    pub fn artifacts_root(&self) -> &std::path::Path {
+        &self.root
+    }
+
+    fn record_switch(&self, cost: &SwitchCost, upgrade: bool) {
+        self.metrics
+            .page_in_bytes
+            .fetch_add(cost.page_in_bytes, Ordering::Relaxed);
+        self.metrics
+            .page_out_bytes
+            .fetch_add(cost.page_out_bytes, Ordering::Relaxed);
+        if upgrade {
+            self.metrics.upgrades.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.metrics.downgrades.fetch_add(1, Ordering::Relaxed);
+        }
+        self.metrics
+            .switch_latency
+            .record(std::time::Duration::from_micros(cost.micros as u64));
+    }
+
+    /// Apply one policy decision, performing the switch if required.
+    pub fn apply(&mut self, decision: Decision) -> Result<Option<SwitchCost>> {
+        match decision {
+            Decision::Stay => Ok(None),
+            Decision::SwitchTo(Variant::FullBit) => {
+                let cost = self.manager.upgrade(&mut self.ledger)?;
+                self.record_switch(&cost, true);
+                Ok(Some(cost))
+            }
+            Decision::SwitchTo(Variant::PartBit) => {
+                let cost = self.manager.downgrade(&mut self.ledger)?;
+                self.record_switch(&cost, false);
+                Ok(Some(cost))
+            }
+        }
+    }
+
+    /// Run a padded batch and record latency metrics.
+    pub fn infer_batch(&self, input: &[f32]) -> Result<Vec<f32>> {
+        let t0 = Instant::now();
+        let out = self.manager.infer(
+            input,
+            self.manifest.batch,
+            self.manifest.img,
+            self.manifest.channels,
+        );
+        self.metrics.execute_latency.record(t0.elapsed());
+        if out.is_err() {
+            self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        out
+    }
+
+    /// Top-1 accuracy over the validation set (first `limit` images).
+    pub fn eval_accuracy(&self, limit: Option<usize>) -> Result<f64> {
+        let (x, y) = self.manifest.load_val()?;
+        let img_len = self.manifest.img * self.manifest.img * self.manifest.channels;
+        let n = limit.unwrap_or(y.len()).min(y.len());
+        let b = self.manifest.batch;
+        let classes = self.manifest.num_classes;
+        let mut correct = 0usize;
+        let mut i = 0;
+        let mut input = vec![0f32; b * img_len];
+        while i < n {
+            let take = (n - i).min(b);
+            input[..take * img_len].copy_from_slice(&x[i * img_len..(i + take) * img_len]);
+            input[take * img_len..].fill(0.0);
+            let logits = self.infer_batch(&input)?;
+            for r in 0..take {
+                let row = &logits[r * classes..(r + 1) * classes];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                if pred as u32 == y[i + r] {
+                    correct += 1;
+                }
+            }
+            i += take;
+        }
+        Ok(correct as f64 / n as f64)
+    }
+
+    /// Drive the coordinator through a resource trace, serving `reqs_per_step`
+    /// random validation images per step. Returns the lifecycle report.
+    pub fn run_trace(
+        &mut self,
+        mut trace: ResourceTrace,
+        policy: SwitchPolicy,
+        reqs_per_step: usize,
+    ) -> Result<TraceReport> {
+        let (x, y) = self.manifest.load_val()?;
+        let img_len = self.manifest.img * self.manifest.img * self.manifest.channels;
+        let b = self.manifest.batch;
+        let classes = self.manifest.num_classes;
+
+        let initial = match self.manager.state() {
+            State::Active(v) => v,
+            State::Unloaded => {
+                let cost = self.manager.load_full_bit(&mut self.ledger)?;
+                self.metrics
+                    .page_in_bytes
+                    .fetch_add(cost.page_in_bytes, Ordering::Relaxed);
+                Variant::FullBit
+            }
+        };
+        let mut pstate = PolicyState::new(policy, initial);
+        let mut rng = crate::util::prng::Rng::new(0x5eed);
+        let mut report = TraceReport::default();
+        let mut input = vec![0f32; b * img_len];
+
+        let mut step = 0usize;
+        while let Some(level) = trace.next_level() {
+            step += 1;
+            let decision = pstate.decide(level);
+            if let Some(cost) = self.apply(decision)? {
+                report.switches.push(SwitchEvent {
+                    step,
+                    level,
+                    to: pstate.current(),
+                    cost,
+                });
+            }
+            // serve this step's requests in padded batches
+            let mut served = 0;
+            while served < reqs_per_step {
+                let take = (reqs_per_step - served).min(b);
+                let mut idxs = Vec::with_capacity(take);
+                for r in 0..take {
+                    let j = rng.index(y.len());
+                    idxs.push(j);
+                    input[r * img_len..(r + 1) * img_len]
+                        .copy_from_slice(&x[j * img_len..(j + 1) * img_len]);
+                }
+                input[take * img_len..].fill(0.0);
+                let t0 = Instant::now();
+                let logits = self.infer_batch(&input)?;
+                self.metrics.request_latency.record(t0.elapsed());
+                self.metrics
+                    .requests
+                    .fetch_add(take as u64, Ordering::Relaxed);
+                self.metrics.batches.fetch_add(1, Ordering::Relaxed);
+                self.metrics
+                    .batch_occupancy_sum
+                    .fetch_add(take as u64, Ordering::Relaxed);
+                for (r, &j) in idxs.iter().enumerate() {
+                    let row = &logits[r * classes..(r + 1) * classes];
+                    let pred = row
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .unwrap()
+                        .0;
+                    let correct = pred as u32 == y[j];
+                    match pstate.current() {
+                        Variant::FullBit => {
+                            report.full_served += 1;
+                            report.full_correct += correct as u64;
+                        }
+                        Variant::PartBit => {
+                            report.part_served += 1;
+                            report.part_correct += correct as u64;
+                        }
+                    }
+                }
+                served += take;
+            }
+        }
+        report.steps = step;
+        Ok(report)
+    }
+}
+
+/// One switch that happened during a trace run.
+#[derive(Debug, Clone, Copy)]
+pub struct SwitchEvent {
+    pub step: usize,
+    pub level: f64,
+    pub to: Variant,
+    pub cost: SwitchCost,
+}
+
+/// Lifecycle summary of a trace run.
+#[derive(Debug, Default)]
+pub struct TraceReport {
+    pub steps: usize,
+    pub switches: Vec<SwitchEvent>,
+    pub full_served: u64,
+    pub full_correct: u64,
+    pub part_served: u64,
+    pub part_correct: u64,
+}
+
+impl TraceReport {
+    pub fn full_acc(&self) -> f64 {
+        if self.full_served == 0 {
+            f64::NAN
+        } else {
+            self.full_correct as f64 / self.full_served as f64
+        }
+    }
+
+    pub fn part_acc(&self) -> f64 {
+        if self.part_served == 0 {
+            f64::NAN
+        } else {
+            self.part_correct as f64 / self.part_served as f64
+        }
+    }
+
+    pub fn total_page_in(&self) -> u64 {
+        self.switches.iter().map(|s| s.cost.page_in_bytes).sum()
+    }
+
+    pub fn total_page_out(&self) -> u64 {
+        self.switches.iter().map(|s| s.cost.page_out_bytes).sum()
+    }
+}

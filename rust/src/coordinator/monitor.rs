@@ -1,0 +1,173 @@
+//! ResourceMonitor: the background thread that closes the loop between
+//! device resources and the switch policy while the server runs.
+//!
+//! Samples a resource source at a fixed interval, runs the hysteresis
+//! policy, and applies switches through the shared coordinator mutex
+//! (serializing with in-flight batches — a switch can never tear weights
+//! out from under an executing batch).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::device::ResourceTrace;
+
+use super::policy::{Decision, PolicyState, SwitchPolicy};
+use super::{Coordinator, Variant};
+
+/// A source of resource levels in [0, 1].
+pub trait ResourceSource: Send + 'static {
+    /// Next sample; None ends monitoring.
+    fn sample(&mut self) -> Option<f64>;
+}
+
+impl ResourceSource for ResourceTrace {
+    fn sample(&mut self) -> Option<f64> {
+        self.next_level()
+    }
+}
+
+/// Looping wrapper: replays a trace forever (long-running servers).
+pub struct LoopingTrace {
+    trace: ResourceTrace,
+    original: ResourceTrace,
+}
+
+impl LoopingTrace {
+    pub fn new(trace: ResourceTrace) -> Self {
+        LoopingTrace {
+            original: trace.clone(),
+            trace,
+        }
+    }
+}
+
+impl ResourceSource for LoopingTrace {
+    fn sample(&mut self) -> Option<f64> {
+        match self.trace.next_level() {
+            Some(v) => Some(v),
+            None => {
+                self.trace = self.original.clone();
+                self.trace.next_level()
+            }
+        }
+    }
+}
+
+/// Handle to a running monitor.
+pub struct MonitorHandle {
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<MonitorLog>>,
+}
+
+/// What the monitor did.
+#[derive(Debug, Default, Clone)]
+pub struct MonitorLog {
+    pub samples: u64,
+    pub upgrades: u64,
+    pub downgrades: u64,
+    pub switch_errors: u64,
+}
+
+impl MonitorHandle {
+    /// Stop monitoring; returns the activity log.
+    pub fn stop(mut self) -> MonitorLog {
+        self.stop.store(true, Ordering::SeqCst);
+        self.thread
+            .take()
+            .map(|t| t.join().unwrap_or_default())
+            .unwrap_or_default()
+    }
+}
+
+/// Spawn the monitor over a shared coordinator.
+pub fn spawn(
+    coordinator: Arc<Mutex<Coordinator>>,
+    mut source: impl ResourceSource,
+    policy: SwitchPolicy,
+    interval: Duration,
+) -> Result<MonitorHandle> {
+    let initial = {
+        let c = coordinator.lock().unwrap();
+        match c.manager.state() {
+            super::State::Active(v) => v,
+            super::State::Unloaded => anyhow::bail!("monitor requires a loaded model"),
+        }
+    };
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    let thread = std::thread::Builder::new()
+        .name("nq-monitor".into())
+        .spawn(move || {
+            let mut state = PolicyState::new(policy, initial);
+            let mut log = MonitorLog::default();
+            while !stop2.load(Ordering::SeqCst) {
+                let Some(level) = source.sample() else { break };
+                log.samples += 1;
+                let decision = state.decide(level);
+                if !matches!(decision, Decision::Stay) {
+                    let mut c = coordinator.lock().unwrap();
+                    match c.apply(decision) {
+                        Ok(Some(_)) => match decision {
+                            Decision::SwitchTo(Variant::FullBit) => log.upgrades += 1,
+                            Decision::SwitchTo(Variant::PartBit) => log.downgrades += 1,
+                            Decision::Stay => {}
+                        },
+                        Ok(None) => {}
+                        Err(_) => log.switch_errors += 1,
+                    }
+                }
+                drop_sleep(interval, &stop2);
+            }
+            log
+        })?;
+    Ok(MonitorHandle {
+        stop,
+        thread: Some(thread),
+    })
+}
+
+/// Sleep in small slices so stop() is responsive.
+fn drop_sleep(total: Duration, stop: &AtomicBool) {
+    let slice = Duration::from_millis(10);
+    let mut left = total;
+    while left > Duration::ZERO && !stop.load(Ordering::SeqCst) {
+        let d = left.min(slice);
+        std::thread::sleep(d);
+        left = left.saturating_sub(d);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Constant(f64, usize);
+    impl ResourceSource for Constant {
+        fn sample(&mut self) -> Option<f64> {
+            if self.1 == 0 {
+                return None;
+            }
+            self.1 -= 1;
+            Some(self.0)
+        }
+    }
+
+    #[test]
+    fn looping_trace_wraps() {
+        let mut lt = LoopingTrace::new(ResourceTrace::new(vec![0.1, 0.2]));
+        let got: Vec<f64> = (0..5).map(|_| lt.sample().unwrap()).collect();
+        assert_eq!(got, vec![0.1, 0.2, 0.1, 0.2, 0.1]);
+    }
+
+    #[test]
+    fn constant_source_ends() {
+        let mut c = Constant(0.5, 3);
+        assert!(c.sample().is_some());
+        assert!(c.sample().is_some());
+        assert!(c.sample().is_some());
+        assert!(c.sample().is_none());
+    }
+}

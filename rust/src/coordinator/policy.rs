@@ -1,0 +1,168 @@
+//! SwitchPolicy: resource level → target variant, with hysteresis.
+//!
+//! The paper's motivation (§1) switches to an energy-saving mode when the
+//! battery drops past a threshold (e.g. 50%) and back when resources
+//! recover. A naive single threshold oscillates when the level hovers at
+//! the boundary; we use a hysteresis band [downgrade_below,
+//! upgrade_above] and prove non-oscillation in tests.
+
+use super::manager::Variant;
+
+/// Hysteresis switching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct SwitchPolicy {
+    /// Downgrade to part-bit when the level falls strictly below this.
+    pub downgrade_below: f64,
+    /// Upgrade to full-bit when the level rises to/above this.
+    pub upgrade_above: f64,
+    /// Minimum decisions between switches (debounce).
+    pub min_dwell: u32,
+}
+
+impl Default for SwitchPolicy {
+    fn default() -> Self {
+        // the paper's 50% example, with a 10-point band
+        SwitchPolicy {
+            downgrade_below: 0.45,
+            upgrade_above: 0.55,
+            min_dwell: 2,
+        }
+    }
+}
+
+/// A policy decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    Stay,
+    SwitchTo(Variant),
+}
+
+/// Stateful policy evaluator.
+#[derive(Debug, Clone)]
+pub struct PolicyState {
+    policy: SwitchPolicy,
+    current: Variant,
+    dwell: u32,
+    switches: u64,
+}
+
+impl PolicyState {
+    pub fn new(policy: SwitchPolicy, initial: Variant) -> Self {
+        assert!(
+            policy.downgrade_below <= policy.upgrade_above,
+            "hysteresis band inverted"
+        );
+        PolicyState {
+            policy,
+            current: initial,
+            dwell: policy.min_dwell, // allow an immediate first switch
+            switches: 0,
+        }
+    }
+
+    pub fn current(&self) -> Variant {
+        self.current
+    }
+
+    pub fn switches(&self) -> u64 {
+        self.switches
+    }
+
+    /// Evaluate one resource sample in [0, 1].
+    pub fn decide(&mut self, level: f64) -> Decision {
+        self.dwell = self.dwell.saturating_add(1);
+        let target = match self.current {
+            Variant::FullBit if level < self.policy.downgrade_below => Variant::PartBit,
+            Variant::PartBit if level >= self.policy.upgrade_above => Variant::FullBit,
+            _ => return Decision::Stay,
+        };
+        if self.dwell <= self.policy.min_dwell {
+            return Decision::Stay;
+        }
+        self.current = target;
+        self.dwell = 0;
+        self.switches += 1;
+        Decision::SwitchTo(target)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn downgrades_below_threshold() {
+        let mut p = PolicyState::new(SwitchPolicy::default(), Variant::FullBit);
+        assert_eq!(p.decide(0.9), Decision::Stay);
+        assert_eq!(p.decide(0.4), Decision::SwitchTo(Variant::PartBit));
+        assert_eq!(p.current(), Variant::PartBit);
+    }
+
+    #[test]
+    fn upgrades_above_threshold() {
+        let mut p = PolicyState::new(SwitchPolicy::default(), Variant::PartBit);
+        assert_eq!(p.decide(0.5), Decision::Stay); // inside the band
+        assert_eq!(p.decide(0.56), Decision::SwitchTo(Variant::FullBit));
+    }
+
+    #[test]
+    fn constant_level_never_oscillates() {
+        for level in [0.0, 0.3, 0.45, 0.5, 0.55, 0.7, 1.0] {
+            let mut p = PolicyState::new(SwitchPolicy::default(), Variant::FullBit);
+            let mut switches = 0;
+            for _ in 0..1000 {
+                if matches!(p.decide(level), Decision::SwitchTo(_)) {
+                    switches += 1;
+                }
+            }
+            assert!(switches <= 1, "level {level}: {switches} switches");
+        }
+    }
+
+    #[test]
+    fn band_hover_is_debounced() {
+        // level oscillating *inside* the band must cause zero switches
+        let mut p = PolicyState::new(SwitchPolicy::default(), Variant::FullBit);
+        for i in 0..1000 {
+            let level = 0.46 + 0.08 * ((i % 2) as f64); // 0.46 / 0.54
+            assert_eq!(p.decide(level), Decision::Stay);
+        }
+    }
+
+    #[test]
+    fn min_dwell_limits_switch_rate() {
+        let policy = SwitchPolicy {
+            downgrade_below: 0.45,
+            upgrade_above: 0.55,
+            min_dwell: 5,
+        };
+        let mut p = PolicyState::new(policy, Variant::FullBit);
+        let mut switches = 0;
+        // worst-case adversarial level alternating across both thresholds
+        for i in 0..600 {
+            let level = if i % 2 == 0 { 0.1 } else { 0.9 };
+            if matches!(p.decide(level), Decision::SwitchTo(_)) {
+                switches += 1;
+            }
+        }
+        assert!(switches <= 100 + 1, "{switches} switches"); // ≤ 1 per 6 samples
+    }
+
+    #[test]
+    fn prop_switch_rate_bounded_under_random_traces() {
+        let mut rng = Rng::new(11);
+        for _ in 0..50 {
+            let mut p = PolicyState::new(SwitchPolicy::default(), Variant::FullBit);
+            let n = 2000;
+            let mut switches = 0;
+            for _ in 0..n {
+                if matches!(p.decide(rng.f64()), Decision::SwitchTo(_)) {
+                    switches += 1;
+                }
+            }
+            // dwell=2 → at most one switch every 3 samples
+            assert!(switches <= n / 3 + 1);
+        }
+    }
+}

@@ -1,0 +1,297 @@
+//! Inference server: TCP front-end + batcher + executor loop.
+//!
+//! Protocol: clients send `Control` frames named "infer" whose payload is
+//! one flattened NHWC f32 image; the server replies with a `Control`
+//! frame named "logits" (f32 payload) or "error" (utf8 message). A frame
+//! named "stop" shuts the server down (used by tests/examples).
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::transport::{recv_frame, send_frame, Frame, FrameKind, Meter};
+
+use super::batcher::{self, BatcherConfig, Request};
+use super::Coordinator;
+
+/// Server configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ServerConfig {
+    pub max_wait: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_wait: Duration::from_millis(5),
+        }
+    }
+}
+
+/// Handle to a running server.
+pub struct ServerHandle {
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // poke the listener so accept() returns
+        let _ = TcpStream::connect(self.addr);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Start serving `coordinator` on a fresh localhost port.
+///
+/// The coordinator is shared behind a mutex: the executor thread takes it
+/// per batch; switch operations (driven externally via the same mutex)
+/// serialize with execution — a switch never tears weights out from under
+/// a running batch.
+pub fn serve(
+    coordinator: Arc<Mutex<Coordinator>>,
+    config: ServerConfig,
+) -> Result<ServerHandle> {
+    let listener = TcpListener::bind("127.0.0.1:0").context("bind")?;
+    let addr = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let (tx, rx) = mpsc::channel::<Request>();
+
+    // executor thread: batcher → coordinator → replies
+    let exec_coord = Arc::clone(&coordinator);
+    let (img_len, batch_size, classes) = {
+        let c = exec_coord.lock().unwrap();
+        (
+            c.manifest.img * c.manifest.img * c.manifest.channels,
+            c.manifest.batch,
+            c.manifest.num_classes,
+        )
+    };
+    let bcfg = BatcherConfig {
+        batch_size,
+        image_len: img_len,
+        max_wait: config.max_wait,
+    };
+    let executor = std::thread::Builder::new()
+        .name("nq-executor".into())
+        .spawn(move || {
+            while let Some(batch) = batcher::next_batch(&rx, &bcfg) {
+                let c = exec_coord.lock().unwrap();
+                let occupancy = batch.requests.len() as u64;
+                match c.infer_batch(&batch.input) {
+                    Ok(logits) => {
+                        c.metrics.requests.fetch_add(occupancy, Ordering::Relaxed);
+                        c.metrics.batches.fetch_add(1, Ordering::Relaxed);
+                        c.metrics
+                            .batch_occupancy_sum
+                            .fetch_add(occupancy, Ordering::Relaxed);
+                        for r in &batch.requests {
+                            c.metrics.request_latency.record(r.enqueued.elapsed());
+                        }
+                        drop(c);
+                        batcher::respond(batch, &logits, classes);
+                    }
+                    Err(e) => {
+                        drop(c);
+                        batcher::respond_error(batch, &format!("{e:#}"));
+                    }
+                }
+            }
+        })?;
+
+    // acceptor thread: one handler thread per connection
+    let stop2 = Arc::clone(&stop);
+    let acceptor = std::thread::Builder::new()
+        .name("nq-acceptor".into())
+        .spawn(move || {
+            for conn in listener.incoming() {
+                if stop2.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(sock) = conn else { continue };
+                let tx = tx.clone();
+                let stop3 = Arc::clone(&stop2);
+                std::thread::spawn(move || {
+                    let _ = handle_connection(sock, tx, img_len, stop3);
+                });
+            }
+            // tx drops here → executor drains and exits
+        })?;
+
+    Ok(ServerHandle {
+        addr,
+        stop,
+        threads: vec![executor, acceptor],
+    })
+}
+
+fn handle_connection(
+    sock: TcpStream,
+    tx: mpsc::Sender<Request>,
+    img_len: usize,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    let meter = Meter::default();
+    // Poll the socket with a short timeout so handler threads observe the
+    // stop flag and release their batcher senders (otherwise a lingering
+    // idle client would keep the executor alive after stop()).
+    sock.set_read_timeout(Some(Duration::from_millis(100)))?;
+    let mut writer = sock.try_clone()?;
+    let mut reader = BufReader::new(sock);
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        let (frame, _) = match recv_frame(&mut reader, &meter) {
+            Ok(f) => f,
+            Err(e) => {
+                // timeout while idle → re-check stop and keep waiting
+                let timed_out = e.downcast_ref::<std::io::Error>().is_some_and(|io| {
+                    matches!(
+                        io.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    )
+                });
+                if timed_out {
+                    continue;
+                }
+                return Ok(()); // client closed / protocol error
+            }
+        };
+        match (frame.kind, frame.name.as_str()) {
+            (FrameKind::Control, "stop") => {
+                stop.store(true, Ordering::SeqCst);
+                return Ok(());
+            }
+            (FrameKind::Control, "infer") => {
+                if frame.payload.len() != img_len * 4 {
+                    send_frame(
+                        &mut writer,
+                        &Frame {
+                            kind: FrameKind::Control,
+                            name: "error".into(),
+                            payload: format!(
+                                "bad image size {} (want {})",
+                                frame.payload.len(),
+                                img_len * 4
+                            )
+                            .into_bytes(),
+                        },
+                        &meter,
+                    )?;
+                    continue;
+                }
+                let image: Vec<f32> = frame
+                    .payload
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                let (rtx, rrx) = mpsc::channel();
+                tx.send(Request {
+                    image,
+                    reply: rtx,
+                    enqueued: Instant::now(),
+                })
+                .map_err(|_| anyhow::anyhow!("executor gone"))?;
+                match rrx.recv() {
+                    Ok(Ok(logits)) => {
+                        let payload: Vec<u8> =
+                            logits.iter().flat_map(|v| v.to_le_bytes()).collect();
+                        send_frame(
+                            &mut writer,
+                            &Frame {
+                                kind: FrameKind::Control,
+                                name: "logits".into(),
+                                payload,
+                            },
+                            &meter,
+                        )?;
+                    }
+                    Ok(Err(msg)) => {
+                        send_frame(
+                            &mut writer,
+                            &Frame {
+                                kind: FrameKind::Control,
+                                name: "error".into(),
+                                payload: msg.into_bytes(),
+                            },
+                            &meter,
+                        )?;
+                    }
+                    Err(_) => return Ok(()),
+                }
+            }
+            _ => {
+                send_frame(
+                    &mut writer,
+                    &Frame {
+                        kind: FrameKind::Control,
+                        name: "error".into(),
+                        payload: b"unknown frame".to_vec(),
+                    },
+                    &meter,
+                )?;
+            }
+        }
+    }
+}
+
+/// Simple blocking client for the protocol above.
+pub struct Client {
+    sock: TcpStream,
+    meter: Meter,
+}
+
+impl Client {
+    pub fn connect(addr: SocketAddr) -> Result<Client> {
+        Ok(Client {
+            sock: TcpStream::connect(addr)?,
+            meter: Meter::default(),
+        })
+    }
+
+    /// Classify one image; returns logits.
+    pub fn infer(&mut self, image: &[f32]) -> Result<Vec<f32>> {
+        let payload: Vec<u8> = image.iter().flat_map(|v| v.to_le_bytes()).collect();
+        send_frame(
+            &mut self.sock,
+            &Frame {
+                kind: FrameKind::Control,
+                name: "infer".into(),
+                payload,
+            },
+            &self.meter,
+        )?;
+        let (reply, _) = recv_frame(&mut self.sock, &self.meter)?;
+        match reply.name.as_str() {
+            "logits" => Ok(reply
+                .payload
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()),
+            "error" => anyhow::bail!("server error: {}", String::from_utf8_lossy(&reply.payload)),
+            other => anyhow::bail!("unexpected reply {other:?}"),
+        }
+    }
+
+    pub fn stop_server(&mut self) -> Result<()> {
+        send_frame(
+            &mut self.sock,
+            &Frame {
+                kind: FrameKind::Control,
+                name: "stop".into(),
+                payload: Vec::new(),
+            },
+            &self.meter,
+        )?;
+        Ok(())
+    }
+}

@@ -1,0 +1,259 @@
+//! Device simulator (S6): the Raspberry-Pi-class IoT device the paper
+//! measures on (§4.1), reduced to what Table 11 / Figs 13-14 actually
+//! depend on — byte-accounted storage, memory paging, link bandwidth, and
+//! a battery trace driving the switching policy.
+//!
+//! The paper's switching overheads are *numerical computations over file
+//! sizes* (§4.3.3); `MemoryLedger` reproduces that accounting while also
+//! enforcing capacity so failure paths (page-in with insufficient memory)
+//! are testable.
+
+use anyhow::{bail, ensure, Result};
+
+/// Static hardware profile (Table 2 rows).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    /// Peak compute, GFLOPS (Table 2).
+    pub gflops: f64,
+    /// Total RAM bytes.
+    pub mem_bytes: u64,
+    /// Persistent storage bytes available to models.
+    pub storage_bytes: u64,
+    /// Link bandwidth, bytes/second (802.11ac-class for the Pi).
+    pub link_bytes_per_s: f64,
+}
+
+/// Raspberry Pi 4B (the paper's deployment device).
+pub const RPI_4B: DeviceProfile = DeviceProfile {
+    name: "raspberry-pi-4b",
+    gflops: 9.69,
+    mem_bytes: 4 * 1024 * 1024 * 1024,
+    storage_bytes: 8 * 1024 * 1024 * 1024,
+    link_bytes_per_s: 30e6, // ~240 Mbps effective 802.11ac
+};
+
+/// Raspberry Pi 3B+ (Table 2).
+pub const RPI_3B_PLUS: DeviceProfile = DeviceProfile {
+    name: "raspberry-pi-3b+",
+    gflops: 5.3,
+    mem_bytes: 4 * 1024 * 1024 * 1024,
+    storage_bytes: 8 * 1024 * 1024 * 1024,
+    link_bytes_per_s: 10e6,
+};
+
+/// Jetson Nano B01 (Table 2).
+pub const JETSON_NANO: DeviceProfile = DeviceProfile {
+    name: "jetson-nano-b01",
+    gflops: 472.0,
+    mem_bytes: 4 * 1024 * 1024 * 1024,
+    storage_bytes: 16 * 1024 * 1024 * 1024,
+    link_bytes_per_s: 100e6,
+};
+
+/// Edge server with RTX 2080Ti (Table 2's comparison row).
+pub const EDGE_SERVER: DeviceProfile = DeviceProfile {
+    name: "edge-server-2080ti",
+    gflops: 13_400.0,
+    mem_bytes: 64 * 1024 * 1024 * 1024,
+    storage_bytes: 1024 * 1024 * 1024 * 1024,
+    link_bytes_per_s: 125e6,
+};
+
+/// Cumulative paging statistics (the Table 11 quantities).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PagingStats {
+    pub page_in_bytes: u64,
+    pub page_out_bytes: u64,
+    pub page_in_ops: u64,
+    pub page_out_ops: u64,
+}
+
+/// Byte-accounted memory ledger with capacity enforcement.
+#[derive(Debug)]
+pub struct MemoryLedger {
+    capacity: u64,
+    used: u64,
+    stats: PagingStats,
+}
+
+impl MemoryLedger {
+    pub fn new(capacity: u64) -> Self {
+        MemoryLedger {
+            capacity,
+            used: 0,
+            stats: PagingStats::default(),
+        }
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    pub fn free(&self) -> u64 {
+        self.capacity - self.used
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn stats(&self) -> PagingStats {
+        self.stats
+    }
+
+    /// Page bytes into memory (model load / upgrade). Fails when the
+    /// capacity would be exceeded — the caller downgrades instead.
+    pub fn page_in(&mut self, bytes: u64) -> Result<()> {
+        ensure!(
+            self.used + bytes <= self.capacity,
+            "page-in of {bytes}B exceeds capacity ({} used / {} cap)",
+            self.used,
+            self.capacity
+        );
+        self.used += bytes;
+        self.stats.page_in_bytes += bytes;
+        self.stats.page_in_ops += 1;
+        Ok(())
+    }
+
+    /// Page bytes out of memory (downgrade / unload).
+    pub fn page_out(&mut self, bytes: u64) -> Result<()> {
+        if bytes > self.used {
+            bail!("page-out of {bytes}B exceeds used {}B", self.used);
+        }
+        self.used -= bytes;
+        self.stats.page_out_bytes += bytes;
+        self.stats.page_out_ops += 1;
+        Ok(())
+    }
+
+    /// Artificially shrink capacity (external memory pressure).
+    pub fn set_capacity(&mut self, capacity: u64) {
+        self.capacity = capacity;
+    }
+}
+
+/// A deterministic battery/pressure trace driving the switch policy.
+/// Levels are in [0, 1]; the motivation example in §1 switches modes at a
+/// threshold (e.g. 50%).
+#[derive(Debug, Clone)]
+pub struct ResourceTrace {
+    levels: Vec<f64>,
+    pos: usize,
+}
+
+impl ResourceTrace {
+    pub fn new(levels: Vec<f64>) -> Self {
+        ResourceTrace { levels, pos: 0 }
+    }
+
+    /// Linear discharge from `start` to `end` over `steps` samples.
+    pub fn discharge(start: f64, end: f64, steps: usize) -> Self {
+        let levels = (0..steps)
+            .map(|i| start + (end - start) * i as f64 / (steps - 1).max(1) as f64)
+            .collect();
+        Self::new(levels)
+    }
+
+    /// Solar-day trace: discharge overnight, recharge during the day —
+    /// the monitoring-camera scenario of §3.3.3.
+    pub fn solar_day(steps: usize) -> Self {
+        let levels = (0..steps)
+            .map(|i| {
+                let t = i as f64 / steps as f64 * std::f64::consts::TAU;
+                (0.55 - 0.45 * t.cos()).clamp(0.0, 1.0)
+            })
+            .collect();
+        Self::new(levels)
+    }
+
+    pub fn next_level(&mut self) -> Option<f64> {
+        let v = self.levels.get(self.pos).copied();
+        self.pos += 1;
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.levels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.levels.is_empty()
+    }
+}
+
+/// Transmission-time model for a profile's link (Fig 13/14 companion).
+pub fn transmission_seconds(profile: &DeviceProfile, bytes: u64) -> f64 {
+    bytes as f64 / profile.link_bytes_per_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_accounting() {
+        let mut m = MemoryLedger::new(100);
+        m.page_in(60).unwrap();
+        assert_eq!(m.used(), 60);
+        assert_eq!(m.free(), 40);
+        m.page_out(20).unwrap();
+        assert_eq!(m.used(), 40);
+        let s = m.stats();
+        assert_eq!(s.page_in_bytes, 60);
+        assert_eq!(s.page_out_bytes, 20);
+        assert_eq!((s.page_in_ops, s.page_out_ops), (1, 1));
+    }
+
+    #[test]
+    fn ledger_rejects_overflow_and_underflow() {
+        let mut m = MemoryLedger::new(100);
+        assert!(m.page_in(101).is_err());
+        m.page_in(50).unwrap();
+        assert!(m.page_in(51).is_err());
+        assert!(m.page_out(51).is_err());
+        // failed ops must not corrupt accounting
+        assert_eq!(m.used(), 50);
+        assert_eq!(m.stats().page_in_bytes, 50);
+    }
+
+    #[test]
+    fn ledger_never_negative_under_random_ops() {
+        use crate::util::prng::Rng;
+        let mut rng = Rng::new(9);
+        let mut m = MemoryLedger::new(1000);
+        for _ in 0..10_000 {
+            let b = rng.int(0, 300) as u64;
+            if rng.bool() {
+                let _ = m.page_in(b);
+            } else {
+                let _ = m.page_out(b);
+            }
+            assert!(m.used() <= m.capacity());
+        }
+    }
+
+    #[test]
+    fn traces() {
+        let mut t = ResourceTrace::discharge(1.0, 0.0, 5);
+        assert_eq!(t.len(), 5);
+        assert_eq!(t.next_level(), Some(1.0));
+        let mut last = 1.0;
+        while let Some(v) = t.next_level() {
+            assert!(v <= last);
+            last = v;
+        }
+        let s = ResourceTrace::solar_day(100);
+        assert!(s.levels.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        // charges up during the "day" (max well above start)
+        let max = s.levels.iter().cloned().fold(0.0, f64::max);
+        assert!(max > 0.9 && s.levels[0] < 0.2);
+    }
+
+    #[test]
+    fn profiles_sane() {
+        assert!(EDGE_SERVER.gflops / RPI_4B.gflops > 1000.0); // paper: ~1400x
+        assert!((transmission_seconds(&RPI_4B, 30_000_000) - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,41 @@
+//! # NestQuant
+//!
+//! Production reproduction of *NestQuant: Post-Training Integer-Nesting
+//! Quantization for On-Device DNN* (IEEE TMC 2025) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)** — the on-device coordinator: model manager with
+//!   full-bit/part-bit switching, resource-driven policy, dynamic
+//!   batcher, PJRT runtime, device simulator, transmission system, and
+//!   every substrate they need (packed bits, `.nq` containers, quantizer,
+//!   statistics). Python never runs on the request path.
+//! - **L2 (python/compile)** — the JAX model zoo + PTQ pipeline, AOT-
+//!   lowered once to `artifacts/*.hlo.txt`.
+//! - **L1 (python/compile/kernels)** — Pallas kernels (interpret=True)
+//!   for the quantization hot-spots, inside the lowered HLO.
+//!
+//! See DESIGN.md for the system inventory and the experiment index
+//! mapping every paper table/figure to a module and bench target.
+
+pub mod bits;
+pub mod container;
+pub mod coordinator;
+pub mod device;
+pub mod nest;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod stats;
+pub mod transport;
+pub mod util;
+
+use std::path::{Path, PathBuf};
+
+/// Root of the artifacts directory (env `NESTQUANT_ARTIFACTS` or
+/// `<manifest-dir>/artifacts`).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("NESTQUANT_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

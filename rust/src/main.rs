@@ -1,0 +1,297 @@
+//! `nestquant` — the L3 coordinator CLI.
+//!
+//! Subcommands (hand-rolled parser; clap is unavailable offline):
+//!
+//! ```text
+//! nestquant info                          artifact + zoo overview
+//! nestquant eval --arch cnn_m --n 8 --h 4 [--variant part|full] [--limit N]
+//! nestquant trace --arch cnn_m --n 8 --h 4 [--steps N] [--trace solar|discharge]
+//! nestquant serve --arch cnn_m --n 8 --h 4
+//! nestquant report <table|fig|all>        regenerate paper tables/figures
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use nestquant::coordinator::{server, Coordinator, SwitchPolicy};
+use nestquant::device::ResourceTrace;
+use nestquant::report;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: nestquant <command> [flags]\n\
+         commands:\n\
+         \x20 info                               artifacts overview\n\
+         \x20 eval   --arch A --n N --h H [--variant part|full] [--limit K]\n\
+         \x20 trace  --arch A --n N --h H [--steps K] [--trace solar|discharge] [--reqs R]\n\
+         \x20 serve  --arch A --n N --h H        start the inference server\n\
+\x20 select --arch A [--n N] [--live]   adaptive nesting selection (future-work)\n\
+         \x20 report <what>                      one of: errors storage-ideal storage\n\
+         \x20                                    switching similarity nesting nesting-test\n\
+         \x20                                    cliff combos traffic comparison ptq-cost\n\
+         \x20                                    hardware libraries all\n\
+         flags: --artifacts DIR overrides the artifacts root"
+    );
+    std::process::exit(2);
+}
+
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+fn parse_args() -> Args {
+    let mut positional = Vec::new();
+    let mut flags = HashMap::new();
+    let mut it = std::env::args().skip(1).peekable();
+    while let Some(a) = it.next() {
+        if let Some(name) = a.strip_prefix("--") {
+            let val = it
+                .peek()
+                .filter(|v| !v.starts_with("--"))
+                .cloned()
+                .map(|v| {
+                    it.next();
+                    v
+                })
+                .unwrap_or_else(|| "true".to_string());
+            flags.insert(name.to_string(), val);
+        } else {
+            positional.push(a);
+        }
+    }
+    Args { positional, flags }
+}
+
+impl Args {
+    fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    fn req(&self, name: &str) -> Result<&str> {
+        self.flag(name)
+            .with_context(|| format!("missing required flag --{name}"))
+    }
+
+    fn num<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name}={v}: {e}")),
+        }
+    }
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = parse_args();
+    let root = args
+        .flag("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(nestquant::artifacts_dir);
+    let Some(cmd) = args.positional.first().map(|s| s.as_str()) else {
+        usage()
+    };
+    match cmd {
+        "info" => cmd_info(&root),
+        "eval" => cmd_eval(&root, &args),
+        "trace" => cmd_trace(&root, &args),
+        "serve" => cmd_serve(&root, &args),
+        "select" => cmd_select(&root, &args),
+        "report" => cmd_report(&root, &args),
+        _ => usage(),
+    }
+}
+
+fn cmd_info(root: &std::path::Path) -> Result<()> {
+    let manifest = nestquant::runtime::Manifest::load(root)?;
+    println!("artifacts: {}", root.display());
+    println!(
+        "dataset: {} val images, {}x{}x{}, batch {}",
+        manifest.val_count, manifest.img, manifest.img, manifest.channels, manifest.batch
+    );
+    for (name, spec) in &manifest.models {
+        let n_params: usize = spec.params.iter().map(|p| p.count()).sum();
+        println!(
+            "  {name:9} {:>9} params  hlo:{:?}  nest:{:?}",
+            n_params,
+            spec.hlo.keys().collect::<Vec<_>>(),
+            spec.nest_containers.keys().collect::<Vec<_>>(),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_eval(root: &std::path::Path, args: &Args) -> Result<()> {
+    let arch = args.req("arch")?;
+    let n: u8 = args.num("n", 8)?;
+    let h: u8 = args.num("h", 4)?;
+    let limit = args.flag("limit").map(|v| v.parse()).transpose()?;
+    let variant = args.flag("variant").unwrap_or("full");
+    let mut c = Coordinator::new(root, arch, n, h)?;
+    let cost = match variant {
+        "part" => c.manager.load_part_bit(&mut c.ledger)?,
+        "full" => c.manager.load_full_bit(&mut c.ledger)?,
+        other => bail!("--variant must be part|full, got {other}"),
+    };
+    println!(
+        "loaded {arch} INT({n}|{h}) {variant}-bit: paged in {:.2}MB in {:.1}ms",
+        cost.page_in_bytes as f64 / 1e6,
+        cost.micros as f64 / 1e3
+    );
+    let acc = c.eval_accuracy(limit)?;
+    println!("top-1 accuracy = {:.3}", acc);
+    println!("{}", c.metrics.summary());
+    Ok(())
+}
+
+fn cmd_trace(root: &std::path::Path, args: &Args) -> Result<()> {
+    let arch = args.req("arch")?;
+    let n: u8 = args.num("n", 8)?;
+    let h: u8 = args.num("h", 4)?;
+    let steps: usize = args.num("steps", 48)?;
+    let reqs: usize = args.num("reqs", 32)?;
+    let trace = match args.flag("trace").unwrap_or("solar") {
+        "solar" => ResourceTrace::solar_day(steps),
+        "discharge" => ResourceTrace::discharge(1.0, 0.0, steps),
+        other => bail!("--trace must be solar|discharge, got {other}"),
+    };
+    let mut c = Coordinator::new(root, arch, n, h)?;
+    let report = c.run_trace(trace, SwitchPolicy::default(), reqs)?;
+    println!(
+        "trace: {} steps, {} switches; full-bit acc {:.3} over {} reqs, part-bit acc {:.3} over {} reqs",
+        report.steps,
+        report.switches.len(),
+        report.full_acc(),
+        report.full_served,
+        report.part_acc(),
+        report.part_served
+    );
+    for s in &report.switches {
+        println!(
+            "  step {:>3} level {:.2} → {:?}: page-in {:.2}MB page-out {:.2}MB in {:.1}ms",
+            s.step,
+            s.level,
+            s.to,
+            s.cost.page_in_bytes as f64 / 1e6,
+            s.cost.page_out_bytes as f64 / 1e6,
+            s.cost.micros as f64 / 1e3
+        );
+    }
+    println!("{}", c.metrics.summary());
+    Ok(())
+}
+
+fn cmd_serve(root: &std::path::Path, args: &Args) -> Result<()> {
+    let arch = args.req("arch")?;
+    let n: u8 = args.num("n", 8)?;
+    let h: u8 = args.num("h", 4)?;
+    let mut c = Coordinator::new(root, arch, n, h)?;
+    c.manager.load_full_bit(&mut c.ledger)?;
+    let coord = std::sync::Arc::new(std::sync::Mutex::new(c));
+    let handle = server::serve(coord.clone(), server::ServerConfig::default())?;
+    println!("serving {arch} INT({n}|{h}) full-bit on {}", handle.addr);
+    println!("(send a Control frame named \"stop\" to shut down; Ctrl-C also works)");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// Adaptive nesting selection (the paper's future-work §5): find the
+/// critical nested combination with a handful of part-bit evaluations.
+/// `--live` evaluates through PJRT on the built containers; otherwise the
+/// pipeline's recorded sweep accuracies are used.
+fn cmd_select(root: &std::path::Path, args: &Args) -> Result<()> {
+    use nestquant::nest::selector::{select_critical_h, SelectorConfig};
+    use nestquant::nest::PAPER_BANDS;
+    use nestquant::util::json;
+
+    let arch = args.req("arch")?;
+    let n: u8 = args.num("n", 8)?;
+    let live = args.flag("live").is_some();
+    let acc = json::parse_file(&root.join("report/accuracy.json"))?;
+    let nest = acc.path(&[arch, "nest", &n.to_string()])?;
+    let full = nest.path(&["full"])?.as_f64()?;
+    let sizes = json::parse_file(&root.join("report/sizes.json"))?;
+    let fp32 = sizes.path(&[arch, "fp32_bytes"])?.as_f64()? as u64;
+
+    let sel = select_critical_h(n, fp32, PAPER_BANDS, full, SelectorConfig::default(), |h| {
+        if live {
+            // live part-bit accuracy through the real runtime, when the
+            // container for this h was built by the pipeline
+            if let Ok(mut c) = Coordinator::new(root, arch, n, h) {
+                c.manager.load_part_bit(&mut c.ledger)?;
+                let a = c.eval_accuracy(Some(512))?;
+                println!("  live eval INT({n}|{h}): part-bit acc {a:.3}");
+                return Ok(a);
+            }
+        }
+        let a = nest.path(&["h", &h.to_string(), "part"])?.as_f64()?;
+        println!("  sweep  eval INT({n}|{h}): part-bit acc {a:.3}");
+        Ok(a)
+    })?;
+    println!(
+        "\n{arch}: Eq-12 prior h={}, selected critical combination: {}  ({} evaluations; full-bit acc {full:.3})",
+        sel.prior_h,
+        sel.critical_h
+            .map(|h| format!("INT({n}|{h})"))
+            .unwrap_or_else(|| "none effective".into()),
+        sel.evals.len()
+    );
+    Ok(())
+}
+
+fn cmd_report(root: &std::path::Path, args: &Args) -> Result<()> {
+    let what = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let arch = args.flag("arch").unwrap_or("cnn_m");
+    let family = args.flag("family");
+    let n: u8 = args.num("n", 8)?;
+    let run = |w: &str| -> Result<()> {
+        match w {
+            "errors" => report::cmd_errors(),
+            "storage-ideal" => report::cmd_storage_ideal(),
+            "storage" => report::cmd_storage(root, args.flag("n").map(|_| n)),
+            "switching" => report::cmd_switching(root),
+            "similarity" => report::cmd_similarity(root, arch),
+            "nesting-test" => report::cmd_nesting_test(root, arch),
+            "nesting" => report::cmd_nesting(root, family, n),
+            "cliff" => report::cmd_cliff(root),
+            "combos" => report::cmd_combos(root),
+            "traffic" => report::cmd_traffic(root, family),
+            "comparison" => report::cmd_comparison(root),
+            "ptq-cost" => report::cmd_ptq_cost(root),
+            "ablations" => report::cmd_ablations(root),
+            "hardware" => report::cmd_hardware(),
+            "libraries" => report::cmd_libraries(),
+            other => bail!("unknown report {other:?}"),
+        }
+    };
+    if what == "all" {
+        for w in [
+            "hardware", "libraries", "errors", "storage-ideal", "storage", "switching",
+            "similarity", "nesting-test", "cliff", "combos", "ptq-cost", "comparison",
+            "ablations",
+        ] {
+            run(w)?;
+        }
+        report::cmd_nesting(root, Some("cnn"), 8)?;
+        report::cmd_nesting(root, Some("cnn"), 6)?;
+        report::cmd_nesting(root, Some("mobile"), 8)?;
+        report::cmd_nesting(root, Some("vit"), 8)?;
+        report::cmd_traffic(root, None)?;
+        Ok(())
+    } else {
+        run(what)
+    }
+}

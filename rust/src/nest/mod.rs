@@ -1,0 +1,417 @@
+//! Integer nesting core (S2): the paper's §3.2/§3.3 bit-level machinery.
+//!
+//! - decompose / residual / recompose (Eqs. 6–11) with the extra-1-bit
+//!   compensation of §3.3.2,
+//! - the Table 7 numerical-error enumeration (bit-exact vs the paper),
+//! - the Eq. 12 critical-nested-combination rules and Table 8 ideal
+//!   storage-reduction arithmetic.
+
+pub mod selector;
+
+use anyhow::{ensure, Result};
+
+use crate::bits::int_range;
+
+/// Rounding method used to derive `w_high` from `w_int / 2^l` (Table 6/7).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Rounding {
+    /// Arithmetic right shift (floor division).
+    BitShift,
+    /// Round to nearest (ties away from zero, matching numpy's rint on
+    /// halves is banker's — we use nearest-even to match `np.round`).
+    Rtn,
+    /// Always round up (ceil).
+    Up,
+    /// Always round down == BitShift (kept distinct for Table 7's rows).
+    Down,
+}
+
+/// A (n|h) nesting configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NestConfig {
+    pub n: u8,
+    pub h: u8,
+}
+
+impl NestConfig {
+    pub fn new(n: u8, h: u8) -> Result<Self> {
+        ensure!(n >= 2 && n <= 16, "n out of range: {n}");
+        ensure!(h >= 1 && h < n, "h must be in [1, n): n={n} h={h}");
+        Ok(NestConfig { n, h })
+    }
+
+    /// Lower bits l = n - h.
+    pub fn l(&self) -> u8 {
+        self.n - self.h
+    }
+
+    /// Stored low bits (with the 1-bit compensation): l + 1.
+    pub fn low_bits(&self) -> u8 {
+        self.l() + 1
+    }
+
+    /// Scale inflation factor for the part-bit model: 2^l (Eq. 10).
+    pub fn scale_inflation(&self) -> f32 {
+        (1u32 << self.l()) as f32
+    }
+}
+
+impl std::fmt::Display for NestConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "INT({}|{})", self.n, self.h)
+    }
+}
+
+/// Round a real value per `method`, nearest-even for Rtn (numpy semantics).
+#[inline]
+fn round_by(t: f64, method: Rounding) -> f64 {
+    match method {
+        Rounding::BitShift | Rounding::Down => t.floor(),
+        Rounding::Up => t.ceil(),
+        Rounding::Rtn => {
+            // round-half-to-even, matching np.round / jnp.round
+            let r = t.round();
+            if (t - t.trunc()).abs() == 0.5 {
+                let f = t.floor();
+                if (f as i64) % 2 == 0 {
+                    f
+                } else {
+                    f + 1.0
+                }
+            } else {
+                r
+            }
+        }
+    }
+}
+
+/// Derive `w_high` from one INTn value (Eq. 7), clipped to INTh.
+#[inline]
+pub fn high_of(w_int: i32, cfg: NestConfig, method: Rounding) -> i32 {
+    let (lo, hi) = int_range(cfg.h);
+    let t = w_int as f64 / (1i64 << cfg.l()) as f64;
+    (round_by(t, method) as i32).clamp(lo, hi)
+}
+
+/// Residual `w_low` (Eq. 11); clipped to INTl or compensated INT(l+1).
+#[inline]
+pub fn low_of(w_int: i32, w_high: i32, cfg: NestConfig, compensate: bool) -> i32 {
+    let bits = if compensate { cfg.low_bits() } else { cfg.l() };
+    let (lo, hi) = int_range(bits);
+    (w_int - (w_high << cfg.l())).clamp(lo, hi)
+}
+
+/// Recompose (Eq. 6): `w_high * 2^l + w_low`.
+#[inline]
+pub fn recompose(w_high: i32, w_low: i32, l: u8) -> i32 {
+    (w_high << l) + w_low
+}
+
+/// Slice-level decomposition: returns (w_high, w_low) vectors.
+pub fn decompose(
+    w_int: &[i32],
+    cfg: NestConfig,
+    method: Rounding,
+    compensate: bool,
+) -> (Vec<i32>, Vec<i32>) {
+    let mut hs = Vec::with_capacity(w_int.len());
+    let mut ls = Vec::with_capacity(w_int.len());
+    for &w in w_int {
+        let h = high_of(w, cfg, method);
+        hs.push(h);
+        ls.push(low_of(w, h, cfg, compensate));
+    }
+    (hs, ls)
+}
+
+/// Slice-level recomposition into a caller buffer (device hot path).
+pub fn recompose_into(w_high: &[i32], w_low: &[i32], l: u8, out: &mut Vec<i32>) {
+    debug_assert_eq!(w_high.len(), w_low.len());
+    out.clear();
+    out.reserve(w_high.len());
+    for (&h, &lo) in w_high.iter().zip(w_low) {
+        out.push(recompose(h, lo, l));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Table 7: nesting numerical errors over the full signed INTn range
+// ---------------------------------------------------------------------------
+
+/// Error statistics for one (method, h) cell of Table 7.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ErrorStats {
+    pub non_zero: usize,
+    pub min: i32,
+    pub max: i32,
+}
+
+/// Enumerate decompose→recompose numerical errors WITHOUT compensation for
+/// every representable INTn value (Table 7 does n=8: 256 values).
+pub fn error_stats(n: u8, h: u8, method: Rounding) -> Result<ErrorStats> {
+    let cfg = NestConfig::new(n, h)?;
+    let (lo, hi) = int_range(n);
+    let mut non_zero = 0usize;
+    let mut emin = i32::MAX;
+    let mut emax = i32::MIN;
+    for w in lo..=hi {
+        let wh = high_of(w, cfg, method);
+        let wl = low_of(w, wh, cfg, false); // uncompensated (Table 7 setting)
+        let err = w - recompose(wh, wl, cfg.l());
+        if err != 0 {
+            non_zero += 1;
+        }
+        emin = emin.min(err);
+        emax = emax.max(err);
+    }
+    Ok(ErrorStats {
+        non_zero,
+        min: emin,
+        max: emax,
+    })
+}
+
+/// §3.3.2 containment check: with compensation, recomposition is exact for
+/// every representable INTn value. Returns the number of mismatches (0).
+pub fn compensated_mismatches(n: u8, h: u8, method: Rounding) -> Result<usize> {
+    let cfg = NestConfig::new(n, h)?;
+    let (lo, hi) = int_range(n);
+    let mut bad = 0;
+    for w in lo..=hi {
+        let wh = high_of(w, cfg, method);
+        let wl = low_of(w, wh, cfg, true);
+        if recompose(wh, wl, cfg.l()) != w {
+            bad += 1;
+        }
+    }
+    Ok(bad)
+}
+
+// ---------------------------------------------------------------------------
+// Eq. 12: critical nested combination from model size
+// ---------------------------------------------------------------------------
+
+/// Size-band cutoffs for the Eq. 12 rule. The paper's ImageNet-zoo values
+/// are 30 MB / 300 MB; our synthetic zoo re-derives its own axis
+/// (report/combos.json) — both are expressible here.
+#[derive(Debug, Clone, Copy)]
+pub struct SizeBands {
+    pub lo_bytes: u64,
+    pub hi_bytes: u64,
+}
+
+pub const PAPER_BANDS: SizeBands = SizeBands {
+    lo_bytes: 30_000_000,
+    hi_bytes: 300_000_000,
+};
+
+/// Eq. 12: critical nested bit h for full bitwidth `n` and FP32 size.
+pub fn eq12_critical_h(fp32_bytes: u64, n: u8, bands: SizeBands) -> u8 {
+    if fp32_bytes < bands.lo_bytes {
+        n / 2 + 1
+    } else if fp32_bytes < bands.hi_bytes {
+        n / 2
+    } else {
+        n / 2 - 1
+    }
+}
+
+/// Effective nested combinations: every h from the critical one to n-1.
+pub fn effective_range(critical: u8, n: u8) -> Vec<u8> {
+    (critical..n).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Table 8: ideal storage reduction
+// ---------------------------------------------------------------------------
+
+/// Ideal storage reduction of NestQuant INT(n|h) vs diverse INTn+INTh
+/// (weights only, ignoring scales — Table 8's setting):
+/// NestQuant stores h + (l+1) bits/elem, diverse stores n + h bits/elem.
+pub fn ideal_storage_reduction(n: u8, h: u8) -> f64 {
+    let nest = (h + (n - h) + 1) as f64; // == n + 1
+    let diverse = (n + h) as f64;
+    1.0 - nest / diverse
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::propcheck::check;
+
+    #[test]
+    fn display_and_accessors() {
+        let cfg = NestConfig::new(8, 5).unwrap();
+        assert_eq!(cfg.to_string(), "INT(8|5)");
+        assert_eq!(cfg.l(), 3);
+        assert_eq!(cfg.low_bits(), 4);
+        assert_eq!(cfg.scale_inflation(), 8.0);
+        assert!(NestConfig::new(8, 8).is_err());
+        assert!(NestConfig::new(8, 0).is_err());
+    }
+
+    #[test]
+    fn paper_fig9_worked_example() {
+        // w_int = -67, INT(8|4), BitShift: w_high=-5, uncompensated w_low=7
+        // → recomposed -73 (error 6); compensated w_low=13 → exact.
+        let cfg = NestConfig::new(8, 4).unwrap();
+        let wh = high_of(-67, cfg, Rounding::BitShift);
+        assert_eq!(wh, -5);
+        let wl_nc = low_of(-67, wh, cfg, false);
+        assert_eq!(wl_nc, 7);
+        assert_eq!(recompose(wh, wl_nc, 4), -73);
+        let wl_c = low_of(-67, wh, cfg, true);
+        assert_eq!(wl_c, 13);
+        assert_eq!(recompose(wh, wl_c, 4), -67);
+    }
+
+    /// Table 7, bit-exact: #Non-zero and ranges for all methods/columns.
+    #[test]
+    fn table7_bitshift_row() {
+        for (h, range_hi) in [(7, 1), (6, 2), (5, 4), (4, 8), (3, 16)] {
+            let s = error_stats(8, h, Rounding::BitShift).unwrap();
+            assert_eq!(s.non_zero, 128, "h={h}");
+            assert_eq!((s.min, s.max), (0, range_hi), "h={h}");
+        }
+    }
+
+    #[test]
+    fn table7_rtn_row() {
+        let expected = [(7, 65, 1), (6, 34, 2), (5, 20, 4), (4, 16, 8), (3, 20, 16)];
+        for (h, nz, hi) in expected {
+            let s = error_stats(8, h, Rounding::Rtn).unwrap();
+            assert_eq!(s.non_zero, nz, "h={h}");
+            assert_eq!((s.min, s.max), (0, hi), "h={h}");
+        }
+    }
+
+    #[test]
+    fn table7_rounding_up_row() {
+        let expected = [
+            (7, 1, 0, 1),
+            (6, 65, -1, 2),
+            (5, 97, -3, 4),
+            (4, 113, -7, 8),
+            (3, 121, -15, 16),
+        ];
+        for (h, nz, lo, hi) in expected {
+            let s = error_stats(8, h, Rounding::Up).unwrap();
+            assert_eq!((s.min, s.max), (lo, hi), "h={h}");
+            assert_eq!(s.non_zero, nz, "h={h}");
+        }
+    }
+
+    #[test]
+    fn table7_rounding_down_row() {
+        for (h, hi) in [(7, 1), (6, 2), (5, 4), (4, 8), (3, 16)] {
+            let s = error_stats(8, h, Rounding::Down).unwrap();
+            assert_eq!(s.non_zero, 128, "h={h}");
+            assert_eq!((s.min, s.max), (0, hi), "h={h}");
+        }
+    }
+
+    /// §3.3.2: errors always lie within [-2^{l-1}+1, 2^{l-1}] so the
+    /// compensated range is sufficient — for every method and h.
+    #[test]
+    fn error_range_containment_all_methods() {
+        for method in [Rounding::BitShift, Rounding::Rtn, Rounding::Up, Rounding::Down] {
+            for h in 2..8u8 {
+                let l = 8 - h;
+                let s = error_stats(8, h, method).unwrap();
+                let bound = 1 << (l - 1).max(0);
+                assert!(s.min >= -bound + 1 && s.max <= bound, "{method:?} h={h} {s:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn compensation_is_lossless_everywhere() {
+        for method in [Rounding::BitShift, Rounding::Rtn, Rounding::Up, Rounding::Down] {
+            for n in [6u8, 8] {
+                for h in 2..n {
+                    assert_eq!(
+                        compensated_mismatches(n, h, method).unwrap(),
+                        0,
+                        "{method:?} INT({n}|{h})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_decompose_recompose_roundtrip() {
+        check(
+            "nest-roundtrip",
+            200,
+            |r: &mut Rng, _| {
+                let n = *[6u8, 8].get(r.index(2)).unwrap();
+                let h = 2 + r.index((n - 2) as usize) as u8;
+                let (lo, hi) = int_range(n);
+                let vals: Vec<i32> = (0..r.index(500) + 1)
+                    .map(|_| r.int(lo as i64, hi as i64) as i32)
+                    .collect();
+                (n, h, vals)
+            },
+            |(n, h, vals)| {
+                let cfg = NestConfig::new(*n, *h).unwrap();
+                for method in [Rounding::BitShift, Rounding::Rtn, Rounding::Up] {
+                    let (hs, ls) = decompose(vals, cfg, method, true);
+                    let mut rec = Vec::new();
+                    recompose_into(&hs, &ls, cfg.l(), &mut rec);
+                    if rec != *vals {
+                        return false;
+                    }
+                    // ranges respected
+                    let (hlo, hhi) = int_range(*h);
+                    let (llo, lhi) = int_range(cfg.low_bits());
+                    if !hs.iter().all(|&v| v >= hlo && v <= hhi) {
+                        return false;
+                    }
+                    if !ls.iter().all(|&v| v >= llo && v <= lhi) {
+                        return false;
+                    }
+                }
+                true
+            },
+        );
+    }
+
+    #[test]
+    fn eq12_bands() {
+        assert_eq!(eq12_critical_h(10_000_000, 8, PAPER_BANDS), 5);
+        assert_eq!(eq12_critical_h(100_000_000, 8, PAPER_BANDS), 4);
+        assert_eq!(eq12_critical_h(400_000_000, 8, PAPER_BANDS), 3);
+        assert_eq!(eq12_critical_h(10_000_000, 6, PAPER_BANDS), 4);
+        assert_eq!(effective_range(4, 8), vec![4, 5, 6, 7]);
+    }
+
+    /// Table 8, exact: 25/31/36/40/30/36 percent.
+    #[test]
+    fn table8_ideal_storage_reduction() {
+        let cases = [
+            (8, 4, 0.25),
+            (8, 5, 0.3076923076923077),
+            (8, 6, 0.35714285714285715),
+            (8, 7, 0.4),
+            (6, 4, 0.3),
+            (6, 5, 0.36363636363636365),
+        ];
+        for (n, h, want) in cases {
+            let got = ideal_storage_reduction(n, h);
+            assert!((got - want).abs() < 1e-12, "INT({n}|{h}): {got}");
+        }
+    }
+
+    #[test]
+    fn rtn_is_nearest_even_like_numpy() {
+        // np.round(0.5)=0, np.round(1.5)=2, np.round(-0.5)=-0, np.round(2.5)=2
+        assert_eq!(round_by(0.5, Rounding::Rtn), 0.0);
+        assert_eq!(round_by(1.5, Rounding::Rtn), 2.0);
+        assert_eq!(round_by(-0.5, Rounding::Rtn), 0.0);
+        assert_eq!(round_by(2.5, Rounding::Rtn), 2.0);
+        assert_eq!(round_by(-2.5, Rounding::Rtn), -2.0);
+        assert_eq!(round_by(0.4999, Rounding::Rtn), 0.0);
+    }
+}

@@ -1,0 +1,237 @@
+//! Adaptive nesting selection — the paper's future-work feature (§5):
+//! "explore the adaptive nesting selection scheme for finding the optimal
+//! NestQuant combinations automatically."
+//!
+//! Implements the practical search of §4.2.2: start from the Eq. 12 prior
+//! (h = n/2 ± 1 by model size), evaluate the part-bit model, then walk
+//! down while the accuracy stays effective or up until it becomes
+//! effective — converging on the *critical nested combination* (the
+//! smallest effective h) with a handful of evaluations instead of a full
+//! sweep.
+
+use anyhow::{ensure, Result};
+
+use super::{eq12_critical_h, SizeBands};
+
+/// Selection policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct SelectorConfig {
+    /// Part-bit accuracy must be ≥ this fraction of full-bit accuracy.
+    pub effective_fraction: f64,
+    /// Evaluation budget (each eval = one part-bit accuracy measurement).
+    pub max_evals: usize,
+}
+
+impl Default for SelectorConfig {
+    fn default() -> Self {
+        SelectorConfig {
+            effective_fraction: 0.6,
+            max_evals: 6,
+        }
+    }
+}
+
+/// The search outcome.
+#[derive(Debug, Clone)]
+pub struct Selection {
+    /// The critical nested bit (smallest effective h), if any h works.
+    pub critical_h: Option<u8>,
+    /// Every (h, part_acc) the search evaluated, in order.
+    pub evals: Vec<(u8, f64)>,
+    /// Where the search started (the Eq. 12 prior).
+    pub prior_h: u8,
+}
+
+/// Find the critical nested combination for an INTn model of the given
+/// FP32 size, calling `eval(h) -> part-bit accuracy` as needed.
+pub fn select_critical_h<F>(
+    n: u8,
+    fp32_bytes: u64,
+    bands: SizeBands,
+    full_acc: f64,
+    cfg: SelectorConfig,
+    mut eval: F,
+) -> Result<Selection>
+where
+    F: FnMut(u8) -> Result<f64>,
+{
+    ensure!(n >= 4, "n too small to nest usefully");
+    ensure!(full_acc > 0.0, "full-bit accuracy must be positive");
+    let threshold = cfg.effective_fraction * full_acc;
+    let prior = eq12_critical_h(fp32_bytes, n, bands).clamp(2, n - 1);
+
+    let mut evals: Vec<(u8, f64)> = Vec::new();
+    let cached = |h: u8, evals: &mut Vec<(u8, f64)>, eval: &mut F| -> Result<f64> {
+        if let Some(&(_, a)) = evals.iter().find(|&&(eh, _)| eh == h) {
+            return Ok(a);
+        }
+        let a = eval(h)?;
+        evals.push((h, a));
+        Ok(a)
+    };
+
+    let mut h = prior;
+    let mut best: Option<u8> = None;
+    while evals.len() < cfg.max_evals {
+        let acc = cached(h, &mut evals, &mut eval)?;
+        if acc >= threshold {
+            best = Some(h);
+            if h == 2 {
+                break; // cannot go lower
+            }
+            // §4.2.2: search downwards for a smaller effective h
+            h -= 1;
+        } else {
+            // below the cliff: search upwards
+            if best.is_some() {
+                break; // we already know the boundary: best is critical
+            }
+            if h >= n - 1 {
+                break; // nothing effective at all
+            }
+            h += 1;
+        }
+    }
+    Ok(Selection {
+        critical_h: best,
+        evals,
+        prior_h: prior,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nest::PAPER_BANDS;
+
+    /// A synthetic accuracy curve with a cliff below `cliff_h`.
+    fn curve(cliff_h: u8) -> impl Fn(u8) -> Result<f64> {
+        move |h| {
+            Ok(if h >= cliff_h {
+                0.70 - 0.005 * (8 - h) as f64
+            } else {
+                0.10
+            })
+        }
+    }
+
+    #[test]
+    fn finds_critical_from_prior_above() {
+        // 100MB model → prior h=4; cliff at 4 → critical is 4
+        let sel = select_critical_h(
+            8,
+            100_000_000,
+            PAPER_BANDS,
+            0.71,
+            SelectorConfig::default(),
+            curve(4),
+        )
+        .unwrap();
+        assert_eq!(sel.prior_h, 4);
+        assert_eq!(sel.critical_h, Some(4));
+        assert!(sel.evals.len() <= 3, "{:?}", sel.evals);
+    }
+
+    #[test]
+    fn walks_up_when_prior_is_below_cliff() {
+        // large model → prior h=3 but the cliff is at 5
+        let sel = select_critical_h(
+            8,
+            400_000_000,
+            PAPER_BANDS,
+            0.71,
+            SelectorConfig::default(),
+            curve(5),
+        )
+        .unwrap();
+        assert_eq!(sel.prior_h, 3);
+        assert_eq!(sel.critical_h, Some(5));
+    }
+
+    #[test]
+    fn walks_down_to_smallest_effective() {
+        // small model → prior h=5, cliff at 3 → must walk down to 3
+        let sel = select_critical_h(
+            8,
+            10_000_000,
+            PAPER_BANDS,
+            0.71,
+            SelectorConfig {
+                max_evals: 8,
+                ..Default::default()
+            },
+            curve(3),
+        )
+        .unwrap();
+        assert_eq!(sel.prior_h, 5);
+        assert_eq!(sel.critical_h, Some(3));
+    }
+
+    #[test]
+    fn no_effective_combination() {
+        let sel = select_critical_h(
+            8,
+            10_000_000,
+            PAPER_BANDS,
+            0.71,
+            SelectorConfig::default(),
+            |_| Ok(0.01),
+        )
+        .unwrap();
+        assert_eq!(sel.critical_h, None);
+    }
+
+    #[test]
+    fn respects_eval_budget() {
+        let mut calls = 0;
+        let _ = select_critical_h(
+            8,
+            10_000_000,
+            PAPER_BANDS,
+            0.71,
+            SelectorConfig {
+                max_evals: 3,
+                ..Default::default()
+            },
+            |h| {
+                calls += 1;
+                curve(2)(h)
+            },
+        )
+        .unwrap();
+        assert!(calls <= 3);
+    }
+
+    #[test]
+    fn never_reevaluates_same_h() {
+        let mut seen = std::collections::HashSet::new();
+        let _ = select_critical_h(
+            8,
+            100_000_000,
+            PAPER_BANDS,
+            0.71,
+            SelectorConfig {
+                max_evals: 10,
+                ..Default::default()
+            },
+            |h| {
+                assert!(seen.insert(h), "h={h} evaluated twice");
+                curve(4)(h)
+            },
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn errors_propagate() {
+        let r = select_critical_h(
+            8,
+            100_000_000,
+            PAPER_BANDS,
+            0.71,
+            SelectorConfig::default(),
+            |_| anyhow::bail!("eval backend down"),
+        );
+        assert!(r.is_err());
+    }
+}

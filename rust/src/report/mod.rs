@@ -1,0 +1,120 @@
+//! Report harness (S10): regenerates every table and figure of the
+//! paper's evaluation from the artifacts + live measurements.
+//!
+//! Each `cmd_*` function prints one paper artifact (markdown-ish rows
+//! matching the paper's layout) and, where the paper's own numbers are
+//! bit-reproducible (Tables 7/8), asserts them. See DESIGN.md §5 for the
+//! experiment index.
+
+mod ablations;
+mod tables;
+
+pub use ablations::*;
+pub use tables::*;
+
+use crate::util::json::Value;
+
+/// Fixed-width table printer.
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row width");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n## {}\n\n", self.title));
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::from("| ");
+            for (c, w) in cells.iter().zip(widths) {
+                s.push_str(&format!("{c:<w$} | "));
+            }
+            s.trim_end().to_string()
+        };
+        out.push_str(&line(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&format!(
+            "|{}|",
+            widths
+                .iter()
+                .map(|w| "-".repeat(w + 2))
+                .collect::<Vec<_>>()
+                .join("|")
+        ));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Percent formatting helper.
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", x * 100.0)
+}
+
+/// MB formatting (paper convention: 1e6 bytes).
+pub fn fmt_mb(bytes: u64) -> String {
+    format!("{:.1}", bytes as f64 / 1e6)
+}
+
+/// Adaptive size formatting: KB below 1MB (our zoo is laptop-scale).
+pub fn fmt_size(bytes: u64) -> String {
+    if bytes >= 1_000_000 {
+        format!("{:.2}MB", bytes as f64 / 1e6)
+    } else {
+        format!("{:.1}KB", bytes as f64 / 1e3)
+    }
+}
+
+/// Load one of the report JSONs produced by the Python pipeline.
+pub fn load_report(root: &std::path::Path, name: &str) -> anyhow::Result<Value> {
+    crate::util::json::parse_file(&root.join("report").join(format!("{name}.json")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["a", "long header", "c"]);
+        t.row(vec!["1".into(), "2".into(), "3".into()]);
+        t.row(vec!["xxxx".into(), "y".into(), "z".into()]);
+        let s = t.render();
+        assert!(s.contains("## Demo"));
+        assert!(s.contains("| xxxx | y           | z |"));
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(pct(0.781), "78.1%");
+        assert_eq!(fmt_mb(44_700_000), "44.7");
+    }
+}

@@ -1,0 +1,109 @@
+//! PJRT engine: compile HLO-text artifacts, hold executables, run batches.
+//!
+//! Hot-path design: weights are uploaded to device-resident `PjRtBuffer`s
+//! once per model switch; each request uploads only its input batch and
+//! calls `execute_b`, so no weight bytes move per inference (§Perf L3).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{ensure, Context, Result};
+
+use super::manifest::ParamSpec;
+
+/// Shared PJRT CPU client.
+#[derive(Clone)]
+pub struct Engine {
+    client: Arc<xla::PjRtClient>,
+}
+
+// Safety: the PJRT CPU client is a thread-safe C++ object (the PJRT API
+// contract requires clients be callable from any thread); the Rust
+// wrapper just doesn't declare it. All our mutation goes through &self.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client: Arc::new(client),
+        })
+    }
+
+    /// Compile an HLO-text file into an executable.
+    pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe })
+    }
+
+    /// Upload an f32 tensor to a device-resident buffer.
+    pub fn upload(&self, data: &[f32], shape: &[usize]) -> Result<DeviceBuffer> {
+        let count: usize = shape.iter().product();
+        ensure!(
+            data.len() == count,
+            "shape {shape:?} needs {count} values, got {}",
+            data.len()
+        );
+        let buf = self
+            .client
+            .buffer_from_host_buffer(data, shape, None)
+            .context("uploading buffer")?;
+        Ok(DeviceBuffer { buf })
+    }
+
+    /// Upload every weight tensor in spec order.
+    pub fn upload_weights(
+        &self,
+        values: &[Vec<f32>],
+        specs: &[ParamSpec],
+    ) -> Result<Vec<DeviceBuffer>> {
+        ensure!(values.len() == specs.len(), "param count mismatch");
+        specs
+            .iter()
+            .zip(values)
+            .map(|(s, v)| self.upload(v, &s.shape).with_context(|| s.name.clone()))
+            .collect()
+    }
+}
+
+/// A device-resident tensor.
+pub struct DeviceBuffer {
+    buf: xla::PjRtBuffer,
+}
+
+unsafe impl Send for DeviceBuffer {}
+unsafe impl Sync for DeviceBuffer {}
+
+/// One compiled (architecture, act-bits) graph.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+// Safety: see Engine.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    /// Execute with `[input, weights...]` device buffers; returns the
+    /// flattened f32 output. Graphs are lowered with `return_tuple=True`,
+    /// so the single output is a 1-tuple.
+    pub fn run(&self, input: &DeviceBuffer, weights: &[DeviceBuffer]) -> Result<Vec<f32>> {
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + weights.len());
+        args.push(&input.buf);
+        args.extend(weights.iter().map(|w| &w.buf));
+        let result = self.exe.execute_b(&args).context("PJRT execute")?;
+        let lit = result[0][0].to_literal_sync()?;
+        let tuple = lit.to_tuple1()?;
+        Ok(tuple.to_vec::<f32>()?)
+    }
+}

@@ -1,0 +1,183 @@
+//! `artifacts/manifest.json` parsing: the contract between the Python
+//! build path and the Rust request path.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// One model parameter: name, shape, whether it is weight-quantized.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub quantized: bool,
+}
+
+impl ParamSpec {
+    pub fn count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One architecture's artifact set.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub params: Vec<ParamSpec>,
+    /// act_bits ("0", "6", "8") → HLO text path (relative to artifacts/).
+    pub hlo: BTreeMap<u8, String>,
+    /// "n|h" → nest container path.
+    pub nest_containers: BTreeMap<String, String>,
+    /// bits → mono container path.
+    pub mono_containers: BTreeMap<u8, String>,
+    pub fp32_container: String,
+    /// Golden logits: key → raw f32 path.
+    pub expected: BTreeMap<String, String>,
+}
+
+impl ModelSpec {
+    /// Container path for an INT(n|h) nest model, if built.
+    pub fn nest_container(&self, n: u8, h: u8) -> Option<&str> {
+        self.nest_containers.get(&format!("{n}|{h}")).map(|s| s.as_str())
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub batch: usize,
+    pub img: usize,
+    pub channels: usize,
+    pub num_classes: usize,
+    pub val_count: usize,
+    pub val_x: String,
+    pub val_y: String,
+    pub models: BTreeMap<String, ModelSpec>,
+}
+
+impl Manifest {
+    /// Load `<root>/manifest.json`.
+    pub fn load(root: &Path) -> Result<Manifest> {
+        let doc = json::parse_file(&root.join("manifest.json"))?;
+        let batch = doc.path(&["batch"])?.as_usize()?;
+        let img = doc.path(&["img"])?.as_usize()?;
+        let channels = doc.path(&["channels"])?.as_usize()?;
+        let num_classes = doc.path(&["num_classes"])?.as_usize()?;
+        let val_count = doc.path(&["data", "count"])?.as_usize()?;
+        let val_x = doc.path(&["data", "val_x"])?.as_str()?.to_string();
+        let val_y = doc.path(&["data", "val_y"])?.as_str()?.to_string();
+
+        let mut models = BTreeMap::new();
+        for (name, m) in doc.path(&["models"])?.as_object()? {
+            models.insert(name.clone(), parse_model(name, m)
+                .with_context(|| format!("model {name}"))?);
+        }
+        Ok(Manifest {
+            root: root.to_path_buf(),
+            batch,
+            img,
+            channels,
+            num_classes,
+            val_count,
+            val_x,
+            val_y,
+            models,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown model {name:?} (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()))
+    }
+
+    /// Absolute path for an artifacts-relative path.
+    pub fn abs(&self, rel: &str) -> PathBuf {
+        self.root.join(rel)
+    }
+
+    /// Load the validation images (flattened NHWC f32).
+    pub fn load_val(&self) -> Result<(Vec<f32>, Vec<u32>)> {
+        let x = crate::util::read_f32_file(&self.abs(&self.val_x))?;
+        let y = crate::util::read_u32_file(&self.abs(&self.val_y))?;
+        anyhow::ensure!(y.len() == self.val_count, "label count mismatch");
+        anyhow::ensure!(
+            x.len() == self.val_count * self.img * self.img * self.channels,
+            "image data size mismatch"
+        );
+        Ok((x, y))
+    }
+}
+
+fn parse_model(name: &str, m: &Value) -> Result<ModelSpec> {
+    let mut params = Vec::new();
+    for p in m.path(&["params"])?.as_array()? {
+        params.push(ParamSpec {
+            name: p.path(&["name"])?.as_str()?.to_string(),
+            shape: p
+                .path(&["shape"])?
+                .as_array()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Result<_>>()?,
+            quantized: p.path(&["quantized"])?.as_bool()?,
+        });
+    }
+    let mut hlo = BTreeMap::new();
+    for (k, v) in m.path(&["hlo"])?.as_object()? {
+        hlo.insert(k.parse::<u8>()?, v.as_str()?.to_string());
+    }
+    let mut nest_containers = BTreeMap::new();
+    for (k, v) in m.path(&["containers", "nest"])?.as_object()? {
+        nest_containers.insert(k.clone(), v.as_str()?.to_string());
+    }
+    let mut mono_containers = BTreeMap::new();
+    for (k, v) in m.path(&["containers", "mono"])?.as_object()? {
+        mono_containers.insert(k.parse::<u8>()?, v.as_str()?.to_string());
+    }
+    let mut expected = BTreeMap::new();
+    for (k, v) in m.path(&["expected"])?.as_object()? {
+        expected.insert(k.clone(), v.as_str()?.to_string());
+    }
+    Ok(ModelSpec {
+        name: name.to_string(),
+        params,
+        hlo,
+        nest_containers,
+        mono_containers,
+        fp32_container: m.path(&["containers", "fp32"])?.as_str()?.to_string(),
+        expected,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_real_manifest_when_built() {
+        let root = crate::artifacts_dir();
+        if !root.join("manifest.json").exists() {
+            eprintln!("skipping (run `make artifacts`)");
+            return;
+        }
+        let m = Manifest::load(&root).unwrap();
+        assert!(m.batch > 0 && m.num_classes == 10);
+        assert!(!m.models.is_empty());
+        for (name, spec) in &m.models {
+            assert!(!spec.params.is_empty(), "{name}");
+            assert!(spec.hlo.contains_key(&8), "{name} missing a8 HLO");
+            assert!(spec.params.iter().any(|p| p.quantized));
+            // every referenced file exists
+            for rel in spec.hlo.values() {
+                assert!(m.abs(rel).exists(), "{rel}");
+            }
+            assert!(m.abs(&spec.fp32_container).exists());
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime (S8): load the AOT-lowered HLO text artifacts and execute
+//! them on the CPU PJRT client from the request path.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO *text* → HloModuleProto
+//! → XlaComputation → compile → execute. One compiled executable per
+//! (architecture, act-bits) pair; weights are execution *arguments*, so
+//! the NestQuant model switch never recompiles anything — it only swaps
+//! the cached weight literals (see coordinator::manager).
+
+mod engine;
+mod manifest;
+
+pub use engine::{DeviceBuffer, Engine, Executable};
+pub use manifest::{Manifest, ModelSpec, ParamSpec};

@@ -1,0 +1,442 @@
+//! Statistics substrate (S4) for the paper's similarity analysis (§3.2.2):
+//! Wilcoxon rank-sum (Table 4), Pearson/Spearman/Kendall correlations
+//! (Table 5), Gaussian KDE and percentile confidence intervals (Figs 3/4).
+//!
+//! Implementations follow the scipy definitions; cargo test validates
+//! against scipy-generated goldens in `artifacts/golden/stats_golden.json`
+//! (written by the Python test-suite, seeds fixed).
+
+use anyhow::{ensure, Result};
+
+// ---------------------------------------------------------------------------
+// ranks
+// ---------------------------------------------------------------------------
+
+/// Midranks (average rank for ties), 1-based — scipy.stats.rankdata.
+pub fn midranks(xs: &[f64]) -> Vec<f64> {
+    let n = xs.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+    let mut ranks = vec![0f64; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && xs[idx[j + 1]] == xs[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j + 2) as f64 / 2.0; // average of 1-based ranks i+1..=j+1
+        for k in i..=j {
+            ranks[idx[k]] = avg;
+        }
+        i = j + 1;
+    }
+    ranks
+}
+
+// ---------------------------------------------------------------------------
+// Wilcoxon rank-sum (Table 4)
+// ---------------------------------------------------------------------------
+
+/// Result of a two-sided Wilcoxon rank-sum test (scipy.stats.ranksums).
+#[derive(Debug, Clone, Copy)]
+pub struct RankSum {
+    pub z: f64,
+    pub p: f64,
+}
+
+/// Two-sided Wilcoxon rank-sum with the normal approximation
+/// (scipy.stats.ranksums; no tie correction, matching scipy).
+pub fn ranksums(a: &[f64], b: &[f64]) -> Result<RankSum> {
+    let (n1, n2) = (a.len() as f64, b.len() as f64);
+    ensure!(n1 > 0.0 && n2 > 0.0, "empty sample");
+    let mut all: Vec<f64> = Vec::with_capacity(a.len() + b.len());
+    all.extend_from_slice(a);
+    all.extend_from_slice(b);
+    let ranks = midranks(&all);
+    let s: f64 = ranks[..a.len()].iter().sum();
+    let expected = n1 * (n1 + n2 + 1.0) / 2.0;
+    let var = n1 * n2 * (n1 + n2 + 1.0) / 12.0;
+    let z = (s - expected) / var.sqrt();
+    let p = 2.0 * (1.0 - std_normal_cdf(z.abs()));
+    Ok(RankSum { z, p })
+}
+
+/// Standard normal CDF via erfc (Abramowitz–Stegun 7.1.26-based erf).
+pub fn std_normal_cdf(x: f64) -> f64 {
+    0.5 * erfc(-x / std::f64::consts::SQRT_2)
+}
+
+/// Complementary error function to near machine precision, via the
+/// regularized incomplete gamma function P(1/2, x²) (series + Lentz
+/// continued fraction — Numerical Recipes gser/gcf).
+pub fn erfc(x: f64) -> f64 {
+    if x == 0.0 {
+        return 1.0;
+    }
+    let p = gammp_half(x * x); // P(1/2, x²) = erf(|x|)
+    if x > 0.0 {
+        1.0 - p
+    } else {
+        1.0 + p
+    }
+}
+
+/// Regularized lower incomplete gamma P(1/2, x).
+fn gammp_half(x: f64) -> f64 {
+    const A: f64 = 0.5;
+    let gln = 0.5723649429247001_f64; // ln Γ(1/2) = ln √π
+    if x < A + 1.0 {
+        // series representation
+        let mut ap = A;
+        let mut sum = 1.0 / A;
+        let mut del = sum;
+        for _ in 0..200 {
+            ap += 1.0;
+            del *= x / ap;
+            sum += del;
+            if del.abs() < sum.abs() * 1e-16 {
+                break;
+            }
+        }
+        sum * (-x + A * x.ln() - gln).exp()
+    } else {
+        // continued fraction for Q, then P = 1 - Q (modified Lentz)
+        let tiny = 1e-300;
+        let mut b = x + 1.0 - A;
+        let mut c = 1.0 / tiny;
+        let mut d = 1.0 / b;
+        let mut h = d;
+        for i in 1..200 {
+            let an = -(i as f64) * (i as f64 - A);
+            b += 2.0;
+            d = an * d + b;
+            if d.abs() < tiny {
+                d = tiny;
+            }
+            c = b + an / c;
+            if c.abs() < tiny {
+                c = tiny;
+            }
+            d = 1.0 / d;
+            let del = d * c;
+            h *= del;
+            if (del - 1.0).abs() < 1e-16 {
+                break;
+            }
+        }
+        let q = (-x + A * x.ln() - gln).exp() * h;
+        1.0 - q
+    }
+}
+
+// ---------------------------------------------------------------------------
+// correlations (Table 5)
+// ---------------------------------------------------------------------------
+
+/// Pearson linear correlation.
+pub fn pearson(a: &[f64], b: &[f64]) -> Result<f64> {
+    ensure!(a.len() == b.len() && a.len() >= 2, "need paired samples");
+    let n = a.len() as f64;
+    let ma = a.iter().sum::<f64>() / n;
+    let mb = b.iter().sum::<f64>() / n;
+    let (mut sab, mut saa, mut sbb) = (0.0, 0.0, 0.0);
+    for (&x, &y) in a.iter().zip(b) {
+        let (dx, dy) = (x - ma, y - mb);
+        sab += dx * dy;
+        saa += dx * dx;
+        sbb += dy * dy;
+    }
+    ensure!(saa > 0.0 && sbb > 0.0, "zero variance");
+    Ok(sab / (saa * sbb).sqrt())
+}
+
+/// Spearman rank correlation (Pearson on midranks).
+pub fn spearman(a: &[f64], b: &[f64]) -> Result<f64> {
+    pearson(&midranks(a), &midranks(b))
+}
+
+/// Kendall tau-b with tie correction — O(n log n) via merge-sort inversion
+/// counting (matches scipy.stats.kendalltau for real data sizes).
+pub fn kendall_tau_b(a: &[f64], b: &[f64]) -> Result<f64> {
+    ensure!(a.len() == b.len() && a.len() >= 2, "need paired samples");
+    let n = a.len();
+    // sort by a, then b
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&i, &j| {
+        a[i].partial_cmp(&a[j])
+            .unwrap()
+            .then(b[i].partial_cmp(&b[j]).unwrap())
+    });
+    let bs: Vec<f64> = idx.iter().map(|&i| b[i]).collect();
+    let asrt: Vec<f64> = idx.iter().map(|&i| a[i]).collect();
+
+    // tie counts
+    let tie_pairs = |xs: &[f64]| -> f64 {
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|p, q| p.partial_cmp(q).unwrap());
+        let mut t = 0f64;
+        let mut i = 0;
+        while i < sorted.len() {
+            let mut j = i;
+            while j + 1 < sorted.len() && sorted[j + 1] == sorted[i] {
+                j += 1;
+            }
+            let c = (j - i + 1) as f64;
+            t += c * (c - 1.0) / 2.0;
+            i = j + 1;
+        }
+        t
+    };
+    let n_pairs = (n * (n - 1) / 2) as f64;
+    let t_a = tie_pairs(a);
+    let t_b = tie_pairs(b);
+    // joint ties (both a and b equal)
+    let mut t_ab = 0f64;
+    {
+        let mut i = 0;
+        while i < n {
+            let mut j = i;
+            while j + 1 < n && asrt[j + 1] == asrt[i] && bs[j + 1] == bs[i] {
+                j += 1;
+            }
+            let c = (j - i + 1) as f64;
+            t_ab += c * (c - 1.0) / 2.0;
+            i = j + 1;
+        }
+    }
+    // discordant pairs = inversions in bs restricted to strictly-increasing a
+    // standard Knight's algorithm: count swaps in mergesort of bs
+    let mut arr = bs.clone();
+    let mut tmp = vec![0f64; n];
+    let discordant = merge_count(&mut arr, &mut tmp);
+    // concordant + discordant = n_pairs - t_a - t_b + t_ab
+    let con_plus_dis = n_pairs - t_a - t_b + t_ab;
+    let concordant = con_plus_dis - discordant;
+    let denom = ((n_pairs - t_a) * (n_pairs - t_b)).sqrt();
+    ensure!(denom > 0.0, "degenerate ties");
+    Ok((concordant - discordant) / denom)
+}
+
+fn merge_count(arr: &mut [f64], tmp: &mut [f64]) -> f64 {
+    let n = arr.len();
+    if n <= 1 {
+        return 0.0;
+    }
+    let mid = n / 2;
+    let (left, right) = arr.split_at_mut(mid);
+    let mut inv = merge_count(left, &mut tmp[..mid]) + merge_count(right, &mut tmp[mid..]);
+    // merge, counting strict inversions (left > right)
+    let (mut i, mut j, mut k) = (0usize, 0usize, 0usize);
+    while i < left.len() && j < right.len() {
+        if left[i] <= right[j] {
+            tmp[k] = left[i];
+            i += 1;
+        } else {
+            tmp[k] = right[j];
+            j += 1;
+            inv += (left.len() - i) as f64;
+        }
+        k += 1;
+    }
+    while i < left.len() {
+        tmp[k] = left[i];
+        i += 1;
+        k += 1;
+    }
+    while j < right.len() {
+        tmp[k] = right[j];
+        j += 1;
+        k += 1;
+    }
+    arr.copy_from_slice(&tmp[..n]);
+    inv
+}
+
+// ---------------------------------------------------------------------------
+// KDE + CIs (Figs 3/4)
+// ---------------------------------------------------------------------------
+
+/// Gaussian KDE evaluated on a uniform grid (Scott's bandwidth).
+pub fn kde(xs: &[f64], grid_points: usize) -> Result<(Vec<f64>, Vec<f64>)> {
+    ensure!(xs.len() >= 2, "need ≥2 samples");
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let std = (xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1.0)).sqrt();
+    let bw = (std * n.powf(-0.2)).max(1e-9); // Scott's rule
+    let (lo, hi) = xs
+        .iter()
+        .fold((f64::MAX, f64::MIN), |(l, h), &x| (l.min(x), h.max(x)));
+    let (lo, hi) = (lo - 3.0 * bw, hi + 3.0 * bw);
+    let step = (hi - lo) / (grid_points - 1) as f64;
+    let norm = 1.0 / (n * bw * (2.0 * std::f64::consts::PI).sqrt());
+    let grid: Vec<f64> = (0..grid_points).map(|i| lo + i as f64 * step).collect();
+    let dens: Vec<f64> = grid
+        .iter()
+        .map(|&g| {
+            xs.iter()
+                .map(|&x| (-(g - x).powi(2) / (2.0 * bw * bw)).exp())
+                .sum::<f64>()
+                * norm
+        })
+        .collect();
+    Ok((grid, dens))
+}
+
+/// Linear-interpolated percentile (numpy default), q in [0, 100].
+pub fn percentile(xs: &[f64], q: f64) -> Result<f64> {
+    ensure!(!xs.is_empty(), "empty sample");
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q / 100.0 * (s.len() - 1) as f64;
+    let i = pos.floor() as usize;
+    let frac = pos - i as f64;
+    if i + 1 < s.len() {
+        Ok(s[i] * (1.0 - frac) + s[i + 1] * frac)
+    } else {
+        Ok(s[i])
+    }
+}
+
+/// 95% percentile confidence interval (Fig 4's [LB, UB]).
+pub fn ci95(xs: &[f64]) -> Result<(f64, f64)> {
+    Ok((percentile(xs, 2.5)?, percentile(xs, 97.5)?))
+}
+
+/// Sample mean and (ddof=1) standard deviation.
+pub fn mean_std(xs: &[f64]) -> Result<(f64, f64)> {
+    ensure!(xs.len() >= 2, "need ≥2 samples");
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1.0);
+    Ok((mean, var.sqrt()))
+}
+
+/// Equal-width histogram over [min, max] (Fig 3's distribution series).
+pub fn histogram(xs: &[f64], bins: usize) -> Result<(Vec<f64>, Vec<u64>)> {
+    ensure!(!xs.is_empty() && bins > 0, "empty input");
+    let (lo, hi) = xs
+        .iter()
+        .fold((f64::MAX, f64::MIN), |(l, h), &x| (l.min(x), h.max(x)));
+    let span = (hi - lo).max(1e-12);
+    let mut counts = vec![0u64; bins];
+    for &x in xs {
+        let b = (((x - lo) / span) * bins as f64) as usize;
+        counts[b.min(bins - 1)] += 1;
+    }
+    let edges: Vec<f64> = (0..=bins)
+        .map(|i| lo + span * i as f64 / bins as f64)
+        .collect();
+    Ok((edges, counts))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+    use std::path::Path;
+
+    #[test]
+    fn midranks_with_ties() {
+        let r = midranks(&[10.0, 20.0, 20.0, 30.0]);
+        assert_eq!(r, vec![1.0, 2.5, 2.5, 4.0]);
+    }
+
+    #[test]
+    fn pearson_perfect() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&a, &b).unwrap() - 1.0).abs() < 1e-12);
+        let c = [-2.0, -4.0, -6.0, -8.0];
+        assert!((pearson(&a, &c).unwrap() + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_monotonic() {
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let b = [1.0, 8.0, 27.0, 64.0, 125.0]; // monotone, nonlinear
+        assert!((spearman(&a, &b).unwrap() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kendall_small_exact() {
+        // classic example: tau of reversed sequence is -1
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [4.0, 3.0, 2.0, 1.0];
+        assert!((kendall_tau_b(&a, &b).unwrap() + 1.0).abs() < 1e-12);
+        let c = [1.0, 2.0, 3.0, 4.0];
+        assert!((kendall_tau_b(&a, &c).unwrap() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ranksum_symmetric_same_distribution() {
+        // identical samples → z = 0 exactly (rank sum hits expectation)
+        let a: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let r = ranksums(&a, &a).unwrap();
+        assert!(r.z.abs() < 1e-9);
+        assert!((r.p - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn normal_cdf_known_values() {
+        assert!((std_normal_cdf(0.0) - 0.5).abs() < 1e-9);
+        assert!((std_normal_cdf(1.959964) - 0.975).abs() < 1e-5);
+        assert!((std_normal_cdf(-1.959964) - 0.025).abs() < 1e-5);
+    }
+
+    #[test]
+    fn percentile_matches_numpy_linear() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((percentile(&xs, 50.0).unwrap() - 2.5).abs() < 1e-12);
+        assert!((percentile(&xs, 0.0).unwrap() - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0).unwrap() - 4.0).abs() < 1e-12);
+        assert!((percentile(&xs, 25.0).unwrap() - 1.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kde_integrates_to_one() {
+        let xs: Vec<f64> = (0..200).map(|i| (i as f64 * 0.7).sin()).collect();
+        let (grid, dens) = kde(&xs, 256).unwrap();
+        let step = grid[1] - grid[0];
+        let integral: f64 = dens.iter().sum::<f64>() * step;
+        assert!((integral - 1.0).abs() < 0.02, "integral {integral}");
+    }
+
+    #[test]
+    fn histogram_counts_everything() {
+        let xs = [0.0, 0.1, 0.5, 0.9, 1.0];
+        let (edges, counts) = histogram(&xs, 2).unwrap();
+        assert_eq!(edges.len(), 3);
+        assert_eq!(counts.iter().sum::<u64>(), 5);
+    }
+
+    /// scipy goldens (written by python/tests/test_stats_golden.py).
+    #[test]
+    fn matches_scipy_goldens() {
+        let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/golden/stats_golden.json");
+        if !path.exists() {
+            eprintln!("skipping scipy goldens (run `make artifacts` first)");
+            return;
+        }
+        let doc = json::parse_file(&path).unwrap();
+        for case in doc.as_array().unwrap() {
+            let a: Vec<f64> = case.get("a").unwrap().as_array().unwrap()
+                .iter().map(|v| v.as_f64().unwrap()).collect();
+            let b: Vec<f64> = case.get("b").unwrap().as_array().unwrap()
+                .iter().map(|v| v.as_f64().unwrap()).collect();
+            let n = a.len().min(b.len());
+            let g = |k: &str| case.get(k).unwrap().as_f64().unwrap();
+
+            assert!((pearson(&a[..n], &b[..n]).unwrap() - g("pearson")).abs() < 1e-9);
+            assert!((spearman(&a[..n], &b[..n]).unwrap() - g("spearman")).abs() < 1e-9);
+            assert!((kendall_tau_b(&a[..n], &b[..n]).unwrap() - g("kendall")).abs() < 1e-9);
+            let rs = ranksums(&a, &b).unwrap();
+            assert!((rs.z - g("wilcoxon_z")).abs() < 1e-7, "z {} vs {}", rs.z, g("wilcoxon_z"));
+            assert!((rs.p - g("wilcoxon_p")).abs() < 1e-6);
+            let (mean, std) = mean_std(&a).unwrap();
+            assert!((mean - g("mean_a")).abs() < 1e-9);
+            assert!((std - g("std_a")).abs() < 1e-9);
+            assert!((percentile(&a, 2.5).unwrap() - g("percentile_a_2_5")).abs() < 1e-9);
+            assert!((percentile(&a, 97.5).unwrap() - g("percentile_a_97_5")).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,251 @@
+//! Transmission system (S7): the edge-server ↔ device model-push channel
+//! the paper measures network traffic on (Figs 13/14, §4.3.1).
+//!
+//! Length-framed messages over TCP (std::net; tokio is unavailable
+//! offline), with a byte meter on both directions. The `fleet_ota`
+//! example and `report traffic` run a real localhost round-trip and
+//! report *measured wire bytes*, not file sizes — exactly what the
+//! paper's prototype TCP/IP socket system reports.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{bail, ensure, Context, Result};
+
+/// Frame types on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Full model push (FP32 / mono / nest container bytes).
+    ModelFull = 1,
+    /// Section-A-only push (part-bit provisioning).
+    ModelPart = 2,
+    /// Section-B push (upgrade delta).
+    ModelDelta = 3,
+    /// Control/ack.
+    Control = 4,
+}
+
+impl FrameKind {
+    fn from_u8(v: u8) -> Result<Self> {
+        Ok(match v {
+            1 => FrameKind::ModelFull,
+            2 => FrameKind::ModelPart,
+            3 => FrameKind::ModelDelta,
+            4 => FrameKind::Control,
+            _ => bail!("unknown frame kind {v}"),
+        })
+    }
+}
+
+/// One framed message: kind + name + payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub name: String,
+    pub payload: Vec<u8>,
+}
+
+const FRAME_MAGIC: u32 = 0x4E51_5458; // "NQTX"
+const MAX_FRAME: u64 = 4 << 30;
+
+/// Bidirectional traffic meter (shared across connections).
+#[derive(Debug, Default)]
+pub struct Meter {
+    pub sent: AtomicU64,
+    pub received: AtomicU64,
+}
+
+impl Meter {
+    pub fn snapshot(&self) -> (u64, u64) {
+        (
+            self.sent.load(Ordering::Relaxed),
+            self.received.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// Write one frame; returns wire bytes written.
+pub fn send_frame(stream: &mut impl Write, frame: &Frame, meter: &Meter) -> Result<u64> {
+    let name = frame.name.as_bytes();
+    ensure!(name.len() < 1 << 16, "name too long");
+    let mut header = Vec::with_capacity(16 + name.len());
+    header.extend_from_slice(&FRAME_MAGIC.to_le_bytes());
+    header.push(frame.kind as u8);
+    header.extend_from_slice(&(name.len() as u16).to_le_bytes());
+    header.extend_from_slice(name);
+    header.extend_from_slice(&(frame.payload.len() as u64).to_le_bytes());
+    stream.write_all(&header)?;
+    stream.write_all(&frame.payload)?;
+    stream.flush()?;
+    let wire = (header.len() + frame.payload.len()) as u64;
+    meter.sent.fetch_add(wire, Ordering::Relaxed);
+    Ok(wire)
+}
+
+/// Read one frame; returns (frame, wire bytes read).
+pub fn recv_frame(stream: &mut impl Read, meter: &Meter) -> Result<(Frame, u64)> {
+    let mut fixed = [0u8; 7];
+    stream.read_exact(&mut fixed).context("frame header")?;
+    let magic = u32::from_le_bytes(fixed[0..4].try_into().unwrap());
+    ensure!(magic == FRAME_MAGIC, "bad frame magic {magic:#x}");
+    let kind = FrameKind::from_u8(fixed[4])?;
+    let name_len = u16::from_le_bytes(fixed[5..7].try_into().unwrap()) as usize;
+    let mut name = vec![0u8; name_len];
+    stream.read_exact(&mut name)?;
+    let mut len8 = [0u8; 8];
+    stream.read_exact(&mut len8)?;
+    let plen = u64::from_le_bytes(len8);
+    ensure!(plen <= MAX_FRAME, "frame too large: {plen}");
+    let mut payload = vec![0u8; plen as usize];
+    stream.read_exact(&mut payload)?;
+    let wire = (7 + name_len + 8) as u64 + plen;
+    meter.received.fetch_add(wire, Ordering::Relaxed);
+    Ok((
+        Frame {
+            kind,
+            name: String::from_utf8(name)?,
+            payload,
+        },
+        wire,
+    ))
+}
+
+/// The edge-server side: serves model files to connecting devices.
+pub struct PushServer {
+    pub addr: std::net::SocketAddr,
+    pub meter: Arc<Meter>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl PushServer {
+    /// Serve each queued frame to each accepted connection (one frame
+    /// sequence per connection), then stop after `connections` accepts.
+    pub fn serve_frames(frames: Vec<Frame>, connections: usize) -> Result<PushServer> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        let meter = Arc::new(Meter::default());
+        let m2 = Arc::clone(&meter);
+        let handle = std::thread::spawn(move || {
+            for _ in 0..connections {
+                let Ok((mut sock, _)) = listener.accept() else {
+                    return;
+                };
+                for f in &frames {
+                    if send_frame(&mut sock, f, &m2).is_err() {
+                        return;
+                    }
+                }
+            }
+        });
+        Ok(PushServer {
+            addr,
+            meter,
+            handle: Some(handle),
+        })
+    }
+
+    pub fn join(mut self) -> (u64, u64) {
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        self.meter.snapshot()
+    }
+}
+
+impl Drop for PushServer {
+    fn drop(&mut self) {
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Device side: connect and receive `count` frames.
+pub fn pull_frames(addr: std::net::SocketAddr, count: usize, meter: &Meter) -> Result<Vec<Frame>> {
+    let mut sock = TcpStream::connect(addr)?;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let (f, _) = recv_frame(&mut sock, meter)?;
+        out.push(f);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame(kind: FrameKind, name: &str, n: usize) -> Frame {
+        Frame {
+            kind,
+            name: name.into(),
+            payload: (0..n).map(|i| (i % 251) as u8).collect(),
+        }
+    }
+
+    #[test]
+    fn frame_roundtrip_in_memory() {
+        let meter = Meter::default();
+        let f = frame(FrameKind::ModelFull, "cnn_m", 10_000);
+        let mut buf = Vec::new();
+        let sent = send_frame(&mut buf, &f, &meter).unwrap();
+        let (got, recvd) = recv_frame(&mut buf.as_slice(), &meter).unwrap();
+        assert_eq!(got, f);
+        assert_eq!(sent, recvd);
+        assert_eq!(meter.snapshot(), (sent, sent));
+    }
+
+    #[test]
+    fn tcp_push_pull_meters_match() {
+        let frames = vec![
+            frame(FrameKind::ModelPart, "m.secA", 5_000),
+            frame(FrameKind::ModelDelta, "m.secB", 2_500),
+        ];
+        let server = PushServer::serve_frames(frames.clone(), 1).unwrap();
+        let dev_meter = Meter::default();
+        let got = pull_frames(server.addr, 2, &dev_meter).unwrap();
+        assert_eq!(got, frames);
+        let (sent, _) = server.join();
+        let (_, received) = dev_meter.snapshot();
+        assert_eq!(sent, received);
+        // wire overhead beyond payload is the small frame header only
+        let payload: u64 = frames.iter().map(|f| f.payload.len() as u64).sum();
+        assert!(sent > payload && sent < payload + 200);
+    }
+
+    #[test]
+    fn corrupt_magic_rejected() {
+        let meter = Meter::default();
+        let f = frame(FrameKind::Control, "x", 10);
+        let mut buf = Vec::new();
+        send_frame(&mut buf, &f, &meter).unwrap();
+        buf[0] ^= 0xFF;
+        assert!(recv_frame(&mut buf.as_slice(), &meter).is_err());
+    }
+
+    #[test]
+    fn truncated_stream_errors() {
+        let meter = Meter::default();
+        let f = frame(FrameKind::ModelFull, "x", 1000);
+        let mut buf = Vec::new();
+        send_frame(&mut buf, &f, &meter).unwrap();
+        let cut = &buf[..buf.len() - 10];
+        assert!(recv_frame(&mut &cut[..], &meter).is_err());
+    }
+
+    #[test]
+    fn multiple_connections() {
+        let frames = vec![frame(FrameKind::ModelFull, "m", 1_000)];
+        let server = PushServer::serve_frames(frames.clone(), 3).unwrap();
+        for _ in 0..3 {
+            let m = Meter::default();
+            let got = pull_frames(server.addr, 1, &m).unwrap();
+            assert_eq!(got, frames);
+        }
+        let (sent, _) = server.join();
+        assert!(sent >= 3_000);
+    }
+}

@@ -1,0 +1,122 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! `Bench::run` warms up, then executes timed iterations until a wall
+//! budget is used, reporting min/mean/p50/p95 per iteration plus derived
+//! throughput. Output is stable, grep-able `bench:` lines consumed by
+//! EXPERIMENTS.md §Perf.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark runner.
+pub struct Bench {
+    warmup: Duration,
+    budget: Duration,
+    min_iters: usize,
+    max_iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            min_iters: 10,
+            max_iters: 100_000,
+        }
+    }
+}
+
+/// Result summary for one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub name: String,
+    pub iters: usize,
+    pub min: Duration,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+impl Summary {
+    /// items/second given `items` processed per iteration.
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / self.mean.as_secs_f64()
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench {
+            warmup: Duration::from_millis(50),
+            budget: Duration::from_millis(500),
+            min_iters: 5,
+            max_iters: 10_000,
+        }
+    }
+
+    /// Time `f`; returns the summary and prints a `bench:` line.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Summary {
+        // warmup
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            f();
+        }
+        // timed
+        let mut samples = Vec::new();
+        let b0 = Instant::now();
+        while (b0.elapsed() < self.budget || samples.len() < self.min_iters)
+            && samples.len() < self.max_iters
+        {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+        }
+        samples.sort_unstable();
+        let iters = samples.len();
+        let sum: Duration = samples.iter().sum();
+        let s = Summary {
+            name: name.to_string(),
+            iters,
+            min: samples[0],
+            mean: sum / iters as u32,
+            p50: samples[iters / 2],
+            p95: samples[(iters * 95 / 100).min(iters - 1)],
+        };
+        println!(
+            "bench: {name:<44} {iters:>6} iters  mean {:>10.3?}  p50 {:>10.3?}  p95 {:>10.3?}  min {:>10.3?}",
+            s.mean, s.p50, s.p95, s.min
+        );
+        s
+    }
+
+    /// Run and also print a derived throughput line.
+    pub fn run_throughput<F: FnMut()>(&self, name: &str, items: f64, unit: &str, f: F) -> Summary {
+        let s = self.run(name, f);
+        println!(
+            "bench: {name:<44}        throughput {:>12.2} {unit}/s",
+            s.throughput(items)
+        );
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let b = Bench {
+            warmup: Duration::from_millis(1),
+            budget: Duration::from_millis(20),
+            min_iters: 3,
+            max_iters: 1000,
+        };
+        let mut acc = 0u64;
+        let s = b.run("noop-ish", || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(s.iters >= 3);
+        assert!(s.min <= s.p50 && s.p50 <= s.p95);
+    }
+}

@@ -1,0 +1,57 @@
+//! Pure-std substrates replacing unavailable crates (DESIGN.md §2):
+//! JSON, PRNG, property testing, thread pool, and small I/O helpers.
+
+pub mod benchkit;
+pub mod json;
+pub mod pool;
+pub mod prng;
+pub mod propcheck;
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Read a little-endian f32 binary blob (the artifacts' raw tensor format).
+pub fn read_f32_file(path: &Path) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    anyhow::ensure!(bytes.len() % 4 == 0, "{}: not a multiple of 4", path.display());
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Read a little-endian u32 binary blob (labels).
+pub fn read_u32_file(path: &Path) -> Result<Vec<u32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    anyhow::ensure!(bytes.len() % 4 == 0, "{}: not a multiple of 4", path.display());
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Human-readable byte size (MB with paper-style 1e6 divisor).
+pub fn mb(bytes: u64) -> f64 {
+    bytes as f64 / 1e6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn raw_file_roundtrip() {
+        let dir = std::env::temp_dir().join("nq_util_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.f32");
+        let vals = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&p, bytes).unwrap();
+        assert_eq!(read_f32_file(&p).unwrap(), vals);
+    }
+
+    #[test]
+    fn mb_uses_1e6() {
+        assert!((mb(44_700_000) - 44.7).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,162 @@
+//! Fixed-size thread pool (tokio is unavailable offline).
+//!
+//! The coordinator uses this for request handling and the transport
+//! server for per-connection workers. Scoped-task semantics are provided
+//! via `scope_map` for data-parallel work in the quantizer and benches.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed pool of worker threads consuming a shared queue.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    queued: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let queued = Arc::new(AtomicUsize::new(0));
+        let workers = (0..threads.max(1))
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let queued = Arc::clone(&queued);
+                thread::Builder::new()
+                    .name(format!("nq-pool-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                queued.fetch_sub(1, Ordering::Release);
+                            }
+                            Err(_) => break, // sender dropped → shutdown
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool {
+            tx: Some(tx),
+            workers,
+            queued,
+        }
+    }
+
+    /// Number of jobs submitted but not yet finished.
+    pub fn pending(&self) -> usize {
+        self.queued.load(Ordering::Acquire)
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.queued.fetch_add(1, Ordering::AcqRel);
+        self.tx
+            .as_ref()
+            .expect("pool alive")
+            .send(Box::new(f))
+            .expect("pool send");
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the queue
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Apply `f` to each item on `threads` OS threads and collect results in
+/// input order. Panics in `f` propagate.
+pub fn scope_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let items: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<&mut Option<R>>> = out.iter_mut().map(Mutex::new).collect();
+    thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = items[i].lock().unwrap().take().unwrap();
+                let r = f(item);
+                **slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+/// Default worker count: physical parallelism minus one, at least 1.
+pub fn default_threads() -> usize {
+    thread::available_parallelism()
+        .map(|n| n.get().saturating_sub(1).max(1))
+        .unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+    use std::time::Duration;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        drop(pool); // joins workers
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn pool_pending_drains() {
+        let pool = ThreadPool::new(2);
+        for _ in 0..10 {
+            pool.execute(|| thread::sleep(Duration::from_millis(1)));
+        }
+        while pool.pending() > 0 {
+            thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(pool.pending(), 0);
+    }
+
+    #[test]
+    fn scope_map_preserves_order() {
+        let out = scope_map((0..1000).collect::<Vec<_>>(), 8, |x| x * 2);
+        assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scope_map_empty() {
+        let out: Vec<i32> = scope_map(Vec::<i32>::new(), 4, |x| x);
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,96 @@
+//! Mini property-testing driver (proptest is unavailable offline).
+//!
+//! `check(name, cases, gen, prop)` runs `prop` on `cases` generated
+//! inputs; on failure it performs a bounded greedy shrink (the generator
+//! receives a shrink "scale" in [0,1] so smaller inputs can be resampled)
+//! and panics with the seed + smallest failing input debug-print, so a
+//! failure is reproducible by seed.
+
+use super::prng::Rng;
+
+/// Run a property over `cases` random inputs.
+///
+/// `gen(rng, scale)` produces an input; `scale` starts at 1.0 and is
+/// reduced while shrinking, so generators should produce "smaller" values
+/// for smaller scales (fewer elements, narrower ranges).
+pub fn check<T: std::fmt::Debug, G, P>(name: &str, cases: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng, f64) -> T,
+    P: FnMut(&T) -> bool,
+{
+    // Deterministic per-property seed from the name, stable across runs.
+    let seed = name
+        .bytes()
+        .fold(0xcbf29ce484222325u64, |h, b| {
+            (h ^ b as u64).wrapping_mul(0x100000001b3)
+        });
+    for case in 0..cases {
+        let mut rng = Rng::new(seed ^ (case as u64).wrapping_mul(0x9E3779B9));
+        let input = gen(&mut rng, 1.0);
+        if prop(&input) {
+            continue;
+        }
+        // Shrink: resample at decreasing scales from the same stream seed.
+        let mut smallest = input;
+        for step in 1..=16 {
+            let scale = 1.0 - step as f64 / 17.0;
+            let mut srng = Rng::new(seed ^ (case as u64).wrapping_mul(0x9E3779B9) ^ step);
+            let cand = gen(&mut srng, scale);
+            if !prop(&cand) {
+                smallest = cand;
+            }
+        }
+        panic!(
+            "property {name:?} failed (case {case}, seed {seed:#x}).\n\
+             smallest failing input:\n{smallest:#?}"
+        );
+    }
+}
+
+/// Generator helper: vector of i64 in [lo, hi], length scaled.
+pub fn vec_i64(rng: &mut Rng, scale: f64, max_len: usize, lo: i64, hi: i64) -> Vec<i64> {
+    let len = ((max_len as f64 * scale) as usize).max(1);
+    let len = rng.index(len) + 1;
+    (0..len).map(|_| rng.int(lo, hi)).collect()
+}
+
+/// Generator helper: vector of f64 normals, length scaled.
+pub fn vec_f64(rng: &mut Rng, scale: f64, max_len: usize) -> Vec<f64> {
+    let len = ((max_len as f64 * scale) as usize).max(2);
+    let len = rng.index(len).max(1) + 1;
+    (0..len).map(|_| rng.normal()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", 200, |r, _| (r.int(-100, 100), r.int(-100, 100)),
+              |(a, b)| a + b == b + a);
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_input() {
+        check("always-false", 5, |r, s| vec_i64(r, s, 100, -10, 10), |_| false);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        // Same name → same seed → same first input.
+        let mut first: Option<Vec<i64>> = None;
+        for _ in 0..2 {
+            let mut captured = None;
+            check("capture", 1, |r, s| vec_i64(r, s, 50, 0, 9), |v| {
+                captured = Some(v.clone());
+                true
+            });
+            match &first {
+                None => first = captured,
+                Some(f) => assert_eq!(f, &captured.unwrap()),
+            }
+        }
+    }
+}

@@ -1,0 +1,312 @@
+//! Integration tests over the real artifacts: runtime → coordinator →
+//! switching → serving, cross-checked against the Python pipeline's
+//! golden outputs.
+//!
+//! These tests skip (with a notice) when `make artifacts` hasn't run —
+//! unit tests cover everything artifact-independent.
+
+use std::sync::{Arc, Mutex};
+
+use nestquant::container::{self, Kind, TensorData};
+use nestquant::coordinator::{server, Coordinator, State, SwitchPolicy, Variant};
+use nestquant::device::{MemoryLedger, ResourceTrace};
+use nestquant::nest;
+use nestquant::runtime::{Engine, Manifest};
+use nestquant::util::read_f32_file;
+
+fn root() -> Option<std::path::PathBuf> {
+    let r = nestquant::artifacts_dir();
+    if r.join("manifest.json").exists() {
+        Some(r)
+    } else {
+        eprintln!("SKIP: run `make artifacts` first");
+        None
+    }
+}
+
+/// Smallest arch with full artifacts — keeps compile times short.
+const ARCH: &str = "cnn_t";
+
+fn nest_combo(manifest: &Manifest, arch: &str) -> (u8, u8) {
+    let spec = manifest.model(arch).unwrap();
+    // prefer INT(8|4); otherwise the first available
+    if spec.nest_container(8, 4).is_some() {
+        (8, 4)
+    } else {
+        let k = spec.nest_containers.keys().next().expect("no nest containers");
+        let (n, h) = k.split_once('|').unwrap();
+        (n.parse().unwrap(), h.parse().unwrap())
+    }
+}
+
+/// PJRT execution of the shipped HLO reproduces the Python pipeline's
+/// golden logits bit-close — the strongest cross-language check.
+#[test]
+fn golden_logits_match_python() {
+    let Some(root) = root() else { return };
+    let manifest = Manifest::load(&root).unwrap();
+    let spec = manifest.model(ARCH).unwrap();
+    let engine = Engine::cpu().unwrap();
+
+    // FP32 weights through the a0 graph
+    let exe = engine
+        .load_hlo(&manifest.abs(&spec.hlo[&0u8]))
+        .unwrap();
+    let c = container::read(&manifest.abs(&spec.fp32_container), false).unwrap();
+    let mut bufs = Vec::new();
+    for (t, p) in c.tensors.iter().zip(&spec.params) {
+        match &t.data {
+            TensorData::Fp32(vals) => bufs.push(engine.upload(vals, &p.shape).unwrap()),
+            _ => panic!("fp32 container"),
+        }
+    }
+    let (x, _) = manifest.load_val().unwrap();
+    let img_len = manifest.img * manifest.img * manifest.channels;
+    let input = engine
+        .upload(
+            &x[..manifest.batch * img_len],
+            &[manifest.batch, manifest.img, manifest.img, manifest.channels],
+        )
+        .unwrap();
+    let logits = exe.run(&input, &bufs).unwrap();
+
+    let golden = read_f32_file(&manifest.abs(&spec.expected["a0_fp32"])).unwrap();
+    assert_eq!(logits.len(), golden.len());
+    for (i, (a, b)) in logits.iter().zip(&golden).enumerate() {
+        assert!(
+            (a - b).abs() < 1e-3 + 1e-3 * b.abs(),
+            "logit {i}: rust {a} vs python {b}"
+        );
+    }
+}
+
+/// Full-bit accuracy via the coordinator matches the pipeline's recorded
+/// full-bit accuracy for the same container.
+#[test]
+fn full_bit_accuracy_matches_pipeline() {
+    let Some(root) = root() else { return };
+    let manifest = Manifest::load(&root).unwrap();
+    let (n, h) = nest_combo(&manifest, ARCH);
+    let mut c = Coordinator::new(&root, ARCH, n, h).unwrap();
+    c.manager.load_full_bit(&mut c.ledger).unwrap();
+    let acc = c.eval_accuracy(Some(512)).unwrap();
+
+    // the container's meta JSON records the pipeline's full-bit accuracy
+    let cont = container::read(
+        &manifest.abs(manifest.model(ARCH).unwrap().nest_container(n, h).unwrap()),
+        true,
+    )
+    .unwrap();
+    let meta = nestquant::util::json::parse(&cont.meta).unwrap();
+    let want = meta.path(&["full_acc"]).unwrap().as_f64().unwrap();
+    assert!(
+        (acc - want).abs() < 0.06,
+        "rust full-bit acc {acc} vs pipeline {want} (512-subset tolerance)"
+    );
+}
+
+/// The switching lifecycle: part → upgrade → downgrade, with exact byte
+/// accounting and lossless full-bit reconstruction.
+#[test]
+fn switch_lifecycle_accounting() {
+    let Some(root) = root() else { return };
+    let manifest = Manifest::load(&root).unwrap();
+    let (n, h) = nest_combo(&manifest, ARCH);
+    let mut c = Coordinator::new(&root, ARCH, n, h).unwrap();
+    let (sec_a, sec_b) = c.manager.section_bytes();
+    assert!(sec_a > 0 && sec_b > 0);
+
+    let cost = c.manager.load_part_bit(&mut c.ledger).unwrap();
+    assert_eq!(cost.page_in_bytes, sec_a);
+    assert_eq!(c.ledger.used(), sec_a);
+    let part_acc = c.eval_accuracy(Some(256)).unwrap();
+
+    // upgrade: page-in == section B, page-out == 0
+    let cost = c.manager.upgrade(&mut c.ledger).unwrap();
+    assert_eq!(cost.page_in_bytes, sec_b);
+    assert_eq!(cost.page_out_bytes, 0);
+    assert_eq!(c.ledger.used(), sec_a + sec_b);
+    let full_acc = c.eval_accuracy(Some(256)).unwrap();
+
+    // downgrade: page-in == 0, page-out == section B
+    let cost = c.manager.downgrade(&mut c.ledger).unwrap();
+    assert_eq!(cost.page_in_bytes, 0);
+    assert_eq!(cost.page_out_bytes, sec_b);
+    assert_eq!(c.ledger.used(), sec_a);
+    let part_acc2 = c.eval_accuracy(Some(256)).unwrap();
+    assert_eq!(part_acc, part_acc2, "downgrade must restore part-bit exactly");
+
+    // re-upgrade must reproduce the full-bit numbers exactly
+    c.manager.upgrade(&mut c.ledger).unwrap();
+    let full_acc2 = c.eval_accuracy(Some(256)).unwrap();
+    assert_eq!(full_acc, full_acc2, "upgrade must be lossless");
+
+    assert_eq!(c.manager.state(), State::Active(Variant::FullBit));
+    let stats = c.ledger.stats();
+    assert_eq!(stats.page_in_bytes, sec_a + 2 * sec_b);
+    assert_eq!(stats.page_out_bytes, sec_b);
+}
+
+/// Invalid transitions are rejected without corrupting state.
+#[test]
+fn invalid_transitions_rejected() {
+    let Some(root) = root() else { return };
+    let manifest = Manifest::load(&root).unwrap();
+    let (n, h) = nest_combo(&manifest, ARCH);
+    let mut c = Coordinator::new(&root, ARCH, n, h).unwrap();
+    assert!(c.manager.upgrade(&mut c.ledger).is_err());
+    assert!(c.manager.downgrade(&mut c.ledger).is_err());
+    c.manager.load_part_bit(&mut c.ledger).unwrap();
+    assert!(c.manager.load_part_bit(&mut c.ledger).is_err());
+    assert!(c.manager.downgrade(&mut c.ledger).is_err()); // already part
+    c.manager.upgrade(&mut c.ledger).unwrap();
+    assert!(c.manager.upgrade(&mut c.ledger).is_err()); // already full
+    // state survived the failed calls
+    assert_eq!(c.manager.state(), State::Active(Variant::FullBit));
+    assert!(c.eval_accuracy(Some(64)).is_ok());
+}
+
+/// Page-in must fail cleanly under memory pressure and leave the
+/// part-bit model serving (the paper's downgrade-to-survive story).
+#[test]
+fn upgrade_fails_under_memory_pressure() {
+    let Some(root) = root() else { return };
+    let manifest = Manifest::load(&root).unwrap();
+    let (n, h) = nest_combo(&manifest, ARCH);
+    let mut c = Coordinator::new(&root, ARCH, n, h).unwrap();
+    let (sec_a, _) = c.manager.section_bytes();
+    c.ledger.set_capacity(sec_a); // room for part-bit only
+    c.manager.load_part_bit(&mut c.ledger).unwrap();
+    assert!(c.manager.upgrade(&mut c.ledger).is_err());
+    // still serving part-bit
+    assert_eq!(c.manager.state(), State::Active(Variant::PartBit));
+    assert!(c.eval_accuracy(Some(64)).is_ok());
+}
+
+/// A resource trace drives upgrades/downgrades; NestQuant moves only
+/// section-B bytes, ever.
+#[test]
+fn trace_switches_move_only_section_b() {
+    let Some(root) = root() else { return };
+    let manifest = Manifest::load(&root).unwrap();
+    let (n, h) = nest_combo(&manifest, ARCH);
+    let mut c = Coordinator::new(&root, ARCH, n, h).unwrap();
+    let (_, sec_b) = c.manager.section_bytes();
+    let report = c
+        .run_trace(ResourceTrace::solar_day(24), SwitchPolicy::default(), 16)
+        .unwrap();
+    assert!(
+        !report.switches.is_empty(),
+        "solar trace must trigger at least one switch"
+    );
+    for s in &report.switches {
+        match s.to {
+            Variant::FullBit => {
+                assert_eq!(s.cost.page_in_bytes, sec_b);
+                assert_eq!(s.cost.page_out_bytes, 0);
+            }
+            Variant::PartBit => {
+                assert_eq!(s.cost.page_in_bytes, 0);
+                assert_eq!(s.cost.page_out_bytes, sec_b);
+            }
+        }
+    }
+    assert!(report.full_served + report.part_served > 0);
+}
+
+/// The TCP server answers concurrent clients with correct predictions.
+#[test]
+fn server_roundtrip_concurrent_clients() {
+    let Some(root) = root() else { return };
+    let manifest = Manifest::load(&root).unwrap();
+    let (n, h) = nest_combo(&manifest, ARCH);
+    let mut c = Coordinator::new(&root, ARCH, n, h).unwrap();
+    c.manager.load_full_bit(&mut c.ledger).unwrap();
+    let (x, y) = c.manifest.load_val().unwrap();
+    let img_len = manifest.img * manifest.img * manifest.channels;
+    let classes = manifest.num_classes;
+
+    let coord = Arc::new(Mutex::new(c));
+    let handle = server::serve(coord, server::ServerConfig::default()).unwrap();
+    let addr = handle.addr;
+
+    let mut joins = Vec::new();
+    for t in 0..4 {
+        let x0 = x[t * img_len..(t + 1) * img_len].to_vec();
+        joins.push(std::thread::spawn(move || {
+            let mut client = server::Client::connect(addr).unwrap();
+            let logits = client.infer(&x0).unwrap();
+            assert_eq!(logits.len(), classes);
+            logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0 as u32
+        }));
+    }
+    let mut correct = 0;
+    for (t, j) in joins.into_iter().enumerate() {
+        if j.join().unwrap() == y[t] {
+            correct += 1;
+        }
+    }
+    // a trained model over 4 easy images: expect most right
+    assert!(correct >= 2, "only {correct}/4 correct via server");
+    handle.stop();
+}
+
+/// Bad requests get error replies, not hangs or crashes.
+#[test]
+fn server_rejects_malformed_image() {
+    let Some(root) = root() else { return };
+    let manifest = Manifest::load(&root).unwrap();
+    let (n, h) = nest_combo(&manifest, ARCH);
+    let mut c = Coordinator::new(&root, ARCH, n, h).unwrap();
+    c.manager.load_full_bit(&mut c.ledger).unwrap();
+    let coord = Arc::new(Mutex::new(c));
+    let handle = server::serve(coord, server::ServerConfig::default()).unwrap();
+    let mut client = server::Client::connect(handle.addr).unwrap();
+    let err = client.infer(&[0.0; 7]).unwrap_err();
+    assert!(format!("{err}").contains("bad image size"));
+    handle.stop();
+}
+
+/// The container's part-bit weights agree with re-deriving w_high from
+/// the mono INT8 container (pipeline consistency across formats).
+#[test]
+fn container_cross_consistency() {
+    let Some(root) = root() else { return };
+    let manifest = Manifest::load(&root).unwrap();
+    let spec = manifest.model(ARCH).unwrap();
+    let (n, h) = nest_combo(&manifest, ARCH);
+    let nest_c = container::read(
+        &manifest.abs(spec.nest_container(n, h).unwrap()),
+        false,
+    )
+    .unwrap();
+    let mono_c = container::read(&manifest.abs(&spec.mono_containers[&n]), false).unwrap();
+    assert_eq!(nest_c.kind, Kind::Nest);
+    assert_eq!(mono_c.kind, Kind::Mono);
+    let cfg = nest::NestConfig::new(n, h).unwrap();
+    for (tn, tm) in nest_c.tensors.iter().zip(&mono_c.tensors) {
+        let (TensorData::Nest { w_high, w_low, .. }, TensorData::Mono { w_int, .. }) =
+            (&tn.data, &tm.data)
+        else {
+            continue;
+        };
+        // recomposed nest weights == the mono INTn weights, everywhere
+        let hs = w_high.unpack();
+        let ls = w_low.as_ref().unwrap().unpack();
+        let wi = w_int.unpack();
+        for i in 0..hs.len() {
+            assert_eq!(
+                nest::recompose(hs[i], ls[i], cfg.l()),
+                wi[i],
+                "{}[{}]",
+                tn.name,
+                i
+            );
+        }
+    }
+}

@@ -1,0 +1,52 @@
+//! Every report command must run green against the built artifacts —
+//! these are the regeneration paths for all paper tables/figures.
+
+use nestquant::report;
+
+fn root() -> Option<std::path::PathBuf> {
+    let r = nestquant::artifacts_dir();
+    if r.join("manifest.json").exists() {
+        Some(r)
+    } else {
+        eprintln!("SKIP: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn artifact_free_reports() {
+    // these never touch artifacts/ and must always work
+    report::cmd_errors().unwrap();
+    report::cmd_storage_ideal().unwrap();
+    report::cmd_hardware().unwrap();
+    report::cmd_libraries().unwrap();
+    report::cmd_ablation_packing().unwrap();
+}
+
+#[test]
+fn artifact_backed_reports() {
+    let Some(root) = root() else { return };
+    report::cmd_storage(&root, None).unwrap();
+    report::cmd_switching(&root).unwrap();
+    report::cmd_nesting_test(&root, "cnn_m").unwrap();
+    report::cmd_nesting(&root, Some("cnn"), 8).unwrap();
+    report::cmd_nesting(&root, Some("vit"), 8).unwrap();
+    report::cmd_nesting(&root, None, 6).unwrap();
+    report::cmd_cliff(&root).unwrap();
+    report::cmd_combos(&root).unwrap();
+    report::cmd_comparison(&root).unwrap();
+    report::cmd_ptq_cost(&root).unwrap();
+    report::cmd_ablations(&root).unwrap();
+}
+
+#[test]
+fn similarity_report() {
+    let Some(root) = root() else { return };
+    report::cmd_similarity(&root, "cnn_t").unwrap();
+}
+
+#[test]
+fn traffic_report_live_tcp() {
+    let Some(root) = root() else { return };
+    report::cmd_traffic(&root, Some("mobile")).unwrap();
+}
