@@ -1,111 +1,137 @@
-//! Fleet OTA: an edge server pushes models to a fleet of IoT devices over
-//! TCP, reproducing the paper's network-traffic experiment (§4.3.1,
-//! Figs 13/14) with *measured wire bytes*, plus the staged-provisioning
-//! flow NestQuant enables: push section A first (devices come online in
-//! part-bit mode immediately), stream section B later as a delta.
+//! Fleet OTA: an edge server distributes NestQuant models to a device
+//! fleet through the `fleet` subsystem — staged provisioning (Section A
+//! first, devices serve part-bit immediately), Section-B upgrade deltas,
+//! a zoo-wide shared section cache, and resumable chunked transfers —
+//! the fleet-scale extension of the paper's network-traffic experiment
+//! (§4.3.1), with *measured wire bytes*. For the paper's FP32 vs
+//! diverse-bitwidths vs NestQuant single-push comparison (Figs 13/14),
+//! run `nestquant report traffic` against built artifacts.
+//!
+//! Works offline: when `make artifacts` hasn't run, a synthetic INT(8|4)
+//! zoo is built on the fly.
 //!
 //! ```bash
-//! cargo run --release --example fleet_ota [arch] [devices]
+//! cargo run --release --example fleet_ota [devices] [steps]
 //! ```
 
+use std::time::Duration;
+
 use anyhow::Result;
-use nestquant::device::{transmission_seconds, RPI_4B};
-use nestquant::transport::{pull_frames, Frame, FrameKind, Meter, PushServer};
-
-fn push(frames: Vec<Frame>, devices: usize) -> Result<u64> {
-    let n = frames.len();
-    let server = PushServer::serve_frames(frames, devices)?;
-    let mut handles = Vec::new();
-    for _ in 0..devices {
-        let addr = server.addr;
-        handles.push(std::thread::spawn(move || {
-            let meter = Meter::default();
-            pull_frames(addr, n, &meter).map(|_| meter.snapshot().1)
-        }));
-    }
-    let mut received = 0;
-    for h in handles {
-        received += h.join().unwrap()?;
-    }
-    let (sent, _) = server.join();
-    assert_eq!(sent, received, "wire accounting must balance");
-    Ok(sent)
-}
-
-fn file_frame(path: &std::path::Path, kind: FrameKind) -> Result<Frame> {
-    Ok(Frame {
-        kind,
-        name: path.file_name().unwrap().to_string_lossy().into_owned(),
-        payload: std::fs::read(path)?,
-    })
-}
+use nestquant::device::{transmission_seconds, MemoryLedger, ResourceTrace, RPI_4B};
+use nestquant::fleet::{FleetClient, FleetConfig, FleetServer, Zoo};
 
 fn main() -> Result<()> {
-    let root = nestquant::artifacts_dir();
     let mut args = std::env::args().skip(1);
-    let arch = args.next().unwrap_or_else(|| "cnn_m".into());
     let devices: usize = args.next().map(|s| s.parse()).transpose()?.unwrap_or(8);
+    let steps: usize = args.next().map(|s| s.parse()).transpose()?.unwrap_or(24);
 
-    println!("== fleet OTA: pushing {arch} to {devices} devices (localhost TCP, measured) ==\n");
+    // zoo: artifact containers when built, synthetic ones otherwise
+    let root = nestquant::artifacts_dir();
+    let mut zoo = Zoo::new();
+    let nq_dir = root.join("nq");
+    if nq_dir.is_dir() {
+        zoo.scan_nest_dir(&nq_dir)?;
+    }
+    if zoo.is_empty() {
+        let dir = std::env::temp_dir().join(format!("nq_ota_zoo_{}", std::process::id()));
+        zoo = nestquant::fleet::synthetic_zoo(&dir, 3, 40)?;
+        println!("(no artifacts found — synthetic INT(8|4) zoo)\n");
+    }
+    let model_ids: Vec<String> = zoo.ids().map(str::to_string).collect();
 
-    // Deployment A: FP32 model.
-    let fp32 = push(
-        vec![file_frame(&root.join(format!("nq/{arch}_fp32.nq")), FrameKind::ModelFull)?],
-        devices,
-    )?;
+    println!(
+        "== fleet OTA: {} models → {} devices over localhost TCP (measured wire bytes) ==\n",
+        model_ids.len(),
+        devices
+    );
 
-    // Deployment B: diverse bitwidths (INT8 + INT4 separately).
-    let diverse = push(
-        vec![
-            file_frame(&root.join(format!("nq/{arch}_int8.nq")), FrameKind::ModelFull)?,
-            file_frame(&root.join(format!("nq/{arch}_int4.nq")), FrameKind::ModelFull)?,
-        ],
-        devices,
-    )?;
+    // 8 KiB chunks so even the smallest Section B spans many chunks and
+    // the kill/resume demo below genuinely interrupts a transfer
+    let config = FleetConfig {
+        chunk_bytes: 8 << 10,
+        ..FleetConfig::default()
+    };
+    let handle = FleetServer::start(zoo, config)?;
 
-    // Deployment C: one NestQuant container (both models in one file).
-    let nest_path = root.join(format!("nq/{arch}_n8h4.nq"));
-    let nest = push(vec![file_frame(&nest_path, FrameKind::ModelFull)?], devices)?;
+    // Every device: staged provisioning (Section A → part-bit launch),
+    // then a resource trace driving Section-B paging via server advice.
+    let traces = ResourceTrace::fleet(devices, steps, 0x07A);
+    let mut joins = Vec::new();
+    for (d, trace) in traces.into_iter().enumerate() {
+        let addr = handle.addr;
+        let model = model_ids[d % model_ids.len()].clone();
+        joins.push(std::thread::spawn(move || -> Result<(u64, u64, u64, u64)> {
+            let mut client =
+                FleetClient::connect(addr, &format!("dev-{d:02}"), Duration::from_secs(30))?;
+            let mut ledger = MemoryLedger::new(4 << 30);
+            let report = client.playback(&model, trace, &mut ledger)?;
+            let (_, received) = client.wire();
+            // measured: everything pulled beyond the Section-A provisioning
+            // is Section-B delta traffic (partial/resumed pulls included)
+            Ok((
+                report.section_a_bytes,
+                report.payload_pulled - report.section_a_bytes,
+                report.payload_pulled,
+                received,
+            ))
+        }));
+    }
+    let (mut a_total, mut delta_total, mut payload_total, mut wire_total) = (0u64, 0u64, 0u64, 0u64);
+    for j in joins {
+        let (a, deltas, payload, wire) = j.join().unwrap()?;
+        a_total += a;
+        delta_total += deltas;
+        payload_total += payload;
+        wire_total += wire;
+    }
 
-    // Deployment D: staged provisioning — section A now, section B later.
-    let container = nestquant::container::read(&nest_path, true)?;
-    let blob = std::fs::read(&nest_path)?;
-    let split = container.section_b_offset as usize;
-    let stage_a = push(
-        vec![Frame {
-            kind: FrameKind::ModelPart,
-            name: format!("{arch}.secA"),
-            payload: blob[..split].to_vec(),
-        }],
-        devices,
-    )?;
-    let stage_b = push(
-        vec![Frame {
-            kind: FrameKind::ModelDelta,
-            name: format!("{arch}.secB"),
-            payload: blob[split..].to_vec(),
-        }],
-        devices,
-    )?;
+    // resume demo on the first model
+    let model = &model_ids[0];
+    let demo =
+        nestquant::fleet::demo_kill_resume(handle.addr, "dev-flaky", model, 3, Duration::from_secs(30))?;
+    if demo.killed.completed {
+        println!("  (section B fits in ≤3 chunks here; nothing to resume)");
+    }
+    let (killed, resume_from, resumed) = (demo.killed, demo.resume_from, demo.resumed);
+
+    let cache = std::sync::Arc::clone(&handle.cache);
+    let meter = std::sync::Arc::clone(&handle.meter);
+    handle.stop();
+    let stats = cache.stats();
+    let (srv_sent, _) = meter.snapshot();
 
     let row = |name: &str, bytes: u64| {
         println!(
-            "  {name:<28} {:>10.2} MB wire   ~{:>6.2}s on {} fleet-wide",
+            "  {name:<40} {:>10.2} MB wire   ~{:>6.2}s fleet-wide on {}",
             bytes as f64 / 1e6,
             transmission_seconds(&RPI_4B, bytes),
             RPI_4B.name
         );
     };
-    row("FP32", fp32);
-    row("diverse INT8+INT4", diverse);
-    row("NestQuant INT(8|4)", nest);
-    row("  staged: section A first", stage_a);
-    row("  staged: section B delta", stage_b);
+    row("staged: Section A (part-bit launch)", a_total);
+    row("staged: Section-B upgrade deltas", delta_total);
+    row("total section payload", payload_total);
+    println!();
     println!(
-        "\nNestQuant vs diverse: {:.1}% less traffic; vs FP32: {:.1}% less",
-        (1.0 - nest as f64 / diverse as f64) * 100.0,
-        (1.0 - nest as f64 / fp32 as f64) * 100.0
+        "  devices came online after {:.1}% of the payload bytes (Section A first)",
+        a_total as f64 / payload_total.max(1) as f64 * 100.0
     );
-    println!("staged provisioning gets devices serving after {:.1}% of the bytes", stage_a as f64 / nest as f64 * 100.0);
+    println!(
+        "  resume: killed after {} chunks, resumed at byte {resume_from}, moved {} more bytes \
+         ({} bytes saved vs restart)",
+        killed.chunks, resumed.payload_bytes, resume_from
+    );
+    println!(
+        "  cache: {} hits / {} misses — {:.2} MB read from disk to serve {:.2} MB of wire payload",
+        stats.hits,
+        stats.misses,
+        stats.disk_bytes as f64 / 1e6,
+        payload_total as f64 / 1e6
+    );
+    println!(
+        "  wire: server sent {:.2} MB total (devices received {:.2} MB incl. framing)",
+        srv_sent as f64 / 1e6,
+        wire_total as f64 / 1e6
+    );
     Ok(())
 }

@@ -1,0 +1,77 @@
+//! Bench: fleet-distribution hot paths — zoo-wide section cache hit vs
+//! cold disk read, chunk framing, and an end-to-end localhost Section-B
+//! delta pull through the resumable transfer protocol. Artifact-free:
+//! runs on synthetic containers, so it always measures.
+
+use std::time::Duration;
+
+use nestquant::container;
+use nestquant::fleet::{FleetClient, FleetConfig, FleetServer, Section, SectionCache, Zoo};
+use nestquant::transport::{chunk_frame, parse_chunk, ChunkHeader};
+use nestquant::util::benchkit::Bench;
+
+fn main() {
+    let b = Bench::quick();
+    let dir = std::env::temp_dir().join(format!("nq_fleet_bench_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // a mid-sized synthetic model: 512x256 INT(8|4), ~150 KB packed
+    let path = dir.join("bench.nq");
+    let c = container::synthetic_nest(1, 8, 4, 512, 256).unwrap();
+    let (total, a_len, b_len) = container::write(&path, &c).unwrap();
+    println!(
+        "bench: --- fleet: container {:.1} KB (A {:.1} / B {:.1}) ---",
+        total as f64 / 1e3,
+        a_len as f64 / 1e3,
+        b_len as f64 / 1e3
+    );
+
+    // header probe (the random-access entry point)
+    b.run("fleet probe section index", || {
+        std::hint::black_box(container::probe(&path).unwrap());
+    });
+
+    // section cache: cold read vs hit
+    b.run("fleet cache miss (disk section read)", || {
+        let cache = SectionCache::new(u64::MAX);
+        std::hint::black_box(cache.get(&path, Section::B).unwrap());
+    });
+    let cache = SectionCache::new(u64::MAX);
+    cache.get(&path, Section::B).unwrap();
+    b.run_throughput("fleet cache hit", b_len as f64, "B", || {
+        std::hint::black_box(cache.get(&path, Section::B).unwrap());
+    });
+
+    // chunk framing
+    let blob = vec![7u8; 64 << 10];
+    b.run_throughput("fleet chunk encode+decode 64KiB", blob.len() as f64, "B", || {
+        let f = chunk_frame(
+            "m",
+            ChunkHeader {
+                xfer_id: 1,
+                offset: 0,
+                total_len: blob.len() as u64,
+            },
+            &blob,
+        );
+        let (h, d) = parse_chunk(&f).unwrap();
+        std::hint::black_box((h, d.len()));
+    });
+
+    // end-to-end: a full Section-B delta pull over localhost TCP with
+    // per-chunk acks (the paging path a device upgrade takes)
+    let mut zoo = Zoo::new();
+    zoo.add("m", &path);
+    let handle = FleetServer::start(zoo, FleetConfig::default()).unwrap();
+    let mut client =
+        FleetClient::connect(handle.addr, "bench-dev", Duration::from_secs(30)).unwrap();
+    let mut sink = Vec::new();
+    b.run_throughput("fleet section-B pull (localhost, acked)", b_len as f64, "B", || {
+        let out = client
+            .pull_section("m", Section::B, 0, &mut sink, None)
+            .unwrap();
+        assert!(out.completed);
+    });
+    drop(client);
+    handle.stop();
+}

@@ -115,6 +115,52 @@ impl Container {
     }
 }
 
+/// Byte-range index of one `.nq` file: everything a distribution server
+/// needs to serve section-granular reads without parsing tensor payloads.
+/// Produced by [`probe`], which reads only the header prefix.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SectionIndex {
+    pub kind: Kind,
+    pub n: u8,
+    pub h: u8,
+    pub act_bits: u8,
+    pub name: String,
+    pub section_b_offset: u64,
+    pub file_len: u64,
+}
+
+impl SectionIndex {
+    /// Byte range of section A (header + scales + w_high + fp32 params).
+    pub fn section_a(&self) -> std::ops::Range<u64> {
+        if self.section_b_offset == 0 {
+            0..self.file_len
+        } else {
+            0..self.section_b_offset
+        }
+    }
+
+    /// Byte range of section B (the packed w_low tail; empty when absent).
+    pub fn section_b(&self) -> std::ops::Range<u64> {
+        if self.section_b_offset == 0 {
+            self.file_len..self.file_len
+        } else {
+            self.section_b_offset..self.file_len
+        }
+    }
+
+    /// Section-A bytes (the part-bit page-in cost).
+    pub fn section_a_bytes(&self) -> u64 {
+        let r = self.section_a();
+        r.end - r.start
+    }
+
+    /// Section-B bytes (the upgrade delta).
+    pub fn section_b_bytes(&self) -> u64 {
+        let r = self.section_b();
+        r.end - r.start
+    }
+}
+
 // ---------------------------------------------------------------------------
 // reading
 // ---------------------------------------------------------------------------
@@ -124,9 +170,13 @@ struct Cursor<'a> {
     o: usize,
 }
 
+/// Marker message for reads past the end of the buffer; [`probe`] keys
+/// window growth on it (any other parse error is final).
+const TRUNCATED: &str = "truncated container";
+
 impl<'a> Cursor<'a> {
     fn raw(&mut self, n: usize) -> Result<&'a [u8]> {
-        ensure!(self.o + n <= self.d.len(), "truncated container at {}", self.o);
+        ensure!(self.o + n <= self.d.len(), "{TRUNCATED} at {}", self.o);
         let s = &self.d[self.o..self.o + n];
         self.o += n;
         Ok(s)
@@ -288,6 +338,154 @@ pub fn read_section_b(path: &Path, container: &mut Container) -> Result<u64> {
     Ok(nbytes)
 }
 
+/// Parse just the fixed header prefix: (kind, n, h, act, name, off_b,
+/// bytes consumed). Errors with "truncated container" when `data` is too
+/// short — [`probe`] uses that to grow its read window.
+fn parse_prefix(data: &[u8]) -> Result<(Kind, u8, u8, u8, String, u64, usize)> {
+    let mut c = Cursor { d: data, o: 0 };
+    ensure!(c.raw(8)? == MAGIC, "bad magic");
+    let version = c.u32()?;
+    ensure!(version == VERSION, "unsupported version {version}");
+    let kind = Kind::from_u8(c.u8()?)?;
+    let n = c.u8()?;
+    let h = c.u8()?;
+    let act_bits = c.u8()?;
+    let name = c.str()?;
+    let _meta = c.str()?;
+    let num = c.u32()? as usize;
+    ensure!(num < 100_000, "unreasonable tensor count {num}");
+    let off_b = c.u64()?;
+    Ok((kind, n, h, act_bits, name, off_b, c.o))
+}
+
+/// Probe a `.nq` file's section layout by reading only the header prefix
+/// (a few KB), never the tensor payloads. This is the random-access entry
+/// point the fleet distribution layer uses to serve section reads for
+/// containers it has not (and will not) fully load.
+pub fn probe(path: &Path) -> Result<SectionIndex> {
+    let file_len = std::fs::metadata(path)
+        .with_context(|| format!("stat {}", path.display()))?
+        .len();
+    let mut f = std::fs::File::open(path)?;
+    let mut buf: Vec<u8> = Vec::new();
+    let mut want: usize = 4096;
+    // name + meta are each < 1 MiB, so a legal header prefix fits well
+    // inside this window; anything needing more is corrupt.
+    const MAX_HEADER_WINDOW: usize = 4 << 20;
+    loop {
+        // extend the window to `want` bytes (or EOF)
+        let target = want.min(file_len as usize);
+        if buf.len() < target {
+            let old = buf.len();
+            buf.resize(target, 0);
+            f.read_exact(&mut buf[old..])
+                .with_context(|| format!("reading header of {}", path.display()))?;
+        }
+        match parse_prefix(&buf) {
+            Ok((kind, n, h, act_bits, name, section_b_offset, _consumed)) => {
+                ensure!(
+                    section_b_offset <= file_len,
+                    "section B offset {section_b_offset} beyond file length {file_len}"
+                );
+                if kind == Kind::Nest {
+                    ensure!(section_b_offset > 0, "nest container without section B");
+                } else {
+                    ensure!(section_b_offset == 0, "non-nest container with section B");
+                }
+                return Ok(SectionIndex {
+                    kind,
+                    n,
+                    h,
+                    act_bits,
+                    name,
+                    section_b_offset,
+                    file_len,
+                });
+            }
+            // grow ONLY on truncation (header longer than the window);
+            // any other parse error — bad magic, bad version — is final,
+            // so a stray non-container file never gets slurped whole
+            Err(e)
+                if e.to_string().contains(TRUNCATED)
+                    && buf.len() < file_len as usize
+                    && want < MAX_HEADER_WINDOW =>
+            {
+                want *= 2;
+            }
+            Err(e) => return Err(e.context(format!("probing {}", path.display()))),
+        }
+    }
+}
+
+/// Read an arbitrary byte range from a container file (pread-style random
+/// access; the fleet section cache's disk path).
+pub fn read_range(path: &Path, range: std::ops::Range<u64>) -> Result<Vec<u8>> {
+    ensure!(range.start <= range.end, "inverted range");
+    let mut f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    use std::io::Seek;
+    f.seek(std::io::SeekFrom::Start(range.start))?;
+    let len = (range.end - range.start) as usize;
+    let mut out = vec![0u8; len];
+    f.read_exact(&mut out).with_context(|| {
+        format!(
+            "reading [{}, {}) of {}",
+            range.start,
+            range.end,
+            path.display()
+        )
+    })?;
+    Ok(out)
+}
+
+/// Build a deterministic synthetic nest container: `rows x channels`
+/// quantized weights plus an fp32 bias, fully populated (w_low present)
+/// and ready to [`write`]/[`serialize`]. Used by the fleet demo, benches,
+/// and every artifact-independent test. Requires `2 <= h < n <= 16` so
+/// both sections pack.
+pub fn synthetic_nest(seed: u64, n: u8, h: u8, rows: usize, channels: usize) -> Result<Container> {
+    ensure!(h >= 2 && h < n && n <= 16, "need 2 <= h < n <= 16, got n={n} h={h}");
+    let mut rng = crate::util::prng::Rng::new(seed);
+    let w: Vec<f32> = (0..rows * channels)
+        .map(|_| (rng.normal() * 0.4) as f32)
+        .collect();
+    let scales = crate::quant::channel_scales(&w, channels, n)?;
+    let w_int = crate::quant::quantize_adaptive(&w, &scales, n);
+    let cfg = crate::nest::NestConfig::new(n, h)?;
+    let wh = crate::quant::nest_high(&w_int, channels, cfg, crate::quant::NestMethod::Adaptive);
+    let wl: Vec<i32> = w_int
+        .iter()
+        .zip(&wh)
+        .map(|(&wi, &whv)| crate::nest::low_of(wi, whv, cfg, true))
+        .collect();
+    let bias: Vec<f32> = (0..channels).map(|_| rng.f32()).collect();
+    Ok(Container {
+        kind: Kind::Nest,
+        n,
+        h,
+        act_bits: n,
+        name: format!("synthetic_{seed}"),
+        meta: format!("{{\"seed\":{seed}}}"),
+        tensors: vec![
+            Tensor {
+                name: "layer.w".into(),
+                shape: vec![rows, channels],
+                data: TensorData::Nest {
+                    scales,
+                    w_high: PackedTensor::pack(&wh, h)?,
+                    w_low: Some(PackedTensor::pack(&wl, cfg.low_bits())?),
+                },
+            },
+            Tensor {
+                name: "layer.b".into(),
+                shape: vec![channels],
+                data: TensorData::Fp32(bias),
+            },
+        ],
+        section_b_offset: 0,
+        file_len: 0,
+    })
+}
+
 // ---------------------------------------------------------------------------
 // writing
 // ---------------------------------------------------------------------------
@@ -410,53 +608,12 @@ pub fn ideal_split(counts: &[usize], n: u8, h: u8) -> (u64, u64) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::nest::{self, NestConfig};
+    use crate::nest;
     use crate::quant;
     use crate::util::prng::Rng;
 
     fn toy_container(seed: u64, n: u8, h: u8) -> Container {
-        let mut rng = Rng::new(seed);
-        let channels = 6;
-        let rows = 40;
-        let w: Vec<f32> = (0..rows * channels)
-            .map(|_| (rng.normal() * 0.4) as f32)
-            .collect();
-        let scales = quant::channel_scales(&w, channels, n).unwrap();
-        let w_int = quant::quantize_adaptive(&w, &scales, n);
-        let cfg = NestConfig::new(n, h).unwrap();
-        let wh = quant::nest_high(&w_int, channels, cfg, quant::NestMethod::Adaptive);
-        let wl: Vec<i32> = w_int
-            .iter()
-            .zip(&wh)
-            .map(|(&wi, &whv)| nest::low_of(wi, whv, cfg, true))
-            .collect();
-        let bias: Vec<f32> = (0..channels).map(|_| rng.f32()).collect();
-        Container {
-            kind: Kind::Nest,
-            n,
-            h,
-            act_bits: n,
-            name: "toy".into(),
-            meta: "{\"k\":1}".into(),
-            tensors: vec![
-                Tensor {
-                    name: "layer.w".into(),
-                    shape: vec![rows, channels],
-                    data: TensorData::Nest {
-                        scales,
-                        w_high: PackedTensor::pack(&wh, h).unwrap(),
-                        w_low: Some(PackedTensor::pack(&wl, n - h + 1).unwrap()),
-                    },
-                },
-                Tensor {
-                    name: "layer.b".into(),
-                    shape: vec![channels],
-                    data: TensorData::Fp32(bias),
-                },
-            ],
-            section_b_offset: 0,
-            file_len: 0,
-        }
+        synthetic_nest(seed, n, h, 40, 6).unwrap()
     }
 
     #[test]
@@ -466,7 +623,7 @@ mod tests {
         let back = parse(&bytes, false).unwrap();
         assert_eq!(back.kind, Kind::Nest);
         assert_eq!((back.n, back.h, back.act_bits), (8, 4, 8));
-        assert_eq!(back.name, "toy");
+        assert_eq!(back.name, "synthetic_1");
         assert_eq!(back.tensors.len(), 2);
         match (&c.tensors[0].data, &back.tensors[0].data) {
             (
@@ -580,6 +737,54 @@ mod tests {
             TensorData::Nest { w_low: Some(_), .. } => {}
             _ => panic!("w_low not attached"),
         }
+    }
+
+    #[test]
+    fn probe_matches_full_parse_and_reads_header_only() {
+        let dir = std::env::temp_dir().join(format!("nq_probe_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("probe.nq");
+        let c = toy_container(11, 8, 4);
+        let (total, a, b) = write(&path, &c).unwrap();
+        let idx = probe(&path).unwrap();
+        assert_eq!(idx.kind, Kind::Nest);
+        assert_eq!((idx.n, idx.h, idx.act_bits), (8, 4, 8));
+        assert_eq!(idx.name, "synthetic_11");
+        assert_eq!(idx.file_len, total);
+        assert_eq!(idx.section_a_bytes(), a);
+        assert_eq!(idx.section_b_bytes(), b);
+        let full = read(&path, true).unwrap();
+        assert_eq!(idx.section_b_offset, full.section_b_offset);
+    }
+
+    #[test]
+    fn read_range_section_bytes_match_full_file() {
+        let dir = std::env::temp_dir().join(format!("nq_range_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("range.nq");
+        let c = toy_container(12, 8, 5);
+        write(&path, &c).unwrap();
+        let whole = std::fs::read(&path).unwrap();
+        let idx = probe(&path).unwrap();
+        let a = read_range(&path, idx.section_a()).unwrap();
+        let b = read_range(&path, idx.section_b()).unwrap();
+        assert_eq!(a.len() as u64 + b.len() as u64, idx.file_len);
+        assert_eq!(&whole[..a.len()], &a[..]);
+        assert_eq!(&whole[a.len()..], &b[..]);
+        // a section-A blob parses as a part-bit container on its own
+        let part = parse(&a, true).unwrap();
+        assert_eq!(part.n, 8);
+        // and the section-B blob attaches to it losslessly
+        let mut part2 = parse(&a, true).unwrap();
+        // parse() sets file_len to the blob length; restore the real one
+        part2.file_len = idx.file_len;
+        attach_section_b(&mut part2, &b).unwrap();
+        match &part2.tensors[0].data {
+            TensorData::Nest { w_low: Some(_), .. } => {}
+            _ => panic!("w_low not attached from ranged read"),
+        }
+        // out-of-bounds ranges error
+        assert!(read_range(&path, 0..idx.file_len + 1).is_err());
     }
 
     #[test]

@@ -37,6 +37,27 @@ pub enum Decision {
     SwitchTo(Variant),
 }
 
+impl Decision {
+    /// Wire encoding used by the fleet server's advice replies.
+    pub fn wire(&self) -> &'static str {
+        match self {
+            Decision::Stay => "stay",
+            Decision::SwitchTo(Variant::FullBit) => "upgrade",
+            Decision::SwitchTo(Variant::PartBit) => "downgrade",
+        }
+    }
+
+    /// Parse the wire encoding back into a decision.
+    pub fn from_wire(s: &str) -> anyhow::Result<Decision> {
+        Ok(match s {
+            "stay" => Decision::Stay,
+            "upgrade" => Decision::SwitchTo(Variant::FullBit),
+            "downgrade" => Decision::SwitchTo(Variant::PartBit),
+            other => anyhow::bail!("unknown decision {other:?}"),
+        })
+    }
+}
+
 /// Stateful policy evaluator.
 #[derive(Debug, Clone)]
 pub struct PolicyState {
@@ -90,6 +111,18 @@ impl PolicyState {
 mod tests {
     use super::*;
     use crate::util::prng::Rng;
+
+    #[test]
+    fn decision_wire_roundtrip() {
+        for d in [
+            Decision::Stay,
+            Decision::SwitchTo(Variant::FullBit),
+            Decision::SwitchTo(Variant::PartBit),
+        ] {
+            assert_eq!(Decision::from_wire(d.wire()).unwrap(), d);
+        }
+        assert!(Decision::from_wire("sideways").is_err());
+    }
 
     #[test]
     fn downgrades_below_threshold() {

@@ -168,6 +168,29 @@ impl ResourceTrace {
         Self::new(levels)
     }
 
+    /// Heterogeneous per-device traces for a fleet simulation: each
+    /// device gets a phase-shifted solar day (devices in different time
+    /// zones / duty cycles) with bounded per-device noise, deterministic
+    /// in `seed`. Drives the fleet playback in examples, benches, and the
+    /// `fleet` subcommand.
+    pub fn fleet(devices: usize, steps: usize, seed: u64) -> Vec<ResourceTrace> {
+        let mut rng = crate::util::prng::Rng::new(seed);
+        (0..devices)
+            .map(|d| {
+                let phase = d as f64 / devices.max(1) as f64 * std::f64::consts::TAU;
+                let noise_amp = 0.02 + 0.06 * rng.f64();
+                let levels = (0..steps)
+                    .map(|i| {
+                        let t = i as f64 / steps.max(1) as f64 * std::f64::consts::TAU;
+                        let noise = noise_amp * (rng.f64() * 2.0 - 1.0);
+                        (0.55 - 0.45 * (t + phase).cos() + noise).clamp(0.0, 1.0)
+                    })
+                    .collect();
+                ResourceTrace::new(levels)
+            })
+            .collect()
+    }
+
     pub fn next_level(&mut self) -> Option<f64> {
         let v = self.levels.get(self.pos).copied();
         self.pos += 1;
@@ -249,6 +272,26 @@ mod tests {
         // charges up during the "day" (max well above start)
         let max = s.levels.iter().cloned().fold(0.0, f64::max);
         assert!(max > 0.9 && s.levels[0] < 0.2);
+    }
+
+    #[test]
+    fn fleet_traces_are_heterogeneous_and_deterministic() {
+        let a = ResourceTrace::fleet(4, 64, 42);
+        let b = ResourceTrace::fleet(4, 64, 42);
+        assert_eq!(a.len(), 4);
+        for (ta, tb) in a.iter().zip(&b) {
+            assert_eq!(ta.levels, tb.levels, "same seed must reproduce");
+            assert!(ta.levels.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        }
+        // phase shift: device 0 and device 2 are anti-phase, so they must
+        // differ substantially somewhere
+        let diff = a[0]
+            .levels
+            .iter()
+            .zip(&a[2].levels)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0, f64::max);
+        assert!(diff > 0.3, "max diff {diff}");
     }
 
     #[test]

@@ -1,0 +1,299 @@
+//! Zoo-wide section cache: one RAM budget, LRU eviction, section-granular
+//! `.nq` reads.
+//!
+//! N devices pulling M models must not re-read or duplicate section
+//! bytes server-side: the first request for a (container, section) pair
+//! reads exactly that byte range from disk ([`container::probe`] +
+//! [`container::read_range`] — never the whole file), and every
+//! concurrent or later request gets the same `Arc` bytes. Loading is
+//! **per-key single-flight**: racers for the same section wait on a
+//! condvar and then hit, while the disk read itself happens *outside*
+//! the cache lock — a cold multi-megabyte read never blocks hits on
+//! unrelated sections.
+//!
+//! Eviction is LRU over entries other than the one being inserted; a
+//! single section larger than the whole budget is allowed to overshoot
+//! (it is evicted as soon as something else lands), and in-flight
+//! transfers keep their bytes alive through the `Arc` regardless of
+//! eviction.
+
+use std::collections::{HashMap, HashSet};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::Result;
+
+use crate::container::{self, SectionIndex};
+
+use super::Section;
+
+/// Point-in-time cache statistics.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Bytes read from disk (== sum of missed section lengths).
+    pub disk_bytes: u64,
+    /// Bytes currently resident.
+    pub used_bytes: u64,
+    /// Entries currently resident.
+    pub entries: usize,
+}
+
+struct Entry {
+    bytes: Arc<Vec<u8>>,
+    last_used: u64,
+}
+
+struct Inner {
+    map: HashMap<(PathBuf, Section), Entry>,
+    indexes: HashMap<PathBuf, SectionIndex>,
+    /// Keys currently being read from disk by some thread (single-flight).
+    loading: HashSet<(PathBuf, Section)>,
+    used: u64,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    disk_bytes: u64,
+}
+
+/// Shared section cache with a fixed RAM budget.
+pub struct SectionCache {
+    budget: u64,
+    inner: Mutex<Inner>,
+    /// Signalled whenever a load finishes (either way).
+    loaded: Condvar,
+}
+
+impl SectionCache {
+    pub fn new(budget_bytes: u64) -> SectionCache {
+        SectionCache {
+            budget: budget_bytes,
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                indexes: HashMap::new(),
+                loading: HashSet::new(),
+                used: 0,
+                tick: 0,
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+                disk_bytes: 0,
+            }),
+            loaded: Condvar::new(),
+        }
+    }
+
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    /// Section layout of a container, probed once (header-only read) and
+    /// memoized for the zoo's lifetime.
+    pub fn index(&self, path: &Path) -> Result<SectionIndex> {
+        let mut guard = self.inner.lock().unwrap();
+        let g = &mut *guard;
+        if let Some(i) = g.indexes.get(path) {
+            return Ok(i.clone());
+        }
+        let idx = container::probe(path)?;
+        g.indexes.insert(path.to_path_buf(), idx.clone());
+        Ok(idx)
+    }
+
+    /// Bytes of one section, from cache or disk. The disk read happens
+    /// outside the lock; concurrent requesters of the SAME key wait and
+    /// then hit (single-flight), requesters of other keys proceed.
+    pub fn get(&self, path: &Path, section: Section) -> Result<Arc<Vec<u8>>> {
+        let key = (path.to_path_buf(), section);
+        let mut guard = self.inner.lock().unwrap();
+        loop {
+            let g = &mut *guard;
+            g.tick += 1;
+            let tick = g.tick;
+            if let Some(e) = g.map.get_mut(&key) {
+                e.last_used = tick;
+                g.hits += 1;
+                return Ok(Arc::clone(&e.bytes));
+            }
+            if g.loading.contains(&key) {
+                guard = self.loaded.wait(guard).unwrap();
+                continue;
+            }
+            break; // this thread becomes the loader for `key`
+        }
+        let cached_idx = guard.indexes.get(&key.0).cloned();
+        guard.loading.insert(key.clone());
+        drop(guard);
+
+        // ALL disk I/O — header probe included — happens unlocked; the
+        // `loading` entry keeps same-key racers parked on the condvar
+        let read = load_section(&key.0, section, cached_idx);
+
+        let mut guard = self.inner.lock().unwrap();
+        guard.loading.remove(&key);
+        self.loaded.notify_all();
+        // on error the waiters retry as loaders themselves
+        let (probed_idx, bytes) = read?;
+        if let Some(i) = probed_idx {
+            guard.indexes.insert(key.0.clone(), i);
+        }
+        let len = bytes.len() as u64;
+        let g = &mut *guard;
+        g.tick += 1;
+        let tick = g.tick;
+        g.misses += 1;
+        g.disk_bytes += len;
+        let arc = Arc::new(bytes);
+        g.map.insert(
+            key.clone(),
+            Entry {
+                bytes: Arc::clone(&arc),
+                last_used: tick,
+            },
+        );
+        g.used += len;
+        // LRU-evict until within budget, never evicting the entry just
+        // inserted (a section bigger than the budget overshoots once)
+        while g.used > self.budget && g.map.len() > 1 {
+            let victim = g
+                .map
+                .iter()
+                .filter(|(k, _)| **k != key)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| (*k).clone());
+            let Some(v) = victim else { break };
+            if let Some(e) = g.map.remove(&v) {
+                g.used -= e.bytes.len() as u64;
+                g.evictions += 1;
+            }
+        }
+        Ok(arc)
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let g = self.inner.lock().unwrap();
+        CacheStats {
+            hits: g.hits,
+            misses: g.misses,
+            evictions: g.evictions,
+            disk_bytes: g.disk_bytes,
+            used_bytes: g.used,
+            entries: g.map.len(),
+        }
+    }
+}
+
+/// The unlocked I/O half of [`SectionCache::get`]: probe the header if
+/// the index wasn't memoized yet, then read the section's byte range.
+/// Returns the newly probed index (for memoization) alongside the bytes.
+fn load_section(
+    path: &Path,
+    section: Section,
+    idx: Option<SectionIndex>,
+) -> Result<(Option<SectionIndex>, Vec<u8>)> {
+    let (idx, probed) = match idx {
+        Some(i) => (i, None),
+        None => {
+            let i = container::probe(path)?;
+            (i.clone(), Some(i))
+        }
+    };
+    let range = match section {
+        Section::A => idx.section_a(),
+        Section::B => idx.section_b(),
+    };
+    Ok((probed, container::read_range(path, range)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::synthetic_nest;
+
+    fn write_container(dir: &Path, name: &str, seed: u64) -> (PathBuf, u64, u64) {
+        let path = dir.join(format!("{name}.nq"));
+        let c = synthetic_nest(seed, 8, 4, 64, 8).unwrap();
+        let (_, a, b) = container::write(&path, &c).unwrap();
+        (path, a, b)
+    }
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("nq_cache_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn sections_read_once_then_hit() {
+        let dir = temp_dir("hit");
+        let (path, a_len, b_len) = write_container(&dir, "m", 1);
+        let cache = SectionCache::new(u64::MAX);
+        let a1 = cache.get(&path, Section::A).unwrap();
+        let a2 = cache.get(&path, Section::A).unwrap();
+        let b1 = cache.get(&path, Section::B).unwrap();
+        assert_eq!(a1.len() as u64, a_len);
+        assert_eq!(b1.len() as u64, b_len);
+        assert!(Arc::ptr_eq(&a1, &a2), "hit must share bytes");
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (1, 2, 0));
+        assert_eq!(s.disk_bytes, a_len + b_len);
+        assert_eq!(s.used_bytes, a_len + b_len);
+        assert_eq!(s.entries, 2);
+        // bytes match a direct disk read
+        let whole = std::fs::read(&path).unwrap();
+        assert_eq!(&whole[..a1.len()], &a1[..]);
+        assert_eq!(&whole[a1.len()..], &b1[..]);
+    }
+
+    #[test]
+    fn lru_eviction_respects_budget() {
+        let dir = temp_dir("lru");
+        let (p1, a1, _) = write_container(&dir, "m1", 2);
+        let (p2, a2, _) = write_container(&dir, "m2", 3);
+        let (p3, a3, _) = write_container(&dir, "m3", 4);
+        // budget fits two section-As but not three
+        let cache = SectionCache::new(a1 + a2 + a3 / 2);
+        cache.get(&p1, Section::A).unwrap();
+        cache.get(&p2, Section::A).unwrap();
+        cache.get(&p1, Section::A).unwrap(); // refresh m1 → m2 is LRU
+        cache.get(&p3, Section::A).unwrap(); // evicts m2
+        let s = cache.stats();
+        assert_eq!(s.evictions, 1);
+        assert!(s.used_bytes <= cache.budget());
+        assert_eq!(s.entries, 2);
+        // m1 must still be resident (it was refreshed)
+        cache.get(&p1, Section::A).unwrap();
+        assert_eq!(cache.stats().hits, 2);
+    }
+
+    #[test]
+    fn oversized_entry_overshoots_once_then_evicts() {
+        let dir = temp_dir("big");
+        let (p1, a1, _) = write_container(&dir, "m1", 5);
+        let (p2, _, _) = write_container(&dir, "m2", 6);
+        let cache = SectionCache::new(a1 / 2); // smaller than any section
+        let bytes = cache.get(&p1, Section::A).unwrap();
+        assert_eq!(cache.stats().entries, 1, "oversized entry admitted");
+        cache.get(&p2, Section::A).unwrap();
+        // the oversized entry was evicted, but our Arc keeps it alive
+        assert_eq!(bytes.len() as u64, a1);
+        let s = cache.stats();
+        assert!(s.evictions >= 1);
+        assert_eq!(s.entries, 1);
+    }
+
+    #[test]
+    fn index_memoized() {
+        let dir = temp_dir("idx");
+        let (path, a_len, b_len) = write_container(&dir, "m", 7);
+        let cache = SectionCache::new(u64::MAX);
+        let i1 = cache.index(&path).unwrap();
+        let i2 = cache.index(&path).unwrap();
+        assert_eq!(i1, i2);
+        assert_eq!(i1.section_a_bytes(), a_len);
+        assert_eq!(i1.section_b_bytes(), b_len);
+    }
+}

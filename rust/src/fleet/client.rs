@@ -1,0 +1,289 @@
+//! Device-side fleet client: the IoT endpoint of the distribution
+//! protocol. Pulls sections as acked chunk streams (resumable), reports
+//! resource levels, obeys upgrade/downgrade advice, and plays back a
+//! whole resource trace against a live server — the fleet-scale version
+//! of `coordinator::run_trace`.
+
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::coordinator::{Decision, Variant};
+use crate::device::{MemoryLedger, ResourceTrace};
+use crate::transport::{ack_frame, parse_chunk, recv_frame, send_frame, Frame, FrameKind, Meter};
+
+use super::{control, encode_pull, encode_section_req, Section};
+
+/// Outcome of one [`FleetClient::pull_section`] call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PullOutcome {
+    /// Total section length (learned from the first chunk header).
+    pub total_len: u64,
+    /// Offset reached (== `total_len` iff `completed`).
+    pub received_to: u64,
+    /// Payload bytes moved by THIS call (excludes earlier attempts).
+    pub payload_bytes: u64,
+    /// Chunks received and acked by this call.
+    pub chunks: usize,
+    /// Whether the section is now fully received.
+    pub completed: bool,
+}
+
+/// One device's connection to the fleet server.
+pub struct FleetClient {
+    sock: TcpStream,
+    meter: Meter,
+    pub device_id: String,
+}
+
+impl FleetClient {
+    /// Connect and register `device_id`. Reconnecting with the same id
+    /// resumes the server-side session (residency, policy, resume
+    /// offsets).
+    pub fn connect(addr: SocketAddr, device_id: &str, timeout: Duration) -> Result<FleetClient> {
+        let sock = TcpStream::connect(addr).context("connect fleet server")?;
+        sock.set_read_timeout(Some(timeout))?;
+        let mut c = FleetClient {
+            sock,
+            meter: Meter::default(),
+            device_id: device_id.to_string(),
+        };
+        let reply = c.request(control("hello", device_id.as_bytes().to_vec()))?;
+        ensure!(reply.name == "ok", "hello rejected: {:?}", reply.name);
+        Ok(c)
+    }
+
+    /// Wire bytes (sent, received) from this device's perspective.
+    pub fn wire(&self) -> (u64, u64) {
+        self.meter.snapshot()
+    }
+
+    fn request(&mut self, frame: Frame) -> Result<Frame> {
+        send_frame(&mut self.sock, &frame, &self.meter)?;
+        let (reply, _) = recv_frame(&mut self.sock, &self.meter)?;
+        if reply.kind == FrameKind::Control && reply.name == "error" {
+            bail!("server error: {}", String::from_utf8_lossy(&reply.payload));
+        }
+        Ok(reply)
+    }
+
+    /// Ask the server where a previous transfer of (model, section) got
+    /// to — the resume offset (0 when never started or dropped).
+    pub fn server_offset(&mut self, model: &str, section: Section) -> Result<u64> {
+        let reply = self.request(control("offset", encode_section_req(model, section)))?;
+        ensure!(reply.name == "offset", "unexpected reply {:?}", reply.name);
+        ensure!(reply.payload.len() == 8, "bad offset payload");
+        Ok(u64::from_le_bytes(reply.payload[..].try_into().unwrap()))
+    }
+
+    /// Report a resource level and get the server's policy decision.
+    pub fn report_level(&mut self, level: f64) -> Result<Decision> {
+        let reply = self.request(control("level", level.to_le_bytes().to_vec()))?;
+        ensure!(reply.name == "advice", "unexpected reply {:?}", reply.name);
+        Decision::from_wire(std::str::from_utf8(&reply.payload)?)
+    }
+
+    /// Server-side session state for this device: current policy variant
+    /// and whether the server believes Section B is fully resident.
+    pub fn server_state(&mut self, model: &str) -> Result<(Variant, bool)> {
+        let reply = self.request(control("state", model.as_bytes().to_vec()))?;
+        ensure!(reply.name == "state", "unexpected reply {:?}", reply.name);
+        ensure!(reply.payload.len() == 2, "bad state payload");
+        let variant = match reply.payload[0] {
+            0 => Variant::PartBit,
+            1 => Variant::FullBit,
+            v => bail!("unknown variant tag {v}"),
+        };
+        Ok((variant, reply.payload[1] != 0))
+    }
+
+    /// Tell the server this device paged a section out (downgrade).
+    pub fn notify_dropped(&mut self, model: &str, section: Section) -> Result<()> {
+        let reply = self.request(control("dropped", encode_section_req(model, section)))?;
+        ensure!(reply.name == "ok", "unexpected reply {:?}", reply.name);
+        Ok(())
+    }
+
+    /// Pull one section starting at `offset`, acking each chunk into
+    /// `sink`, which grows only as data actually arrives (the header's
+    /// `total_len` is untrusted and never drives an allocation); earlier
+    /// bytes from a previous attempt are preserved.
+    ///
+    /// `max_chunks` bounds how many chunks to ack before returning early
+    /// with `completed == false` — tests and the CLI use it to simulate a
+    /// device dying mid-transfer (drop the client afterwards to cut the
+    /// connection; the server keeps the last acked offset for resume).
+    pub fn pull_section(
+        &mut self,
+        model: &str,
+        section: Section,
+        offset: u64,
+        sink: &mut Vec<u8>,
+        max_chunks: Option<usize>,
+    ) -> Result<PullOutcome> {
+        // a resume may only continue where the sink left off — pulling
+        // from beyond it would zero-fill the gap and silently corrupt
+        // the reassembled section
+        ensure!(
+            offset <= sink.len() as u64,
+            "pull offset {offset} beyond sink length {} (restart from 0 or the sink's end)",
+            sink.len()
+        );
+        send_frame(
+            &mut self.sock,
+            &control("pull", encode_pull(model, section, offset)),
+            &self.meter,
+        )?;
+        let mut pos = offset;
+        let mut chunks = 0usize;
+        loop {
+            let (frame, _) = recv_frame(&mut self.sock, &self.meter)?;
+            if frame.kind == FrameKind::Control && frame.name == "error" {
+                bail!("server error: {}", String::from_utf8_lossy(&frame.payload));
+            }
+            let (header, data) = parse_chunk(&frame)?;
+            ensure!(
+                header.offset == pos,
+                "chunk at {}, expected {pos}",
+                header.offset
+            );
+            let end = header.end(data.len());
+            // grow with received bytes only — a lying total_len cannot
+            // force a large allocation (cf. recv_frame's capped reads)
+            if (sink.len() as u64) < end {
+                sink.resize(end as usize, 0);
+            }
+            sink[pos as usize..end as usize].copy_from_slice(data);
+            send_frame(&mut self.sock, &ack_frame(header.xfer_id, end), &self.meter)?;
+            pos = end;
+            chunks += 1;
+            let completed = pos >= header.total_len;
+            if completed || max_chunks.is_some_and(|k| chunks >= k) {
+                return Ok(PullOutcome {
+                    total_len: header.total_len,
+                    received_to: pos,
+                    payload_bytes: pos - offset,
+                    chunks,
+                    completed,
+                });
+            }
+        }
+    }
+
+    /// Resume (or start) a section pull from the server's recorded ack
+    /// offset — clamped to what `sink` actually holds, so a device that
+    /// lost its local copy (fresh process, empty sink) re-pulls the real
+    /// bytes instead of trusting the server's ack history.
+    pub fn resume_section(
+        &mut self,
+        model: &str,
+        section: Section,
+        sink: &mut Vec<u8>,
+    ) -> Result<PullOutcome> {
+        let offset = self
+            .server_offset(model, section)?
+            .min(sink.len() as u64);
+        self.pull_section(model, section, offset, sink, None)
+    }
+
+    /// Shut the whole server down (tests / CLI teardown).
+    pub fn stop_server(&mut self) -> Result<()> {
+        send_frame(&mut self.sock, &control("stop", Vec::new()), &self.meter)?;
+        Ok(())
+    }
+
+    /// Play a resource trace against the server: provision Section A
+    /// (part-bit launch), then follow upgrade/downgrade advice, paging
+    /// Section B in (resumable pull) and out (drop + notify) against the
+    /// device's memory ledger. Returns the lifecycle report.
+    pub fn playback(
+        &mut self,
+        model: &str,
+        mut trace: ResourceTrace,
+        ledger: &mut MemoryLedger,
+    ) -> Result<PlaybackReport> {
+        let mut sec_a = Vec::new();
+        let mut sec_b = Vec::new();
+        let out = self.pull_section(model, Section::A, 0, &mut sec_a, None)?;
+        ensure!(out.completed, "section A pull incomplete");
+        ledger.page_in(out.total_len).context("section A page-in")?;
+        let mut report = PlaybackReport {
+            section_a_bytes: out.total_len,
+            payload_pulled: out.payload_bytes,
+            ..PlaybackReport::default()
+        };
+        let mut b_len = 0u64;
+        let mut have_b = false;
+        // reconcile with the server's persisted session: a reconnecting
+        // device whose policy state is already full-bit must hold Section
+        // B before following further advice (resume_section re-pulls the
+        // bytes this process doesn't actually have)
+        let (variant, _) = self.server_state(model)?;
+        if variant == Variant::FullBit {
+            let out = self.resume_section(model, Section::B, &mut sec_b)?;
+            ensure!(out.completed, "section B reconcile incomplete");
+            b_len = out.total_len;
+            report.section_b_bytes = b_len;
+            report.payload_pulled += out.payload_bytes;
+            ledger.page_in(b_len).context("reconcile page-in")?;
+            have_b = true;
+        }
+        while let Some(level) = trace.next_level() {
+            report.steps += 1;
+            match self.report_level(level.clamp(0.0, 1.0))? {
+                Decision::Stay => {}
+                Decision::SwitchTo(Variant::FullBit) => {
+                    let out = self.resume_section(model, Section::B, &mut sec_b)?;
+                    ensure!(out.completed, "section B pull incomplete");
+                    b_len = out.total_len;
+                    report.section_b_bytes = b_len;
+                    report.payload_pulled += out.payload_bytes;
+                    ledger.page_in(b_len).context("upgrade page-in")?;
+                    have_b = true;
+                    report.upgrades += 1;
+                }
+                Decision::SwitchTo(Variant::PartBit) => {
+                    ensure!(have_b, "downgrade advice without section B resident");
+                    ledger.page_out(b_len).context("downgrade page-out")?;
+                    self.notify_dropped(model, Section::B)?;
+                    have_b = false;
+                    report.downgrades += 1;
+                }
+            }
+        }
+        report.final_variant = if have_b {
+            Variant::FullBit
+        } else {
+            Variant::PartBit
+        };
+        Ok(report)
+    }
+}
+
+/// Lifecycle summary of one device's [`FleetClient::playback`].
+#[derive(Debug, Clone, Copy)]
+pub struct PlaybackReport {
+    pub steps: usize,
+    pub upgrades: u64,
+    pub downgrades: u64,
+    pub section_a_bytes: u64,
+    pub section_b_bytes: u64,
+    /// Section payload bytes actually transferred (A + every B page-in).
+    pub payload_pulled: u64,
+    pub final_variant: Variant,
+}
+
+impl Default for PlaybackReport {
+    fn default() -> Self {
+        PlaybackReport {
+            steps: 0,
+            upgrades: 0,
+            downgrades: 0,
+            section_a_bytes: 0,
+            section_b_bytes: 0,
+            payload_pulled: 0,
+            final_variant: Variant::PartBit,
+        }
+    }
+}

@@ -1,0 +1,740 @@
+//! Fleet distribution subsystem (S10): the edge-side serving layer that
+//! turns the single-device NestQuant reproduction into a multi-tenant
+//! system (§4.3.1 at fleet scale).
+//!
+//! ```text
+//!                        ┌────────────────────────────────────────┐
+//!   device 0 ──framed────│ FleetServer                            │
+//!   device 1 ──TCP───────│   SessionTable   (residency + policy)  │
+//!      ⋮                 │   SectionCache   (zoo-wide RAM budget) │
+//!   device N ────────────│   Zoo            (model id → .nq path) │
+//!                        └────────────────────────────────────────┘
+//! ```
+//!
+//! Three properties the paper's one-device prototype lacks:
+//!
+//! * **Tracked residency** — the server knows which (arch, n, h)
+//!   container and which sections every device holds, so upgrade and
+//!   downgrade advice (driven through the existing
+//!   `coordinator::policy` hysteresis) moves only Section-B deltas.
+//! * **Resumable delta paging** — section transfers are chunked
+//!   ([`transport::ChunkHeader`]) with per-chunk acks; an interrupted
+//!   page-in restarts from the last acked chunk, not byte zero.
+//! * **Zoo-wide section cache** — one RAM budget over section-granular
+//!   `.nq` reads ([`container::probe`] + [`container::read_range`]), so
+//!   N devices pulling M models never re-read or duplicate section
+//!   bytes server-side.
+//!
+//! Wire protocol (all frames from `transport`):
+//!
+//! | client → server                  | server → client                |
+//! |----------------------------------|--------------------------------|
+//! | `Control "hello"` device id      | `Control "ok"`                 |
+//! | `Control "level"` f64 LE         | `Control "advice"` decision    |
+//! | `Control "offset"` section+model | `Control "offset"` u64 LE      |
+//! | `Control "state"` model          | `Control "state"` variant+held |
+//! | `Control "pull"` sec+off+model   | `Chunk` stream (ack each)      |
+//! | `Control "dropped"` sec+model    | `Control "ok"`                 |
+//! | `Control "stop"`                 | — (server shuts down)          |
+
+pub mod cache;
+pub mod client;
+pub mod session;
+
+use std::collections::BTreeMap;
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::coordinator::metrics::LatencyHisto;
+use crate::coordinator::SwitchPolicy;
+use crate::transport::{
+    chunk_frame, parse_ack, recv_frame, send_frame, ChunkHeader, Frame, FrameKind, Meter,
+};
+
+pub use cache::{CacheStats, SectionCache};
+pub use client::{FleetClient, PlaybackReport, PullOutcome};
+pub use session::{SessionSummary, SessionTable, TransferProgress};
+
+/// Which `.nq` section a transfer moves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Section {
+    /// Header + scales + packed `w_high` + fp32 params (part-bit launch).
+    A,
+    /// Packed `w_low` tail (the upgrade delta).
+    B,
+}
+
+impl Section {
+    pub fn tag(self) -> u8 {
+        match self {
+            Section::A => 0,
+            Section::B => 1,
+        }
+    }
+
+    pub fn from_tag(t: u8) -> Result<Section> {
+        Ok(match t {
+            0 => Section::A,
+            1 => Section::B,
+            _ => bail!("unknown section tag {t}"),
+        })
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Section::A => "A",
+            Section::B => "B",
+        }
+    }
+}
+
+impl std::fmt::Display for Section {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// The model zoo: model id → `.nq` container path. Immutable once the
+/// server starts; section layouts are probed lazily by the cache.
+#[derive(Debug, Clone, Default)]
+pub struct Zoo {
+    entries: BTreeMap<String, PathBuf>,
+}
+
+impl Zoo {
+    pub fn new() -> Zoo {
+        Zoo::default()
+    }
+
+    /// Register one container under `id`.
+    pub fn add(&mut self, id: impl Into<String>, path: impl Into<PathBuf>) {
+        self.entries.insert(id.into(), path.into());
+    }
+
+    /// Register every `*.nq` file in `dir` under its file stem; returns
+    /// how many were added.
+    pub fn scan_dir(&mut self, dir: &Path) -> Result<usize> {
+        let mut added = 0;
+        for entry in
+            std::fs::read_dir(dir).with_context(|| format!("scanning {}", dir.display()))?
+        {
+            let p = entry?.path();
+            if p.extension().is_some_and(|x| x == "nq") {
+                if let Some(stem) = p.file_stem().and_then(|s| s.to_str()) {
+                    self.entries.insert(stem.to_string(), p.clone());
+                    added += 1;
+                }
+            }
+        }
+        Ok(added)
+    }
+
+    /// Like [`Zoo::scan_dir`], but probe each container and register only
+    /// nest-kind ones (the fleet's paging protocol moves Section-B
+    /// deltas, which fp32/mono containers don't have). Unreadable files
+    /// are skipped.
+    pub fn scan_nest_dir(&mut self, dir: &Path) -> Result<usize> {
+        let mut added = 0;
+        for entry in
+            std::fs::read_dir(dir).with_context(|| format!("scanning {}", dir.display()))?
+        {
+            let p = entry?.path();
+            if p.extension().is_some_and(|x| x == "nq") {
+                let Ok(idx) = crate::container::probe(&p) else { continue };
+                if idx.kind != crate::container::Kind::Nest {
+                    continue;
+                }
+                if let Some(stem) = p.file_stem().and_then(|s| s.to_str()) {
+                    self.entries.insert(stem.to_string(), p.clone());
+                    added += 1;
+                }
+            }
+        }
+        Ok(added)
+    }
+
+    pub fn path(&self, id: &str) -> Result<&Path> {
+        self.entries
+            .get(id)
+            .map(PathBuf::as_path)
+            .ok_or_else(|| anyhow::anyhow!("unknown model {id:?} (zoo has {})", self.entries.len()))
+    }
+
+    pub fn ids(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(String::as_str)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Fleet server configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetConfig {
+    /// Bytes per transfer chunk (the resume granularity).
+    pub chunk_bytes: usize,
+    /// RAM budget of the zoo-wide section cache.
+    pub cache_budget_bytes: u64,
+    /// How long the server waits for a chunk ack before declaring the
+    /// device dead (the transfer stays resumable from the last ack).
+    pub ack_timeout: Duration,
+    /// Hysteresis switching policy applied per device session.
+    pub policy: SwitchPolicy,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            chunk_bytes: 64 << 10,
+            cache_budget_bytes: 64 << 20,
+            ack_timeout: Duration::from_secs(10),
+            policy: SwitchPolicy::default(),
+        }
+    }
+}
+
+/// Build `count` synthetic INT(8|4) containers in `dir` (sizes varied
+/// per model) and register them as `synth_0..`: the offline zoo used by
+/// the `fleet` subcommand and the `fleet_ota` example when `make
+/// artifacts` hasn't run.
+pub fn synthetic_zoo(dir: &Path, count: usize, seed: u64) -> Result<Zoo> {
+    std::fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+    let mut zoo = Zoo::new();
+    for i in 0..count.max(1) {
+        let id = format!("synth_{i}");
+        let path = dir.join(format!("{id}.nq"));
+        // big enough that Section B spans several chunks even at the
+        // default 64 KiB chunk size (the kill/resume demo relies on it)
+        let rows = 4096 + 2048 * (i % 3);
+        let c = crate::container::synthetic_nest(seed + i as u64, 8, 4, rows, 64)?;
+        crate::container::write(&path, &c)?;
+        zoo.add(id, path);
+    }
+    Ok(zoo)
+}
+
+/// Outcome of [`demo_kill_resume`].
+#[derive(Debug, Clone, Copy)]
+pub struct KillResumeReport {
+    /// The interrupted pull (what the victim acked before dying).
+    pub killed: client::PullOutcome,
+    /// Where the server said to resume (== the victim's last ack once
+    /// the server has processed it).
+    pub resume_from: u64,
+    /// The resumed pull that completed the section.
+    pub resumed: client::PullOutcome,
+    /// Device-side wire bytes (sent, received) across both connections.
+    pub wire: (u64, u64),
+}
+
+/// Shared demo driver: kill a Section-B pull after `kill_after_chunks`
+/// acked chunks (by dropping the connection), reconnect under the same
+/// device id, wait (bounded) for the server to process the final ack,
+/// and resume from the recorded offset. Used by the `fleet` subcommand
+/// and the `fleet_ota` example.
+pub fn demo_kill_resume(
+    addr: SocketAddr,
+    device_id: &str,
+    model: &str,
+    kill_after_chunks: usize,
+    timeout: Duration,
+) -> Result<KillResumeReport> {
+    let mut sink = Vec::new();
+    let mut victim = client::FleetClient::connect(addr, device_id, timeout)?;
+    let killed = victim.pull_section(model, Section::B, 0, &mut sink, Some(kill_after_chunks))?;
+    let victim_wire = victim.wire();
+    drop(victim); // cut the connection mid-transfer
+
+    let mut back = client::FleetClient::connect(addr, device_id, timeout)?;
+    // bounded wait: the server may still be processing the final ack
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let mut resume_from = back.server_offset(model, Section::B)?;
+    while resume_from != killed.received_to && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(10));
+        resume_from = back.server_offset(model, Section::B)?;
+    }
+    let resumed = back.pull_section(
+        model,
+        Section::B,
+        resume_from.min(sink.len() as u64),
+        &mut sink,
+        None,
+    )?;
+    let back_wire = back.wire();
+    Ok(KillResumeReport {
+        killed,
+        resume_from,
+        resumed,
+        wire: (victim_wire.0 + back_wire.0, victim_wire.1 + back_wire.1),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// request codecs
+// ---------------------------------------------------------------------------
+
+pub(crate) fn encode_pull(model: &str, section: Section, offset: u64) -> Vec<u8> {
+    let mut p = Vec::with_capacity(9 + model.len());
+    p.push(section.tag());
+    p.extend_from_slice(&offset.to_le_bytes());
+    p.extend_from_slice(model.as_bytes());
+    p
+}
+
+pub(crate) fn decode_pull(payload: &[u8]) -> Result<(Section, u64, String)> {
+    ensure!(payload.len() > 9, "short pull request");
+    let section = Section::from_tag(payload[0])?;
+    let offset = u64::from_le_bytes(payload[1..9].try_into().unwrap());
+    let model = String::from_utf8(payload[9..].to_vec()).context("model id")?;
+    Ok((section, offset, model))
+}
+
+pub(crate) fn encode_section_req(model: &str, section: Section) -> Vec<u8> {
+    let mut p = Vec::with_capacity(1 + model.len());
+    p.push(section.tag());
+    p.extend_from_slice(model.as_bytes());
+    p
+}
+
+pub(crate) fn decode_section_req(payload: &[u8]) -> Result<(Section, String)> {
+    ensure!(payload.len() > 1, "short section request");
+    let section = Section::from_tag(payload[0])?;
+    let model = String::from_utf8(payload[1..].to_vec()).context("model id")?;
+    Ok((section, model))
+}
+
+pub(crate) fn control(name: &str, payload: Vec<u8>) -> Frame {
+    Frame {
+        kind: FrameKind::Control,
+        name: name.to_string(),
+        payload,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// server
+// ---------------------------------------------------------------------------
+
+/// Poll interval for idle connections (stop-flag observation latency).
+const IDLE_POLL: Duration = Duration::from_millis(100);
+
+/// Read timeouts that mean "no data yet", as opposed to a dead peer.
+fn is_io_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+#[derive(Clone)]
+struct Ctx {
+    addr: SocketAddr,
+    zoo: Arc<Zoo>,
+    cache: Arc<SectionCache>,
+    sessions: Arc<SessionTable>,
+    meter: Arc<Meter>,
+    /// Per-transfer wall latency (reuses the coordinator's histogram).
+    xfer_latency: Arc<LatencyHisto>,
+    xfer_ids: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+    config: FleetConfig,
+}
+
+/// The running fleet server: accept loop + one handler thread per device
+/// connection, all sharing the zoo, the section cache, and the session
+/// table.
+pub struct FleetServer;
+
+/// Handle to a running [`FleetServer`]; stopping joins every thread so
+/// wire accounting is exact afterwards.
+pub struct FleetHandle {
+    pub addr: SocketAddr,
+    pub meter: Arc<Meter>,
+    pub cache: Arc<SectionCache>,
+    pub sessions: Arc<SessionTable>,
+    /// Wall latency of completed section transfers.
+    pub xfer_latency: Arc<LatencyHisto>,
+    stop: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl FleetServer {
+    /// Start serving `zoo` on a fresh localhost port.
+    pub fn start(zoo: Zoo, config: FleetConfig) -> Result<FleetHandle> {
+        ensure!(
+            config.chunk_bytes > 0,
+            "chunk_bytes must be positive (zero would live-lock transfers)"
+        );
+        let listener = TcpListener::bind("127.0.0.1:0").context("bind fleet server")?;
+        let addr = listener.local_addr()?;
+        let ctx = Ctx {
+            addr,
+            zoo: Arc::new(zoo),
+            cache: Arc::new(SectionCache::new(config.cache_budget_bytes)),
+            sessions: Arc::new(SessionTable::new(config.policy)),
+            meter: Arc::new(Meter::default()),
+            xfer_latency: Arc::new(LatencyHisto::default()),
+            xfer_ids: Arc::new(AtomicU64::new(0)),
+            stop: Arc::new(AtomicBool::new(false)),
+            config,
+        };
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+
+        let actx = ctx.clone();
+        let aconns = Arc::clone(&conns);
+        let acceptor = std::thread::Builder::new()
+            .name("nq-fleet-acceptor".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if actx.stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(sock) = conn else { continue };
+                    let cctx = actx.clone();
+                    let handle = std::thread::spawn(move || {
+                        let _ = handle_connection(sock, cctx);
+                    });
+                    // reap finished handlers so a long-lived server with
+                    // reconnecting devices doesn't accumulate dead handles
+                    let mut conns = aconns.lock().unwrap();
+                    conns.retain(|h| !h.is_finished());
+                    conns.push(handle);
+                }
+            })?;
+
+        Ok(FleetHandle {
+            addr,
+            meter: Arc::clone(&ctx.meter),
+            cache: Arc::clone(&ctx.cache),
+            sessions: Arc::clone(&ctx.sessions),
+            xfer_latency: Arc::clone(&ctx.xfer_latency),
+            stop: ctx.stop,
+            acceptor: Some(acceptor),
+            conns,
+        })
+    }
+}
+
+impl FleetHandle {
+    /// Stop the server and join every thread (handler threads observe the
+    /// stop flag within [`IDLE_POLL`] when idle).
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr); // poke accept()
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        let handles: Vec<_> = self.conns.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for FleetHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn handle_connection(sock: TcpStream, ctx: Ctx) -> Result<()> {
+    use std::io::BufRead;
+    sock.set_read_timeout(Some(IDLE_POLL))?;
+    let mut writer = sock.try_clone()?;
+    let mut reader = BufReader::new(sock);
+    let mut device: Option<String> = None;
+    loop {
+        if ctx.stop.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        // idle wait: poll (without consuming) until the first bytes of a
+        // frame arrive, so the stop flag is observed every IDLE_POLL...
+        match reader.fill_buf() {
+            Ok([]) => return Ok(()), // EOF: client hung up
+            Ok(_) => {}
+            Err(ref e) if is_io_timeout(e) => continue,
+            Err(_) => return Ok(()),
+        }
+        // ...then read the whole frame under the generous ack timeout, so
+        // a slow-but-healthy peer whose frame spans >IDLE_POLL on the
+        // wire is not mistaken for a dead one
+        reader.get_ref().set_read_timeout(Some(ctx.config.ack_timeout))?;
+        let received = recv_frame(&mut reader, &ctx.meter);
+        reader.get_ref().set_read_timeout(Some(IDLE_POLL))?;
+        let frame = match received {
+            Ok((f, _)) => f,
+            Err(_) => return Ok(()), // dead peer / protocol failure
+        };
+        if frame.kind != FrameKind::Control {
+            if send_frame(&mut writer, &control("error", b"expected control frame".to_vec()), &ctx.meter).is_err() {
+                return Ok(());
+            }
+            continue;
+        }
+        match frame.name.as_str() {
+            "stop" => {
+                ctx.stop.store(true, Ordering::SeqCst);
+                // unblock the acceptor so the listener actually closes
+                // (FleetHandle::stop pokes too, but a bare stop_server()
+                // must suffice on its own)
+                let _ = TcpStream::connect(ctx.addr);
+                return Ok(());
+            }
+            "hello" => {
+                match String::from_utf8(frame.payload.clone()).ok().filter(|s| !s.is_empty()) {
+                    Some(id) => {
+                        ctx.sessions.hello(&id);
+                        device = Some(id);
+                        if send_frame(&mut writer, &control("ok", Vec::new()), &ctx.meter).is_err() {
+                            return Ok(());
+                        }
+                    }
+                    None => {
+                        if send_frame(&mut writer, &control("error", b"bad device id".to_vec()), &ctx.meter).is_err() {
+                            return Ok(());
+                        }
+                    }
+                }
+            }
+            cmd => {
+                let Some(dev) = device.clone() else {
+                    if send_frame(&mut writer, &control("error", b"hello required".to_vec()), &ctx.meter).is_err() {
+                        return Ok(());
+                    }
+                    continue;
+                };
+                let mut streamed = false;
+                if let Err(e) =
+                    dispatch(cmd, &frame.payload, &dev, &mut writer, &mut reader, &ctx, &mut streamed)
+                {
+                    if streamed {
+                        // the peer died mid-transfer; residency already
+                        // records the last acked chunk for resume
+                        return Ok(());
+                    }
+                    let msg = format!("{e:#}");
+                    if send_frame(&mut writer, &control("error", msg.into_bytes()), &ctx.meter).is_err() {
+                        return Ok(());
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn dispatch(
+    cmd: &str,
+    payload: &[u8],
+    device: &str,
+    writer: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    ctx: &Ctx,
+    streamed: &mut bool,
+) -> Result<()> {
+    match cmd {
+        "level" => {
+            ensure!(payload.len() == 8, "level payload must be 8 bytes");
+            let level = f64::from_le_bytes(payload.try_into().unwrap());
+            let decision = ctx.sessions.decide(device, level)?;
+            send_frame(
+                writer,
+                &control("advice", decision.wire().as_bytes().to_vec()),
+                &ctx.meter,
+            )?;
+            Ok(())
+        }
+        "offset" => {
+            let (section, model) = decode_section_req(payload)?;
+            let acked = ctx.sessions.acked(device, &model, section);
+            send_frame(
+                writer,
+                &control("offset", acked.to_le_bytes().to_vec()),
+                &ctx.meter,
+            )?;
+            Ok(())
+        }
+        "dropped" => {
+            let (section, model) = decode_section_req(payload)?;
+            ctx.sessions.drop_section(device, &model, section)?;
+            send_frame(writer, &control("ok", Vec::new()), &ctx.meter)?;
+            Ok(())
+        }
+        "state" => {
+            // payload = model id; reply = [variant tag, section-B complete]
+            let model = std::str::from_utf8(payload).context("model id")?;
+            let variant = ctx.sessions.variant(device)?;
+            let complete = ctx
+                .sessions
+                .progress(device, model, Section::B)
+                .is_some_and(|p| p.complete);
+            let tag = match variant {
+                crate::coordinator::Variant::PartBit => 0u8,
+                crate::coordinator::Variant::FullBit => 1u8,
+            };
+            send_frame(
+                writer,
+                &control("state", vec![tag, complete as u8]),
+                &ctx.meter,
+            )?;
+            Ok(())
+        }
+        "pull" => {
+            let (section, offset, model) = decode_pull(payload)?;
+            serve_pull(device, &model, section, offset, writer, reader, ctx, streamed)
+        }
+        other => bail!("unknown command {other:?}"),
+    }
+}
+
+/// Stream one section to the device as acked chunks, resuming at
+/// `offset`. Residency bookkeeping happens per chunk, so the last acked
+/// offset survives a dead connection.
+#[allow(clippy::too_many_arguments)]
+fn serve_pull(
+    device: &str,
+    model: &str,
+    section: Section,
+    offset: u64,
+    writer: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    ctx: &Ctx,
+    streamed: &mut bool,
+) -> Result<()> {
+    let path = ctx.zoo.path(model)?;
+    let blob = ctx.cache.get(path, section)?;
+    let total = blob.len() as u64;
+    ensure!(
+        offset <= total,
+        "pull offset {offset} beyond section {section} length {total}"
+    );
+    let xfer_id = ctx.xfer_ids.fetch_add(1, Ordering::SeqCst) + 1;
+    ctx.sessions.begin(device, model, section, total, offset)?;
+
+    // a dead peer must not hold this thread forever: bound the ack wait
+    reader.get_ref().set_read_timeout(Some(ctx.config.ack_timeout))?;
+    let t0 = Instant::now();
+    let result = stream_chunks(
+        device, model, section, offset, xfer_id, &blob, writer, reader, ctx, streamed,
+    );
+    // restore the idle poll regardless of how the transfer ended
+    let _ = reader.get_ref().set_read_timeout(Some(IDLE_POLL));
+    if result.is_ok() {
+        ctx.xfer_latency.record(t0.elapsed());
+    }
+    result
+}
+
+/// The acked chunk loop of [`serve_pull`]; sets `streamed` once bytes
+/// are on the wire so the caller can tell protocol errors (reply) from a
+/// dead peer mid-transfer (hang up, keep the resume point).
+#[allow(clippy::too_many_arguments)]
+fn stream_chunks(
+    device: &str,
+    model: &str,
+    section: Section,
+    offset: u64,
+    xfer_id: u64,
+    blob: &[u8],
+    writer: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    ctx: &Ctx,
+    streamed: &mut bool,
+) -> Result<()> {
+    let total = blob.len() as u64;
+    let mut pos = offset;
+    loop {
+        let end = (pos + ctx.config.chunk_bytes as u64).min(total);
+        let header = ChunkHeader {
+            xfer_id,
+            offset: pos,
+            total_len: total,
+        };
+        *streamed = true;
+        send_frame(
+            writer,
+            &chunk_frame(model, header, &blob[pos as usize..end as usize]),
+            &ctx.meter,
+        )?;
+        ctx.sessions.record_send(device, model, section, pos, end)?;
+        let (ack, _) = recv_frame(reader, &ctx.meter).context("awaiting chunk ack")?;
+        let (axfer, aend) = parse_ack(&ack)?;
+        ensure!(axfer == xfer_id, "ack for transfer {axfer}, expected {xfer_id}");
+        ensure!(aend == end, "acked {aend}, expected {end}");
+        ctx.sessions.record_ack(device, model, section, aend)?;
+        pos = end;
+        if pos >= total {
+            return Ok(());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pull_request_roundtrip() {
+        let p = encode_pull("cnn_m_n8h4", Section::B, 123_456);
+        let (s, o, m) = decode_pull(&p).unwrap();
+        assert_eq!((s, o, m.as_str()), (Section::B, 123_456, "cnn_m_n8h4"));
+        assert!(decode_pull(&p[..5]).is_err());
+    }
+
+    #[test]
+    fn section_request_roundtrip() {
+        let p = encode_section_req("vit_s", Section::A);
+        let (s, m) = decode_section_req(&p).unwrap();
+        assert_eq!((s, m.as_str()), (Section::A, "vit_s"));
+        assert!(decode_section_req(&[]).is_err());
+        assert!(Section::from_tag(9).is_err());
+    }
+
+    #[test]
+    fn zoo_registry() {
+        let dir = std::env::temp_dir().join(format!("nq_zoo_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("m1.nq"), b"x").unwrap();
+        std::fs::write(dir.join("m2.nq"), b"x").unwrap();
+        std::fs::write(dir.join("notes.txt"), b"x").unwrap();
+        let mut zoo = Zoo::new();
+        let added = zoo.scan_dir(&dir).unwrap();
+        assert_eq!(added, 2);
+        assert_eq!(zoo.len(), 2);
+        assert!(zoo.path("m1").is_ok());
+        assert!(zoo.path("notes").is_err());
+        zoo.add("extra", dir.join("m1.nq"));
+        assert_eq!(zoo.ids().count(), 3);
+    }
+
+    #[test]
+    fn scan_nest_dir_filters_kinds() {
+        let dir = std::env::temp_dir().join(format!("nq_zoo_nest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("junk.nq"), b"not a container").unwrap();
+        let c = crate::container::synthetic_nest(9, 8, 4, 16, 4).unwrap();
+        crate::container::write(&dir.join("real.nq"), &c).unwrap();
+        let mut zoo = Zoo::new();
+        let added = zoo.scan_nest_dir(&dir).unwrap();
+        assert_eq!(added, 1);
+        assert!(zoo.path("real").is_ok());
+        assert!(zoo.path("junk").is_err());
+    }
+}

@@ -1,0 +1,294 @@
+//! Per-device session state: residency (which sections of which model a
+//! device holds), resumable transfer progress, and the hysteresis policy
+//! evaluator reused from `coordinator::policy`.
+//!
+//! The table is the server's source of truth for resume points: every
+//! chunk ack is recorded here, so a transfer interrupted by a dead
+//! connection restarts from the last acked chunk when the device
+//! reconnects — not from byte zero.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::coordinator::{Decision, PolicyState, SwitchPolicy, Variant};
+
+use super::Section;
+
+/// Progress of one (device, model, section) residency entry.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TransferProgress {
+    /// Section length in bytes.
+    pub total: u64,
+    /// Last acked offset — the resume point.
+    pub acked: u64,
+    /// Highest offset ever sent (may exceed `acked` by in-flight chunks).
+    pub sent_high_water: u64,
+    /// Cumulative payload bytes sent for this residency (all attempts).
+    pub bytes_sent: u64,
+    /// Payload bytes sent more than once (the waste a resume avoids).
+    pub bytes_resent: u64,
+    /// Whether the device holds the complete section.
+    pub complete: bool,
+}
+
+impl TransferProgress {
+    fn record_send(&mut self, start: u64, end: u64) {
+        self.bytes_sent += end - start;
+        if start < self.sent_high_water {
+            self.bytes_resent += self.sent_high_water.min(end) - start;
+        }
+        self.sent_high_water = self.sent_high_water.max(end);
+    }
+
+    fn record_ack(&mut self, end: u64) {
+        self.acked = self.acked.max(end);
+        self.complete = self.acked >= self.total;
+    }
+}
+
+/// One device's server-side session.
+#[derive(Debug)]
+struct DeviceSession {
+    policy: PolicyState,
+    levels_seen: u64,
+    residency: HashMap<(String, Section), TransferProgress>,
+}
+
+/// Point-in-time summary of one session (reporting / the `fleet` CLI).
+#[derive(Debug, Clone)]
+pub struct SessionSummary {
+    pub id: String,
+    pub variant: Variant,
+    pub levels_seen: u64,
+    pub switches: u64,
+    pub bytes_sent: u64,
+    pub bytes_resent: u64,
+    /// Complete (fully acked) sections currently resident.
+    pub resident_sections: usize,
+}
+
+/// Thread-safe registry of device sessions.
+pub struct SessionTable {
+    policy: SwitchPolicy,
+    inner: Mutex<HashMap<String, DeviceSession>>,
+}
+
+impl SessionTable {
+    pub fn new(policy: SwitchPolicy) -> SessionTable {
+        SessionTable {
+            policy,
+            inner: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Register a device (idempotent: a reconnect keeps residency and
+    /// policy state, which is exactly what makes transfers resumable).
+    pub fn hello(&self, id: &str) {
+        let mut g = self.inner.lock().unwrap();
+        g.entry(id.to_string()).or_insert_with(|| DeviceSession {
+            // devices come online part-bit after a Section-A pull
+            policy: PolicyState::new(self.policy, Variant::PartBit),
+            levels_seen: 0,
+            residency: HashMap::new(),
+        });
+    }
+
+    fn with<T>(&self, id: &str, f: impl FnOnce(&mut DeviceSession) -> T) -> Result<T> {
+        let mut g = self.inner.lock().unwrap();
+        let s = g
+            .get_mut(id)
+            .ok_or_else(|| anyhow!("unknown device {id:?} (hello required)"))?;
+        Ok(f(s))
+    }
+
+    /// Evaluate one resource report through the device's hysteresis
+    /// policy state.
+    pub fn decide(&self, id: &str, level: f64) -> Result<Decision> {
+        ensure!((0.0..=1.0).contains(&level), "level {level} outside [0, 1]");
+        self.with(id, |s| {
+            s.levels_seen += 1;
+            s.policy.decide(level)
+        })
+    }
+
+    /// Begin (or resume) a transfer; validates the offset against the
+    /// section length and records the section total.
+    pub fn begin(&self, id: &str, model: &str, section: Section, total: u64, offset: u64) -> Result<()> {
+        ensure!(offset <= total, "offset {offset} beyond total {total}");
+        self.with(id, |s| {
+            let p = s
+                .residency
+                .entry((model.to_string(), section))
+                .or_default();
+            p.total = total;
+        })
+    }
+
+    /// Record payload bytes `[start, end)` going out on the wire.
+    pub fn record_send(&self, id: &str, model: &str, section: Section, start: u64, end: u64) -> Result<()> {
+        self.with(id, |s| {
+            if let Some(p) = s.residency.get_mut(&(model.to_string(), section)) {
+                p.record_send(start, end);
+            }
+        })
+    }
+
+    /// Record a device ack up to `end` (the new resume point).
+    pub fn record_ack(&self, id: &str, model: &str, section: Section, end: u64) -> Result<()> {
+        self.with(id, |s| {
+            if let Some(p) = s.residency.get_mut(&(model.to_string(), section)) {
+                p.record_ack(end);
+            }
+        })
+    }
+
+    /// The device's current policy variant (server-side source of truth;
+    /// a reconnecting device reconciles against this).
+    pub fn variant(&self, id: &str) -> Result<Variant> {
+        self.with(id, |s| s.policy.current())
+    }
+
+    /// Last acked offset for a residency entry (0 when unknown): where a
+    /// resumed pull should restart.
+    pub fn acked(&self, id: &str, model: &str, section: Section) -> u64 {
+        let g = self.inner.lock().unwrap();
+        g.get(id)
+            .and_then(|s| s.residency.get(&(model.to_string(), section)))
+            .map(|p| p.acked)
+            .unwrap_or(0)
+    }
+
+    /// Full progress snapshot for a residency entry.
+    pub fn progress(&self, id: &str, model: &str, section: Section) -> Option<TransferProgress> {
+        let g = self.inner.lock().unwrap();
+        g.get(id)
+            .and_then(|s| s.residency.get(&(model.to_string(), section)))
+            .copied()
+    }
+
+    /// The device paged the section out (downgrade): reset the resume
+    /// state so a future upgrade re-pulls from zero, keeping cumulative
+    /// byte counters for reporting.
+    pub fn drop_section(&self, id: &str, model: &str, section: Section) -> Result<()> {
+        self.with(id, |s| {
+            if let Some(p) = s.residency.get_mut(&(model.to_string(), section)) {
+                p.acked = 0;
+                p.sent_high_water = 0;
+                p.complete = false;
+            }
+        })
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    /// Summaries of every session, sorted by device id.
+    pub fn summaries(&self) -> Vec<SessionSummary> {
+        let g = self.inner.lock().unwrap();
+        let mut out: Vec<SessionSummary> = g
+            .iter()
+            .map(|(id, s)| SessionSummary {
+                id: id.clone(),
+                variant: s.policy.current(),
+                levels_seen: s.levels_seen,
+                switches: s.policy.switches(),
+                bytes_sent: s.residency.values().map(|p| p.bytes_sent).sum(),
+                bytes_resent: s.residency.values().map(|p| p.bytes_resent).sum(),
+                resident_sections: s.residency.values().filter(|p| p.complete).count(),
+            })
+            .collect();
+        out.sort_by(|a, b| a.id.cmp(&b.id));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> SessionTable {
+        SessionTable::new(SwitchPolicy::default())
+    }
+
+    #[test]
+    fn hello_is_idempotent_and_required() {
+        let t = table();
+        assert!(t.decide("d0", 0.5).is_err());
+        t.hello("d0");
+        t.hello("d0");
+        assert_eq!(t.device_count(), 1);
+        assert!(t.decide("d0", 0.5).is_ok());
+    }
+
+    #[test]
+    fn transfer_progress_tracks_resume_point_and_resends() {
+        let t = table();
+        t.hello("d0");
+        t.begin("d0", "m", Section::B, 1000, 0).unwrap();
+        // four 250-byte chunks; the third is sent but never acked
+        t.record_send("d0", "m", Section::B, 0, 250).unwrap();
+        t.record_ack("d0", "m", Section::B, 250).unwrap();
+        t.record_send("d0", "m", Section::B, 250, 500).unwrap();
+        t.record_ack("d0", "m", Section::B, 500).unwrap();
+        t.record_send("d0", "m", Section::B, 500, 750).unwrap();
+        // connection dies here
+        assert_eq!(t.acked("d0", "m", Section::B), 500);
+        let p = t.progress("d0", "m", Section::B).unwrap();
+        assert_eq!(p.sent_high_water, 750);
+        assert!(!p.complete);
+
+        // resume from the acked offset: only the unacked chunk re-sends
+        t.begin("d0", "m", Section::B, 1000, 500).unwrap();
+        t.record_send("d0", "m", Section::B, 500, 750).unwrap();
+        t.record_ack("d0", "m", Section::B, 750).unwrap();
+        t.record_send("d0", "m", Section::B, 750, 1000).unwrap();
+        t.record_ack("d0", "m", Section::B, 1000).unwrap();
+        let p = t.progress("d0", "m", Section::B).unwrap();
+        assert!(p.complete);
+        assert_eq!(p.bytes_sent, 1250);
+        assert_eq!(p.bytes_resent, 250); // exactly the unacked chunk
+    }
+
+    #[test]
+    fn drop_section_resets_resume_state() {
+        let t = table();
+        t.hello("d0");
+        t.begin("d0", "m", Section::B, 100, 0).unwrap();
+        t.record_send("d0", "m", Section::B, 0, 100).unwrap();
+        t.record_ack("d0", "m", Section::B, 100).unwrap();
+        assert!(t.progress("d0", "m", Section::B).unwrap().complete);
+        t.drop_section("d0", "m", Section::B).unwrap();
+        let p = t.progress("d0", "m", Section::B).unwrap();
+        assert!(!p.complete);
+        assert_eq!(p.acked, 0);
+        assert_eq!(p.bytes_sent, 100, "cumulative counters survive drops");
+    }
+
+    #[test]
+    fn begin_validates_offset() {
+        let t = table();
+        t.hello("d0");
+        assert!(t.begin("d0", "m", Section::A, 10, 11).is_err());
+        assert!(t.begin("d0", "m", Section::A, 10, 10).is_ok());
+    }
+
+    #[test]
+    fn summaries_aggregate_per_device() {
+        let t = table();
+        t.hello("b");
+        t.hello("a");
+        t.begin("a", "m", Section::A, 10, 0).unwrap();
+        t.record_send("a", "m", Section::A, 0, 10).unwrap();
+        t.record_ack("a", "m", Section::A, 10).unwrap();
+        let s = t.summaries();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[0].id, "a");
+        assert_eq!(s[0].resident_sections, 1);
+        assert_eq!(s[0].bytes_sent, 10);
+        assert_eq!(s[1].resident_sections, 0);
+        assert_eq!(s[0].variant, Variant::PartBit);
+    }
+}

@@ -6,9 +6,12 @@
 //!
 //! - **L3 (this crate)** — the on-device coordinator: model manager with
 //!   full-bit/part-bit switching, resource-driven policy, dynamic
-//!   batcher, PJRT runtime, device simulator, transmission system, and
-//!   every substrate they need (packed bits, `.nq` containers, quantizer,
-//!   statistics). Python never runs on the request path.
+//!   batcher, PJRT runtime (feature `pjrt`, with a pure-Rust offline
+//!   fallback), device simulator, transmission system, the fleet
+//!   distribution subsystem (resumable delta paging + zoo-wide section
+//!   cache), and every substrate they need (packed bits, `.nq`
+//!   containers, quantizer, statistics). Python never runs on the
+//!   request path.
 //! - **L2 (python/compile)** — the JAX model zoo + PTQ pipeline, AOT-
 //!   lowered once to `artifacts/*.hlo.txt`.
 //! - **L1 (python/compile/kernels)** — Pallas kernels (interpret=True)
@@ -21,6 +24,7 @@ pub mod bits;
 pub mod container;
 pub mod coordinator;
 pub mod device;
+pub mod fleet;
 pub mod nest;
 pub mod quant;
 pub mod report;

@@ -1,66 +1,204 @@
-//! PJRT engine: compile HLO-text artifacts, hold executables, run batches.
+//! Execution engine: compile HLO-text artifacts, hold executables, run
+//! batches.
 //!
-//! Hot-path design: weights are uploaded to device-resident `PjRtBuffer`s
-//! once per model switch; each request uploads only its input batch and
-//! calls `execute_b`, so no weight bytes move per inference (§Perf L3).
-
-use std::path::Path;
-use std::sync::Arc;
+//! Two implementations behind one API:
+//!
+//! * **`pjrt` feature** — the real PJRT CPU client. Weights are uploaded
+//!   to device-resident `PjRtBuffer`s once per model switch; each request
+//!   uploads only its input batch and calls `execute_b`, so no weight
+//!   bytes move per inference (§Perf L3).
+//! * **default (offline)** — a pure-Rust host-buffer engine. Uploads and
+//!   weight materialization behave identically (the switching/paging and
+//!   fleet-distribution layers never execute a graph), but `run` reports
+//!   a clear error directing the caller to `--features pjrt`. This keeps
+//!   tier-1 `cargo build --release && cargo test -q` green offline; every
+//!   artifact-dependent test skips itself before calling `run`.
 
 use anyhow::{ensure, Context, Result};
 
 use super::manifest::ParamSpec;
 
-/// Shared PJRT CPU client.
-#[derive(Clone)]
-pub struct Engine {
-    client: Arc<xla::PjRtClient>,
+// ---------------------------------------------------------------------------
+// PJRT-backed implementation
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "pjrt")]
+mod imp {
+    use std::path::Path;
+    use std::sync::Arc;
+
+    use anyhow::{ensure, Context, Result};
+
+    /// Shared PJRT CPU client.
+    #[derive(Clone)]
+    pub struct Engine {
+        client: Arc<xla::PjRtClient>,
+    }
+
+    // Safety: the PJRT CPU client is a thread-safe C++ object (the PJRT API
+    // contract requires clients be callable from any thread); the Rust
+    // wrapper just doesn't declare it. All our mutation goes through &self.
+    unsafe impl Send for Engine {}
+    unsafe impl Sync for Engine {}
+
+    impl Engine {
+        /// Create the CPU PJRT client.
+        pub fn cpu() -> Result<Engine> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Engine {
+                client: Arc::new(client),
+            })
+        }
+
+        /// Compile an HLO-text file into an executable.
+        pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            Ok(Executable { exe })
+        }
+
+        /// Upload an f32 tensor to a device-resident buffer.
+        pub fn upload(&self, data: &[f32], shape: &[usize]) -> Result<DeviceBuffer> {
+            let count: usize = shape.iter().product();
+            ensure!(
+                data.len() == count,
+                "shape {shape:?} needs {count} values, got {}",
+                data.len()
+            );
+            let buf = self
+                .client
+                .buffer_from_host_buffer(data, shape, None)
+                .context("uploading buffer")?;
+            Ok(DeviceBuffer { buf })
+        }
+    }
+
+    /// A device-resident tensor.
+    pub struct DeviceBuffer {
+        buf: xla::PjRtBuffer,
+    }
+
+    unsafe impl Send for DeviceBuffer {}
+    unsafe impl Sync for DeviceBuffer {}
+
+    /// One compiled (architecture, act-bits) graph.
+    pub struct Executable {
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    // Safety: see Engine.
+    unsafe impl Send for Executable {}
+    unsafe impl Sync for Executable {}
+
+    impl Executable {
+        /// Execute with `[input, weights...]` device buffers; returns the
+        /// flattened f32 output. Graphs are lowered with
+        /// `return_tuple=True`, so the single output is a 1-tuple.
+        pub fn run(&self, input: &DeviceBuffer, weights: &[DeviceBuffer]) -> Result<Vec<f32>> {
+            let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + weights.len());
+            args.push(&input.buf);
+            args.extend(weights.iter().map(|w| &w.buf));
+            let result = self.exe.execute_b(&args).context("PJRT execute")?;
+            let lit = result[0][0].to_literal_sync()?;
+            let tuple = lit.to_tuple1()?;
+            Ok(tuple.to_vec::<f32>()?)
+        }
+    }
 }
 
-// Safety: the PJRT CPU client is a thread-safe C++ object (the PJRT API
-// contract requires clients be callable from any thread); the Rust
-// wrapper just doesn't declare it. All our mutation goes through &self.
-unsafe impl Send for Engine {}
-unsafe impl Sync for Engine {}
+// ---------------------------------------------------------------------------
+// Pure-Rust fallback (no PJRT available)
+// ---------------------------------------------------------------------------
+
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use std::path::{Path, PathBuf};
+
+    use anyhow::{bail, ensure, Context, Result};
+
+    /// Host-buffer engine: validates and holds tensors like the PJRT
+    /// client, but cannot execute lowered HLO graphs.
+    #[derive(Clone)]
+    pub struct Engine;
+
+    impl Engine {
+        /// Create the fallback engine (always succeeds).
+        pub fn cpu() -> Result<Engine> {
+            Ok(Engine)
+        }
+
+        /// Validate an HLO-text artifact and hold a reference to it. The
+        /// file must exist and be non-empty so misconfiguration surfaces
+        /// at load time, exactly like the PJRT path.
+        pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading HLO text {}", path.display()))?;
+            ensure!(!text.is_empty(), "empty HLO artifact {}", path.display());
+            Ok(Executable {
+                path: path.to_path_buf(),
+            })
+        }
+
+        /// Upload an f32 tensor to a host-resident buffer.
+        pub fn upload(&self, data: &[f32], shape: &[usize]) -> Result<DeviceBuffer> {
+            let count: usize = shape.iter().product();
+            ensure!(
+                data.len() == count,
+                "shape {shape:?} needs {count} values, got {}",
+                data.len()
+            );
+            Ok(DeviceBuffer {
+                data: data.to_vec(),
+                shape: shape.to_vec(),
+            })
+        }
+    }
+
+    /// A host-resident tensor (fallback stand-in for a PJRT buffer).
+    pub struct DeviceBuffer {
+        data: Vec<f32>,
+        shape: Vec<usize>,
+    }
+
+    impl DeviceBuffer {
+        /// Host view of the buffer (fallback only; useful in tests).
+        pub fn host(&self) -> &[f32] {
+            &self.data
+        }
+
+        /// Logical shape of the buffer.
+        pub fn shape(&self) -> &[usize] {
+            &self.shape
+        }
+    }
+
+    /// A validated-but-uncompiled graph reference.
+    pub struct Executable {
+        path: PathBuf,
+    }
+
+    impl Executable {
+        /// Graph execution needs PJRT; the fallback reports why.
+        pub fn run(&self, _input: &DeviceBuffer, _weights: &[DeviceBuffer]) -> Result<Vec<f32>> {
+            bail!(
+                "cannot execute {}: nestquant was built without the `pjrt` feature \
+                 (rebuild with `--features pjrt` to run lowered HLO graphs)",
+                self.path.display()
+            )
+        }
+    }
+}
+
+pub use imp::{DeviceBuffer, Engine, Executable};
 
 impl Engine {
-    /// Create the CPU PJRT client.
-    pub fn cpu() -> Result<Engine> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Engine {
-            client: Arc::new(client),
-        })
-    }
-
-    /// Compile an HLO-text file into an executable.
-    pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        Ok(Executable { exe })
-    }
-
-    /// Upload an f32 tensor to a device-resident buffer.
-    pub fn upload(&self, data: &[f32], shape: &[usize]) -> Result<DeviceBuffer> {
-        let count: usize = shape.iter().product();
-        ensure!(
-            data.len() == count,
-            "shape {shape:?} needs {count} values, got {}",
-            data.len()
-        );
-        let buf = self
-            .client
-            .buffer_from_host_buffer(data, shape, None)
-            .context("uploading buffer")?;
-        Ok(DeviceBuffer { buf })
-    }
-
     /// Upload every weight tensor in spec order.
     pub fn upload_weights(
         &self,
@@ -76,34 +214,31 @@ impl Engine {
     }
 }
 
-/// A device-resident tensor.
-pub struct DeviceBuffer {
-    buf: xla::PjRtBuffer,
-}
+#[cfg(all(test, not(feature = "pjrt")))]
+mod tests {
+    use super::*;
+    use std::path::Path;
 
-unsafe impl Send for DeviceBuffer {}
-unsafe impl Sync for DeviceBuffer {}
+    #[test]
+    fn fallback_upload_validates_shape() {
+        let e = Engine::cpu().unwrap();
+        let buf = e.upload(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(buf.host(), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(buf.shape(), &[2, 2]);
+        assert!(e.upload(&[1.0; 3], &[2, 2]).is_err());
+    }
 
-/// One compiled (architecture, act-bits) graph.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-}
-
-// Safety: see Engine.
-unsafe impl Send for Executable {}
-unsafe impl Sync for Executable {}
-
-impl Executable {
-    /// Execute with `[input, weights...]` device buffers; returns the
-    /// flattened f32 output. Graphs are lowered with `return_tuple=True`,
-    /// so the single output is a 1-tuple.
-    pub fn run(&self, input: &DeviceBuffer, weights: &[DeviceBuffer]) -> Result<Vec<f32>> {
-        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + weights.len());
-        args.push(&input.buf);
-        args.extend(weights.iter().map(|w| &w.buf));
-        let result = self.exe.execute_b(&args).context("PJRT execute")?;
-        let lit = result[0][0].to_literal_sync()?;
-        let tuple = lit.to_tuple1()?;
-        Ok(tuple.to_vec::<f32>()?)
+    #[test]
+    fn fallback_load_hlo_checks_file() {
+        let e = Engine::cpu().unwrap();
+        assert!(e.load_hlo(Path::new("/nonexistent/x.hlo.txt")).is_err());
+        let dir = std::env::temp_dir().join(format!("nq_engine_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("toy.hlo.txt");
+        std::fs::write(&p, "HloModule toy\n").unwrap();
+        let exe = e.load_hlo(&p).unwrap();
+        let x = e.upload(&[0.0], &[1]).unwrap();
+        let err = exe.run(&x, &[]).unwrap_err();
+        assert!(format!("{err}").contains("pjrt"));
     }
 }

@@ -1,11 +1,14 @@
-//! PJRT runtime (S8): load the AOT-lowered HLO text artifacts and execute
-//! them on the CPU PJRT client from the request path.
+//! Runtime (S8): load the AOT-lowered HLO text artifacts and execute
+//! them from the request path.
 //!
-//! Pattern follows /opt/xla-example/load_hlo: HLO *text* → HloModuleProto
-//! → XlaComputation → compile → execute. One compiled executable per
-//! (architecture, act-bits) pair; weights are execution *arguments*, so
-//! the NestQuant model switch never recompiles anything — it only swaps
-//! the cached weight literals (see coordinator::manager).
+//! With the `pjrt` feature: HLO *text* → HloModuleProto → XlaComputation
+//! → compile → execute on the CPU PJRT client. One compiled executable
+//! per (architecture, act-bits) pair; weights are execution *arguments*,
+//! so the NestQuant model switch never recompiles anything — it only
+//! swaps the cached weight literals (see coordinator::manager).
+//!
+//! Without the feature (the offline tier-1 build) a pure-Rust fallback
+//! engine provides the same API; see `engine.rs`.
 
 mod engine;
 mod manifest;

@@ -12,6 +12,7 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use anyhow::{bail, ensure, Context, Result};
 
@@ -26,6 +27,13 @@ pub enum FrameKind {
     ModelDelta = 3,
     /// Control/ack.
     Control = 4,
+    /// One chunk of a resumable section transfer (fleet paging): payload
+    /// is a [`ChunkHeader`] followed by the chunk data.
+    Chunk = 5,
+    /// Receiver acknowledgement of a chunk: payload is `(xfer_id,
+    /// acked_end)` as two LE u64s. The acked offset is the resume point
+    /// after an interrupted transfer.
+    Ack = 6,
 }
 
 impl FrameKind {
@@ -35,6 +43,8 @@ impl FrameKind {
             2 => FrameKind::ModelPart,
             3 => FrameKind::ModelDelta,
             4 => FrameKind::Control,
+            5 => FrameKind::Chunk,
+            6 => FrameKind::Ack,
             _ => bail!("unknown frame kind {v}"),
         })
     }
@@ -50,6 +60,14 @@ pub struct Frame {
 
 const FRAME_MAGIC: u32 = 0x4E51_5458; // "NQTX"
 const MAX_FRAME: u64 = 4 << 30;
+/// Never pre-allocate more than this from an untrusted length header; the
+/// payload buffer grows as bytes actually arrive.
+const MAX_INITIAL_ALLOC: usize = 1 << 20;
+/// Copy granularity for the incremental payload read.
+const READ_CHUNK: usize = 64 << 10;
+/// Default socket read timeout for pulls: a dead peer cannot hang a
+/// device thread forever.
+pub const DEFAULT_PULL_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// Bidirectional traffic meter (shared across connections).
 #[derive(Debug, Default)]
@@ -99,9 +117,22 @@ pub fn recv_frame(stream: &mut impl Read, meter: &Meter) -> Result<(Frame, u64)>
     stream.read_exact(&mut len8)?;
     let plen = u64::from_le_bytes(len8);
     ensure!(plen <= MAX_FRAME, "frame too large: {plen}");
-    let mut payload = vec![0u8; plen as usize];
-    stream.read_exact(&mut payload)?;
-    let wire = (7 + name_len + 8) as u64 + plen;
+    // The length header is untrusted: cap the initial allocation and grow
+    // the buffer only as bytes actually arrive, so a malicious 4 GiB
+    // header costs at most MAX_INITIAL_ALLOC before the read fails.
+    let plen = plen as usize;
+    let mut payload = Vec::with_capacity(plen.min(MAX_INITIAL_ALLOC));
+    let mut remaining = plen;
+    while remaining > 0 {
+        let take = remaining.min(READ_CHUNK);
+        let old = payload.len();
+        payload.resize(old + take, 0);
+        stream
+            .read_exact(&mut payload[old..])
+            .context("frame payload")?;
+        remaining -= take;
+    }
+    let wire = (7 + name_len + 8 + plen) as u64;
     meter.received.fetch_add(wire, Ordering::Relaxed);
     Ok((
         Frame {
@@ -111,6 +142,123 @@ pub fn recv_frame(stream: &mut impl Read, meter: &Meter) -> Result<(Frame, u64)>
         },
         wire,
     ))
+}
+
+// ---------------------------------------------------------------------------
+// chunked, resumable transfers (fleet paging)
+// ---------------------------------------------------------------------------
+
+/// Per-chunk metadata carried at the front of a [`FrameKind::Chunk`]
+/// payload. Offsets are relative to the start of the section being
+/// transferred, so a resume simply re-enters the stream at the last
+/// acked offset.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkHeader {
+    /// Server-assigned transfer id; echoed back in every ack.
+    pub xfer_id: u64,
+    /// Byte offset of this chunk within the section.
+    pub offset: u64,
+    /// Total section length in bytes (constant across the transfer).
+    pub total_len: u64,
+}
+
+/// Encoded size of a [`ChunkHeader`].
+pub const CHUNK_HEADER_LEN: usize = 24;
+
+impl ChunkHeader {
+    /// End offset of a chunk carrying `data_len` bytes.
+    pub fn end(&self, data_len: usize) -> u64 {
+        self.offset + data_len as u64
+    }
+
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.xfer_id.to_le_bytes());
+        out.extend_from_slice(&self.offset.to_le_bytes());
+        out.extend_from_slice(&self.total_len.to_le_bytes());
+    }
+
+    fn decode(payload: &[u8]) -> Result<ChunkHeader> {
+        ensure!(
+            payload.len() >= CHUNK_HEADER_LEN,
+            "chunk payload too short: {}",
+            payload.len()
+        );
+        let u = |i: usize| u64::from_le_bytes(payload[i..i + 8].try_into().unwrap());
+        Ok(ChunkHeader {
+            xfer_id: u(0),
+            offset: u(8),
+            total_len: u(16),
+        })
+    }
+}
+
+/// Build one chunk frame: header + data, named after the transfer.
+pub fn chunk_frame(name: &str, header: ChunkHeader, data: &[u8]) -> Frame {
+    let mut payload = Vec::with_capacity(CHUNK_HEADER_LEN + data.len());
+    header.encode_into(&mut payload);
+    payload.extend_from_slice(data);
+    Frame {
+        kind: FrameKind::Chunk,
+        name: name.to_string(),
+        payload,
+    }
+}
+
+/// Split a chunk frame into its header and data slice.
+pub fn parse_chunk(frame: &Frame) -> Result<(ChunkHeader, &[u8])> {
+    ensure!(
+        frame.kind == FrameKind::Chunk,
+        "expected Chunk frame, got {:?} ({:?})",
+        frame.kind,
+        frame.name
+    );
+    let header = ChunkHeader::decode(&frame.payload)?;
+    let data = &frame.payload[CHUNK_HEADER_LEN..];
+    ensure!(
+        header.end(data.len()) <= header.total_len,
+        "chunk [{}, {}) overruns total {}",
+        header.offset,
+        header.end(data.len()),
+        header.total_len
+    );
+    Ok((header, data))
+}
+
+/// Build an ack frame for everything up to (exclusive) `acked_end`.
+pub fn ack_frame(xfer_id: u64, acked_end: u64) -> Frame {
+    let mut payload = Vec::with_capacity(16);
+    payload.extend_from_slice(&xfer_id.to_le_bytes());
+    payload.extend_from_slice(&acked_end.to_le_bytes());
+    Frame {
+        kind: FrameKind::Ack,
+        name: "ack".into(),
+        payload,
+    }
+}
+
+/// Decode an ack frame into `(xfer_id, acked_end)`.
+pub fn parse_ack(frame: &Frame) -> Result<(u64, u64)> {
+    ensure!(
+        frame.kind == FrameKind::Ack,
+        "expected Ack frame, got {:?} ({:?})",
+        frame.kind,
+        frame.name
+    );
+    ensure!(frame.payload.len() == 16, "bad ack payload");
+    let xfer = u64::from_le_bytes(frame.payload[0..8].try_into().unwrap());
+    let end = u64::from_le_bytes(frame.payload[8..16].try_into().unwrap());
+    Ok((xfer, end))
+}
+
+/// True when an error is a socket read timeout (used by pollers that
+/// re-check a stop flag on idle).
+pub fn is_timeout(e: &anyhow::Error) -> bool {
+    e.downcast_ref::<std::io::Error>().is_some_and(|io| {
+        matches!(
+            io.kind(),
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+        )
+    })
 }
 
 /// The edge-server side: serves model files to connecting devices.
@@ -163,12 +311,26 @@ impl Drop for PushServer {
     }
 }
 
-/// Device side: connect and receive `count` frames.
+/// Device side: connect and receive `count` frames, with the default
+/// read timeout so a dead peer cannot hang the calling thread forever.
 pub fn pull_frames(addr: std::net::SocketAddr, count: usize, meter: &Meter) -> Result<Vec<Frame>> {
+    pull_frames_timeout(addr, count, meter, Some(DEFAULT_PULL_TIMEOUT))
+}
+
+/// [`pull_frames`] with an explicit per-read timeout (`None` blocks
+/// indefinitely — only sensible in tests).
+pub fn pull_frames_timeout(
+    addr: std::net::SocketAddr,
+    count: usize,
+    meter: &Meter,
+    timeout: Option<Duration>,
+) -> Result<Vec<Frame>> {
     let mut sock = TcpStream::connect(addr)?;
+    sock.set_read_timeout(timeout)?;
     let mut out = Vec::with_capacity(count);
-    for _ in 0..count {
-        let (f, _) = recv_frame(&mut sock, meter)?;
+    for i in 0..count {
+        let (f, _) = recv_frame(&mut sock, meter)
+            .with_context(|| format!("pulling frame {i}/{count}"))?;
         out.push(f);
     }
     Ok(out)
@@ -234,6 +396,79 @@ mod tests {
         send_frame(&mut buf, &f, &meter).unwrap();
         let cut = &buf[..buf.len() - 10];
         assert!(recv_frame(&mut &cut[..], &meter).is_err());
+    }
+
+    #[test]
+    fn chunk_frame_roundtrip() {
+        let header = ChunkHeader {
+            xfer_id: 7,
+            offset: 4096,
+            total_len: 10_000,
+        };
+        let data: Vec<u8> = (0..1000).map(|i| (i % 253) as u8).collect();
+        let f = chunk_frame("m.secB", header, &data);
+        let meter = Meter::default();
+        let mut buf = Vec::new();
+        send_frame(&mut buf, &f, &meter).unwrap();
+        let (got, _) = recv_frame(&mut buf.as_slice(), &meter).unwrap();
+        let (h2, d2) = parse_chunk(&got).unwrap();
+        assert_eq!(h2, header);
+        assert_eq!(d2, &data[..]);
+        assert_eq!(h2.end(d2.len()), 5096);
+    }
+
+    #[test]
+    fn chunk_overrun_rejected() {
+        let header = ChunkHeader {
+            xfer_id: 1,
+            offset: 900,
+            total_len: 1000,
+        };
+        let f = chunk_frame("x", header, &[0u8; 200]); // 900+200 > 1000
+        assert!(parse_chunk(&f).is_err());
+    }
+
+    #[test]
+    fn ack_roundtrip_and_mismatch() {
+        let f = ack_frame(42, 8192);
+        assert_eq!(parse_ack(&f).unwrap(), (42, 8192));
+        let not_ack = frame(FrameKind::Control, "ack", 16);
+        assert!(parse_ack(&not_ack).is_err());
+    }
+
+    #[test]
+    fn huge_length_header_fails_without_huge_alloc() {
+        // A frame header claiming a near-MAX_FRAME payload over a stream
+        // that ends immediately must error quickly; the incremental read
+        // caps the allocation at MAX_INITIAL_ALLOC rather than trusting
+        // the attacker-controlled length.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&FRAME_MAGIC.to_le_bytes());
+        buf.push(FrameKind::ModelFull as u8);
+        buf.extend_from_slice(&1u16.to_le_bytes());
+        buf.push(b'x');
+        buf.extend_from_slice(&(MAX_FRAME - 1).to_le_bytes());
+        let meter = Meter::default();
+        assert!(recv_frame(&mut buf.as_slice(), &meter).is_err());
+        // beyond MAX_FRAME is rejected outright
+        let n = buf.len();
+        buf[n - 8..].copy_from_slice(&(MAX_FRAME + 1).to_le_bytes());
+        assert!(recv_frame(&mut buf.as_slice(), &meter).is_err());
+    }
+
+    #[test]
+    fn pull_times_out_on_dead_peer() {
+        // A listener that accepts but never writes: the pull must return
+        // an error within the timeout instead of hanging forever.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let hold = std::thread::spawn(move || listener.accept().map(|(s, _)| s));
+        let meter = Meter::default();
+        let t0 = std::time::Instant::now();
+        let err = pull_frames_timeout(addr, 1, &meter, Some(Duration::from_millis(150)));
+        assert!(err.is_err());
+        assert!(t0.elapsed() < Duration::from_secs(10));
+        drop(hold.join());
     }
 
     #[test]

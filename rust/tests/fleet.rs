@@ -1,0 +1,328 @@
+//! Fleet-distribution integration tests — artifact-independent: every
+//! test builds synthetic nest containers on the fly, so tier-1 exercises
+//! the whole subsystem (server, shared cache, resumable transfers,
+//! policy-driven playback) offline.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use nestquant::container::{self, TensorData};
+use nestquant::coordinator::SwitchPolicy;
+use nestquant::device::{MemoryLedger, ResourceTrace};
+use nestquant::fleet::{FleetClient, FleetConfig, FleetServer, Section, Zoo};
+use nestquant::nest;
+
+const TIMEOUT: Duration = Duration::from_secs(30);
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("nq_fleet_it_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Write a synthetic INT(n|h) container; returns (path, a_len, b_len).
+fn write_synth(dir: &std::path::Path, name: &str, seed: u64, n: u8, h: u8) -> (std::path::PathBuf, u64, u64) {
+    let path = dir.join(format!("{name}.nq"));
+    let c = container::synthetic_nest(seed, n, h, 512, 16).unwrap();
+    let (_, a, b) = container::write(&path, &c).unwrap();
+    (path, a, b)
+}
+
+fn small_chunk_config() -> FleetConfig {
+    FleetConfig {
+        chunk_bytes: 512, // many chunks per section → meaningful resume
+        ..FleetConfig::default()
+    }
+}
+
+/// Acceptance: ≥2 devices pull the same container through the shared
+/// cache — one disk read per section, wire-byte accounting balanced in
+/// both directions, and every device reconstructs bit-identical weights.
+#[test]
+fn two_devices_share_cache_with_balanced_accounting() {
+    let dir = temp_dir("share");
+    let (path, a_len, b_len) = write_synth(&dir, "m0", 1, 8, 4);
+    let mut zoo = Zoo::new();
+    zoo.add("m0", &path);
+    let handle = FleetServer::start(zoo, small_chunk_config()).unwrap();
+    let addr = handle.addr;
+
+    let cold = container::read(&path, false).unwrap();
+    let mut joins = Vec::new();
+    for d in 0..3 {
+        let cold = cold.clone();
+        joins.push(std::thread::spawn(move || -> (u64, u64) {
+            let mut c = FleetClient::connect(addr, &format!("dev{d}"), TIMEOUT).unwrap();
+            let mut sec_a = Vec::new();
+            let mut sec_b = Vec::new();
+            let oa = c.pull_section("m0", Section::A, 0, &mut sec_a, None).unwrap();
+            let ob = c.pull_section("m0", Section::B, 0, &mut sec_b, None).unwrap();
+            assert!(oa.completed && ob.completed);
+            // reconstruct: the section-A blob is a part-bit container; the
+            // section-B blob attaches losslessly → bit-identical weights
+            let mut got = container::parse(&sec_a, true).unwrap();
+            container::attach_section_b(&mut got, &sec_b).unwrap();
+            for (tg, tc) in got.tensors.iter().zip(&cold.tensors) {
+                match (&tg.data, &tc.data) {
+                    (
+                        TensorData::Nest { w_high: h1, w_low: Some(l1), scales: s1 },
+                        TensorData::Nest { w_high: h2, w_low: Some(l2), scales: s2 },
+                    ) => {
+                        assert_eq!(s1, s2);
+                        assert_eq!(h1.unpack(), h2.unpack());
+                        assert_eq!(l1.unpack(), l2.unpack());
+                    }
+                    (TensorData::Fp32(a), TensorData::Fp32(b)) => assert_eq!(a, b),
+                    _ => panic!("payload mismatch"),
+                }
+            }
+            c.wire()
+        }));
+    }
+    let mut dev_sent = 0u64;
+    let mut dev_received = 0u64;
+    for j in joins {
+        let (s, r) = j.join().unwrap();
+        dev_sent += s;
+        dev_received += r;
+    }
+
+    let cache = Arc::clone(&handle.cache);
+    let sessions = Arc::clone(&handle.sessions);
+    let meter = Arc::clone(&handle.meter);
+    let latency = Arc::clone(&handle.xfer_latency);
+    handle.stop(); // joins every handler → accounting is final
+
+    // wire bytes balance in both directions
+    let (srv_sent, srv_received) = meter.snapshot();
+    assert_eq!(srv_sent, dev_received, "server sent == devices received");
+    assert_eq!(srv_received, dev_sent, "server received == devices sent");
+
+    // the shared cache read each section from disk exactly once
+    let s = cache.stats();
+    assert_eq!(s.misses, 2, "one disk read per section");
+    assert_eq!(s.hits, 4, "two later devices hit per section");
+    assert_eq!(s.disk_bytes, a_len + b_len);
+    assert_eq!(sessions.device_count(), 3);
+    // every completed transfer recorded a latency sample (3 devices × 2)
+    assert_eq!(latency.count(), 6);
+    for summary in sessions.summaries() {
+        assert_eq!(summary.resident_sections, 2);
+        assert_eq!(summary.bytes_sent, a_len + b_len);
+        assert_eq!(summary.bytes_resent, 0);
+    }
+}
+
+/// Acceptance: a transfer killed mid-Section-B resumes from the last
+/// acked chunk; total re-sent bytes are strictly less than a full
+/// restart, and the resumed bytes are bit-identical to a cold read.
+#[test]
+fn killed_section_b_transfer_resumes_from_last_ack() {
+    let dir = temp_dir("resume");
+    let (path, _a_len, b_len) = write_synth(&dir, "m0", 2, 8, 4);
+    let mut zoo = Zoo::new();
+    zoo.add("m0", &path);
+    let config = small_chunk_config();
+    let chunk = config.chunk_bytes as u64;
+    let total_chunks = b_len.div_ceil(chunk);
+    assert!(total_chunks >= 4, "section B too small for the scenario");
+    let handle = FleetServer::start(zoo, config).unwrap();
+
+    // phase 1: pull section B but die after acking 2 chunks
+    let killed_after = 2u64;
+    let mut sink = Vec::new();
+    {
+        let mut victim = FleetClient::connect(handle.addr, "flaky", TIMEOUT).unwrap();
+        let out = victim
+            .pull_section("m0", Section::B, 0, &mut sink, Some(killed_after as usize))
+            .unwrap();
+        assert!(!out.completed);
+        assert_eq!(out.received_to, killed_after * chunk);
+        // dropping the client cuts the TCP connection mid-transfer
+    }
+
+    // wait (bounded) for the server to process the final ack
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while handle.sessions.acked("flaky", "m0", Section::B) != killed_after * chunk {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "server never recorded the last acked chunk (acked={})",
+            handle.sessions.acked("flaky", "m0", Section::B)
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // phase 2: reconnect under the same device id and resume
+    let mut back = FleetClient::connect(handle.addr, "flaky", TIMEOUT).unwrap();
+    let resume_from = back.server_offset("m0", Section::B).unwrap();
+    assert_eq!(resume_from, killed_after * chunk);
+    let out = back
+        .pull_section("m0", Section::B, resume_from, &mut sink, None)
+        .unwrap();
+    assert!(out.completed);
+    assert_eq!(out.total_len, b_len);
+    // the resumed pull moved strictly less than a full restart
+    assert!(out.payload_bytes < b_len, "{} !< {b_len}", out.payload_bytes);
+    assert_eq!(out.payload_bytes, b_len - resume_from);
+
+    // total re-sent bytes: only the chunk that was in flight when the
+    // connection died — strictly less than a restart-from-zero would be
+    let progress = handle.sessions.progress("flaky", "m0", Section::B).unwrap();
+    assert!(progress.complete);
+    // at most the one in-flight (sent, unacked) chunk is re-sent; whether
+    // it was sent before the connection died is a benign race
+    assert!(progress.bytes_resent <= chunk, "{}", progress.bytes_resent);
+    assert!(progress.bytes_resent < b_len);
+    assert!(progress.bytes_sent >= b_len && progress.bytes_sent <= b_len + chunk);
+    assert!(
+        progress.bytes_sent < 2 * b_len,
+        "resume must beat a full restart: {} vs {}",
+        progress.bytes_sent,
+        2 * b_len
+    );
+
+    // the reassembled section is bit-identical to the on-disk tail
+    let idx = container::probe(&path).unwrap();
+    let disk_b = container::read_range(&path, idx.section_b()).unwrap();
+    assert_eq!(sink, disk_b);
+    drop(back);
+    handle.stop();
+}
+
+/// Satellite: a paged full→part→full switch over the fleet transport
+/// produces bit-identical weights to a cold full load.
+#[test]
+fn paged_switch_is_bit_identical_to_cold_load() {
+    let dir = temp_dir("paged");
+    let (path, _, _) = write_synth(&dir, "m0", 3, 8, 5);
+
+    // cold load: whole file in one read
+    let cold = container::read(&path, false).unwrap();
+    let cfg = nest::NestConfig::new(cold.n, cold.h).unwrap();
+
+    // paged load: section A, then section B over the fleet transport
+    let mut zoo = Zoo::new();
+    zoo.add("m0", &path);
+    let handle = FleetServer::start(zoo, small_chunk_config()).unwrap();
+    let mut c = FleetClient::connect(handle.addr, "pager", TIMEOUT).unwrap();
+    let (mut sec_a, mut sec_b) = (Vec::new(), Vec::new());
+    c.pull_section("m0", Section::A, 0, &mut sec_a, None).unwrap();
+    let mut paged = container::parse(&sec_a, true).unwrap();
+
+    // part-bit state: w_low absent
+    assert!(matches!(
+        &paged.tensors[0].data,
+        TensorData::Nest { w_low: None, .. }
+    ));
+
+    // upgrade: page in section B
+    c.pull_section("m0", Section::B, 0, &mut sec_b, None).unwrap();
+    container::attach_section_b(&mut paged, &sec_b).unwrap();
+
+    // downgrade: drop w_low; upgrade again from the same bytes
+    for t in &mut paged.tensors {
+        if let TensorData::Nest { w_low, .. } = &mut t.data {
+            *w_low = None;
+        }
+    }
+    container::attach_section_b(&mut paged, &sec_b).unwrap();
+
+    // recomposed full-bit weights match the cold load bit-for-bit
+    for (tp, tc) in paged.tensors.iter().zip(&cold.tensors) {
+        if let (
+            TensorData::Nest { w_high: h1, w_low: Some(l1), .. },
+            TensorData::Nest { w_high: h2, w_low: Some(l2), .. },
+        ) = (&tp.data, &tc.data)
+        {
+            let mut rec_paged = Vec::new();
+            let mut rec_cold = Vec::new();
+            nest::recompose_into(&h1.unpack(), &l1.unpack(), cfg.l(), &mut rec_paged);
+            nest::recompose_into(&h2.unpack(), &l2.unpack(), cfg.l(), &mut rec_cold);
+            assert_eq!(rec_paged, rec_cold);
+        }
+    }
+    drop(c);
+    handle.stop();
+}
+
+/// Policy-driven playback: devices follow upgrade/downgrade advice from
+/// the server's hysteresis policy; paging traffic is Section-B-sized.
+#[test]
+fn playback_pages_only_section_b_deltas() {
+    let dir = temp_dir("playback");
+    let (path, a_len, b_len) = write_synth(&dir, "m0", 4, 8, 4);
+    let mut zoo = Zoo::new();
+    zoo.add("m0", &path);
+    let config = FleetConfig {
+        chunk_bytes: 1024,
+        policy: SwitchPolicy::default(),
+        ..FleetConfig::default()
+    };
+    let handle = FleetServer::start(zoo, config).unwrap();
+
+    // a discharge→recharge→discharge trace that forces switches
+    let mut levels = Vec::new();
+    levels.extend_from_slice(&[0.9; 4]); // upgrade
+    levels.extend_from_slice(&[0.2; 4]); // downgrade
+    levels.extend_from_slice(&[0.9; 4]); // upgrade again
+    let trace = ResourceTrace::new(levels);
+
+    let mut client = FleetClient::connect(handle.addr, "cam0", TIMEOUT).unwrap();
+    let mut ledger = MemoryLedger::new(1 << 30);
+    let report = client.playback("m0", trace, &mut ledger).unwrap();
+
+    assert_eq!(report.steps, 12);
+    assert_eq!(report.upgrades, 2);
+    assert_eq!(report.downgrades, 1);
+    assert_eq!(report.section_a_bytes, a_len);
+    assert_eq!(report.section_b_bytes, b_len);
+    // traffic = one A provisioning + one B per upgrade, nothing else
+    assert_eq!(report.payload_pulled, a_len + 2 * b_len);
+    // ledger: A resident + B resident (final state is full-bit)
+    assert_eq!(ledger.used(), a_len + b_len);
+    let stats = ledger.stats();
+    assert_eq!(stats.page_in_bytes, a_len + 2 * b_len);
+    assert_eq!(stats.page_out_bytes, b_len);
+    drop(client);
+
+    // reconnect under the same device id: the server session persisted
+    // full-bit, so a second playback reconciles — this fresh process has
+    // no local Section B, so the reconcile re-pulls the real bytes (a
+    // server-side ack history must never zero-fill device memory) — and
+    // can then follow a downgrade cleanly
+    let mut again = FleetClient::connect(handle.addr, "cam0", TIMEOUT).unwrap();
+    let mut ledger2 = MemoryLedger::new(1 << 30);
+    let trace2 = ResourceTrace::new(vec![0.2; 4]);
+    let report2 = again.playback("m0", trace2, &mut ledger2).unwrap();
+    assert_eq!(report2.downgrades, 1);
+    assert_eq!(report2.upgrades, 0);
+    assert_eq!(report2.payload_pulled, a_len + b_len, "reconcile re-pulls B");
+    assert_eq!(ledger2.used(), a_len, "B paged out by the downgrade");
+    drop(again);
+    handle.stop();
+}
+
+/// Server-side errors reply cleanly instead of wedging the connection.
+#[test]
+fn unknown_model_and_missing_hello_are_clean_errors() {
+    let dir = temp_dir("errors");
+    let (path, _, _) = write_synth(&dir, "m0", 5, 8, 4);
+    let mut zoo = Zoo::new();
+    zoo.add("m0", &path);
+    let handle = FleetServer::start(zoo, small_chunk_config()).unwrap();
+
+    let mut c = FleetClient::connect(handle.addr, "dev", TIMEOUT).unwrap();
+    let mut sink = Vec::new();
+    let err = c.pull_section("ghost", Section::A, 0, &mut sink, None).unwrap_err();
+    assert!(format!("{err}").contains("unknown model"), "{err}");
+    // the connection is still usable afterwards
+    let out = c.pull_section("m0", Section::A, 0, &mut sink, None).unwrap();
+    assert!(out.completed);
+    // a pull offset beyond the section errors cleanly too
+    let err = c
+        .pull_section("m0", Section::A, out.total_len + 1, &mut sink, None)
+        .unwrap_err();
+    assert!(format!("{err}").contains("beyond"), "{err}");
+    drop(c);
+    handle.stop();
+}

@@ -1,0 +1,129 @@
+//! Property tests: nest decompose→recompose round-trips across every
+//! legal (n, h) combination, driven by `util::propcheck` — the §3.3.2
+//! compensation claim verified exhaustively rather than for the paper's
+//! n=8 table alone.
+
+use nestquant::bits::{int_range, PackedTensor};
+use nestquant::container;
+use nestquant::nest::{self, NestConfig, Rounding};
+use nestquant::util::propcheck;
+
+const METHODS: [Rounding; 4] = [
+    Rounding::BitShift,
+    Rounding::Rtn,
+    Rounding::Up,
+    Rounding::Down,
+];
+
+/// With the 1-bit compensation, decompose→recompose is lossless for every
+/// legal (n, h), every rounding method, and every representable INTn
+/// value — randomized vectors via propcheck on top of the range logic.
+#[test]
+fn compensated_roundtrip_lossless_all_combinations() {
+    for n in 2..=16u8 {
+        for h in 1..n {
+            let cfg = NestConfig::new(n, h).unwrap();
+            let (lo, hi) = int_range(n);
+            for method in METHODS {
+                propcheck::check(
+                    &format!("nest-roundtrip-n{n}-h{h}-{method:?}"),
+                    8,
+                    |rng, scale| propcheck::vec_i64(rng, scale, 256, lo as i64, hi as i64),
+                    |values| {
+                        let w: Vec<i32> = values.iter().map(|&v| v as i32).collect();
+                        let (hs, ls) = nest::decompose(&w, cfg, method, true);
+                        let mut rec = Vec::new();
+                        nest::recompose_into(&hs, &ls, cfg.l(), &mut rec);
+                        rec == w
+                    },
+                );
+            }
+        }
+    }
+}
+
+/// The exhaustive version over every representable value (cheap: ≤ 65536
+/// values per combination).
+#[test]
+fn compensated_roundtrip_exhaustive_small_n() {
+    for n in 2..=12u8 {
+        for h in 1..n {
+            let cfg = NestConfig::new(n, h).unwrap();
+            let (lo, hi) = int_range(n);
+            for method in METHODS {
+                for w in lo..=hi {
+                    let wh = nest::high_of(w, cfg, method);
+                    let wl = nest::low_of(w, wh, cfg, true);
+                    assert_eq!(
+                        nest::recompose(wh, wl, cfg.l()),
+                        w,
+                        "INT({n}|{h}) {method:?} w={w}"
+                    );
+                    // the compensated residual really fits in l+1 bits
+                    let (llo, lhi) = int_range(cfg.low_bits());
+                    assert!(wl >= llo && wl <= lhi, "INT({n}|{h}) w={w} wl={wl}");
+                }
+            }
+        }
+    }
+}
+
+/// Round-trip through the packed representation (the container path):
+/// pack(w_high) + pack(w_low) → unpack → recompose, for every (n, h)
+/// where both sections pack (h ≥ 2).
+#[test]
+fn packed_roundtrip_all_packable_combinations() {
+    for n in 3..=16u8 {
+        for h in 2..n {
+            let cfg = NestConfig::new(n, h).unwrap();
+            let (lo, hi) = int_range(n);
+            propcheck::check(
+                &format!("nest-packed-n{n}-h{h}"),
+                4,
+                |rng, scale| propcheck::vec_i64(rng, scale, 200, lo as i64, hi as i64),
+                |values| {
+                    let w: Vec<i32> = values.iter().map(|&v| v as i32).collect();
+                    let (hs, ls) = nest::decompose(&w, cfg, Rounding::Rtn, true);
+                    let ph = PackedTensor::pack(&hs, cfg.h).unwrap();
+                    let pl = PackedTensor::pack(&ls, cfg.low_bits()).unwrap();
+                    let mut rec = Vec::new();
+                    nest::recompose_into(&ph.unpack(), &pl.unpack(), cfg.l(), &mut rec);
+                    rec == w
+                },
+            );
+        }
+    }
+}
+
+/// Full container serialize→parse round-trip across the (n, h) grid:
+/// section split + sectioned re-read agree for every combination the
+/// container format can hold.
+#[test]
+fn container_roundtrip_across_grid() {
+    for n in [4u8, 6, 8, 12, 16] {
+        for h in 2..n {
+            let c = container::synthetic_nest(u64::from(n) * 100 + u64::from(h), n, h, 24, 4)
+                .unwrap();
+            let bytes = container::serialize(&c).unwrap();
+            let full = container::parse(&bytes, false).unwrap();
+            let mut part = container::parse(&bytes, true).unwrap();
+            container::attach_section_b(&mut part, &bytes[part.section_b_offset as usize..])
+                .unwrap();
+            for (tf, tp) in full.tensors.iter().zip(&part.tensors) {
+                match (&tf.data, &tp.data) {
+                    (
+                        container::TensorData::Nest { w_high: h1, w_low: Some(l1), .. },
+                        container::TensorData::Nest { w_high: h2, w_low: Some(l2), .. },
+                    ) => {
+                        assert_eq!(h1.unpack(), h2.unpack(), "INT({n}|{h})");
+                        assert_eq!(l1.unpack(), l2.unpack(), "INT({n}|{h})");
+                    }
+                    (container::TensorData::Fp32(a), container::TensorData::Fp32(b)) => {
+                        assert_eq!(a, b)
+                    }
+                    _ => panic!("INT({n}|{h}): payload shape mismatch"),
+                }
+            }
+        }
+    }
+}
