@@ -46,13 +46,14 @@ fn main() -> Result<()> {
     let (wire_sent, _) = push.join();
     println!("[ota] received {} ({:.2} MB wire)", frames[0].name, wire_sent as f64 / 1e6);
 
-    // Device-side sanity: parse what actually arrived.
-    let received = nestquant::container::parse(&frames[0].payload, true)?;
+    // Device-side sanity: open what actually arrived as an in-memory
+    // archive (header + layout walk; no payload decode).
+    let received = nestquant::store::NqArchive::from_bytes(&frames[0].payload)?;
     println!(
         "[ota] container OK: {} tensors, INT({}|{}), sections {:.1}/{:.1} KB",
-        received.tensors.len(),
-        received.n,
-        received.h,
+        received.layout()?.len(),
+        received.index().n,
+        received.index().h,
         received.section_a_bytes() as f64 / 1e3,
         received.section_b_bytes() as f64 / 1e3
     );

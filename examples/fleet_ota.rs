@@ -19,6 +19,7 @@ use std::time::Duration;
 use anyhow::Result;
 use nestquant::device::{transmission_seconds, MemoryLedger, ResourceTrace, RPI_4B};
 use nestquant::fleet::{FleetClient, FleetConfig, FleetServer, Zoo};
+use nestquant::store::SectionSource;
 
 fn main() -> Result<()> {
     let mut args = std::env::args().skip(1);
@@ -93,6 +94,31 @@ fn main() -> Result<()> {
         println!("  (section B fits in ≤3 chunks here; nothing to resume)");
     }
     let (killed, resume_from, resumed) = (demo.killed, demo.resume_from, demo.resumed);
+
+    // store-over-the-wire: open the same model as a *remote archive* —
+    // identical typed views to a local file, bytes served by the fleet
+    // tier (and its shared section cache)
+    let remote = std::sync::Arc::new(nestquant::fleet::RemoteSource::connect(
+        handle.addr,
+        "dev-store",
+        model.as_str(),
+        Duration::from_secs(30),
+    )?);
+    let archive = nestquant::store::NqArchive::with_source(remote.clone())?;
+    let part = archive.part_bit()?;
+    println!(
+        "\n  remote archive: {} tensors, INT({}|{}), {:.1} KB section A via {}",
+        part.len(),
+        archive.index().n,
+        archive.index().h,
+        archive.section_a_bytes() as f64 / 1e3,
+        archive.source().describe()
+    );
+    drop(part);
+    let (_, remote_received) = remote.wire();
+    wire_total += remote_received;
+    drop(archive);
+    drop(remote);
 
     let cache = std::sync::Arc::clone(&handle.cache);
     let meter = std::sync::Arc::clone(&handle.meter);

@@ -1,16 +1,20 @@
 // perf probe: a0 vs a8 latency per arch
-use nestquant::container::{self, TensorData};
 use nestquant::runtime::{Engine, Manifest};
+use nestquant::store::{NqArchive, PayloadView};
 fn main() -> anyhow::Result<()> {
     let root = nestquant::artifacts_dir();
     let m = Manifest::load(&root)?;
     let engine = Engine::cpu()?;
+    let mut scratch = Vec::new();
     for arch in ["cnn_m", "vit_s"] {
         let spec = m.model(arch)?;
-        let c = container::read(&m.abs(&spec.fp32_container), false)?;
+        let model = NqArchive::open(m.abs(&spec.fp32_container))?.part_bit()?;
         let mut bufs = Vec::new();
-        for (t, p) in c.tensors.iter().zip(&spec.params) {
-            if let TensorData::Fp32(v) = &t.data { bufs.push(engine.upload(v, &p.shape)?); }
+        for (t, p) in model.tensors().zip(&spec.params) {
+            if let PayloadView::Fp32(v) = t.payload() {
+                v.read_into(&mut scratch);
+                bufs.push(engine.upload(&scratch, &p.shape)?);
+            }
         }
         let (x, _) = m.load_val()?;
         let il = m.img * m.img * m.channels;

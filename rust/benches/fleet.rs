@@ -7,6 +7,7 @@ use std::time::Duration;
 
 use nestquant::container;
 use nestquant::fleet::{FleetClient, FleetConfig, FleetServer, Section, SectionCache, Zoo};
+use nestquant::store::{FileSource, SectionSource};
 use nestquant::transport::{chunk_frame, parse_chunk, ChunkHeader};
 use nestquant::util::benchkit::Bench;
 
@@ -26,20 +27,21 @@ fn main() {
         b_len as f64 / 1e3
     );
 
-    // header probe (the random-access entry point)
+    // header probe (the random-access entry point; un-memoized)
     b.run("fleet probe section index", || {
-        std::hint::black_box(container::probe(&path).unwrap());
+        std::hint::black_box(FileSource::new(&path).index().unwrap());
     });
 
     // section cache: cold read vs hit
+    let source = FileSource::new(&path);
     b.run("fleet cache miss (disk section read)", || {
         let cache = SectionCache::new(u64::MAX);
-        std::hint::black_box(cache.get(&path, Section::B).unwrap());
+        std::hint::black_box(cache.get("m", &source, Section::B).unwrap());
     });
     let cache = SectionCache::new(u64::MAX);
-    cache.get(&path, Section::B).unwrap();
+    cache.get("m", &source, Section::B).unwrap();
     b.run_throughput("fleet cache hit", b_len as f64, "B", || {
-        std::hint::black_box(cache.get(&path, Section::B).unwrap());
+        std::hint::black_box(cache.get("m", &source, Section::B).unwrap());
     });
 
     // chunk framing

@@ -115,23 +115,7 @@ impl PackedTensor {
 
     /// Unpack into a caller buffer (hot path: avoids realloc on re-page-in).
     pub fn unpack_into(&self, out: &mut Vec<i32>) {
-        out.clear();
-        out.reserve(self.len);
-        let n_lanes = lanes(self.bits);
-        let bits = self.bits as usize;
-        let mask = (1u64 << bits) - 1;
-        let full_words = self.len / n_lanes;
-        // word-at-a-time main loop: one load per `lanes` outputs
-        for w in 0..full_words {
-            let mut word = self.words[w];
-            for _ in 0..n_lanes {
-                out.push(sign_extend(word & mask, self.bits));
-                word >>= bits;
-            }
-        }
-        for i in full_words * n_lanes..self.len {
-            out.push(self.get(i));
-        }
+        unpack_words_into(self.words.iter().copied(), self.bits, self.len, out);
     }
 
     /// Iterator over the values without materializing.
@@ -141,7 +125,7 @@ impl PackedTensor {
 }
 
 #[inline]
-fn sign_extend(field: u64, bits: u8) -> i32 {
+pub(crate) fn sign_extend(field: u64, bits: u8) -> i32 {
     let shift = 64 - bits as u32;
     (((field << shift) as i64) >> shift) as i32
 }
@@ -149,6 +133,45 @@ fn sign_extend(field: u64, bits: u8) -> i32 {
 /// Ideal packed payload size in bytes for `count` `bits`-bit elements.
 pub fn packed_nbytes(count: usize, bits: u8) -> usize {
     count.div_ceil(lanes(bits)) * 8
+}
+
+/// Packed words needed for `count` `bits`-bit elements.
+pub fn packed_nwords(count: usize, bits: u8) -> usize {
+    count.div_ceil(lanes(bits))
+}
+
+/// Unpack `len` sign-extended `bits`-bit values from a word stream into a
+/// caller buffer. This is the decode kernel shared by [`PackedTensor`]
+/// and the zero-copy `store::PackedView` (which feeds words straight from
+/// an `Arc<[u8]>` archive slice, never materializing a word `Vec`).
+/// Callers must supply at least `packed_nwords(len, bits)` words; the
+/// caller is trusted on `bits` being in range (the packed containers
+/// validate it at parse time).
+pub fn unpack_words_into<I: Iterator<Item = u64>>(
+    words: I,
+    bits: u8,
+    len: usize,
+    out: &mut Vec<i32>,
+) {
+    out.clear();
+    out.reserve(len);
+    let n_lanes = lanes(bits);
+    let b = bits as usize;
+    let mask = (1u64 << b) - 1;
+    let mut remaining = len;
+    for mut word in words {
+        if remaining == 0 {
+            break;
+        }
+        let take = remaining.min(n_lanes);
+        // word-at-a-time main loop: one load per `lanes` outputs
+        for _ in 0..take {
+            out.push(sign_extend(word & mask, bits));
+            word >>= b;
+        }
+        remaining -= take;
+    }
+    debug_assert_eq!(remaining, 0, "word stream shorter than {len} x INT{bits}");
 }
 
 #[cfg(test)]
@@ -229,6 +252,28 @@ mod tests {
         assert_eq!(packed_nbytes(17, 4), 16);
         assert_eq!(packed_nbytes(21, 3), 8);
         assert_eq!(packed_nbytes(22, 3), 16);
+    }
+
+    #[test]
+    fn unpack_words_into_matches_packed_tensor() {
+        for bits in [2u8, 3, 4, 7, 8, 11, 16] {
+            let (lo, hi) = int_range(bits);
+            let vals: Vec<i32> = (0..77).map(|i| lo + (i * 13) % (hi - lo + 1)).collect();
+            let t = PackedTensor::pack(&vals, bits).unwrap();
+            let mut via_stream = Vec::new();
+            unpack_words_into(t.words().iter().copied(), bits, vals.len(), &mut via_stream);
+            assert_eq!(via_stream, vals, "bits={bits}");
+            // and from raw LE bytes, the container/store decode path
+            let bytes: Vec<u8> = t.words().iter().flat_map(|w| w.to_le_bytes()).collect();
+            let mut via_bytes = Vec::new();
+            unpack_words_into(
+                bytes.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())),
+                bits,
+                vals.len(),
+                &mut via_bytes,
+            );
+            assert_eq!(via_bytes, vals, "bits={bits}");
+        }
     }
 
     #[test]

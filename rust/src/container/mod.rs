@@ -2,11 +2,19 @@
 //! `python/compile/nqformat.py` (see that module's layout doc).
 //!
 //! The crucial affordance is *sectioned reads*: a part-bit launch parses
-//! section A only (`read_part`); the upgrade path reads section B as one
-//! contiguous tail (`read_section_b`). Those two byte counts ARE the
-//! paper's page-in/page-out overheads (Table 11).
+//! section A only; the upgrade path reads section B as one contiguous
+//! tail. Those two byte counts ARE the paper's page-in/page-out
+//! overheads (Table 11).
+//!
+//! This module owns the **format**: the byte layout, the typed
+//! [`Container`] decode, the [`SectionIndex`], and the writer
+//! ([`serialize`]/[`write`]/[`synthetic_nest`]). **Access** goes through
+//! [`crate::store`]: open a `store::NqArchive` once and hand out views —
+//! the free functions `read`/`parse`/`probe`/`read_range`/
+//! `attach_section_b`/`read_section_b` remain as deprecated shims over
+//! the same internals for out-of-tree callers.
 
-use std::io::{Read, Write};
+use std::io::Write;
 use std::path::Path;
 
 use anyhow::{bail, ensure, Context, Result};
@@ -28,7 +36,7 @@ pub enum Kind {
 }
 
 impl Kind {
-    fn from_u8(v: u8) -> Result<Kind> {
+    pub(crate) fn from_u8(v: u8) -> Result<Kind> {
         Ok(match v {
             0 => Kind::Nest,
             1 => Kind::Mono,
@@ -37,7 +45,7 @@ impl Kind {
         })
     }
 
-    fn as_u8(self) -> u8 {
+    pub(crate) fn as_u8(self) -> u8 {
         match self {
             Kind::Nest => 0,
             Kind::Mono => 1,
@@ -165,9 +173,9 @@ impl SectionIndex {
 // reading
 // ---------------------------------------------------------------------------
 
-struct Cursor<'a> {
-    d: &'a [u8],
-    o: usize,
+pub(crate) struct Cursor<'a> {
+    pub(crate) d: &'a [u8],
+    pub(crate) o: usize,
 }
 
 /// Marker message for reads past the end of the buffer; [`probe`] keys
@@ -175,41 +183,41 @@ struct Cursor<'a> {
 const TRUNCATED: &str = "truncated container";
 
 impl<'a> Cursor<'a> {
-    fn raw(&mut self, n: usize) -> Result<&'a [u8]> {
+    pub(crate) fn raw(&mut self, n: usize) -> Result<&'a [u8]> {
         ensure!(self.o + n <= self.d.len(), "{TRUNCATED} at {}", self.o);
         let s = &self.d[self.o..self.o + n];
         self.o += n;
         Ok(s)
     }
 
-    fn u8(&mut self) -> Result<u8> {
+    pub(crate) fn u8(&mut self) -> Result<u8> {
         Ok(self.raw(1)?[0])
     }
 
-    fn u32(&mut self) -> Result<u32> {
+    pub(crate) fn u32(&mut self) -> Result<u32> {
         let b = self.raw(4)?;
         Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
-    fn u64(&mut self) -> Result<u64> {
+    pub(crate) fn u64(&mut self) -> Result<u64> {
         let b = self.raw(8)?;
         Ok(u64::from_le_bytes(b.try_into().unwrap()))
     }
 
-    fn str(&mut self) -> Result<String> {
+    pub(crate) fn str(&mut self) -> Result<String> {
         let n = self.u32()? as usize;
         ensure!(n < 1 << 20, "unreasonable string length {n}");
         Ok(String::from_utf8(self.raw(n)?.to_vec())?)
     }
 
-    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+    pub(crate) fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
         let b = self.raw(4 * n)?;
         Ok(b.chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect())
     }
 
-    fn packed(&mut self, count: usize) -> Result<(u8, PackedTensor)> {
+    pub(crate) fn packed(&mut self, count: usize) -> Result<(u8, PackedTensor)> {
         let bits = self.u8()?;
         let nw = self.u32()? as usize;
         let b = self.raw(8 * nw)?;
@@ -223,26 +231,34 @@ impl<'a> Cursor<'a> {
 
 /// Read a container. `part_bit_only` stops after section A (w_low = None):
 /// this is the *part-bit launch* read path and touches no section-B bytes.
+#[deprecated(note = "open a `store::NqArchive` once and use its views \
+                     (`part_bit`/`full_bit`/`to_container`) instead of per-call file reads")]
 pub fn read(path: &Path, part_bit_only: bool) -> Result<Container> {
+    read_impl(path, part_bit_only)
+}
+
+pub(crate) fn read_impl(path: &Path, part_bit_only: bool) -> Result<Container> {
     let data = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
-    parse(&data, part_bit_only).with_context(|| format!("parsing {}", path.display()))
+    parse_impl(&data, part_bit_only).with_context(|| format!("parsing {}", path.display()))
 }
 
 /// Parse from memory (transport hands over received bytes directly).
+#[deprecated(note = "use `store::NqArchive::from_bytes` (zero-copy views) or \
+                     `NqArchive::to_container` for an owned decode")]
 pub fn parse(data: &[u8], part_bit_only: bool) -> Result<Container> {
-    let mut c = Cursor { d: data, o: 0 };
-    ensure!(c.raw(8)? == MAGIC, "bad magic");
-    let version = c.u32()?;
-    ensure!(version == VERSION, "unsupported version {version}");
-    let kind = Kind::from_u8(c.u8()?)?;
-    let n = c.u8()?;
-    let h = c.u8()?;
-    let act_bits = c.u8()?;
-    let name = c.str()?;
-    let meta = c.str()?;
-    let num = c.u32()? as usize;
-    ensure!(num < 100_000, "unreasonable tensor count {num}");
-    let off_b = c.u64()?;
+    parse_impl(data, part_bit_only)
+}
+
+pub(crate) fn parse_impl(data: &[u8], part_bit_only: bool) -> Result<Container> {
+    let p = parse_prefix(data)?;
+    let mut c = Cursor {
+        d: data,
+        o: p.consumed,
+    };
+    let (kind, n, h, act_bits) = (p.kind, p.n, p.h, p.act_bits);
+    let (name, meta) = (p.name, p.meta);
+    let num = p.num_tensors;
+    let off_b = p.section_b_offset;
 
     let mut tensors = Vec::with_capacity(num);
     for _ in 0..num {
@@ -299,7 +315,7 @@ pub fn parse(data: &[u8], part_bit_only: bool) -> Result<Container> {
     if kind == Kind::Nest {
         ensure!(off_b as usize == c.o, "section B offset mismatch: {} vs {}", off_b, c.o);
         if !part_bit_only {
-            attach_section_b(&mut container, &data[off_b as usize..])?;
+            attach_section_b_impl(&mut container, &data[off_b as usize..])?;
         }
     } else {
         ensure!(off_b == 0, "non-nest container with section B");
@@ -309,7 +325,13 @@ pub fn parse(data: &[u8], part_bit_only: bool) -> Result<Container> {
 }
 
 /// Parse section-B bytes (the upgrade page-in blob) into w_low tensors.
+#[deprecated(note = "use `store::NqArchive::attach_b` — the archive keeps section B as one \
+                     shared `Arc` and decodes it lazily instead of copying into word vectors")]
 pub fn attach_section_b(container: &mut Container, blob: &[u8]) -> Result<()> {
+    attach_section_b_impl(container, blob)
+}
+
+pub(crate) fn attach_section_b_impl(container: &mut Container, blob: &[u8]) -> Result<()> {
     ensure!(container.kind == Kind::Nest, "section B only exists for nest containers");
     let expect_low = container.n - container.h + 1;
     let mut c = Cursor { d: blob, o: 0 };
@@ -326,22 +348,44 @@ pub fn attach_section_b(container: &mut Container, blob: &[u8]) -> Result<()> {
 }
 
 /// Read only the section-B tail from disk (the literal upgrade page-in).
+#[deprecated(note = "use `store::NqArchive::attach_b` — same single section-B read, \
+                     without re-decoding into per-tensor word vectors")]
 pub fn read_section_b(path: &Path, container: &mut Container) -> Result<u64> {
     ensure!(container.section_b_offset > 0, "container has no section B");
-    let mut f = std::fs::File::open(path)?;
-    use std::io::Seek;
-    f.seek(std::io::SeekFrom::Start(container.section_b_offset))?;
-    let mut blob = Vec::new();
-    f.read_to_end(&mut blob)?;
+    let file_len = std::fs::metadata(path)
+        .with_context(|| format!("stat {}", path.display()))?
+        .len();
+    ensure!(
+        container.section_b_offset <= file_len,
+        "section B offset {} beyond file length {file_len}",
+        container.section_b_offset
+    );
+    let blob = read_range_impl(path, container.section_b_offset..file_len)?;
     let nbytes = blob.len() as u64;
-    attach_section_b(container, &blob)?;
+    attach_section_b_impl(container, &blob)?;
     Ok(nbytes)
 }
 
-/// Parse just the fixed header prefix: (kind, n, h, act, name, off_b,
-/// bytes consumed). Errors with "truncated container" when `data` is too
-/// short — [`probe`] uses that to grow its read window.
-fn parse_prefix(data: &[u8]) -> Result<(Kind, u8, u8, u8, String, u64, usize)> {
+/// The fixed header prefix of a `.nq` file — the one decoder of these
+/// fields, shared by [`probe`], the in-memory indexer, and the store's
+/// layout walk.
+pub(crate) struct HeaderPrefix {
+    pub(crate) kind: Kind,
+    pub(crate) n: u8,
+    pub(crate) h: u8,
+    pub(crate) act_bits: u8,
+    pub(crate) name: String,
+    pub(crate) meta: String,
+    pub(crate) num_tensors: usize,
+    pub(crate) section_b_offset: u64,
+    /// Bytes consumed by the prefix (the first tensor record follows).
+    pub(crate) consumed: usize,
+}
+
+/// Parse just the fixed header prefix. Errors with "truncated container"
+/// when `data` is too short — [`probe`] uses that to grow its read
+/// window.
+pub(crate) fn parse_prefix(data: &[u8]) -> Result<HeaderPrefix> {
     let mut c = Cursor { d: data, o: 0 };
     ensure!(c.raw(8)? == MAGIC, "bad magic");
     let version = c.u32()?;
@@ -351,54 +395,93 @@ fn parse_prefix(data: &[u8]) -> Result<(Kind, u8, u8, u8, String, u64, usize)> {
     let h = c.u8()?;
     let act_bits = c.u8()?;
     let name = c.str()?;
-    let _meta = c.str()?;
-    let num = c.u32()? as usize;
-    ensure!(num < 100_000, "unreasonable tensor count {num}");
-    let off_b = c.u64()?;
-    Ok((kind, n, h, act_bits, name, off_b, c.o))
+    let meta = c.str()?;
+    let num_tensors = c.u32()? as usize;
+    ensure!(num_tensors < 100_000, "unreasonable tensor count {num_tensors}");
+    let section_b_offset = c.u64()?;
+    Ok(HeaderPrefix {
+        kind,
+        n,
+        h,
+        act_bits,
+        name,
+        meta,
+        num_tensors,
+        section_b_offset,
+        consumed: c.o,
+    })
+}
+
+/// Validate header-derived section geometry against the file length.
+fn check_section_geometry(kind: Kind, section_b_offset: u64, file_len: u64) -> Result<()> {
+    ensure!(
+        section_b_offset <= file_len,
+        "section B offset {section_b_offset} beyond file length {file_len}"
+    );
+    if kind == Kind::Nest {
+        ensure!(section_b_offset > 0, "nest container without section B");
+    } else {
+        ensure!(section_b_offset == 0, "non-nest container with section B");
+    }
+    Ok(())
+}
+
+/// Build a [`SectionIndex`] for a whole container already in memory
+/// (the `store::MemorySource` path; no file I/O).
+pub(crate) fn index_of_bytes(data: &[u8]) -> Result<SectionIndex> {
+    let p = parse_prefix(data)?;
+    let file_len = data.len() as u64;
+    check_section_geometry(p.kind, p.section_b_offset, file_len)?;
+    Ok(SectionIndex {
+        kind: p.kind,
+        n: p.n,
+        h: p.h,
+        act_bits: p.act_bits,
+        name: p.name,
+        section_b_offset: p.section_b_offset,
+        file_len,
+    })
 }
 
 /// Probe a `.nq` file's section layout by reading only the header prefix
 /// (a few KB), never the tensor payloads. This is the random-access entry
 /// point the fleet distribution layer uses to serve section reads for
 /// containers it has not (and will not) fully load.
+#[deprecated(note = "use `store::FileSource::index` (memoized) or `store::NqArchive::index`")]
 pub fn probe(path: &Path) -> Result<SectionIndex> {
+    probe_impl(path)
+}
+
+pub(crate) fn probe_impl(path: &Path) -> Result<SectionIndex> {
     let file_len = std::fs::metadata(path)
         .with_context(|| format!("stat {}", path.display()))?
         .len();
-    let mut f = std::fs::File::open(path)?;
+    let f = std::fs::File::open(path)?;
     let mut buf: Vec<u8> = Vec::new();
     let mut want: usize = 4096;
     // name + meta are each < 1 MiB, so a legal header prefix fits well
     // inside this window; anything needing more is corrupt.
     const MAX_HEADER_WINDOW: usize = 4 << 20;
     loop {
-        // extend the window to `want` bytes (or EOF)
+        // extend the window to `want` bytes (or EOF); positioned reads —
+        // probing never moves a shared cursor
         let target = want.min(file_len as usize);
         if buf.len() < target {
             let old = buf.len();
             buf.resize(target, 0);
-            f.read_exact(&mut buf[old..])
+            read_exact_at(&f, &mut buf[old..], old as u64)
                 .with_context(|| format!("reading header of {}", path.display()))?;
         }
         match parse_prefix(&buf) {
-            Ok((kind, n, h, act_bits, name, section_b_offset, _consumed)) => {
-                ensure!(
-                    section_b_offset <= file_len,
-                    "section B offset {section_b_offset} beyond file length {file_len}"
-                );
-                if kind == Kind::Nest {
-                    ensure!(section_b_offset > 0, "nest container without section B");
-                } else {
-                    ensure!(section_b_offset == 0, "non-nest container with section B");
-                }
+            Ok(p) => {
+                check_section_geometry(p.kind, p.section_b_offset, file_len)?;
                 return Ok(SectionIndex {
-                    kind,
-                    n,
-                    h,
-                    act_bits,
-                    name,
-                    section_b_offset,
+                    kind: p.kind,
+                    n: p.n,
+                    h: p.h,
+                    act_bits: p.act_bits,
+                    name: p.name,
+                    section_b_offset: p.section_b_offset,
                     file_len,
                 });
             }
@@ -417,16 +500,38 @@ pub fn probe(path: &Path) -> Result<SectionIndex> {
     }
 }
 
+/// Positioned read: never touches the handle's seek cursor, so concurrent
+/// section reads on one file never race (the fleet server's disk path).
+#[cfg(unix)]
+pub(crate) fn read_exact_at(f: &std::fs::File, buf: &mut [u8], offset: u64) -> std::io::Result<()> {
+    use std::os::unix::fs::FileExt;
+    f.read_exact_at(buf, offset)
+}
+
+/// Non-unix fallback: seek a *private clone* of the handle so the
+/// caller's descriptor keeps positioned-read semantics.
+#[cfg(not(unix))]
+pub(crate) fn read_exact_at(f: &std::fs::File, buf: &mut [u8], offset: u64) -> std::io::Result<()> {
+    use std::io::{Read, Seek, SeekFrom};
+    let mut f = f.try_clone()?;
+    f.seek(SeekFrom::Start(offset))?;
+    f.read_exact(buf)
+}
+
 /// Read an arbitrary byte range from a container file (pread-style random
 /// access; the fleet section cache's disk path).
+#[deprecated(note = "use `store::FileSource::fetch` for section reads, or \
+                     `store::read_file_range` for raw ranges")]
 pub fn read_range(path: &Path, range: std::ops::Range<u64>) -> Result<Vec<u8>> {
+    read_range_impl(path, range)
+}
+
+pub(crate) fn read_range_impl(path: &Path, range: std::ops::Range<u64>) -> Result<Vec<u8>> {
     ensure!(range.start <= range.end, "inverted range");
-    let mut f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
-    use std::io::Seek;
-    f.seek(std::io::SeekFrom::Start(range.start))?;
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
     let len = (range.end - range.start) as usize;
     let mut out = vec![0u8; len];
-    f.read_exact(&mut out).with_context(|| {
+    read_exact_at(&f, &mut out, range.start).with_context(|| {
         format!(
             "reading [{}, {}) of {}",
             range.start,
@@ -606,6 +711,7 @@ pub fn ideal_split(counts: &[usize], n: u8, h: u8) -> (u64, u64) {
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the shims must keep working for out-of-tree callers
 mod tests {
     use super::*;
     use crate::nest;

@@ -4,18 +4,21 @@
 //!
 //! NestQuant's win is exactly that this baseline pays `size(INTa)`
 //! page-out plus `size(INTb)` page-in per switch, while NestQuant moves
-//! only section B.
+//! only section B. Access goes through the store like everything else —
+//! each switch fetches the whole archive and releases it again, so the
+//! archive's `a_fetches` counter *is* the baseline's re-read count.
 
 use std::collections::BTreeMap;
-use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
-use crate::container::{self, Kind, TensorData};
+use crate::container::Kind;
 use crate::device::MemoryLedger;
 use crate::quant;
 use crate::runtime::{Engine, Executable, ModelSpec};
+use crate::store::{ModelStore, NqArchive, PayloadView};
 
 use super::manager::SwitchCost;
 
@@ -25,8 +28,8 @@ pub struct DiverseBitwidths {
     spec: ModelSpec,
     engine: Engine,
     exe: Executable,
-    /// bits → (path, file bytes)
-    models: BTreeMap<u8, (PathBuf, u64)>,
+    /// bits → (archive, file bytes)
+    models: BTreeMap<u8, (Arc<NqArchive>, u64)>,
     active: Option<u8>,
     weight_bufs: Vec<crate::runtime::DeviceBuffer>,
 }
@@ -51,11 +54,14 @@ impl DiverseBitwidths {
                 .mono_containers
                 .get(&k)
                 .ok_or_else(|| anyhow::anyhow!("no INT{k} container for {}", spec.name))?;
-            let path = artifacts_root.join(rel);
-            let bytes = std::fs::metadata(&path)
-                .with_context(|| path.display().to_string())?
-                .len();
-            models.insert(k, (path, bytes));
+            let archive = ModelStore::global().open_path(artifacts_root.join(rel))?;
+            ensure!(
+                archive.kind() == Kind::Mono,
+                "baseline requires mono containers, got {:?} for INT{k}",
+                archive.kind()
+            );
+            let bytes = archive.index().file_len;
+            models.insert(k, (archive, bytes));
         }
         Ok(DiverseBitwidths {
             spec,
@@ -81,14 +87,16 @@ impl DiverseBitwidths {
     }
 
     /// Switch to the INTk model: page out the active one entirely, page
-    /// in the new one entirely (the Fig 1 deployment's cost model).
+    /// in the new one entirely (the Fig 1 deployment's cost model). The
+    /// archive is released afterwards, so every switch is a real full
+    /// re-fetch — the cost NestQuant's sectioned archive avoids.
     pub fn switch_to(&mut self, bits: u8, ledger: &mut MemoryLedger) -> Result<SwitchCost> {
         let t0 = Instant::now();
-        let (path, in_bytes) = self
+        let (archive, in_bytes) = self
             .models
             .get(&bits)
-            .ok_or_else(|| anyhow::anyhow!("INT{bits} not registered"))?
-            .clone();
+            .map(|(a, b)| (Arc::clone(a), *b))
+            .ok_or_else(|| anyhow::anyhow!("INT{bits} not registered"))?;
         let mut out_bytes = 0;
         if let Some(cur) = self.active {
             let (_, b) = self.models[&cur];
@@ -97,26 +105,28 @@ impl DiverseBitwidths {
             self.weight_bufs.clear();
         }
         ledger.page_in(in_bytes).context("baseline page-in")?;
-        let c = container::read(&path, false)?;
-        ensure!(c.kind == Kind::Mono, "baseline requires mono containers");
-        let mut bufs = Vec::with_capacity(c.tensors.len());
+        let model = archive.part_bit()?; // mono: section A is the whole model
+        let mut bufs = Vec::with_capacity(model.len());
         let mut scratch_int = Vec::new();
+        let mut scratch_scales = Vec::new();
         let mut scratch_f32 = Vec::new();
-        for (t, spec) in c.tensors.iter().zip(&self.spec.params) {
-            ensure!(t.name == spec.name, "tensor order mismatch");
-            match &t.data {
-                TensorData::Fp32(vals) => {
-                    scratch_f32.clear();
-                    scratch_f32.extend_from_slice(vals);
+        for (view, spec) in model.tensors().zip(&self.spec.params) {
+            ensure!(view.name() == spec.name, "tensor order mismatch");
+            match view.payload() {
+                PayloadView::Fp32(vals) => {
+                    vals.read_into(&mut scratch_f32);
                 }
-                TensorData::Mono { scales, w_int } => {
+                PayloadView::Mono { scales, w_int } => {
                     w_int.unpack_into(&mut scratch_int);
-                    quant::dequant(&scratch_int, scales, &mut scratch_f32);
+                    scales.read_into(&mut scratch_scales);
+                    quant::dequant(&scratch_int, &scratch_scales, &mut scratch_f32);
                 }
-                TensorData::Nest { .. } => anyhow::bail!("nest tensor in mono container"),
+                PayloadView::Nest { .. } => bail!("nest tensor in mono container"),
             }
             bufs.push(self.engine.upload(&scratch_f32, &spec.shape)?);
         }
+        drop(model);
+        archive.release_a(); // the baseline holds nothing between switches
         self.weight_bufs = bufs;
         self.active = Some(bits);
         Ok(SwitchCost {

@@ -1,15 +1,20 @@
-//! ModelManager: the on-device NestQuant switching mechanism (§3.3).
+//! ModelManager: the on-device NestQuant switching mechanism (§3.3),
+//! rebuilt on the [`crate::store`] access layer.
 //!
-//! Holds one `.nq` container and the compiled executable for its
+//! Holds one shared [`NqArchive`] and the compiled executable for its
 //! architecture, and realizes the paper's three switch transitions:
 //!
-//! * **part-bit launch** — read section A only; dequantize `w_high` with
-//!   the inflated scale `s·2^l` (Eq. 10).
-//! * **upgrade** — page in section B (the only bytes moved), recompose
+//! * **part-bit launch** — fetch section A once; dequantize `w_high`
+//!   straight from the archive bytes with the inflated scale `s·2^l`
+//!   (Eq. 10).
+//! * **upgrade** — attach section B (the only bytes moved), recompose
 //!   `w_int = w_high·2^l + w_low` (Eq. 6), dequantize with `s`.
-//!   Zero page-out.
-//! * **downgrade** — drop `w_low` and the full-bit weights; rebuild the
-//!   part-bit weights from `w_high` already in memory. Zero page-in.
+//!   Zero page-out. **Zero section-A re-reads and zero container
+//!   re-parses** — the archive's byte accounting proves it
+//!   (`tests/store.rs`).
+//! * **downgrade** — release the section-B `Arc` and the full-bit
+//!   weights; the part-bit weights rebuild from the still-resident
+//!   section-A bytes. Zero page-in.
 //!
 //! Memory accounting follows the paper's convention (§4.3.3): the ledger
 //! tracks *packed* bytes (what a packed-int runtime holds). The PJRT CPU
@@ -18,18 +23,21 @@
 //! compute; the packed accounting is what Table 11 reports.
 //!
 //! Hot path: weights live as device-resident PJRT buffers, rebuilt only
-//! on a switch; a request uploads just its input batch.
+//! on a switch; a request uploads just its input batch. The decode path
+//! is copy-free until the dequantized f32s: packed words stream from
+//! the archive's `Arc<[u8]>` sections directly into reused i32 scratch.
 
-use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::container::{self, Container, Kind, TensorData};
+use crate::container::Kind;
 use crate::device::MemoryLedger;
 use crate::nest;
 use crate::quant;
 use crate::runtime::{Engine, Executable, ModelSpec};
+use crate::store::{NqArchive, PayloadView, TensorView};
 
 /// Which weights are currently active.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -60,8 +68,8 @@ pub struct ModelManager {
     spec: ModelSpec,
     engine: Engine,
     exe: Executable,
-    container_path: PathBuf,
-    container: Option<Container>,
+    /// Shared handle to the `.nq` artifact; owns the section bytes.
+    archive: Arc<NqArchive>,
     /// Packed section sizes (bytes) for ledger accounting.
     sec_a_bytes: u64,
     sec_b_bytes: u64,
@@ -79,11 +87,16 @@ pub struct ModelManager {
     scratch_low: Vec<i32>,
     scratch_int: Vec<i32>,
     scratch_f32: Vec<f32>,
+    scratch_scales: Vec<f32>,
 }
 
 impl ModelManager {
     /// Create a manager for `spec` over the nest container at
-    /// `container_rel`, serving with the `act_bits` graph.
+    /// `container_rel`, serving with the `act_bits` graph. The manager
+    /// *owns* its archive (its upgrade/downgrade lifecycle releases
+    /// section bytes, which must not evict them under another manager);
+    /// deliberate sharing goes through [`ModelManager::from_archive`]
+    /// with an archive from a [`crate::store::ModelStore`].
     pub fn new(
         engine: &Engine,
         spec: ModelSpec,
@@ -91,23 +104,34 @@ impl ModelManager {
         artifacts_root: &std::path::Path,
         container_rel: &str,
     ) -> Result<ModelManager> {
+        let archive = Arc::new(NqArchive::open(artifacts_root.join(container_rel))?);
+        ModelManager::from_archive(engine, spec, act_bits, artifacts_root, archive)
+    }
+
+    /// Create a manager over an already-open archive — any
+    /// [`crate::store::SectionSource`] works, including a fleet
+    /// `RemoteSource` (serve a model this device never had on disk).
+    pub fn from_archive(
+        engine: &Engine,
+        spec: ModelSpec,
+        act_bits: u8,
+        artifacts_root: &std::path::Path,
+        archive: Arc<NqArchive>,
+    ) -> Result<ModelManager> {
         let hlo_rel = spec
             .hlo
             .get(&act_bits)
             .ok_or_else(|| anyhow::anyhow!("no a{act_bits} HLO for {}", spec.name))?;
         let exe = engine.load_hlo(&artifacts_root.join(hlo_rel))?;
-        let container_path = artifacts_root.join(container_rel);
-        // probe sizes without keeping data
-        let probe = container::read(&container_path, true)?;
-        ensure!(probe.kind == Kind::Nest, "manager requires a nest container");
+        // header probe only: sizes come from the index, no payload read
+        ensure!(archive.kind() == Kind::Nest, "manager requires a nest container");
         Ok(ModelManager {
             spec,
             engine: engine.clone(),
             exe,
-            sec_a_bytes: probe.section_a_bytes(),
-            sec_b_bytes: probe.section_b_bytes(),
-            container_path,
-            container: None,
+            sec_a_bytes: archive.section_a_bytes(),
+            sec_b_bytes: archive.section_b_bytes(),
+            archive,
             weight_bufs: Vec::new(),
             part_bufs: Vec::new(),
             state: State::Unloaded,
@@ -115,6 +139,7 @@ impl ModelManager {
             scratch_low: Vec::new(),
             scratch_int: Vec::new(),
             scratch_f32: Vec::new(),
+            scratch_scales: Vec::new(),
         })
     }
 
@@ -126,11 +151,15 @@ impl ModelManager {
         &self.spec
     }
 
-    /// Nest config (n, h) of the loaded container.
+    /// The shared archive handle (byte accounting, views).
+    pub fn archive(&self) -> &Arc<NqArchive> {
+        &self.archive
+    }
+
+    /// Nest config (n, h) of the archive.
     pub fn nest_config(&self) -> Option<nest::NestConfig> {
-        self.container
-            .as_ref()
-            .and_then(|c| nest::NestConfig::new(c.n, c.h).ok())
+        let idx = self.archive.index();
+        nest::NestConfig::new(idx.n, idx.h).ok()
     }
 
     /// Packed bytes of {w_high + scales + fp32 params} / {w_low}.
@@ -138,14 +167,12 @@ impl ModelManager {
         (self.sec_a_bytes, self.sec_b_bytes)
     }
 
-    /// Launch the part-bit model: section-A read only (Eq. 10 dequant).
+    /// Launch the part-bit model: section-A fetch only (Eq. 10 dequant).
     pub fn load_part_bit(&mut self, ledger: &mut MemoryLedger) -> Result<SwitchCost> {
         let t0 = Instant::now();
         ensure!(self.state == State::Unloaded, "load_part_bit from {:?}", self.state);
         ledger.page_in(self.sec_a_bytes).context("part-bit page-in")?;
-        let c = container::read(&self.container_path, true)?;
-        self.materialize(&c, Variant::PartBit)?;
-        self.container = Some(c);
+        self.materialize(Variant::PartBit)?;
         self.state = State::Active(Variant::PartBit);
         Ok(SwitchCost {
             page_in_bytes: self.sec_a_bytes,
@@ -154,16 +181,14 @@ impl ModelManager {
         })
     }
 
-    /// Launch directly as full-bit (whole-file read).
+    /// Launch directly as full-bit (both sections fetched).
     pub fn load_full_bit(&mut self, ledger: &mut MemoryLedger) -> Result<SwitchCost> {
         let t0 = Instant::now();
         ensure!(self.state == State::Unloaded, "load_full_bit from {:?}", self.state);
         ledger
             .page_in(self.sec_a_bytes + self.sec_b_bytes)
             .context("full-bit page-in")?;
-        let c = container::read(&self.container_path, false)?;
-        self.materialize(&c, Variant::FullBit)?;
-        self.container = Some(c);
+        self.materialize(Variant::FullBit)?;
         self.state = State::Active(Variant::FullBit);
         Ok(SwitchCost {
             page_in_bytes: self.sec_a_bytes + self.sec_b_bytes,
@@ -172,8 +197,9 @@ impl ModelManager {
         })
     }
 
-    /// Upgrade part-bit → full-bit: page in section B, recompose.
-    /// **Zero page-out** — the NestQuant claim of Table 11.
+    /// Upgrade part-bit → full-bit: attach section B, recompose.
+    /// **Zero page-out** — the NestQuant claim of Table 11 — and zero
+    /// section-A bytes touched (the archive re-serves its resident `Arc`).
     pub fn upgrade(&mut self, ledger: &mut MemoryLedger) -> Result<SwitchCost> {
         let t0 = Instant::now();
         ensure!(
@@ -182,13 +208,10 @@ impl ModelManager {
             self.state
         );
         ledger.page_in(self.sec_b_bytes).context("upgrade page-in")?;
-        let mut c = self.container.take().expect("container loaded");
-        container::read_section_b(&self.container_path, &mut c)?;
         // stash the current part-bit buffers for an O(1) later downgrade
         let part = std::mem::take(&mut self.weight_bufs);
-        self.materialize(&c, Variant::FullBit)?;
+        self.materialize(Variant::FullBit)?;
         self.part_bufs = part;
-        self.container = Some(c);
         self.state = State::Active(Variant::FullBit);
         Ok(SwitchCost {
             page_in_bytes: self.sec_b_bytes,
@@ -197,8 +220,9 @@ impl ModelManager {
         })
     }
 
-    /// Downgrade full-bit → part-bit: drop w_low. **Zero page-in** — the
-    /// part-bit weights are rebuilt from w_high already resident.
+    /// Downgrade full-bit → part-bit: release the section-B `Arc`.
+    /// **Zero page-in** — the part-bit weights are rebuilt (or swapped
+    /// back) from section A already resident.
     pub fn downgrade(&mut self, ledger: &mut MemoryLedger) -> Result<SwitchCost> {
         let t0 = Instant::now();
         ensure!(
@@ -206,21 +230,15 @@ impl ModelManager {
             "downgrade from {:?}",
             self.state
         );
-        let mut c = self.container.take().expect("container loaded");
-        for t in &mut c.tensors {
-            if let TensorData::Nest { w_low, .. } = &mut t.data {
-                *w_low = None; // page out
-            }
-        }
+        self.archive.release_b(); // page out
         ledger.page_out(self.sec_b_bytes).context("downgrade page-out")?;
         if self.part_bufs.is_empty() {
-            self.materialize(&c, Variant::PartBit)?;
+            self.materialize(Variant::PartBit)?;
         } else {
             // hot path: the part-bit buffers derive from the still-resident
-            // w_high — swap them in without touching the packed data
+            // section A — swap them in without touching the packed data
             self.weight_bufs = std::mem::take(&mut self.part_bufs);
         }
-        self.container = Some(c);
         self.state = State::Active(Variant::PartBit);
         Ok(SwitchCost {
             page_in_bytes: 0,
@@ -237,7 +255,7 @@ impl ModelManager {
             State::Active(Variant::FullBit) => self.sec_a_bytes + self.sec_b_bytes,
         };
         ledger.page_out(bytes)?;
-        self.container = None;
+        self.archive.release_a(); // drops both sections; layout survives
         self.weight_bufs.clear();
         self.part_bufs.clear();
         self.state = State::Unloaded;
@@ -248,40 +266,67 @@ impl ModelManager {
         })
     }
 
-    /// Dequantize the container into device-resident weight buffers.
-    fn materialize(&mut self, c: &Container, variant: Variant) -> Result<()> {
+    /// Dequantize the archive's views into device-resident weight
+    /// buffers. Fetches exactly the sections the variant needs.
+    fn materialize(&mut self, variant: Variant) -> Result<()> {
+        match variant {
+            Variant::PartBit => {
+                let model = self.archive.part_bit()?;
+                self.upload_views(model.tensors(), variant)
+            }
+            Variant::FullBit => {
+                let model = self.archive.full_bit()?;
+                self.upload_views(model.tensors(), variant)
+            }
+        }
+    }
+
+    /// The shared decode+upload loop: packed words stream from the
+    /// section bytes into reused scratch, dequantize, upload.
+    fn upload_views<'m>(
+        &mut self,
+        views: impl ExactSizeIterator<Item = TensorView<'m>>,
+        variant: Variant,
+    ) -> Result<()> {
         ensure!(
-            c.tensors.len() == self.spec.params.len(),
+            views.len() == self.spec.params.len(),
             "container/spec tensor count mismatch: {} vs {}",
-            c.tensors.len(),
+            views.len(),
             self.spec.params.len()
         );
-        let cfg = nest::NestConfig::new(c.n, c.h)?;
-        let mut bufs = Vec::with_capacity(c.tensors.len());
-        for (t, spec) in c.tensors.iter().zip(&self.spec.params) {
-            ensure!(t.name == spec.name, "tensor order: {} vs {}", t.name, spec.name);
-            ensure!(t.shape == spec.shape, "{}: shape mismatch", t.name);
+        let idx = self.archive.index();
+        let cfg = nest::NestConfig::new(idx.n, idx.h)?;
+        let mut bufs = Vec::with_capacity(self.spec.params.len());
+        for (view, spec) in views.zip(&self.spec.params) {
+            ensure!(
+                view.name() == spec.name,
+                "tensor order: {} vs {}",
+                view.name(),
+                spec.name
+            );
+            ensure!(view.shape() == spec.shape, "{}: shape mismatch", view.name());
             let out = &mut self.scratch_f32;
-            match &t.data {
-                TensorData::Fp32(vals) => {
-                    out.clear();
-                    out.extend_from_slice(vals);
+            match view.payload() {
+                PayloadView::Fp32(vals) => {
+                    vals.read_into(out);
                 }
-                TensorData::Nest {
+                PayloadView::Nest {
                     scales,
                     w_high,
                     w_low,
                 } => match variant {
                     Variant::PartBit => {
                         w_high.unpack_into(&mut self.scratch_high);
-                        let inflated: Vec<f32> =
-                            scales.iter().map(|&s| s * cfg.scale_inflation()).collect();
-                        quant::dequant(&self.scratch_high, &inflated, out);
+                        scales.read_into(&mut self.scratch_scales);
+                        for s in self.scratch_scales.iter_mut() {
+                            *s *= cfg.scale_inflation();
+                        }
+                        quant::dequant(&self.scratch_high, &self.scratch_scales, out);
                     }
                     Variant::FullBit => {
-                        let low = w_low
-                            .as_ref()
-                            .ok_or_else(|| anyhow::anyhow!("{}: w_low not paged in", t.name))?;
+                        let low = w_low.ok_or_else(|| {
+                            anyhow::anyhow!("{}: w_low not paged in", view.name())
+                        })?;
                         w_high.unpack_into(&mut self.scratch_high);
                         low.unpack_into(&mut self.scratch_low);
                         nest::recompose_into(
@@ -290,10 +335,11 @@ impl ModelManager {
                             cfg.l(),
                             &mut self.scratch_int,
                         );
-                        quant::dequant(&self.scratch_int, scales, out);
+                        scales.read_into(&mut self.scratch_scales);
+                        quant::dequant(&self.scratch_int, &self.scratch_scales, out);
                     }
                 },
-                TensorData::Mono { .. } => bail!("mono tensor in nest container"),
+                PayloadView::Mono { .. } => bail!("mono tensor in nest container"),
             }
             bufs.push(self.engine.upload(out, &spec.shape)?);
         }

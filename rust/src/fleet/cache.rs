@@ -1,15 +1,16 @@
 //! Zoo-wide section cache: one RAM budget, LRU eviction, section-granular
-//! `.nq` reads.
+//! fetches through the store's [`SectionSource`] abstraction.
 //!
 //! N devices pulling M models must not re-read or duplicate section
-//! bytes server-side: the first request for a (container, section) pair
-//! reads exactly that byte range from disk ([`container::probe`] +
-//! [`container::read_range`] — never the whole file), and every
-//! concurrent or later request gets the same `Arc` bytes. Loading is
-//! **per-key single-flight**: racers for the same section wait on a
-//! condvar and then hit, while the disk read itself happens *outside*
-//! the cache lock — a cold multi-megabyte read never blocks hits on
-//! unrelated sections.
+//! bytes server-side: the first request for a (model, section) pair
+//! fetches exactly that section from its source (for a
+//! [`crate::store::FileSource`], a memoized header probe plus one
+//! positioned range read — never the whole file), and every concurrent
+//! or later request gets the same `Arc` bytes. Loading is **per-key
+//! single-flight**: racers for the same section wait on a condvar and
+//! then hit, while the source fetch itself happens *outside* the cache
+//! lock — a cold multi-megabyte read never blocks hits on unrelated
+//! sections.
 //!
 //! Eviction is LRU over entries other than the one being inserted; a
 //! single section larger than the whole budget is allowed to overshoot
@@ -18,12 +19,11 @@
 //! eviction.
 
 use std::collections::{HashMap, HashSet};
-use std::path::{Path, PathBuf};
 use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::Result;
 
-use crate::container::{self, SectionIndex};
+use crate::store::{Bytes, SectionSource};
 
 use super::Section;
 
@@ -33,7 +33,7 @@ pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
     pub evictions: u64,
-    /// Bytes read from disk (== sum of missed section lengths).
+    /// Bytes fetched from sources (== sum of missed section lengths).
     pub disk_bytes: u64,
     /// Bytes currently resident.
     pub used_bytes: u64,
@@ -42,15 +42,14 @@ pub struct CacheStats {
 }
 
 struct Entry {
-    bytes: Arc<Vec<u8>>,
+    bytes: Bytes,
     last_used: u64,
 }
 
 struct Inner {
-    map: HashMap<(PathBuf, Section), Entry>,
-    indexes: HashMap<PathBuf, SectionIndex>,
-    /// Keys currently being read from disk by some thread (single-flight).
-    loading: HashSet<(PathBuf, Section)>,
+    map: HashMap<(String, Section), Entry>,
+    /// Keys currently being fetched by some thread (single-flight).
+    loading: HashSet<(String, Section)>,
     used: u64,
     tick: u64,
     hits: u64,
@@ -59,7 +58,7 @@ struct Inner {
     disk_bytes: u64,
 }
 
-/// Shared section cache with a fixed RAM budget.
+/// Shared section cache with a fixed RAM budget, keyed by model id.
 pub struct SectionCache {
     budget: u64,
     inner: Mutex<Inner>,
@@ -73,7 +72,6 @@ impl SectionCache {
             budget: budget_bytes,
             inner: Mutex::new(Inner {
                 map: HashMap::new(),
-                indexes: HashMap::new(),
                 loading: HashSet::new(),
                 used: 0,
                 tick: 0,
@@ -90,24 +88,12 @@ impl SectionCache {
         self.budget
     }
 
-    /// Section layout of a container, probed once (header-only read) and
-    /// memoized for the zoo's lifetime.
-    pub fn index(&self, path: &Path) -> Result<SectionIndex> {
-        let mut guard = self.inner.lock().unwrap();
-        let g = &mut *guard;
-        if let Some(i) = g.indexes.get(path) {
-            return Ok(i.clone());
-        }
-        let idx = container::probe(path)?;
-        g.indexes.insert(path.to_path_buf(), idx.clone());
-        Ok(idx)
-    }
-
-    /// Bytes of one section, from cache or disk. The disk read happens
-    /// outside the lock; concurrent requesters of the SAME key wait and
-    /// then hit (single-flight), requesters of other keys proceed.
-    pub fn get(&self, path: &Path, section: Section) -> Result<Arc<Vec<u8>>> {
-        let key = (path.to_path_buf(), section);
+    /// Bytes of one section, from cache or the model's source. The
+    /// fetch happens outside the lock; concurrent requesters of the
+    /// SAME key wait and then hit (single-flight), requesters of other
+    /// keys proceed.
+    pub fn get(&self, model: &str, source: &dyn SectionSource, section: Section) -> Result<Bytes> {
+        let key = (model.to_string(), section);
         let mut guard = self.inner.lock().unwrap();
         loop {
             let g = &mut *guard;
@@ -124,33 +110,28 @@ impl SectionCache {
             }
             break; // this thread becomes the loader for `key`
         }
-        let cached_idx = guard.indexes.get(&key.0).cloned();
         guard.loading.insert(key.clone());
         drop(guard);
 
-        // ALL disk I/O — header probe included — happens unlocked; the
+        // ALL I/O — header probe included — happens unlocked; the
         // `loading` entry keeps same-key racers parked on the condvar
-        let read = load_section(&key.0, section, cached_idx);
+        let fetched = source.fetch(section);
 
         let mut guard = self.inner.lock().unwrap();
         guard.loading.remove(&key);
         self.loaded.notify_all();
         // on error the waiters retry as loaders themselves
-        let (probed_idx, bytes) = read?;
-        if let Some(i) = probed_idx {
-            guard.indexes.insert(key.0.clone(), i);
-        }
+        let bytes = fetched?;
         let len = bytes.len() as u64;
         let g = &mut *guard;
         g.tick += 1;
         let tick = g.tick;
         g.misses += 1;
         g.disk_bytes += len;
-        let arc = Arc::new(bytes);
         g.map.insert(
             key.clone(),
             Entry {
-                bytes: Arc::clone(&arc),
+                bytes: Arc::clone(&bytes),
                 last_used: tick,
             },
         );
@@ -170,7 +151,7 @@ impl SectionCache {
                 g.evictions += 1;
             }
         }
-        Ok(arc)
+        Ok(bytes)
     }
 
     pub fn stats(&self) -> CacheStats {
@@ -186,38 +167,18 @@ impl SectionCache {
     }
 }
 
-/// The unlocked I/O half of [`SectionCache::get`]: probe the header if
-/// the index wasn't memoized yet, then read the section's byte range.
-/// Returns the newly probed index (for memoization) alongside the bytes.
-fn load_section(
-    path: &Path,
-    section: Section,
-    idx: Option<SectionIndex>,
-) -> Result<(Option<SectionIndex>, Vec<u8>)> {
-    let (idx, probed) = match idx {
-        Some(i) => (i, None),
-        None => {
-            let i = container::probe(path)?;
-            (i.clone(), Some(i))
-        }
-    };
-    let range = match section {
-        Section::A => idx.section_a(),
-        Section::B => idx.section_b(),
-    };
-    Ok((probed, container::read_range(path, range)?))
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::container::synthetic_nest;
+    use crate::container::{self, synthetic_nest};
+    use crate::store::FileSource;
+    use std::path::{Path, PathBuf};
 
-    fn write_container(dir: &Path, name: &str, seed: u64) -> (PathBuf, u64, u64) {
+    fn write_container(dir: &Path, name: &str, seed: u64) -> (Arc<FileSource>, u64, u64) {
         let path = dir.join(format!("{name}.nq"));
         let c = synthetic_nest(seed, 8, 4, 64, 8).unwrap();
         let (_, a, b) = container::write(&path, &c).unwrap();
-        (path, a, b)
+        (Arc::new(FileSource::new(path)), a, b)
     }
 
     fn temp_dir(tag: &str) -> PathBuf {
@@ -229,11 +190,11 @@ mod tests {
     #[test]
     fn sections_read_once_then_hit() {
         let dir = temp_dir("hit");
-        let (path, a_len, b_len) = write_container(&dir, "m", 1);
+        let (src, a_len, b_len) = write_container(&dir, "m", 1);
         let cache = SectionCache::new(u64::MAX);
-        let a1 = cache.get(&path, Section::A).unwrap();
-        let a2 = cache.get(&path, Section::A).unwrap();
-        let b1 = cache.get(&path, Section::B).unwrap();
+        let a1 = cache.get("m", src.as_ref(), Section::A).unwrap();
+        let a2 = cache.get("m", src.as_ref(), Section::A).unwrap();
+        let b1 = cache.get("m", src.as_ref(), Section::B).unwrap();
         assert_eq!(a1.len() as u64, a_len);
         assert_eq!(b1.len() as u64, b_len);
         assert!(Arc::ptr_eq(&a1, &a2), "hit must share bytes");
@@ -243,7 +204,7 @@ mod tests {
         assert_eq!(s.used_bytes, a_len + b_len);
         assert_eq!(s.entries, 2);
         // bytes match a direct disk read
-        let whole = std::fs::read(&path).unwrap();
+        let whole = std::fs::read(src.path()).unwrap();
         assert_eq!(&whole[..a1.len()], &a1[..]);
         assert_eq!(&whole[a1.len()..], &b1[..]);
     }
@@ -251,33 +212,33 @@ mod tests {
     #[test]
     fn lru_eviction_respects_budget() {
         let dir = temp_dir("lru");
-        let (p1, a1, _) = write_container(&dir, "m1", 2);
-        let (p2, a2, _) = write_container(&dir, "m2", 3);
-        let (p3, a3, _) = write_container(&dir, "m3", 4);
+        let (s1, a1, _) = write_container(&dir, "m1", 2);
+        let (s2, a2, _) = write_container(&dir, "m2", 3);
+        let (s3, a3, _) = write_container(&dir, "m3", 4);
         // budget fits two section-As but not three
         let cache = SectionCache::new(a1 + a2 + a3 / 2);
-        cache.get(&p1, Section::A).unwrap();
-        cache.get(&p2, Section::A).unwrap();
-        cache.get(&p1, Section::A).unwrap(); // refresh m1 → m2 is LRU
-        cache.get(&p3, Section::A).unwrap(); // evicts m2
+        cache.get("m1", s1.as_ref(), Section::A).unwrap();
+        cache.get("m2", s2.as_ref(), Section::A).unwrap();
+        cache.get("m1", s1.as_ref(), Section::A).unwrap(); // refresh m1 → m2 is LRU
+        cache.get("m3", s3.as_ref(), Section::A).unwrap(); // evicts m2
         let s = cache.stats();
         assert_eq!(s.evictions, 1);
         assert!(s.used_bytes <= cache.budget());
         assert_eq!(s.entries, 2);
         // m1 must still be resident (it was refreshed)
-        cache.get(&p1, Section::A).unwrap();
+        cache.get("m1", s1.as_ref(), Section::A).unwrap();
         assert_eq!(cache.stats().hits, 2);
     }
 
     #[test]
     fn oversized_entry_overshoots_once_then_evicts() {
         let dir = temp_dir("big");
-        let (p1, a1, _) = write_container(&dir, "m1", 5);
-        let (p2, _, _) = write_container(&dir, "m2", 6);
+        let (s1, a1, _) = write_container(&dir, "m1", 5);
+        let (s2, _, _) = write_container(&dir, "m2", 6);
         let cache = SectionCache::new(a1 / 2); // smaller than any section
-        let bytes = cache.get(&p1, Section::A).unwrap();
+        let bytes = cache.get("m1", s1.as_ref(), Section::A).unwrap();
         assert_eq!(cache.stats().entries, 1, "oversized entry admitted");
-        cache.get(&p2, Section::A).unwrap();
+        cache.get("m2", s2.as_ref(), Section::A).unwrap();
         // the oversized entry was evicted, but our Arc keeps it alive
         assert_eq!(bytes.len() as u64, a1);
         let s = cache.stats();
@@ -286,14 +247,16 @@ mod tests {
     }
 
     #[test]
-    fn index_memoized() {
-        let dir = temp_dir("idx");
-        let (path, a_len, b_len) = write_container(&dir, "m", 7);
+    fn memory_sources_work_too() {
+        // the cache is source-agnostic: a synthetic in-memory zoo entry
+        // costs zero disk reads
+        let c = synthetic_nest(7, 8, 4, 32, 8).unwrap();
+        let src = crate::store::MemorySource::from_container(&c).unwrap();
         let cache = SectionCache::new(u64::MAX);
-        let i1 = cache.index(&path).unwrap();
-        let i2 = cache.index(&path).unwrap();
-        assert_eq!(i1, i2);
-        assert_eq!(i1.section_a_bytes(), a_len);
-        assert_eq!(i1.section_b_bytes(), b_len);
+        let a = cache.get("mem", &src, Section::A).unwrap();
+        let b = cache.get("mem", &src, Section::B).unwrap();
+        let idx = src.index().unwrap();
+        assert_eq!(a.len() as u64, idx.section_a_bytes());
+        assert_eq!(b.len() as u64, idx.section_b_bytes());
     }
 }

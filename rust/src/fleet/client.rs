@@ -3,17 +3,25 @@
 //! resource levels, obeys upgrade/downgrade advice, and plays back a
 //! whole resource trace against a live server — the fleet-scale version
 //! of `coordinator::run_trace`.
+//!
+//! [`RemoteSource`] adapts a client connection into a
+//! [`crate::store::SectionSource`], so a device can open a
+//! `store::NqArchive` over a model it never had on disk and get the
+//! same typed part-bit/full-bit views as a local file.
 
 use std::net::{SocketAddr, TcpStream};
+use std::sync::Mutex;
 use std::time::Duration;
 
 use anyhow::{bail, ensure, Context, Result};
 
+use crate::container::SectionIndex;
 use crate::coordinator::{Decision, Variant};
 use crate::device::{MemoryLedger, ResourceTrace};
+use crate::store::{Bytes, SectionSource};
 use crate::transport::{ack_frame, parse_chunk, recv_frame, send_frame, Frame, FrameKind, Meter};
 
-use super::{control, encode_pull, encode_section_req, Section};
+use super::{control, decode_index, encode_pull, encode_section_req, Section};
 
 /// Outcome of one [`FleetClient::pull_section`] call.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -66,6 +74,14 @@ impl FleetClient {
             bail!("server error: {}", String::from_utf8_lossy(&reply.payload));
         }
         Ok(reply)
+    }
+
+    /// Section layout of a zoo model, served from the server's memoized
+    /// header probe — one wire round-trip, no payload bytes.
+    pub fn model_index(&mut self, model: &str) -> Result<SectionIndex> {
+        let reply = self.request(control("index", model.as_bytes().to_vec()))?;
+        ensure!(reply.name == "index", "unexpected reply {:?}", reply.name);
+        decode_index(&reply.payload)
     }
 
     /// Ask the server where a previous transfer of (model, section) got
@@ -285,5 +301,87 @@ impl Default for PlaybackReport {
             payload_pulled: 0,
             final_variant: Variant::PartBit,
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RemoteSource: the fleet transport as a store SectionSource
+// ---------------------------------------------------------------------------
+
+/// One zoo model behind a fleet server, exposed as a
+/// [`SectionSource`]: `index` is one wire round-trip, `fetch` is a
+/// resumable chunked pull. Open a `store::NqArchive` over it and the
+/// whole store API — typed views, attach/release, byte accounting —
+/// works against remote bytes.
+///
+/// The client connection is serialized behind a mutex (the protocol is
+/// request/response per connection). A fetch is all-or-nothing and pulls
+/// from byte zero — an archive never holds partial sections; devices
+/// that want mid-transfer resume use [`FleetClient::pull_section`] /
+/// [`FleetClient::resume_section`] directly.
+pub struct RemoteSource {
+    client: Mutex<FleetClient>,
+    model: String,
+    addr: SocketAddr,
+}
+
+impl RemoteSource {
+    /// Connect a fresh device session and bind it to `model`.
+    pub fn connect(
+        addr: SocketAddr,
+        device_id: &str,
+        model: impl Into<String>,
+        timeout: Duration,
+    ) -> Result<RemoteSource> {
+        Ok(RemoteSource::new(
+            FleetClient::connect(addr, device_id, timeout)?,
+            model,
+        ))
+    }
+
+    /// Wrap an existing client connection.
+    pub fn new(client: FleetClient, model: impl Into<String>) -> RemoteSource {
+        let addr = client
+            .sock
+            .peer_addr()
+            .unwrap_or_else(|_| SocketAddr::from(([0, 0, 0, 0], 0)));
+        RemoteSource {
+            client: Mutex::new(client),
+            model: model.into(),
+            addr,
+        }
+    }
+
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    /// Wire bytes (sent, received) of the underlying connection.
+    pub fn wire(&self) -> (u64, u64) {
+        self.client.lock().unwrap().wire()
+    }
+}
+
+impl SectionSource for RemoteSource {
+    fn index(&self) -> Result<SectionIndex> {
+        self.client.lock().unwrap().model_index(&self.model)
+    }
+
+    fn fetch(&self, section: Section) -> Result<Bytes> {
+        let mut c = self.client.lock().unwrap();
+        let mut sink = Vec::new();
+        let out = c.pull_section(&self.model, section, 0, &mut sink, None)?;
+        ensure!(
+            out.completed,
+            "section {section} pull of {} incomplete at {}/{}",
+            self.model,
+            out.received_to,
+            out.total_len
+        );
+        Ok(sink.into())
+    }
+
+    fn describe(&self) -> String {
+        format!("fleet://{}/{}", self.addr, self.model)
     }
 }

@@ -18,12 +18,20 @@
 //!   downgrade advice (driven through the existing
 //!   `coordinator::policy` hysteresis) moves only Section-B deltas.
 //! * **Resumable delta paging** — section transfers are chunked
-//!   ([`transport::ChunkHeader`]) with per-chunk acks; an interrupted
-//!   page-in restarts from the last acked chunk, not byte zero.
+//!   ([`crate::transport::ChunkHeader`]) with per-chunk acks; an
+//!   interrupted page-in restarts from the last acked chunk, not byte
+//!   zero.
 //! * **Zoo-wide section cache** — one RAM budget over section-granular
-//!   `.nq` reads ([`container::probe`] + [`container::read_range`]), so
-//!   N devices pulling M models never re-read or duplicate section
-//!   bytes server-side.
+//!   `.nq` reads, served through the store's [`crate::store::FileSource`]
+//!   (memoized header probe + positioned range reads), so N devices
+//!   pulling M models never re-read or duplicate section bytes
+//!   server-side.
+//!
+//! The device side closes the loop: [`RemoteSource`] implements
+//! [`crate::store::SectionSource`] over this protocol, so a device can
+//! open a `store::NqArchive` whose bytes live behind the fleet server —
+//! the same typed views whether the artifact is local, in memory, or
+//! remote.
 //!
 //! Wire protocol (all frames from `transport`):
 //!
@@ -31,6 +39,7 @@
 //! |----------------------------------|--------------------------------|
 //! | `Control "hello"` device id      | `Control "ok"`                 |
 //! | `Control "level"` f64 LE         | `Control "advice"` decision    |
+//! | `Control "index"` model          | `Control "index"` SectionIndex |
 //! | `Control "offset"` section+model | `Control "offset"` u64 LE      |
 //! | `Control "state"` model          | `Control "state"` variant+held |
 //! | `Control "pull"` sec+off+model   | `Chunk` stream (ack each)      |
@@ -52,60 +61,28 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context, Result};
 
+use crate::container::SectionIndex;
 use crate::coordinator::metrics::LatencyHisto;
 use crate::coordinator::SwitchPolicy;
+use crate::store::{FileSource, SectionSource};
 use crate::transport::{
     chunk_frame, parse_ack, recv_frame, send_frame, ChunkHeader, Frame, FrameKind, Meter,
 };
 
 pub use cache::{CacheStats, SectionCache};
-pub use client::{FleetClient, PlaybackReport, PullOutcome};
+pub use client::{FleetClient, PlaybackReport, PullOutcome, RemoteSource};
 pub use session::{SessionSummary, SessionTable, TransferProgress};
 
-/// Which `.nq` section a transfer moves.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum Section {
-    /// Header + scales + packed `w_high` + fp32 params (part-bit launch).
-    A,
-    /// Packed `w_low` tail (the upgrade delta).
-    B,
-}
+/// Which `.nq` section a transfer moves (the store's canonical enum;
+/// its tags are part of this wire protocol).
+pub use crate::store::Section;
 
-impl Section {
-    pub fn tag(self) -> u8 {
-        match self {
-            Section::A => 0,
-            Section::B => 1,
-        }
-    }
-
-    pub fn from_tag(t: u8) -> Result<Section> {
-        Ok(match t {
-            0 => Section::A,
-            1 => Section::B,
-            _ => bail!("unknown section tag {t}"),
-        })
-    }
-
-    pub fn label(self) -> &'static str {
-        match self {
-            Section::A => "A",
-            Section::B => "B",
-        }
-    }
-}
-
-impl std::fmt::Display for Section {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.write_str(self.label())
-    }
-}
-
-/// The model zoo: model id → `.nq` container path. Immutable once the
-/// server starts; section layouts are probed lazily by the cache.
+/// The model zoo: model id → shared [`FileSource`]. Immutable once the
+/// server starts; each source memoizes its header probe, so section
+/// layouts are read from disk at most once per model.
 #[derive(Debug, Clone, Default)]
 pub struct Zoo {
-    entries: BTreeMap<String, PathBuf>,
+    entries: BTreeMap<String, Arc<FileSource>>,
 }
 
 impl Zoo {
@@ -115,7 +92,8 @@ impl Zoo {
 
     /// Register one container under `id`.
     pub fn add(&mut self, id: impl Into<String>, path: impl Into<PathBuf>) {
-        self.entries.insert(id.into(), path.into());
+        self.entries
+            .insert(id.into(), Arc::new(FileSource::new(path.into())));
     }
 
     /// Register every `*.nq` file in `dir` under its file stem; returns
@@ -128,7 +106,8 @@ impl Zoo {
             let p = entry?.path();
             if p.extension().is_some_and(|x| x == "nq") {
                 if let Some(stem) = p.file_stem().and_then(|s| s.to_str()) {
-                    self.entries.insert(stem.to_string(), p.clone());
+                    self.entries
+                        .insert(stem.to_string(), Arc::new(FileSource::new(p.clone())));
                     added += 1;
                 }
             }
@@ -139,7 +118,7 @@ impl Zoo {
     /// Like [`Zoo::scan_dir`], but probe each container and register only
     /// nest-kind ones (the fleet's paging protocol moves Section-B
     /// deltas, which fp32/mono containers don't have). Unreadable files
-    /// are skipped.
+    /// are skipped. The probe is memoized in the registered source.
     pub fn scan_nest_dir(&mut self, dir: &Path) -> Result<usize> {
         let mut added = 0;
         for entry in
@@ -147,12 +126,13 @@ impl Zoo {
         {
             let p = entry?.path();
             if p.extension().is_some_and(|x| x == "nq") {
-                let Ok(idx) = crate::container::probe(&p) else { continue };
+                let src = FileSource::new(&p);
+                let Ok(idx) = src.index() else { continue };
                 if idx.kind != crate::container::Kind::Nest {
                     continue;
                 }
                 if let Some(stem) = p.file_stem().and_then(|s| s.to_str()) {
-                    self.entries.insert(stem.to_string(), p.clone());
+                    self.entries.insert(stem.to_string(), Arc::new(src));
                     added += 1;
                 }
             }
@@ -160,10 +140,18 @@ impl Zoo {
         Ok(added)
     }
 
+    /// The shared byte source for a model (what the cache fetches from).
+    pub fn source(&self, id: &str) -> Result<Arc<FileSource>> {
+        self.entries
+            .get(id)
+            .map(Arc::clone)
+            .ok_or_else(|| anyhow::anyhow!("unknown model {id:?} (zoo has {})", self.entries.len()))
+    }
+
     pub fn path(&self, id: &str) -> Result<&Path> {
         self.entries
             .get(id)
-            .map(PathBuf::as_path)
+            .map(|s| s.path())
             .ok_or_else(|| anyhow::anyhow!("unknown model {id:?} (zoo has {})", self.entries.len()))
     }
 
@@ -301,6 +289,32 @@ pub(crate) fn decode_pull(payload: &[u8]) -> Result<(Section, u64, String)> {
     Ok((section, offset, model))
 }
 
+/// Wire form of a [`SectionIndex`]: fixed 20-byte prefix + model name.
+pub(crate) fn encode_index(idx: &SectionIndex) -> Vec<u8> {
+    let mut p = Vec::with_capacity(20 + idx.name.len());
+    p.push(idx.kind.as_u8());
+    p.push(idx.n);
+    p.push(idx.h);
+    p.push(idx.act_bits);
+    p.extend_from_slice(&idx.section_b_offset.to_le_bytes());
+    p.extend_from_slice(&idx.file_len.to_le_bytes());
+    p.extend_from_slice(idx.name.as_bytes());
+    p
+}
+
+pub(crate) fn decode_index(payload: &[u8]) -> Result<SectionIndex> {
+    ensure!(payload.len() >= 20, "short index payload");
+    Ok(SectionIndex {
+        kind: crate::container::Kind::from_u8(payload[0])?,
+        n: payload[1],
+        h: payload[2],
+        act_bits: payload[3],
+        section_b_offset: u64::from_le_bytes(payload[4..12].try_into().unwrap()),
+        file_len: u64::from_le_bytes(payload[12..20].try_into().unwrap()),
+        name: String::from_utf8(payload[20..].to_vec()).context("model name")?,
+    })
+}
+
 pub(crate) fn encode_section_req(model: &str, section: Section) -> Vec<u8> {
     let mut p = Vec::with_capacity(1 + model.len());
     p.push(section.tag());
@@ -430,7 +444,7 @@ impl FleetServer {
 
 impl FleetHandle {
     /// Stop the server and join every thread (handler threads observe the
-    /// stop flag within [`IDLE_POLL`] when idle).
+    /// stop flag within the idle poll interval when idle).
     pub fn stop(mut self) {
         self.shutdown();
     }
@@ -561,6 +575,14 @@ fn dispatch(
             )?;
             Ok(())
         }
+        "index" => {
+            // section layout of one model — what a device-side
+            // `RemoteSource` answers `SectionSource::index` with
+            let model = std::str::from_utf8(payload).context("model id")?;
+            let idx = ctx.zoo.source(model)?.index()?;
+            send_frame(writer, &control("index", encode_index(&idx)), &ctx.meter)?;
+            Ok(())
+        }
         "offset" => {
             let (section, model) = decode_section_req(payload)?;
             let acked = ctx.sessions.acked(device, &model, section);
@@ -618,8 +640,8 @@ fn serve_pull(
     ctx: &Ctx,
     streamed: &mut bool,
 ) -> Result<()> {
-    let path = ctx.zoo.path(model)?;
-    let blob = ctx.cache.get(path, section)?;
+    let source = ctx.zoo.source(model)?;
+    let blob = ctx.cache.get(model, source.as_ref(), section)?;
     let total = blob.len() as u64;
     ensure!(
         offset <= total,
@@ -696,6 +718,19 @@ mod tests {
         let (s, o, m) = decode_pull(&p).unwrap();
         assert_eq!((s, o, m.as_str()), (Section::B, 123_456, "cnn_m_n8h4"));
         assert!(decode_pull(&p[..5]).is_err());
+    }
+
+    #[test]
+    fn index_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("nq_idx_codec_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.nq");
+        let c = crate::container::synthetic_nest(21, 8, 4, 32, 8).unwrap();
+        crate::container::write(&path, &c).unwrap();
+        let idx = FileSource::new(&path).index().unwrap();
+        let back = decode_index(&encode_index(&idx)).unwrap();
+        assert_eq!(back, idx);
+        assert!(decode_index(&[0u8; 10]).is_err());
     }
 
     #[test]

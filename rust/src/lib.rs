@@ -9,9 +9,10 @@
 //!   batcher, PJRT runtime (feature `pjrt`, with a pure-Rust offline
 //!   fallback), device simulator, transmission system, the fleet
 //!   distribution subsystem (resumable delta paging + zoo-wide section
-//!   cache), and every substrate they need (packed bits, `.nq`
-//!   containers, quantizer, statistics). Python never runs on the
-//!   request path.
+//!   cache), the zero-copy [`store`] access layer (`NqArchive` +
+//!   `SectionSource`) every tier reads models through, and every
+//!   substrate they need (packed bits, `.nq` containers, quantizer,
+//!   statistics). Python never runs on the request path.
 //! - **L2 (python/compile)** — the JAX model zoo + PTQ pipeline, AOT-
 //!   lowered once to `artifacts/*.hlo.txt`.
 //! - **L1 (python/compile/kernels)** — Pallas kernels (interpret=True)
@@ -30,6 +31,7 @@ pub mod quant;
 pub mod report;
 pub mod runtime;
 pub mod stats;
+pub mod store;
 pub mod transport;
 pub mod util;
 

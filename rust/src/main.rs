@@ -4,6 +4,7 @@
 //!
 //! ```text
 //! nestquant info                          artifact + zoo overview
+//! nestquant inspect <model.nq>            section index + per-tensor layout
 //! nestquant eval --arch cnn_m --n 8 --h 4 [--variant part|full] [--limit N]
 //! nestquant trace --arch cnn_m --n 8 --h 4 [--steps N] [--trace solar|discharge]
 //! nestquant serve --arch cnn_m --n 8 --h 4
@@ -24,6 +25,8 @@ fn usage() -> ! {
         "usage: nestquant <command> [flags]\n\
          commands:\n\
          \x20 info                               artifacts overview\n\
+         \x20 inspect <model.nq>                 section index, per-tensor dims/bits,\n\
+         \x20                                    A/B byte split (any .nq file)\n\
          \x20 eval   --arch A --n N --h H [--variant part|full] [--limit K]\n\
          \x20 trace  --arch A --n N --h H [--steps K] [--trace solar|discharge] [--reqs R]\n\
          \x20 serve  --arch A --n N --h H        start the inference server\n\
@@ -109,6 +112,7 @@ fn run() -> Result<()> {
     };
     match cmd {
         "info" => cmd_info(&root),
+        "inspect" => cmd_inspect(&args),
         "eval" => cmd_eval(&root, &args),
         "trace" => cmd_trace(&root, &args),
         "serve" => cmd_serve(&root, &args),
@@ -135,6 +139,82 @@ fn cmd_info(root: &std::path::Path) -> Result<()> {
             spec.nest_containers.keys().collect::<Vec<_>>(),
         );
     }
+    Ok(())
+}
+
+/// Inspect one `.nq` artifact through the store API: section index,
+/// A/B byte split, and the per-tensor layout — without decoding a single
+/// payload into tensors (the layout walk skips them).
+fn cmd_inspect(args: &Args) -> Result<()> {
+    use nestquant::store::NqArchive;
+
+    let Some(path) = args.positional.get(1) else {
+        bail!("usage: nestquant inspect <model.nq>");
+    };
+    let archive = NqArchive::open(path)?;
+    let idx = archive.index();
+    println!("{path}");
+    println!(
+        "  kind {:?}  name {:?}  INT({}|{})  act_bits {}",
+        idx.kind, idx.name, idx.n, idx.h, idx.act_bits
+    );
+    let a = idx.section_a();
+    let b = idx.section_b();
+    println!(
+        "  file {:>10} B   section A [{:>10}, {:>10}) {:>10} B ({:.1}%)",
+        idx.file_len,
+        a.start,
+        a.end,
+        idx.section_a_bytes(),
+        idx.section_a_bytes() as f64 / idx.file_len.max(1) as f64 * 100.0
+    );
+    println!(
+        "  {:>16}   section B [{:>10}, {:>10}) {:>10} B ({:.1}%)",
+        "",
+        b.start,
+        b.end,
+        idx.section_b_bytes(),
+        idx.section_b_bytes() as f64 / idx.file_len.max(1) as f64 * 100.0
+    );
+
+    let layout = archive.layout()?;
+    if !layout.meta().is_empty() {
+        println!("  meta {}", layout.meta());
+    }
+    println!("  {} tensors:", layout.len());
+    println!(
+        "    {:<24} {:<14} {:>9}  {:>6}  {:>12}  {:>12}",
+        "name", "shape", "elems", "bits", "A bytes", "B bytes"
+    );
+    for t in layout.tensors() {
+        let shape = t
+            .shape()
+            .iter()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join("x");
+        let (bits, a_bytes) = match t.packed_bits() {
+            Some(bits) => (
+                format!("INT{bits}"),
+                nestquant::bits::packed_nbytes(t.count(), bits),
+            ),
+            None => ("f32".to_string(), 4 * t.count()),
+        };
+        println!(
+            "    {:<24} {:<14} {:>9}  {:>6}  {:>12}  {:>12}",
+            t.name(),
+            shape,
+            t.count(),
+            bits,
+            a_bytes,
+            t.low_block_bytes()
+        );
+    }
+    let stats = archive.stats();
+    println!(
+        "  (inspect cost: {} section-A fetch / {} B, section B untouched)",
+        stats.a_fetches, stats.a_bytes_fetched
+    );
     Ok(())
 }
 

@@ -4,7 +4,8 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
-use crate::container::{self, Kind, TensorData};
+use crate::container::{Kind, TensorData};
+use crate::store::NqArchive;
 use crate::device;
 use crate::nest::{self, Rounding};
 use crate::quant;
@@ -176,7 +177,7 @@ pub fn cmd_similarity(root: &Path, arch: &str) -> Result<()> {
     let sizes = load_report(root, "sizes").ok(); // only to confirm artifacts exist
     let _ = sizes;
     let path = root.join(format!("nq/{arch}_int8.nq"));
-    let c = container::read(&path, false)?;
+    let c = NqArchive::open(&path)?.to_container(false)?;
     anyhow::ensure!(c.kind == Kind::Mono && c.n == 8, "need the INT8 mono container");
 
     let mut w_int_all: Vec<i32> = Vec::new();
@@ -591,7 +592,7 @@ pub fn cmd_ptq_cost(root: &Path) -> Result<()> {
         // live rust timing on the real FP32 container
         let path = root.join(format!("nq/{arch}_fp32.nq"));
         let (rust_sq, rust_rtn) = if path.exists() {
-            let cont = container::read(&path, false)?;
+            let cont = NqArchive::open(&path)?.to_container(false)?;
             let mut sq = std::time::Duration::ZERO;
             let mut rt = std::time::Duration::ZERO;
             for tens in &cont.tensors {

@@ -199,10 +199,12 @@ mod imp {
 pub use imp::{DeviceBuffer, Engine, Executable};
 
 impl Engine {
-    /// Upload every weight tensor in spec order.
+    /// Upload every weight tensor in spec order. Takes borrowed slices
+    /// so callers can feed dequantized scratch buffers (or
+    /// `store`-view-decoded tensors) without building owned `Vec<Vec>`s.
     pub fn upload_weights(
         &self,
-        values: &[Vec<f32>],
+        values: &[&[f32]],
         specs: &[ParamSpec],
     ) -> Result<Vec<DeviceBuffer>> {
         ensure!(values.len() == specs.len(), "param count mismatch");
@@ -226,6 +228,30 @@ mod tests {
         assert_eq!(buf.host(), &[1.0, 2.0, 3.0, 4.0]);
         assert_eq!(buf.shape(), &[2, 2]);
         assert!(e.upload(&[1.0; 3], &[2, 2]).is_err());
+    }
+
+    #[test]
+    fn upload_weights_in_spec_order() {
+        let e = Engine::cpu().unwrap();
+        let specs = vec![
+            ParamSpec {
+                name: "w".into(),
+                shape: vec![2, 2],
+                quantized: true,
+            },
+            ParamSpec {
+                name: "b".into(),
+                shape: vec![2],
+                quantized: false,
+            },
+        ];
+        let w = [1.0f32, 2.0, 3.0, 4.0];
+        let b = [0.5f32, 0.25];
+        let bufs = e.upload_weights(&[&w, &b], &specs).unwrap();
+        assert_eq!(bufs.len(), 2);
+        assert_eq!(bufs[0].host(), &w);
+        assert_eq!(bufs[1].shape(), &[2]);
+        assert!(e.upload_weights(&[&w[..]], &specs).is_err(), "count mismatch");
     }
 
     #[test]

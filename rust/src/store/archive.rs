@@ -1,0 +1,453 @@
+//! [`NqArchive`]: one opened `.nq` artifact, and [`ModelStore`]: the
+//! id → shared-archive registry.
+//!
+//! The archive is the single owner of an artifact's bytes: section A is
+//! fetched once and shared (`Arc<[u8]>`), the tensor layout is parsed
+//! once, and section B attaches/detaches as one `Arc` — so the
+//! coordinator's upgrade path moves exactly the section-B bytes and the
+//! downgrade path moves nothing. [`ArchiveStats`] counts every fetch
+//! and parse; tests assert the zeros instead of trusting comments.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::container::{self, Container, Kind, SectionIndex};
+
+use super::layout::{FullBitModel, ModelLayout, PartBitModel};
+use super::{Bytes, FileSource, MemorySource, Section, SectionSource};
+
+/// Byte-accounting counters of one archive. Monotonic; snapshot via
+/// [`NqArchive::stats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ArchiveStats {
+    /// Section-A fetches from the source (1 after any number of
+    /// part↔full switches — the "zero section-A re-reads" claim).
+    pub a_fetches: u64,
+    /// Section-B fetches (one per upgrade after a release).
+    pub b_fetches: u64,
+    /// Section-A bytes moved out of the source.
+    pub a_bytes_fetched: u64,
+    /// Section-B bytes moved out of the source.
+    pub b_bytes_fetched: u64,
+    /// Layout parses (1 for the archive's lifetime — the "zero
+    /// re-parses" claim).
+    pub layout_parses: u64,
+    /// Section-B releases (downgrades / unloads).
+    pub b_releases: u64,
+}
+
+struct State {
+    a: Option<Bytes>,
+    b: Option<Bytes>,
+    layout: Option<Arc<ModelLayout>>,
+    stats: ArchiveStats,
+}
+
+/// One opened `.nq` artifact over a [`SectionSource`].
+///
+/// Thread-safe; fetches hold the archive's internal lock for their
+/// duration, so concurrent sessions of the same archive single-flight
+/// their section reads (the fleet server's budgeted [`SectionCache`]
+/// covers the many-archive case).
+///
+/// [`SectionCache`]: crate::fleet::SectionCache
+pub struct NqArchive {
+    source: Arc<dyn SectionSource>,
+    index: SectionIndex,
+    state: Mutex<State>,
+}
+
+impl NqArchive {
+    /// Open over any source (probes the index once, eagerly — it is the
+    /// one thing every consumer needs).
+    pub fn with_source(source: Arc<dyn SectionSource>) -> Result<NqArchive> {
+        let index = source
+            .index()
+            .with_context(|| format!("indexing {}", source.describe()))?;
+        Ok(NqArchive {
+            source,
+            index,
+            state: Mutex::new(State {
+                a: None,
+                b: None,
+                layout: None,
+                stats: ArchiveStats::default(),
+            }),
+        })
+    }
+
+    /// Open a `.nq` file (header probe only; no payload reads).
+    pub fn open(path: impl AsRef<Path>) -> Result<NqArchive> {
+        NqArchive::with_source(Arc::new(FileSource::new(path.as_ref())))
+    }
+
+    /// Wrap a whole in-memory artifact.
+    pub fn from_bytes(data: &[u8]) -> Result<NqArchive> {
+        NqArchive::with_source(Arc::new(MemorySource::new(data)?))
+    }
+
+    /// Serialize a [`Container`] and wrap it (synthetic zoos, tests).
+    pub fn from_container(c: &Container) -> Result<NqArchive> {
+        NqArchive::with_source(Arc::new(MemorySource::from_container(c)?))
+    }
+
+    pub fn index(&self) -> &SectionIndex {
+        &self.index
+    }
+
+    pub fn kind(&self) -> Kind {
+        self.index.kind
+    }
+
+    pub fn source(&self) -> &Arc<dyn SectionSource> {
+        &self.source
+    }
+
+    /// Section-A bytes (the part-bit page-in cost).
+    pub fn section_a_bytes(&self) -> u64 {
+        self.index.section_a_bytes()
+    }
+
+    /// Section-B bytes (the upgrade delta).
+    pub fn section_b_bytes(&self) -> u64 {
+        self.index.section_b_bytes()
+    }
+
+    pub fn stats(&self) -> ArchiveStats {
+        self.state.lock().unwrap().stats
+    }
+
+    pub fn a_resident(&self) -> bool {
+        self.state.lock().unwrap().a.is_some()
+    }
+
+    pub fn b_resident(&self) -> bool {
+        self.state.lock().unwrap().b.is_some()
+    }
+
+    /// Section A, fetching it from the source on first use only.
+    pub fn ensure_a(&self) -> Result<Bytes> {
+        let mut s = self.state.lock().unwrap();
+        if let Some(a) = &s.a {
+            return Ok(Arc::clone(a));
+        }
+        let a = self
+            .source
+            .fetch(Section::A)
+            .with_context(|| format!("fetching section A of {}", self.source.describe()))?;
+        ensure!(
+            a.len() as u64 == self.index.section_a_bytes(),
+            "section A fetch returned {} bytes, index says {}",
+            a.len(),
+            self.index.section_a_bytes()
+        );
+        s.stats.a_fetches += 1;
+        s.stats.a_bytes_fetched += a.len() as u64;
+        s.a = Some(Arc::clone(&a));
+        Ok(a)
+    }
+
+    /// Attach section B (the upgrade page-in), fetching unless already
+    /// resident. Nest archives only.
+    pub fn attach_b(&self) -> Result<Bytes> {
+        ensure!(
+            self.index.kind == Kind::Nest,
+            "section B only exists for nest containers ({})",
+            self.source.describe()
+        );
+        // an A-only source (section-A blob wrapped as a whole artifact)
+        // has no B to attach; fail before touching bytes or stats
+        ensure!(
+            self.index.section_b_bytes() > 0,
+            "source has no section-B bytes ({} is part-bit only)",
+            self.source.describe()
+        );
+        let mut s = self.state.lock().unwrap();
+        if let Some(b) = &s.b {
+            return Ok(Arc::clone(b));
+        }
+        let b = self
+            .source
+            .fetch(Section::B)
+            .with_context(|| format!("fetching section B of {}", self.source.describe()))?;
+        ensure!(
+            b.len() as u64 == self.index.section_b_bytes(),
+            "section B fetch returned {} bytes, index says {}",
+            b.len(),
+            self.index.section_b_bytes()
+        );
+        s.stats.b_fetches += 1;
+        s.stats.b_bytes_fetched += b.len() as u64;
+        s.b = Some(Arc::clone(&b));
+        Ok(b)
+    }
+
+    /// Drop the resident section-B bytes (the downgrade page-out).
+    /// Returns whether anything was resident. Section A and the layout
+    /// are untouched — that is the whole point.
+    pub fn release_b(&self) -> bool {
+        let mut s = self.state.lock().unwrap();
+        let was = s.b.take().is_some();
+        if was {
+            s.stats.b_releases += 1;
+        }
+        was
+    }
+
+    /// Drop the resident section-A bytes too (full unload; releases a
+    /// resident section B first, counted). The parsed layout is kept:
+    /// metadata is tiny and sources are immutable, so a re-load
+    /// re-fetches bytes but never re-parses.
+    pub fn release_a(&self) -> bool {
+        let mut s = self.state.lock().unwrap();
+        if s.b.take().is_some() {
+            s.stats.b_releases += 1;
+        }
+        s.a.take().is_some()
+    }
+
+    /// The tensor layout, parsed once per archive (fetches section A if
+    /// needed).
+    pub fn layout(&self) -> Result<Arc<ModelLayout>> {
+        if let Some(l) = &self.state.lock().unwrap().layout {
+            return Ok(Arc::clone(l));
+        }
+        let a = self.ensure_a()?;
+        let parsed = Arc::new(
+            ModelLayout::parse(&a, &self.index)
+                .with_context(|| format!("parsing layout of {}", self.source.describe()))?,
+        );
+        let mut s = self.state.lock().unwrap();
+        if let Some(l) = &s.layout {
+            return Ok(Arc::clone(l)); // a racer parsed first
+        }
+        s.stats.layout_parses += 1;
+        s.layout = Some(Arc::clone(&parsed));
+        Ok(parsed)
+    }
+
+    /// Typed view over section A. For nest archives this is the
+    /// part-bit launch state; for mono/fp32 archives it is the whole
+    /// model.
+    pub fn part_bit(&self) -> Result<PartBitModel> {
+        let layout = self.layout()?;
+        let a = self.ensure_a()?;
+        PartBitModel::new(layout, a)
+    }
+
+    /// Typed view over both sections (attaches B if not resident).
+    pub fn full_bit(&self) -> Result<FullBitModel> {
+        let layout = self.layout()?;
+        let a = self.ensure_a()?;
+        let b = self.attach_b()?;
+        FullBitModel::new(layout, a, b)
+    }
+
+    /// Owned [`Container`] decode (compat path for code that needs the
+    /// typed tensors rather than views — report tables, baselines).
+    pub fn to_container(&self, part_bit_only: bool) -> Result<Container> {
+        let a = self.ensure_a()?;
+        let mut c = container::parse_impl(&a, true)
+            .with_context(|| format!("parsing {}", self.source.describe()))?;
+        if self.index.kind == Kind::Nest && !part_bit_only {
+            let b = self.attach_b()?;
+            container::attach_section_b_impl(&mut c, &b)?;
+        }
+        c.file_len = self.index.file_len;
+        Ok(c)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ModelStore
+// ---------------------------------------------------------------------------
+
+/// Model id → shared [`NqArchive`]. Opening the same id twice returns
+/// the *same* archive, so every consumer shares one set of section
+/// bytes ("who owns the bytes" has one answer: the store's `Arc`).
+///
+/// Sharing also shares the paging lifecycle: `release_a`/`release_b`
+/// on a shared archive drops the cached bytes for every sharer (each
+/// refetches on demand — correctness is unaffected, residency-style
+/// accounting is). Consumers that *drive* paging, like `ModelManager`,
+/// therefore own private archives and opt into sharing explicitly.
+#[derive(Default)]
+pub struct ModelStore {
+    inner: Mutex<BTreeMap<String, Arc<NqArchive>>>,
+}
+
+impl ModelStore {
+    pub fn new() -> ModelStore {
+        ModelStore::default()
+    }
+
+    /// The process-wide store. The coordinator resolves artifact paths
+    /// through this, so N managers over one artifact share one archive.
+    /// Keys are canonicalized paths; artifacts are treated as immutable
+    /// for the process lifetime (same contract as the fleet zoo).
+    pub fn global() -> &'static ModelStore {
+        static GLOBAL: OnceLock<ModelStore> = OnceLock::new();
+        GLOBAL.get_or_init(ModelStore::new)
+    }
+
+    /// Open (or share) the archive for a `.nq` path, keyed by its
+    /// canonical form.
+    pub fn open_path(&self, path: impl AsRef<Path>) -> Result<Arc<NqArchive>> {
+        let path = path.as_ref();
+        let key = std::fs::canonicalize(path)
+            .unwrap_or_else(|_| path.to_path_buf())
+            .display()
+            .to_string();
+        if let Some(a) = self.get(&key) {
+            return Ok(a);
+        }
+        let archive = Arc::new(NqArchive::open(path)?);
+        Ok(self.insert(key, archive))
+    }
+
+    /// Register an archive under `id`. If the id is already present the
+    /// existing archive wins (and is returned) — sharing beats
+    /// replacing for immutable artifacts.
+    pub fn insert(&self, id: impl Into<String>, archive: Arc<NqArchive>) -> Arc<NqArchive> {
+        let mut g = self.inner.lock().unwrap();
+        Arc::clone(g.entry(id.into()).or_insert(archive))
+    }
+
+    pub fn get(&self, id: &str) -> Option<Arc<NqArchive>> {
+        self.inner.lock().unwrap().get(id).map(Arc::clone)
+    }
+
+    pub fn ids(&self) -> Vec<String> {
+        self.inner.lock().unwrap().keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.lock().unwrap().is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::synthetic_nest;
+    use crate::store::PayloadView;
+
+    fn toy_archive(seed: u64, n: u8, h: u8) -> NqArchive {
+        let c = synthetic_nest(seed, n, h, 40, 8).unwrap();
+        NqArchive::from_container(&c).unwrap()
+    }
+
+    #[test]
+    fn upgrade_downgrade_cycles_never_refetch_a_or_reparse() {
+        let arch = toy_archive(1, 8, 4);
+        let part = arch.part_bit().unwrap();
+        assert_eq!(part.layout().n(), 8);
+        drop(part);
+        let (a_len, b_len) = (arch.section_a_bytes(), arch.section_b_bytes());
+        for _ in 0..5 {
+            let full = arch.full_bit().unwrap(); // upgrade
+            assert!(arch.b_resident());
+            drop(full);
+            assert!(arch.release_b()); // downgrade
+            assert!(!arch.b_resident());
+            let _part = arch.part_bit().unwrap(); // still servable
+        }
+        let s = arch.stats();
+        assert_eq!(s.a_fetches, 1, "section A fetched exactly once");
+        assert_eq!(s.layout_parses, 1, "layout parsed exactly once");
+        assert_eq!(s.b_fetches, 5, "one B fetch per upgrade");
+        assert_eq!(s.b_releases, 5);
+        assert_eq!(s.a_bytes_fetched, a_len);
+        assert_eq!(s.b_bytes_fetched, 5 * b_len);
+    }
+
+    #[test]
+    fn views_share_bytes_zero_copy() {
+        let arch = toy_archive(2, 8, 5);
+        let p1 = arch.part_bit().unwrap();
+        let p2 = arch.part_bit().unwrap();
+        assert!(Arc::ptr_eq(&p1.section_a(), &p2.section_a()), "one A arc");
+        let f = arch.full_bit().unwrap();
+        assert!(Arc::ptr_eq(&f.section_a(), &p1.section_a()));
+        // a dropped full-bit view keeps its B bytes alive through the Arc
+        let b = f.section_b();
+        arch.release_b();
+        assert_eq!(b.len() as u64, arch.section_b_bytes());
+    }
+
+    #[test]
+    fn part_view_matches_owned_decode() {
+        let arch = toy_archive(3, 6, 4);
+        let owned = arch.to_container(false).unwrap();
+        let full = arch.full_bit().unwrap();
+        assert_eq!(full.len(), owned.tensors.len());
+        for (view, t) in full.tensors().zip(&owned.tensors) {
+            assert_eq!(view.name(), t.name);
+            assert_eq!(view.shape(), &t.shape[..]);
+            match (view.payload(), &t.data) {
+                (
+                    PayloadView::Nest { scales, w_high, w_low },
+                    crate::container::TensorData::Nest {
+                        scales: s2,
+                        w_high: h2,
+                        w_low: Some(l2),
+                    },
+                ) => {
+                    assert_eq!(scales.to_vec(), *s2);
+                    assert_eq!(w_high.unpack(), h2.unpack());
+                    assert_eq!(w_low.unwrap().unpack(), l2.unpack());
+                    assert_eq!(w_high.get(3), h2.get(3));
+                }
+                (PayloadView::Fp32(v), crate::container::TensorData::Fp32(f)) => {
+                    assert_eq!(v.to_vec(), *f);
+                    assert_eq!(v.get(0), f[0]);
+                }
+                _ => panic!("payload mismatch for {}", t.name),
+            }
+        }
+    }
+
+    #[test]
+    fn full_bit_needs_nest_kind() {
+        let mut c = synthetic_nest(4, 8, 4, 8, 4).unwrap();
+        // strip to a mono-like check: fp32 container
+        c.tensors.retain(|t| matches!(t.data, crate::container::TensorData::Fp32(_)));
+        c.kind = Kind::Fp32;
+        c.n = 0;
+        c.h = 0;
+        c.act_bits = 0;
+        let arch = NqArchive::from_container(&c).unwrap();
+        assert!(arch.full_bit().is_err());
+        let part = arch.part_bit().unwrap();
+        assert_eq!(part.len(), 1);
+    }
+
+    #[test]
+    fn model_store_shares_archives() {
+        let dir = std::env::temp_dir().join(format!("nq_store_share_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.nq");
+        let c = synthetic_nest(5, 8, 4, 16, 4).unwrap();
+        crate::container::write(&path, &c).unwrap();
+        let store = ModelStore::new();
+        let a1 = store.open_path(&path).unwrap();
+        let a2 = store.open_path(&path).unwrap();
+        assert!(Arc::ptr_eq(&a1, &a2), "same archive shared");
+        assert_eq!(store.len(), 1);
+        // both handles see the same bytes and the same stats
+        a1.ensure_a().unwrap();
+        assert_eq!(a2.stats().a_fetches, 1);
+        let named = store.insert("alias", Arc::clone(&a1));
+        assert!(Arc::ptr_eq(&named, &a1));
+        assert_eq!(store.len(), 2);
+        assert!(store.get("alias").is_some());
+        assert!(!store.is_empty());
+    }
+}

@@ -1,0 +1,630 @@
+//! Tensor layout + borrowed views: the zero-copy half of the store.
+//!
+//! [`ModelLayout`] is parsed **once** per archive from the section-A
+//! bytes: it records every tensor's name, shape, and the *byte ranges*
+//! of its scales / packed payloads — in section A, and (computed from
+//! shape arithmetic, no section-B bytes needed) in section B. Views then
+//! decode packed words straight from the shared `Arc<[u8]>` sections:
+//! no `Container`, no per-tensor word `Vec`s, no copies until the
+//! final dequantized f32s.
+
+use std::ops::Range;
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::bits::{self, packed_nwords, PackedTensor};
+use crate::container::{Cursor, Kind, SectionIndex};
+
+use super::Bytes;
+
+/// Byte range of one packed block: `u8 bits | u32 n_words | u64×n_words`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct PackedRange {
+    bits: u8,
+    count: usize,
+    /// Offset of the `bits` byte within its section.
+    start: usize,
+    /// Whole block length (5 + 8·n_words).
+    len: usize,
+}
+
+impl PackedRange {
+    fn words(&self) -> Range<usize> {
+        self.start + 5..self.start + self.len
+    }
+}
+
+/// Where one tensor's payload bytes live.
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum Payload {
+    /// FP32 values in section A.
+    Fp32 { values: Range<usize> },
+    /// Quantized: scales + packed block in section A, plus (nest only)
+    /// the computed `w_low` block in section B.
+    Quant {
+        scales: Range<usize>,
+        packed: PackedRange,
+        low: Option<PackedRange>,
+    },
+}
+
+/// One tensor's metadata + byte ranges.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorLayout {
+    name: String,
+    shape: Vec<usize>,
+    count: usize,
+    payload: Payload,
+}
+
+impl TensorLayout {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    pub fn is_quantized(&self) -> bool {
+        matches!(self.payload, Payload::Quant { .. })
+    }
+
+    /// Packed bits of the section-A payload (`h` for nest, `n` for
+    /// mono), `None` for fp32 tensors.
+    pub fn packed_bits(&self) -> Option<u8> {
+        match &self.payload {
+            Payload::Quant { packed, .. } => Some(packed.bits),
+            Payload::Fp32 { .. } => None,
+        }
+    }
+
+    /// Section-B block bytes of this tensor (0 for fp32 / mono).
+    pub fn low_block_bytes(&self) -> usize {
+        match &self.payload {
+            Payload::Quant { low: Some(l), .. } => l.len,
+            _ => 0,
+        }
+    }
+}
+
+/// The parsed-once metadata of one archive: header fields + per-tensor
+/// byte ranges. Everything a view needs; none of the payload bytes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelLayout {
+    kind: Kind,
+    n: u8,
+    h: u8,
+    act_bits: u8,
+    name: String,
+    meta: String,
+    section_b_offset: u64,
+    a_len: usize,
+    b_len: usize,
+    tensors: Vec<TensorLayout>,
+}
+
+impl ModelLayout {
+    pub fn kind(&self) -> Kind {
+        self.kind
+    }
+
+    pub fn n(&self) -> u8 {
+        self.n
+    }
+
+    pub fn h(&self) -> u8 {
+        self.h
+    }
+
+    pub fn act_bits(&self) -> u8 {
+        self.act_bits
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn meta(&self) -> &str {
+        &self.meta
+    }
+
+    /// Byte offset of section B within the artifact (== section-A
+    /// length for nest containers).
+    pub fn section_b_offset(&self) -> u64 {
+        self.section_b_offset
+    }
+
+    /// Total section-B bytes implied by the layout.
+    pub fn section_b_bytes(&self) -> u64 {
+        self.b_len as u64
+    }
+
+    pub fn tensors(&self) -> &[TensorLayout] {
+        &self.tensors
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Parse section-A bytes into a layout, cross-checked against the
+    /// source's [`SectionIndex`]. Walks metadata only — payload bytes
+    /// are *skipped*, never copied.
+    pub(crate) fn parse(a: &[u8], index: &SectionIndex) -> Result<ModelLayout> {
+        ensure!(
+            a.len() as u64 == index.section_a_bytes(),
+            "section A is {} bytes, index says {}",
+            a.len(),
+            index.section_a_bytes()
+        );
+        // the one header decoder, shared with probe/parse
+        let p = crate::container::parse_prefix(a)?;
+        let mut c = Cursor { d: a, o: p.consumed };
+        let (kind, n, h, act_bits) = (p.kind, p.n, p.h, p.act_bits);
+        let (name, meta) = (p.name, p.meta);
+        let num = p.num_tensors;
+        let off_b = p.section_b_offset;
+        ensure!(
+            kind == index.kind && n == index.n && h == index.h,
+            "header disagrees with index: kind/n/h ({kind:?},{n},{h}) vs ({:?},{},{})",
+            index.kind,
+            index.n,
+            index.h
+        );
+        ensure!(
+            off_b == index.section_b_offset,
+            "section B offset mismatch: header {off_b}, index {}",
+            index.section_b_offset
+        );
+        if kind == Kind::Nest {
+            ensure!(h >= 1 && h < n && n <= 16, "bad nest header n={n} h={h}");
+        }
+
+        let mut tensors = Vec::with_capacity(num);
+        for _ in 0..num {
+            let tname = c.str()?;
+            let ptype = c.u8()?;
+            let ndim = c.u8()? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(c.u32()? as usize);
+            }
+            let count: usize = shape.iter().product();
+            let payload = match (ptype, kind) {
+                (1, _) => {
+                    let start = c.o;
+                    c.raw(4 * count)?;
+                    Payload::Fp32 { values: start..c.o }
+                }
+                (0, Kind::Nest) | (0, Kind::Mono) => {
+                    let ns = c.u32()? as usize;
+                    let sstart = c.o;
+                    c.raw(4 * ns)?;
+                    let scales = sstart..c.o;
+                    let pstart = c.o;
+                    let bits = c.u8()?;
+                    ensure!(
+                        (bits::MIN_BITS..=bits::MAX_BITS).contains(&bits),
+                        "{tname}: packed bits {bits} out of range"
+                    );
+                    let expect = if kind == Kind::Nest { h } else { n };
+                    ensure!(bits == expect, "{tname}: packed bits {bits} != header {expect}");
+                    let nw = c.u32()? as usize;
+                    ensure!(
+                        nw == packed_nwords(count, bits),
+                        "{tname}: INT{bits} x {count} needs {} words, got {nw}",
+                        packed_nwords(count, bits)
+                    );
+                    c.raw(8 * nw)?;
+                    Payload::Quant {
+                        scales,
+                        packed: PackedRange {
+                            bits,
+                            count,
+                            start: pstart,
+                            len: c.o - pstart,
+                        },
+                        low: None,
+                    }
+                }
+                (0, Kind::Fp32) => bail!("fp32 container cannot hold quantized tensors"),
+                (p, _) => bail!("unknown ptype {p}"),
+            };
+            tensors.push(TensorLayout {
+                name: tname,
+                shape,
+                count,
+                payload,
+            });
+        }
+        ensure!(c.o == a.len(), "trailing bytes in section A");
+        if kind == Kind::Nest {
+            ensure!(
+                off_b as usize == c.o,
+                "section B offset mismatch: {} vs {}",
+                off_b,
+                c.o
+            );
+        }
+
+        // Section-B layout follows from shape arithmetic alone — one
+        // `l+1`-bit block per quantized tensor in section-A order.
+        let mut b_len = 0usize;
+        if kind == Kind::Nest {
+            let low_bits = n - h + 1;
+            for t in &mut tensors {
+                if let Payload::Quant { low, .. } = &mut t.payload {
+                    let nw = packed_nwords(t.count, low_bits);
+                    let len = 5 + 8 * nw;
+                    *low = Some(PackedRange {
+                        bits: low_bits,
+                        count: t.count,
+                        start: b_len,
+                        len,
+                    });
+                    b_len += len;
+                }
+            }
+        }
+        // An A-only source (a section-A blob wrapped as a whole
+        // artifact: off_b == file_len) is a legal part-bit-only archive;
+        // `full_bit()` fails cleanly at verify. Otherwise the computed
+        // geometry must match the source exactly.
+        if index.section_b_bytes() > 0 {
+            ensure!(
+                b_len as u64 == index.section_b_bytes(),
+                "computed section B length {b_len} != index {}",
+                index.section_b_bytes()
+            );
+        }
+
+        Ok(ModelLayout {
+            kind,
+            n,
+            h,
+            act_bits,
+            name,
+            meta,
+            section_b_offset: off_b,
+            a_len: a.len(),
+            b_len,
+            tensors,
+        })
+    }
+
+    /// Check fetched section-B bytes against the computed layout (block
+    /// headers + total length). Cheap: 5 bytes per quantized tensor.
+    pub(crate) fn verify_b(&self, b: &[u8]) -> Result<()> {
+        ensure!(self.kind == Kind::Nest, "section B only exists for nest containers");
+        ensure!(
+            b.len() == self.b_len,
+            "section B is {} bytes, layout says {}",
+            b.len(),
+            self.b_len
+        );
+        for t in &self.tensors {
+            if let Payload::Quant { low: Some(l), .. } = &t.payload {
+                let bits = b[l.start];
+                ensure!(bits == l.bits, "{}: w_low bits {bits} != l+1 {}", t.name, l.bits);
+                let nw =
+                    u32::from_le_bytes(b[l.start + 1..l.start + 5].try_into().unwrap()) as usize;
+                ensure!(
+                    5 + 8 * nw == l.len,
+                    "{}: w_low block {} words != computed {}",
+                    t.name,
+                    nw,
+                    (l.len - 5) / 8
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// borrowed views
+// ---------------------------------------------------------------------------
+
+/// Borrowed little-endian f32 array (alignment-free: the `.nq` layout
+/// interleaves strings, so payloads are not 4-aligned in general).
+#[derive(Debug, Clone, Copy)]
+pub struct F32View<'m> {
+    bytes: &'m [u8],
+}
+
+impl<'m> F32View<'m> {
+    pub fn len(&self) -> usize {
+        self.bytes.len() / 4
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+
+    pub fn get(&self, i: usize) -> f32 {
+        f32::from_le_bytes(self.bytes[4 * i..4 * i + 4].try_into().unwrap())
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = f32> + 'm {
+        self.bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+    }
+
+    /// Decode into a caller buffer (hot path: reused across switches).
+    pub fn read_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(self.len());
+        out.extend(self.iter());
+    }
+
+    pub fn to_vec(&self) -> Vec<f32> {
+        self.iter().collect()
+    }
+}
+
+/// Borrowed packed k-bit tensor: decodes words straight from section
+/// bytes (cf. [`PackedTensor`], which owns its words).
+#[derive(Debug, Clone, Copy)]
+pub struct PackedView<'m> {
+    bytes: &'m [u8],
+    bits: u8,
+    count: usize,
+}
+
+impl<'m> PackedView<'m> {
+    pub fn bits(&self) -> u8 {
+        self.bits
+    }
+
+    pub fn len(&self) -> usize {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// On-disk payload bytes (words only).
+    pub fn nbytes(&self) -> usize {
+        self.bytes.len()
+    }
+
+    fn word(&self, i: usize) -> u64 {
+        u64::from_le_bytes(self.bytes[8 * i..8 * i + 8].try_into().unwrap())
+    }
+
+    fn words_iter(&self) -> impl Iterator<Item = u64> + 'm {
+        self.bytes
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+    }
+
+    /// Element at `i`, sign-extended.
+    pub fn get(&self, i: usize) -> i32 {
+        debug_assert!(i < self.count);
+        let n_lanes = bits::lanes(self.bits);
+        let shift = (i % n_lanes) * self.bits as usize;
+        let field = (self.word(i / n_lanes) >> shift) & ((1u64 << self.bits) - 1);
+        bits::sign_extend(field, self.bits)
+    }
+
+    /// Unpack into a caller buffer — the switching hot path's only
+    /// per-element pass over the packed bytes.
+    pub fn unpack_into(&self, out: &mut Vec<i32>) {
+        bits::unpack_words_into(self.words_iter(), self.bits, self.count, out);
+    }
+
+    pub fn unpack(&self) -> Vec<i32> {
+        let mut out = Vec::with_capacity(self.count);
+        self.unpack_into(&mut out);
+        out
+    }
+
+    /// Materialize an owned [`PackedTensor`] (compat / tests — copies).
+    pub fn to_packed(&self) -> Result<PackedTensor> {
+        PackedTensor::from_words(self.words_iter().collect(), self.bits, self.count)
+    }
+}
+
+/// One tensor's payload through the typed views.
+#[derive(Debug, Clone, Copy)]
+pub enum PayloadView<'m> {
+    /// FP32 parameter (bias, layernorm, pos-emb).
+    Fp32(F32View<'m>),
+    /// NestQuant weight; `w_low` is `Some` iff viewed through a
+    /// [`FullBitModel`].
+    Nest {
+        scales: F32View<'m>,
+        w_high: PackedView<'m>,
+        w_low: Option<PackedView<'m>>,
+    },
+    /// Monolithic packed weight.
+    Mono {
+        scales: F32View<'m>,
+        w_int: PackedView<'m>,
+    },
+}
+
+/// Borrowed view of one tensor inside a model view.
+#[derive(Debug, Clone, Copy)]
+pub struct TensorView<'m> {
+    layout: &'m TensorLayout,
+    kind: Kind,
+    a: &'m [u8],
+    b: Option<&'m [u8]>,
+}
+
+impl<'m> TensorView<'m> {
+    pub fn name(&self) -> &'m str {
+        &self.layout.name
+    }
+
+    pub fn shape(&self) -> &'m [usize] {
+        &self.layout.shape
+    }
+
+    pub fn count(&self) -> usize {
+        self.layout.count
+    }
+
+    pub fn layout(&self) -> &'m TensorLayout {
+        self.layout
+    }
+
+    pub fn payload(&self) -> PayloadView<'m> {
+        match &self.layout.payload {
+            Payload::Fp32 { values } => PayloadView::Fp32(F32View {
+                bytes: &self.a[values.clone()],
+            }),
+            Payload::Quant { scales, packed, low } => {
+                let scales = F32View {
+                    bytes: &self.a[scales.clone()],
+                };
+                let pv = PackedView {
+                    bytes: &self.a[packed.words()],
+                    bits: packed.bits,
+                    count: packed.count,
+                };
+                match self.kind {
+                    Kind::Nest => PayloadView::Nest {
+                        scales,
+                        w_high: pv,
+                        w_low: match (low, self.b) {
+                            (Some(l), Some(b)) => Some(PackedView {
+                                bytes: &b[l.words()],
+                                bits: l.bits,
+                                count: l.count,
+                            }),
+                            _ => None,
+                        },
+                    },
+                    Kind::Mono => PayloadView::Mono { scales, w_int: pv },
+                    Kind::Fp32 => unreachable!("quant payload rejected for fp32 kind at parse"),
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// typed model views
+// ---------------------------------------------------------------------------
+
+/// A model with only section A resident: the part-bit launch state
+/// (for mono/fp32 containers, section A *is* the whole model). Holding
+/// one is proof that `w_low` is not accessible — upgrading means asking
+/// the archive for a [`FullBitModel`] instead.
+pub struct PartBitModel {
+    layout: Arc<ModelLayout>,
+    a: Bytes,
+}
+
+impl PartBitModel {
+    pub(crate) fn new(layout: Arc<ModelLayout>, a: Bytes) -> Result<PartBitModel> {
+        ensure!(
+            a.len() == layout.a_len,
+            "section A is {} bytes, layout says {}",
+            a.len(),
+            layout.a_len
+        );
+        Ok(PartBitModel { layout, a })
+    }
+
+    pub fn layout(&self) -> &ModelLayout {
+        &self.layout
+    }
+
+    pub fn len(&self) -> usize {
+        self.layout.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.layout.is_empty()
+    }
+
+    pub fn tensor(&self, i: usize) -> TensorView<'_> {
+        TensorView {
+            layout: &self.layout.tensors()[i],
+            kind: self.layout.kind(),
+            a: &self.a,
+            b: None,
+        }
+    }
+
+    pub fn tensors(&self) -> impl ExactSizeIterator<Item = TensorView<'_>> + '_ {
+        (0..self.len()).map(move |i| self.tensor(i))
+    }
+
+    /// The resident section-A bytes (shared).
+    pub fn section_a(&self) -> Bytes {
+        Arc::clone(&self.a)
+    }
+}
+
+/// A model with both sections resident: the full-bit state. Dropping it
+/// (plus `NqArchive::release_b`) *is* the downgrade — section A and the
+/// layout stay untouched.
+pub struct FullBitModel {
+    layout: Arc<ModelLayout>,
+    a: Bytes,
+    b: Bytes,
+}
+
+impl FullBitModel {
+    pub(crate) fn new(layout: Arc<ModelLayout>, a: Bytes, b: Bytes) -> Result<FullBitModel> {
+        ensure!(
+            a.len() == layout.a_len,
+            "section A is {} bytes, layout says {}",
+            a.len(),
+            layout.a_len
+        );
+        layout.verify_b(&b)?;
+        Ok(FullBitModel { layout, a, b })
+    }
+
+    pub fn layout(&self) -> &ModelLayout {
+        &self.layout
+    }
+
+    pub fn len(&self) -> usize {
+        self.layout.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.layout.is_empty()
+    }
+
+    pub fn tensor(&self, i: usize) -> TensorView<'_> {
+        TensorView {
+            layout: &self.layout.tensors()[i],
+            kind: self.layout.kind(),
+            a: &self.a,
+            b: Some(&self.b),
+        }
+    }
+
+    pub fn tensors(&self) -> impl ExactSizeIterator<Item = TensorView<'_>> + '_ {
+        (0..self.len()).map(move |i| self.tensor(i))
+    }
+
+    /// The resident section-A bytes (shared).
+    pub fn section_a(&self) -> Bytes {
+        Arc::clone(&self.a)
+    }
+
+    /// The resident section-B bytes (shared).
+    pub fn section_b(&self) -> Bytes {
+        Arc::clone(&self.b)
+    }
+}

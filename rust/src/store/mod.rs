@@ -1,0 +1,291 @@
+//! ModelStore (S11): the one access layer over `.nq` artifacts.
+//!
+//! The paper's switching economy — part-bit vs full-bit as literal byte
+//! ranges of one artifact (Table 11, Figs 13/14) — deserves an API where
+//! that economy is visible in the types:
+//!
+//! * [`SectionSource`] — *where bytes come from*: a local file
+//!   ([`FileSource`], positioned reads, memoized header probe), an
+//!   in-memory blob ([`MemorySource`], synthetic zoos and transport
+//!   hand-offs), or a fleet server (`fleet::RemoteSource`).
+//! * [`NqArchive`] — *one open artifact*: fetch section A once into an
+//!   `Arc<[u8]>`, parse the tensor layout once, and hand out borrowed
+//!   views. Section B attaches as a second `Arc` and detaches by
+//!   dropping it — an upgrade is "attach a view", a downgrade is "drop
+//!   a view"; no re-parse, no re-read of section A, ever.
+//! * [`PartBitModel`] / [`FullBitModel`] — typed views whose existence
+//!   proves which sections are resident; their [`TensorView`]s decode
+//!   packed weights straight from the shared bytes (no intermediate
+//!   word vectors).
+//! * [`ModelStore`] — id → shared [`NqArchive`]; N consumers of the
+//!   same artifact share one set of bytes through the archive's `Arc`s
+//!   ([`ModelStore::global`] dedups by canonical path for read-mostly
+//!   consumers like report tables and the diverse-bitwidths baseline;
+//!   a `ModelManager` owns a private archive because its paging
+//!   lifecycle releases sections).
+//!
+//! The old `container` free functions (`read`, `parse`, `probe`,
+//! `read_range`, …) remain as `#[deprecated]` shims over the same
+//! internals; `container` itself keeps the format (types, writer,
+//! synthetic builder).
+//!
+//! Byte traffic is observable: [`NqArchive::stats`] counts section
+//! fetches and layout parses, which is how `tests/store.rs` proves the
+//! upgrade/downgrade path does zero section-A re-reads and zero
+//! re-parses, and how `benches/switching.rs` reports bytes copied per
+//! switch before vs after the view-based path.
+
+mod archive;
+mod layout;
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, OnceLock};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::container::{self, SectionIndex};
+
+pub use archive::{ArchiveStats, ModelStore, NqArchive};
+pub use layout::{
+    F32View, FullBitModel, ModelLayout, PackedView, PartBitModel, PayloadView, TensorLayout,
+    TensorView,
+};
+
+/// Shared immutable bytes (one section, or one whole artifact).
+pub type Bytes = Arc<[u8]>;
+
+/// Which `.nq` section a byte range or transfer refers to.
+///
+/// (Re-exported as `fleet::Section`; the wire tags are part of the fleet
+/// protocol.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Section {
+    /// Header + scales + packed `w_high` + fp32 params (part-bit launch).
+    A,
+    /// Packed `w_low` tail (the upgrade delta).
+    B,
+}
+
+impl Section {
+    pub fn tag(self) -> u8 {
+        match self {
+            Section::A => 0,
+            Section::B => 1,
+        }
+    }
+
+    pub fn from_tag(t: u8) -> Result<Section> {
+        Ok(match t {
+            0 => Section::A,
+            1 => Section::B,
+            _ => bail!("unknown section tag {t}"),
+        })
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Section::A => "A",
+            Section::B => "B",
+        }
+    }
+}
+
+impl std::fmt::Display for Section {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Where an archive's bytes come from. One implementation per tier:
+/// [`FileSource`] (disk), [`MemorySource`] (RAM), `fleet::RemoteSource`
+/// (another machine). Everything above — [`NqArchive`], the fleet
+/// `SectionCache`, the coordinator — is source-agnostic.
+pub trait SectionSource: Send + Sync {
+    /// Section layout. Implementations touch as little as possible (a
+    /// header probe, a memoized copy, one wire round-trip) and memoize.
+    fn index(&self) -> Result<SectionIndex>;
+
+    /// Fetch one section's bytes. This is the *only* way bytes move out
+    /// of a source, so fetch counts are the paging ground truth.
+    fn fetch(&self, section: Section) -> Result<Bytes>;
+
+    /// Human-readable origin for diagnostics ("path", "memory:name",
+    /// "fleet:addr/model").
+    fn describe(&self) -> String;
+}
+
+/// Raw positioned byte-range read from any file (pread-style; never
+/// moves a shared cursor). The blessed replacement for the deprecated
+/// `container::read_range`.
+pub fn read_file_range(path: &Path, range: std::ops::Range<u64>) -> Result<Vec<u8>> {
+    container::read_range_impl(path, range)
+}
+
+// ---------------------------------------------------------------------------
+// FileSource
+// ---------------------------------------------------------------------------
+
+/// A `.nq` artifact on disk. The header probe runs once (memoized);
+/// section fetches are positioned reads, so concurrent fetches on one
+/// source never race on a file cursor.
+#[derive(Debug)]
+pub struct FileSource {
+    path: PathBuf,
+    index: OnceLock<SectionIndex>,
+}
+
+impl FileSource {
+    pub fn new(path: impl Into<PathBuf>) -> FileSource {
+        FileSource {
+            path: path.into(),
+            index: OnceLock::new(),
+        }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl SectionSource for FileSource {
+    fn index(&self) -> Result<SectionIndex> {
+        if let Some(i) = self.index.get() {
+            return Ok(i.clone());
+        }
+        let idx = container::probe_impl(&self.path)?;
+        // a racer may have probed concurrently; first insert wins
+        Ok(self.index.get_or_init(|| idx).clone())
+    }
+
+    fn fetch(&self, section: Section) -> Result<Bytes> {
+        let idx = SectionSource::index(self)?;
+        let range = match section {
+            Section::A => idx.section_a(),
+            Section::B => idx.section_b(),
+        };
+        Ok(container::read_range_impl(&self.path, range)?.into())
+    }
+
+    fn describe(&self) -> String {
+        self.path.display().to_string()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MemorySource
+// ---------------------------------------------------------------------------
+
+/// A whole `.nq` artifact already in memory: synthetic containers,
+/// transport hand-offs, tests. Sections are split once at construction;
+/// fetches are `Arc` clones.
+pub struct MemorySource {
+    index: SectionIndex,
+    a: Bytes,
+    b: Bytes,
+}
+
+impl MemorySource {
+    /// Wrap serialized container bytes (validates the header).
+    pub fn new(data: &[u8]) -> Result<MemorySource> {
+        let index = container::index_of_bytes(data).context("indexing in-memory container")?;
+        let a_end = index.section_a().end as usize;
+        ensure!(a_end <= data.len(), "section A end beyond data");
+        Ok(MemorySource {
+            a: data[..a_end].into(),
+            b: data[a_end..].into(),
+            index,
+        })
+    }
+
+    /// Serialize a [`container::Container`] and wrap it (the synthetic
+    /// zoo path).
+    pub fn from_container(c: &container::Container) -> Result<MemorySource> {
+        MemorySource::new(&container::serialize(c)?)
+    }
+}
+
+impl SectionSource for MemorySource {
+    fn index(&self) -> Result<SectionIndex> {
+        Ok(self.index.clone())
+    }
+
+    fn fetch(&self, section: Section) -> Result<Bytes> {
+        Ok(match section {
+            Section::A => Arc::clone(&self.a),
+            Section::B => Arc::clone(&self.b),
+        })
+    }
+
+    fn describe(&self) -> String {
+        format!("memory:{}", self.index.name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::{synthetic_nest, Kind};
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("nq_store_src_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn section_tag_roundtrip() {
+        for s in [Section::A, Section::B] {
+            assert_eq!(Section::from_tag(s.tag()).unwrap(), s);
+        }
+        assert!(Section::from_tag(7).is_err());
+        assert_eq!(Section::A.to_string(), "A");
+        assert_eq!(Section::B.label(), "B");
+    }
+
+    #[test]
+    fn file_and_memory_sources_agree() {
+        let dir = temp_dir("agree");
+        let c = synthetic_nest(3, 8, 4, 48, 8).unwrap();
+        let bytes = container::serialize(&c).unwrap();
+        let path = dir.join("m.nq");
+        std::fs::write(&path, &bytes).unwrap();
+
+        let fs = FileSource::new(&path);
+        let ms = MemorySource::new(&bytes).unwrap();
+        let fi = fs.index().unwrap();
+        let mi = ms.index().unwrap();
+        assert_eq!(fi, mi);
+        assert_eq!(fi.kind, Kind::Nest);
+        for s in [Section::A, Section::B] {
+            let fb = fs.fetch(s).unwrap();
+            let mb = ms.fetch(s).unwrap();
+            assert_eq!(&fb[..], &mb[..], "section {s}");
+        }
+        // A ++ B == the serialized artifact
+        let mut whole = fs.fetch(Section::A).unwrap().to_vec();
+        whole.extend_from_slice(&fs.fetch(Section::B).unwrap());
+        assert_eq!(whole, bytes);
+        assert!(fs.describe().contains("m.nq"));
+        assert!(ms.describe().starts_with("memory:"));
+    }
+
+    #[test]
+    fn memory_source_rejects_garbage() {
+        assert!(MemorySource::new(b"not a container").is_err());
+    }
+
+    #[test]
+    fn read_file_range_is_positioned() {
+        let dir = temp_dir("range");
+        let path = dir.join("blob.bin");
+        let data: Vec<u8> = (0..=255u8).collect();
+        std::fs::write(&path, &data).unwrap();
+        assert_eq!(read_file_range(&path, 10..20).unwrap(), &data[10..20]);
+        assert_eq!(read_file_range(&path, 0..0).unwrap(), Vec::<u8>::new());
+        assert!(read_file_range(&path, 250..300).is_err());
+        #[allow(clippy::reversed_empty_ranges)]
+        {
+            assert!(read_file_range(&path, 20..10).is_err());
+        }
+    }
+}

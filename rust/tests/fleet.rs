@@ -9,8 +9,9 @@ use std::time::Duration;
 use nestquant::container::{self, TensorData};
 use nestquant::coordinator::SwitchPolicy;
 use nestquant::device::{MemoryLedger, ResourceTrace};
-use nestquant::fleet::{FleetClient, FleetConfig, FleetServer, Section, Zoo};
+use nestquant::fleet::{FleetClient, FleetConfig, FleetServer, RemoteSource, Section, Zoo};
 use nestquant::nest;
+use nestquant::store::{FileSource, NqArchive, PayloadView, SectionSource};
 
 const TIMEOUT: Duration = Duration::from_secs(30);
 
@@ -47,7 +48,7 @@ fn two_devices_share_cache_with_balanced_accounting() {
     let handle = FleetServer::start(zoo, small_chunk_config()).unwrap();
     let addr = handle.addr;
 
-    let cold = container::read(&path, false).unwrap();
+    let cold = NqArchive::open(&path).unwrap().to_container(false).unwrap();
     let mut joins = Vec::new();
     for d in 0..3 {
         let cold = cold.clone();
@@ -58,10 +59,14 @@ fn two_devices_share_cache_with_balanced_accounting() {
             let oa = c.pull_section("m0", Section::A, 0, &mut sec_a, None).unwrap();
             let ob = c.pull_section("m0", Section::B, 0, &mut sec_b, None).unwrap();
             assert!(oa.completed && ob.completed);
-            // reconstruct: the section-A blob is a part-bit container; the
-            // section-B blob attaches losslessly → bit-identical weights
-            let mut got = container::parse(&sec_a, true).unwrap();
-            container::attach_section_b(&mut got, &sec_b).unwrap();
+            // reconstruct: A ++ B is the whole artifact; opening it as an
+            // in-memory archive yields bit-identical weights
+            let mut whole = sec_a;
+            whole.extend_from_slice(&sec_b);
+            let got = NqArchive::from_bytes(&whole)
+                .unwrap()
+                .to_container(false)
+                .unwrap();
             for (tg, tc) in got.tensors.iter().zip(&cold.tensors) {
                 match (&tg.data, &tc.data) {
                     (
@@ -182,57 +187,56 @@ fn killed_section_b_transfer_resumes_from_last_ack() {
     );
 
     // the reassembled section is bit-identical to the on-disk tail
-    let idx = container::probe(&path).unwrap();
-    let disk_b = container::read_range(&path, idx.section_b()).unwrap();
-    assert_eq!(sink, disk_b);
+    let disk_b = FileSource::new(&path).fetch(Section::B).unwrap();
+    assert_eq!(&sink[..], &disk_b[..]);
     drop(back);
     handle.stop();
 }
 
-/// Satellite: a paged full→part→full switch over the fleet transport
-/// produces bit-identical weights to a cold full load.
+/// Satellite: a paged full→part→full switch over the fleet transport —
+/// driven through a remote-source archive — produces bit-identical
+/// weights to a cold full load, with zero section-A re-fetches across
+/// the cycle.
 #[test]
 fn paged_switch_is_bit_identical_to_cold_load() {
     let dir = temp_dir("paged");
-    let (path, _, _) = write_synth(&dir, "m0", 3, 8, 5);
+    let (path, a_len, b_len) = write_synth(&dir, "m0", 3, 8, 5);
 
-    // cold load: whole file in one read
-    let cold = container::read(&path, false).unwrap();
-    let cfg = nest::NestConfig::new(cold.n, cold.h).unwrap();
+    // cold load: local archive
+    let cold_arch = NqArchive::open(&path).unwrap();
+    let cold = cold_arch.full_bit().unwrap();
+    let cfg = nest::NestConfig::new(cold_arch.index().n, cold_arch.index().h).unwrap();
 
-    // paged load: section A, then section B over the fleet transport
+    // paged load: the same model as a remote archive over the fleet
+    // transport — identical API, bytes come down the wire
     let mut zoo = Zoo::new();
     zoo.add("m0", &path);
     let handle = FleetServer::start(zoo, small_chunk_config()).unwrap();
-    let mut c = FleetClient::connect(handle.addr, "pager", TIMEOUT).unwrap();
-    let (mut sec_a, mut sec_b) = (Vec::new(), Vec::new());
-    c.pull_section("m0", Section::A, 0, &mut sec_a, None).unwrap();
-    let mut paged = container::parse(&sec_a, true).unwrap();
+    let remote = RemoteSource::connect(handle.addr, "pager", "m0", TIMEOUT).unwrap();
+    assert_eq!(remote.model(), "m0");
+    let arch = NqArchive::with_source(Arc::new(remote)).unwrap();
+    assert_eq!(arch.index(), cold_arch.index());
 
-    // part-bit state: w_low absent
+    // part-bit state: w_low absent in the typed view
+    let part = arch.part_bit().unwrap();
     assert!(matches!(
-        &paged.tensors[0].data,
-        TensorData::Nest { w_low: None, .. }
+        part.tensor(0).payload(),
+        PayloadView::Nest { w_low: None, .. }
     ));
+    drop(part);
 
-    // upgrade: page in section B
-    c.pull_section("m0", Section::B, 0, &mut sec_b, None).unwrap();
-    container::attach_section_b(&mut paged, &sec_b).unwrap();
-
-    // downgrade: drop w_low; upgrade again from the same bytes
-    for t in &mut paged.tensors {
-        if let TensorData::Nest { w_low, .. } = &mut t.data {
-            *w_low = None;
-        }
-    }
-    container::attach_section_b(&mut paged, &sec_b).unwrap();
+    // upgrade → downgrade → upgrade: only section B moves
+    let full = arch.full_bit().unwrap();
+    drop(full);
+    assert!(arch.release_b());
+    let full = arch.full_bit().unwrap();
 
     // recomposed full-bit weights match the cold load bit-for-bit
-    for (tp, tc) in paged.tensors.iter().zip(&cold.tensors) {
+    for (tp, tc) in full.tensors().zip(cold.tensors()) {
         if let (
-            TensorData::Nest { w_high: h1, w_low: Some(l1), .. },
-            TensorData::Nest { w_high: h2, w_low: Some(l2), .. },
-        ) = (&tp.data, &tc.data)
+            PayloadView::Nest { w_high: h1, w_low: Some(l1), .. },
+            PayloadView::Nest { w_high: h2, w_low: Some(l2), .. },
+        ) = (tp.payload(), tc.payload())
         {
             let mut rec_paged = Vec::new();
             let mut rec_cold = Vec::new();
@@ -241,7 +245,16 @@ fn paged_switch_is_bit_identical_to_cold_load() {
             assert_eq!(rec_paged, rec_cold);
         }
     }
-    drop(c);
+
+    // byte accounting: A once, B twice (one per upgrade), zero re-parses
+    let s = arch.stats();
+    assert_eq!(s.a_fetches, 1);
+    assert_eq!(s.b_fetches, 2);
+    assert_eq!(s.layout_parses, 1);
+    assert_eq!(s.a_bytes_fetched, a_len);
+    assert_eq!(s.b_bytes_fetched, 2 * b_len);
+    drop(full);
+    drop(arch);
     handle.stop();
 }
 

@@ -7,7 +7,8 @@
 
 use std::sync::{Arc, Mutex};
 
-use nestquant::container::{self, Kind, TensorData};
+use nestquant::container::{Kind, TensorData};
+use nestquant::store::NqArchive;
 use nestquant::coordinator::{server, Coordinator, State, SwitchPolicy, Variant};
 use nestquant::device::{MemoryLedger, ResourceTrace};
 use nestquant::nest;
@@ -52,7 +53,10 @@ fn golden_logits_match_python() {
     let exe = engine
         .load_hlo(&manifest.abs(&spec.hlo[&0u8]))
         .unwrap();
-    let c = container::read(&manifest.abs(&spec.fp32_container), false).unwrap();
+    let c = NqArchive::open(manifest.abs(&spec.fp32_container))
+        .unwrap()
+        .to_container(false)
+        .unwrap();
     let mut bufs = Vec::new();
     for (t, p) in c.tensors.iter().zip(&spec.params) {
         match &t.data {
@@ -92,12 +96,15 @@ fn full_bit_accuracy_matches_pipeline() {
     let acc = c.eval_accuracy(Some(512)).unwrap();
 
     // the container's meta JSON records the pipeline's full-bit accuracy
-    let cont = container::read(
-        &manifest.abs(manifest.model(ARCH).unwrap().nest_container(n, h).unwrap()),
-        true,
+    let meta_str = NqArchive::open(
+        manifest.abs(manifest.model(ARCH).unwrap().nest_container(n, h).unwrap()),
     )
-    .unwrap();
-    let meta = nestquant::util::json::parse(&cont.meta).unwrap();
+    .unwrap()
+    .layout()
+    .unwrap()
+    .meta()
+    .to_string();
+    let meta = nestquant::util::json::parse(&meta_str).unwrap();
     let want = meta.path(&["full_acc"]).unwrap().as_f64().unwrap();
     assert!(
         (acc - want).abs() < 0.06,
@@ -280,12 +287,14 @@ fn container_cross_consistency() {
     let manifest = Manifest::load(&root).unwrap();
     let spec = manifest.model(ARCH).unwrap();
     let (n, h) = nest_combo(&manifest, ARCH);
-    let nest_c = container::read(
-        &manifest.abs(spec.nest_container(n, h).unwrap()),
-        false,
-    )
-    .unwrap();
-    let mono_c = container::read(&manifest.abs(&spec.mono_containers[&n]), false).unwrap();
+    let nest_c = NqArchive::open(manifest.abs(spec.nest_container(n, h).unwrap()))
+        .unwrap()
+        .to_container(false)
+        .unwrap();
+    let mono_c = NqArchive::open(manifest.abs(&spec.mono_containers[&n]))
+        .unwrap()
+        .to_container(false)
+        .unwrap();
     assert_eq!(nest_c.kind, Kind::Nest);
     assert_eq!(mono_c.kind, Kind::Mono);
     let cfg = nest::NestConfig::new(n, h).unwrap();

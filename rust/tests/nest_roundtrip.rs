@@ -95,31 +95,30 @@ fn packed_roundtrip_all_packable_combinations() {
     }
 }
 
-/// Full container serialize→parse round-trip across the (n, h) grid:
-/// section split + sectioned re-read agree for every combination the
-/// container format can hold.
+/// Full container serialize→open round-trip across the (n, h) grid:
+/// an owned decode of the archive and its part-bit + attached-B views
+/// agree for every combination the container format can hold.
 #[test]
 fn container_roundtrip_across_grid() {
+    use nestquant::store::{NqArchive, PayloadView};
     for n in [4u8, 6, 8, 12, 16] {
         for h in 2..n {
             let c = container::synthetic_nest(u64::from(n) * 100 + u64::from(h), n, h, 24, 4)
                 .unwrap();
-            let bytes = container::serialize(&c).unwrap();
-            let full = container::parse(&bytes, false).unwrap();
-            let mut part = container::parse(&bytes, true).unwrap();
-            container::attach_section_b(&mut part, &bytes[part.section_b_offset as usize..])
-                .unwrap();
-            for (tf, tp) in full.tensors.iter().zip(&part.tensors) {
-                match (&tf.data, &tp.data) {
+            let arch = NqArchive::from_container(&c).unwrap();
+            let full = arch.to_container(false).unwrap();
+            let view = arch.full_bit().unwrap();
+            for (tf, tp) in full.tensors.iter().zip(view.tensors()) {
+                match (&tf.data, tp.payload()) {
                     (
                         container::TensorData::Nest { w_high: h1, w_low: Some(l1), .. },
-                        container::TensorData::Nest { w_high: h2, w_low: Some(l2), .. },
+                        PayloadView::Nest { w_high: h2, w_low: Some(l2), .. },
                     ) => {
                         assert_eq!(h1.unpack(), h2.unpack(), "INT({n}|{h})");
                         assert_eq!(l1.unpack(), l2.unpack(), "INT({n}|{h})");
                     }
-                    (container::TensorData::Fp32(a), container::TensorData::Fp32(b)) => {
-                        assert_eq!(a, b)
+                    (container::TensorData::Fp32(a), PayloadView::Fp32(b)) => {
+                        assert_eq!(*a, b.to_vec())
                     }
                     _ => panic!("INT({n}|{h}): payload shape mismatch"),
                 }
