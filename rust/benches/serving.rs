@@ -1,0 +1,147 @@
+//! Bench: the multi-tenant serving path — request round-trip latency
+//! against 1 vs 3 hosted models, concurrent-client throughput, and the
+//! advise (upgrade+downgrade) cycle under a shared Section-B budget.
+//! Artifact-free (synthetic zoo, reference tenants); writes
+//! `BENCH_serving.json`.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use nestquant::container;
+use nestquant::coordinator::server::{serve_tenants, Client, ServerConfig, TenantExecutor};
+use nestquant::coordinator::tenant::nest_tenants_from_dir;
+use nestquant::coordinator::{Decision, Variant};
+use nestquant::store::{ModelStore, StoreBudget};
+use nestquant::util::benchkit::Bench;
+use nestquant::util::json;
+
+fn build_zoo(dir: &std::path::Path, count: usize) -> Vec<String> {
+    std::fs::create_dir_all(dir).unwrap();
+    let mut ids = Vec::new();
+    for i in 0..count {
+        let id = format!("model_{i}");
+        let c = container::synthetic_nest(0x5E4E + i as u64, 8, 4, 256, 16).unwrap();
+        container::write(&dir.join(format!("{id}.nq")), &c).unwrap();
+        ids.push(id);
+    }
+    ids
+}
+
+fn main() {
+    let b = Bench::quick();
+    let dir = std::env::temp_dir().join(format!("nq_serving_bench_{}", std::process::id()));
+    let ids = build_zoo(&dir, 3);
+
+    let store = ModelStore::new();
+    let budget = Arc::new(StoreBudget::new(u64::MAX));
+    let tenants = nest_tenants_from_dir(&dir, &store, &budget, 4).unwrap();
+    let image_len = tenants[0].1.shape().1;
+    let boxed: Vec<(String, Box<dyn TenantExecutor>)> = tenants
+        .into_iter()
+        .map(|(id, t)| (id, Box::new(t) as Box<dyn TenantExecutor>))
+        .collect();
+    // tight batching window: the bench measures the path, not the wait
+    let handle = serve_tenants(
+        boxed,
+        ServerConfig {
+            max_wait: Duration::from_micros(200),
+        },
+    )
+    .unwrap();
+    println!(
+        "bench: --- serving: {} tenants on {} (image_len {image_len}) ---",
+        ids.len(),
+        handle.addr
+    );
+    let img = vec![0.5f32; image_len];
+
+    // 1. single-tenant round-trip latency
+    let mut client = Client::connect(handle.addr).unwrap();
+    let s_single = b.run("serve round-trip 1 tenant", || {
+        client.infer_model(&ids[0], &img).unwrap();
+    });
+
+    // 2. round-robin across 3 tenants on one connection
+    let mut i = 0usize;
+    let s_rr = b.run("serve round-trip 3-tenant round-robin", || {
+        client.infer_model(&ids[i % ids.len()], &img).unwrap();
+        i += 1;
+    });
+
+    // 3. concurrent throughput: 2 clients per tenant for a fixed window
+    let window = Duration::from_secs(1);
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let mut joins = Vec::new();
+    for c in 0..(2 * ids.len()) {
+        let id = ids[c % ids.len()].clone();
+        let img = img.clone();
+        let addr = handle.addr;
+        let stop = Arc::clone(&stop);
+        joins.push(std::thread::spawn(move || -> u64 {
+            let mut client = Client::connect(addr).unwrap();
+            let mut n = 0u64;
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                client.infer_model(&id, &img).unwrap();
+                n += 1;
+            }
+            n
+        }));
+    }
+    // a switch storm runs through the same window (advise is part of
+    // the measured path: it contends for each tenant's executor lock)
+    let t0 = Instant::now();
+    let mut switches = 0u64;
+    while t0.elapsed() < window {
+        for id in &ids {
+            handle.advise(id, Decision::SwitchTo(Variant::FullBit)).unwrap();
+            handle.advise(id, Decision::SwitchTo(Variant::PartBit)).unwrap();
+            switches += 2;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let total: u64 = joins.into_iter().map(|j| j.join().unwrap()).sum();
+    let rps = total as f64 / t0.elapsed().as_secs_f64();
+    println!(
+        "bench: serve 6-client mixed throughput              {total:>6} reqs  {rps:>10.1} req/s  ({switches} switches mid-traffic)"
+    );
+
+    // 4. advise cycle latency (no traffic)
+    let s_advise = b.run("advise upgrade+downgrade cycle", || {
+        handle.advise(&ids[0], Decision::SwitchTo(Variant::FullBit)).unwrap();
+        handle.advise(&ids[0], Decision::SwitchTo(Variant::PartBit)).unwrap();
+    });
+
+    let doc = json::obj(vec![
+        ("tenants", json::num(ids.len() as f64)),
+        ("image_len", json::num(image_len as f64)),
+        (
+            "round_trip_us_1_tenant",
+            json::num(s_single.mean.as_secs_f64() * 1e6),
+        ),
+        (
+            "round_trip_us_3_tenant_rr",
+            json::num(s_rr.mean.as_secs_f64() * 1e6),
+        ),
+        ("mixed_throughput_rps", json::num(rps)),
+        ("switches_mid_traffic", json::num(switches as f64)),
+        (
+            "advise_cycle_us",
+            json::num(s_advise.mean.as_secs_f64() * 1e6),
+        ),
+        (
+            "note",
+            json::str_(
+                "synthetic 3-model zoo through the multi-tenant router; reference \
+                 tenants (no PJRT), so numbers isolate the serving path itself",
+            ),
+        ),
+    ]);
+    let out = "BENCH_serving.json";
+    std::fs::write(out, json::to_string(&doc)).unwrap();
+    println!("bench: wrote {out}");
+
+    let mut c2 = Client::connect(handle.addr).unwrap();
+    c2.stop_server().unwrap();
+    handle.stop();
+}

@@ -38,17 +38,29 @@ pub struct BatcherConfig {
 }
 
 /// Pull requests off `rx` and form one batch. Returns None when the
-/// channel is closed and drained. Blocks up to `max_wait` past the first
-/// request.
+/// channel is closed and drained. Blocks up to `max_wait` past the
+/// *oldest member's enqueue time*.
 pub fn next_batch(rx: &mpsc::Receiver<Request>, cfg: &BatcherConfig) -> Option<Batch> {
     // Block for the first request.
     let first = rx.recv().ok()?;
-    let deadline = Instant::now() + cfg.max_wait;
+    // Fairness on batch close: the deadline anchors at the oldest
+    // request's enqueue time, not at pop time. A request that already
+    // sat in a backlogged queue for max_wait closes its batch with
+    // whatever is immediately available instead of waiting a second
+    // full window (total latency ≤ max_wait + one batch execution).
+    let deadline = first.enqueued + cfg.max_wait;
     let mut requests = vec![first];
     while requests.len() < cfg.batch_size {
         let now = Instant::now();
         if now >= deadline {
-            break;
+            // past the window: never block again, but DO drain what is
+            // already queued — a backlog must ship full batches, not a
+            // stream of zero-padded singletons
+            match rx.try_recv() {
+                Ok(r) => requests.push(r),
+                Err(_) => break,
+            }
+            continue;
         }
         match rx.recv_timeout(deadline - now) {
             Ok(r) => requests.push(r),
@@ -74,6 +86,20 @@ fn assemble(requests: Vec<Request>, cfg: &BatcherConfig) -> Batch {
         input,
         requests,
         oldest_wait,
+    }
+}
+
+/// Drive one tenant's queue until its channel closes: the per-tenant
+/// executor loop of the multi-tenant server. Each hosted model gets its
+/// own queue + one `drain_queue` thread, so a flooding tenant can fill
+/// its own batches but never delays another tenant's batch close.
+pub fn drain_queue(
+    rx: &mpsc::Receiver<Request>,
+    cfg: &BatcherConfig,
+    mut serve: impl FnMut(Batch),
+) {
+    while let Some(batch) = next_batch(rx, cfg) {
+        serve(batch);
     }
 }
 
@@ -178,6 +204,63 @@ mod tests {
         let r1 = replies[1].recv().unwrap().unwrap();
         assert_eq!(r0, (0..10).map(|i| i as f32).collect::<Vec<_>>());
         assert_eq!(r1, (10..20).map(|i| i as f32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn backlogged_request_is_not_double_waited() {
+        // A request that already waited ≥ max_wait in the queue must
+        // close its batch immediately on pop, not wait another window.
+        let (tx, rx) = mpsc::channel();
+        let mut replies = Vec::new();
+        tx.send(req(1.0, &mut replies)).unwrap();
+        thread::sleep(Duration::from_millis(40)); // > max_wait of 30ms
+        let t0 = Instant::now();
+        let b = next_batch(&rx, &cfg()).unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_millis(20),
+            "deadline must anchor at enqueue time, waited {:?}",
+            t0.elapsed()
+        );
+        assert_eq!(b.requests.len(), 1);
+    }
+
+    #[test]
+    fn backlog_ships_full_batches_not_singletons() {
+        // A queue that built up while the executor was busy: the stale
+        // deadline must not close size-1 batches while >= batch_size
+        // requests sit ready in the channel.
+        let (tx, rx) = mpsc::channel();
+        let mut replies = Vec::new();
+        for i in 0..8 {
+            tx.send(req(i as f32, &mut replies)).unwrap();
+        }
+        thread::sleep(Duration::from_millis(40)); // all now past max_wait
+        let t0 = Instant::now();
+        let b1 = next_batch(&rx, &cfg()).unwrap();
+        let b2 = next_batch(&rx, &cfg()).unwrap();
+        assert!(t0.elapsed() < Duration::from_millis(20), "backlog must not re-wait");
+        assert_eq!(b1.requests.len(), 4, "first backlog batch full");
+        assert_eq!(b2.requests.len(), 4, "second backlog batch full");
+        assert_eq!(&b2.input[0..8], &[4.0; 8], "order preserved across batches");
+    }
+
+    #[test]
+    fn drain_queue_serves_every_request_then_exits() {
+        let (tx, rx) = mpsc::channel();
+        let mut replies = Vec::new();
+        for i in 0..9 {
+            tx.send(req(i as f32, &mut replies)).unwrap();
+        }
+        drop(tx);
+        let mut served = 0usize;
+        drain_queue(&rx, &cfg(), |b| {
+            served += b.requests.len();
+            respond(b, &vec![0.0; 40], 10);
+        });
+        assert_eq!(served, 9);
+        for r in &replies {
+            assert!(r.recv().unwrap().is_ok());
+        }
     }
 
     #[test]

@@ -37,7 +37,7 @@ use crate::device::MemoryLedger;
 use crate::nest;
 use crate::quant;
 use crate::runtime::{Engine, Executable, ModelSpec};
-use crate::store::{NqArchive, PayloadView, TensorView};
+use crate::store::{NqArchive, PayloadView, StoreBudget, TensorView};
 
 /// Which weights are currently active.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -70,6 +70,11 @@ pub struct ModelManager {
     exe: Executable,
     /// Shared handle to the `.nq` artifact; owns the section bytes.
     archive: Arc<NqArchive>,
+    /// When set, section-B residency routes through a shared budget:
+    /// upgrades may evict other tenants' B sections, and this manager's
+    /// own B may be evicted between batches (already-materialized
+    /// weight buffers stay valid — only the packed bytes are reclaimed).
+    budget: Option<(String, Arc<StoreBudget>)>,
     /// Packed section sizes (bytes) for ledger accounting.
     sec_a_bytes: u64,
     sec_b_bytes: u64,
@@ -132,6 +137,7 @@ impl ModelManager {
             sec_a_bytes: archive.section_a_bytes(),
             sec_b_bytes: archive.section_b_bytes(),
             archive,
+            budget: None,
             weight_bufs: Vec::new(),
             part_bufs: Vec::new(),
             state: State::Unloaded,
@@ -145,6 +151,29 @@ impl ModelManager {
 
     pub fn state(&self) -> State {
         self.state
+    }
+
+    /// Route this manager's section-B residency through a shared
+    /// [`StoreBudget`] under `id`: upgrades attach via the budget
+    /// (evicting other tenants' B sections LRU-first), downgrades and
+    /// unloads release through it, so N managers share one RAM cap.
+    pub fn set_store_budget(&mut self, id: impl Into<String>, budget: Arc<StoreBudget>) {
+        self.budget = Some((id.into(), budget));
+    }
+
+    /// Release section B: through the budget when one is set (keeps the
+    /// shared ledger balanced). When the budget does not list us — the
+    /// bytes were fetched outside it (e.g. `load_full_bit`) or already
+    /// evicted — fall back to the archive directly so resident bytes
+    /// never outlive the manager's full-bit state (a counted no-op when
+    /// nothing is resident).
+    fn release_b(&self) {
+        if let Some((id, budget)) = &self.budget {
+            if budget.release_b(id) {
+                return;
+            }
+        }
+        self.archive.release_b();
     }
 
     pub fn spec(&self) -> &ModelSpec {
@@ -207,10 +236,40 @@ impl ModelManager {
             "upgrade from {:?}",
             self.state
         );
-        ledger.page_in(self.sec_b_bytes).context("upgrade page-in")?;
+        if let Some((id, budget)) = &self.budget {
+            // budgeted attach first (it can refuse): may LRU-evict other
+            // tenants' B sections; materialize below hits the resident Arc
+            budget.attach_b(id, &self.archive).context("budgeted upgrade")?;
+        }
+        if let Err(e) = ledger.page_in(self.sec_b_bytes) {
+            // roll the budgeted attach back: a refused upgrade must not
+            // leave this tenant's B resident under the shared cap
+            if let Some((id, budget)) = &self.budget {
+                budget.release_b(id);
+            }
+            return Err(e).context("upgrade page-in");
+        }
         // stash the current part-bit buffers for an O(1) later downgrade
         let part = std::mem::take(&mut self.weight_bufs);
-        self.materialize(Variant::FullBit)?;
+        if let Err(e) = self.materialize(Variant::FullBit) {
+            // roll back everything the failed upgrade charged: hand the
+            // (budgeted) B bytes back, un-charge the ledger, and restore
+            // the part-bit buffers — the manager keeps serving part-bit
+            self.release_b();
+            let _ = ledger.page_out(self.sec_b_bytes);
+            self.weight_bufs = part;
+            return Err(e);
+        }
+        if let Some((id, budget)) = &self.budget {
+            if !budget.is_resident(id) {
+                // evicted between attach_b and materialize: full_bit()
+                // silently re-fetched B outside the ledger. Hand the
+                // bytes back — the dequantized buffers stay valid, and
+                // the state is simply "full-bit whose B was already
+                // evicted", which the next downgrade handles as usual.
+                self.archive.release_b();
+            }
+        }
         self.part_bufs = part;
         self.state = State::Active(Variant::FullBit);
         Ok(SwitchCost {
@@ -230,7 +289,7 @@ impl ModelManager {
             "downgrade from {:?}",
             self.state
         );
-        self.archive.release_b(); // page out
+        self.release_b(); // page out
         ledger.page_out(self.sec_b_bytes).context("downgrade page-out")?;
         if self.part_bufs.is_empty() {
             self.materialize(Variant::PartBit)?;
@@ -255,6 +314,7 @@ impl ModelManager {
             State::Active(Variant::FullBit) => self.sec_a_bytes + self.sec_b_bytes,
         };
         ledger.page_out(bytes)?;
+        self.release_b(); // keep a shared budget's ledger balanced
         self.archive.release_a(); // drops both sections; layout survives
         self.weight_bufs.clear();
         self.part_bufs.clear();

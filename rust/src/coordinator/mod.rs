@@ -3,10 +3,16 @@
 //! a dynamically-batched inference loop.
 //!
 //! ```text
-//!   TCP clients ──frames──▶ server ──mpsc──▶ batcher ──▶ ModelManager ──▶ PJRT
-//!                                             ▲                │
-//!   ResourceTrace ──▶ PolicyState ── switch ──┘          MemoryLedger
+//!   TCP clients ──(model id, image)──▶ server router
+//!                                        ├─ tenant queue ▶ batcher ▶ executor
+//!                                        ├─ tenant queue ▶ batcher ▶ executor
+//!                                        └─ shared StoreBudget (Section B)
+//!   ResourceTrace ──▶ PolicyState ── advise(model) ──▶ tenant switch
 //! ```
+//!
+//! The server hosts any number of models from one `store::ModelStore`
+//! (`server::serve_tenants`); the single-coordinator path (`server::serve`)
+//! is the one-tenant special case.
 
 pub mod baseline;
 pub mod batcher;
@@ -15,6 +21,7 @@ pub mod metrics;
 pub mod monitor;
 pub mod policy;
 pub mod server;
+pub mod tenant;
 
 use std::path::PathBuf;
 use std::sync::atomic::Ordering;
@@ -26,6 +33,8 @@ pub use baseline::DiverseBitwidths;
 pub use manager::{ModelManager, State, SwitchCost, Variant};
 pub use metrics::Metrics;
 pub use policy::{Decision, PolicyState, SwitchPolicy};
+pub use server::TenantExecutor;
+pub use tenant::NestTenant;
 
 use crate::device::{DeviceProfile, MemoryLedger, ResourceTrace, RPI_4B};
 use crate::runtime::{Engine, Manifest};

@@ -1,22 +1,47 @@
-//! Inference server: TCP front-end + batcher + executor loop.
+//! Multi-tenant inference server: one TCP front-end routing
+//! model-id-tagged frames to per-tenant batcher queues + executors.
 //!
-//! Protocol: clients send `Control` frames named "infer" whose payload is
-//! one flattened NHWC f32 image; the server replies with a `Control`
-//! frame named "logits" (f32 payload) or "error" (utf8 message). A frame
-//! named "stop" shuts the server down (used by tests/examples).
+//! ```text
+//!                        ┌──────────────────────────────────────────┐
+//!   client ──"infer"─────│ router: model id → tenant                │
+//!   client ──(id,image)──│   tenant A: queue ─▶ batcher ─▶ executor │
+//!      ⋮                 │   tenant B: queue ─▶ batcher ─▶ executor │
+//!   client ──"models"────│   shared StoreBudget (Section-B bytes)   │
+//!                        └──────────────────────────────────────────┘
+//! ```
+//!
+//! Protocol (all `Control` frames): clients send `infer` whose payload
+//! is `u16 id_len | model id | flattened NHWC f32 image`
+//! ([`crate::transport::encode_tagged`]); the server replies `logits`
+//! (same tagged form) or `error` (utf8). `models` lists the hosted
+//! model ids (newline-joined). `stop` shuts the server down; the
+//! handler both sets the stop flag *and* pokes the listener, so a bare
+//! `stop` frame suffices without racing `ServerHandle::stop`.
+//!
+//! Each hosted model owns its queue and executor thread, so tenants
+//! batch independently (a flood on one model never delays another's
+//! batch close — see `batcher::drain_queue`). Switch advice
+//! ([`ServerHandle::advise`]) serializes with execution through the
+//! tenant's executor mutex: a switch lands between batches, never
+//! tearing weights out from under one.
 
+use std::collections::BTreeMap;
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
-use crate::transport::{recv_frame, send_frame, Frame, FrameKind, Meter};
+use crate::transport::{
+    decode_model_list, decode_tagged, encode_model_list, encode_tagged, recv_frame, send_frame,
+    Frame, FrameKind, Meter,
+};
 
 use super::batcher::{self, BatcherConfig, Request};
-use super::Coordinator;
+use super::{Coordinator, Decision, Metrics, State, SwitchCost, Variant};
 
 /// Server configuration.
 #[derive(Debug, Clone, Copy)]
@@ -32,83 +57,327 @@ impl Default for ServerConfig {
     }
 }
 
-/// Handle to a running server.
+// ---------------------------------------------------------------------------
+// tenants
+// ---------------------------------------------------------------------------
+
+/// One hosted model's executor: shape-specialized batch inference plus
+/// the upgrade/downgrade switch hooks. Implemented by [`Coordinator`]
+/// (PJRT-backed, manifest-described) and `tenant::NestTenant` (served
+/// straight from a store archive, PJRT-free).
+pub trait TenantExecutor: Send {
+    /// `(batch_size, image_len, num_classes)` the executor is
+    /// specialized for.
+    fn shape(&self) -> (usize, usize, usize);
+
+    /// Run one zero-padded batch (`batch_size * image_len` floats);
+    /// returns `batch_size * num_classes` logits.
+    fn run_batch(&mut self, input: &[f32]) -> Result<Vec<f32>>;
+
+    /// Apply switch advice. Serialized with `run_batch` by the server's
+    /// per-tenant mutex, so a switch never tears a running batch.
+    fn switch(&mut self, decision: Decision) -> Result<Option<SwitchCost>>;
+
+    /// Variant currently served.
+    fn variant(&self) -> Variant;
+
+    /// Metrics sink to record serving counters into; `None` lets the
+    /// server allocate a private one per tenant.
+    fn metrics(&self) -> Option<Arc<Metrics>> {
+        None
+    }
+
+    /// Whether `switch` already records switch counters into
+    /// `metrics()` itself ([`Coordinator::apply`] does) — the server's
+    /// advice path then skips double-recording.
+    fn switch_is_metered(&self) -> bool {
+        false
+    }
+}
+
+impl TenantExecutor for Coordinator {
+    fn shape(&self) -> (usize, usize, usize) {
+        (
+            self.manifest.batch,
+            self.manifest.img * self.manifest.img * self.manifest.channels,
+            self.manifest.num_classes,
+        )
+    }
+
+    fn run_batch(&mut self, input: &[f32]) -> Result<Vec<f32>> {
+        self.infer_batch(input)
+    }
+
+    fn switch(&mut self, decision: Decision) -> Result<Option<SwitchCost>> {
+        self.apply(decision)
+    }
+
+    fn variant(&self) -> Variant {
+        match self.manager.state() {
+            State::Active(v) => v,
+            State::Unloaded => Variant::PartBit,
+        }
+    }
+
+    fn metrics(&self) -> Option<Arc<Metrics>> {
+        Some(Arc::clone(&self.metrics))
+    }
+
+    fn switch_is_metered(&self) -> bool {
+        true
+    }
+}
+
+/// A coordinator shared with out-of-server switch drivers (e.g. a
+/// policy loop applying decisions through the same mutex). The legacy
+/// single-tenant [`serve`] entry point wraps its coordinator in this.
+pub struct SharedCoordinator(pub Arc<Mutex<Coordinator>>);
+
+impl TenantExecutor for SharedCoordinator {
+    fn shape(&self) -> (usize, usize, usize) {
+        self.0.lock().unwrap().shape()
+    }
+
+    fn run_batch(&mut self, input: &[f32]) -> Result<Vec<f32>> {
+        self.0.lock().unwrap().infer_batch(input)
+    }
+
+    fn switch(&mut self, decision: Decision) -> Result<Option<SwitchCost>> {
+        self.0.lock().unwrap().apply(decision)
+    }
+
+    fn variant(&self) -> Variant {
+        self.0.lock().unwrap().variant()
+    }
+
+    fn metrics(&self) -> Option<Arc<Metrics>> {
+        Some(Arc::clone(&self.0.lock().unwrap().metrics))
+    }
+
+    fn switch_is_metered(&self) -> bool {
+        true
+    }
+}
+
+/// Per-tenant runtime shared between the router, the handlers, and the
+/// advice path.
+struct Tenant {
+    exec: Arc<Mutex<Box<dyn TenantExecutor>>>,
+    metrics: Arc<Metrics>,
+    image_len: usize,
+    /// Request queue sender; taken (closed) on shutdown so the
+    /// executor's `drain_queue` loop drains and exits.
+    tx: Mutex<Option<mpsc::Sender<Request>>>,
+}
+
+// ---------------------------------------------------------------------------
+// handle
+// ---------------------------------------------------------------------------
+
+/// Handle to a running server. Dropping it (or calling
+/// [`ServerHandle::stop`]) shuts the server down deterministically:
+/// every acceptor, executor, and connection-handler thread is joined.
 pub struct ServerHandle {
     pub addr: SocketAddr,
     stop: Arc<AtomicBool>,
-    threads: Vec<std::thread::JoinHandle<()>>,
+    tenants: Arc<BTreeMap<String, Tenant>>,
+    acceptor: Option<JoinHandle<()>>,
+    executors: Vec<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
 }
 
 impl ServerHandle {
+    /// Hosted model ids.
+    pub fn models(&self) -> Vec<String> {
+        self.tenants.keys().cloned().collect()
+    }
+
+    /// Serving metrics of one hosted model.
+    pub fn metrics(&self, model: &str) -> Option<Arc<Metrics>> {
+        self.tenants.get(model).map(|t| Arc::clone(&t.metrics))
+    }
+
+    /// Variant one hosted model currently serves.
+    pub fn variant(&self, model: &str) -> Option<Variant> {
+        self.tenants
+            .get(model)
+            .map(|t| t.exec.lock().unwrap().variant())
+    }
+
+    /// Apply switch advice to one hosted model. Serialized with that
+    /// model's batch execution; other tenants keep serving throughout.
+    pub fn advise(&self, model: &str, decision: Decision) -> Result<Option<SwitchCost>> {
+        let t = self
+            .tenants
+            .get(model)
+            .ok_or_else(|| anyhow::anyhow!("unknown model {model:?}"))?;
+        let (cost, metered) = {
+            let mut e = t.exec.lock().unwrap();
+            (e.switch(decision)?, e.switch_is_metered())
+        };
+        if let (Some(c), false) = (&cost, metered) {
+            t.metrics
+                .page_in_bytes
+                .fetch_add(c.page_in_bytes, Ordering::Relaxed);
+            t.metrics
+                .page_out_bytes
+                .fetch_add(c.page_out_bytes, Ordering::Relaxed);
+            match decision {
+                Decision::SwitchTo(Variant::FullBit) => {
+                    t.metrics.upgrades.fetch_add(1, Ordering::Relaxed);
+                }
+                Decision::SwitchTo(Variant::PartBit) => {
+                    t.metrics.downgrades.fetch_add(1, Ordering::Relaxed);
+                }
+                Decision::Stay => {}
+            }
+            t.metrics
+                .switch_latency
+                .record(Duration::from_micros(c.micros as u64));
+        }
+        Ok(cost)
+    }
+
+    /// Whether a `stop` frame (or a prior `stop()` call) has shut the
+    /// server down.
+    pub fn stopped(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    /// Stop the server and join every thread.
     pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        // 1. flag first, THEN poke: the accept loop re-checks the flag
+        //    after every accept (including the poke's), so no connection
+        //    accepted after this line is dispatched to a handler
         self.stop.store(true, Ordering::SeqCst);
-        // poke the listener so accept() returns
+        // 2. close every tenant queue so executors drain and exit once
+        //    the last in-flight handler drops its sender clone
+        for t in self.tenants.values() {
+            t.tx.lock().unwrap().take();
+        }
+        // 3. wake the acceptor even when no client ever sent `stop`
         let _ = TcpStream::connect(self.addr);
-        for t in self.threads.drain(..) {
-            let _ = t.join();
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        // 4. handlers observe the flag within their poll interval; join
+        //    them BEFORE executors (a handler may be awaiting a reply
+        //    that an executor still has to produce)
+        let conns: Vec<_> = self.conns.lock().unwrap().drain(..).collect();
+        for c in conns {
+            let _ = c.join();
+        }
+        for e in self.executors.drain(..) {
+            let _ = e.join();
         }
     }
 }
 
-/// Start serving `coordinator` on a fresh localhost port.
-///
-/// The coordinator is shared behind a mutex: the executor thread takes it
-/// per batch; switch operations (driven externally via the same mutex)
-/// serialize with execution — a switch never tears weights out from under
-/// a running batch.
-pub fn serve(
-    coordinator: Arc<Mutex<Coordinator>>,
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// serve
+// ---------------------------------------------------------------------------
+
+/// Legacy single-tenant entry point: serve one shared coordinator under
+/// its architecture name. Untagged `infer` frames (empty model id)
+/// route to it as the sole tenant.
+pub fn serve(coordinator: Arc<Mutex<Coordinator>>, config: ServerConfig) -> Result<ServerHandle> {
+    let id = coordinator.lock().unwrap().manager.spec().name.clone();
+    serve_tenants(
+        vec![(id, Box::new(SharedCoordinator(coordinator)) as Box<dyn TenantExecutor>)],
+        config,
+    )
+}
+
+/// Start a multi-tenant server hosting `tenants` on a fresh localhost
+/// port. Each tenant gets its own batcher queue and executor thread;
+/// `infer` frames route by model id.
+pub fn serve_tenants(
+    tenants: Vec<(String, Box<dyn TenantExecutor>)>,
     config: ServerConfig,
 ) -> Result<ServerHandle> {
+    ensure!(!tenants.is_empty(), "serve_tenants needs at least one tenant");
     let listener = TcpListener::bind("127.0.0.1:0").context("bind")?;
     let addr = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
-    let (tx, rx) = mpsc::channel::<Request>();
 
-    // executor thread: batcher → coordinator → replies
-    let exec_coord = Arc::clone(&coordinator);
-    let (img_len, batch_size, classes) = {
-        let c = exec_coord.lock().unwrap();
-        (
-            c.manifest.img * c.manifest.img * c.manifest.channels,
-            c.manifest.batch,
-            c.manifest.num_classes,
-        )
-    };
-    let bcfg = BatcherConfig {
-        batch_size,
-        image_len: img_len,
-        max_wait: config.max_wait,
-    };
-    let executor = std::thread::Builder::new()
-        .name("nq-executor".into())
-        .spawn(move || {
-            while let Some(batch) = batcher::next_batch(&rx, &bcfg) {
-                let c = exec_coord.lock().unwrap();
-                let occupancy = batch.requests.len() as u64;
-                match c.infer_batch(&batch.input) {
-                    Ok(logits) => {
-                        c.metrics.requests.fetch_add(occupancy, Ordering::Relaxed);
-                        c.metrics.batches.fetch_add(1, Ordering::Relaxed);
-                        c.metrics
-                            .batch_occupancy_sum
-                            .fetch_add(occupancy, Ordering::Relaxed);
-                        for r in &batch.requests {
-                            c.metrics.request_latency.record(r.enqueued.elapsed());
+    let mut map: BTreeMap<String, Tenant> = BTreeMap::new();
+    let mut executors = Vec::new();
+    for (id, exec) in tenants {
+        ensure!(!map.contains_key(&id), "duplicate tenant id {id:?}");
+        ensure!(
+            !id.is_empty() && !id.contains('\n'),
+            "tenant id {id:?} must be non-empty and newline-free \
+             (empty routes to the sole tenant; newline is the list separator)"
+        );
+        let (batch_size, image_len, classes) = exec.shape();
+        ensure!(
+            batch_size > 0 && image_len > 0 && classes > 0,
+            "{id}: degenerate tenant shape ({batch_size}, {image_len}, {classes})"
+        );
+        let metrics = exec.metrics().unwrap_or_default();
+        let exec = Arc::new(Mutex::new(exec));
+        let (tx, rx) = mpsc::channel::<Request>();
+        let bcfg = BatcherConfig {
+            batch_size,
+            image_len,
+            max_wait: config.max_wait,
+        };
+        let exec2 = Arc::clone(&exec);
+        let metrics2 = Arc::clone(&metrics);
+        let thread = std::thread::Builder::new()
+            .name(format!("nq-exec-{id}"))
+            .spawn(move || {
+                batcher::drain_queue(&rx, &bcfg, |batch| {
+                    let mut e = exec2.lock().unwrap();
+                    let occupancy = batch.requests.len() as u64;
+                    match e.run_batch(&batch.input) {
+                        Ok(logits) => {
+                            drop(e);
+                            metrics2.requests.fetch_add(occupancy, Ordering::Relaxed);
+                            metrics2.batches.fetch_add(1, Ordering::Relaxed);
+                            metrics2
+                                .batch_occupancy_sum
+                                .fetch_add(occupancy, Ordering::Relaxed);
+                            for r in &batch.requests {
+                                metrics2.request_latency.record(r.enqueued.elapsed());
+                            }
+                            batcher::respond(batch, &logits, classes);
                         }
-                        drop(c);
-                        batcher::respond(batch, &logits, classes);
+                        Err(e2) => {
+                            drop(e);
+                            metrics2.errors.fetch_add(occupancy, Ordering::Relaxed);
+                            batcher::respond_error(batch, &format!("{e2:#}"));
+                        }
                     }
-                    Err(e) => {
-                        drop(c);
-                        batcher::respond_error(batch, &format!("{e:#}"));
-                    }
-                }
-            }
-        })?;
+                });
+            })?;
+        executors.push(thread);
+        map.insert(
+            id,
+            Tenant {
+                exec,
+                metrics,
+                image_len,
+                tx: Mutex::new(Some(tx)),
+            },
+        );
+    }
+    let tenants = Arc::new(map);
 
-    // acceptor thread: one handler thread per connection
+    let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
     let stop2 = Arc::clone(&stop);
+    let tenants2 = Arc::clone(&tenants);
+    let aconns = Arc::clone(&conns);
     let acceptor = std::thread::Builder::new()
         .name("nq-acceptor".into())
         .spawn(move || {
@@ -117,32 +386,71 @@ pub fn serve(
                     break;
                 }
                 let Ok(sock) = conn else { continue };
-                let tx = tx.clone();
-                let stop3 = Arc::clone(&stop2);
-                std::thread::spawn(move || {
-                    let _ = handle_connection(sock, tx, img_len, stop3);
+                // deterministic shutdown: re-check AFTER the accept, so
+                // a poke connection (or any racer) accepted at stop time
+                // is dropped instead of dispatched to a handler
+                if stop2.load(Ordering::SeqCst) {
+                    break;
+                }
+                let hstop = Arc::clone(&stop2);
+                let htenants = Arc::clone(&tenants2);
+                let handle = std::thread::spawn(move || {
+                    let _ = handle_connection(sock, htenants, hstop, addr);
                 });
+                let mut conns = aconns.lock().unwrap();
+                conns.retain(|h| !h.is_finished());
+                conns.push(handle);
             }
-            // tx drops here → executor drains and exits
         })?;
 
     Ok(ServerHandle {
         addr,
         stop,
-        threads: vec![executor, acceptor],
+        tenants,
+        acceptor: Some(acceptor),
+        executors,
+        conns,
     })
+}
+
+fn error_frame(msg: impl Into<Vec<u8>>) -> Frame {
+    Frame {
+        kind: FrameKind::Control,
+        name: "error".into(),
+        payload: msg.into(),
+    }
+}
+
+/// Resolve a model id to its tenant; an empty id routes to the sole
+/// tenant when exactly one is hosted.
+fn resolve<'t>(tenants: &'t BTreeMap<String, Tenant>, model: &str) -> Result<(&'t Tenant, String)> {
+    if model.is_empty() {
+        ensure!(
+            tenants.len() == 1,
+            "model id required ({} models hosted)",
+            tenants.len()
+        );
+        let (id, t) = tenants.iter().next().unwrap();
+        return Ok((t, id.clone()));
+    }
+    match tenants.get(model) {
+        Some(t) => Ok((t, model.to_string())),
+        None => bail!(
+            "unknown model {model:?} (hosted: {:?})",
+            tenants.keys().collect::<Vec<_>>()
+        ),
+    }
 }
 
 fn handle_connection(
     sock: TcpStream,
-    tx: mpsc::Sender<Request>,
-    img_len: usize,
+    tenants: Arc<BTreeMap<String, Tenant>>,
     stop: Arc<AtomicBool>,
+    addr: SocketAddr,
 ) -> Result<()> {
     let meter = Meter::default();
-    // Poll the socket with a short timeout so handler threads observe the
-    // stop flag and release their batcher senders (otherwise a lingering
-    // idle client would keep the executor alive after stop()).
+    // Poll the socket with a short timeout so handler threads observe
+    // the stop flag and release their batcher senders.
     sock.set_read_timeout(Some(Duration::from_millis(100)))?;
     let mut writer = sock.try_clone()?;
     let mut reader = BufReader::new(sock);
@@ -153,15 +461,8 @@ fn handle_connection(
         let (frame, _) = match recv_frame(&mut reader, &meter) {
             Ok(f) => f,
             Err(e) => {
-                // timeout while idle → re-check stop and keep waiting
-                let timed_out = e.downcast_ref::<std::io::Error>().is_some_and(|io| {
-                    matches!(
-                        io.kind(),
-                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
-                    )
-                });
-                if timed_out {
-                    continue;
+                if crate::transport::is_timeout(&e) {
+                    continue; // idle poll: re-check stop and keep waiting
                 }
                 return Ok(()); // client closed / protocol error
             }
@@ -169,40 +470,26 @@ fn handle_connection(
         match (frame.kind, frame.name.as_str()) {
             (FrameKind::Control, "stop") => {
                 stop.store(true, Ordering::SeqCst);
+                // poke the listener ourselves: a bare `stop` frame must
+                // shut the acceptor down without racing ServerHandle::stop
+                let _ = TcpStream::connect(addr);
                 return Ok(());
             }
+            (FrameKind::Control, "models") => {
+                let ids: Vec<&str> = tenants.keys().map(String::as_str).collect();
+                send_frame(
+                    &mut writer,
+                    &Frame {
+                        kind: FrameKind::Control,
+                        name: "models".into(),
+                        payload: encode_model_list(&ids),
+                    },
+                    &meter,
+                )?;
+            }
             (FrameKind::Control, "infer") => {
-                if frame.payload.len() != img_len * 4 {
-                    send_frame(
-                        &mut writer,
-                        &Frame {
-                            kind: FrameKind::Control,
-                            name: "error".into(),
-                            payload: format!(
-                                "bad image size {} (want {})",
-                                frame.payload.len(),
-                                img_len * 4
-                            )
-                            .into_bytes(),
-                        },
-                        &meter,
-                    )?;
-                    continue;
-                }
-                let image: Vec<f32> = frame
-                    .payload
-                    .chunks_exact(4)
-                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                    .collect();
-                let (rtx, rrx) = mpsc::channel();
-                tx.send(Request {
-                    image,
-                    reply: rtx,
-                    enqueued: Instant::now(),
-                })
-                .map_err(|_| anyhow::anyhow!("executor gone"))?;
-                match rrx.recv() {
-                    Ok(Ok(logits)) => {
+                match serve_infer(&frame.payload, &tenants) {
+                    Ok((model, logits)) => {
                         let payload: Vec<u8> =
                             logits.iter().flat_map(|v| v.to_le_bytes()).collect();
                         send_frame(
@@ -210,39 +497,65 @@ fn handle_connection(
                             &Frame {
                                 kind: FrameKind::Control,
                                 name: "logits".into(),
-                                payload,
+                                payload: encode_tagged(&model, &payload)?,
                             },
                             &meter,
                         )?;
                     }
-                    Ok(Err(msg)) => {
-                        send_frame(
-                            &mut writer,
-                            &Frame {
-                                kind: FrameKind::Control,
-                                name: "error".into(),
-                                payload: msg.into_bytes(),
-                            },
-                            &meter,
-                        )?;
+                    Err(e) => {
+                        let msg = format!("{e:#}").into_bytes();
+                        send_frame(&mut writer, &error_frame(msg), &meter)?;
                     }
-                    Err(_) => return Ok(()),
                 }
             }
             _ => {
-                send_frame(
-                    &mut writer,
-                    &Frame {
-                        kind: FrameKind::Control,
-                        name: "error".into(),
-                        payload: b"unknown frame".to_vec(),
-                    },
-                    &meter,
-                )?;
+                send_frame(&mut writer, &error_frame(b"unknown frame".to_vec()), &meter)?;
             }
         }
     }
 }
+
+/// Decode, route, enqueue, and await one `infer` request.
+fn serve_infer(
+    payload: &[u8],
+    tenants: &BTreeMap<String, Tenant>,
+) -> Result<(String, Vec<f32>)> {
+    let (model, img_bytes) = decode_tagged(payload)?;
+    let (tenant, id) = resolve(tenants, model)?;
+    ensure!(
+        img_bytes.len() == tenant.image_len * 4,
+        "{id}: bad image size {} (want {})",
+        img_bytes.len(),
+        tenant.image_len * 4
+    );
+    let image: Vec<f32> = img_bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    let tx = tenant
+        .tx
+        .lock()
+        .unwrap()
+        .clone()
+        .ok_or_else(|| anyhow::anyhow!("{id}: server shutting down"))?;
+    let (rtx, rrx) = mpsc::channel();
+    tx.send(Request {
+        image,
+        reply: rtx,
+        enqueued: Instant::now(),
+    })
+    .map_err(|_| anyhow::anyhow!("{id}: executor gone"))?;
+    drop(tx); // release our sender clone before blocking on the reply
+    match rrx.recv() {
+        Ok(Ok(logits)) => Ok((id, logits)),
+        Ok(Err(msg)) => bail!("{msg}"),
+        Err(_) => bail!("{id}: executor dropped the request"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// client
+// ---------------------------------------------------------------------------
 
 /// Simple blocking client for the protocol above.
 pub struct Client {
@@ -258,28 +571,53 @@ impl Client {
         })
     }
 
-    /// Classify one image; returns logits.
+    /// Classify one image against the sole hosted model (legacy
+    /// single-tenant sugar: empty model id).
     pub fn infer(&mut self, image: &[f32]) -> Result<Vec<f32>> {
-        let payload: Vec<u8> = image.iter().flat_map(|v| v.to_le_bytes()).collect();
+        self.infer_model("", image)
+    }
+
+    /// Classify one image against a specific hosted model; returns
+    /// logits.
+    pub fn infer_model(&mut self, model: &str, image: &[f32]) -> Result<Vec<f32>> {
+        let bytes: Vec<u8> = image.iter().flat_map(|v| v.to_le_bytes()).collect();
         send_frame(
             &mut self.sock,
             &Frame {
                 kind: FrameKind::Control,
                 name: "infer".into(),
-                payload,
+                payload: encode_tagged(model, &bytes)?,
             },
             &self.meter,
         )?;
         let (reply, _) = recv_frame(&mut self.sock, &self.meter)?;
         match reply.name.as_str() {
-            "logits" => Ok(reply
-                .payload
-                .chunks_exact(4)
-                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                .collect()),
+            "logits" => {
+                let (_, data) = decode_tagged(&reply.payload)?;
+                Ok(data
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect())
+            }
             "error" => anyhow::bail!("server error: {}", String::from_utf8_lossy(&reply.payload)),
             other => anyhow::bail!("unexpected reply {other:?}"),
         }
+    }
+
+    /// List the hosted model ids.
+    pub fn models(&mut self) -> Result<Vec<String>> {
+        send_frame(
+            &mut self.sock,
+            &Frame {
+                kind: FrameKind::Control,
+                name: "models".into(),
+                payload: Vec::new(),
+            },
+            &self.meter,
+        )?;
+        let (reply, _) = recv_frame(&mut self.sock, &self.meter)?;
+        ensure!(reply.name == "models", "unexpected reply {:?}", reply.name);
+        decode_model_list(&reply.payload)
     }
 
     pub fn stop_server(&mut self) -> Result<()> {

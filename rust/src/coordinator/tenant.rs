@@ -1,0 +1,412 @@
+//! Store-backed serving tenants: host any nest `.nq` straight from a
+//! [`ModelStore`] — no manifest, no HLO, no PJRT — under one shared
+//! [`StoreBudget`] for resident Section-B bytes.
+//!
+//! [`NestTenant`] serves a deterministic *reference forward*: a linear
+//! probe `logits = x·W + b` over the archive's first 2-D quantized
+//! tensor (dequantized exactly the way `ModelManager` does — inflated
+//! scales for part-bit, recomposed `w_high·2^l + w_low` for full-bit).
+//! It is not the paper's CNN; it exists so the serving layer's claims —
+//! id routing, per-tenant batching, switch atomicity, budget eviction —
+//! are *numerically* checkable offline: every reply must equal the
+//! part-bit or the full-bit baseline for its model bit-for-bit, so a
+//! torn switch or a cross-tenant routing slip shows up as a wrong
+//! float, not a narrated assertion (`tests/serving.rs`). With
+//! `--features pjrt` and built artifacts, [`Coordinator`]-backed
+//! tenants serve the real graphs through the same router.
+//!
+//! Eviction semantics: when another tenant's upgrade evicts this
+//! tenant's Section-B bytes from the shared budget, the next batch
+//! observes it and rebuilds part-bit weights from the still-resident
+//! section A (zero fetches, zero re-parses — the archive's
+//! [`ArchiveStats`] prove it). The packed accounting follows the
+//! paper's convention: which *section bytes* are resident decides which
+//! variant a tenant serves.
+//!
+//! [`Coordinator`]: super::Coordinator
+//! [`ArchiveStats`]: crate::store::ArchiveStats
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::container::Kind;
+use crate::nest::NestConfig;
+use crate::quant;
+use crate::store::{ModelStore, NqArchive, PayloadView, StoreBudget};
+
+use super::server::TenantExecutor;
+use super::{Decision, SwitchCost, Variant};
+
+/// One nest archive served through the reference forward.
+pub struct NestTenant {
+    id: String,
+    archive: Arc<NqArchive>,
+    budget: Arc<StoreBudget>,
+    cfg: NestConfig,
+    batch: usize,
+    /// Image length == rows of the served weight matrix.
+    rows: usize,
+    /// Logit count == channels of the served weight matrix.
+    classes: usize,
+    /// Index of the served 2-D quantized tensor in the layout.
+    w_idx: usize,
+    variant: Variant,
+    /// Dequantized serving weights for the active variant
+    /// (`rows * classes`, row-major, channel fastest).
+    weights: Vec<f32>,
+    bias: Vec<f32>,
+    forced_downgrades: u64,
+    // scratch reused across switches
+    scratch_high: Vec<i32>,
+    scratch_low: Vec<i32>,
+    scratch_int: Vec<i32>,
+    scratch_scales: Vec<f32>,
+}
+
+impl NestTenant {
+    /// Serve `archive` as `id` with `batch_size`-padded batches, paging
+    /// section B through `budget`. Launches part-bit (section A only).
+    pub fn from_archive(
+        id: impl Into<String>,
+        archive: Arc<NqArchive>,
+        budget: Arc<StoreBudget>,
+        batch_size: usize,
+    ) -> Result<NestTenant> {
+        let id = id.into();
+        ensure!(batch_size > 0, "{id}: batch_size must be positive");
+        ensure!(
+            archive.kind() == Kind::Nest,
+            "{id}: serving tenants need a nest container, got {:?}",
+            archive.kind()
+        );
+        let layout = archive.layout()?;
+        let cfg = NestConfig::new(layout.n(), layout.h())?;
+        let w_idx = layout
+            .tensors()
+            .iter()
+            .position(|t| t.is_quantized() && t.shape().len() == 2)
+            .with_context(|| format!("{id}: no 2-D quantized tensor to serve"))?;
+        let shape = layout.tensors()[w_idx].shape();
+        let (rows, classes) = (shape[0], shape[1]);
+        ensure!(rows > 0 && classes > 0, "{id}: degenerate weight shape {shape:?}");
+        // optional bias: the first fp32 tensor with one value per class
+        let bias = layout
+            .tensors()
+            .iter()
+            .position(|t| !t.is_quantized() && t.count() == classes);
+        let mut tenant = NestTenant {
+            id,
+            archive,
+            budget,
+            cfg,
+            batch: batch_size,
+            rows,
+            classes,
+            w_idx,
+            variant: Variant::PartBit,
+            weights: Vec::new(),
+            bias: vec![0.0; classes],
+            forced_downgrades: 0,
+            scratch_high: Vec::new(),
+            scratch_low: Vec::new(),
+            scratch_int: Vec::new(),
+            scratch_scales: Vec::new(),
+        };
+        if let Some(b_idx) = bias {
+            let part = tenant.archive.part_bit()?;
+            let PayloadView::Fp32(v) = part.tensor(b_idx).payload() else {
+                bail!("{}: bias tensor is not fp32", tenant.id);
+            };
+            tenant.bias = v.to_vec();
+        }
+        tenant.rebuild(Variant::PartBit)?;
+        Ok(tenant)
+    }
+
+    pub fn id(&self) -> &str {
+        &self.id
+    }
+
+    /// The shared archive handle (byte accounting, residency).
+    pub fn archive(&self) -> &Arc<NqArchive> {
+        &self.archive
+    }
+
+    /// Downgrades forced by budget eviction (observed at batch time).
+    pub fn forced_downgrades(&self) -> u64 {
+        self.forced_downgrades
+    }
+
+    /// Dequantize the active variant's weights from the archive views
+    /// into the serving buffer. Part-bit reads only resident section-A
+    /// bytes; full-bit requires section B already attached (through the
+    /// budget — this method never attaches behind its back).
+    fn rebuild(&mut self, variant: Variant) -> Result<()> {
+        let mut w = std::mem::take(&mut self.weights);
+        match variant {
+            Variant::PartBit => {
+                let model = self.archive.part_bit()?;
+                let PayloadView::Nest { scales, w_high, .. } = model.tensor(self.w_idx).payload()
+                else {
+                    bail!("{}: served tensor is not a nest payload", self.id);
+                };
+                w_high.unpack_into(&mut self.scratch_high);
+                scales.read_into(&mut self.scratch_scales);
+                let inflate = self.cfg.scale_inflation();
+                for s in self.scratch_scales.iter_mut() {
+                    *s *= inflate;
+                }
+                quant::dequant(&self.scratch_high, &self.scratch_scales, &mut w);
+            }
+            Variant::FullBit => {
+                ensure!(
+                    self.archive.b_resident(),
+                    "{}: section B not resident (attach through the budget first)",
+                    self.id
+                );
+                let model = self.archive.full_bit()?;
+                let PayloadView::Nest {
+                    scales,
+                    w_high,
+                    w_low: Some(w_low),
+                } = model.tensor(self.w_idx).payload()
+                else {
+                    bail!("{}: full-bit view is missing w_low", self.id);
+                };
+                w_high.unpack_into(&mut self.scratch_high);
+                w_low.unpack_into(&mut self.scratch_low);
+                crate::nest::recompose_into(
+                    &self.scratch_high,
+                    &self.scratch_low,
+                    self.cfg.l(),
+                    &mut self.scratch_int,
+                );
+                scales.read_into(&mut self.scratch_scales);
+                quant::dequant(&self.scratch_int, &self.scratch_scales, &mut w);
+            }
+        }
+        self.weights = w;
+        self.variant = variant;
+        // Close the attach→rebuild race: if another tenant's upgrade
+        // evicted us between our budgeted attach and the view build
+        // above, `full_bit()` silently re-fetched section B outside the
+        // budget's ledger. Hand those bytes back and serve part-bit —
+        // the evictor won; our accounting stays balanced.
+        if variant == Variant::FullBit && !self.budget.is_resident(&self.id) {
+            self.archive.release_b();
+            return self.rebuild(Variant::PartBit);
+        }
+        Ok(())
+    }
+
+    /// Observe budget eviction: a full-bit tenant whose B bytes are
+    /// gone falls back to part-bit before serving the next batch.
+    fn reconcile(&mut self) -> Result<()> {
+        if self.variant == Variant::FullBit && !self.archive.b_resident() {
+            self.rebuild(Variant::PartBit)?;
+            self.forced_downgrades += 1;
+        }
+        Ok(())
+    }
+}
+
+impl TenantExecutor for NestTenant {
+    fn shape(&self) -> (usize, usize, usize) {
+        (self.batch, self.rows, self.classes)
+    }
+
+    fn run_batch(&mut self, input: &[f32]) -> Result<Vec<f32>> {
+        ensure!(
+            input.len() == self.batch * self.rows,
+            "{}: batch size mismatch: {} vs {}",
+            self.id,
+            input.len(),
+            self.batch * self.rows
+        );
+        self.reconcile()?;
+        if self.variant == Variant::FullBit {
+            self.budget.touch(&self.id);
+        }
+        // reference forward: logits = x · W + b, accumulation order
+        // fixed so replies are bit-comparable against baselines
+        let mut out = vec![0f32; self.batch * self.classes];
+        for (img, row) in input
+            .chunks_exact(self.rows)
+            .zip(out.chunks_exact_mut(self.classes))
+        {
+            row.copy_from_slice(&self.bias);
+            for (r, &x) in img.iter().enumerate() {
+                let wrow = &self.weights[r * self.classes..(r + 1) * self.classes];
+                for (o, &wv) in row.iter_mut().zip(wrow) {
+                    *o += x * wv;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn switch(&mut self, decision: Decision) -> Result<Option<SwitchCost>> {
+        self.reconcile()?;
+        let b_bytes = self.archive.section_b_bytes();
+        match decision {
+            Decision::Stay => Ok(None),
+            Decision::SwitchTo(Variant::FullBit) => {
+                if self.variant == Variant::FullBit {
+                    return Ok(None);
+                }
+                let t0 = Instant::now();
+                self.budget
+                    .attach_b(&self.id, &self.archive)
+                    .with_context(|| format!("{}: budgeted upgrade", self.id))?;
+                if let Err(e) = self.rebuild(Variant::FullBit) {
+                    // a failed rebuild must not leave B charged to the
+                    // budget while the tenant still serves part-bit
+                    self.budget.release_b(&self.id);
+                    return Err(e);
+                }
+                if self.variant != Variant::FullBit {
+                    // evicted mid-switch: rebuild's post-check fell back
+                    // to part-bit, so no upgrade took effect — don't
+                    // report one (the evictor's switch is the real event)
+                    return Ok(None);
+                }
+                Ok(Some(SwitchCost {
+                    page_in_bytes: b_bytes,
+                    page_out_bytes: 0,
+                    micros: t0.elapsed().as_micros(),
+                }))
+            }
+            Decision::SwitchTo(Variant::PartBit) => {
+                if self.variant == Variant::PartBit {
+                    return Ok(None);
+                }
+                let t0 = Instant::now();
+                self.budget.release_b(&self.id);
+                self.rebuild(Variant::PartBit)?;
+                Ok(Some(SwitchCost {
+                    page_in_bytes: 0,
+                    page_out_bytes: b_bytes,
+                    micros: t0.elapsed().as_micros(),
+                }))
+            }
+        }
+    }
+
+    fn variant(&self) -> Variant {
+        self.variant
+    }
+}
+
+/// Open every nest `.nq` in `dir` through `store` (shared archives,
+/// keyed by file stem) and build a tenant per model, all paging section
+/// B through one `budget`. Non-nest and unreadable files are skipped.
+/// The `nestquant serve --store <dir>` entry point.
+pub fn nest_tenants_from_dir(
+    dir: &Path,
+    store: &ModelStore,
+    budget: &Arc<StoreBudget>,
+    batch_size: usize,
+) -> Result<Vec<(String, NestTenant)>> {
+    let mut paths: Vec<_> = std::fs::read_dir(dir)
+        .with_context(|| format!("scanning {}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "nq"))
+        .collect();
+    paths.sort();
+    let mut tenants = Vec::new();
+    for path in paths {
+        let Some(stem) = path.file_stem().and_then(|s| s.to_str()) else {
+            continue;
+        };
+        if stem.is_empty() || stem.contains('\n') {
+            continue; // ids must be routable AND listable (see serve_tenants)
+        }
+        // register under the stem ONLY (one id per model in the store);
+        // an id someone already claimed is shared, not replaced
+        let archive = match store.get(stem) {
+            Some(a) => a,
+            None => match NqArchive::open(&path) {
+                // unreadable, not a container, or not nest: never registered
+                Ok(a) if a.kind() == Kind::Nest => store.insert(stem.to_string(), Arc::new(a)),
+                _ => continue,
+            },
+        };
+        if archive.kind() != Kind::Nest {
+            continue;
+        }
+        tenants.push((
+            stem.to_string(),
+            NestTenant::from_archive(stem, archive, Arc::clone(budget), batch_size)
+                .with_context(|| format!("tenant for {}", path.display()))?,
+        ));
+    }
+    Ok(tenants)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::synthetic_nest;
+
+    fn tenant(seed: u64, budget: &Arc<StoreBudget>) -> NestTenant {
+        let c = synthetic_nest(seed, 8, 4, 32, 6).unwrap();
+        let archive = Arc::new(NqArchive::from_container(&c).unwrap());
+        NestTenant::from_archive(format!("t{seed}"), archive, Arc::clone(budget), 2).unwrap()
+    }
+
+    #[test]
+    fn part_and_full_logits_differ_and_are_deterministic() {
+        let budget = Arc::new(StoreBudget::new(u64::MAX));
+        let mut t = tenant(1, &budget);
+        assert_eq!(t.shape(), (2, 32, 6));
+        let input: Vec<f32> = (0..64).map(|i| (i as f32 / 64.0) - 0.5).collect();
+        let part = t.run_batch(&input).unwrap();
+        let part2 = t.run_batch(&input).unwrap();
+        assert_eq!(part, part2, "deterministic");
+        t.switch(Decision::SwitchTo(Variant::FullBit)).unwrap();
+        assert_eq!(t.variant(), Variant::FullBit);
+        let full = t.run_batch(&input).unwrap();
+        assert_ne!(part, full, "variants must be distinguishable");
+        t.switch(Decision::SwitchTo(Variant::PartBit)).unwrap();
+        assert_eq!(t.run_batch(&input).unwrap(), part, "downgrade restores part-bit");
+        // switch is idempotent per target
+        assert!(t.switch(Decision::SwitchTo(Variant::PartBit)).unwrap().is_none());
+        assert!(t.switch(Decision::Stay).unwrap().is_none());
+    }
+
+    #[test]
+    fn eviction_forces_downgrade_at_next_batch() {
+        // budget holds exactly one section B
+        let probe = {
+            let c = synthetic_nest(2, 8, 4, 32, 6).unwrap();
+            NqArchive::from_container(&c).unwrap().section_b_bytes()
+        };
+        let budget = Arc::new(StoreBudget::new(probe));
+        let mut a = tenant(2, &budget);
+        let mut b = tenant(3, &budget);
+        let input = vec![0.25f32; 64];
+        a.switch(Decision::SwitchTo(Variant::FullBit)).unwrap();
+        let a_full = a.run_batch(&input).unwrap();
+        let a_part_baseline = {
+            let fresh_budget = Arc::new(StoreBudget::new(u64::MAX));
+            let mut fresh = tenant(2, &fresh_budget);
+            fresh.run_batch(&input).unwrap()
+        };
+        // b's upgrade evicts a's section B
+        b.switch(Decision::SwitchTo(Variant::FullBit)).unwrap();
+        assert!(!a.archive().b_resident());
+        assert_eq!(budget.evictions(), 1);
+        let a_after = a.run_batch(&input).unwrap();
+        assert_eq!(a.forced_downgrades(), 1);
+        assert_eq!(a.variant(), Variant::PartBit);
+        assert_eq!(a_after, a_part_baseline, "evicted tenant serves part-bit");
+        assert_ne!(a_after, a_full);
+        // and the forced path never re-read section A or re-parsed
+        let s = a.archive().stats();
+        assert_eq!(s.a_fetches, 1);
+        assert_eq!(s.layout_parses, 1);
+    }
+}

@@ -84,6 +84,14 @@ impl FleetClient {
         decode_index(&reply.payload)
     }
 
+    /// List the server's zoo model ids (newline-joined on the wire) —
+    /// the discovery step before opening one as a [`RemoteSource`].
+    pub fn models(&mut self) -> Result<Vec<String>> {
+        let reply = self.request(control("models", Vec::new()))?;
+        ensure!(reply.name == "models", "unexpected reply {:?}", reply.name);
+        crate::transport::decode_model_list(&reply.payload)
+    }
+
     /// Ask the server where a previous transfer of (model, section) got
     /// to — the resume offset (0 when never started or dropped).
     pub fn server_offset(&mut self, model: &str, section: Section) -> Result<u64> {

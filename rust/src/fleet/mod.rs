@@ -40,6 +40,7 @@
 //! | `Control "hello"` device id      | `Control "ok"`                 |
 //! | `Control "level"` f64 LE         | `Control "advice"` decision    |
 //! | `Control "index"` model          | `Control "index"` SectionIndex |
+//! | `Control "models"`               | `Control "models"` id list     |
 //! | `Control "offset"` section+model | `Control "offset"` u64 LE      |
 //! | `Control "state"` model          | `Control "state"` variant+held |
 //! | `Control "pull"` sec+off+model   | `Chunk` stream (ack each)      |
@@ -581,6 +582,17 @@ fn dispatch(
             let model = std::str::from_utf8(payload).context("model id")?;
             let idx = ctx.zoo.source(model)?.index()?;
             send_frame(writer, &control("index", encode_index(&idx)), &ctx.meter)?;
+            Ok(())
+        }
+        "models" => {
+            // list the zoo's model ids, so a device can discover what
+            // it may open as a `RemoteSource` without knowing paths
+            let ids: Vec<&str> = ctx.zoo.ids().collect();
+            send_frame(
+                writer,
+                &control("models", crate::transport::encode_model_list(&ids)),
+                &ctx.meter,
+            )?;
             Ok(())
         }
         "offset" => {

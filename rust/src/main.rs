@@ -8,6 +8,7 @@
 //! nestquant eval --arch cnn_m --n 8 --h 4 [--variant part|full] [--limit N]
 //! nestquant trace --arch cnn_m --n 8 --h 4 [--steps N] [--trace solar|discharge]
 //! nestquant serve --arch cnn_m --n 8 --h 4
+//! nestquant serve --store artifacts/nq [--budget-mb 64] [--batch 4]
 //! nestquant fleet [--devices D] [--steps K] [--budget-mb M] [--chunk-kb C]
 //! nestquant report <table|fig|all>        regenerate paper tables/figures
 //! ```
@@ -29,7 +30,10 @@ fn usage() -> ! {
          \x20                                    A/B byte split (any .nq file)\n\
          \x20 eval   --arch A --n N --h H [--variant part|full] [--limit K]\n\
          \x20 trace  --arch A --n N --h H [--steps K] [--trace solar|discharge] [--reqs R]\n\
-         \x20 serve  --arch A --n N --h H        start the inference server\n\
+         \x20 serve  --arch A --n N --h H        start the inference server (one model)\n\
+         \x20 serve  --store DIR [--budget-mb M] [--batch B]\n\
+         \x20                                    host every nest .nq in DIR behind one\n\
+         \x20                                    multi-tenant server + shared B budget\n\
          \x20 fleet  [--devices D] [--steps K] [--budget-mb M] [--chunk-kb C] [--models M]\n\
          \x20                                    fleet-distribution simulation (synthetic zoo\n\
          \x20                                    when artifacts are missing)\n\
@@ -279,18 +283,71 @@ fn cmd_trace(root: &std::path::Path, args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(root: &std::path::Path, args: &Args) -> Result<()> {
+    if args.flag("store").is_some() {
+        return cmd_serve_store(args);
+    }
     let arch = args.req("arch")?;
     let n: u8 = args.num("n", 8)?;
     let h: u8 = args.num("h", 4)?;
     let mut c = Coordinator::new(root, arch, n, h)?;
     c.manager.load_full_bit(&mut c.ledger)?;
     let coord = std::sync::Arc::new(std::sync::Mutex::new(c));
-    let handle = server::serve(coord.clone(), server::ServerConfig::default())?;
+    let handle = server::serve(coord, server::ServerConfig::default())?;
     println!("serving {arch} INT({n}|{h}) full-bit on {}", handle.addr);
     println!("(send a Control frame named \"stop\" to shut down; Ctrl-C also works)");
-    loop {
-        std::thread::sleep(std::time::Duration::from_secs(3600));
+    wait_until_stopped(handle)
+}
+
+/// Multi-tenant mode: host every nest `.nq` in a directory from one
+/// shared `ModelStore`, all tenants paging Section B through one RAM
+/// budget. Clients route by model id (`infer` frames are id-tagged; the
+/// `models` command lists what is hosted).
+fn cmd_serve_store(args: &Args) -> Result<()> {
+    use nestquant::coordinator::server::{serve_tenants, ServerConfig, TenantExecutor};
+    use nestquant::coordinator::tenant::nest_tenants_from_dir;
+    use nestquant::store::{ModelStore, StoreBudget};
+
+    let dir = std::path::PathBuf::from(args.req("store")?);
+    let budget_mb: u64 = args.num("budget-mb", 64)?;
+    let batch: usize = args.num("batch", 4)?;
+    let store = ModelStore::new();
+    let budget = std::sync::Arc::new(StoreBudget::new(budget_mb << 20));
+    let tenants = nest_tenants_from_dir(&dir, &store, &budget, batch)?;
+    anyhow::ensure!(
+        !tenants.is_empty(),
+        "no nest .nq artifacts found in {}",
+        dir.display()
+    );
+    for (id, t) in &tenants {
+        let (b, img, classes) = t.shape();
+        println!(
+            "  {id:<24} batch {b}  image_len {img:>6}  classes {classes:>4}  sections {:>8}/{:<8} B",
+            t.archive().section_a_bytes(),
+            t.archive().section_b_bytes()
+        );
     }
+    let n = tenants.len();
+    let boxed: Vec<(String, Box<dyn TenantExecutor>)> = tenants
+        .into_iter()
+        .map(|(id, t)| (id, Box::new(t) as Box<dyn TenantExecutor>))
+        .collect();
+    let handle = serve_tenants(boxed, ServerConfig::default())?;
+    println!(
+        "serving {n} models from {} on {} (Section-B budget {budget_mb} MiB)",
+        dir.display(),
+        handle.addr
+    );
+    println!("(send a Control frame named \"stop\" to shut down; Ctrl-C also works)");
+    wait_until_stopped(handle)
+}
+
+/// Block until a client's `stop` frame lands, then join every thread.
+fn wait_until_stopped(handle: server::ServerHandle) -> Result<()> {
+    while !handle.stopped() {
+        std::thread::sleep(std::time::Duration::from_millis(200));
+    }
+    handle.stop();
+    Ok(())
 }
 
 /// Fleet-distribution simulation: start a `fleet::FleetServer` over the

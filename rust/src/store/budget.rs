@@ -1,0 +1,319 @@
+//! [`StoreBudget`]: one RAM budget for resident Section-B bytes across
+//! archives — the serving-side unification of the fleet cache's budgeted
+//! residency with the store's attach/release lifecycle.
+//!
+//! A multi-tenant server hosts N archives from one [`super::ModelStore`];
+//! each tenant upgrades (attach B) and downgrades (release B)
+//! independently, but the *sum* of resident Section-B bytes must stay
+//! under one cap. Attaching through the budget evicts the
+//! least-recently-used other tenants' B sections first (calling
+//! [`NqArchive::release_b`] on them — their section A and parsed layout
+//! are untouched, so an evicted tenant keeps serving part-bit with zero
+//! re-reads and re-upgrades later with exactly one B re-fetch).
+//!
+//! The accounting is [`ArchiveStats`]-backed: every eviction is a
+//! counted `b_release` on the victim archive, every admit a counted
+//! `b_fetch`, and the invariant "resident B bytes ≤ cap at every
+//! interleaving" holds because evictions complete *before* the new
+//! attach inside one critical section (`tests/serving.rs` samples it
+//! from a racing thread).
+//!
+//! [`ArchiveStats`]: super::ArchiveStats
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{ensure, Context, Result};
+
+use super::NqArchive;
+
+/// One entry in the budget's eviction trace.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BudgetEvent {
+    /// `id`'s section B became resident (`bytes` admitted).
+    Attached { id: String, bytes: u64 },
+    /// `victim`'s section B was evicted to make room for `for_id`.
+    Evicted {
+        victim: String,
+        bytes: u64,
+        for_id: String,
+    },
+    /// `id` released its section B voluntarily (downgrade/unload).
+    Released { id: String, bytes: u64 },
+}
+
+impl std::fmt::Display for BudgetEvent {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BudgetEvent::Attached { id, bytes } => write!(f, "attach  {id} (+{bytes} B)"),
+            BudgetEvent::Evicted { victim, bytes, for_id } => {
+                write!(f, "evict   {victim} (-{bytes} B) for {for_id}")
+            }
+            BudgetEvent::Released { id, bytes } => write!(f, "release {id} (-{bytes} B)"),
+        }
+    }
+}
+
+/// Bound on the retained eviction trace (older events are dropped).
+const EVENT_CAP: usize = 4096;
+
+struct Resident {
+    archive: Arc<NqArchive>,
+    bytes: u64,
+    last_used: u64,
+}
+
+struct Inner {
+    resident: BTreeMap<String, Resident>,
+    used: u64,
+    tick: u64,
+    evictions: u64,
+    events: VecDeque<BudgetEvent>,
+}
+
+/// Shared Section-B residency budget over any number of archives.
+///
+/// Thread-safe; attach/evict/release are atomic under one lock, so a
+/// concurrent observer never sees the sum of resident bytes above the
+/// cap. Archives managed through a budget must page their section B
+/// exclusively through it — releasing directly on the archive leaves
+/// the ledger stale (section A stays every consumer's own business).
+///
+/// Deliberate tradeoff: the admitting fetch happens *under* the budget
+/// lock, which makes the cap invariant unconditional but serializes
+/// concurrent upgrades (and briefly blocks `touch`) behind one
+/// tenant's section-B read. Switches are rare and local fetches are
+/// sub-millisecond; budgeting a slow `RemoteSource`-backed archive is
+/// where a reserve-then-fetch protocol would earn its complexity.
+pub struct StoreBudget {
+    cap: u64,
+    inner: Mutex<Inner>,
+}
+
+impl StoreBudget {
+    /// A budget capping resident Section-B bytes at `cap_bytes`.
+    pub fn new(cap_bytes: u64) -> StoreBudget {
+        StoreBudget {
+            cap: cap_bytes,
+            inner: Mutex::new(Inner {
+                resident: BTreeMap::new(),
+                used: 0,
+                tick: 0,
+                evictions: 0,
+                events: VecDeque::new(),
+            }),
+        }
+    }
+
+    pub fn cap(&self) -> u64 {
+        self.cap
+    }
+
+    /// Sum of currently resident Section-B bytes (≤ cap, always).
+    pub fn resident_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().used
+    }
+
+    /// Ids whose section B is currently resident.
+    pub fn resident_ids(&self) -> Vec<String> {
+        self.inner.lock().unwrap().resident.keys().cloned().collect()
+    }
+
+    /// Whether `id`'s section B is currently resident under this budget.
+    pub fn is_resident(&self, id: &str) -> bool {
+        self.inner.lock().unwrap().resident.contains_key(id)
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.inner.lock().unwrap().evictions
+    }
+
+    /// Drain the eviction/attach/release trace accumulated so far.
+    pub fn drain_events(&self) -> Vec<BudgetEvent> {
+        self.inner.lock().unwrap().events.drain(..).collect()
+    }
+
+    /// LRU-refresh `id` (called on the serve path of a full-bit tenant).
+    pub fn touch(&self, id: &str) {
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        if let Some(r) = g.resident.get_mut(id) {
+            r.last_used = tick;
+        }
+    }
+
+    /// Attach `archive`'s section B under the budget, evicting other
+    /// ids' B sections (LRU first) until it fits. Returns the evicted
+    /// ids. Fails — without evicting anything — when the section alone
+    /// exceeds the cap.
+    pub fn attach_b(&self, id: &str, archive: &Arc<NqArchive>) -> Result<Vec<String>> {
+        let need = archive.section_b_bytes();
+        ensure!(need > 0, "{id}: archive has no section B to attach");
+        ensure!(
+            need <= self.cap,
+            "{id}: section B ({need} B) exceeds the shared budget ({} B)",
+            self.cap
+        );
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        if let Some(r) = g.resident.get_mut(id) {
+            r.last_used = tick;
+            // idempotent re-attach: the archive call is a no-op when the
+            // bytes are still resident, a counted re-fetch otherwise
+            archive.attach_b()?;
+            return Ok(Vec::new());
+        }
+        // evict BEFORE attaching, so resident bytes never overshoot the
+        // cap at any interleaving an observer can witness
+        let mut evicted = Vec::new();
+        while g.used + need > self.cap {
+            let victim = g
+                .resident
+                .iter()
+                .min_by_key(|(_, r)| r.last_used)
+                .map(|(k, _)| k.clone());
+            let Some(v) = victim else { break };
+            let r = g.resident.remove(&v).unwrap();
+            r.archive.release_b();
+            g.used -= r.bytes;
+            g.evictions += 1;
+            push_event(
+                &mut g.events,
+                BudgetEvent::Evicted {
+                    victim: v.clone(),
+                    bytes: r.bytes,
+                    for_id: id.to_string(),
+                },
+            );
+            evicted.push(v);
+        }
+        let bytes = archive
+            .attach_b()
+            .with_context(|| format!("attaching section B of {id}"))?;
+        debug_assert_eq!(bytes.len() as u64, need);
+        g.used += need;
+        g.resident.insert(
+            id.to_string(),
+            Resident {
+                archive: Arc::clone(archive),
+                bytes: need,
+                last_used: tick,
+            },
+        );
+        push_event(
+            &mut g.events,
+            BudgetEvent::Attached {
+                id: id.to_string(),
+                bytes: need,
+            },
+        );
+        Ok(evicted)
+    }
+
+    /// Release `id`'s section B (voluntary downgrade). Returns whether
+    /// it was resident under this budget.
+    pub fn release_b(&self, id: &str) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        let Some(r) = g.resident.remove(id) else {
+            return false;
+        };
+        r.archive.release_b();
+        g.used -= r.bytes;
+        push_event(
+            &mut g.events,
+            BudgetEvent::Released {
+                id: id.to_string(),
+                bytes: r.bytes,
+            },
+        );
+        true
+    }
+}
+
+fn push_event(events: &mut VecDeque<BudgetEvent>, e: BudgetEvent) {
+    if events.len() >= EVENT_CAP {
+        events.pop_front();
+    }
+    events.push_back(e);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::synthetic_nest;
+
+    fn archive(seed: u64, rows: usize) -> Arc<NqArchive> {
+        let c = synthetic_nest(seed, 8, 4, rows, 8).unwrap();
+        Arc::new(NqArchive::from_container(&c).unwrap())
+    }
+
+    #[test]
+    fn attach_evicts_lru_across_archives() {
+        let (a, b, c) = (archive(1, 64), archive(2, 64), archive(3, 64));
+        let b_len = a.section_b_bytes();
+        assert_eq!(b.section_b_bytes(), b_len);
+        // room for exactly two resident B sections
+        let budget = StoreBudget::new(2 * b_len);
+        budget.attach_b("a", &a).unwrap();
+        budget.attach_b("b", &b).unwrap();
+        assert_eq!(budget.resident_bytes(), 2 * b_len);
+        budget.touch("a"); // b becomes LRU
+        let evicted = budget.attach_b("c", &c).unwrap();
+        assert_eq!(evicted, vec!["b".to_string()]);
+        assert!(!b.b_resident(), "victim's bytes actually released");
+        assert!(a.b_resident() && c.b_resident());
+        assert_eq!(budget.resident_bytes(), 2 * b_len);
+        assert_eq!(budget.evictions(), 1);
+        // the victim's release is counted on ITS archive stats
+        assert_eq!(b.stats().b_releases, 1);
+        // re-upgrading the victim re-fetches B once, never section A
+        // (this archive never fetched A at all — B attaches alone)
+        budget.attach_b("b", &b).unwrap();
+        assert_eq!(b.stats().b_fetches, 2);
+        assert_eq!(b.stats().a_fetches, 0, "eviction never touches section A");
+    }
+
+    #[test]
+    fn oversized_section_is_rejected_without_evictions() {
+        let a = archive(4, 64);
+        let big = archive(5, 64);
+        let budget = StoreBudget::new(a.section_b_bytes());
+        budget.attach_b("a", &a).unwrap();
+        // shrink the cap below any B by using a tiny-budget instance
+        let tiny = StoreBudget::new(big.section_b_bytes() - 1);
+        assert!(tiny.attach_b("big", &big).is_err());
+        assert_eq!(tiny.evictions(), 0);
+        assert!(a.b_resident(), "unrelated budget untouched");
+    }
+
+    #[test]
+    fn attach_is_idempotent_and_release_balances() {
+        let a = archive(6, 48);
+        let budget = StoreBudget::new(u64::MAX);
+        budget.attach_b("a", &a).unwrap();
+        budget.attach_b("a", &a).unwrap(); // idempotent: no double-count
+        assert_eq!(budget.resident_bytes(), a.section_b_bytes());
+        assert_eq!(a.stats().b_fetches, 1);
+        assert!(budget.release_b("a"));
+        assert!(!budget.release_b("a"), "second release is a no-op");
+        assert_eq!(budget.resident_bytes(), 0);
+        assert!(!a.b_resident());
+        let events = budget.drain_events();
+        assert_eq!(events.len(), 2, "{events:?}");
+        assert!(matches!(events[0], BudgetEvent::Attached { .. }));
+        assert!(matches!(events[1], BudgetEvent::Released { .. }));
+        assert!(budget.drain_events().is_empty(), "drain drains");
+    }
+
+    #[test]
+    fn event_display_is_greppable() {
+        let e = BudgetEvent::Evicted {
+            victim: "m1".into(),
+            bytes: 512,
+            for_id: "m2".into(),
+        };
+        assert_eq!(e.to_string(), "evict   m1 (-512 B) for m2");
+    }
+}

@@ -23,6 +23,10 @@
 //!   consumers like report tables and the diverse-bitwidths baseline;
 //!   a `ModelManager` owns a private archive because its paging
 //!   lifecycle releases sections).
+//! * [`StoreBudget`] — one RAM cap on resident Section-B bytes *across*
+//!   archives: attach through it and lower-bit sections of other
+//!   tenants are LRU-evicted to fit (the multi-tenant server's shared
+//!   budget; see `coordinator::server`).
 //!
 //! The old `container` free functions (`read`, `parse`, `probe`,
 //! `read_range`, …) remain as `#[deprecated]` shims over the same
@@ -36,6 +40,7 @@
 //! switch before vs after the view-based path.
 
 mod archive;
+mod budget;
 mod layout;
 
 use std::path::{Path, PathBuf};
@@ -46,6 +51,7 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::container::{self, SectionIndex};
 
 pub use archive::{ArchiveStats, ModelStore, NqArchive};
+pub use budget::{BudgetEvent, StoreBudget};
 pub use layout::{
     F32View, FullBitModel, ModelLayout, PackedView, PartBitModel, PayloadView, TensorLayout,
     TensorView,

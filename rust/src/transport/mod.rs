@@ -250,6 +250,56 @@ pub fn parse_ack(frame: &Frame) -> Result<(u64, u64)> {
     Ok((xfer, end))
 }
 
+// ---------------------------------------------------------------------------
+// model-id tagging (multi-tenant serving)
+// ---------------------------------------------------------------------------
+
+/// Prefix `data` with a length-tagged model id: `u16 id_len | id | data`.
+/// The payload codec of the multi-tenant inference protocol — `infer`
+/// requests and `logits` replies both carry the model id so one server
+/// socket can route to any hosted model.
+pub fn encode_tagged(model: &str, data: &[u8]) -> Result<Vec<u8>> {
+    ensure!(model.len() < 1 << 16, "model id too long ({})", model.len());
+    let mut out = Vec::with_capacity(2 + model.len() + data.len());
+    out.extend_from_slice(&(model.len() as u16).to_le_bytes());
+    out.extend_from_slice(model.as_bytes());
+    out.extend_from_slice(data);
+    Ok(out)
+}
+
+/// Split a tagged payload back into `(model_id, data)`.
+pub fn decode_tagged(payload: &[u8]) -> Result<(&str, &[u8])> {
+    ensure!(payload.len() >= 2, "tagged payload too short: {}", payload.len());
+    let id_len = u16::from_le_bytes(payload[0..2].try_into().unwrap()) as usize;
+    ensure!(
+        payload.len() >= 2 + id_len,
+        "tagged payload truncated: id needs {id_len} bytes, have {}",
+        payload.len() - 2
+    );
+    let model = std::str::from_utf8(&payload[2..2 + id_len]).context("model id")?;
+    Ok((model, &payload[2 + id_len..]))
+}
+
+/// Encode a model-id listing (the `models` reply payload, shared by the
+/// inference and fleet servers): newline-joined ids.
+pub fn encode_model_list<S: AsRef<str>>(ids: &[S]) -> Vec<u8> {
+    ids.iter()
+        .map(|s| s.as_ref())
+        .collect::<Vec<_>>()
+        .join("\n")
+        .into_bytes()
+}
+
+/// Decode a `models` reply payload back into ids.
+pub fn decode_model_list(payload: &[u8]) -> Result<Vec<String>> {
+    Ok(std::str::from_utf8(payload)
+        .context("model list")?
+        .split('\n')
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect())
+}
+
 /// True when an error is a socket read timeout (used by pollers that
 /// re-check a stop flag on idle).
 pub fn is_timeout(e: &anyhow::Error) -> bool {
@@ -396,6 +446,28 @@ mod tests {
         send_frame(&mut buf, &f, &meter).unwrap();
         let cut = &buf[..buf.len() - 10];
         assert!(recv_frame(&mut &cut[..], &meter).is_err());
+    }
+
+    #[test]
+    fn tagged_payload_roundtrip() {
+        let p = encode_tagged("cnn_m_n8h4", b"imagebytes").unwrap();
+        let (model, data) = decode_tagged(&p).unwrap();
+        assert_eq!((model, data), ("cnn_m_n8h4", &b"imagebytes"[..]));
+        // empty id routes to the sole tenant; empty data is legal too
+        let p = encode_tagged("", &[]).unwrap();
+        assert_eq!(decode_tagged(&p).unwrap(), ("", &[][..]));
+        // truncated prefixes are clean errors
+        assert!(decode_tagged(&[5]).is_err());
+        assert!(decode_tagged(&[5, 0, b'a', b'b']).is_err());
+    }
+
+    #[test]
+    fn model_list_roundtrip() {
+        let ids = ["alpha", "beta", "gamma"];
+        let back = decode_model_list(&encode_model_list(&ids)).unwrap();
+        assert_eq!(back, ids.map(String::from).to_vec());
+        assert!(decode_model_list(&encode_model_list::<&str>(&[])).unwrap().is_empty());
+        assert!(decode_model_list(&[0xFF, 0xFE]).is_err(), "non-utf8 rejected");
     }
 
     #[test]

@@ -1,0 +1,135 @@
+//! Property tests for the dynamic batcher (`util::propcheck`): over
+//! randomized arrival patterns and a (batch_size, max_wait) grid,
+//!
+//! * partial batches are zero-padded to the exact compiled shape,
+//! * request order is preserved across consecutive batches,
+//! * no batch exceeds `batch_size`, and
+//! * the oldest member's wait is bounded by `max_wait` + scheduling ε
+//!   (the deadline anchors at enqueue time — a backlogged request can
+//!   never be double-waited).
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use nestquant::coordinator::batcher::{next_batch, BatcherConfig, Reply, Request};
+use nestquant::util::propcheck;
+
+fn req(tag: f32, image_len: usize, replies: &mut Vec<mpsc::Receiver<Reply>>) -> Request {
+    let (tx, rx) = mpsc::channel();
+    replies.push(rx);
+    Request {
+        image: vec![tag; image_len],
+        reply: tx,
+        enqueued: Instant::now(),
+    }
+}
+
+/// Deterministic half: pre-filled queues over a randomized
+/// (batch_size, image_len, request count) grid. Shape, padding, order,
+/// and conservation hold for every draw.
+#[test]
+fn prop_batches_are_exact_shape_ordered_and_zero_padded() {
+    propcheck::check(
+        "batcher-shape-order-padding",
+        60,
+        |rng, scale| {
+            let batch_size = 1 + rng.index(6);
+            let image_len = 1 + rng.index(16);
+            let count = rng.index(((40.0 * scale) as usize).max(2));
+            (batch_size, image_len, count)
+        },
+        |&(batch_size, image_len, count)| {
+            let cfg = BatcherConfig {
+                batch_size,
+                image_len,
+                // pre-filled queue: full batches close immediately, the
+                // final partial one closes on this timeout
+                max_wait: Duration::from_millis(5),
+            };
+            let (tx, rx) = mpsc::channel();
+            let mut replies = Vec::new();
+            for i in 0..count {
+                tx.send(req(i as f32 + 1.0, image_len, &mut replies)).unwrap();
+            }
+            drop(tx);
+            let mut next_tag = 1.0f32;
+            let mut seen = 0usize;
+            while let Some(b) = next_batch(&rx, &cfg) {
+                // exact compiled shape, never exceeded
+                if b.input.len() != batch_size * image_len {
+                    return false;
+                }
+                if b.requests.is_empty() || b.requests.len() > batch_size {
+                    return false;
+                }
+                // order preserved: tags are consecutive across batches,
+                // and each row of the input holds its request's image
+                for (i, r) in b.requests.iter().enumerate() {
+                    if r.image[0] != next_tag {
+                        return false;
+                    }
+                    let row = &b.input[i * image_len..(i + 1) * image_len];
+                    if row != vec![next_tag; image_len].as_slice() {
+                        return false;
+                    }
+                    next_tag += 1.0;
+                }
+                // padding rows are all zero
+                let pad = &b.input[b.requests.len() * image_len..];
+                if pad.iter().any(|&v| v != 0.0) {
+                    return false;
+                }
+                seen += b.requests.len();
+            }
+            seen == count // conservation: every request batched once
+        },
+    );
+}
+
+/// Timed half: a producer with randomized inter-arrival delays. Every
+/// batch's `oldest_wait` stays within `max_wait` plus a generous
+/// scheduling ε, across the (batch_size, max_wait) grid.
+#[test]
+fn prop_oldest_wait_bounded_under_randomized_arrivals() {
+    const EPSILON: Duration = Duration::from_millis(250);
+    propcheck::check(
+        "batcher-oldest-wait",
+        6,
+        |rng, scale| {
+            let batch_size = 1 + rng.index(4);
+            let max_wait_ms = 15 + rng.index(25) as u64;
+            let n = 1 + rng.index(((10.0 * scale) as usize).max(1));
+            let delays: Vec<u64> = (0..n).map(|_| rng.index(15) as u64).collect();
+            (batch_size, max_wait_ms, delays)
+        },
+        |&(batch_size, max_wait_ms, ref delays)| {
+            let cfg = BatcherConfig {
+                batch_size,
+                image_len: 4,
+                max_wait: Duration::from_millis(max_wait_ms),
+            };
+            let (tx, rx) = mpsc::channel();
+            let delays = delays.clone();
+            let producer = std::thread::spawn(move || {
+                let mut replies = Vec::new();
+                for (i, d) in delays.iter().enumerate() {
+                    std::thread::sleep(Duration::from_millis(*d));
+                    tx.send(req(i as f32, 4, &mut replies)).unwrap();
+                }
+                replies
+            });
+            let mut ok = true;
+            while let Some(b) = next_batch(&rx, &cfg) {
+                if b.oldest_wait > cfg.max_wait + EPSILON {
+                    eprintln!(
+                        "oldest_wait {:?} > max_wait {:?} + ε",
+                        b.oldest_wait, cfg.max_wait
+                    );
+                    ok = false;
+                }
+            }
+            drop(producer.join().unwrap());
+            ok
+        },
+    );
+}

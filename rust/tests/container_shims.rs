@@ -1,0 +1,146 @@
+//! The deprecated `container` free-function shims must stay
+//! byte-identical to the `store` path, so a later PR can delete them
+//! with confidence: every pair below decodes/reads the same artifact
+//! through both APIs and compares bytes (or re-serialized bytes), not
+//! summaries.
+
+#![allow(deprecated)] // the comparison target IS the deprecated API
+
+use nestquant::container::{self, Container, TensorData};
+use nestquant::store::{read_file_range, FileSource, NqArchive, Section, SectionSource};
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("nq_shims_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Field-wise equality for containers that cannot round-trip through
+/// `serialize` (part-bit decodes have `w_low: None`).
+fn assert_same_container(a: &Container, b: &Container) {
+    assert_eq!(a.kind, b.kind);
+    assert_eq!((a.n, a.h, a.act_bits), (b.n, b.h, b.act_bits));
+    assert_eq!(a.name, b.name);
+    assert_eq!(a.meta, b.meta);
+    assert_eq!(a.section_b_offset, b.section_b_offset);
+    assert_eq!(a.tensors.len(), b.tensors.len());
+    for (ta, tb) in a.tensors.iter().zip(&b.tensors) {
+        assert_eq!(ta.name, tb.name);
+        assert_eq!(ta.shape, tb.shape);
+        match (&ta.data, &tb.data) {
+            (
+                TensorData::Nest { scales: s1, w_high: h1, w_low: l1 },
+                TensorData::Nest { scales: s2, w_high: h2, w_low: l2 },
+            ) => {
+                assert_eq!(s1, s2, "{}", ta.name);
+                assert_eq!(h1.unpack(), h2.unpack(), "{}", ta.name);
+                match (l1, l2) {
+                    (Some(l1), Some(l2)) => assert_eq!(l1.unpack(), l2.unpack(), "{}", ta.name),
+                    (None, None) => {}
+                    _ => panic!("{}: w_low presence differs", ta.name),
+                }
+            }
+            (TensorData::Fp32(v1), TensorData::Fp32(v2)) => assert_eq!(v1, v2, "{}", ta.name),
+            (
+                TensorData::Mono { scales: s1, w_int: w1 },
+                TensorData::Mono { scales: s2, w_int: w2 },
+            ) => {
+                assert_eq!(s1, s2, "{}", ta.name);
+                assert_eq!(w1.unpack(), w2.unpack(), "{}", ta.name);
+            }
+            _ => panic!("{}: payload kind differs", ta.name),
+        }
+    }
+}
+
+#[test]
+fn probe_shim_equals_file_source_index() {
+    let dir = temp_dir("probe");
+    let path = dir.join("m.nq");
+    let c = container::synthetic_nest(21, 8, 4, 48, 8).unwrap();
+    container::write(&path, &c).unwrap();
+    let shim = container::probe(&path).unwrap();
+    let store = FileSource::new(&path).index().unwrap();
+    assert_eq!(shim, store);
+    assert_eq!(&shim, NqArchive::open(&path).unwrap().index());
+}
+
+#[test]
+fn read_range_shim_equals_store_range_and_section_fetches() {
+    let dir = temp_dir("range");
+    let path = dir.join("m.nq");
+    let c = container::synthetic_nest(22, 7, 3, 40, 6).unwrap();
+    container::write(&path, &c).unwrap();
+    let idx = container::probe(&path).unwrap();
+    for range in [idx.section_a(), idx.section_b(), 3..17] {
+        let shim = container::read_range(&path, range.clone()).unwrap();
+        let store = read_file_range(&path, range.clone()).unwrap();
+        assert_eq!(shim, store, "range {range:?}");
+    }
+    // section fetches through the source are the same bytes
+    let src = FileSource::new(&path);
+    assert_eq!(
+        container::read_range(&path, idx.section_a()).unwrap(),
+        &src.fetch(Section::A).unwrap()[..]
+    );
+    assert_eq!(
+        container::read_range(&path, idx.section_b()).unwrap(),
+        &src.fetch(Section::B).unwrap()[..]
+    );
+}
+
+#[test]
+fn read_and_parse_shims_equal_archive_decode_byte_for_byte() {
+    let dir = temp_dir("decode");
+    let path = dir.join("m.nq");
+    let c = container::synthetic_nest(23, 8, 5, 56, 8).unwrap();
+    container::write(&path, &c).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+
+    // full decode: both re-serialize to the identical artifact bytes
+    let shim_full = container::read(&path, false).unwrap();
+    let store_full = NqArchive::open(&path).unwrap().to_container(false).unwrap();
+    let shim_bytes = container::serialize(&shim_full).unwrap();
+    let store_bytes = container::serialize(&store_full).unwrap();
+    assert_eq!(shim_bytes, store_bytes, "re-serialized decodes differ");
+    assert_eq!(shim_bytes, bytes, "decode → serialize must be lossless");
+
+    // part-bit decode (w_low = None cannot serialize; compare fields)
+    let shim_part = container::read(&path, true).unwrap();
+    let store_part = NqArchive::open(&path).unwrap().to_container(true).unwrap();
+    assert_same_container(&shim_part, &store_part);
+
+    // in-memory parse shim vs in-memory archive
+    let shim_mem = container::parse(&bytes, false).unwrap();
+    let store_mem = NqArchive::from_bytes(&bytes).unwrap().to_container(false).unwrap();
+    assert_same_container(&shim_mem, &store_mem);
+}
+
+#[test]
+fn section_b_shims_equal_archive_attach() {
+    let dir = temp_dir("attach");
+    let path = dir.join("m.nq");
+    let c = container::synthetic_nest(24, 6, 4, 32, 4).unwrap();
+    let (_, _, b_len) = container::write(&path, &c).unwrap();
+
+    // legacy chain: part read + read_section_b
+    let mut legacy = container::read(&path, true).unwrap();
+    let paged = container::read_section_b(&path, &mut legacy).unwrap();
+    assert_eq!(paged, b_len);
+
+    // legacy attach from a raw blob
+    let arch = NqArchive::open(&path).unwrap();
+    let blob = arch.attach_b().unwrap();
+    let mut attached = container::read(&path, true).unwrap();
+    container::attach_section_b(&mut attached, &blob).unwrap();
+
+    // store path: archive full decode
+    let store = arch.to_container(false).unwrap();
+    assert_same_container(&legacy, &attached);
+    assert_same_container(&legacy, &store);
+    // and all three re-serialize to the on-disk artifact
+    let bytes = std::fs::read(&path).unwrap();
+    assert_eq!(container::serialize(&legacy).unwrap(), bytes);
+    assert_eq!(container::serialize(&attached).unwrap(), bytes);
+    assert_eq!(container::serialize(&store).unwrap(), bytes);
+}

@@ -315,6 +315,35 @@ fn playback_pages_only_section_b_deltas() {
     handle.stop();
 }
 
+/// Satellite: a device discovers served models by id (`models`
+/// command) and opens one as a `RemoteSource`-backed archive — no
+/// paths, no out-of-band configuration.
+#[test]
+fn models_listing_feeds_remote_source_by_id() {
+    let dir = temp_dir("models");
+    let (p0, a_len, _) = write_synth(&dir, "m0", 6, 8, 4);
+    let (_p1, _, _) = write_synth(&dir, "m1", 7, 8, 4);
+    let mut zoo = Zoo::new();
+    zoo.add("m0", &p0);
+    zoo.add("m1", dir.join("m1.nq"));
+    let handle = FleetServer::start(zoo, small_chunk_config()).unwrap();
+
+    let mut c = FleetClient::connect(handle.addr, "scout", TIMEOUT).unwrap();
+    let ids = c.models().unwrap();
+    assert_eq!(ids, vec!["m0".to_string(), "m1".to_string()]);
+    drop(c);
+
+    // open the first listed id through the store — index and section A
+    // come down the wire, typed views work as if local
+    let remote = RemoteSource::connect(handle.addr, "scout", ids[0].clone(), TIMEOUT).unwrap();
+    let arch = NqArchive::with_source(Arc::new(remote)).unwrap();
+    let part = arch.part_bit().unwrap();
+    assert!(!part.is_empty());
+    assert_eq!(arch.stats().a_bytes_fetched, a_len);
+    drop(part);
+    handle.stop();
+}
+
 /// Server-side errors reply cleanly instead of wedging the connection.
 #[test]
 fn unknown_model_and_missing_hello_are_clean_errors() {

@@ -1,0 +1,108 @@
+//! Golden-output smoke test for `nestquant inspect`: run the real
+//! binary (`CARGO_BIN_EXE_nestquant`) on a deterministic synthetic
+//! `.nq` and compare against a checked-in fixture.
+//!
+//! Normalization: the temp path becomes `<PATH>`, digit runs become
+//! `#`, and space runs collapse — so the fixture pins the *structure*
+//! (section lines, per-tensor table, cost line) without columns
+//! shifting when byte counts change width. The exact byte counts are
+//! asserted separately below, rendered through the same format strings
+//! the CLI uses, so the numbers are still golden — just not the
+//! padding.
+
+use nestquant::container::{self, Kind};
+
+/// Digit runs → `#`, space runs → one space, trailing space trimmed.
+fn normalize(text: &str, path: &str) -> String {
+    let mut out = String::new();
+    for line in text.lines() {
+        let line = line.replace(path, "<PATH>");
+        let mut norm = String::new();
+        let mut in_digits = false;
+        let mut in_spaces = false;
+        for ch in line.chars() {
+            if ch.is_ascii_digit() {
+                if !in_digits {
+                    norm.push('#');
+                }
+                in_digits = true;
+                in_spaces = false;
+            } else if ch == ' ' || ch == '\t' {
+                if !in_spaces {
+                    norm.push(' ');
+                }
+                in_spaces = true;
+                in_digits = false;
+            } else {
+                norm.push(ch);
+                in_digits = false;
+                in_spaces = false;
+            }
+        }
+        out.push_str(norm.trim_end());
+        out.push('\n');
+    }
+    out.trim_end().to_string()
+}
+
+#[test]
+fn inspect_output_matches_golden_fixture() {
+    let dir = std::env::temp_dir().join(format!("nq_inspect_golden_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("golden.nq");
+    // fully deterministic: fixed seed, shapes, and nest config
+    let c = container::synthetic_nest(0x601D, 8, 4, 48, 8).unwrap();
+    let (total, a_len, b_len) = container::write(&path, &c).unwrap();
+
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_nestquant"))
+        .arg("inspect")
+        .arg(&path)
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "inspect failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8(out.stdout).unwrap();
+
+    // exact numbers, rendered through the CLI's own format strings
+    assert!(
+        text.contains(&format!(
+            "kind {:?}  name {:?}  INT({}|{})  act_bits {}",
+            Kind::Nest,
+            "synthetic_24605",
+            8,
+            4,
+            8
+        )),
+        "header line missing:\n{text}"
+    );
+    assert!(
+        text.contains(&format!(
+            "section A [{:>10}, {:>10}) {:>10} B",
+            0, a_len, a_len
+        )),
+        "section A byte range missing:\n{text}"
+    );
+    assert!(
+        text.contains(&format!(
+            "section B [{:>10}, {:>10}) {:>10} B",
+            a_len, total, b_len
+        )),
+        "section B byte range missing:\n{text}"
+    );
+    assert!(
+        text.contains(&format!("{:<24} {:<14} {:>9}", "layer.w", "48x8", 48 * 8)),
+        "weight tensor row missing:\n{text}"
+    );
+
+    // structural golden: the checked-in fixture, byte counts normalized
+    let normalized = normalize(&text, &path.display().to_string());
+    let golden = include_str!("fixtures/inspect_golden.txt").trim_end();
+    assert_eq!(
+        normalized, golden,
+        "normalized inspect output diverged from tests/fixtures/inspect_golden.txt\n\
+         --- got ---\n{normalized}\n--- want ---\n{golden}"
+    );
+}

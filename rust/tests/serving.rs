@@ -1,0 +1,554 @@
+//! Multi-tenant serving integration tests — the adversarial suite of
+//! the ModelStore serving PR, artifact-independent and PJRT-free.
+//!
+//! What is proven here (byte-accounted, not narrated):
+//!
+//! 1. **No torn weights, ever**: ≥ 4 concurrent client threads hammer a
+//!    server hosting ≥ 3 models while a background thread flips each
+//!    model between part-bit and full-bit. Every single reply must be
+//!    bit-identical to that model's part-bit OR full-bit single-tenant
+//!    baseline — a switch landing mid-batch, a cross-tenant routing
+//!    slip, or a half-rebuilt weight buffer all surface as a reply that
+//!    matches neither.
+//! 2. **Budget ceiling holds at every sample point**: a racing sampler
+//!    asserts resident Section-B bytes ≤ cap throughout an eviction
+//!    storm, against both the budget ledger and the archives' own
+//!    residency.
+//! 3. **Zero section-A re-reads / re-parses** across all upgrades,
+//!    downgrades, and forced evictions (`ArchiveStats`).
+//! 4. **Deterministic shutdown**: repeated start/stop cycles (flag-only,
+//!    client-`stop`-frame, and idle-connection variants) join every
+//!    thread and never hang.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use nestquant::container;
+use nestquant::coordinator::server::{serve_tenants, Client, ServerConfig, TenantExecutor};
+use nestquant::coordinator::tenant::{nest_tenants_from_dir, NestTenant};
+use nestquant::coordinator::{Decision, Variant};
+use nestquant::store::{ModelStore, NqArchive, StoreBudget};
+use nestquant::util::prng::Rng;
+
+const BATCH: usize = 4;
+
+/// (id, n, h, rows, channels) per hosted model — distinct shapes and
+/// nest configs so a routing slip cannot produce a plausible reply.
+const ZOO: &[(&str, u8, u8, usize, usize)] = &[
+    ("alpha", 8, 4, 96, 10),
+    ("beta", 7, 3, 64, 12),
+    ("gamma", 6, 2, 80, 8),
+];
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("nq_serving_it_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Write the ZOO to `dir`; returns per-model (path, b_len).
+fn write_zoo(dir: &std::path::Path) -> Vec<(std::path::PathBuf, u64)> {
+    ZOO.iter()
+        .map(|&(id, n, h, rows, channels)| {
+            let c = container::synthetic_nest(0xA11CE + n as u64, n, h, rows, channels).unwrap();
+            let path = dir.join(format!("{id}.nq"));
+            let (_, _, b) = container::write(&path, &c).unwrap();
+            (path, b)
+        })
+        .collect()
+}
+
+/// Deterministic probe images for one model.
+fn images(seed: u64, image_len: usize, count: usize) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..count)
+        .map(|_| (0..image_len).map(|_| rng.f32() * 2.0 - 1.0).collect())
+        .collect()
+}
+
+/// Single-tenant baseline logits (row 0 of a padded batch) for every
+/// image, computed through a private archive so the server's byte
+/// accounting is untouched.
+fn baseline(path: &std::path::Path, variant: Variant, imgs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let archive = Arc::new(NqArchive::open(path).unwrap());
+    let budget = Arc::new(StoreBudget::new(u64::MAX));
+    let mut t = NestTenant::from_archive("baseline", archive, budget, BATCH).unwrap();
+    if variant == Variant::FullBit {
+        t.switch(Decision::SwitchTo(Variant::FullBit)).unwrap().unwrap();
+    }
+    let (_, image_len, classes) = t.shape();
+    imgs.iter()
+        .map(|img| {
+            assert_eq!(img.len(), image_len);
+            let mut input = vec![0f32; BATCH * image_len];
+            input[..image_len].copy_from_slice(img);
+            t.run_batch(&input).unwrap()[..classes].to_vec()
+        })
+        .collect()
+}
+
+struct Hosted {
+    ids: Vec<String>,
+    archives: Vec<Arc<NqArchive>>,
+    part: Vec<Vec<Vec<f32>>>,
+    full: Vec<Vec<Vec<f32>>>,
+    imgs: Vec<Vec<Vec<f32>>>,
+    budget: Arc<StoreBudget>,
+    handle: nestquant::coordinator::server::ServerHandle,
+}
+
+/// Build the zoo, compute baselines, and start a multi-tenant server
+/// whose Section-B budget is `cap`.
+fn start_zoo(tag: &str, cap: u64) -> Hosted {
+    let dir = temp_dir(tag);
+    let paths = write_zoo(&dir);
+    let store = ModelStore::new();
+    let budget = Arc::new(StoreBudget::new(cap));
+    let tenants = nest_tenants_from_dir(&dir, &store, &budget, BATCH).unwrap();
+    assert_eq!(tenants.len(), ZOO.len());
+
+    let mut ids = Vec::new();
+    let mut archives = Vec::new();
+    let mut part = Vec::new();
+    let mut full = Vec::new();
+    let mut imgs = Vec::new();
+    for ((id, t), (path, _)) in tenants.iter().zip(&paths) {
+        // tenants come back sorted by file stem; map them to ZOO order
+        let zoo_pos = ZOO.iter().position(|z| z.0 == id).unwrap();
+        let (_, _, _, rows, _) = ZOO[zoo_pos];
+        assert_eq!(t.shape().1, rows);
+        let probe = images(0xBEEF + zoo_pos as u64, rows, 8);
+        part.push(baseline(path, Variant::PartBit, &probe));
+        full.push(baseline(path, Variant::FullBit, &probe));
+        imgs.push(probe);
+        ids.push(id.clone());
+        archives.push(Arc::clone(t.archive()));
+    }
+    let boxed: Vec<(String, Box<dyn TenantExecutor>)> = tenants
+        .into_iter()
+        .map(|(id, t)| (id, Box::new(t) as Box<dyn TenantExecutor>))
+        .collect();
+    let handle = serve_tenants(boxed, ServerConfig { max_wait: Duration::from_millis(2) }).unwrap();
+    Hosted { ids, archives, part, full, imgs, budget, handle }
+}
+
+/// ZOO is written with sorted ids, so tenant order == ZOO order.
+#[test]
+fn zoo_ids_are_sorted() {
+    let mut sorted: Vec<&str> = ZOO.iter().map(|z| z.0).collect();
+    sorted.sort_unstable();
+    assert_eq!(sorted, ZOO.iter().map(|z| z.0).collect::<Vec<_>>());
+}
+
+/// Tentpole acceptance: concurrent clients against ≥ 3 hosted models,
+/// a switch storm flipping every model mid-traffic, every reply equal
+/// to a single-tenant baseline, ≥ 1 upgrade + 1 downgrade observed in
+/// the replies of every model, zero section-A re-reads.
+#[test]
+fn replies_match_baselines_under_concurrent_switch_storm() {
+    // generous budget: all three B sections fit — evictions are the
+    // next test's job
+    let z = start_zoo("storm", u64::MAX);
+    let addr = z.handle.addr;
+    let n_models = z.ids.len();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    // per-model observed reply counts: [part, full]
+    let seen: Arc<Vec<[AtomicU64; 2]>> =
+        Arc::new((0..n_models).map(|_| [AtomicU64::new(0), AtomicU64::new(0)]).collect());
+
+    let mut clients = Vec::new();
+    for c in 0..6usize {
+        let m = c % n_models;
+        let id = z.ids[m].clone();
+        let imgs = z.imgs[m].clone();
+        let part = z.part[m].clone();
+        let full = z.full[m].clone();
+        let stop = Arc::clone(&stop);
+        let seen = Arc::clone(&seen);
+        clients.push(std::thread::spawn(move || -> usize {
+            let mut client = Client::connect(addr).unwrap();
+            let mut sent = 0usize;
+            let mut i = c; // decorrelate clients on the same model
+            while !stop.load(Ordering::Relaxed) && sent < 20_000 {
+                let k = i % imgs.len();
+                let logits = client.infer_model(&id, &imgs[k]).unwrap();
+                if logits == part[k] {
+                    seen[m][0].fetch_add(1, Ordering::Relaxed);
+                } else if logits == full[k] {
+                    seen[m][1].fetch_add(1, Ordering::Relaxed);
+                } else {
+                    panic!(
+                        "{id}: torn reply — logits match neither baseline \
+                         (img {k}, got {logits:?})"
+                    );
+                }
+                sent += 1;
+                i += 1;
+            }
+            sent
+        }));
+    }
+
+    // switch storm: for each model, force ≥ 2 upgrades and ≥ 2
+    // downgrades, each time waiting until the *replies* prove the new
+    // variant was served mid-traffic (no sleep guessing)
+    let wait_served = |m: usize, which: usize, before: u64| {
+        let deadline = Instant::now() + Duration::from_secs(20);
+        while seen[m][which].load(Ordering::Relaxed) <= before {
+            assert!(
+                Instant::now() < deadline,
+                "model {m}: no {} reply observed after switch",
+                if which == 0 { "part-bit" } else { "full-bit" }
+            );
+            std::thread::yield_now();
+        }
+    };
+    for _round in 0..2 {
+        for m in 0..n_models {
+            let before_full = seen[m][1].load(Ordering::Relaxed);
+            z.handle
+                .advise(&z.ids[m], Decision::SwitchTo(Variant::FullBit))
+                .unwrap();
+            wait_served(m, 1, before_full);
+            let before_part = seen[m][0].load(Ordering::Relaxed);
+            z.handle
+                .advise(&z.ids[m], Decision::SwitchTo(Variant::PartBit))
+                .unwrap();
+            wait_served(m, 0, before_part);
+        }
+    }
+    stop.store(true, Ordering::Relaxed);
+    let total: usize = clients.into_iter().map(|j| j.join().unwrap()).sum();
+    assert!(total > 0);
+
+    for (m, id) in z.ids.iter().enumerate() {
+        // both variants actually served, mid-traffic, for every model
+        assert!(seen[m][0].load(Ordering::Relaxed) >= 1, "{id}: no part-bit replies");
+        assert!(seen[m][1].load(Ordering::Relaxed) >= 1, "{id}: no full-bit replies");
+        let metrics = z.handle.metrics(id).unwrap();
+        assert!(metrics.upgrades.load(Ordering::Relaxed) >= 2, "{id}");
+        assert!(metrics.downgrades.load(Ordering::Relaxed) >= 2, "{id}");
+        assert!(metrics.requests.load(Ordering::Relaxed) > 0, "{id}");
+        // the zero-copy claims, per archive, across the whole storm
+        let s = z.archives[m].stats();
+        assert_eq!(s.a_fetches, 1, "{id}: section A re-read");
+        assert_eq!(s.layout_parses, 1, "{id}: layout re-parsed");
+        assert!(s.b_fetches >= 2, "{id}: expected one B fetch per upgrade");
+        assert_eq!(s.b_fetches, s.b_releases + z.archives[m].b_resident() as u64, "{id}");
+    }
+    z.handle.stop();
+}
+
+/// Budget acceptance: a cap that holds only ONE model's Section B at a
+/// time. Upgrading each model in turn evicts the previous one; a racing
+/// sampler proves resident B bytes never exceed the cap — on the budget
+/// ledger AND summed over the archives — while clients keep getting
+/// baseline-exact replies throughout.
+#[test]
+fn shared_budget_evictions_stay_under_cap_mid_traffic() {
+    let dir = temp_dir("budget_sizes");
+    let paths = write_zoo(&dir);
+    let b_sizes: Vec<u64> = paths.iter().map(|(_, b)| *b).collect();
+    let cap = *b_sizes.iter().max().unwrap();
+    // the cap admits any single B but never two of them
+    let two_smallest: u64 = {
+        let mut s = b_sizes.clone();
+        s.sort_unstable();
+        s[0] + s[1]
+    };
+    assert!(two_smallest > cap, "zoo sizes defeat the eviction scenario");
+
+    let z = start_zoo("budget", cap);
+    let addr = z.handle.addr;
+    let n_models = z.ids.len();
+
+    // racing sampler: the ceiling must hold at EVERY observable point
+    let stop = Arc::new(AtomicBool::new(false));
+    let sampler = {
+        let stop = Arc::clone(&stop);
+        let budget = Arc::clone(&z.budget);
+        let archives = z.archives.clone();
+        std::thread::spawn(move || -> u64 {
+            let mut samples = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let ledger = budget.resident_bytes();
+                assert!(ledger <= budget.cap(), "budget ledger over cap: {ledger}");
+                let by_archive: u64 = archives
+                    .iter()
+                    .map(|a| if a.b_resident() { a.section_b_bytes() } else { 0 })
+                    .sum();
+                assert!(
+                    by_archive <= budget.cap(),
+                    "archive-resident B over cap: {by_archive}"
+                );
+                samples += 1;
+                std::thread::yield_now();
+            }
+            samples
+        })
+    };
+
+    // light traffic on every model while the eviction storm runs
+    let mut clients = Vec::new();
+    for m in 0..n_models {
+        let id = z.ids[m].clone();
+        let imgs = z.imgs[m].clone();
+        let part = z.part[m].clone();
+        let full = z.full[m].clone();
+        let stop = Arc::clone(&stop);
+        clients.push(std::thread::spawn(move || {
+            let mut client = Client::connect(addr).unwrap();
+            let mut i = 0usize;
+            while !stop.load(Ordering::Relaxed) && i < 20_000 {
+                let k = i % imgs.len();
+                let logits = client.infer_model(&id, &imgs[k]).unwrap();
+                assert!(
+                    logits == part[k] || logits == full[k],
+                    "{id}: reply matches neither baseline under eviction pressure"
+                );
+                i += 1;
+            }
+        }));
+    }
+
+    // eviction storm: each upgrade must evict the previous tenant's B
+    for round in 0..3 {
+        for m in 0..n_models {
+            z.handle
+                .advise(&z.ids[m], Decision::SwitchTo(Variant::FullBit))
+                .unwrap();
+            let resident: Vec<bool> = z.archives.iter().map(|a| a.b_resident()).collect();
+            assert!(resident[m], "round {round}: upgraded model must hold B");
+            assert_eq!(
+                resident.iter().filter(|r| **r).count(),
+                1,
+                "round {round}: cap admits exactly one resident B"
+            );
+        }
+    }
+    assert!(
+        z.budget.evictions() >= (3 * n_models - 1) as u64,
+        "every upgrade after the first must evict: {}",
+        z.budget.evictions()
+    );
+    // let traffic keep flowing over the post-eviction state (forced
+    // downgrades reconcile at batch time) and the sampler accumulate
+    std::thread::sleep(Duration::from_millis(150));
+
+    stop.store(true, Ordering::Relaxed);
+    for c in clients {
+        c.join().unwrap();
+    }
+    let samples = sampler.join().unwrap();
+    assert!(samples > 100, "sampler barely ran ({samples} samples)");
+
+    // eviction pressure still never touched section A
+    for (m, id) in z.ids.iter().enumerate() {
+        let s = z.archives[m].stats();
+        assert_eq!(s.a_fetches, 1, "{id}");
+        assert_eq!(s.layout_parses, 1, "{id}");
+    }
+    let events = z.budget.drain_events();
+    assert!(
+        events
+            .iter()
+            .any(|e| matches!(e, nestquant::store::BudgetEvent::Evicted { .. })),
+        "eviction trace must record victims"
+    );
+    z.handle.stop();
+}
+
+/// An upgrade whose Section B alone exceeds the shared cap is rejected
+/// cleanly (no eviction, no partial state) and the tenant keeps serving
+/// part-bit.
+#[test]
+fn oversized_upgrade_is_rejected_and_tenant_keeps_serving() {
+    let z = start_zoo("oversize", 16); // cap far below any B section
+    let err = z
+        .handle
+        .advise(&z.ids[0], Decision::SwitchTo(Variant::FullBit))
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("exceeds"), "{err:#}");
+    let mut client = Client::connect(z.handle.addr).unwrap();
+    let logits = client.infer_model(&z.ids[0], &z.imgs[0][0]).unwrap();
+    assert_eq!(logits, z.part[0][0], "tenant still serves part-bit");
+    assert_eq!(z.budget.evictions(), 0);
+    z.handle.stop();
+}
+
+/// Router behaviour: `models` lists every hosted id; unknown ids and
+/// ambiguous empty ids are clean errors that leave the connection
+/// usable; wrong-size images are rejected per-tenant.
+#[test]
+fn models_listing_and_routing_errors() {
+    let z = start_zoo("routing", u64::MAX);
+    let mut client = Client::connect(z.handle.addr).unwrap();
+    assert_eq!(client.models().unwrap(), z.ids);
+    assert_eq!(z.handle.models(), z.ids);
+
+    let err = client.infer_model("ghost", &z.imgs[0][0]).unwrap_err();
+    assert!(format!("{err}").contains("unknown model"), "{err}");
+    // empty id is ambiguous with 3 tenants
+    let err = client.infer(&z.imgs[0][0]).unwrap_err();
+    assert!(format!("{err}").contains("model id required"), "{err}");
+    // wrong image size for THIS tenant (beta's image_len ≠ alpha's)
+    let err = client.infer_model(&z.ids[0], &z.imgs[1][0]).unwrap_err();
+    assert!(format!("{err}").contains("bad image size"), "{err}");
+    // connection still usable after every error
+    let logits = client.infer_model(&z.ids[2], &z.imgs[2][0]).unwrap();
+    assert_eq!(logits, z.part[2][0]);
+    z.handle.stop();
+}
+
+/// Count this process's live threads (linux procfs; the CI target).
+#[cfg(target_os = "linux")]
+fn thread_count() -> usize {
+    std::fs::read_dir("/proc/self/task").unwrap().count()
+}
+
+/// Satellite: deterministic shutdown. Repeated start/stop cycles across
+/// all three stop paths (handle stop, client `stop` frame then handle
+/// join, stop with an idle client connected) complete quickly and do
+/// not leak threads — this hung or leaked before the accept-loop
+/// re-check + tracked handler joins.
+#[test]
+fn repeated_start_stop_never_hangs_or_leaks_threads() {
+    let dir = temp_dir("stoploop");
+    let c = container::synthetic_nest(7, 8, 4, 32, 6).unwrap();
+    let path = dir.join("m.nq");
+    container::write(&path, &c).unwrap();
+
+    #[cfg(target_os = "linux")]
+    let threads_before = thread_count();
+
+    let t0 = Instant::now();
+    for cycle in 0..12 {
+        let archive = Arc::new(NqArchive::open(&path).unwrap());
+        let budget = Arc::new(StoreBudget::new(u64::MAX));
+        let tenant = NestTenant::from_archive("m", archive, budget, 2).unwrap();
+        let handle = serve_tenants(
+            vec![("m".to_string(), Box::new(tenant) as Box<dyn TenantExecutor>)],
+            ServerConfig::default(),
+        )
+        .unwrap();
+        let mut client = Client::connect(handle.addr).unwrap();
+        let img = vec![0.5f32; 32];
+        client.infer_model("m", &img).unwrap();
+        match cycle % 3 {
+            0 => handle.stop(),
+            1 => {
+                // a bare stop frame must flag the server down on its
+                // own (handler pokes the acceptor); stop() then only
+                // joins what is already shutting down
+                client.stop_server().unwrap();
+                let deadline = Instant::now() + Duration::from_secs(5);
+                while !handle.stopped() {
+                    assert!(Instant::now() < deadline, "stop frame ignored");
+                    std::thread::yield_now();
+                }
+                handle.stop();
+            }
+            _ => {
+                // an extra idle connection must not block shutdown
+                let _idle = Client::connect(handle.addr).unwrap();
+                handle.stop();
+            }
+        }
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "12 start/stop cycles took {:?}",
+        t0.elapsed()
+    );
+
+    #[cfg(target_os = "linux")]
+    {
+        // every server thread joined. The slack absorbs concurrently
+        // running sibling tests (test harness + their servers) under a
+        // parallel `cargo test`; a real leak here is ~4 threads/cycle
+        // (~48), far beyond it. The CI serving leg runs single-threaded,
+        // where the count is near-exact.
+        let deadline = Instant::now() + Duration::from_secs(15);
+        loop {
+            let now = thread_count();
+            if now <= threads_before + 16 {
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "leaked threads: {threads_before} before, {now} after"
+            );
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+}
+
+/// The `ModelManager` side of the shared budget: two managers under one
+/// cap evict each other's Section B on upgrade, with the ledgers and
+/// `ArchiveStats` agreeing. (Fallback engine only: no PJRT needed —
+/// switching never executes a graph.)
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn model_managers_share_one_section_b_budget() {
+    use nestquant::coordinator::ModelManager;
+    use nestquant::device::MemoryLedger;
+    use nestquant::runtime::{Engine, ModelSpec, ParamSpec};
+    use std::collections::BTreeMap;
+
+    let dir = temp_dir("mgr_budget");
+    std::fs::write(dir.join("toy.hlo.txt"), "HloModule toy\n").unwrap();
+    let mut managers = Vec::new();
+    let mut b_len = 0;
+    for (i, name) in ["m0", "m1"].iter().enumerate() {
+        let c = container::synthetic_nest(40 + i as u64, 8, 4, 64, 8).unwrap();
+        let (_, _, b) = container::write(&dir.join(format!("{name}.nq")), &c).unwrap();
+        b_len = b;
+        let spec = ModelSpec {
+            name: (*name).to_string(),
+            params: vec![
+                ParamSpec { name: "layer.w".into(), shape: vec![64, 8], quantized: true },
+                ParamSpec { name: "layer.b".into(), shape: vec![8], quantized: false },
+            ],
+            hlo: BTreeMap::from([(8u8, "toy.hlo.txt".to_string())]),
+            nest_containers: BTreeMap::from([("8|4".to_string(), format!("{name}.nq"))]),
+            mono_containers: BTreeMap::new(),
+            fp32_container: String::new(),
+            expected: BTreeMap::new(),
+        };
+        let engine = Engine::cpu().unwrap();
+        managers.push(ModelManager::new(&engine, spec, 8, &dir, &format!("{name}.nq")).unwrap());
+    }
+    // room for exactly one resident Section B
+    let budget = Arc::new(StoreBudget::new(b_len));
+    for (i, m) in managers.iter_mut().enumerate() {
+        m.set_store_budget(format!("m{i}"), Arc::clone(&budget));
+    }
+    let mut ledger = MemoryLedger::new(1 << 30);
+    managers[0].load_part_bit(&mut ledger).unwrap();
+    managers[1].load_part_bit(&mut ledger).unwrap();
+
+    managers[0].upgrade(&mut ledger).unwrap();
+    assert!(managers[0].archive().b_resident());
+    // m1's upgrade evicts m0's B under the shared cap
+    managers[1].upgrade(&mut ledger).unwrap();
+    assert!(managers[1].archive().b_resident());
+    assert!(!managers[0].archive().b_resident(), "m0 evicted");
+    assert_eq!(budget.resident_bytes(), b_len);
+    assert_eq!(budget.evictions(), 1);
+    assert_eq!(managers[0].archive().stats().b_releases, 1);
+
+    // m0's downgrade after eviction is a no-op on the budget ledger but
+    // still a valid state transition (its weights were never torn)
+    managers[0].downgrade(&mut ledger).unwrap();
+    assert_eq!(budget.resident_bytes(), b_len);
+    // m1 downgrades voluntarily → ledger empties
+    managers[1].downgrade(&mut ledger).unwrap();
+    assert_eq!(budget.resident_bytes(), 0);
+    // zero section-A re-reads on either manager throughout
+    for m in &managers {
+        assert_eq!(m.archive().stats().a_fetches, 1);
+        assert_eq!(m.archive().stats().layout_parses, 1);
+    }
+}
