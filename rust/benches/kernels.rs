@@ -1,0 +1,188 @@
+//! Bench: the fused switching kernels vs the legacy multi-pass
+//! composition — the measured floor under the paper's cheap-switching
+//! claim (§3.3, Table 5). Writes `BENCH_kernels.json` with bytes/sec
+//! per (bitwidth, fused-vs-legacy) cell so the perf trajectory is a
+//! recorded artifact, and asserts the fused one-pass path never loses
+//! to the legacy composition it replaced.
+//!
+//! Two operations per nesting config:
+//!
+//! * **launch** (part-bit): packed `w_high` → f32.
+//!   legacy = `unpack_into` + scale-inflate + `dequant` (2 passes +
+//!   an inflated scale vector); fused = `kernels::unpack_dequant_into`.
+//! * **upgrade** (full-bit): packed `w_high` + `w_low` → f32.
+//!   legacy = `unpack_into` ×2 + `recompose_into` + `dequant`
+//!   (4 passes, 3 transient i32 vectors); fused =
+//!   `kernels::recompose_dequant_into`.
+//!
+//! Throughput denominates in *packed input bytes* (the section bytes a
+//! switch actually moves), so the number is comparable across
+//! bitwidths. Artifact-free; iteration budget capped via
+//! `NQ_BENCH_BUDGET_MS` (see `Bench::from_env`).
+
+use nestquant::bits::{int_range, packed_nbytes, PackedTensor};
+use nestquant::kernels;
+use nestquant::nest::{self, NestConfig, Rounding};
+use nestquant::quant;
+use nestquant::util::benchkit::Bench;
+use nestquant::util::json;
+use nestquant::util::prng::Rng;
+
+/// Elements per tensor: big enough to be bandwidth-bound, small enough
+/// for a capped CI budget.
+const ELEMS: usize = 1 << 18;
+const CHANNELS: usize = 64;
+
+struct Cell {
+    n: u8,
+    h: u8,
+    op: &'static str,
+    fused_bps: f64,
+    legacy_bps: f64,
+}
+
+/// One nesting config: build a synthetic tensor, time all four cells.
+fn bench_config(b: &Bench, n: u8, h: u8, cells: &mut Vec<Cell>) {
+    let cfg = NestConfig::new(n, h).unwrap();
+    let mut rng = Rng::new(0xD1CE ^ ((n as u64) << 8) ^ h as u64);
+    let (lo, hi) = int_range(n);
+    let w_int: Vec<i32> = (0..ELEMS)
+        .map(|_| rng.int(lo as i64, hi as i64) as i32)
+        .collect();
+    let scales: Vec<f32> = (0..CHANNELS)
+        .map(|_| (rng.f64() * 0.05 + 1e-4) as f32)
+        .collect();
+    let (hs, ls) = nest::decompose(&w_int, cfg, Rounding::BitShift, true);
+    let th = PackedTensor::pack(&hs, h).unwrap();
+    let tl = PackedTensor::pack(&ls, cfg.low_bits()).unwrap();
+    let (hb, lb) = (th.to_le_bytes(), tl.to_le_bytes());
+    let high_bytes = packed_nbytes(ELEMS, h) as f64;
+    let both_bytes = (packed_nbytes(ELEMS, h) + packed_nbytes(ELEMS, cfg.low_bits())) as f64;
+
+    let mut out = Vec::with_capacity(ELEMS);
+
+    // --- launch: packed w_high -> f32 ---------------------------------
+    let s = b.run(&format!("INT({n}|{h}) launch FUSED"), || {
+        kernels::unpack_dequant_into(&hb, h, ELEMS, &scales, cfg.scale_inflation(), &mut out);
+        std::hint::black_box(&out);
+    });
+    let fused_launch = high_bytes / s.min.as_secs_f64();
+
+    let mut scratch_int = Vec::with_capacity(ELEMS);
+    let mut scratch_scales = Vec::with_capacity(CHANNELS);
+    let s = b.run(&format!("INT({n}|{h}) launch LEGACY"), || {
+        th.unpack_into(&mut scratch_int);
+        scratch_scales.clear();
+        scratch_scales.extend(scales.iter().map(|s| s * cfg.scale_inflation()));
+        quant::dequant(&scratch_int, &scratch_scales, &mut out);
+        std::hint::black_box(&out);
+    });
+    let legacy_launch = high_bytes / s.min.as_secs_f64();
+    cells.push(Cell {
+        n,
+        h,
+        op: "launch",
+        fused_bps: fused_launch,
+        legacy_bps: legacy_launch,
+    });
+
+    // --- upgrade: w_high + w_low -> f32 -------------------------------
+    let s = b.run(&format!("INT({n}|{h}) upgrade FUSED"), || {
+        kernels::recompose_dequant_into(
+            &hb,
+            h,
+            &lb,
+            cfg.low_bits(),
+            cfg.l(),
+            ELEMS,
+            &scales,
+            &mut out,
+        );
+        std::hint::black_box(&out);
+    });
+    let fused_up = both_bytes / s.min.as_secs_f64();
+
+    let mut scratch_high = Vec::with_capacity(ELEMS);
+    let mut scratch_low = Vec::with_capacity(ELEMS);
+    let s = b.run(&format!("INT({n}|{h}) upgrade LEGACY"), || {
+        th.unpack_into(&mut scratch_high);
+        tl.unpack_into(&mut scratch_low);
+        nest::recompose_into(&scratch_high, &scratch_low, cfg.l(), &mut scratch_int);
+        quant::dequant(&scratch_int, &scales, &mut out);
+        std::hint::black_box(&out);
+    });
+    let legacy_up = both_bytes / s.min.as_secs_f64();
+    cells.push(Cell {
+        n,
+        h,
+        op: "upgrade",
+        fused_bps: fused_up,
+        legacy_bps: legacy_up,
+    });
+}
+
+fn main() {
+    let b = Bench::from_env();
+    // (7|4)/(11|8): both streams lane-aligned (paired SWAR); (8|4)/(16|8):
+    // w_high aligned only; (8|5)/(8|6)/(6|3)/(7|3): scalar fallbacks
+    let configs: [(u8, u8); 8] =
+        [(8, 4), (8, 5), (8, 6), (6, 3), (16, 8), (7, 3), (7, 4), (11, 8)];
+    let mut cells = Vec::new();
+    for (n, h) in configs {
+        bench_config(&b, n, h, &mut cells);
+    }
+
+    let mut rows = Vec::new();
+    let mut all_win = true;
+    for c in &cells {
+        let speedup = c.fused_bps / c.legacy_bps;
+        println!(
+            "bench: INT({}|{}) {:<8} fused {:>8.1} MB/s  legacy {:>8.1} MB/s  speedup {speedup:.2}x",
+            c.n,
+            c.h,
+            c.op,
+            c.fused_bps / 1e6,
+            c.legacy_bps / 1e6
+        );
+        // upgrade (1 pass vs 4) must strictly win — the acceptance gate.
+        // launch (1 pass vs 2, both SWAR when aligned) has thinner
+        // margins, so it gets a noise band instead of a flaky hard gate.
+        all_win &= match c.op {
+            "upgrade" => c.fused_bps >= c.legacy_bps,
+            _ => c.fused_bps >= 0.9 * c.legacy_bps,
+        };
+        rows.push(json::obj(vec![
+            ("n", json::num(c.n as f64)),
+            ("h", json::num(c.h as f64)),
+            ("op", json::str_(c.op)),
+            ("fused_bytes_per_s", json::num(c.fused_bps)),
+            ("legacy_bytes_per_s", json::num(c.legacy_bps)),
+            ("speedup", json::num(speedup)),
+        ]));
+    }
+
+    let doc = json::obj(vec![
+        ("elements", json::num(ELEMS as f64)),
+        ("channels", json::num(CHANNELS as f64)),
+        ("cells", json::arr(rows)),
+        (
+            "note",
+            json::str_(
+                "packed-input bytes/sec of the fused one-pass kernels vs the legacy \
+                 unpack/recompose/dequant composition; best-of-iterations per cell",
+            ),
+        ),
+    ]);
+    let out = "BENCH_kernels.json";
+    std::fs::write(out, json::to_string(&doc)).unwrap();
+    println!("bench: wrote {out}");
+
+    // the acceptance gate: the one-pass upgrade path must never lose to
+    // the four-pass composition it replaced, at any measured bitwidth
+    // (launch cells carry the 0.9 noise band above)
+    assert!(
+        all_win,
+        "fused kernel lost to the legacy composition on at least one cell — see {out}"
+    );
+    println!("bench: fused holds the gate on all {} cells", cells.len());
+}

@@ -90,6 +90,13 @@ impl PackedTensor {
         &self.words
     }
 
+    /// Serialize the words as little-endian bytes — the exact payload
+    /// layout of a `.nq` packed block (what `store::PackedView` and the
+    /// `crate::kernels` decode loops consume).
+    pub fn to_le_bytes(&self) -> Vec<u8> {
+        self.words.iter().flat_map(|w| w.to_le_bytes()).collect()
+    }
+
     /// On-disk payload bytes (words only).
     pub fn nbytes(&self) -> usize {
         self.words.len() * 8
@@ -130,6 +137,15 @@ pub(crate) fn sign_extend(field: u64, bits: u8) -> i32 {
     (((field << shift) as i64) >> shift) as i32
 }
 
+/// Sign-extend a field via xor-sub given the precomputed sign bit
+/// (`1 << (bits - 1)`): the SWAR idiom shared by the word-parallel
+/// decode loops here and in `crate::kernels` — one op pair per lane,
+/// no width-dependent double shift.
+#[inline(always)]
+pub(crate) fn sext(field: u64, sign: u64) -> i32 {
+    ((field ^ sign) as i64 - sign as i64) as i32
+}
+
 /// Ideal packed payload size in bytes for `count` `bits`-bit elements.
 pub fn packed_nbytes(count: usize, bits: u8) -> usize {
     count.div_ceil(lanes(bits)) * 8
@@ -147,6 +163,12 @@ pub fn packed_nwords(count: usize, bits: u8) -> usize {
 /// Callers must supply at least `packed_nwords(len, bits)` words; the
 /// caller is trusted on `bits` being in range (the packed containers
 /// validate it at parse time).
+///
+/// Lane-aligned bitwidths (`bits ∣ 64`) take a SWAR path: the per-word
+/// lane loop has a constant trip count the compiler unrolls and
+/// vectorizes, with xor-sub sign extension instead of a double shift.
+/// The fused decode kernels in `crate::kernels` go further (straight to
+/// f32); this stays the i32 entry point for everything else.
 pub fn unpack_words_into<I: Iterator<Item = u64>>(
     words: I,
     bits: u8,
@@ -155,6 +177,21 @@ pub fn unpack_words_into<I: Iterator<Item = u64>>(
 ) {
     out.clear();
     out.reserve(len);
+    match bits {
+        2 => unpack_words_swar::<2, I>(words, len, out),
+        4 => unpack_words_swar::<4, I>(words, len, out),
+        8 => unpack_words_swar::<8, I>(words, len, out),
+        16 => unpack_words_swar::<16, I>(words, len, out),
+        _ => unpack_words_scalar(words, bits, len, out),
+    }
+}
+
+fn unpack_words_scalar<I: Iterator<Item = u64>>(
+    words: I,
+    bits: u8,
+    len: usize,
+    out: &mut Vec<i32>,
+) {
     let n_lanes = lanes(bits);
     let b = bits as usize;
     let mask = (1u64 << b) - 1;
@@ -172,6 +209,37 @@ pub fn unpack_words_into<I: Iterator<Item = u64>>(
         remaining -= take;
     }
     debug_assert_eq!(remaining, 0, "word stream shorter than {len} x INT{bits}");
+}
+
+fn unpack_words_swar<const BITS: u32, I: Iterator<Item = u64>>(
+    words: I,
+    len: usize,
+    out: &mut Vec<i32>,
+) {
+    let n_lanes = (64 / BITS) as usize;
+    let mask = (1u64 << BITS) - 1;
+    let sign = 1u64 << (BITS - 1);
+    let mut remaining = len;
+    for mut word in words {
+        if remaining == 0 {
+            break;
+        }
+        if remaining >= n_lanes {
+            // full word: constant-trip unrolled lane loop
+            for _ in 0..n_lanes {
+                out.push(sext(word & mask, sign));
+                word >>= BITS;
+            }
+            remaining -= n_lanes;
+        } else {
+            for _ in 0..remaining {
+                out.push(sext(word & mask, sign));
+                word >>= BITS;
+            }
+            remaining = 0;
+        }
+    }
+    debug_assert_eq!(remaining, 0, "word stream shorter than {len} x INT{}", BITS);
 }
 
 #[cfg(test)]

@@ -16,7 +16,6 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::container::Kind;
 use crate::device::MemoryLedger;
-use crate::quant;
 use crate::runtime::{Engine, Executable, ModelSpec};
 use crate::store::{ModelStore, NqArchive, PayloadView};
 
@@ -107,7 +106,6 @@ impl DiverseBitwidths {
         ledger.page_in(in_bytes).context("baseline page-in")?;
         let model = archive.part_bit()?; // mono: section A is the whole model
         let mut bufs = Vec::with_capacity(model.len());
-        let mut scratch_int = Vec::new();
         let mut scratch_scales = Vec::new();
         let mut scratch_f32 = Vec::new();
         for (view, spec) in model.tensors().zip(&self.spec.params) {
@@ -117,9 +115,10 @@ impl DiverseBitwidths {
                     vals.read_into(&mut scratch_f32);
                 }
                 PayloadView::Mono { scales, w_int } => {
-                    w_int.unpack_into(&mut scratch_int);
+                    // fused one-pass decode (scale_mul = 1: mono scales
+                    // are exact, no inflation)
                     scales.read_into(&mut scratch_scales);
-                    quant::dequant(&scratch_int, &scratch_scales, &mut scratch_f32);
+                    w_int.unpack_dequant_into(&scratch_scales, 1.0, &mut scratch_f32);
                 }
                 PayloadView::Nest { .. } => bail!("nest tensor in mono container"),
             }

@@ -24,8 +24,11 @@
 //!
 //! Hot path: weights live as device-resident PJRT buffers, rebuilt only
 //! on a switch; a request uploads just its input batch. The decode path
-//! is copy-free until the dequantized f32s: packed words stream from
-//! the archive's `Arc<[u8]>` sections directly into reused i32 scratch.
+//! is one fused pass per tensor: packed words stream from the archive's
+//! `Arc<[u8]>` sections straight into dequantized f32s
+//! (`crate::kernels` — no i32 intermediates), and tensors decode in
+//! parallel across scoped threads so a multi-tensor switch is bounded
+//! by memory bandwidth, not one core.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -35,8 +38,7 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::container::Kind;
 use crate::device::MemoryLedger;
 use crate::nest;
-use crate::quant;
-use crate::runtime::{Engine, Executable, ModelSpec};
+use crate::runtime::{Engine, Executable, ModelSpec, ParamSpec};
 use crate::store::{NqArchive, PayloadView, StoreBudget, TensorView};
 
 /// Which weights are currently active.
@@ -87,12 +89,82 @@ pub struct ModelManager {
     /// downgrade: they derive from the paged-out w_low.
     part_bufs: Vec<crate::runtime::DeviceBuffer>,
     state: State,
-    /// Scratch buffers reused across switches (no realloc on the path).
-    scratch_high: Vec<i32>,
-    scratch_low: Vec<i32>,
-    scratch_int: Vec<i32>,
-    scratch_f32: Vec<f32>,
-    scratch_scales: Vec<f32>,
+    /// Per-worker decode slots (one wave's worth, ≤ `decode_workers`) —
+    /// the single scratch that replaced the old high/low/int triple.
+    /// The f32 payloads are transient (released after each wave's
+    /// upload, so only the packed sections stay resident between — and
+    /// during — switches); the slot vector and the small scales buffers
+    /// persist.
+    decode_slots: Vec<DecodeSlot>,
+}
+
+/// One tensor's decode buffers. Each worker thread owns one slot
+/// exclusively during a wave; `f32s` lives only from decode to upload.
+#[derive(Default)]
+struct DecodeSlot {
+    f32s: Vec<f32>,
+    scales: Vec<f32>,
+}
+
+/// Worker threads for the per-tensor decode fan-out: one per tensor up
+/// to the machine's parallelism. The cap bounds what *one* switch can
+/// grab (the fused kernels go bandwidth-bound well before high core
+/// counts); it is per-manager, so N managers switching at the same
+/// instant can still hold N·cap threads — a process-global decode pool
+/// is future work if zoo-scale concurrent switching shows up in traces.
+fn decode_workers(tensors: usize) -> usize {
+    if tensors < 2 {
+        return 1;
+    }
+    std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .min(tensors)
+        .min(8)
+}
+
+/// Decode one tensor's payload into `slot.f32s` through the fused
+/// one-pass kernels. Free function so scoped workers borrow only their
+/// own slot, never the manager.
+fn decode_tensor(
+    view: &TensorView<'_>,
+    spec: &ParamSpec,
+    variant: Variant,
+    cfg: nest::NestConfig,
+    slot: &mut DecodeSlot,
+) -> Result<()> {
+    ensure!(
+        view.name() == spec.name,
+        "tensor order: {} vs {}",
+        view.name(),
+        spec.name
+    );
+    ensure!(view.shape() == spec.shape, "{}: shape mismatch", view.name());
+    match view.payload() {
+        PayloadView::Fp32(vals) => vals.read_into(&mut slot.f32s),
+        PayloadView::Nest {
+            scales,
+            w_high,
+            w_low,
+        } => {
+            scales.read_into(&mut slot.scales);
+            match variant {
+                Variant::PartBit => {
+                    // Eq. 10: the 2^l inflation rides into the kernel as
+                    // the scale multiplier — no inflated scale vector
+                    let inflate = cfg.scale_inflation();
+                    w_high.unpack_dequant_into(&slot.scales, inflate, &mut slot.f32s);
+                }
+                Variant::FullBit => {
+                    let low = w_low
+                        .ok_or_else(|| anyhow::anyhow!("{}: w_low not paged in", view.name()))?;
+                    w_high.recompose_dequant_into(&low, cfg.l(), &slot.scales, &mut slot.f32s);
+                }
+            }
+        }
+        PayloadView::Mono { .. } => bail!("mono tensor in nest container"),
+    }
+    Ok(())
 }
 
 impl ModelManager {
@@ -141,11 +213,7 @@ impl ModelManager {
             weight_bufs: Vec::new(),
             part_bufs: Vec::new(),
             state: State::Unloaded,
-            scratch_high: Vec::new(),
-            scratch_low: Vec::new(),
-            scratch_int: Vec::new(),
-            scratch_f32: Vec::new(),
-            scratch_scales: Vec::new(),
+            decode_slots: Vec::new(),
         })
     }
 
@@ -341,8 +409,13 @@ impl ModelManager {
         }
     }
 
-    /// The shared decode+upload loop: packed words stream from the
-    /// section bytes into reused scratch, dequantize, upload.
+    /// The shared decode+upload path: every tensor runs one fused
+    /// kernel pass (packed section bytes → dequantized f32, no i32
+    /// intermediates), fanned out across scoped threads in bounded
+    /// waves so a multi-tensor switch saturates memory bandwidth
+    /// without holding the whole dequantized model; uploads happen in
+    /// spec order on the calling thread (PJRT buffers stay
+    /// thread-affine).
     fn upload_views<'m>(
         &mut self,
         views: impl ExactSizeIterator<Item = TensorView<'m>>,
@@ -356,52 +429,46 @@ impl ModelManager {
         );
         let idx = self.archive.index();
         let cfg = nest::NestConfig::new(idx.n, idx.h)?;
-        let mut bufs = Vec::with_capacity(self.spec.params.len());
-        for (view, spec) in views.zip(&self.spec.params) {
-            ensure!(
-                view.name() == spec.name,
-                "tensor order: {} vs {}",
-                view.name(),
-                spec.name
-            );
-            ensure!(view.shape() == spec.shape, "{}: shape mismatch", view.name());
-            let out = &mut self.scratch_f32;
-            match view.payload() {
-                PayloadView::Fp32(vals) => {
-                    vals.read_into(out);
-                }
-                PayloadView::Nest {
-                    scales,
-                    w_high,
-                    w_low,
-                } => match variant {
-                    Variant::PartBit => {
-                        w_high.unpack_into(&mut self.scratch_high);
-                        scales.read_into(&mut self.scratch_scales);
-                        for s in self.scratch_scales.iter_mut() {
-                            *s *= cfg.scale_inflation();
-                        }
-                        quant::dequant(&self.scratch_high, &self.scratch_scales, out);
+        let views: Vec<TensorView<'m>> = views.collect();
+        let workers = decode_workers(views.len());
+        if self.decode_slots.len() < workers {
+            self.decode_slots.resize_with(workers, DecodeSlot::default);
+        }
+        let slots = &mut self.decode_slots[..workers];
+        let params = &self.spec.params;
+        // Wave pipeline: decode up to `workers` tensors in parallel (one
+        // thread each), then upload that wave in spec order and release
+        // its f32s before the next wave — so the during-switch host peak
+        // is one wave of dequantized tensors, never the whole model.
+        let mut bufs = Vec::with_capacity(views.len());
+        for (vwave, pwave) in views.chunks(workers).zip(params.chunks(workers)) {
+            let wave_slots = &mut slots[..vwave.len()];
+            if workers <= 1 {
+                decode_tensor(&vwave[0], &pwave[0], variant, cfg, &mut wave_slots[0])?;
+            } else {
+                std::thread::scope(|scope| -> Result<()> {
+                    let mut handles = Vec::new();
+                    for ((view, spec), slot) in
+                        vwave.iter().zip(pwave).zip(wave_slots.iter_mut())
+                    {
+                        handles.push(scope.spawn(move || -> Result<()> {
+                            decode_tensor(view, spec, variant, cfg, slot)
+                        }));
                     }
-                    Variant::FullBit => {
-                        let low = w_low.ok_or_else(|| {
-                            anyhow::anyhow!("{}: w_low not paged in", view.name())
-                        })?;
-                        w_high.unpack_into(&mut self.scratch_high);
-                        low.unpack_into(&mut self.scratch_low);
-                        nest::recompose_into(
-                            &self.scratch_high,
-                            &self.scratch_low,
-                            cfg.l(),
-                            &mut self.scratch_int,
-                        );
-                        scales.read_into(&mut self.scratch_scales);
-                        quant::dequant(&self.scratch_int, &self.scratch_scales, out);
+                    for h in handles {
+                        h.join().expect("decode worker panicked")?;
                     }
-                },
-                PayloadView::Mono { .. } => bail!("mono tensor in nest container"),
+                    Ok(())
+                })?;
             }
-            bufs.push(self.engine.upload(out, &spec.shape)?);
+            for (slot, spec) in wave_slots.iter_mut().zip(pwave) {
+                bufs.push(self.engine.upload(&slot.f32s, &spec.shape)?);
+                // release the transient host copy: the device buffer
+                // owns the weights now, and keeping dequantized tensors
+                // resident would dwarf the packed sections the ledger
+                // accounts for
+                slot.f32s = Vec::new();
+            }
         }
         self.weight_bufs = bufs;
         Ok(())

@@ -34,7 +34,6 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::container::Kind;
 use crate::nest::NestConfig;
-use crate::quant;
 use crate::store::{ModelStore, NqArchive, PayloadView, StoreBudget};
 
 use super::server::TenantExecutor;
@@ -59,10 +58,8 @@ pub struct NestTenant {
     weights: Vec<f32>,
     bias: Vec<f32>,
     forced_downgrades: u64,
-    // scratch reused across switches
-    scratch_high: Vec<i32>,
-    scratch_low: Vec<i32>,
-    scratch_int: Vec<i32>,
+    /// Raw per-channel scales, reused across switches (the fused
+    /// kernels take them as-is — no inflated copy, no i32 scratch).
     scratch_scales: Vec<f32>,
 }
 
@@ -110,9 +107,6 @@ impl NestTenant {
             weights: Vec::new(),
             bias: vec![0.0; classes],
             forced_downgrades: 0,
-            scratch_high: Vec::new(),
-            scratch_low: Vec::new(),
-            scratch_int: Vec::new(),
             scratch_scales: Vec::new(),
         };
         if let Some(b_idx) = bias {
@@ -141,9 +135,11 @@ impl NestTenant {
     }
 
     /// Dequantize the active variant's weights from the archive views
-    /// into the serving buffer. Part-bit reads only resident section-A
-    /// bytes; full-bit requires section B already attached (through the
-    /// budget — this method never attaches behind its back).
+    /// into the serving buffer — one fused kernel pass straight from
+    /// the section bytes (`crate::kernels`). Part-bit reads only
+    /// resident section-A bytes; full-bit requires section B already
+    /// attached (through the budget — this method never attaches behind
+    /// its back).
     fn rebuild(&mut self, variant: Variant) -> Result<()> {
         let mut w = std::mem::take(&mut self.weights);
         match variant {
@@ -153,13 +149,9 @@ impl NestTenant {
                 else {
                     bail!("{}: served tensor is not a nest payload", self.id);
                 };
-                w_high.unpack_into(&mut self.scratch_high);
                 scales.read_into(&mut self.scratch_scales);
                 let inflate = self.cfg.scale_inflation();
-                for s in self.scratch_scales.iter_mut() {
-                    *s *= inflate;
-                }
-                quant::dequant(&self.scratch_high, &self.scratch_scales, &mut w);
+                w_high.unpack_dequant_into(&self.scratch_scales, inflate, &mut w);
             }
             Variant::FullBit => {
                 ensure!(
@@ -176,16 +168,8 @@ impl NestTenant {
                 else {
                     bail!("{}: full-bit view is missing w_low", self.id);
                 };
-                w_high.unpack_into(&mut self.scratch_high);
-                w_low.unpack_into(&mut self.scratch_low);
-                crate::nest::recompose_into(
-                    &self.scratch_high,
-                    &self.scratch_low,
-                    self.cfg.l(),
-                    &mut self.scratch_int,
-                );
                 scales.read_into(&mut self.scratch_scales);
-                quant::dequant(&self.scratch_int, &self.scratch_scales, &mut w);
+                w_high.recompose_dequant_into(&w_low, self.cfg.l(), &self.scratch_scales, &mut w);
             }
         }
         self.weights = w;

@@ -11,7 +11,7 @@
 
 use std::net::{SocketAddr, TcpStream};
 use std::sync::Mutex;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context, Result};
 
@@ -146,6 +146,25 @@ impl FleetClient {
         sink: &mut Vec<u8>,
         max_chunks: Option<usize>,
     ) -> Result<PullOutcome> {
+        self.pull_section_deadline(model, section, offset, sink, max_chunks, None)
+    }
+
+    /// [`FleetClient::pull_section`] with a whole-transfer deadline: the
+    /// per-frame read timeout bounds one silent socket, but a slow
+    /// trickle of chunks can stretch a fetch indefinitely — the deadline
+    /// caps the *total* wall time. On expiry the pull fails with the
+    /// reached offset in the error; every acked chunk is already
+    /// recorded server-side, so a later pull resumes from there
+    /// ([`FleetClient::resume_section`]).
+    pub fn pull_section_deadline(
+        &mut self,
+        model: &str,
+        section: Section,
+        offset: u64,
+        sink: &mut Vec<u8>,
+        max_chunks: Option<usize>,
+        deadline: Option<Instant>,
+    ) -> Result<PullOutcome> {
         // a resume may only continue where the sink left off — pulling
         // from beyond it would zero-fill the gap and silently corrupt
         // the reassembled section
@@ -162,6 +181,20 @@ impl FleetClient {
         let mut pos = offset;
         let mut chunks = 0usize;
         loop {
+            if let Some(d) = deadline {
+                if Instant::now() >= d {
+                    // the transfer is mid-stream: chunk frames for this
+                    // pull may still be in flight, so this connection can
+                    // no longer be trusted for request/response — kill it
+                    // loudly rather than let a later request read a stale
+                    // chunk as its reply
+                    let _ = self.sock.shutdown(std::net::Shutdown::Both);
+                    bail!(
+                        "fetch of {model} section {section} timed out at offset {pos} \
+                         (acked chunks are resumable on a fresh connection)"
+                    );
+                }
+            }
             let (frame, _) = recv_frame(&mut self.sock, &self.meter)?;
             if frame.kind == FrameKind::Control && frame.name == "error" {
                 bail!("server error: {}", String::from_utf8_lossy(&frame.payload));
@@ -327,13 +360,25 @@ impl Default for PlaybackReport {
 /// from byte zero — an archive never holds partial sections; devices
 /// that want mid-transfer resume use [`FleetClient::pull_section`] /
 /// [`FleetClient::resume_section`] directly.
+///
+/// Every fetch runs under a whole-transfer deadline
+/// ([`RemoteSource::DEFAULT_FETCH_TIMEOUT`] unless overridden with
+/// [`RemoteSource::set_fetch_timeout`]): the per-frame read timeout only
+/// bounds one silent socket, while the deadline bounds a server that
+/// trickles chunks forever — a hung fetch surfaces as an error instead
+/// of wedging the archive open.
 pub struct RemoteSource {
     client: Mutex<FleetClient>,
     model: String,
     addr: SocketAddr,
+    fetch_timeout: Option<Duration>,
 }
 
 impl RemoteSource {
+    /// Default whole-fetch deadline: generous for a section on a slow
+    /// edge link, far below "wedged forever".
+    pub const DEFAULT_FETCH_TIMEOUT: Duration = Duration::from_secs(120);
+
     /// Connect a fresh device session and bind it to `model`.
     pub fn connect(
         addr: SocketAddr,
@@ -357,11 +402,23 @@ impl RemoteSource {
             client: Mutex::new(client),
             model: model.into(),
             addr,
+            fetch_timeout: Some(RemoteSource::DEFAULT_FETCH_TIMEOUT),
         }
     }
 
     pub fn model(&self) -> &str {
         &self.model
+    }
+
+    /// Override the per-fetch deadline (`None` disables it).
+    pub fn set_fetch_timeout(&mut self, timeout: Option<Duration>) {
+        self.fetch_timeout = timeout;
+    }
+
+    /// Builder form of [`RemoteSource::set_fetch_timeout`].
+    pub fn with_fetch_timeout(mut self, timeout: Option<Duration>) -> RemoteSource {
+        self.fetch_timeout = timeout;
+        self
     }
 
     /// Wire bytes (sent, received) of the underlying connection.
@@ -378,7 +435,30 @@ impl SectionSource for RemoteSource {
     fn fetch(&self, section: Section) -> Result<Bytes> {
         let mut c = self.client.lock().unwrap();
         let mut sink = Vec::new();
-        let out = c.pull_section(&self.model, section, 0, &mut sink, None)?;
+        let deadline = self.fetch_timeout.map(|t| Instant::now() + t);
+        let out = match c.pull_section_deadline(&self.model, section, 0, &mut sink, None, deadline)
+        {
+            Ok(out) => out,
+            Err(e) => {
+                // a failed pull aborts mid-stream (a deadline expiry even
+                // shuts the socket down), so the connection is no longer
+                // on a request/response boundary. Reconnect under the
+                // same device id (the server resumes the session) so the
+                // advertised retry starts clean; if reconnecting fails,
+                // the dead client stays and later fetches error loudly.
+                let device_id = c.device_id.clone();
+                let timeout = c
+                    .sock
+                    .read_timeout()
+                    .ok()
+                    .flatten()
+                    .unwrap_or(RemoteSource::DEFAULT_FETCH_TIMEOUT);
+                if let Ok(fresh) = FleetClient::connect(self.addr, &device_id, timeout) {
+                    *c = fresh;
+                }
+                return Err(e);
+            }
+        };
         ensure!(
             out.completed,
             "section {section} pull of {} incomplete at {}/{}",

@@ -1,0 +1,524 @@
+//! Fused switching kernels (S12): one-pass packed-bytes → f32 decode.
+//!
+//! The paper's headline operation — cheap on-device bitwidth switching
+//! (§3.3, Table 5) — is gated by how fast packed section bytes become
+//! dequantized f32 weights. The legacy composition is four passes with
+//! three transient `Vec<i32>`s per tensor:
+//!
+//! ```text
+//!   unpack(w_high) → unpack(w_low) → recompose → dequant      (legacy)
+//!   ───────────────── one fused pass ─────────────────────    (here)
+//! ```
+//!
+//! Both kernels read little-endian packed u64 words straight from
+//! section byte slices (the `.nq` payload is not 8-aligned — words are
+//! loaded with `u64::from_le_bytes`, a single unaligned mov) and write
+//! only the final f32s:
+//!
+//! * [`unpack_dequant_into`] — part-bit launch: packed `w_high` words →
+//!   `s·2^l · w_high` (Eq. 10; the inflation factor is the `scale_mul`
+//!   argument, so callers never materialize an inflated scale vector).
+//! * [`recompose_dequant_into`] — full-bit upgrade: `w_high` + `w_low`
+//!   word streams → `s·(w_high·2^l + w_low)` (Eq. 6), with **no i32
+//!   materialization** between the packed bytes and the output f32s.
+//!
+//! Each has a SWAR fast path for lane-aligned bitwidths (`bits ∣ 64`,
+//! i.e. 2/4/8/16: whole u64 words are decoded with a constant-trip
+//! unrolled mask/shift loop the compiler vectorizes, sign-extension via
+//! the xor-sub idiom instead of two shifts) and hoisted per-channel
+//! scales (when the channel count divides the lane block, the scale
+//! pattern repeats per word and is precomputed once). Everything else
+//! falls back to the scalar lane loop — same single-pass structure,
+//! per-lane refill.
+//!
+//! Numerical contract: outputs are bit-identical to the legacy
+//! composition (`bits::unpack_words_into` → `nest::recompose_into` →
+//! `quant::dequant`). Same integer ops, same f32 multiply order —
+//! `tests/kernels_prop.rs` proves it over every legal `(n, h)`,
+//! compensated and uncompensated `w_low`, and lengths not divisible by
+//! `lanes(bits)`.
+
+use crate::bits::{lanes, packed_nwords, sext};
+
+/// Max lanes per word (`bits = 2` → 32): sizes the SWAR block buffers.
+const MAX_LANES: usize = 32;
+
+/// Is `bits` lane-aligned (divides the 64-bit word evenly)?
+#[inline]
+pub fn swar_aligned(bits: u8) -> bool {
+    matches!(bits, 2 | 4 | 8 | 16)
+}
+
+#[inline(always)]
+fn word_at(bytes: &[u8], w: usize) -> u64 {
+    u64::from_le_bytes(bytes[8 * w..8 * w + 8].try_into().unwrap())
+}
+
+// ---------------------------------------------------------------------------
+// scalar lane cursor (general fallback)
+// ---------------------------------------------------------------------------
+
+/// Streaming lane decoder over packed LE words: one `u64` load per
+/// `lanes` values, shift-and-mask per lane. The state the scalar paths
+/// carry instead of materializing word or i32 vectors.
+struct LaneCursor<'a> {
+    bytes: &'a [u8],
+    /// Next word index to load.
+    next_word: usize,
+    word: u64,
+    /// Lanes left in the loaded word.
+    left: usize,
+    bits: u32,
+    lanes: usize,
+    mask: u64,
+    sign: u64,
+}
+
+impl<'a> LaneCursor<'a> {
+    fn new(bytes: &'a [u8], bits: u8) -> LaneCursor<'a> {
+        LaneCursor {
+            bytes,
+            next_word: 0,
+            word: 0,
+            left: 0,
+            bits: bits as u32,
+            lanes: lanes(bits),
+            mask: (1u64 << bits) - 1,
+            sign: 1u64 << (bits - 1),
+        }
+    }
+
+    #[inline(always)]
+    fn next(&mut self) -> i32 {
+        if self.left == 0 {
+            self.word = word_at(self.bytes, self.next_word);
+            self.next_word += 1;
+            self.left = self.lanes;
+        }
+        let v = sext(self.word & self.mask, self.sign);
+        self.word >>= self.bits;
+        self.left -= 1;
+        v
+    }
+}
+
+// ---------------------------------------------------------------------------
+// part-bit launch kernel: packed → dequantized f32
+// ---------------------------------------------------------------------------
+
+/// Fused one-pass decode: `len` packed `bits`-bit values (LE u64 words
+/// in `words`) → `value · scales[i % c] · scale_mul` appended to `out`
+/// (cleared first). `scale_mul` is 1.0 for mono weights and `2^l` for
+/// the part-bit launch (Eq. 10) — the caller never builds an inflated
+/// scale vector.
+///
+/// Bit-identical to `unpack_words_into` → scale-inflate → `dequant`.
+pub fn unpack_dequant_into(
+    words: &[u8],
+    bits: u8,
+    len: usize,
+    scales: &[f32],
+    scale_mul: f32,
+    out: &mut Vec<f32>,
+) {
+    out.clear();
+    if len == 0 {
+        return;
+    }
+    assert!(!scales.is_empty(), "unpack_dequant_into: empty scales");
+    assert!(
+        words.len() >= 8 * packed_nwords(len, bits),
+        "unpack_dequant_into: {} word bytes < {} needed for INT{bits} x {len}",
+        words.len(),
+        8 * packed_nwords(len, bits)
+    );
+    out.reserve(len);
+    match bits {
+        2 => unpack_dequant_swar::<2>(words, len, scales, scale_mul, out),
+        4 => unpack_dequant_swar::<4>(words, len, scales, scale_mul, out),
+        8 => unpack_dequant_swar::<8>(words, len, scales, scale_mul, out),
+        16 => unpack_dequant_swar::<16>(words, len, scales, scale_mul, out),
+        _ => unpack_dequant_scalar(words, bits, len, scales, scale_mul, out),
+    }
+}
+
+fn unpack_dequant_scalar(
+    words: &[u8],
+    bits: u8,
+    len: usize,
+    scales: &[f32],
+    scale_mul: f32,
+    out: &mut Vec<f32>,
+) {
+    let mut cur = LaneCursor::new(words, bits);
+    let c = scales.len();
+    let mut done = 0;
+    // channel-sized row chunks: the channel index is the position in the
+    // chunk, so there is no per-element modulo
+    while done < len {
+        let take = c.min(len - done);
+        for &s in &scales[..take] {
+            out.push(cur.next() as f32 * (s * scale_mul));
+        }
+        done += take;
+    }
+}
+
+/// SWAR path (`BITS ∣ 64`): constant-trip unrolled mask/shift over whole
+/// words; per-channel scales hoisted into a per-word table when the
+/// channel count divides the lane count.
+fn unpack_dequant_swar<const BITS: u32>(
+    words: &[u8],
+    len: usize,
+    scales: &[f32],
+    scale_mul: f32,
+    out: &mut Vec<f32>,
+) {
+    let n_lanes = (64 / BITS) as usize;
+    let mask = (1u64 << BITS) - 1;
+    let sign = 1u64 << (BITS - 1);
+    let c = scales.len();
+    let full = len / n_lanes;
+    let rem = len - full * n_lanes;
+    if c <= n_lanes && n_lanes % c == 0 {
+        // channel phase repeats exactly per word: hoist scales (with the
+        // inflation folded in) into one table, indexed by lane
+        let mut tbl = [0f32; MAX_LANES];
+        for (i, t) in tbl.iter_mut().take(n_lanes).enumerate() {
+            *t = scales[i % c] * scale_mul;
+        }
+        for w in 0..full {
+            let mut word = word_at(words, w);
+            for &t in tbl.iter().take(n_lanes) {
+                out.push(sext(word & mask, sign) as f32 * t);
+                word >>= BITS;
+            }
+        }
+        if rem > 0 {
+            let mut word = word_at(words, full);
+            for &t in tbl.iter().take(rem) {
+                out.push(sext(word & mask, sign) as f32 * t);
+                word >>= BITS;
+            }
+        }
+    } else {
+        // general channel stride: running channel cursor, still one
+        // word load per `n_lanes` outputs
+        let mut ch = 0usize;
+        for w in 0..full {
+            let mut word = word_at(words, w);
+            for _ in 0..n_lanes {
+                out.push(sext(word & mask, sign) as f32 * (scales[ch] * scale_mul));
+                word >>= BITS;
+                ch += 1;
+                if ch == c {
+                    ch = 0;
+                }
+            }
+        }
+        if rem > 0 {
+            let mut word = word_at(words, full);
+            for _ in 0..rem {
+                out.push(sext(word & mask, sign) as f32 * (scales[ch] * scale_mul));
+                word >>= BITS;
+                ch += 1;
+                if ch == c {
+                    ch = 0;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// full-bit upgrade kernel: w_high + w_low word streams → f32
+// ---------------------------------------------------------------------------
+
+/// Fused full-bit upgrade decode: `len` values recomposed from the
+/// packed `w_high` (INT `h_bits`) and `w_low` (INT `low_bits`) word
+/// streams as `s · (w_high·2^l + w_low)` (Eq. 6), appended to `out`
+/// (cleared first). No intermediate i32 vectors exist at any point.
+///
+/// Bit-identical to `unpack → unpack → recompose_into → dequant`.
+/// `low_bits` is `l+1` for compensated residuals (the `.nq` on-disk
+/// format) and `l` for uncompensated ones — the kernel only requires
+/// both streams to hold `len` values.
+#[allow(clippy::too_many_arguments)]
+pub fn recompose_dequant_into(
+    high_words: &[u8],
+    h_bits: u8,
+    low_words: &[u8],
+    low_bits: u8,
+    l: u8,
+    len: usize,
+    scales: &[f32],
+    out: &mut Vec<f32>,
+) {
+    out.clear();
+    if len == 0 {
+        return;
+    }
+    assert!(!scales.is_empty(), "recompose_dequant_into: empty scales");
+    assert!(
+        high_words.len() >= 8 * packed_nwords(len, h_bits),
+        "recompose_dequant_into: {} w_high bytes < {} needed for INT{h_bits} x {len}",
+        high_words.len(),
+        8 * packed_nwords(len, h_bits)
+    );
+    assert!(
+        low_words.len() >= 8 * packed_nwords(len, low_bits),
+        "recompose_dequant_into: {} w_low bytes < {} needed for INT{low_bits} x {len}",
+        low_words.len(),
+        8 * packed_nwords(len, low_bits)
+    );
+    out.reserve(len);
+    if swar_aligned(h_bits) && swar_aligned(low_bits) {
+        recompose_dequant_swar(high_words, h_bits, low_words, low_bits, l, len, scales, out);
+    } else {
+        recompose_dequant_scalar(high_words, h_bits, low_words, low_bits, l, len, scales, out);
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn recompose_dequant_scalar(
+    high_words: &[u8],
+    h_bits: u8,
+    low_words: &[u8],
+    low_bits: u8,
+    l: u8,
+    len: usize,
+    scales: &[f32],
+    out: &mut Vec<f32>,
+) {
+    let mut hc = LaneCursor::new(high_words, h_bits);
+    let mut lc = LaneCursor::new(low_words, low_bits);
+    let shift = l as u32;
+    let c = scales.len();
+    let mut done = 0;
+    while done < len {
+        let take = c.min(len - done);
+        for &s in &scales[..take] {
+            let v = (hc.next() << shift) + lc.next();
+            out.push(v as f32 * s);
+        }
+        done += take;
+    }
+}
+
+/// Decode `n_words` whole words starting at word `first` into `dst`
+/// (`dst.len() == n_words · lanes`), SWAR-unrolled per word.
+fn decode_words_swar_inner<const BITS: u32>(
+    bytes: &[u8],
+    first: usize,
+    n_words: usize,
+    dst: &mut [i32],
+) {
+    let n_lanes = (64 / BITS) as usize;
+    let mask = (1u64 << BITS) - 1;
+    let sign = 1u64 << (BITS - 1);
+    debug_assert_eq!(dst.len(), n_words * n_lanes);
+    for (w, chunk) in dst.chunks_exact_mut(n_lanes).enumerate() {
+        let mut word = word_at(bytes, first + w);
+        for d in chunk {
+            *d = sext(word & mask, sign);
+            word >>= BITS;
+        }
+    }
+}
+
+fn decode_words_swar(bytes: &[u8], bits: u8, first: usize, n_words: usize, dst: &mut [i32]) {
+    match bits {
+        2 => decode_words_swar_inner::<2>(bytes, first, n_words, dst),
+        4 => decode_words_swar_inner::<4>(bytes, first, n_words, dst),
+        8 => decode_words_swar_inner::<8>(bytes, first, n_words, dst),
+        16 => decode_words_swar_inner::<16>(bytes, first, n_words, dst),
+        _ => unreachable!("decode_words_swar on non-aligned bits {bits}"),
+    }
+}
+
+/// SWAR pair path: both bitwidths divide 64, so their lane counts are
+/// powers of two and the smaller divides the larger — a block of
+/// `max(h_lanes, low_lanes)` elements is whole words of *both* streams.
+/// Each block decodes into two stack buffers (≤ 32 lanes, registers/L1)
+/// and combines straight into the output f32s.
+#[allow(clippy::too_many_arguments)]
+fn recompose_dequant_swar(
+    high_words: &[u8],
+    h_bits: u8,
+    low_words: &[u8],
+    low_bits: u8,
+    l: u8,
+    len: usize,
+    scales: &[f32],
+    out: &mut Vec<f32>,
+) {
+    let h_lanes = lanes(h_bits);
+    let l_lanes = lanes(low_bits);
+    let block = h_lanes.max(l_lanes);
+    let shift = l as u32;
+    let c = scales.len();
+    let mut hbuf = [0i32; MAX_LANES];
+    let mut lbuf = [0i32; MAX_LANES];
+    let hoist = c <= block && block % c == 0;
+    let mut tbl = [0f32; MAX_LANES];
+    if hoist {
+        // block boundaries land on channel boundaries: one scale table
+        for (i, t) in tbl.iter_mut().take(block).enumerate() {
+            *t = scales[i % c];
+        }
+    }
+    let (mut done, mut hw, mut lw, mut ch) = (0usize, 0usize, 0usize, 0usize);
+    while done < len {
+        let take = block.min(len - done);
+        let need_hw = take.div_ceil(h_lanes);
+        let need_lw = take.div_ceil(l_lanes);
+        decode_words_swar(high_words, h_bits, hw, need_hw, &mut hbuf[..need_hw * h_lanes]);
+        decode_words_swar(low_words, low_bits, lw, need_lw, &mut lbuf[..need_lw * l_lanes]);
+        hw += need_hw;
+        lw += need_lw;
+        if hoist {
+            for ((&h, &lo), &t) in hbuf[..take].iter().zip(&lbuf[..take]).zip(&tbl[..take]) {
+                out.push(((h << shift) + lo) as f32 * t);
+            }
+        } else {
+            for (&h, &lo) in hbuf[..take].iter().zip(&lbuf[..take]) {
+                out.push(((h << shift) + lo) as f32 * scales[ch]);
+                ch += 1;
+                if ch == c {
+                    ch = 0;
+                }
+            }
+        }
+        done += take;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bits::{int_range, PackedTensor};
+    use crate::nest;
+    use crate::quant;
+
+    /// Legacy composition the kernels must match bit-for-bit.
+    fn legacy_unpack_dequant(t: &PackedTensor, scales: &[f32], mul: f32) -> Vec<f32> {
+        let mut ints = Vec::new();
+        t.unpack_into(&mut ints);
+        let inflated: Vec<f32> = scales.iter().map(|&s| s * mul).collect();
+        let mut out = Vec::new();
+        quant::dequant(&ints, &inflated, &mut out);
+        out
+    }
+
+    fn legacy_recompose_dequant(
+        hi: &PackedTensor,
+        lo: &PackedTensor,
+        l: u8,
+        scales: &[f32],
+    ) -> Vec<f32> {
+        let (mut hs, mut ls, mut rec) = (Vec::new(), Vec::new(), Vec::new());
+        hi.unpack_into(&mut hs);
+        lo.unpack_into(&mut ls);
+        nest::recompose_into(&hs, &ls, l, &mut rec);
+        let mut out = Vec::new();
+        quant::dequant(&rec, scales, &mut out);
+        out
+    }
+
+    fn toy_scales(c: usize) -> Vec<f32> {
+        (0..c).map(|i| 0.01 + 0.003 * i as f32).collect()
+    }
+
+    #[test]
+    fn unpack_dequant_matches_legacy_all_bits() {
+        for bits in 2..=16u8 {
+            let (lo, hi) = int_range(bits);
+            // length deliberately NOT a multiple of lanes(bits)
+            let len = 5 * lanes(bits) + 3;
+            let vals: Vec<i32> = (0..len as i32)
+                .map(|i| lo + (i * 37) % (hi - lo + 1))
+                .collect();
+            let t = PackedTensor::pack(&vals, bits).unwrap();
+            let bytes = t.to_le_bytes();
+            for c in [1usize, 2, 3, 7, len] {
+                let scales = toy_scales(c);
+                for mul in [1.0f32, 16.0] {
+                    let want = legacy_unpack_dequant(&t, &scales, mul);
+                    let mut got = Vec::new();
+                    unpack_dequant_into(&bytes, bits, len, &scales, mul, &mut got);
+                    assert_eq!(got, want, "bits={bits} c={c} mul={mul}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn recompose_dequant_matches_legacy_grid() {
+        // (7|4), (11|8), (5|2) hit the paired-SWAR path (both streams
+        // lane-aligned); the rest cover mixed and fully scalar fallbacks
+        for (n, h) in [
+            (8u8, 4u8),
+            (8, 5),
+            (8, 6),
+            (6, 3),
+            (16, 8),
+            (7, 3),
+            (4, 2),
+            (7, 4),
+            (11, 8),
+            (5, 2),
+        ] {
+            let cfg = nest::NestConfig::new(n, h).unwrap();
+            let (lo, hi) = int_range(n);
+            let len = 3 * lanes(h) * lanes(cfg.low_bits()) + 11;
+            let vals: Vec<i32> = (0..len as i32)
+                .map(|i| lo + (i * 101) % (hi - lo + 1))
+                .collect();
+            let (hs, ls) = nest::decompose(&vals, cfg, nest::Rounding::BitShift, true);
+            let th = PackedTensor::pack(&hs, h).unwrap();
+            let tl = PackedTensor::pack(&ls, cfg.low_bits()).unwrap();
+            let (hb, lb) = (th.to_le_bytes(), tl.to_le_bytes());
+            for c in [1usize, 4, 5, 64] {
+                let scales = toy_scales(c);
+                let want = legacy_recompose_dequant(&th, &tl, cfg.l(), &scales);
+                let mut got = Vec::new();
+                recompose_dequant_into(
+                    &hb,
+                    h,
+                    &lb,
+                    cfg.low_bits(),
+                    cfg.l(),
+                    len,
+                    &scales,
+                    &mut got,
+                );
+                assert_eq!(got, want, "INT({n}|{h}) c={c}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_buffer_reuse() {
+        let mut out = vec![1.0f32; 8];
+        unpack_dequant_into(&[], 4, 0, &[], 1.0, &mut out);
+        assert!(out.is_empty());
+        recompose_dequant_into(&[], 4, &[], 5, 4, 0, &[], &mut out);
+        assert!(out.is_empty());
+        // reuse: second decode overwrites, never appends
+        let t = PackedTensor::pack(&[1, -2, 3], 8).unwrap();
+        let bytes = t.to_le_bytes();
+        unpack_dequant_into(&bytes, 8, 3, &[2.0], 1.0, &mut out);
+        assert_eq!(out, vec![2.0, -4.0, 6.0]);
+        unpack_dequant_into(&bytes, 8, 3, &[1.0], 1.0, &mut out);
+        assert_eq!(out, vec![1.0, -2.0, 3.0]);
+    }
+
+    #[test]
+    fn swar_alignment_table() {
+        let aligned: Vec<u8> = (2..=16).filter(|&b| swar_aligned(b)).collect();
+        assert_eq!(aligned, vec![2, 4, 8, 16]);
+        for b in aligned {
+            assert_eq!(64 % b as usize, 0);
+        }
+    }
+}

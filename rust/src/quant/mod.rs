@@ -45,14 +45,21 @@ fn rtn(t: f64) -> f64 {
     }
 }
 
-/// RTN quantization with per-channel scales.
+/// RTN quantization with per-channel scales. Iterates channel-sized row
+/// chunks — the channel index is the position in the chunk, so the hot
+/// loop carries no per-element `i % c` division.
 pub fn quantize_rtn(w: &[f32], scales: &[f32], bits: u8) -> Vec<i32> {
     let (lo, hi) = int_range(bits);
-    let c = scales.len();
-    w.iter()
-        .enumerate()
-        .map(|(i, &v)| (rtn((v / scales[i % c]) as f64) as i32).clamp(lo, hi))
-        .collect()
+    let mut out = Vec::with_capacity(w.len());
+    if w.is_empty() {
+        return out;
+    }
+    for row in w.chunks(scales.len()) {
+        for (&v, &s) in row.iter().zip(scales) {
+            out.push((rtn((v / s) as f64) as i32).clamp(lo, hi));
+        }
+    }
+    out
 }
 
 /// SQuant-style flip-based adaptive rounding (diagonal-Hessian objective):
@@ -114,16 +121,18 @@ pub fn quantize_adaptive(w: &[f32], scales: &[f32], bits: u8) -> Vec<i32> {
 }
 
 /// Dequantize: `ŵ = s · w_int` with per-channel scales (Eq. 3).
+/// Channel-sized row chunks instead of a per-element `i % c` (the
+/// remaining non-fused callers — fleet re-quantize, report tables —
+/// keep this path hot; the switch path uses `crate::kernels`).
 pub fn dequant(w_int: &[i32], scales: &[f32], out: &mut Vec<f32>) {
-    let c = scales.len();
     out.clear();
+    if w_int.is_empty() {
+        return;
+    }
     out.reserve(w_int.len());
-    out.extend(
-        w_int
-            .iter()
-            .enumerate()
-            .map(|(i, &v)| v as f32 * scales[i % c]),
-    );
+    for row in w_int.chunks(scales.len()) {
+        out.extend(row.iter().zip(scales).map(|(&v, &s)| v as f32 * s));
+    }
 }
 
 /// Secondary (nesting) quantization — Step 2 of Algorithm 1: derive

@@ -419,10 +419,42 @@ impl<'m> PackedView<'m> {
         bits::sign_extend(field, self.bits)
     }
 
-    /// Unpack into a caller buffer — the switching hot path's only
-    /// per-element pass over the packed bytes.
+    /// Unpack into a caller buffer (i32 intermediate — compat and the
+    /// non-dequantizing consumers; the switch path uses the fused
+    /// kernels below).
     pub fn unpack_into(&self, out: &mut Vec<i32>) {
         bits::unpack_words_into(self.words_iter(), self.bits, self.count, out);
+    }
+
+    /// Fused one-pass decode straight from the section bytes:
+    /// `out[i] = value · scales[i % c] · scale_mul` — the part-bit
+    /// launch kernel (`scale_mul = 2^l`, Eq. 10) and the mono decode
+    /// (`scale_mul = 1`). See [`crate::kernels::unpack_dequant_into`].
+    pub fn unpack_dequant_into(&self, scales: &[f32], scale_mul: f32, out: &mut Vec<f32>) {
+        crate::kernels::unpack_dequant_into(
+            self.bytes, self.bits, self.count, scales, scale_mul, out,
+        );
+    }
+
+    /// Fused full-bit upgrade decode: `self` as the packed `w_high`
+    /// stream plus `low` as the packed `w_low` stream →
+    /// `out[i] = s · (w_high·2^l + w_low)` in one pass with no i32
+    /// materialization. See [`crate::kernels::recompose_dequant_into`].
+    pub fn recompose_dequant_into(
+        &self,
+        low: &PackedView<'_>,
+        l: u8,
+        scales: &[f32],
+        out: &mut Vec<f32>,
+    ) {
+        assert_eq!(
+            self.count, low.count,
+            "recompose_dequant_into: w_high has {} values, w_low {}",
+            self.count, low.count
+        );
+        crate::kernels::recompose_dequant_into(
+            self.bytes, self.bits, low.bytes, low.bits, l, self.count, scales, out,
+        );
     }
 
     pub fn unpack(&self) -> Vec<i32> {

@@ -54,6 +54,22 @@ impl Bench {
         }
     }
 
+    /// Per-case wall budget from `NQ_BENCH_BUDGET_MS` (CI caps the
+    /// iteration budget this way), else [`Bench::quick`].
+    pub fn from_env() -> Self {
+        match std::env::var("NQ_BENCH_BUDGET_MS")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+        {
+            Some(ms) => Bench {
+                warmup: Duration::from_millis((ms / 5).clamp(10, 500)),
+                budget: Duration::from_millis(ms.max(1)),
+                ..Bench::default()
+            },
+            None => Bench::quick(),
+        }
+    }
+
     /// Time `f`; returns the summary and prints a `bench:` line.
     pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Summary {
         // warmup

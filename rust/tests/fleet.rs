@@ -231,18 +231,27 @@ fn paged_switch_is_bit_identical_to_cold_load() {
     assert!(arch.release_b());
     let full = arch.full_bit().unwrap();
 
-    // recomposed full-bit weights match the cold load bit-for-bit
+    // full-bit weights decoded through the fused upgrade kernel match
+    // the cold load bit-for-bit — and the fused one-pass decode matches
+    // the legacy unpack→recompose→dequant composition on the wire bytes
     for (tp, tc) in full.tensors().zip(cold.tensors()) {
         if let (
-            PayloadView::Nest { w_high: h1, w_low: Some(l1), .. },
-            PayloadView::Nest { w_high: h2, w_low: Some(l2), .. },
+            PayloadView::Nest { scales: s1, w_high: h1, w_low: Some(l1) },
+            PayloadView::Nest { scales: s2, w_high: h2, w_low: Some(l2) },
         ) = (tp.payload(), tc.payload())
         {
-            let mut rec_paged = Vec::new();
-            let mut rec_cold = Vec::new();
-            nest::recompose_into(&h1.unpack(), &l1.unpack(), cfg.l(), &mut rec_paged);
-            nest::recompose_into(&h2.unpack(), &l2.unpack(), cfg.l(), &mut rec_cold);
-            assert_eq!(rec_paged, rec_cold);
+            let (mut sc_paged, mut sc_cold) = (Vec::new(), Vec::new());
+            s1.read_into(&mut sc_paged);
+            s2.read_into(&mut sc_cold);
+            let (mut w_paged, mut w_cold) = (Vec::new(), Vec::new());
+            h1.recompose_dequant_into(&l1, cfg.l(), &sc_paged, &mut w_paged);
+            h2.recompose_dequant_into(&l2, cfg.l(), &sc_cold, &mut w_cold);
+            assert_eq!(w_paged, w_cold);
+            let mut rec = Vec::new();
+            nest::recompose_into(&h1.unpack(), &l1.unpack(), cfg.l(), &mut rec);
+            let mut legacy = Vec::new();
+            nestquant::quant::dequant(&rec, &sc_paged, &mut legacy);
+            assert_eq!(w_paged, legacy, "fused ≡ legacy on paged bytes");
         }
     }
 
@@ -255,6 +264,35 @@ fn paged_switch_is_bit_identical_to_cold_load() {
     assert_eq!(s.b_bytes_fetched, 2 * b_len);
     drop(full);
     drop(arch);
+    handle.stop();
+}
+
+/// Remote-source hardening: a fetch runs under a whole-transfer
+/// deadline, so a stalled transfer errors out (resumably) instead of
+/// wedging the archive open forever.
+#[test]
+fn remote_fetch_deadline_fails_fast_and_recovers() {
+    let dir = temp_dir("fetchto");
+    let (path, a_len, _b) = write_synth(&dir, "m0", 9, 8, 4);
+    let mut zoo = Zoo::new();
+    zoo.add("m0", &path);
+    let handle = FleetServer::start(zoo, small_chunk_config()).unwrap();
+
+    // an already-expired deadline must error — not hang — even against
+    // a healthy server, and the error must advertise resumability
+    let mut source = RemoteSource::connect(handle.addr, "impatient", "m0", TIMEOUT)
+        .unwrap()
+        .with_fetch_timeout(Some(Duration::ZERO));
+    let err = source.fetch(Section::A).unwrap_err().to_string();
+    assert!(err.contains("timed out"), "unexpected error: {err}");
+
+    // recovery on the SAME source: the aborted pull poisoned its
+    // connection, so fetch must have reconnected under the hood — with a
+    // sane deadline the very next fetch succeeds with clean bytes
+    source.set_fetch_timeout(Some(TIMEOUT));
+    let a = source.fetch(Section::A).unwrap();
+    assert_eq!(a.len() as u64, a_len);
+    drop(source);
     handle.stop();
 }
 

@@ -1,0 +1,196 @@
+//! Property tests: the fused one-pass switching kernels are
+//! bit-identical to the scalar `unpack → recompose → dequant`
+//! composition — over every legal `(n, h)`, compensated and
+//! uncompensated `w_low`, channel counts that do and don't divide the
+//! lane block, and lengths not divisible by `lanes(bits)` (the
+//! padded-final-word edge).
+
+use nestquant::bits::{int_range, lanes, PackedTensor};
+use nestquant::container;
+use nestquant::kernels;
+use nestquant::nest::{self, NestConfig, Rounding};
+use nestquant::quant;
+use nestquant::store::{NqArchive, PayloadView};
+use nestquant::util::prng::Rng;
+use nestquant::util::propcheck;
+
+/// Scales that exercise the real range (positive, mixed magnitudes).
+fn gen_scales(r: &mut Rng, c: usize) -> Vec<f32> {
+    (0..c).map(|_| (r.f64() * 0.1 + 1e-4) as f32).collect()
+}
+
+/// Legacy part-bit composition: unpack to i32, inflate a scale copy,
+/// dequant.
+fn legacy_unpack_dequant(t: &PackedTensor, scales: &[f32], mul: f32) -> Vec<f32> {
+    let mut ints = Vec::new();
+    t.unpack_into(&mut ints);
+    let inflated: Vec<f32> = scales.iter().map(|&s| s * mul).collect();
+    let mut out = Vec::new();
+    quant::dequant(&ints, &inflated, &mut out);
+    out
+}
+
+/// Legacy four-pass upgrade composition: unpack ×2, recompose, dequant.
+fn legacy_recompose_dequant(
+    hi: &PackedTensor,
+    lo: &PackedTensor,
+    l: u8,
+    scales: &[f32],
+) -> Vec<f32> {
+    let (mut hs, mut ls, mut rec) = (Vec::new(), Vec::new(), Vec::new());
+    hi.unpack_into(&mut hs);
+    lo.unpack_into(&mut ls);
+    nest::recompose_into(&hs, &ls, l, &mut rec);
+    let mut out = Vec::new();
+    quant::dequant(&rec, scales, &mut out);
+    out
+}
+
+/// Lengths biased to straddle word boundaries of `bits` (±1 around lane
+/// multiples plus a plain random tail).
+fn gen_len(r: &mut Rng, scale: f64, bits: u8) -> usize {
+    let n_lanes = lanes(bits);
+    let base = ((300.0 * scale) as usize).max(1);
+    match r.index(4) {
+        0 => (r.index(6) + 1) * n_lanes + 1,
+        1 => ((r.index(6) + 1) * n_lanes).saturating_sub(1).max(1),
+        2 => (r.index(6) + 1) * n_lanes,
+        _ => r.index(base) + 1,
+    }
+}
+
+/// Part-bit launch kernel ≡ legacy composition for every packable
+/// bitwidth (SWAR-aligned and not), every channel phase, and the
+/// padded-final-word edge.
+#[test]
+fn fused_unpack_dequant_equals_composition() {
+    for bits in 2..=16u8 {
+        propcheck::check(
+            &format!("kernels-unpack-dequant-{bits}"),
+            40,
+            move |r: &mut Rng, scale| {
+                let len = gen_len(r, scale, bits);
+                let (lo, hi) = int_range(bits);
+                let vals: Vec<i32> =
+                    (0..len).map(|_| r.int(lo as i64, hi as i64) as i32).collect();
+                let opts = [1usize, 2, 3, 4, 7, 8, 16, 32, 33, len.max(1)];
+                let c = opts[r.index(opts.len())];
+                let scales = gen_scales(r, c);
+                let mul = *[1.0f32, 2.0, 16.0, 0.5].get(r.index(4)).unwrap();
+                (vals, scales, mul)
+            },
+            move |(vals, scales, mul)| {
+                let t = PackedTensor::pack(vals, bits).unwrap();
+                let bytes = t.to_le_bytes();
+                let mut got = Vec::new();
+                kernels::unpack_dequant_into(&bytes, bits, vals.len(), scales, *mul, &mut got);
+                got == legacy_unpack_dequant(&t, scales, *mul)
+            },
+        );
+    }
+}
+
+/// Upgrade kernel ≡ legacy four-pass composition over every legal
+/// `(n, h)` with a packable `w_high`, both compensated (`l+1` bits, the
+/// on-disk format) and uncompensated (`l` bits) residuals, and every
+/// rounding method for the decomposition.
+#[test]
+fn fused_recompose_dequant_equals_composition_all_nh() {
+    for n in 3..=16u8 {
+        for h in 2..n {
+            let cfg = NestConfig::new(n, h).unwrap();
+            for compensate in [true, false] {
+                let low_bits = if compensate { cfg.low_bits() } else { cfg.l() };
+                if low_bits < 2 {
+                    continue; // 1-bit residuals are not packable
+                }
+                propcheck::check(
+                    &format!("kernels-recompose-n{n}-h{h}-comp{compensate}"),
+                    6,
+                    move |r: &mut Rng, scale| {
+                        let len = gen_len(r, scale, if r.bool() { h } else { low_bits });
+                        let (lo, hi) = int_range(n);
+                        let vals: Vec<i32> =
+                            (0..len).map(|_| r.int(lo as i64, hi as i64) as i32).collect();
+                        let opts = [1usize, 2, 3, 5, 8, 16, 64];
+                        let scales = gen_scales(r, opts[r.index(opts.len())]);
+                        let method = *[Rounding::BitShift, Rounding::Rtn, Rounding::Up]
+                            .get(r.index(3))
+                            .unwrap();
+                        (vals, scales, method)
+                    },
+                    move |(vals, scales, method)| {
+                        let (hs, ls) = nest::decompose(vals, cfg, *method, compensate);
+                        let th = PackedTensor::pack(&hs, h).unwrap();
+                        let tl = PackedTensor::pack(&ls, low_bits).unwrap();
+                        let mut got = Vec::new();
+                        kernels::recompose_dequant_into(
+                            &th.to_le_bytes(),
+                            h,
+                            &tl.to_le_bytes(),
+                            low_bits,
+                            cfg.l(),
+                            vals.len(),
+                            scales,
+                            &mut got,
+                        );
+                        got == legacy_recompose_dequant(&th, &tl, cfg.l(), scales)
+                    },
+                );
+            }
+        }
+    }
+}
+
+/// The store's fused view entry points equal the legacy view
+/// composition on a real archive — both variants, straight from the
+/// section bytes of a synthetic container grid.
+#[test]
+fn packed_view_fused_paths_equal_composition() {
+    for (seed, n, h, rows, c) in [
+        (11u64, 8u8, 4u8, 33, 6),
+        (12, 8, 5, 64, 16),
+        (13, 6, 3, 47, 5),
+        (14, 16, 8, 21, 4),
+        (15, 5, 2, 130, 1),
+    ] {
+        let cont = container::synthetic_nest(seed, n, h, rows, c).unwrap();
+        let arch = NqArchive::from_container(&cont).unwrap();
+        let cfg = NestConfig::new(n, h).unwrap();
+        let full = arch.full_bit().unwrap();
+        for t in full.tensors() {
+            let PayloadView::Nest {
+                scales,
+                w_high,
+                w_low: Some(w_low),
+            } = t.payload()
+            else {
+                continue;
+            };
+            let mut sc = Vec::new();
+            scales.read_into(&mut sc);
+
+            // part-bit: fused vs unpack + inflate + dequant
+            let mut fused = Vec::new();
+            w_high.unpack_dequant_into(&sc, cfg.scale_inflation(), &mut fused);
+            let mut ints = Vec::new();
+            w_high.unpack_into(&mut ints);
+            let inflated: Vec<f32> =
+                sc.iter().map(|&s| s * cfg.scale_inflation()).collect();
+            let mut legacy = Vec::new();
+            quant::dequant(&ints, &inflated, &mut legacy);
+            assert_eq!(fused, legacy, "part-bit INT({n}|{h}) {}", t.name());
+
+            // full-bit: fused vs the four-pass composition
+            let mut fused_full = Vec::new();
+            w_high.recompose_dequant_into(&w_low, cfg.l(), &sc, &mut fused_full);
+            let (mut hs, mut ls, mut rec) = (Vec::new(), Vec::new(), Vec::new());
+            w_high.unpack_into(&mut hs);
+            w_low.unpack_into(&mut ls);
+            nest::recompose_into(&hs, &ls, cfg.l(), &mut rec);
+            let mut legacy_full = Vec::new();
+            quant::dequant(&rec, &sc, &mut legacy_full);
+            assert_eq!(fused_full, legacy_full, "full-bit INT({n}|{h}) {}", t.name());
+        }
+    }
+}
