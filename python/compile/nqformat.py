@@ -25,6 +25,13 @@ Layout:
              kind 1: u8 bits    | u32 n_words | u64×n_words  (packed w_int)
   section B (kind 0 only), per quantized tensor in section-A order:
     u8 low_bits | u32 n_words | u64×n_words                 (packed w_low)
+  trailer (optional, appended by the packer):
+    magic "NQCKSUM1" | u64 crc64_xz(section A) | u64 crc64_xz(section B)
+
+The trailer carries per-section CRC-64/XZ integrity checksums, verified
+by the Rust store at section fetch time and by the fleet client after
+chunked reassembly. Readers accept its absence (pre-trailer artifacts).
+Section byte ranges always exclude the trailer.
 """
 
 from __future__ import annotations
@@ -40,6 +47,29 @@ from . import packbits
 MAGIC = b"NESTQNT1"
 VERSION = 1
 KIND_NEST, KIND_MONO, KIND_FP32 = 0, 1, 2
+
+TRAILER_MAGIC = b"NQCKSUM1"
+TRAILER_LEN = 24
+
+_CRC64_POLY = 0xC96C5795D7870F42  # CRC-64/XZ, reflected
+_CRC64_TABLE = None
+
+
+def crc64(data: bytes) -> int:
+    """CRC-64/XZ — bit-identical to rust/src/util/crc64.rs."""
+    global _CRC64_TABLE
+    if _CRC64_TABLE is None:
+        table = []
+        for i in range(256):
+            crc = i
+            for _ in range(8):
+                crc = (crc >> 1) ^ _CRC64_POLY if crc & 1 else crc >> 1
+            table.append(crc)
+        _CRC64_TABLE = table
+    crc = 0xFFFFFFFFFFFFFFFF
+    for b in data:
+        crc = _CRC64_TABLE[(crc ^ b) & 0xFF] ^ (crc >> 8)
+    return crc ^ 0xFFFFFFFFFFFFFFFF
 
 
 def _w(buf: io.BytesIO, fmt: str, *vals) -> None:
@@ -118,14 +148,15 @@ def write_container(path: str, kind: int, name: str, tensors: list[Tensor],
     b = sec_b.getvalue()
     # section_b_offset goes right after num_tensors; account for its 8 bytes
     off = len(header) + 8 + len(a) if b else 0
+    sec_a_bytes = header + struct.pack("<Q", off) + a
+    trailer = TRAILER_MAGIC + struct.pack("<QQ", crc64(sec_a_bytes), crc64(b))
     with open(path, "wb") as f:
-        f.write(header)
-        f.write(struct.pack("<Q", off))
-        f.write(a)
+        f.write(sec_a_bytes)
         f.write(b)
+        f.write(trailer)
     return {
-        "total": len(header) + 8 + len(a) + len(b),
-        "section_a": len(header) + 8 + len(a),
+        "total": len(sec_a_bytes) + len(b) + TRAILER_LEN,
+        "section_a": len(sec_a_bytes),
         "section_b": len(b),
     }
 
@@ -158,6 +189,11 @@ class _R:
 def read_container(path: str, *, part_bit_only: bool = False) -> dict:
     """Parse a container back into numpy (tests + tooling; Rust has its own)."""
     data = open(path, "rb").read()
+    checksums = None
+    if len(data) >= TRAILER_LEN and data[-TRAILER_LEN:][:8] == TRAILER_MAGIC:
+        a_crc, b_crc = struct.unpack("<QQ", data[-16:])
+        data = data[:-TRAILER_LEN]
+        checksums = (a_crc, b_crc)
     r = _R(data)
     assert r.raw(8) == MAGIC, "bad magic"
     version = r.take("I")
@@ -167,6 +203,10 @@ def read_container(path: str, *, part_bit_only: bool = False) -> dict:
     meta = json.loads(r.bytes_().decode() or "{}")
     num = r.take("I")
     off_b = r.take("Q")
+    if checksums is not None:
+        a_end = off_b if off_b else len(data)
+        assert crc64(data[:a_end]) == checksums[0], "section A checksum mismatch"
+        assert crc64(data[a_end:]) == checksums[1], "section B checksum mismatch"
     tensors = []
     for _ in range(num):
         tname = r.bytes_().decode()
@@ -201,5 +241,5 @@ def read_container(path: str, *, part_bit_only: bool = False) -> dict:
     return {
         "kind": kind, "n": n, "h": h, "act_bits": act_bits,
         "name": name, "meta": meta, "tensors": tensors,
-        "section_b_offset": off_b,
+        "section_b_offset": off_b, "checksums": checksums,
     }

@@ -49,8 +49,10 @@ def test_part_bit_only_read_skips_section_b(tmp_path):
     got = nqformat.read_container(path, part_bit_only=True)
     assert "w_low" not in got["tensors"][0]
     assert got["section_b_offset"] == info["section_a"]
-    assert info["section_a"] + info["section_b"] == info["total"]
+    # sections + the integrity trailer tile the file exactly
+    assert info["section_a"] + info["section_b"] + nqformat.TRAILER_LEN == info["total"]
     assert os.path.getsize(path) == info["total"]
+    assert got["checksums"] is not None
 
 
 def test_section_b_is_contiguous_tail(tmp_path):

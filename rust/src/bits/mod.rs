@@ -120,8 +120,24 @@ impl PackedTensor {
         out
     }
 
-    /// Unpack into a caller buffer (hot path: avoids realloc on re-page-in).
+    /// Unpack into a caller buffer (hot path: avoids realloc on
+    /// re-page-in). On little-endian targets the owned words are viewed
+    /// as the packed byte stream and decoded through the dispatched
+    /// kernel tier (`crate::kernels::unpack_ints_into` — SWAR/SIMD per
+    /// the process `KernelPlan`); elsewhere the portable word-stream
+    /// path runs.
     pub fn unpack_into(&self, out: &mut Vec<i32>) {
+        #[cfg(target_endian = "little")]
+        {
+            // Safety: reinterpreting &[u64] as &[u8] is always valid
+            // (alignment only loosens, lifetime carried over); on LE the
+            // in-memory bytes ARE the packed LE byte stream.
+            let bytes = unsafe {
+                std::slice::from_raw_parts(self.words.as_ptr() as *const u8, self.words.len() * 8)
+            };
+            crate::kernels::unpack_ints_into(bytes, self.bits, self.len, out);
+        }
+        #[cfg(not(target_endian = "little"))]
         unpack_words_into(self.words.iter().copied(), self.bits, self.len, out);
     }
 
@@ -167,8 +183,13 @@ pub fn packed_nwords(count: usize, bits: u8) -> usize {
 /// Lane-aligned bitwidths (`bits ∣ 64`) take a SWAR path: the per-word
 /// lane loop has a constant trip count the compiler unrolls and
 /// vectorizes, with xor-sub sign extension instead of a double shift.
-/// The fused decode kernels in `crate::kernels` go further (straight to
-/// f32); this stays the i32 entry point for everything else.
+///
+/// This is the *portable* word-stream entry (any `u64` iterator, any
+/// endianness). Consumers holding contiguous packed bytes — tensors,
+/// archive views — route through `crate::kernels::unpack_ints_into`
+/// instead, which dispatches into the process-selected kernel tier
+/// (scalar / SWAR / SIMD, `NQ_KERNEL` override) and covers every
+/// bitwidth with a vector path where the hardware has one.
 pub fn unpack_words_into<I: Iterator<Item = u64>>(
     words: I,
     bits: u8,

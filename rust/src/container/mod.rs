@@ -6,6 +6,13 @@
 //! tail. Those two byte counts ARE the paper's page-in/page-out
 //! overheads (Table 11).
 //!
+//! Integrity: the writer appends a 24-byte trailer (`NQCKSUM1` + per-
+//! section CRC-64/XZ). Readers treat it as optional — pre-trailer
+//! artifacts parse unchanged — and the store verifies the checksums at
+//! section fetch time ([`crate::store::NqArchive`]), as does
+//! `fleet::RemoteSource` after chunked reassembly. Section byte ranges
+//! always exclude the trailer.
+//!
 //! This module owns the **format**: the byte layout, the typed
 //! [`Container`] decode, the [`SectionIndex`], and the writer
 //! ([`serialize`]/[`write`]/[`synthetic_nest`]). **Access** goes through
@@ -20,9 +27,69 @@ use std::path::Path;
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::bits::{packed_nbytes, PackedTensor};
+use crate::util::crc64::crc64;
 
 pub const MAGIC: &[u8; 8] = b"NESTQNT1";
 pub const VERSION: u32 = 1;
+
+/// Magic of the optional integrity trailer appended after section B.
+pub const TRAILER_MAGIC: &[u8; 8] = b"NQCKSUM1";
+/// Trailer size: magic + CRC-64/XZ of section A + CRC-64/XZ of section B.
+pub const TRAILER_LEN: usize = 24;
+
+/// Per-section CRC-64/XZ checksums from the `.nq` trailer.
+///
+/// The geometry walk (`SectionIndex`, `ModelLayout`) validates byte
+/// *ranges*; these catch bit flips *inside* payloads — verified at
+/// `store::NqArchive` section fetch and by `fleet::RemoteSource` after
+/// chunked reassembly. Pre-trailer artifacts (and the Python pipeline's
+/// old output) simply have none: readers treat the trailer as optional.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SectionChecksums {
+    /// CRC-64/XZ of the section-A bytes.
+    pub a: u64,
+    /// CRC-64/XZ of the section-B bytes (0 ≡ crc64 of empty for
+    /// mono/fp32 containers, which have no section B).
+    pub b: u64,
+}
+
+/// Split serialized container bytes into (payload, trailer checksums).
+/// The trailer is detected by its magic in the final [`TRAILER_LEN`]
+/// bytes; absent or unrecognized trailers yield the whole input.
+pub(crate) fn split_trailer(data: &[u8]) -> (&[u8], Option<SectionChecksums>) {
+    if data.len() >= TRAILER_LEN {
+        let t = &data[data.len() - TRAILER_LEN..];
+        if &t[..8] == TRAILER_MAGIC {
+            let a = u64::from_le_bytes(t[8..16].try_into().unwrap());
+            let b = u64::from_le_bytes(t[16..24].try_into().unwrap());
+            return (
+                &data[..data.len() - TRAILER_LEN],
+                Some(SectionChecksums { a, b }),
+            );
+        }
+    }
+    (data, None)
+}
+
+/// Decode an exactly-trailer-sized tail read from the end of a file.
+pub(crate) fn split_trailer_tail(tail: &[u8; TRAILER_LEN]) -> Option<SectionChecksums> {
+    if &tail[..8] == TRAILER_MAGIC {
+        Some(SectionChecksums {
+            a: u64::from_le_bytes(tail[8..16].try_into().unwrap()),
+            b: u64::from_le_bytes(tail[16..24].try_into().unwrap()),
+        })
+    } else {
+        None
+    }
+}
+
+fn encode_trailer(ck: SectionChecksums) -> [u8; TRAILER_LEN] {
+    let mut t = [0u8; TRAILER_LEN];
+    t[..8].copy_from_slice(TRAILER_MAGIC);
+    t[8..16].copy_from_slice(&ck.a.to_le_bytes());
+    t[16..24].copy_from_slice(&ck.b.to_le_bytes());
+    t
+}
 
 /// Container kind.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -99,7 +166,7 @@ pub struct Container {
     pub tensors: Vec<Tensor>,
     /// Byte offset of section B (0 when absent).
     pub section_b_offset: u64,
-    /// Total file size in bytes.
+    /// Section payload bytes (A ++ B; excludes the integrity trailer).
     pub file_len: u64,
 }
 
@@ -135,13 +202,32 @@ pub struct SectionIndex {
     pub name: String,
     pub section_b_offset: u64,
     pub file_len: u64,
+    /// Per-section CRC-64 checksums when the artifact carries the
+    /// integrity trailer (`None` for pre-trailer artifacts).
+    pub checksums: Option<SectionChecksums>,
 }
 
 impl SectionIndex {
+    /// Bytes of the integrity trailer at the end of the file (0 when
+    /// absent).
+    pub fn trailer_len(&self) -> u64 {
+        if self.checksums.is_some() {
+            TRAILER_LEN as u64
+        } else {
+            0
+        }
+    }
+
+    /// Section payload bytes: the file minus the trailer (== section A
+    /// ++ section B).
+    pub fn payload_len(&self) -> u64 {
+        self.file_len - self.trailer_len()
+    }
+
     /// Byte range of section A (header + scales + w_high + fp32 params).
     pub fn section_a(&self) -> std::ops::Range<u64> {
         if self.section_b_offset == 0 {
-            0..self.file_len
+            0..self.payload_len()
         } else {
             0..self.section_b_offset
         }
@@ -150,9 +236,9 @@ impl SectionIndex {
     /// Byte range of section B (the packed w_low tail; empty when absent).
     pub fn section_b(&self) -> std::ops::Range<u64> {
         if self.section_b_offset == 0 {
-            self.file_len..self.file_len
+            self.payload_len()..self.payload_len()
         } else {
-            self.section_b_offset..self.file_len
+            self.section_b_offset..self.payload_len()
         }
     }
 
@@ -250,7 +336,26 @@ pub fn parse(data: &[u8], part_bit_only: bool) -> Result<Container> {
 }
 
 pub(crate) fn parse_impl(data: &[u8], part_bit_only: bool) -> Result<Container> {
+    // strip (and verify) the optional integrity trailer first, so the
+    // body walk below sees exactly the section payload
+    let (data, checksums) = split_trailer(data);
     let p = parse_prefix(data)?;
+    if let Some(ck) = checksums {
+        let a_end = if p.section_b_offset == 0 {
+            data.len()
+        } else {
+            p.section_b_offset as usize
+        };
+        ensure!(a_end <= data.len(), "section B offset beyond payload");
+        ensure!(
+            crc64(&data[..a_end]) == ck.a,
+            "section A checksum mismatch (corrupt container)"
+        );
+        ensure!(
+            crc64(&data[a_end..]) == ck.b,
+            "section B checksum mismatch (corrupt container)"
+        );
+    }
     let mut c = Cursor {
         d: data,
         o: p.consumed,
@@ -352,15 +457,15 @@ pub(crate) fn attach_section_b_impl(container: &mut Container, blob: &[u8]) -> R
                      without re-decoding into per-tensor word vectors")]
 pub fn read_section_b(path: &Path, container: &mut Container) -> Result<u64> {
     ensure!(container.section_b_offset > 0, "container has no section B");
-    let file_len = std::fs::metadata(path)
-        .with_context(|| format!("stat {}", path.display()))?
-        .len();
+    // the container's file_len is the *payload* length (sections only),
+    // so the read naturally stops before any integrity trailer
+    let payload_end = container.file_len;
     ensure!(
-        container.section_b_offset <= file_len,
-        "section B offset {} beyond file length {file_len}",
+        container.section_b_offset <= payload_end,
+        "section B offset {} beyond payload length {payload_end}",
         container.section_b_offset
     );
-    let blob = read_range_impl(path, container.section_b_offset..file_len)?;
+    let blob = read_range_impl(path, container.section_b_offset..payload_end)?;
     let nbytes = blob.len() as u64;
     attach_section_b_impl(container, &blob)?;
     Ok(nbytes)
@@ -412,11 +517,12 @@ pub(crate) fn parse_prefix(data: &[u8]) -> Result<HeaderPrefix> {
     })
 }
 
-/// Validate header-derived section geometry against the file length.
-fn check_section_geometry(kind: Kind, section_b_offset: u64, file_len: u64) -> Result<()> {
+/// Validate header-derived section geometry against the payload length
+/// (file minus any trailer).
+fn check_section_geometry(kind: Kind, section_b_offset: u64, payload_len: u64) -> Result<()> {
     ensure!(
-        section_b_offset <= file_len,
-        "section B offset {section_b_offset} beyond file length {file_len}"
+        section_b_offset <= payload_len,
+        "section B offset {section_b_offset} beyond payload length {payload_len}"
     );
     if kind == Kind::Nest {
         ensure!(section_b_offset > 0, "nest container without section B");
@@ -429,9 +535,10 @@ fn check_section_geometry(kind: Kind, section_b_offset: u64, file_len: u64) -> R
 /// Build a [`SectionIndex`] for a whole container already in memory
 /// (the `store::MemorySource` path; no file I/O).
 pub(crate) fn index_of_bytes(data: &[u8]) -> Result<SectionIndex> {
-    let p = parse_prefix(data)?;
     let file_len = data.len() as u64;
-    check_section_geometry(p.kind, p.section_b_offset, file_len)?;
+    let (payload, checksums) = split_trailer(data);
+    let p = parse_prefix(payload)?;
+    check_section_geometry(p.kind, p.section_b_offset, payload.len() as u64)?;
     Ok(SectionIndex {
         kind: p.kind,
         n: p.n,
@@ -440,6 +547,7 @@ pub(crate) fn index_of_bytes(data: &[u8]) -> Result<SectionIndex> {
         name: p.name,
         section_b_offset: p.section_b_offset,
         file_len,
+        checksums,
     })
 }
 
@@ -457,6 +565,17 @@ pub(crate) fn probe_impl(path: &Path) -> Result<SectionIndex> {
         .with_context(|| format!("stat {}", path.display()))?
         .len();
     let f = std::fs::File::open(path)?;
+    // the integrity trailer (when present) lives in the final 24 bytes;
+    // one positioned read detects it without touching payloads
+    let checksums = if file_len >= TRAILER_LEN as u64 {
+        let mut tail = [0u8; TRAILER_LEN];
+        read_exact_at(&f, &mut tail, file_len - TRAILER_LEN as u64)
+            .with_context(|| format!("reading trailer of {}", path.display()))?;
+        split_trailer_tail(&tail)
+    } else {
+        None
+    };
+    let payload_len = file_len - if checksums.is_some() { TRAILER_LEN as u64 } else { 0 };
     let mut buf: Vec<u8> = Vec::new();
     let mut want: usize = 4096;
     // name + meta are each < 1 MiB, so a legal header prefix fits well
@@ -474,7 +593,7 @@ pub(crate) fn probe_impl(path: &Path) -> Result<SectionIndex> {
         }
         match parse_prefix(&buf) {
             Ok(p) => {
-                check_section_geometry(p.kind, p.section_b_offset, file_len)?;
+                check_section_geometry(p.kind, p.section_b_offset, payload_len)?;
                 return Ok(SectionIndex {
                     kind: p.kind,
                     n: p.n,
@@ -483,6 +602,7 @@ pub(crate) fn probe_impl(path: &Path) -> Result<SectionIndex> {
                     name: p.name,
                     section_b_offset: p.section_b_offset,
                     file_len,
+                    checksums,
                 });
             }
             // grow ONLY on truncation (header longer than the window);
@@ -673,14 +793,24 @@ pub fn serialize(c: &Container) -> Result<Vec<u8>> {
     let mut out = head;
     out.extend_from_slice(&off.to_le_bytes());
     out.extend_from_slice(&sec_a);
+    let a_crc = crc64(&out);
     out.extend_from_slice(&sec_b);
+    // integrity trailer: per-section CRC-64/XZ, verified at archive
+    // fetch time and after fleet reassembly (readers accept its absence)
+    out.extend_from_slice(&encode_trailer(SectionChecksums {
+        a: a_crc,
+        b: crc64(&sec_b),
+    }));
     Ok(out)
 }
 
 /// Write a container file; returns (total, section_a, section_b) bytes.
+/// `total` is the on-disk file length — section bytes plus the
+/// [`TRAILER_LEN`]-byte integrity trailer.
 pub fn write(path: &Path, c: &Container) -> Result<(u64, u64, u64)> {
     let bytes = serialize(c)?;
     let total = bytes.len() as u64;
+    let payload = total - TRAILER_LEN as u64;
     let sec_b = if c.kind == Kind::Nest {
         let mut n = 0u64;
         for t in &c.tensors {
@@ -694,7 +824,7 @@ pub fn write(path: &Path, c: &Container) -> Result<(u64, u64, u64)> {
     };
     let mut f = std::fs::File::create(path)?;
     f.write_all(&bytes)?;
-    Ok((total, total - sec_b, sec_b))
+    Ok((total, payload - sec_b, sec_b))
 }
 
 /// Ideal (paper §4.3.3) byte split for a nest container of `counts`
@@ -762,9 +892,10 @@ mod tests {
             _ => panic!(),
         }
         assert!(part.section_b_offset > 0);
+        // A ++ B is the payload; the trailer rides after it
         assert_eq!(
             part.section_a_bytes() + part.section_b_bytes(),
-            bytes.len() as u64
+            (bytes.len() - TRAILER_LEN) as u64
         );
     }
 
@@ -774,7 +905,8 @@ mod tests {
         let bytes = serialize(&c).unwrap();
         let mut part = parse(&bytes, true).unwrap();
         let off = part.section_b_offset as usize;
-        attach_section_b(&mut part, &bytes[off..]).unwrap();
+        let payload_end = bytes.len() - TRAILER_LEN;
+        attach_section_b(&mut part, &bytes[off..payload_end]).unwrap();
         match &part.tensors[0].data {
             TensorData::Nest {
                 w_low: Some(l), ..
@@ -822,9 +954,47 @@ mod tests {
         for cut in [10, 40, bytes.len() / 2, bytes.len() - 3] {
             assert!(parse(&bytes[..cut], false).is_err(), "cut={cut}");
         }
+        // a payload bit flip is caught by the trailer checksum (the
+        // geometry walk alone cannot see it)
+        let mut flipped = bytes.clone();
+        let mid = flipped.len() / 2;
+        flipped[mid] ^= 0x10;
+        let err = parse(&flipped, false).unwrap_err();
+        assert!(format!("{err:#}").contains("checksum"), "{err:#}");
         // version bump
         bytes[8] = 99;
         assert!(parse(&bytes, false).is_err());
+    }
+
+    #[test]
+    fn trailer_roundtrip_and_absence() {
+        let c = toy_container(31, 8, 4);
+        let bytes = serialize(&c).unwrap();
+        let (payload, ck) = split_trailer(&bytes);
+        let ck = ck.expect("writer emits the trailer");
+        let off = c_off(&bytes);
+        assert_eq!(ck.a, crc64(&payload[..off]));
+        assert_eq!(ck.b, crc64(&payload[off..]));
+        // a pre-trailer artifact (payload only) still parses — with no
+        // checksums in its index
+        let legacy = parse(payload, false).unwrap();
+        assert_eq!(legacy.tensors.len(), 2);
+        let idx = index_of_bytes(payload).unwrap();
+        assert!(idx.checksums.is_none());
+        assert_eq!(idx.trailer_len(), 0);
+        assert_eq!(idx.payload_len(), payload.len() as u64);
+        // and the trailered form indexes with checksums + payload math
+        let idx = index_of_bytes(&bytes).unwrap();
+        assert_eq!(idx.checksums, Some(ck));
+        assert_eq!(idx.trailer_len(), TRAILER_LEN as u64);
+        assert_eq!(idx.payload_len(), payload.len() as u64);
+        assert_eq!(idx.section_b().end, payload.len() as u64);
+    }
+
+    /// Section-B offset of serialized bytes (test helper).
+    fn c_off(bytes: &[u8]) -> usize {
+        let p = parse_prefix(bytes).unwrap();
+        p.section_b_offset as usize
     }
 
     #[test]
@@ -834,7 +1004,7 @@ mod tests {
         let path = dir.join("toy.nq");
         let c = toy_container(6, 8, 6);
         let (total, a, b) = write(&path, &c).unwrap();
-        assert_eq!(total, a + b);
+        assert_eq!(total, a + b + TRAILER_LEN as u64);
         assert_eq!(std::fs::metadata(&path).unwrap().len(), total);
         let mut part = read(&path, true).unwrap();
         let paged = read_section_b(&path, &mut part).unwrap();
@@ -874,16 +1044,18 @@ mod tests {
         let idx = probe(&path).unwrap();
         let a = read_range(&path, idx.section_a()).unwrap();
         let b = read_range(&path, idx.section_b()).unwrap();
-        assert_eq!(a.len() as u64 + b.len() as u64, idx.file_len);
+        // sections tile the payload; the trailer is the remaining tail
+        assert_eq!(a.len() as u64 + b.len() as u64, idx.payload_len());
+        assert_eq!(idx.payload_len() + idx.trailer_len(), idx.file_len);
         assert_eq!(&whole[..a.len()], &a[..]);
-        assert_eq!(&whole[a.len()..], &b[..]);
+        assert_eq!(&whole[a.len()..a.len() + b.len()], &b[..]);
         // a section-A blob parses as a part-bit container on its own
         let part = parse(&a, true).unwrap();
         assert_eq!(part.n, 8);
         // and the section-B blob attaches to it losslessly
         let mut part2 = parse(&a, true).unwrap();
-        // parse() sets file_len to the blob length; restore the real one
-        part2.file_len = idx.file_len;
+        // parse() sets file_len to the blob length; restore the payload
+        part2.file_len = idx.payload_len();
         attach_section_b(&mut part2, &b).unwrap();
         match &part2.tensors[0].data {
             TensorData::Nest { w_low: Some(_), .. } => {}

@@ -59,7 +59,9 @@ impl DiverseBitwidths {
                 "baseline requires mono containers, got {:?} for INT{k}",
                 archive.kind()
             );
-            let bytes = archive.index().file_len;
+            // payload bytes only: the integrity trailer is never
+            // fetched, and the ledger must match the moved bytes
+            let bytes = archive.index().payload_len();
             models.insert(k, (archive, bytes));
         }
         Ok(DiverseBitwidths {

@@ -203,10 +203,12 @@ mod tests {
         assert_eq!(s.disk_bytes, a_len + b_len);
         assert_eq!(s.used_bytes, a_len + b_len);
         assert_eq!(s.entries, 2);
-        // bytes match a direct disk read
+        // bytes match a direct disk read (the integrity trailer rides
+        // after the sections and is never cached)
         let whole = std::fs::read(src.path()).unwrap();
         assert_eq!(&whole[..a1.len()], &a1[..]);
-        assert_eq!(&whole[a1.len()..], &b1[..]);
+        assert_eq!(&whole[a1.len()..a1.len() + b1.len()], &b1[..]);
+        assert_eq!(whole.len(), a1.len() + b1.len() + container::TRAILER_LEN);
     }
 
     #[test]

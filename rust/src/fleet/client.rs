@@ -21,7 +21,7 @@ use crate::device::{MemoryLedger, ResourceTrace};
 use crate::store::{Bytes, SectionSource};
 use crate::transport::{ack_frame, parse_chunk, recv_frame, send_frame, Frame, FrameKind, Meter};
 
-use super::{control, decode_index, encode_pull, encode_section_req, Section};
+use super::{control, decode_index, decode_index2, encode_pull, encode_section_req, Section};
 
 /// Outcome of one [`FleetClient::pull_section`] call.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -77,11 +77,23 @@ impl FleetClient {
     }
 
     /// Section layout of a zoo model, served from the server's memoized
-    /// header probe — one wire round-trip, no payload bytes.
+    /// header probe — one wire round-trip, no payload bytes. Tries the
+    /// checksummed v2 command first and falls back to the v1 form
+    /// against pre-checksum servers (whose artifacts carry no trailer
+    /// to verify anyway), so mixed-version fleets keep paging.
     pub fn model_index(&mut self, model: &str) -> Result<SectionIndex> {
-        let reply = self.request(control("index", model.as_bytes().to_vec()))?;
-        ensure!(reply.name == "index", "unexpected reply {:?}", reply.name);
-        decode_index(&reply.payload)
+        match self.request(control("index2", model.as_bytes().to_vec())) {
+            Ok(reply) => {
+                ensure!(reply.name == "index2", "unexpected reply {:?}", reply.name);
+                decode_index2(&reply.payload)
+            }
+            Err(e) if format!("{e}").contains("unknown command") => {
+                let reply = self.request(control("index", model.as_bytes().to_vec()))?;
+                ensure!(reply.name == "index", "unexpected reply {:?}", reply.name);
+                decode_index(&reply.payload)
+            }
+            Err(e) => Err(e),
+        }
     }
 
     /// List the server's zoo model ids (newline-joined on the wire) —
@@ -372,6 +384,9 @@ pub struct RemoteSource {
     model: String,
     addr: SocketAddr,
     fetch_timeout: Option<Duration>,
+    /// Memoized index (one wire round-trip): section geometry plus the
+    /// integrity checksums every completed fetch is verified against.
+    index: std::sync::OnceLock<SectionIndex>,
 }
 
 impl RemoteSource {
@@ -403,7 +418,18 @@ impl RemoteSource {
             model: model.into(),
             addr,
             fetch_timeout: Some(RemoteSource::DEFAULT_FETCH_TIMEOUT),
+            index: std::sync::OnceLock::new(),
         }
+    }
+
+    /// The memoized index, fetching it over the held client connection
+    /// on first use.
+    fn index_via(&self, c: &mut FleetClient) -> Result<SectionIndex> {
+        if let Some(i) = self.index.get() {
+            return Ok(i.clone());
+        }
+        let idx = c.model_index(&self.model)?;
+        Ok(self.index.get_or_init(|| idx).clone())
     }
 
     pub fn model(&self) -> &str {
@@ -429,7 +455,8 @@ impl RemoteSource {
 
 impl SectionSource for RemoteSource {
     fn index(&self) -> Result<SectionIndex> {
-        self.client.lock().unwrap().model_index(&self.model)
+        let mut c = self.client.lock().unwrap();
+        self.index_via(&mut c)
     }
 
     fn fetch(&self, section: Section) -> Result<Bytes> {
@@ -466,6 +493,27 @@ impl SectionSource for RemoteSource {
             out.received_to,
             out.total_len
         );
+        // verify the reassembled section against the artifact's
+        // integrity trailer: chunked transfer + resume must hand the
+        // archive exactly the bytes the packer checksummed. An index
+        // failure fails the fetch — silently skipping verification
+        // would defeat the trailer exactly when the link is flaky. (In
+        // practice the index is memoized from archive open, so this
+        // never costs an extra round-trip.)
+        let idx = self
+            .index_via(&mut c)
+            .with_context(|| format!("index for checksum verification of {}", self.model))?;
+        if let Some(ck) = idx.checksums {
+            let want = match section {
+                Section::A => ck.a,
+                Section::B => ck.b,
+            };
+            ensure!(
+                crate::util::crc64::crc64(&sink) == want,
+                "section {section} of {} failed checksum after reassembly",
+                self.model
+            );
+        }
         Ok(sink.into())
     }
 

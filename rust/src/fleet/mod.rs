@@ -39,7 +39,8 @@
 //! |----------------------------------|--------------------------------|
 //! | `Control "hello"` device id      | `Control "ok"`                 |
 //! | `Control "level"` f64 LE         | `Control "advice"` decision    |
-//! | `Control "index"` model          | `Control "index"` SectionIndex |
+//! | `Control "index"` model          | `Control "index"` SectionIndex (v1, no checksums) |
+//! | `Control "index2"` model         | `Control "index2"` SectionIndex + trailer checksums |
 //! | `Control "models"`               | `Control "models"` id list     |
 //! | `Control "offset"` section+model | `Control "offset"` u64 LE      |
 //! | `Control "state"` model          | `Control "state"` variant+held |
@@ -290,7 +291,17 @@ pub(crate) fn decode_pull(payload: &[u8]) -> Result<(Section, u64, String)> {
     Ok((section, offset, model))
 }
 
-/// Wire form of a [`SectionIndex`]: fixed 20-byte prefix + model name.
+/// Legacy wire form of a [`SectionIndex`] (the v1 `index` reply): fixed
+/// 20-byte prefix + model name, no checksums. Kept so mixed-version
+/// fleets keep paging — checksums travel on the `index2` command
+/// ([`encode_index2`]), which new clients try first and old servers
+/// reject cleanly.
+///
+/// The length field carries `payload_len()`, not the on-disk length:
+/// pre-trailer clients compute section B as `offset..file_len`, and the
+/// server only ever serves payload bytes — sending the trailer-inclusive
+/// length would make their reassembled section 24 bytes short of the
+/// advertised end.
 pub(crate) fn encode_index(idx: &SectionIndex) -> Vec<u8> {
     let mut p = Vec::with_capacity(20 + idx.name.len());
     p.push(idx.kind.as_u8());
@@ -298,7 +309,7 @@ pub(crate) fn encode_index(idx: &SectionIndex) -> Vec<u8> {
     p.push(idx.h);
     p.push(idx.act_bits);
     p.extend_from_slice(&idx.section_b_offset.to_le_bytes());
-    p.extend_from_slice(&idx.file_len.to_le_bytes());
+    p.extend_from_slice(&idx.payload_len().to_le_bytes());
     p.extend_from_slice(idx.name.as_bytes());
     p
 }
@@ -312,7 +323,58 @@ pub(crate) fn decode_index(payload: &[u8]) -> Result<SectionIndex> {
         act_bits: payload[3],
         section_b_offset: u64::from_le_bytes(payload[4..12].try_into().unwrap()),
         file_len: u64::from_le_bytes(payload[12..20].try_into().unwrap()),
+        checksums: None,
         name: String::from_utf8(payload[20..].to_vec()).context("model name")?,
+    })
+}
+
+/// v2 wire form (`index2` reply): the 20-byte prefix, then a checksum
+/// flag byte (0 absent, 1 present + two u64 CRCs), then the model name.
+pub(crate) fn encode_index2(idx: &SectionIndex) -> Vec<u8> {
+    let mut p = Vec::with_capacity(37 + idx.name.len());
+    p.push(idx.kind.as_u8());
+    p.push(idx.n);
+    p.push(idx.h);
+    p.push(idx.act_bits);
+    p.extend_from_slice(&idx.section_b_offset.to_le_bytes());
+    p.extend_from_slice(&idx.file_len.to_le_bytes());
+    match idx.checksums {
+        Some(ck) => {
+            p.push(1);
+            p.extend_from_slice(&ck.a.to_le_bytes());
+            p.extend_from_slice(&ck.b.to_le_bytes());
+        }
+        None => p.push(0),
+    }
+    p.extend_from_slice(idx.name.as_bytes());
+    p
+}
+
+pub(crate) fn decode_index2(payload: &[u8]) -> Result<SectionIndex> {
+    ensure!(payload.len() >= 21, "short index2 payload");
+    let (checksums, name_at) = match payload[20] {
+        0 => (None, 21),
+        1 => {
+            ensure!(payload.len() >= 37, "short checksummed index2 payload");
+            (
+                Some(crate::container::SectionChecksums {
+                    a: u64::from_le_bytes(payload[21..29].try_into().unwrap()),
+                    b: u64::from_le_bytes(payload[29..37].try_into().unwrap()),
+                }),
+                37,
+            )
+        }
+        f => bail!("unknown index2 checksum flag {f}"),
+    };
+    Ok(SectionIndex {
+        kind: crate::container::Kind::from_u8(payload[0])?,
+        n: payload[1],
+        h: payload[2],
+        act_bits: payload[3],
+        section_b_offset: u64::from_le_bytes(payload[4..12].try_into().unwrap()),
+        file_len: u64::from_le_bytes(payload[12..20].try_into().unwrap()),
+        checksums,
+        name: String::from_utf8(payload[name_at..].to_vec()).context("model name")?,
     })
 }
 
@@ -577,11 +639,21 @@ fn dispatch(
             Ok(())
         }
         "index" => {
-            // section layout of one model — what a device-side
-            // `RemoteSource` answers `SectionSource::index` with
+            // section layout of one model — the v1 (pre-checksum) wire
+            // form, kept for mixed-version fleets
             let model = std::str::from_utf8(payload).context("model id")?;
             let idx = ctx.zoo.source(model)?.index()?;
             send_frame(writer, &control("index", encode_index(&idx)), &ctx.meter)?;
+            Ok(())
+        }
+        "index2" => {
+            // v2: same layout plus the integrity-trailer checksums —
+            // what a device-side `RemoteSource` answers
+            // `SectionSource::index` with (falling back to `index`
+            // against pre-checksum servers)
+            let model = std::str::from_utf8(payload).context("model id")?;
+            let idx = ctx.zoo.source(model)?.index()?;
+            send_frame(writer, &control("index2", encode_index2(&idx)), &ctx.meter)?;
             Ok(())
         }
         "models" => {
@@ -740,9 +812,23 @@ mod tests {
         let c = crate::container::synthetic_nest(21, 8, 4, 32, 8).unwrap();
         crate::container::write(&path, &c).unwrap();
         let idx = FileSource::new(&path).index().unwrap();
-        let back = decode_index(&encode_index(&idx)).unwrap();
-        assert_eq!(back, idx);
+        assert!(idx.checksums.is_some(), "writer emits the trailer");
+        // v2 carries the checksums through
+        let back2 = decode_index2(&encode_index2(&idx)).unwrap();
+        assert_eq!(back2, idx);
+        // v1 stays self-consistent for pre-checksum peers: no
+        // checksums, and the advertised length is the payload a server
+        // actually serves (so an old client's section_b range check
+        // still balances) — section geometry identical
+        let back1 = decode_index(&encode_index(&idx)).unwrap();
+        assert_eq!(back1.checksums, None);
+        assert_eq!(back1.file_len, idx.payload_len());
+        assert_eq!(back1.payload_len(), idx.payload_len());
+        assert_eq!(back1.section_a(), idx.section_a());
+        assert_eq!(back1.section_b(), idx.section_b());
+        assert_eq!((back1.n, back1.h, back1.kind), (idx.n, idx.h, idx.kind));
         assert!(decode_index(&[0u8; 10]).is_err());
+        assert!(decode_index2(&[0u8; 10]).is_err());
     }
 
     #[test]

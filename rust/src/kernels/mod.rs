@@ -1,4 +1,5 @@
-//! Fused switching kernels (S12): one-pass packed-bytes → f32 decode.
+//! Switching kernels (S12): runtime-dispatched one-pass packed-bytes →
+//! f32 decode.
 //!
 //! The paper's headline operation — cheap on-device bitwidth switching
 //! (§3.3, Table 5) — is gated by how fast packed section bytes become
@@ -11,9 +12,8 @@
 //! ```
 //!
 //! Both kernels read little-endian packed u64 words straight from
-//! section byte slices (the `.nq` payload is not 8-aligned — words are
-//! loaded with `u64::from_le_bytes`, a single unaligned mov) and write
-//! only the final f32s:
+//! section byte slices (the `.nq` payload is not 8-aligned — loads are
+//! unaligned) and write only the final f32s:
 //!
 //! * [`unpack_dequant_into`] — part-bit launch: packed `w_high` words →
 //!   `s·2^l · w_high` (Eq. 10; the inflation factor is the `scale_mul`
@@ -21,29 +21,57 @@
 //! * [`recompose_dequant_into`] — full-bit upgrade: `w_high` + `w_low`
 //!   word streams → `s·(w_high·2^l + w_low)` (Eq. 6), with **no i32
 //!   materialization** between the packed bytes and the output f32s.
+//! * [`unpack_ints_into`] — the plain i32 unpack for non-dequantizing
+//!   consumers (`PackedTensor`/`PackedView::unpack_into`).
 //!
-//! Each has a SWAR fast path for lane-aligned bitwidths (`bits ∣ 64`,
-//! i.e. 2/4/8/16: whole u64 words are decoded with a constant-trip
-//! unrolled mask/shift loop the compiler vectorizes, sign-extension via
-//! the xor-sub idiom instead of two shifts) and hoisted per-channel
-//! scales (when the channel count divides the lane block, the scale
-//! pattern repeats per word and is precomputed once). Everything else
-//! falls back to the scalar lane loop — same single-pass structure,
-//! per-lane refill.
+//! # Dispatch tiers
 //!
-//! Numerical contract: outputs are bit-identical to the legacy
-//! composition (`bits::unpack_words_into` → `nest::recompose_into` →
-//! `quant::dequant`). Same integer ops, same f32 multiply order —
-//! `tests/kernels_prop.rs` proves it over every legal `(n, h)`,
-//! compensated and uncompensated `w_low`, and lengths not divisible by
-//! `lanes(bits)`.
+//! Three implementations sit behind one [`KernelPlan`] vtable, selected
+//! **once per process** (capability probe hoisted into a `OnceLock` —
+//! tenant executor threads never re-detect inside a decode loop):
+//!
+//! | tier | module | what it is |
+//! |------|--------|------------|
+//! | [`Tier::Scalar`] | `scalar` | portable lane cursor; the reference semantics |
+//! | [`Tier::Swar`]   | `swar`   | word-parallel GPR decode for `bits ∣ 64`, paired-stream blocks, scalar cursor otherwise |
+//! | [`Tier::Simd`]   | `x86`/`neon` | explicit `std::arch` paths for **every** width 2..=16: AVX2 (runtime-detected) with an SSE2 baseline on x86-64, NEON on aarch64; falls back to the SWAR dispatch on other targets |
+//!
+//! The active tier defaults to `Simd` (each arch path degrades
+//! gracefully) and can be pinned with the `NQ_KERNEL` environment
+//! variable — `NQ_KERNEL=scalar|swar|simd`, read once at first use;
+//! unknown values fall back to the default rather than failing a decode
+//! (see [`tier_from_env`]). Benches and the differential property tests
+//! bypass the process default via [`plan_for`].
+//!
+//! Numerical contract: **all tiers are bit-identical** to each other
+//! and to the legacy composition (`bits::unpack_words_into` →
+//! `nest::recompose_into` → `quant::dequant`). Same integer ops, same
+//! f32 multiply order — every path computes `v as f32 * (s * scale_mul)`
+//! with one pre-folded scale product per channel. `tests/kernels_prop.rs`
+//! proves it per tier over every legal `(n, h)`, compensated and
+//! uncompensated `w_low`, and lengths not divisible by `lanes(bits)`.
+//! DESIGN.md §4e holds the per-arch tier table and the safety argument
+//! for the `unsafe` intrinsic blocks.
 
-use crate::bits::{lanes, packed_nwords, sext};
+mod plan;
+mod scalar;
+mod swar;
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+use std::sync::OnceLock;
+
+use crate::bits::packed_nwords;
 
 /// Max lanes per word (`bits = 2` → 32): sizes the SWAR block buffers.
 const MAX_LANES: usize = 32;
 
-/// Is `bits` lane-aligned (divides the 64-bit word evenly)?
+/// Is `bits` lane-aligned (divides the 64-bit word evenly)? These are
+/// the widths the SWAR tier decodes word-parallel; the SIMD tier covers
+/// every width.
 #[inline]
 pub fn swar_aligned(bits: u8) -> bool {
     matches!(bits, 2 | 4 | 8 | 16)
@@ -54,63 +82,276 @@ fn word_at(bytes: &[u8], w: usize) -> u64 {
     u64::from_le_bytes(bytes[8 * w..8 * w + 8].try_into().unwrap())
 }
 
-// ---------------------------------------------------------------------------
-// scalar lane cursor (general fallback)
-// ---------------------------------------------------------------------------
-
-/// Streaming lane decoder over packed LE words: one `u64` load per
-/// `lanes` values, shift-and-mask per lane. The state the scalar paths
-/// carry instead of materializing word or i32 vectors.
-struct LaneCursor<'a> {
-    bytes: &'a [u8],
-    /// Next word index to load.
-    next_word: usize,
-    word: u64,
-    /// Lanes left in the loaded word.
-    left: usize,
-    bits: u32,
-    lanes: usize,
-    mask: u64,
-    sign: u64,
-}
-
-impl<'a> LaneCursor<'a> {
-    fn new(bytes: &'a [u8], bits: u8) -> LaneCursor<'a> {
-        LaneCursor {
-            bytes,
-            next_word: 0,
-            word: 0,
-            left: 0,
-            bits: bits as u32,
-            lanes: lanes(bits),
-            mask: (1u64 << bits) - 1,
-            sign: 1u64 << (bits - 1),
-        }
+/// Per-channel scales with `scale_mul` folded in, extended by
+/// `group - 1` wrapped entries so a vector path can load `group`
+/// consecutive scales at any channel phase with one unaligned load.
+/// The fold (`s * scale_mul` first, then one multiply per value) is the
+/// exact f32 op order of every scalar path — bit-identity preserved.
+pub(crate) fn fold_rep(scales: &[f32], scale_mul: f32, group: usize) -> Vec<f32> {
+    let c = scales.len();
+    let mut rep = Vec::with_capacity(c + group - 1);
+    rep.extend(scales.iter().map(|&s| s * scale_mul));
+    for i in 0..group - 1 {
+        rep.push(rep[i % c]);
     }
-
-    #[inline(always)]
-    fn next(&mut self) -> i32 {
-        if self.left == 0 {
-            self.word = word_at(self.bytes, self.next_word);
-            self.next_word += 1;
-            self.left = self.lanes;
-        }
-        let v = sext(self.word & self.mask, self.sign);
-        self.word >>= self.bits;
-        self.left -= 1;
-        v
-    }
+    rep
 }
 
 // ---------------------------------------------------------------------------
-// part-bit launch kernel: packed → dequantized f32
+// tiers + dispatch
+// ---------------------------------------------------------------------------
+
+/// One decode implementation tier (see the module docs for the table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    /// Portable lane-cursor decode.
+    Scalar,
+    /// Word-parallel GPR decode for lane-aligned widths.
+    Swar,
+    /// Explicit `std::arch` vector paths (AVX2/SSE2/NEON).
+    Simd,
+}
+
+impl Tier {
+    /// Every tier, in escalation order.
+    pub fn all() -> [Tier; 3] {
+        [Tier::Scalar, Tier::Swar, Tier::Simd]
+    }
+
+    /// Parse an `NQ_KERNEL` value (case-insensitive).
+    pub fn parse(s: &str) -> Option<Tier> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" => Some(Tier::Scalar),
+            "swar" => Some(Tier::Swar),
+            "simd" => Some(Tier::Simd),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Tier::Scalar => "scalar",
+            Tier::Swar => "swar",
+            Tier::Simd => "simd",
+        }
+    }
+}
+
+impl std::fmt::Display for Tier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Resolve the `NQ_KERNEL` override: `None` or an unknown value selects
+/// the default ([`Tier::Simd`], which degrades gracefully per arch — a
+/// host without AVX2 runs the SSE2 baseline, a non-SIMD target runs the
+/// SWAR dispatch). A decode must never fail because of an env var, so
+/// unknown values are ignored, not errors.
+pub fn tier_from_env(value: Option<&str>) -> Tier {
+    value.and_then(Tier::parse).unwrap_or(Tier::Simd)
+}
+
+type UnpackDequantFn = fn(&[u8], u8, usize, &[f32], f32, &mut Vec<f32>);
+type RecomposeDequantFn = fn(&[u8], u8, &[u8], u8, u8, usize, &[f32], &mut Vec<f32>);
+type UnpackIntsFn = fn(&[u8], u8, usize, &mut Vec<i32>);
+
+/// One tier's dispatch table: the function pointers every consumer
+/// (`store::PackedView`, `ModelManager` decode waves, `NestTenant`,
+/// `DiverseBitwidths`, fleet reassembly) routes through, plus the
+/// resolved sub-path name for diagnostics ("avx2", "sse2", "neon",
+/// "swar", "scalar", "swar-fallback").
+pub struct KernelPlan {
+    pub tier: Tier,
+    pub path: &'static str,
+    unpack_dequant: UnpackDequantFn,
+    recompose_dequant: RecomposeDequantFn,
+    unpack_ints: UnpackIntsFn,
+}
+
+impl KernelPlan {
+    /// Fused one-pass launch decode through this tier (see the module
+    /// docs for the contract; validates like [`unpack_dequant_into`]).
+    pub fn unpack_dequant_into(
+        &self,
+        words: &[u8],
+        bits: u8,
+        len: usize,
+        scales: &[f32],
+        scale_mul: f32,
+        out: &mut Vec<f32>,
+    ) {
+        out.clear();
+        if len == 0 {
+            return;
+        }
+        assert!(!scales.is_empty(), "unpack_dequant_into: empty scales");
+        assert!(
+            words.len() >= 8 * packed_nwords(len, bits),
+            "unpack_dequant_into: {} word bytes < {} needed for INT{bits} x {len}",
+            words.len(),
+            8 * packed_nwords(len, bits)
+        );
+        out.reserve(len);
+        (self.unpack_dequant)(words, bits, len, scales, scale_mul, out);
+        debug_assert_eq!(out.len(), len);
+    }
+
+    /// Fused one-pass upgrade decode through this tier.
+    #[allow(clippy::too_many_arguments)]
+    pub fn recompose_dequant_into(
+        &self,
+        high_words: &[u8],
+        h_bits: u8,
+        low_words: &[u8],
+        low_bits: u8,
+        l: u8,
+        len: usize,
+        scales: &[f32],
+        out: &mut Vec<f32>,
+    ) {
+        out.clear();
+        if len == 0 {
+            return;
+        }
+        assert!(!scales.is_empty(), "recompose_dequant_into: empty scales");
+        assert!(
+            high_words.len() >= 8 * packed_nwords(len, h_bits),
+            "recompose_dequant_into: {} w_high bytes < {} needed for INT{h_bits} x {len}",
+            high_words.len(),
+            8 * packed_nwords(len, h_bits)
+        );
+        assert!(
+            low_words.len() >= 8 * packed_nwords(len, low_bits),
+            "recompose_dequant_into: {} w_low bytes < {} needed for INT{low_bits} x {len}",
+            low_words.len(),
+            8 * packed_nwords(len, low_bits)
+        );
+        out.reserve(len);
+        (self.recompose_dequant)(high_words, h_bits, low_words, low_bits, l, len, scales, out);
+        debug_assert_eq!(out.len(), len);
+    }
+
+    /// Plain i32 unpack through this tier.
+    pub fn unpack_ints_into(&self, words: &[u8], bits: u8, len: usize, out: &mut Vec<i32>) {
+        out.clear();
+        if len == 0 {
+            return;
+        }
+        assert!(
+            words.len() >= 8 * packed_nwords(len, bits),
+            "unpack_ints_into: {} word bytes < {} needed for INT{bits} x {len}",
+            words.len(),
+            8 * packed_nwords(len, bits)
+        );
+        out.reserve(len);
+        (self.unpack_ints)(words, bits, len, out);
+        debug_assert_eq!(out.len(), len);
+    }
+}
+
+/// The SIMD tier's fn pointers + path name for this target, resolved
+/// from the one-time capability probe.
+#[cfg(target_arch = "x86_64")]
+fn simd_impl() -> (UnpackDequantFn, RecomposeDequantFn, UnpackIntsFn, &'static str) {
+    if x86::caps().avx2 {
+        (
+            x86::unpack_dequant_avx2,
+            x86::recompose_dequant_avx2,
+            x86::unpack_ints_avx2,
+            x86::path_name(),
+        )
+    } else {
+        (
+            x86::unpack_dequant_sse2,
+            x86::recompose_dequant_sse2,
+            x86::unpack_ints_sse2,
+            x86::path_name(),
+        )
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn simd_impl() -> (UnpackDequantFn, RecomposeDequantFn, UnpackIntsFn, &'static str) {
+    (
+        neon::unpack_dequant,
+        neon::recompose_dequant,
+        neon::unpack_ints,
+        neon::path_name(),
+    )
+}
+
+/// No explicit vector path on this target: the SIMD tier *is* the SWAR
+/// dispatch (graceful fallback, never a failure).
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn simd_impl() -> (UnpackDequantFn, RecomposeDequantFn, UnpackIntsFn, &'static str) {
+    (
+        swar::unpack_dequant,
+        swar::recompose_dequant,
+        swar::unpack_ints,
+        "swar-fallback",
+    )
+}
+
+/// All three tier plans, built once per process (this is where the
+/// capability probe runs — exactly once).
+fn plans() -> &'static [KernelPlan; 3] {
+    static PLANS: OnceLock<[KernelPlan; 3]> = OnceLock::new();
+    PLANS.get_or_init(|| {
+        let (ud, rd, ui, path) = simd_impl();
+        [
+            KernelPlan {
+                tier: Tier::Scalar,
+                path: "scalar",
+                unpack_dequant: scalar::unpack_dequant,
+                recompose_dequant: scalar::recompose_dequant,
+                unpack_ints: scalar::unpack_ints,
+            },
+            KernelPlan {
+                tier: Tier::Swar,
+                path: "swar",
+                unpack_dequant: swar::unpack_dequant,
+                recompose_dequant: swar::recompose_dequant,
+                unpack_ints: swar::unpack_ints,
+            },
+            KernelPlan {
+                tier: Tier::Simd,
+                path,
+                unpack_dequant: ud,
+                recompose_dequant: rd,
+                unpack_ints: ui,
+            },
+        ]
+    })
+}
+
+/// The plan for one tier — benches and differential tests use this to
+/// pin a tier regardless of `NQ_KERNEL`. Never panics: on targets
+/// without a vector path, `Tier::Simd` resolves to the SWAR dispatch.
+pub fn plan_for(tier: Tier) -> &'static KernelPlan {
+    match tier {
+        Tier::Scalar => &plans()[0],
+        Tier::Swar => &plans()[1],
+        Tier::Simd => &plans()[2],
+    }
+}
+
+/// The process-wide active plan: `NQ_KERNEL` override (read once) over
+/// the default `Simd` tier.
+pub fn active() -> &'static KernelPlan {
+    static ACTIVE: OnceLock<&'static KernelPlan> = OnceLock::new();
+    *ACTIVE.get_or_init(|| plan_for(tier_from_env(std::env::var("NQ_KERNEL").ok().as_deref())))
+}
+
+// ---------------------------------------------------------------------------
+// module-level entry points (dispatch through the active plan)
 // ---------------------------------------------------------------------------
 
 /// Fused one-pass decode: `len` packed `bits`-bit values (LE u64 words
 /// in `words`) → `value · scales[i % c] · scale_mul` appended to `out`
 /// (cleared first). `scale_mul` is 1.0 for mono weights and `2^l` for
 /// the part-bit launch (Eq. 10) — the caller never builds an inflated
-/// scale vector.
+/// scale vector. Routed through the process-wide [`KernelPlan`].
 ///
 /// Bit-identical to `unpack_words_into` → scale-inflate → `dequant`.
 pub fn unpack_dequant_into(
@@ -121,123 +362,14 @@ pub fn unpack_dequant_into(
     scale_mul: f32,
     out: &mut Vec<f32>,
 ) {
-    out.clear();
-    if len == 0 {
-        return;
-    }
-    assert!(!scales.is_empty(), "unpack_dequant_into: empty scales");
-    assert!(
-        words.len() >= 8 * packed_nwords(len, bits),
-        "unpack_dequant_into: {} word bytes < {} needed for INT{bits} x {len}",
-        words.len(),
-        8 * packed_nwords(len, bits)
-    );
-    out.reserve(len);
-    match bits {
-        2 => unpack_dequant_swar::<2>(words, len, scales, scale_mul, out),
-        4 => unpack_dequant_swar::<4>(words, len, scales, scale_mul, out),
-        8 => unpack_dequant_swar::<8>(words, len, scales, scale_mul, out),
-        16 => unpack_dequant_swar::<16>(words, len, scales, scale_mul, out),
-        _ => unpack_dequant_scalar(words, bits, len, scales, scale_mul, out),
-    }
+    active().unpack_dequant_into(words, bits, len, scales, scale_mul, out);
 }
-
-fn unpack_dequant_scalar(
-    words: &[u8],
-    bits: u8,
-    len: usize,
-    scales: &[f32],
-    scale_mul: f32,
-    out: &mut Vec<f32>,
-) {
-    let mut cur = LaneCursor::new(words, bits);
-    let c = scales.len();
-    let mut done = 0;
-    // channel-sized row chunks: the channel index is the position in the
-    // chunk, so there is no per-element modulo
-    while done < len {
-        let take = c.min(len - done);
-        for &s in &scales[..take] {
-            out.push(cur.next() as f32 * (s * scale_mul));
-        }
-        done += take;
-    }
-}
-
-/// SWAR path (`BITS ∣ 64`): constant-trip unrolled mask/shift over whole
-/// words; per-channel scales hoisted into a per-word table when the
-/// channel count divides the lane count.
-fn unpack_dequant_swar<const BITS: u32>(
-    words: &[u8],
-    len: usize,
-    scales: &[f32],
-    scale_mul: f32,
-    out: &mut Vec<f32>,
-) {
-    let n_lanes = (64 / BITS) as usize;
-    let mask = (1u64 << BITS) - 1;
-    let sign = 1u64 << (BITS - 1);
-    let c = scales.len();
-    let full = len / n_lanes;
-    let rem = len - full * n_lanes;
-    if c <= n_lanes && n_lanes % c == 0 {
-        // channel phase repeats exactly per word: hoist scales (with the
-        // inflation folded in) into one table, indexed by lane
-        let mut tbl = [0f32; MAX_LANES];
-        for (i, t) in tbl.iter_mut().take(n_lanes).enumerate() {
-            *t = scales[i % c] * scale_mul;
-        }
-        for w in 0..full {
-            let mut word = word_at(words, w);
-            for &t in tbl.iter().take(n_lanes) {
-                out.push(sext(word & mask, sign) as f32 * t);
-                word >>= BITS;
-            }
-        }
-        if rem > 0 {
-            let mut word = word_at(words, full);
-            for &t in tbl.iter().take(rem) {
-                out.push(sext(word & mask, sign) as f32 * t);
-                word >>= BITS;
-            }
-        }
-    } else {
-        // general channel stride: running channel cursor, still one
-        // word load per `n_lanes` outputs
-        let mut ch = 0usize;
-        for w in 0..full {
-            let mut word = word_at(words, w);
-            for _ in 0..n_lanes {
-                out.push(sext(word & mask, sign) as f32 * (scales[ch] * scale_mul));
-                word >>= BITS;
-                ch += 1;
-                if ch == c {
-                    ch = 0;
-                }
-            }
-        }
-        if rem > 0 {
-            let mut word = word_at(words, full);
-            for _ in 0..rem {
-                out.push(sext(word & mask, sign) as f32 * (scales[ch] * scale_mul));
-                word >>= BITS;
-                ch += 1;
-                if ch == c {
-                    ch = 0;
-                }
-            }
-        }
-    }
-}
-
-// ---------------------------------------------------------------------------
-// full-bit upgrade kernel: w_high + w_low word streams → f32
-// ---------------------------------------------------------------------------
 
 /// Fused full-bit upgrade decode: `len` values recomposed from the
 /// packed `w_high` (INT `h_bits`) and `w_low` (INT `low_bits`) word
 /// streams as `s · (w_high·2^l + w_low)` (Eq. 6), appended to `out`
 /// (cleared first). No intermediate i32 vectors exist at any point.
+/// Routed through the process-wide [`KernelPlan`].
 ///
 /// Bit-identical to `unpack → unpack → recompose_into → dequant`.
 /// `low_bits` is `l+1` for compensated residuals (the `.nq` on-disk
@@ -254,149 +386,23 @@ pub fn recompose_dequant_into(
     scales: &[f32],
     out: &mut Vec<f32>,
 ) {
-    out.clear();
-    if len == 0 {
-        return;
-    }
-    assert!(!scales.is_empty(), "recompose_dequant_into: empty scales");
-    assert!(
-        high_words.len() >= 8 * packed_nwords(len, h_bits),
-        "recompose_dequant_into: {} w_high bytes < {} needed for INT{h_bits} x {len}",
-        high_words.len(),
-        8 * packed_nwords(len, h_bits)
+    active().recompose_dequant_into(
+        high_words, h_bits, low_words, low_bits, l, len, scales, out,
     );
-    assert!(
-        low_words.len() >= 8 * packed_nwords(len, low_bits),
-        "recompose_dequant_into: {} w_low bytes < {} needed for INT{low_bits} x {len}",
-        low_words.len(),
-        8 * packed_nwords(len, low_bits)
-    );
-    out.reserve(len);
-    if swar_aligned(h_bits) && swar_aligned(low_bits) {
-        recompose_dequant_swar(high_words, h_bits, low_words, low_bits, l, len, scales, out);
-    } else {
-        recompose_dequant_scalar(high_words, h_bits, low_words, low_bits, l, len, scales, out);
-    }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn recompose_dequant_scalar(
-    high_words: &[u8],
-    h_bits: u8,
-    low_words: &[u8],
-    low_bits: u8,
-    l: u8,
-    len: usize,
-    scales: &[f32],
-    out: &mut Vec<f32>,
-) {
-    let mut hc = LaneCursor::new(high_words, h_bits);
-    let mut lc = LaneCursor::new(low_words, low_bits);
-    let shift = l as u32;
-    let c = scales.len();
-    let mut done = 0;
-    while done < len {
-        let take = c.min(len - done);
-        for &s in &scales[..take] {
-            let v = (hc.next() << shift) + lc.next();
-            out.push(v as f32 * s);
-        }
-        done += take;
-    }
-}
-
-/// Decode `n_words` whole words starting at word `first` into `dst`
-/// (`dst.len() == n_words · lanes`), SWAR-unrolled per word.
-fn decode_words_swar_inner<const BITS: u32>(
-    bytes: &[u8],
-    first: usize,
-    n_words: usize,
-    dst: &mut [i32],
-) {
-    let n_lanes = (64 / BITS) as usize;
-    let mask = (1u64 << BITS) - 1;
-    let sign = 1u64 << (BITS - 1);
-    debug_assert_eq!(dst.len(), n_words * n_lanes);
-    for (w, chunk) in dst.chunks_exact_mut(n_lanes).enumerate() {
-        let mut word = word_at(bytes, first + w);
-        for d in chunk {
-            *d = sext(word & mask, sign);
-            word >>= BITS;
-        }
-    }
-}
-
-fn decode_words_swar(bytes: &[u8], bits: u8, first: usize, n_words: usize, dst: &mut [i32]) {
-    match bits {
-        2 => decode_words_swar_inner::<2>(bytes, first, n_words, dst),
-        4 => decode_words_swar_inner::<4>(bytes, first, n_words, dst),
-        8 => decode_words_swar_inner::<8>(bytes, first, n_words, dst),
-        16 => decode_words_swar_inner::<16>(bytes, first, n_words, dst),
-        _ => unreachable!("decode_words_swar on non-aligned bits {bits}"),
-    }
-}
-
-/// SWAR pair path: both bitwidths divide 64, so their lane counts are
-/// powers of two and the smaller divides the larger — a block of
-/// `max(h_lanes, low_lanes)` elements is whole words of *both* streams.
-/// Each block decodes into two stack buffers (≤ 32 lanes, registers/L1)
-/// and combines straight into the output f32s.
-#[allow(clippy::too_many_arguments)]
-fn recompose_dequant_swar(
-    high_words: &[u8],
-    h_bits: u8,
-    low_words: &[u8],
-    low_bits: u8,
-    l: u8,
-    len: usize,
-    scales: &[f32],
-    out: &mut Vec<f32>,
-) {
-    let h_lanes = lanes(h_bits);
-    let l_lanes = lanes(low_bits);
-    let block = h_lanes.max(l_lanes);
-    let shift = l as u32;
-    let c = scales.len();
-    let mut hbuf = [0i32; MAX_LANES];
-    let mut lbuf = [0i32; MAX_LANES];
-    let hoist = c <= block && block % c == 0;
-    let mut tbl = [0f32; MAX_LANES];
-    if hoist {
-        // block boundaries land on channel boundaries: one scale table
-        for (i, t) in tbl.iter_mut().take(block).enumerate() {
-            *t = scales[i % c];
-        }
-    }
-    let (mut done, mut hw, mut lw, mut ch) = (0usize, 0usize, 0usize, 0usize);
-    while done < len {
-        let take = block.min(len - done);
-        let need_hw = take.div_ceil(h_lanes);
-        let need_lw = take.div_ceil(l_lanes);
-        decode_words_swar(high_words, h_bits, hw, need_hw, &mut hbuf[..need_hw * h_lanes]);
-        decode_words_swar(low_words, low_bits, lw, need_lw, &mut lbuf[..need_lw * l_lanes]);
-        hw += need_hw;
-        lw += need_lw;
-        if hoist {
-            for ((&h, &lo), &t) in hbuf[..take].iter().zip(&lbuf[..take]).zip(&tbl[..take]) {
-                out.push(((h << shift) + lo) as f32 * t);
-            }
-        } else {
-            for (&h, &lo) in hbuf[..take].iter().zip(&lbuf[..take]) {
-                out.push(((h << shift) + lo) as f32 * scales[ch]);
-                ch += 1;
-                if ch == c {
-                    ch = 0;
-                }
-            }
-        }
-        done += take;
-    }
+/// Plain i32 unpack from packed LE bytes, routed through the
+/// process-wide [`KernelPlan`] — the dispatched successor of the
+/// iterator-based `bits::unpack_words_into` (which remains the portable
+/// entry for non-contiguous word streams).
+pub fn unpack_ints_into(words: &[u8], bits: u8, len: usize, out: &mut Vec<i32>) {
+    active().unpack_ints_into(words, bits, len, out);
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::bits::{int_range, PackedTensor};
+    use crate::bits::{int_range, lanes, PackedTensor};
     use crate::nest;
     use crate::quant;
 
@@ -430,7 +436,7 @@ mod tests {
     }
 
     #[test]
-    fn unpack_dequant_matches_legacy_all_bits() {
+    fn unpack_dequant_matches_legacy_all_bits_all_tiers() {
         for bits in 2..=16u8 {
             let (lo, hi) = int_range(bits);
             // length deliberately NOT a multiple of lanes(bits)
@@ -444,16 +450,19 @@ mod tests {
                 let scales = toy_scales(c);
                 for mul in [1.0f32, 16.0] {
                     let want = legacy_unpack_dequant(&t, &scales, mul);
-                    let mut got = Vec::new();
-                    unpack_dequant_into(&bytes, bits, len, &scales, mul, &mut got);
-                    assert_eq!(got, want, "bits={bits} c={c} mul={mul}");
+                    for tier in Tier::all() {
+                        let mut got = Vec::new();
+                        plan_for(tier)
+                            .unpack_dequant_into(&bytes, bits, len, &scales, mul, &mut got);
+                        assert_eq!(got, want, "tier={tier} bits={bits} c={c} mul={mul}");
+                    }
                 }
             }
         }
     }
 
     #[test]
-    fn recompose_dequant_matches_legacy_grid() {
+    fn recompose_dequant_matches_legacy_grid_all_tiers() {
         // (7|4), (11|8), (5|2) hit the paired-SWAR path (both streams
         // lane-aligned); the rest cover mixed and fully scalar fallbacks
         for (n, h) in [
@@ -481,18 +490,38 @@ mod tests {
             for c in [1usize, 4, 5, 64] {
                 let scales = toy_scales(c);
                 let want = legacy_recompose_dequant(&th, &tl, cfg.l(), &scales);
+                for tier in Tier::all() {
+                    let mut got = Vec::new();
+                    plan_for(tier).recompose_dequant_into(
+                        &hb,
+                        h,
+                        &lb,
+                        cfg.low_bits(),
+                        cfg.l(),
+                        len,
+                        &scales,
+                        &mut got,
+                    );
+                    assert_eq!(got, want, "tier={tier} INT({n}|{h}) c={c}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unpack_ints_matches_packed_tensor_all_tiers() {
+        for bits in 2..=16u8 {
+            let (lo, hi) = int_range(bits);
+            let len = 4 * lanes(bits) + 1;
+            let vals: Vec<i32> = (0..len as i32)
+                .map(|i| lo + (i * 13) % (hi - lo + 1))
+                .collect();
+            let t = PackedTensor::pack(&vals, bits).unwrap();
+            let bytes = t.to_le_bytes();
+            for tier in Tier::all() {
                 let mut got = Vec::new();
-                recompose_dequant_into(
-                    &hb,
-                    h,
-                    &lb,
-                    cfg.low_bits(),
-                    cfg.l(),
-                    len,
-                    &scales,
-                    &mut got,
-                );
-                assert_eq!(got, want, "INT({n}|{h}) c={c}");
+                plan_for(tier).unpack_ints_into(&bytes, bits, len, &mut got);
+                assert_eq!(got, vals, "tier={tier} bits={bits}");
             }
         }
     }
@@ -520,5 +549,32 @@ mod tests {
         for b in aligned {
             assert_eq!(64 % b as usize, 0);
         }
+    }
+
+    #[test]
+    fn tier_env_contract() {
+        assert_eq!(tier_from_env(Some("scalar")), Tier::Scalar);
+        assert_eq!(tier_from_env(Some("SWAR")), Tier::Swar);
+        assert_eq!(tier_from_env(Some("simd")), Tier::Simd);
+        // unknown / unset fall back to the default, never panic
+        assert_eq!(tier_from_env(Some("avx9000")), Tier::Simd);
+        assert_eq!(tier_from_env(None), Tier::Simd);
+        for tier in Tier::all() {
+            let p = plan_for(tier);
+            assert_eq!(p.tier, tier);
+            assert!(!p.path.is_empty());
+            assert_eq!(Tier::parse(tier.label()), Some(tier));
+        }
+        // the active plan is one of the three
+        assert!(Tier::all().contains(&active().tier));
+    }
+
+    #[test]
+    fn fold_rep_wraps_channels() {
+        let rep = fold_rep(&[1.0, 2.0, 3.0], 2.0, 8);
+        assert_eq!(rep.len(), 3 + 7);
+        assert_eq!(&rep[..3], &[2.0, 4.0, 6.0]);
+        // wrapped tail repeats the folded scales
+        assert_eq!(&rep[3..], &[2.0, 4.0, 6.0, 2.0, 4.0, 6.0, 2.0]);
     }
 }

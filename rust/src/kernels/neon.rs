@@ -1,0 +1,216 @@
+//! aarch64 NEON tier: 4 elements per iteration for every bitwidth.
+//!
+//! NEON is mandatory on aarch64, so there is no runtime probe — the
+//! whole module is compile-time gated. Field extraction loads each
+//! lane's 4-byte window with *safe* `u32::from_le_bytes` slice reads
+//! (bounds come from the plan's `span` check, same contract as the x86
+//! tier), then does the per-lane variable right shift in-register:
+//! `vshlq_u32` with negated counts is NEON's `vpsrlvd`. Mask, xor-sub
+//! sign extension, convert and scale-multiply all stay in the same
+//! `uint32x4`/`float32x4` registers.
+//!
+//! # Safety
+//!
+//! The only `unsafe` is the NEON intrinsics themselves (always
+//! available on this target) and the raw stores into the output
+//! vector's reserved capacity — `set_len` is called with exactly the
+//! element count the body produced, and every one of those elements was
+//! stored first. All input loads are safe slice reads.
+
+#![allow(unsafe_op_in_unsafe_fn)]
+
+use std::arch::aarch64::*;
+
+use super::plan::{plan4, Group};
+use super::{fold_rep, scalar};
+
+/// Sub-path name for diagnostics and the bench artifact.
+pub(crate) fn path_name() -> &'static str {
+    "neon"
+}
+
+/// Load one group's four windows (safe reads) and extract the
+/// sign-extended fields as an `int32x4_t`.
+///
+/// Safety: NEON intrinsics only; caller verified `base + g.span <=
+/// bytes.len()`, which bounds every `off[k] + 4`.
+#[inline(always)]
+#[allow(clippy::needless_range_loop)] // k indexes two parallel fixed arrays
+unsafe fn extract4(bytes: &[u8], base: usize, g: &Group, mask: u32, sign: u32) -> int32x4_t {
+    let mut w = [0u32; 4];
+    for k in 0..4 {
+        let o = base + g.off[k] as usize;
+        w[k] = u32::from_le_bytes(bytes[o..o + 4].try_into().unwrap());
+    }
+    let wv = vld1q_u32(w.as_ptr());
+    let sh = vld1q_s32(g.shift.as_ptr());
+    // variable right shift: vshl by negated counts
+    let f = vandq_u32(vshlq_u32(wv, vnegq_s32(sh)), vdupq_n_u32(mask));
+    let sv = vdupq_n_s32(sign as i32);
+    vsubq_s32(veorq_s32(vreinterpretq_s32_u32(f), sv), sv)
+}
+
+unsafe fn unpack_dequant_body(
+    bytes: &[u8],
+    bits: u8,
+    len: usize,
+    rep: &[f32],
+    c: usize,
+    dst: *mut f32,
+) -> usize {
+    let plan = plan4(bits);
+    let mask = (1u32 << bits) - 1;
+    let sign = 1u32 << (bits - 1);
+    let mut e = 0usize;
+    let mut pbase = 0usize;
+    let mut ph = 0usize;
+    'periods: loop {
+        for g in &plan.groups {
+            if e + 4 > len || pbase + g.span > bytes.len() {
+                break 'periods;
+            }
+            let v = extract4(bytes, pbase, g, mask, sign);
+            let f = vcvtq_f32_s32(v);
+            let sc = vld1q_f32(rep.as_ptr().add(ph));
+            vst1q_f32(dst.add(e), vmulq_f32(f, sc));
+            e += 4;
+            ph += 4;
+            if ph >= c {
+                ph %= c;
+            }
+        }
+        pbase += plan.period_bytes;
+    }
+    e
+}
+
+#[allow(clippy::too_many_arguments)]
+unsafe fn recompose_dequant_body(
+    hb: &[u8],
+    h_bits: u8,
+    lb: &[u8],
+    low_bits: u8,
+    l: u8,
+    len: usize,
+    rep: &[f32],
+    c: usize,
+    dst: *mut f32,
+) -> usize {
+    let hp = plan4(h_bits);
+    let lp = plan4(low_bits);
+    let (hmask, hsign) = ((1u32 << h_bits) - 1, 1u32 << (h_bits - 1));
+    let (lmask, lsign) = ((1u32 << low_bits) - 1, 1u32 << (low_bits - 1));
+    let shl = vdupq_n_s32(l as i32);
+    let (mut e, mut ph) = (0usize, 0usize);
+    let (mut hgi, mut hbase) = (0usize, 0usize);
+    let (mut lgi, mut lbase) = (0usize, 0usize);
+    loop {
+        if e + 4 > len {
+            break;
+        }
+        let gh = &hp.groups[hgi];
+        let gl = &lp.groups[lgi];
+        if hbase + gh.span > hb.len() || lbase + gl.span > lb.len() {
+            break;
+        }
+        let vh = extract4(hb, hbase, gh, hmask, hsign);
+        let vl = extract4(lb, lbase, gl, lmask, lsign);
+        let v = vaddq_s32(vshlq_s32(vh, shl), vl);
+        let f = vcvtq_f32_s32(v);
+        let sc = vld1q_f32(rep.as_ptr().add(ph));
+        vst1q_f32(dst.add(e), vmulq_f32(f, sc));
+        e += 4;
+        hgi += 1;
+        if hgi == hp.groups.len() {
+            hgi = 0;
+            hbase += hp.period_bytes;
+        }
+        lgi += 1;
+        if lgi == lp.groups.len() {
+            lgi = 0;
+            lbase += lp.period_bytes;
+        }
+        ph += 4;
+        if ph >= c {
+            ph %= c;
+        }
+    }
+    e
+}
+
+unsafe fn unpack_ints_body(bytes: &[u8], bits: u8, len: usize, dst: *mut i32) -> usize {
+    let plan = plan4(bits);
+    let mask = (1u32 << bits) - 1;
+    let sign = 1u32 << (bits - 1);
+    let mut e = 0usize;
+    let mut pbase = 0usize;
+    'periods: loop {
+        for g in &plan.groups {
+            if e + 4 > len || pbase + g.span > bytes.len() {
+                break 'periods;
+            }
+            let v = extract4(bytes, pbase, g, mask, sign);
+            vst1q_s32(dst.add(e), v);
+            e += 4;
+        }
+        pbase += plan.period_bytes;
+    }
+    e
+}
+
+// ---------------------------------------------------------------------------
+// safe tier entries (fn-pointer targets for the KernelPlan vtable)
+// ---------------------------------------------------------------------------
+
+pub(crate) fn unpack_dequant(
+    words: &[u8],
+    bits: u8,
+    len: usize,
+    scales: &[f32],
+    scale_mul: f32,
+    out: &mut Vec<f32>,
+) {
+    let rep = fold_rep(scales, scale_mul, 4);
+    unsafe {
+        let d = unpack_dequant_body(words, bits, len, &rep, scales.len(), out.as_mut_ptr());
+        out.set_len(d);
+    }
+    scalar::unpack_dequant_tail(words, bits, len, scales, scale_mul, out);
+}
+
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn recompose_dequant(
+    high_words: &[u8],
+    h_bits: u8,
+    low_words: &[u8],
+    low_bits: u8,
+    l: u8,
+    len: usize,
+    scales: &[f32],
+    out: &mut Vec<f32>,
+) {
+    let rep = fold_rep(scales, 1.0, 4);
+    unsafe {
+        let d = recompose_dequant_body(
+            high_words,
+            h_bits,
+            low_words,
+            low_bits,
+            l,
+            len,
+            &rep,
+            scales.len(),
+            out.as_mut_ptr(),
+        );
+        out.set_len(d);
+    }
+    scalar::recompose_dequant_tail(high_words, h_bits, low_words, low_bits, l, len, scales, out);
+}
+
+pub(crate) fn unpack_ints(words: &[u8], bits: u8, len: usize, out: &mut Vec<i32>) {
+    unsafe {
+        let d = unpack_ints_body(words, bits, len, out.as_mut_ptr());
+        out.set_len(d);
+    }
+    scalar::unpack_ints_tail(words, bits, len, out);
+}

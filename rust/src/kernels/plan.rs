@@ -1,0 +1,283 @@
+//! Per-bitwidth lane plans: the precomputed window/shift tables the
+//! vector tiers consume.
+//!
+//! The packed stream is u64 words, `lanes = 64 / bits` fields per word,
+//! fields never straddling a word (the top `64 % bits` bits of each
+//! word are padding). A vector path wants, for a *group* of `G`
+//! consecutive elements, where to load and how far to shift — and that
+//! recipe is periodic: after `lcm(lanes, G)` elements the byte/bit
+//! phase repeats exactly one word-multiple later. So each bitwidth gets
+//! one [`LanePlan`]: `period_elems / G` [`Group`]s, each holding
+//!
+//! * `off[k]`  — byte offset (relative to the period base) of the
+//!   4-byte little-endian *window* containing element `k`'s field,
+//! * `shift[k]` — the field's bit offset inside that window (0..=7, so
+//!   `shift + bits <= 23 < 32` for every legal width: any field is
+//!   extractable from one unaligned u32 load),
+//! * a *broadcast* alternative for narrow widths: when all `G` fields
+//!   fit in one u32 window (`fits32`, true for bits <= 4 with G = 8),
+//!   one load at `base` plus per-lane shifts `bshift[k]` replaces the
+//!   per-lane windows — one load instead of a gather.
+//!
+//! `span` bounds every load the group performs (`off[G-1] + 4`, and the
+//! contiguous 8/16-byte loads of the byte/word-aligned fast paths are
+//! within it); drivers check `period_base + span <= bytes.len()` before
+//! touching a group and leave the remainder to the scalar tail, so no
+//! vector load ever reads past the slice.
+//!
+//! Everything here is pure safe Rust. [`decode_via_windows`] is the
+//! reference consumer: the exact extraction the SIMD tiers perform,
+//! expressed scalarly — the SSE2 tier uses it for field extraction, and
+//! the unit tests prove plan-driven extraction ≡ the lane-cursor decode
+//! for every width and phase, which is what makes the `unsafe` SIMD
+//! bodies small enough to audit (they change *how* the same windows are
+//! loaded, not *which*).
+
+use std::sync::OnceLock;
+
+use crate::bits::lanes;
+
+/// Widest group any tier asks for (AVX2 decodes 8 lanes per iteration).
+pub(crate) const MAX_GROUP: usize = 8;
+
+/// Extraction recipe for one group of `group_len` consecutive elements.
+#[derive(Debug, Clone)]
+pub(crate) struct Group {
+    /// Per-element window byte offset, relative to the period base.
+    /// Monotonic non-decreasing; entries past the plan's group size are
+    /// zero and unused.
+    pub off: [i32; MAX_GROUP],
+    /// Right-shift inside the loaded u32 window (0..=7).
+    pub shift: [i32; MAX_GROUP],
+    /// Broadcast form: shifts relative to one window at `base`.
+    pub bshift: [i32; MAX_GROUP],
+    /// Window byte offset of the broadcast form (== `off[0]`).
+    pub base: i32,
+    /// True when every field of the group fits in the one u32 window at
+    /// `base` (`bshift[k] + bits <= 32` for all lanes).
+    pub fits32: bool,
+    /// Upper bound (relative to the period base) on every byte this
+    /// group reads: `off[last] + 4`.
+    pub span: usize,
+}
+
+/// One bitwidth's periodic extraction table for a fixed group size.
+#[derive(Debug, Clone)]
+pub(crate) struct LanePlan {
+    pub bits: u8,
+    /// Elements per group (8 for AVX2, 4 for SSE2/NEON).
+    pub group: usize,
+    /// Elements after which the byte phase repeats (`lcm(lanes, group)`).
+    pub period_elems: usize,
+    /// Bytes per period (`period_elems / lanes * 8`).
+    pub period_bytes: usize,
+    /// `period_elems / group` groups covering one period.
+    pub groups: Vec<Group>,
+}
+
+fn gcd(a: usize, b: usize) -> usize {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+/// Build the plan for one `(bits, group)` pair. Pure arithmetic from the
+/// packed layout contract (element `e` lives in word `e / lanes` at bit
+/// `(e % lanes) * bits`).
+#[allow(clippy::needless_range_loop)] // parallel fixed-size arrays, k is the lane id
+pub(crate) fn build_plan(bits: u8, group: usize) -> LanePlan {
+    assert!(group <= MAX_GROUP);
+    let n_lanes = lanes(bits);
+    let period_elems = n_lanes * group / gcd(n_lanes, group);
+    let period_bytes = period_elems / n_lanes * 8;
+    let mut groups = Vec::with_capacity(period_elems / group);
+    for g0 in (0..period_elems).step_by(group) {
+        let mut g = Group {
+            off: [0; MAX_GROUP],
+            shift: [0; MAX_GROUP],
+            bshift: [0; MAX_GROUP],
+            base: 0,
+            fits32: true,
+            span: 0,
+        };
+        for k in 0..group {
+            let e = g0 + k;
+            let bit = (e % n_lanes) * bits as usize;
+            g.off[k] = ((e / n_lanes) * 8 + bit / 8) as i32;
+            g.shift[k] = (bit % 8) as i32;
+        }
+        g.base = g.off[0];
+        for k in 0..group {
+            g.bshift[k] = (g.off[k] - g.base) * 8 + g.shift[k];
+            if g.bshift[k] + bits as i32 > 32 {
+                g.fits32 = false;
+            }
+        }
+        g.span = g.off[group - 1] as usize + 4;
+        groups.push(g);
+    }
+    LanePlan {
+        bits,
+        group,
+        period_elems,
+        period_bytes,
+        groups,
+    }
+}
+
+fn plans(cell: &'static OnceLock<Vec<LanePlan>>, group: usize, bits: u8) -> &'static LanePlan {
+    let all = cell.get_or_init(|| (2..=16).map(|b| build_plan(b, group)).collect());
+    &all[bits as usize - 2]
+}
+
+/// The 8-lane plan for `bits` (built once per process).
+pub(crate) fn plan8(bits: u8) -> &'static LanePlan {
+    static PLANS8: OnceLock<Vec<LanePlan>> = OnceLock::new();
+    plans(&PLANS8, 8, bits)
+}
+
+/// The 4-lane plan for `bits` (built once per process).
+pub(crate) fn plan4(bits: u8) -> &'static LanePlan {
+    static PLANS4: OnceLock<Vec<LanePlan>> = OnceLock::new();
+    plans(&PLANS4, 4, bits)
+}
+
+/// Extract one sign-extended field through its window: the scalar
+/// spelling of exactly what the SIMD lanes do (u32 load, shift, mask,
+/// xor-sub sign extension). Safe — slice indexing; callers stay in
+/// bounds via the group `span` check.
+#[inline(always)]
+pub(crate) fn extract_window(bytes: &[u8], off: usize, shift: u32, mask: u32, sign: u32) -> i32 {
+    let w = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+    let f = (w >> shift) & mask;
+    ((f ^ sign) as i32).wrapping_sub(sign as i32)
+}
+
+/// Decode one group's fields into `dst[..group]` via the plan windows —
+/// the reference extraction shared by the SSE2 tier and the plan tests.
+#[inline(always)]
+#[allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+pub(crate) fn extract_group(
+    bytes: &[u8],
+    base: usize,
+    g: &Group,
+    group: usize,
+    mask: u32,
+    sign: u32,
+    dst: &mut [i32],
+) {
+    for k in 0..group {
+        dst[k] = extract_window(
+            bytes,
+            base + g.off[k] as usize,
+            g.shift[k] as u32,
+            mask,
+            sign,
+        );
+    }
+}
+
+/// Plan-driven whole-stream decode (pure safe Rust): walks periods and
+/// groups exactly like the SIMD drivers — including the `span` bounds
+/// check and the "stop and leave the rest to the tail" behavior — and
+/// returns how many elements it produced (always a multiple of the
+/// group size, `<= len`). The unit tests pin this against the
+/// lane-cursor decode; the SIMD bodies only vectorize its inner loop.
+pub(crate) fn decode_via_windows(
+    bytes: &[u8],
+    plan: &LanePlan,
+    len: usize,
+    out: &mut Vec<i32>,
+) -> usize {
+    let mask = (1u32 << plan.bits) - 1;
+    let sign = 1u32 << (plan.bits - 1);
+    let mut buf = [0i32; MAX_GROUP];
+    let mut e = 0usize;
+    let mut pbase = 0usize;
+    'periods: loop {
+        for g in &plan.groups {
+            if e + plan.group > len || pbase + g.span > bytes.len() {
+                break 'periods;
+            }
+            extract_group(bytes, pbase, g, plan.group, mask, sign, &mut buf);
+            out.extend_from_slice(&buf[..plan.group]);
+            e += plan.group;
+        }
+        pbase += plan.period_bytes;
+    }
+    e
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bits::{int_range, PackedTensor};
+
+    /// Every width × both group sizes: plan-driven window extraction
+    /// equals the packed-tensor decode on every element it covers, for
+    /// lengths straddling word and period boundaries.
+    #[test]
+    fn window_decode_matches_lane_cursor_all_widths() {
+        for bits in 2..=16u8 {
+            let (lo, hi) = int_range(bits);
+            for plan in [plan8(bits), plan4(bits)] {
+                for len in [
+                    0,
+                    1,
+                    plan.group - 1,
+                    plan.group,
+                    lanes(bits),
+                    lanes(bits) + 1,
+                    plan.period_elems - 1,
+                    plan.period_elems,
+                    3 * plan.period_elems + plan.group + 1,
+                ] {
+                    let vals: Vec<i32> = (0..len as i32)
+                        .map(|i| lo + (i * 29) % (hi - lo + 1))
+                        .collect();
+                    let t = PackedTensor::pack(&vals, bits).unwrap();
+                    let bytes = t.to_le_bytes();
+                    let mut got = Vec::new();
+                    let done = decode_via_windows(&bytes, plan, len, &mut got);
+                    assert!(done <= len && done % plan.group == 0);
+                    assert_eq!(got.len(), done);
+                    assert_eq!(&got[..], &vals[..done], "bits={bits} g={} len={len}", plan.group);
+                }
+            }
+        }
+    }
+
+    /// Structural invariants the unsafe drivers rely on: shifts fit a
+    /// u32 window, offsets are monotonic, spans bound every load, and
+    /// the broadcast form is available exactly when it is sound.
+    #[test]
+    fn plan_invariants() {
+        for bits in 2..=16u8 {
+            for plan in [plan8(bits), plan4(bits)] {
+                assert_eq!(plan.period_elems % plan.group, 0);
+                assert_eq!(plan.period_elems % lanes(bits), 0);
+                assert_eq!(plan.period_bytes, plan.period_elems / lanes(bits) * 8);
+                for g in &plan.groups {
+                    for k in 0..plan.group {
+                        assert!((0..8).contains(&g.shift[k]), "bits={bits}");
+                        assert!(g.shift[k] + (bits as i32) <= 23, "window fits u32");
+                        assert!(g.off[k] + 4 <= g.span as i32);
+                        if k > 0 {
+                            assert!(g.off[k] >= g.off[k - 1], "monotonic windows");
+                        }
+                        if g.fits32 {
+                            assert!(g.bshift[k] + (bits as i32) <= 32);
+                            assert!(g.base + 4 <= g.span as i32);
+                        }
+                    }
+                }
+                // every width <= 4 gets the broadcast form on all groups
+                if bits <= 4 && plan.group == 8 {
+                    assert!(plan.groups.iter().all(|g| g.fits32), "bits={bits}");
+                }
+            }
+        }
+    }
+}

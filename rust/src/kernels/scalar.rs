@@ -1,0 +1,225 @@
+//! Scalar tier: the portable lane-cursor decode — one u64 load per
+//! `lanes(bits)` values, shift-and-mask per lane. This is the reference
+//! semantics every other tier must match bit-for-bit, the fallback on
+//! architectures without an explicit vector path, and (via the `*_tail`
+//! entry points, which can start mid-stream) the tail handler the SIMD
+//! drivers use for the elements their bounds checks leave behind.
+
+use crate::bits::{lanes, sext};
+
+use super::word_at;
+
+/// Streaming lane decoder over packed LE words: the state the scalar
+/// paths carry instead of materializing word or i32 vectors.
+pub(crate) struct LaneCursor<'a> {
+    bytes: &'a [u8],
+    /// Next word index to load.
+    next_word: usize,
+    word: u64,
+    /// Lanes left in the loaded word.
+    left: usize,
+    bits: u32,
+    lanes: usize,
+    mask: u64,
+    sign: u64,
+}
+
+impl<'a> LaneCursor<'a> {
+    pub(crate) fn new(bytes: &'a [u8], bits: u8) -> LaneCursor<'a> {
+        LaneCursor {
+            bytes,
+            next_word: 0,
+            word: 0,
+            left: 0,
+            bits: bits as u32,
+            lanes: lanes(bits),
+            mask: (1u64 << bits) - 1,
+            sign: 1u64 << (bits - 1),
+        }
+    }
+
+    /// Cursor positioned at element `start` (the SIMD tail entry: the
+    /// vector body stopped at a group boundary, the cursor picks up
+    /// mid-word from there).
+    pub(crate) fn new_at(bytes: &'a [u8], bits: u8, start: usize) -> LaneCursor<'a> {
+        let mut c = LaneCursor::new(bytes, bits);
+        let lane = start % c.lanes;
+        let word_idx = start / c.lanes;
+        if lane > 0 {
+            c.word = word_at(bytes, word_idx) >> (lane as u32 * c.bits);
+            c.left = c.lanes - lane;
+            c.next_word = word_idx + 1;
+        } else {
+            c.next_word = word_idx;
+        }
+        c
+    }
+
+    #[inline(always)]
+    pub(crate) fn next(&mut self) -> i32 {
+        if self.left == 0 {
+            self.word = word_at(self.bytes, self.next_word);
+            self.next_word += 1;
+            self.left = self.lanes;
+        }
+        let v = sext(self.word & self.mask, self.sign);
+        self.word >>= self.bits;
+        self.left -= 1;
+        v
+    }
+}
+
+/// Scalar part-bit launch: cursor + channel-sized row chunks (the
+/// channel index is the position in the chunk — no per-element modulo).
+pub(crate) fn unpack_dequant(
+    words: &[u8],
+    bits: u8,
+    len: usize,
+    scales: &[f32],
+    scale_mul: f32,
+    out: &mut Vec<f32>,
+) {
+    let mut cur = LaneCursor::new(words, bits);
+    let c = scales.len();
+    let mut done = 0;
+    while done < len {
+        let take = c.min(len - done);
+        for &s in &scales[..take] {
+            out.push(cur.next() as f32 * (s * scale_mul));
+        }
+        done += take;
+    }
+}
+
+/// Scalar full-bit upgrade: two cursors, fused recompose + dequant.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn recompose_dequant(
+    high_words: &[u8],
+    h_bits: u8,
+    low_words: &[u8],
+    low_bits: u8,
+    l: u8,
+    len: usize,
+    scales: &[f32],
+    out: &mut Vec<f32>,
+) {
+    let mut hc = LaneCursor::new(high_words, h_bits);
+    let mut lc = LaneCursor::new(low_words, low_bits);
+    let shift = l as u32;
+    let c = scales.len();
+    let mut done = 0;
+    while done < len {
+        let take = c.min(len - done);
+        for &s in &scales[..take] {
+            let v = (hc.next() << shift) + lc.next();
+            out.push(v as f32 * s);
+        }
+        done += take;
+    }
+}
+
+/// Scalar i32 unpack (the non-dequantizing entry).
+pub(crate) fn unpack_ints(words: &[u8], bits: u8, len: usize, out: &mut Vec<i32>) {
+    let mut cur = LaneCursor::new(words, bits);
+    for _ in 0..len {
+        out.push(cur.next());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// mid-stream tails for the SIMD drivers
+// ---------------------------------------------------------------------------
+
+/// Finish a launch decode from `out.len()` to `len` (channel phase and
+/// cursor position derived from the resume element).
+pub(crate) fn unpack_dequant_tail(
+    words: &[u8],
+    bits: u8,
+    len: usize,
+    scales: &[f32],
+    scale_mul: f32,
+    out: &mut Vec<f32>,
+) {
+    let start = out.len();
+    if start >= len {
+        return;
+    }
+    let mut cur = LaneCursor::new_at(words, bits, start);
+    let c = scales.len();
+    let mut ch = start % c;
+    for _ in start..len {
+        out.push(cur.next() as f32 * (scales[ch] * scale_mul));
+        ch += 1;
+        if ch == c {
+            ch = 0;
+        }
+    }
+}
+
+/// Finish an upgrade decode from `out.len()` to `len`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn recompose_dequant_tail(
+    high_words: &[u8],
+    h_bits: u8,
+    low_words: &[u8],
+    low_bits: u8,
+    l: u8,
+    len: usize,
+    scales: &[f32],
+    out: &mut Vec<f32>,
+) {
+    let start = out.len();
+    if start >= len {
+        return;
+    }
+    let mut hc = LaneCursor::new_at(high_words, h_bits, start);
+    let mut lc = LaneCursor::new_at(low_words, low_bits, start);
+    let shift = l as u32;
+    let c = scales.len();
+    let mut ch = start % c;
+    for _ in start..len {
+        let v = (hc.next() << shift) + lc.next();
+        out.push(v as f32 * scales[ch]);
+        ch += 1;
+        if ch == c {
+            ch = 0;
+        }
+    }
+}
+
+/// Finish an i32 unpack from `out.len()` to `len`.
+pub(crate) fn unpack_ints_tail(words: &[u8], bits: u8, len: usize, out: &mut Vec<i32>) {
+    let start = out.len();
+    if start >= len {
+        return;
+    }
+    let mut cur = LaneCursor::new_at(words, bits, start);
+    for _ in start..len {
+        out.push(cur.next());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bits::{int_range, PackedTensor};
+
+    /// `new_at(k)` ≡ skipping k values of a fresh cursor, for every
+    /// width and every in-word phase.
+    #[test]
+    fn cursor_resume_equals_skip() {
+        for bits in 2..=16u8 {
+            let (lo, hi) = int_range(bits);
+            let len = 3 * lanes(bits) + 2;
+            let vals: Vec<i32> = (0..len as i32)
+                .map(|i| lo + (i * 17) % (hi - lo + 1))
+                .collect();
+            let bytes = PackedTensor::pack(&vals, bits).unwrap().to_le_bytes();
+            for start in 0..len {
+                let mut cur = LaneCursor::new_at(&bytes, bits, start);
+                let got: Vec<i32> = (start..len).map(|_| cur.next()).collect();
+                assert_eq!(got, &vals[start..], "bits={bits} start={start}");
+            }
+        }
+    }
+}

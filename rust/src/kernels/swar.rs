@@ -1,0 +1,218 @@
+//! SWAR tier: word-parallel decode in general-purpose registers for
+//! lane-aligned bitwidths (`bits ∣ 64`, i.e. 2/4/8/16) — constant-trip
+//! unrolled mask/shift loops the compiler vectorizes, xor-sub sign
+//! extension, hoisted per-channel scale tables, and a paired-stream
+//! block decode when both upgrade streams are aligned. Widths that
+//! don't divide 64 fall through to the scalar lane cursor, which is
+//! exactly what the SIMD tier exists to fix.
+
+use crate::bits::{lanes, sext};
+
+use super::{scalar, swar_aligned, word_at, MAX_LANES};
+
+/// SWAR-tier part-bit launch: aligned widths take the word-parallel
+/// path, everything else the scalar cursor.
+pub(crate) fn unpack_dequant(
+    words: &[u8],
+    bits: u8,
+    len: usize,
+    scales: &[f32],
+    scale_mul: f32,
+    out: &mut Vec<f32>,
+) {
+    match bits {
+        2 => unpack_dequant_swar::<2>(words, len, scales, scale_mul, out),
+        4 => unpack_dequant_swar::<4>(words, len, scales, scale_mul, out),
+        8 => unpack_dequant_swar::<8>(words, len, scales, scale_mul, out),
+        16 => unpack_dequant_swar::<16>(words, len, scales, scale_mul, out),
+        _ => scalar::unpack_dequant(words, bits, len, scales, scale_mul, out),
+    }
+}
+
+/// SWAR path (`BITS ∣ 64`): constant-trip unrolled mask/shift over whole
+/// words; per-channel scales hoisted into a per-word table when the
+/// channel count divides the lane count.
+fn unpack_dequant_swar<const BITS: u32>(
+    words: &[u8],
+    len: usize,
+    scales: &[f32],
+    scale_mul: f32,
+    out: &mut Vec<f32>,
+) {
+    let n_lanes = (64 / BITS) as usize;
+    let mask = (1u64 << BITS) - 1;
+    let sign = 1u64 << (BITS - 1);
+    let c = scales.len();
+    let full = len / n_lanes;
+    let rem = len - full * n_lanes;
+    if c <= n_lanes && n_lanes % c == 0 {
+        // channel phase repeats exactly per word: hoist scales (with the
+        // inflation folded in) into one table, indexed by lane
+        let mut tbl = [0f32; MAX_LANES];
+        for (i, t) in tbl.iter_mut().take(n_lanes).enumerate() {
+            *t = scales[i % c] * scale_mul;
+        }
+        for w in 0..full {
+            let mut word = word_at(words, w);
+            for &t in tbl.iter().take(n_lanes) {
+                out.push(sext(word & mask, sign) as f32 * t);
+                word >>= BITS;
+            }
+        }
+        if rem > 0 {
+            let mut word = word_at(words, full);
+            for &t in tbl.iter().take(rem) {
+                out.push(sext(word & mask, sign) as f32 * t);
+                word >>= BITS;
+            }
+        }
+    } else {
+        // general channel stride: running channel cursor, still one
+        // word load per `n_lanes` outputs
+        let mut ch = 0usize;
+        for w in 0..full {
+            let mut word = word_at(words, w);
+            for _ in 0..n_lanes {
+                out.push(sext(word & mask, sign) as f32 * (scales[ch] * scale_mul));
+                word >>= BITS;
+                ch += 1;
+                if ch == c {
+                    ch = 0;
+                }
+            }
+        }
+        if rem > 0 {
+            let mut word = word_at(words, full);
+            for _ in 0..rem {
+                out.push(sext(word & mask, sign) as f32 * (scales[ch] * scale_mul));
+                word >>= BITS;
+                ch += 1;
+                if ch == c {
+                    ch = 0;
+                }
+            }
+        }
+    }
+}
+
+/// SWAR-tier full-bit upgrade: the paired path when both streams are
+/// aligned, scalar cursors otherwise.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn recompose_dequant(
+    high_words: &[u8],
+    h_bits: u8,
+    low_words: &[u8],
+    low_bits: u8,
+    l: u8,
+    len: usize,
+    scales: &[f32],
+    out: &mut Vec<f32>,
+) {
+    if swar_aligned(h_bits) && swar_aligned(low_bits) {
+        recompose_dequant_swar(high_words, h_bits, low_words, low_bits, l, len, scales, out);
+    } else {
+        scalar::recompose_dequant(high_words, h_bits, low_words, low_bits, l, len, scales, out);
+    }
+}
+
+/// Decode `n_words` whole words starting at word `first` into `dst`
+/// (`dst.len() == n_words · lanes`), SWAR-unrolled per word.
+fn decode_words_swar_inner<const BITS: u32>(
+    bytes: &[u8],
+    first: usize,
+    n_words: usize,
+    dst: &mut [i32],
+) {
+    let n_lanes = (64 / BITS) as usize;
+    let mask = (1u64 << BITS) - 1;
+    let sign = 1u64 << (BITS - 1);
+    debug_assert_eq!(dst.len(), n_words * n_lanes);
+    for (w, chunk) in dst.chunks_exact_mut(n_lanes).enumerate() {
+        let mut word = word_at(bytes, first + w);
+        for d in chunk {
+            *d = sext(word & mask, sign);
+            word >>= BITS;
+        }
+    }
+}
+
+fn decode_words_swar(bytes: &[u8], bits: u8, first: usize, n_words: usize, dst: &mut [i32]) {
+    match bits {
+        2 => decode_words_swar_inner::<2>(bytes, first, n_words, dst),
+        4 => decode_words_swar_inner::<4>(bytes, first, n_words, dst),
+        8 => decode_words_swar_inner::<8>(bytes, first, n_words, dst),
+        16 => decode_words_swar_inner::<16>(bytes, first, n_words, dst),
+        _ => unreachable!("decode_words_swar on non-aligned bits {bits}"),
+    }
+}
+
+/// SWAR pair path: both bitwidths divide 64, so their lane counts are
+/// powers of two and the smaller divides the larger — a block of
+/// `max(h_lanes, low_lanes)` elements is whole words of *both* streams.
+/// Each block decodes into two stack buffers (≤ 32 lanes, registers/L1)
+/// and combines straight into the output f32s.
+#[allow(clippy::too_many_arguments)]
+fn recompose_dequant_swar(
+    high_words: &[u8],
+    h_bits: u8,
+    low_words: &[u8],
+    low_bits: u8,
+    l: u8,
+    len: usize,
+    scales: &[f32],
+    out: &mut Vec<f32>,
+) {
+    let h_lanes = lanes(h_bits);
+    let l_lanes = lanes(low_bits);
+    let block = h_lanes.max(l_lanes);
+    let shift = l as u32;
+    let c = scales.len();
+    let mut hbuf = [0i32; MAX_LANES];
+    let mut lbuf = [0i32; MAX_LANES];
+    let hoist = c <= block && block % c == 0;
+    let mut tbl = [0f32; MAX_LANES];
+    if hoist {
+        // block boundaries land on channel boundaries: one scale table
+        for (i, t) in tbl.iter_mut().take(block).enumerate() {
+            *t = scales[i % c];
+        }
+    }
+    let (mut done, mut hw, mut lw, mut ch) = (0usize, 0usize, 0usize, 0usize);
+    while done < len {
+        let take = block.min(len - done);
+        let need_hw = take.div_ceil(h_lanes);
+        let need_lw = take.div_ceil(l_lanes);
+        decode_words_swar(high_words, h_bits, hw, need_hw, &mut hbuf[..need_hw * h_lanes]);
+        decode_words_swar(low_words, low_bits, lw, need_lw, &mut lbuf[..need_lw * l_lanes]);
+        hw += need_hw;
+        lw += need_lw;
+        if hoist {
+            for ((&h, &lo), &t) in hbuf[..take].iter().zip(&lbuf[..take]).zip(&tbl[..take]) {
+                out.push(((h << shift) + lo) as f32 * t);
+            }
+        } else {
+            for (&h, &lo) in hbuf[..take].iter().zip(&lbuf[..take]) {
+                out.push(((h << shift) + lo) as f32 * scales[ch]);
+                ch += 1;
+                if ch == c {
+                    ch = 0;
+                }
+            }
+        }
+        done += take;
+    }
+}
+
+/// SWAR-tier i32 unpack (aligned widths word-parallel, scalar cursor
+/// otherwise) — the byte-slice successor of `bits::unpack_words_into`'s
+/// word-stream dispatch.
+pub(crate) fn unpack_ints(words: &[u8], bits: u8, len: usize, out: &mut Vec<i32>) {
+    if !swar_aligned(bits) {
+        scalar::unpack_ints(words, bits, len, out);
+        return;
+    }
+    let full = len / lanes(bits);
+    out.resize(full * lanes(bits), 0);
+    decode_words_swar(words, bits, 0, full, &mut out[..]);
+    scalar::unpack_ints_tail(words, bits, len, out);
+}

@@ -1,0 +1,466 @@
+//! x86-64 SIMD tier: explicit `std::arch` decode paths.
+//!
+//! Two sub-paths, selected once per process from the capability probe
+//! ([`caps`], a `OnceLock` — executor threads never re-detect in the
+//! decode loop):
+//!
+//! * **AVX2** — 8 elements per iteration. Field extraction per group is
+//!   the cheapest form the lane plan allows: `vpmovsxbd`/`vpmovsxwd`
+//!   contiguous loads for 8/16-bit streams, one u32 broadcast +
+//!   `vpsrlvd` for widths ≤ 4 (all eight fields share one window), and
+//!   a byte-offset `vpgatherdd` + `vpsrlvd` for everything else —
+//!   which is how the previously-scalar widths (3, 5, 6, 7, 9..15) get
+//!   a vector path. Sign extension is the same xor-sub idiom as the
+//!   SWAR tier, convert + scale-multiply ride in the same registers.
+//! * **SSE2 baseline** (x86-64 guarantees SSE2) — 4 elements per
+//!   iteration. Pre-AVX2 x86 has no per-lane variable shifts, so field
+//!   extraction uses the plan's scalar windows ([`plan::extract_group`])
+//!   and only the convert + multiply half is vectorized
+//!   (`cvtdq2ps`/`mulps`). A real win over the lane cursor on the f32
+//!   half; the honest tier table lives in DESIGN.md §4e.
+//!
+//! # Safety
+//!
+//! All `unsafe` here is (a) `std::arch` intrinsics behind the matching
+//! `#[target_feature]` (AVX2 fns are only reachable through the runtime
+//! probe), (b) raw stores into the output vector's reserved-but-unset
+//! capacity (the callers in `kernels::mod` reserve `len` up front and
+//! `set_len` to exactly the element count the body reports), and (c)
+//! unaligned loads whose every byte is bounds-checked *before* the
+//! group runs: each group's `span` is an upper bound on every offset it
+//! reads (gather offsets, broadcast window, and the contiguous movsx
+//! loads are all ≤ `span` by construction, see `plan.rs`), and the
+//! driver breaks to the scalar tail as soon as
+//! `period_base + span > bytes.len()` — and, because the gather's
+//! offsets are i32 lanes, as soon as the offsets would pass
+//! `i32::MAX` (a ≥2 GiB stream finishes scalarly instead of wrapping
+//! an offset negative). No vector load ever touches a byte outside the
+//! input slice, and every output element is written exactly once
+//! before `set_len` exposes it.
+
+#![allow(unsafe_op_in_unsafe_fn)]
+
+use std::arch::x86_64::*;
+use std::sync::OnceLock;
+
+use super::plan::{self, plan4, plan8, Group, LanePlan};
+use super::{fold_rep, scalar};
+
+/// Capabilities probed once per process (the `OnceLock` hoist: tenant
+/// executor threads and decode waves share this single probe).
+pub(crate) struct Caps {
+    pub avx2: bool,
+}
+
+pub(crate) fn caps() -> &'static Caps {
+    static CAPS: OnceLock<Caps> = OnceLock::new();
+    CAPS.get_or_init(|| Caps {
+        avx2: is_x86_feature_detected!("avx2"),
+    })
+}
+
+/// Human-readable sub-path name for diagnostics and the bench artifact.
+pub(crate) fn path_name() -> &'static str {
+    if caps().avx2 {
+        "avx2"
+    } else {
+        "sse2"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 sub-path
+// ---------------------------------------------------------------------------
+
+/// Extract 8 sign-extended fields of one group as packed i32 lanes.
+///
+/// Safety: caller has verified `base + g.span <= bytes.len()` and runs
+/// under the AVX2 target feature.
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn extract8(
+    bytes: &[u8],
+    base: usize,
+    g: &Group,
+    bits: u8,
+    mask: __m256i,
+    sign: __m256i,
+) -> __m256i {
+    match bits {
+        8 => {
+            // 8 contiguous bytes are the 8 fields: vpmovsxbd
+            let p = bytes.as_ptr().add(base + g.off[0] as usize);
+            _mm256_cvtepi8_epi32(_mm_loadl_epi64(p as *const __m128i))
+        }
+        16 => {
+            // 16 contiguous bytes: vpmovsxwd
+            let p = bytes.as_ptr().add(base + g.off[0] as usize);
+            _mm256_cvtepi16_epi32(_mm_loadu_si128(p as *const __m128i))
+        }
+        _ if g.fits32 => {
+            // all 8 fields inside one u32 window: broadcast + vpsrlvd
+            let p = bytes.as_ptr().add(base + g.base as usize);
+            let w = _mm256_set1_epi32((p as *const u32).read_unaligned() as i32);
+            let sh = _mm256_loadu_si256(g.bshift.as_ptr() as *const __m256i);
+            let f = _mm256_and_si256(_mm256_srlv_epi32(w, sh), mask);
+            _mm256_sub_epi32(_mm256_xor_si256(f, sign), sign)
+        }
+        _ => {
+            // general width: per-lane byte-offset gather + vpsrlvd
+            let offs = _mm256_add_epi32(
+                _mm256_loadu_si256(g.off.as_ptr() as *const __m256i),
+                _mm256_set1_epi32(base as i32),
+            );
+            let w = _mm256_i32gather_epi32::<1>(bytes.as_ptr() as *const i32, offs);
+            let sh = _mm256_loadu_si256(g.shift.as_ptr() as *const __m256i);
+            let f = _mm256_and_si256(_mm256_srlv_epi32(w, sh), mask);
+            _mm256_sub_epi32(_mm256_xor_si256(f, sign), sign)
+        }
+    }
+}
+
+#[inline(always)]
+fn mask_sign(bits: u8) -> (i32, i32) {
+    (((1u32 << bits) - 1) as i32, (1u32 << (bits - 1)) as i32)
+}
+
+/// AVX2 launch body: decode groups until the bounds check or the length
+/// stops us; returns elements produced (a multiple of 8).
+#[target_feature(enable = "avx2")]
+unsafe fn unpack_dequant_avx2_body(
+    bytes: &[u8],
+    bits: u8,
+    len: usize,
+    rep: &[f32],
+    c: usize,
+    dst: *mut f32,
+) -> usize {
+    let plan = plan8(bits);
+    let (m, s) = mask_sign(bits);
+    let mask = _mm256_set1_epi32(m);
+    let sign = _mm256_set1_epi32(s);
+    // every byte offset a group touches must also fit the gather's i32
+    // lanes — past 2 GiB the scalar tail takes over instead of wrapping
+    let limit = bytes.len().min(i32::MAX as usize);
+    let mut e = 0usize;
+    let mut pbase = 0usize;
+    let mut ph = 0usize;
+    'periods: loop {
+        for g in &plan.groups {
+            if e + 8 > len || pbase + g.span > limit {
+                break 'periods;
+            }
+            let v = extract8(bytes, pbase, g, bits, mask, sign);
+            let f = _mm256_cvtepi32_ps(v);
+            let sc = _mm256_loadu_ps(rep.as_ptr().add(ph));
+            _mm256_storeu_ps(dst.add(e), _mm256_mul_ps(f, sc));
+            e += 8;
+            ph += 8;
+            if ph >= c {
+                ph %= c;
+            }
+        }
+        pbase += plan.period_bytes;
+    }
+    e
+}
+
+/// AVX2 upgrade body: both streams walk their own plans group-by-group
+/// (group boundaries coincide — every period is a multiple of 8).
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn recompose_dequant_avx2_body(
+    hb: &[u8],
+    h_bits: u8,
+    lb: &[u8],
+    low_bits: u8,
+    l: u8,
+    len: usize,
+    rep: &[f32],
+    c: usize,
+    dst: *mut f32,
+) -> usize {
+    let hp: &LanePlan = plan8(h_bits);
+    let lp: &LanePlan = plan8(low_bits);
+    let (hm, hs) = mask_sign(h_bits);
+    let (lm, ls) = mask_sign(low_bits);
+    let hmask = _mm256_set1_epi32(hm);
+    let hsign = _mm256_set1_epi32(hs);
+    let lmask = _mm256_set1_epi32(lm);
+    let lsign = _mm256_set1_epi32(ls);
+    let shl = _mm_cvtsi32_si128(l as i32);
+    // gather offsets are i32 lanes: stop vectorizing past 2 GiB
+    let hlimit = hb.len().min(i32::MAX as usize);
+    let llimit = lb.len().min(i32::MAX as usize);
+    let (mut e, mut ph) = (0usize, 0usize);
+    let (mut hgi, mut hbase) = (0usize, 0usize);
+    let (mut lgi, mut lbase) = (0usize, 0usize);
+    loop {
+        if e + 8 > len {
+            break;
+        }
+        let gh = &hp.groups[hgi];
+        let gl = &lp.groups[lgi];
+        if hbase + gh.span > hlimit || lbase + gl.span > llimit {
+            break;
+        }
+        let vh = extract8(hb, hbase, gh, h_bits, hmask, hsign);
+        let vl = extract8(lb, lbase, gl, low_bits, lmask, lsign);
+        let v = _mm256_add_epi32(_mm256_sll_epi32(vh, shl), vl);
+        let f = _mm256_cvtepi32_ps(v);
+        let sc = _mm256_loadu_ps(rep.as_ptr().add(ph));
+        _mm256_storeu_ps(dst.add(e), _mm256_mul_ps(f, sc));
+        e += 8;
+        hgi += 1;
+        if hgi == hp.groups.len() {
+            hgi = 0;
+            hbase += hp.period_bytes;
+        }
+        lgi += 1;
+        if lgi == lp.groups.len() {
+            lgi = 0;
+            lbase += lp.period_bytes;
+        }
+        ph += 8;
+        if ph >= c {
+            ph %= c;
+        }
+    }
+    e
+}
+
+/// AVX2 i32 unpack body.
+#[target_feature(enable = "avx2")]
+unsafe fn unpack_ints_avx2_body(bytes: &[u8], bits: u8, len: usize, dst: *mut i32) -> usize {
+    let plan = plan8(bits);
+    let (m, s) = mask_sign(bits);
+    let mask = _mm256_set1_epi32(m);
+    let sign = _mm256_set1_epi32(s);
+    // gather offsets are i32 lanes: stop vectorizing past 2 GiB
+    let limit = bytes.len().min(i32::MAX as usize);
+    let mut e = 0usize;
+    let mut pbase = 0usize;
+    'periods: loop {
+        for g in &plan.groups {
+            if e + 8 > len || pbase + g.span > limit {
+                break 'periods;
+            }
+            let v = extract8(bytes, pbase, g, bits, mask, sign);
+            _mm256_storeu_si256(dst.add(e) as *mut __m256i, v);
+            e += 8;
+        }
+        pbase += plan.period_bytes;
+    }
+    e
+}
+
+// ---------------------------------------------------------------------------
+// SSE2 sub-path (baseline: no gathers, no per-lane variable shifts)
+// ---------------------------------------------------------------------------
+
+/// SSE2 launch body: plan-window extraction (scalar), convert + scale
+/// multiply in xmm registers, 4 elements per iteration.
+unsafe fn unpack_dequant_sse2_body(
+    bytes: &[u8],
+    bits: u8,
+    len: usize,
+    rep: &[f32],
+    c: usize,
+    dst: *mut f32,
+) -> usize {
+    let plan = plan4(bits);
+    let mask = (1u32 << bits) - 1;
+    let sign = 1u32 << (bits - 1);
+    let mut buf = [0i32; plan::MAX_GROUP];
+    let mut e = 0usize;
+    let mut pbase = 0usize;
+    let mut ph = 0usize;
+    'periods: loop {
+        for g in &plan.groups {
+            if e + 4 > len || pbase + g.span > bytes.len() {
+                break 'periods;
+            }
+            plan::extract_group(bytes, pbase, g, 4, mask, sign, &mut buf);
+            let v = _mm_loadu_si128(buf.as_ptr() as *const __m128i);
+            let f = _mm_cvtepi32_ps(v);
+            let sc = _mm_loadu_ps(rep.as_ptr().add(ph));
+            _mm_storeu_ps(dst.add(e), _mm_mul_ps(f, sc));
+            e += 4;
+            ph += 4;
+            if ph >= c {
+                ph %= c;
+            }
+        }
+        pbase += plan.period_bytes;
+    }
+    e
+}
+
+/// SSE2 upgrade body.
+#[allow(clippy::too_many_arguments)]
+unsafe fn recompose_dequant_sse2_body(
+    hb: &[u8],
+    h_bits: u8,
+    lb: &[u8],
+    low_bits: u8,
+    l: u8,
+    len: usize,
+    rep: &[f32],
+    c: usize,
+    dst: *mut f32,
+) -> usize {
+    let hp = plan4(h_bits);
+    let lp = plan4(low_bits);
+    let (hmask, hsign) = ((1u32 << h_bits) - 1, 1u32 << (h_bits - 1));
+    let (lmask, lsign) = ((1u32 << low_bits) - 1, 1u32 << (low_bits - 1));
+    let shl = _mm_cvtsi32_si128(l as i32);
+    let mut hbuf = [0i32; plan::MAX_GROUP];
+    let mut lbuf = [0i32; plan::MAX_GROUP];
+    let (mut e, mut ph) = (0usize, 0usize);
+    let (mut hgi, mut hbase) = (0usize, 0usize);
+    let (mut lgi, mut lbase) = (0usize, 0usize);
+    loop {
+        if e + 4 > len {
+            break;
+        }
+        let gh = &hp.groups[hgi];
+        let gl = &lp.groups[lgi];
+        if hbase + gh.span > hb.len() || lbase + gl.span > lb.len() {
+            break;
+        }
+        plan::extract_group(hb, hbase, gh, 4, hmask, hsign, &mut hbuf);
+        plan::extract_group(lb, lbase, gl, 4, lmask, lsign, &mut lbuf);
+        let vh = _mm_loadu_si128(hbuf.as_ptr() as *const __m128i);
+        let vl = _mm_loadu_si128(lbuf.as_ptr() as *const __m128i);
+        let v = _mm_add_epi32(_mm_sll_epi32(vh, shl), vl);
+        let f = _mm_cvtepi32_ps(v);
+        let sc = _mm_loadu_ps(rep.as_ptr().add(ph));
+        _mm_storeu_ps(dst.add(e), _mm_mul_ps(f, sc));
+        e += 4;
+        hgi += 1;
+        if hgi == hp.groups.len() {
+            hgi = 0;
+            hbase += hp.period_bytes;
+        }
+        lgi += 1;
+        if lgi == lp.groups.len() {
+            lgi = 0;
+            lbase += lp.period_bytes;
+        }
+        ph += 4;
+        if ph >= c {
+            ph %= c;
+        }
+    }
+    e
+}
+
+// ---------------------------------------------------------------------------
+// safe tier entries (fn-pointer targets for the KernelPlan vtable)
+// ---------------------------------------------------------------------------
+
+pub(crate) fn unpack_dequant_avx2(
+    words: &[u8],
+    bits: u8,
+    len: usize,
+    scales: &[f32],
+    scale_mul: f32,
+    out: &mut Vec<f32>,
+) {
+    let rep = fold_rep(scales, scale_mul, 8);
+    let done = unsafe {
+        let d = unpack_dequant_avx2_body(words, bits, len, &rep, scales.len(), out.as_mut_ptr());
+        out.set_len(d);
+        d
+    };
+    debug_assert!(done <= len);
+    scalar::unpack_dequant_tail(words, bits, len, scales, scale_mul, out);
+}
+
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn recompose_dequant_avx2(
+    high_words: &[u8],
+    h_bits: u8,
+    low_words: &[u8],
+    low_bits: u8,
+    l: u8,
+    len: usize,
+    scales: &[f32],
+    out: &mut Vec<f32>,
+) {
+    let rep = fold_rep(scales, 1.0, 8);
+    unsafe {
+        let d = recompose_dequant_avx2_body(
+            high_words,
+            h_bits,
+            low_words,
+            low_bits,
+            l,
+            len,
+            &rep,
+            scales.len(),
+            out.as_mut_ptr(),
+        );
+        out.set_len(d);
+    }
+    scalar::recompose_dequant_tail(high_words, h_bits, low_words, low_bits, l, len, scales, out);
+}
+
+pub(crate) fn unpack_ints_avx2(words: &[u8], bits: u8, len: usize, out: &mut Vec<i32>) {
+    unsafe {
+        let d = unpack_ints_avx2_body(words, bits, len, out.as_mut_ptr());
+        out.set_len(d);
+    }
+    scalar::unpack_ints_tail(words, bits, len, out);
+}
+
+pub(crate) fn unpack_dequant_sse2(
+    words: &[u8],
+    bits: u8,
+    len: usize,
+    scales: &[f32],
+    scale_mul: f32,
+    out: &mut Vec<f32>,
+) {
+    let rep = fold_rep(scales, scale_mul, 4);
+    unsafe {
+        let d = unpack_dequant_sse2_body(words, bits, len, &rep, scales.len(), out.as_mut_ptr());
+        out.set_len(d);
+    }
+    scalar::unpack_dequant_tail(words, bits, len, scales, scale_mul, out);
+}
+
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn recompose_dequant_sse2(
+    high_words: &[u8],
+    h_bits: u8,
+    low_words: &[u8],
+    low_bits: u8,
+    l: u8,
+    len: usize,
+    scales: &[f32],
+    out: &mut Vec<f32>,
+) {
+    let rep = fold_rep(scales, 1.0, 4);
+    unsafe {
+        let d = recompose_dequant_sse2_body(
+            high_words,
+            h_bits,
+            low_words,
+            low_bits,
+            l,
+            len,
+            &rep,
+            scales.len(),
+            out.as_mut_ptr(),
+        );
+        out.set_len(d);
+    }
+    scalar::recompose_dequant_tail(high_words, h_bits, low_words, low_bits, l, len, scales, out);
+}
+
+/// SSE2 has no vector win for a pure i32 unpack (extraction is already
+/// scalar there); route to the SWAR word-parallel path.
+pub(crate) fn unpack_ints_sse2(words: &[u8], bits: u8, len: usize, out: &mut Vec<i32>) {
+    super::swar::unpack_ints(words, bits, len, out);
+}

@@ -10,11 +10,12 @@
 //!   fallback), device simulator, transmission system, the fleet
 //!   distribution subsystem (resumable delta paging + zoo-wide section
 //!   cache), the zero-copy [`store`] access layer (`NqArchive` +
-//!   `SectionSource`) every tier reads models through, the fused
-//!   word-parallel switching [`kernels`] (one-pass packed → f32
-//!   decode), and every substrate they need (packed bits, `.nq`
-//!   containers, quantizer, statistics). Python never runs on the
-//!   request path.
+//!   `SectionSource`) every tier reads models through, the
+//!   runtime-dispatched switching [`kernels`] (one-pass packed → f32
+//!   decode; scalar/SWAR/SIMD tiers behind a per-process `KernelPlan`),
+//!   and every substrate they need (packed bits, `.nq` containers with
+//!   integrity trailers, quantizer, statistics). Python never runs on
+//!   the request path.
 //! - **L2 (python/compile)** — the JAX model zoo + PTQ pipeline, AOT-
 //!   lowered once to `artifacts/*.hlo.txt`.
 //! - **L1 (python/compile/kernels)** — Pallas kernels (interpret=True)

@@ -38,6 +38,8 @@ fn usage() -> ! {
          \x20                                    fleet-distribution simulation (synthetic zoo\n\
          \x20                                    when artifacts are missing)\n\
 \x20 select --arch A [--n N] [--live]   adaptive nesting selection (future-work)\n\
+         \x20 bench-guard [BENCH_kernels.json]   fail if the SIMD tier regressed below\n\
+         \x20                                    the SWAR baseline on lane-aligned cells\n\
          \x20 report <what>                      one of: errors storage-ideal storage\n\
          \x20                                    switching similarity nesting nesting-test\n\
          \x20                                    cliff combos traffic comparison ptq-cost\n\
@@ -123,8 +125,75 @@ fn run() -> Result<()> {
         "fleet" => cmd_fleet(&root, &args),
         "select" => cmd_select(&root, &args),
         "report" => cmd_report(&root, &args),
+        "bench-guard" => cmd_bench_guard(&args),
         _ => usage(),
     }
+}
+
+/// CI bench-regression guard: read a `BENCH_kernels.json` written by
+/// `cargo bench --bench kernels` and fail (exit 1) if the SIMD tier
+/// loses to the SWAR baseline on any lane-aligned cell. A small noise
+/// band (5%) keeps one jittery CI run from flagging a false regression;
+/// a real SIMD regression blows way past it. Unaligned cells — where
+/// the SWAR tier is really the scalar lane cursor — are reported as the
+/// SIMD tier's headline wins but not hard-gated (their ratios swing
+/// more across microarchitectures).
+fn cmd_bench_guard(args: &Args) -> Result<()> {
+    use nestquant::util::json;
+
+    const NOISE_BAND: f64 = 0.95;
+    let path = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("BENCH_kernels.json");
+    let doc = json::parse_file(std::path::Path::new(path))?;
+    let cells = doc.path(&["cells"])?.as_array()?;
+    anyhow::ensure!(
+        !cells.is_empty(),
+        "{path} has no cells — run `cargo bench --bench kernels` first \
+         (the committed trajectory seed carries none by design)"
+    );
+    let mut losses = Vec::new();
+    let mut unaligned_wins = 0usize;
+    let mut unaligned = 0usize;
+    for cell in cells {
+        let n = cell.path(&["n"])?.as_u64()?;
+        let h = cell.path(&["h"])?.as_u64()?;
+        let op = cell.path(&["op"])?.as_str()?;
+        let aligned = cell.path(&["aligned"])?.as_bool()?;
+        let swar = cell.path(&["swar_bytes_per_s"])?.as_f64()?;
+        let simd = cell.path(&["simd_bytes_per_s"])?.as_f64()?;
+        let ratio = simd / swar;
+        if aligned {
+            if simd < NOISE_BAND * swar {
+                losses.push(format!(
+                    "INT({n}|{h}) {op}: simd {:.1} MB/s < swar {:.1} MB/s ({ratio:.2}x)",
+                    simd / 1e6,
+                    swar / 1e6
+                ));
+            }
+        } else {
+            unaligned += 1;
+            if ratio > 1.0 {
+                unaligned_wins += 1;
+            }
+            println!(
+                "bench-guard: unaligned INT({n}|{h}) {op}: simd/lane-cursor {ratio:.2}x"
+            );
+        }
+    }
+    println!(
+        "bench-guard: {} cells checked ({unaligned} unaligned, {unaligned_wins} simd wins there)",
+        cells.len()
+    );
+    anyhow::ensure!(
+        losses.is_empty(),
+        "SIMD tier lost to the SWAR baseline on lane-aligned cells:\n  {}",
+        losses.join("\n  ")
+    );
+    println!("bench-guard: SIMD holds ≥{NOISE_BAND}x SWAR on every lane-aligned cell");
+    Ok(())
 }
 
 fn cmd_info(root: &std::path::Path) -> Result<()> {
@@ -180,6 +249,14 @@ fn cmd_inspect(args: &Args) -> Result<()> {
         idx.section_b_bytes(),
         idx.section_b_bytes() as f64 / idx.file_len.max(1) as f64 * 100.0
     );
+    match idx.checksums {
+        // decimal on purpose: the golden fixture normalizes digit runs
+        Some(ck) => println!(
+            "  checksums crc64 A={} B={} (A verified at fetch; B checked at upgrade)",
+            ck.a, ck.b
+        ),
+        None => println!("  checksums absent (pre-trailer artifact; fetches unverified)"),
+    }
 
     let layout = archive.layout()?;
     if !layout.meta().is_empty() {

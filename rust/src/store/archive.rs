@@ -144,6 +144,15 @@ impl NqArchive {
             a.len(),
             self.index.section_a_bytes()
         );
+        if let Some(ck) = self.index.checksums {
+            // integrity trailer present: the fetched payload must match
+            // it bit-for-bit (geometry checks can't catch payload flips)
+            ensure!(
+                crate::util::crc64::crc64(&a) == ck.a,
+                "section A checksum mismatch for {} (corrupt fetch)",
+                self.source.describe()
+            );
+        }
         s.stats.a_fetches += 1;
         s.stats.a_bytes_fetched += a.len() as u64;
         s.a = Some(Arc::clone(&a));
@@ -179,6 +188,13 @@ impl NqArchive {
             b.len(),
             self.index.section_b_bytes()
         );
+        if let Some(ck) = self.index.checksums {
+            ensure!(
+                crate::util::crc64::crc64(&b) == ck.b,
+                "section B checksum mismatch for {} (corrupt fetch)",
+                self.source.describe()
+            );
+        }
         s.stats.b_fetches += 1;
         s.stats.b_bytes_fetched += b.len() as u64;
         s.b = Some(Arc::clone(&b));
@@ -256,7 +272,7 @@ impl NqArchive {
             let b = self.attach_b()?;
             container::attach_section_b_impl(&mut c, &b)?;
         }
-        c.file_len = self.index.file_len;
+        c.file_len = self.index.payload_len();
         Ok(c)
     }
 }

@@ -421,9 +421,10 @@ impl<'m> PackedView<'m> {
 
     /// Unpack into a caller buffer (i32 intermediate — compat and the
     /// non-dequantizing consumers; the switch path uses the fused
-    /// kernels below).
+    /// kernels below). Dispatches straight from the section bytes into
+    /// the process-selected kernel tier (`crate::kernels`).
     pub fn unpack_into(&self, out: &mut Vec<i32>) {
-        bits::unpack_words_into(self.words_iter(), self.bits, self.count, out);
+        crate::kernels::unpack_ints_into(self.bytes, self.bits, self.count, out);
     }
 
     /// Fused one-pass decode straight from the section bytes:

@@ -191,14 +191,16 @@ pub struct MemorySource {
 }
 
 impl MemorySource {
-    /// Wrap serialized container bytes (validates the header).
+    /// Wrap serialized container bytes (validates the header). Sections
+    /// are sliced by the index ranges, so an integrity trailer at the
+    /// end of the blob stays out of both sections.
     pub fn new(data: &[u8]) -> Result<MemorySource> {
         let index = container::index_of_bytes(data).context("indexing in-memory container")?;
-        let a_end = index.section_a().end as usize;
-        ensure!(a_end <= data.len(), "section A end beyond data");
+        let (ra, rb) = (index.section_a(), index.section_b());
+        ensure!(rb.end as usize <= data.len(), "section B end beyond data");
         Ok(MemorySource {
-            a: data[..a_end].into(),
-            b: data[a_end..].into(),
+            a: data[ra.start as usize..ra.end as usize].into(),
+            b: data[rb.start as usize..rb.end as usize].into(),
             index,
         })
     }
@@ -267,10 +269,11 @@ mod tests {
             let mb = ms.fetch(s).unwrap();
             assert_eq!(&fb[..], &mb[..], "section {s}");
         }
-        // A ++ B == the serialized artifact
+        // A ++ B == the serialized payload (the trailer rides after it)
         let mut whole = fs.fetch(Section::A).unwrap().to_vec();
         whole.extend_from_slice(&fs.fetch(Section::B).unwrap());
-        assert_eq!(whole, bytes);
+        assert_eq!(whole[..], bytes[..fi.payload_len() as usize]);
+        assert_eq!(fi.payload_len() + fi.trailer_len(), bytes.len() as u64);
         assert!(fs.describe().contains("m.nq"));
         assert!(ms.describe().starts_with("memory:"));
     }

@@ -1,0 +1,68 @@
+//! CRC-64/XZ (aka CRC-64/GO-ECMA): the per-section integrity checksum
+//! of the `.nq` trailer.
+//!
+//! Parameters (the widely deployed xz/liblzma variant): reflected
+//! polynomial `0xC96C5795D7870F42`, init `!0`, xor-out `!0`, reflected
+//! input/output. Table-driven, one 256-entry table built once per
+//! process — fast enough to checksum section payloads at page-in
+//! without showing up next to the decode kernels.
+//!
+//! The Python packer (`python/compile/nqformat.py`) implements the same
+//! parameters, so trailers are cross-language stable.
+
+use std::sync::OnceLock;
+
+/// Reflected CRC-64/XZ polynomial.
+const POLY: u64 = 0xC96C_5795_D787_0F42;
+
+fn table() -> &'static [u64; 256] {
+    static TABLE: OnceLock<[u64; 256]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [0u64; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut crc = i as u64;
+            for _ in 0..8 {
+                crc = if crc & 1 == 1 {
+                    (crc >> 1) ^ POLY
+                } else {
+                    crc >> 1
+                };
+            }
+            *e = crc;
+        }
+        t
+    })
+}
+
+/// CRC-64/XZ of `data`.
+pub fn crc64(data: &[u8]) -> u64 {
+    let t = table();
+    let mut crc = !0u64;
+    for &b in data {
+        crc = t[((crc ^ b as u64) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    !crc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // the canonical CRC-64/XZ check value
+        assert_eq!(crc64(b"123456789"), 0x995D_C9BB_DF19_39FA);
+        assert_eq!(crc64(b""), 0);
+    }
+
+    #[test]
+    fn sensitive_to_any_flip() {
+        let data: Vec<u8> = (0..=255).collect();
+        let base = crc64(&data);
+        for i in [0usize, 1, 100, 255] {
+            let mut tampered = data.clone();
+            tampered[i] ^= 0x40;
+            assert_ne!(crc64(&tampered), base, "flip at {i}");
+        }
+    }
+}

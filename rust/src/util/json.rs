@@ -367,6 +367,10 @@ pub fn num(n: f64) -> Value {
     Value::Num(n)
 }
 
+pub fn bool_(b: bool) -> Value {
+    Value::Bool(b)
+}
+
 pub fn str_(s: impl Into<String>) -> Value {
     Value::Str(s.into())
 }

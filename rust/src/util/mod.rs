@@ -2,6 +2,7 @@
 //! JSON, PRNG, property testing, thread pool, and small I/O helpers.
 
 pub mod benchkit;
+pub mod crc64;
 pub mod json;
 pub mod pool;
 pub mod prng;

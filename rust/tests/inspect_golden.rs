@@ -85,12 +85,21 @@ fn inspect_output_matches_golden_fixture() {
         )),
         "section A byte range missing:\n{text}"
     );
+    // the file length includes the integrity trailer; section B ends at
+    // the payload boundary before it
+    assert_eq!(total, a_len + b_len + container::TRAILER_LEN as u64);
     assert!(
         text.contains(&format!(
             "section B [{:>10}, {:>10}) {:>10} B",
-            a_len, total, b_len
+            a_len,
+            a_len + b_len,
+            b_len
         )),
         "section B byte range missing:\n{text}"
+    );
+    assert!(
+        text.contains("checksums crc64 A="),
+        "checksum status line missing:\n{text}"
     );
     assert!(
         text.contains(&format!("{:<24} {:<14} {:>9}", "layer.w", "48x8", 48 * 8)),

@@ -1,13 +1,14 @@
-//! Property tests: the fused one-pass switching kernels are
-//! bit-identical to the scalar `unpack → recompose → dequant`
-//! composition — over every legal `(n, h)`, compensated and
-//! uncompensated `w_low`, channel counts that do and don't divide the
-//! lane block, and lengths not divisible by `lanes(bits)` (the
-//! padded-final-word edge).
+//! Property tests: every kernel dispatch tier (scalar ≡ SWAR ≡ SIMD,
+//! pinned via `kernels::plan_for` — the same tiers `NQ_KERNEL` selects
+//! process-wide) is bit-identical to the legacy
+//! `unpack → recompose → dequant` composition — over every legal
+//! `(n, h)`, compensated and uncompensated `w_low`, channel counts that
+//! do and don't divide the lane block, and lengths not divisible by
+//! `lanes(bits)` (the padded-final-word edge).
 
 use nestquant::bits::{int_range, lanes, PackedTensor};
 use nestquant::container;
-use nestquant::kernels;
+use nestquant::kernels::{self, Tier};
 use nestquant::nest::{self, NestConfig, Rounding};
 use nestquant::quant;
 use nestquant::store::{NqArchive, PayloadView};
@@ -82,9 +83,19 @@ fn fused_unpack_dequant_equals_composition() {
             move |(vals, scales, mul)| {
                 let t = PackedTensor::pack(vals, bits).unwrap();
                 let bytes = t.to_le_bytes();
+                let want = legacy_unpack_dequant(&t, scales, *mul);
+                // the module-level entry (active plan) and every pinned
+                // tier must all match the composition bit-for-bit
                 let mut got = Vec::new();
                 kernels::unpack_dequant_into(&bytes, bits, vals.len(), scales, *mul, &mut got);
-                got == legacy_unpack_dequant(&t, scales, *mul)
+                if got != want {
+                    return false;
+                }
+                Tier::all().into_iter().all(|tier| {
+                    kernels::plan_for(tier)
+                        .unpack_dequant_into(&bytes, bits, vals.len(), scales, *mul, &mut got);
+                    got == want
+                })
             },
         );
     }
@@ -123,22 +134,82 @@ fn fused_recompose_dequant_equals_composition_all_nh() {
                         let (hs, ls) = nest::decompose(vals, cfg, *method, compensate);
                         let th = PackedTensor::pack(&hs, h).unwrap();
                         let tl = PackedTensor::pack(&ls, low_bits).unwrap();
+                        let (hb, lb) = (th.to_le_bytes(), tl.to_le_bytes());
+                        let want = legacy_recompose_dequant(&th, &tl, cfg.l(), scales);
                         let mut got = Vec::new();
-                        kernels::recompose_dequant_into(
-                            &th.to_le_bytes(),
-                            h,
-                            &tl.to_le_bytes(),
-                            low_bits,
-                            cfg.l(),
-                            vals.len(),
-                            scales,
-                            &mut got,
-                        );
-                        got == legacy_recompose_dequant(&th, &tl, cfg.l(), scales)
+                        Tier::all().into_iter().all(|tier| {
+                            kernels::plan_for(tier).recompose_dequant_into(
+                                &hb,
+                                h,
+                                &lb,
+                                low_bits,
+                                cfg.l(),
+                                vals.len(),
+                                scales,
+                                &mut got,
+                            );
+                            got == want
+                        })
                     },
                 );
             }
         }
+    }
+}
+
+/// The i32 unpack path agrees across tiers and with the owned
+/// `PackedTensor` decode for every width and padded-final-word edge.
+#[test]
+fn unpack_ints_equals_packed_tensor_all_tiers() {
+    for bits in 2..=16u8 {
+        propcheck::check(
+            &format!("kernels-unpack-ints-{bits}"),
+            30,
+            move |r: &mut Rng, scale| {
+                let len = gen_len(r, scale, bits);
+                let (lo, hi) = int_range(bits);
+                (0..len).map(|_| r.int(lo as i64, hi as i64) as i32).collect::<Vec<i32>>()
+            },
+            move |vals| {
+                let t = PackedTensor::pack(vals, bits).unwrap();
+                let bytes = t.to_le_bytes();
+                let mut got = Vec::new();
+                Tier::all().into_iter().all(|tier| {
+                    kernels::plan_for(tier).unpack_ints_into(&bytes, bits, vals.len(), &mut got);
+                    got == *vals
+                })
+            },
+        );
+    }
+}
+
+/// The `NQ_KERNEL` contract: every documented value resolves to its
+/// tier, unknown values fall back to the default instead of failing,
+/// and requesting the SIMD tier is safe on ANY host — on machines
+/// without AVX2 it resolves to the SSE2/NEON/SWAR fallback and still
+/// decodes correctly (no panic, no wrong bytes). This is the graceful-
+/// fallback guarantee: dispatch may change speed, never results.
+#[test]
+fn env_override_and_graceful_fallback() {
+    assert_eq!(kernels::tier_from_env(Some("scalar")), Tier::Scalar);
+    assert_eq!(kernels::tier_from_env(Some("swar")), Tier::Swar);
+    assert_eq!(kernels::tier_from_env(Some("SIMD")), Tier::Simd);
+    assert_eq!(kernels::tier_from_env(Some("not-a-tier")), Tier::Simd);
+    assert_eq!(kernels::tier_from_env(None), Tier::Simd);
+
+    // plan_for never panics for any tier on any host, and whatever
+    // sub-path Simd resolved to still decodes bit-identically
+    let t = PackedTensor::pack(&[-3, 1, 4, -1, 5, -2, 6], 5).unwrap();
+    let scales = [0.25f32, 0.5];
+    let mut want = Vec::new();
+    kernels::plan_for(Tier::Scalar)
+        .unpack_dequant_into(&t.to_le_bytes(), 5, 7, &scales, 2.0, &mut want);
+    for tier in Tier::all() {
+        let plan = kernels::plan_for(tier);
+        assert!(!plan.path.is_empty(), "{tier}: path must be resolved");
+        let mut got = Vec::new();
+        plan.unpack_dequant_into(&t.to_le_bytes(), 5, 7, &scales, 2.0, &mut got);
+        assert_eq!(got, want, "tier {tier} (path {})", plan.path);
     }
 }
 

@@ -46,19 +46,21 @@ fn section_ranges_reassemble_bit_identically_across_grid() {
                 let arch = NqArchive::from_bytes(&bytes).unwrap();
                 let idx = arch.index();
                 let (ra, rb) = (idx.section_a(), idx.section_b());
-                // contiguous, exhaustive ranges
-                if ra.start != 0 || ra.end != rb.start || rb.end != idx.file_len {
+                // contiguous ranges exhausting the payload (the
+                // integrity trailer rides after section B)
+                if ra.start != 0 || ra.end != rb.start || rb.end != idx.payload_len() {
                     return false;
                 }
-                if idx.file_len as usize != bytes.len() {
+                if idx.file_len as usize != bytes.len() || idx.checksums.is_none() {
                     return false;
                 }
-                // A ++ B is the file, bit for bit
+                // A ++ B is the payload, bit for bit (checksum-verified
+                // on fetch by the archive)
                 let a = arch.ensure_a().unwrap();
                 let b = arch.attach_b().unwrap();
                 let mut whole = a.to_vec();
                 whole.extend_from_slice(&b);
-                whole == bytes
+                whole[..] == bytes[..idx.payload_len() as usize]
             },
         );
     }
@@ -129,7 +131,9 @@ fn file_source_round_trips_sections() {
     let a = src.fetch(Section::A).unwrap();
     let b = src.fetch(Section::B).unwrap();
     assert_eq!(&whole[..a.len()], &a[..]);
-    assert_eq!(&whole[a.len()..], &b[..]);
+    assert_eq!(&whole[a.len()..a.len() + b.len()], &b[..]);
+    // the trailer is the only remainder
+    assert_eq!(whole.len(), a.len() + b.len() + container::TRAILER_LEN);
 }
 
 /// Acceptance: the coordinator upgrade/downgrade path does zero
