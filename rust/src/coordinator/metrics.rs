@@ -1,161 +1,7 @@
-//! Metrics registry: counters + log-bucket latency histograms for the
-//! coordinator (requests, batches, switches, paging volumes).
+//! Deprecated shim: the metrics registry moved to [`crate::telemetry`]
+//! (the fleet-wide registry every subsystem records into and every
+//! scrape surface reads from). This module re-exports the promoted
+//! types so existing call sites keep compiling; new code should import
+//! from `crate::telemetry` directly.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::time::Duration;
-
-/// Log2-bucketed latency histogram from 1µs to ~17min.
-#[derive(Debug)]
-pub struct LatencyHisto {
-    /// bucket i covers [2^i, 2^{i+1}) microseconds.
-    buckets: [AtomicU64; 32],
-    count: AtomicU64,
-    sum_us: AtomicU64,
-    max_us: AtomicU64,
-}
-
-impl Default for LatencyHisto {
-    fn default() -> Self {
-        LatencyHisto {
-            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
-            count: AtomicU64::new(0),
-            sum_us: AtomicU64::new(0),
-            max_us: AtomicU64::new(0),
-        }
-    }
-}
-
-impl LatencyHisto {
-    pub fn record(&self, d: Duration) {
-        let us = d.as_micros().max(1) as u64;
-        let bucket = (63 - us.leading_zeros() as usize).min(31);
-        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
-        self.count.fetch_add(1, Ordering::Relaxed);
-        self.sum_us.fetch_add(us, Ordering::Relaxed);
-        self.max_us.fetch_max(us, Ordering::Relaxed);
-    }
-
-    pub fn count(&self) -> u64 {
-        self.count.load(Ordering::Relaxed)
-    }
-
-    pub fn mean_us(&self) -> f64 {
-        let c = self.count();
-        if c == 0 {
-            0.0
-        } else {
-            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
-        }
-    }
-
-    pub fn max_us(&self) -> u64 {
-        self.max_us.load(Ordering::Relaxed)
-    }
-
-    /// Approximate quantile from the log buckets (upper bound of the
-    /// bucket containing the q-th sample).
-    pub fn quantile_us(&self, q: f64) -> u64 {
-        let total = self.count();
-        if total == 0 {
-            return 0;
-        }
-        let target = ((total as f64) * q).ceil().max(1.0) as u64;
-        let mut seen = 0;
-        for (i, b) in self.buckets.iter().enumerate() {
-            seen += b.load(Ordering::Relaxed);
-            if seen >= target {
-                return 1u64 << (i + 1);
-            }
-        }
-        self.max_us()
-    }
-}
-
-/// Coordinator-wide metrics.
-#[derive(Debug, Default)]
-pub struct Metrics {
-    pub requests: AtomicU64,
-    pub batches: AtomicU64,
-    pub batch_occupancy_sum: AtomicU64,
-    pub upgrades: AtomicU64,
-    pub downgrades: AtomicU64,
-    pub page_in_bytes: AtomicU64,
-    pub page_out_bytes: AtomicU64,
-    pub errors: AtomicU64,
-    pub request_latency: LatencyHisto,
-    pub execute_latency: LatencyHisto,
-    pub switch_latency: LatencyHisto,
-}
-
-impl Metrics {
-    pub fn mean_batch_occupancy(&self) -> f64 {
-        let b = self.batches.load(Ordering::Relaxed);
-        if b == 0 {
-            0.0
-        } else {
-            self.batch_occupancy_sum.load(Ordering::Relaxed) as f64 / b as f64
-        }
-    }
-
-    /// Render a human-readable summary block.
-    pub fn summary(&self) -> String {
-        format!(
-            "requests={} batches={} occupancy={:.2} upgrades={} downgrades={} \
-             page_in={}B page_out={}B errors={}\n\
-             latency: exec mean={:.0}us p50={}us p99={}us max={}us | \
-             request mean={:.0}us p99={}us | switch mean={:.0}us max={}us",
-            self.requests.load(Ordering::Relaxed),
-            self.batches.load(Ordering::Relaxed),
-            self.mean_batch_occupancy(),
-            self.upgrades.load(Ordering::Relaxed),
-            self.downgrades.load(Ordering::Relaxed),
-            self.page_in_bytes.load(Ordering::Relaxed),
-            self.page_out_bytes.load(Ordering::Relaxed),
-            self.errors.load(Ordering::Relaxed),
-            self.execute_latency.mean_us(),
-            self.execute_latency.quantile_us(0.5),
-            self.execute_latency.quantile_us(0.99),
-            self.execute_latency.max_us(),
-            self.request_latency.mean_us(),
-            self.request_latency.quantile_us(0.99),
-            self.switch_latency.mean_us(),
-            self.switch_latency.max_us(),
-        )
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn histo_records_and_quantiles() {
-        let h = LatencyHisto::default();
-        for us in [10u64, 20, 40, 80, 160, 320, 640, 1280, 2560, 100_000] {
-            h.record(Duration::from_micros(us));
-        }
-        assert_eq!(h.count(), 10);
-        assert!(h.mean_us() > 0.0);
-        assert!(h.quantile_us(0.5) >= 80 && h.quantile_us(0.5) <= 512);
-        assert!(h.quantile_us(0.99) >= 65536);
-        assert_eq!(h.max_us(), 100_000);
-    }
-
-    #[test]
-    fn histo_empty() {
-        let h = LatencyHisto::default();
-        assert_eq!(h.quantile_us(0.99), 0);
-        assert_eq!(h.mean_us(), 0.0);
-    }
-
-    #[test]
-    fn summary_renders() {
-        let m = Metrics::default();
-        m.requests.fetch_add(5, Ordering::Relaxed);
-        m.batches.fetch_add(2, Ordering::Relaxed);
-        m.batch_occupancy_sum.fetch_add(5, Ordering::Relaxed);
-        let s = m.summary();
-        assert!(s.contains("requests=5"));
-        assert!(s.contains("occupancy=2.50"));
-    }
-}
+pub use crate::telemetry::{LatencyHisto, Metrics};

@@ -87,13 +87,28 @@ impl Coordinator {
         self.metrics
             .page_out_bytes
             .fetch_add(cost.page_out_bytes, Ordering::Relaxed);
+        let s = &crate::telemetry::registry().serving;
+        s.page_in_bytes.add(cost.page_in_bytes);
+        s.page_out_bytes.add(cost.page_out_bytes);
         if upgrade {
             self.metrics.upgrades.fetch_add(1, Ordering::Relaxed);
+            s.upgrades.inc();
         } else {
             self.metrics.downgrades.fetch_add(1, Ordering::Relaxed);
+            s.downgrades.inc();
         }
+        crate::nq_trace!(
+            crate::telemetry::TraceKind::Switch,
+            "{}: {} (+{} B / -{} B)",
+            self.manager.spec().name,
+            if upgrade { "upgrade" } else { "downgrade" },
+            cost.page_in_bytes,
+            cost.page_out_bytes
+        );
         self.metrics
             .switch_latency
+            .record(std::time::Duration::from_micros(cost.micros as u64));
+        s.switch_latency
             .record(std::time::Duration::from_micros(cost.micros as u64));
     }
 

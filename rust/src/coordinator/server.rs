@@ -35,6 +35,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context, Result};
 
+use crate::nq_trace;
+use crate::telemetry::{registry, Snapshot, TraceKind};
 use crate::transport::{
     decode_model_list, decode_tagged, encode_model_list, encode_tagged, recv_frame, send_frame,
     Frame, FrameKind, Meter,
@@ -222,18 +224,26 @@ impl ServerHandle {
             t.metrics
                 .page_out_bytes
                 .fetch_add(c.page_out_bytes, Ordering::Relaxed);
+            let s = &registry().serving;
+            s.page_in_bytes.add(c.page_in_bytes);
+            s.page_out_bytes.add(c.page_out_bytes);
             match decision {
                 Decision::SwitchTo(Variant::FullBit) => {
                     t.metrics.upgrades.fetch_add(1, Ordering::Relaxed);
+                    s.upgrades.inc();
+                    nq_trace!(TraceKind::Switch, "{model}: upgrade (+{} B)", c.page_in_bytes);
                 }
                 Decision::SwitchTo(Variant::PartBit) => {
                     t.metrics.downgrades.fetch_add(1, Ordering::Relaxed);
+                    s.downgrades.inc();
+                    nq_trace!(TraceKind::Switch, "{model}: downgrade (-{} B)", c.page_out_bytes);
                 }
                 Decision::Stay => {}
             }
             t.metrics
                 .switch_latency
                 .record(Duration::from_micros(c.micros as u64));
+            s.switch_latency.record(Duration::from_micros(c.micros as u64));
         }
         Ok(cost)
     }
@@ -340,6 +350,7 @@ pub fn serve_tenants(
                 batcher::drain_queue(&rx, &bcfg, |batch| {
                     let mut e = exec2.lock().unwrap();
                     let occupancy = batch.requests.len() as u64;
+                    let t0 = Instant::now();
                     match e.run_batch(&batch.input) {
                         Ok(logits) => {
                             drop(e);
@@ -348,14 +359,21 @@ pub fn serve_tenants(
                             metrics2
                                 .batch_occupancy_sum
                                 .fetch_add(occupancy, Ordering::Relaxed);
+                            let s = &registry().serving;
+                            s.requests.add(occupancy);
+                            s.batches.inc();
+                            s.batch_latency.record(t0.elapsed());
                             for r in &batch.requests {
-                                metrics2.request_latency.record(r.enqueued.elapsed());
+                                let waited = r.enqueued.elapsed();
+                                metrics2.request_latency.record(waited);
+                                s.request_latency.record(waited);
                             }
                             batcher::respond(batch, &logits, classes);
                         }
                         Err(e2) => {
                             drop(e);
                             metrics2.errors.fetch_add(occupancy, Ordering::Relaxed);
+                            registry().serving.errors.add(occupancy);
                             batcher::respond_error(batch, &format!("{e2:#}"));
                         }
                     }
@@ -487,6 +505,22 @@ fn handle_connection(
                     &meter,
                 )?;
             }
+            (FrameKind::Control, "metrics") => {
+                let tm: Vec<(String, Arc<Metrics>)> = tenants
+                    .iter()
+                    .map(|(id, t)| (id.clone(), Arc::clone(&t.metrics)))
+                    .collect();
+                let snap = Snapshot::gather(&tm);
+                send_frame(
+                    &mut writer,
+                    &Frame {
+                        kind: FrameKind::Control,
+                        name: "metrics".into(),
+                        payload: snap.to_json().into_bytes(),
+                    },
+                    &meter,
+                )?;
+            }
             (FrameKind::Control, "infer") => {
                 match serve_infer(&frame.payload, &tenants) {
                     Ok((model, logits)) => {
@@ -539,18 +573,22 @@ fn serve_infer(
         .clone()
         .ok_or_else(|| anyhow::anyhow!("{id}: server shutting down"))?;
     let (rtx, rrx) = mpsc::channel();
-    tx.send(Request {
-        image,
-        reply: rtx,
-        enqueued: Instant::now(),
-    })
-    .map_err(|_| anyhow::anyhow!("{id}: executor gone"))?;
+    registry().serving.queue_depth.inc();
+    let sent = tx
+        .send(Request {
+            image,
+            reply: rtx,
+            enqueued: Instant::now(),
+        })
+        .map_err(|_| anyhow::anyhow!("{id}: executor gone"));
     drop(tx); // release our sender clone before blocking on the reply
-    match rrx.recv() {
-        Ok(Ok(logits)) => Ok((id, logits)),
+    let reply = sent.and_then(|()| match rrx.recv() {
+        Ok(Ok(logits)) => Ok((id.clone(), logits)),
         Ok(Err(msg)) => bail!("{msg}"),
         Err(_) => bail!("{id}: executor dropped the request"),
-    }
+    });
+    registry().serving.queue_depth.dec();
+    reply
 }
 
 // ---------------------------------------------------------------------------
@@ -618,6 +656,23 @@ impl Client {
         let (reply, _) = recv_frame(&mut self.sock, &self.meter)?;
         ensure!(reply.name == "models", "unexpected reply {:?}", reply.name);
         decode_model_list(&reply.payload)
+    }
+
+    /// Scrape the server's telemetry snapshot (versioned JSON — parse
+    /// with [`Snapshot::from_json`]).
+    pub fn metrics(&mut self) -> Result<String> {
+        send_frame(
+            &mut self.sock,
+            &Frame {
+                kind: FrameKind::Control,
+                name: "metrics".into(),
+                payload: Vec::new(),
+            },
+            &self.meter,
+        )?;
+        let (reply, _) = recv_frame(&mut self.sock, &self.meter)?;
+        ensure!(reply.name == "metrics", "unexpected reply {:?}", reply.name);
+        String::from_utf8(reply.payload).context("metrics payload")
     }
 
     pub fn stop_server(&mut self) -> Result<()> {

@@ -192,6 +192,12 @@ impl NestTenant {
         if self.variant == Variant::FullBit && !self.archive.b_resident() {
             self.rebuild(Variant::PartBit)?;
             self.forced_downgrades += 1;
+            crate::telemetry::registry().serving.forced_downgrades.inc();
+            crate::nq_trace!(
+                crate::telemetry::TraceKind::Switch,
+                "{}: forced downgrade (section B evicted)",
+                self.id
+            );
         }
         Ok(())
     }

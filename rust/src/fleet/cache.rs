@@ -24,6 +24,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use anyhow::Result;
 
 use crate::store::{Bytes, SectionSource};
+use crate::telemetry::registry;
 
 use super::Section;
 
@@ -102,6 +103,7 @@ impl SectionCache {
             if let Some(e) = g.map.get_mut(&key) {
                 e.last_used = tick;
                 g.hits += 1;
+                registry().fleet.cache_hits.inc();
                 return Ok(Arc::clone(&e.bytes));
             }
             if g.loading.contains(&key) {
@@ -128,6 +130,7 @@ impl SectionCache {
         let tick = g.tick;
         g.misses += 1;
         g.disk_bytes += len;
+        registry().fleet.cache_misses.inc();
         g.map.insert(
             key.clone(),
             Entry {
@@ -149,6 +152,7 @@ impl SectionCache {
             if let Some(e) = g.map.remove(&v) {
                 g.used -= e.bytes.len() as u64;
                 g.evictions += 1;
+                registry().fleet.cache_evictions.inc();
             }
         }
         Ok(bytes)

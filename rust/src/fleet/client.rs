@@ -13,12 +13,14 @@ use std::net::{SocketAddr, TcpStream};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, ensure, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::container::SectionIndex;
 use crate::coordinator::{Decision, Variant};
 use crate::device::{MemoryLedger, ResourceTrace};
+use crate::nq_trace;
 use crate::store::{Bytes, SectionSource};
+use crate::telemetry::{registry, TraceKind};
 use crate::transport::{ack_frame, parse_chunk, recv_frame, send_frame, Frame, FrameKind, Meter};
 
 use super::{control, decode_index, decode_index2, encode_pull, encode_section_req, Section};
@@ -368,10 +370,14 @@ impl Default for PlaybackReport {
 /// works against remote bytes.
 ///
 /// The client connection is serialized behind a mutex (the protocol is
-/// request/response per connection). A fetch is all-or-nothing and pulls
-/// from byte zero — an archive never holds partial sections; devices
-/// that want mid-transfer resume use [`FleetClient::pull_section`] /
-/// [`FleetClient::resume_section`] directly.
+/// request/response per connection). A fetch returns only complete
+/// sections — an archive never holds partial bytes — but it is NOT
+/// all-or-nothing on the wire: when a pull dies mid-transfer, the fetch
+/// reconnects under the same device id and resumes from the server's
+/// last recorded ack instead of byte zero (up to
+/// [`RemoteSource::FETCH_ATTEMPTS`] attempts per fetch). Resumed vs
+/// rewound bytes are counted in the telemetry registry
+/// (`nq_fleet_resumed_bytes` / `nq_fleet_restarted_bytes`).
 ///
 /// Every fetch runs under a whole-transfer deadline
 /// ([`RemoteSource::DEFAULT_FETCH_TIMEOUT`] unless overridden with
@@ -387,12 +393,20 @@ pub struct RemoteSource {
     /// Memoized index (one wire round-trip): section geometry plus the
     /// integrity checksums every completed fetch is verified against.
     index: std::sync::OnceLock<SectionIndex>,
+    /// One-shot fault injection: cap the NEXT pull attempt at this many
+    /// chunks, then treat it as a dropped connection (tests exercise the
+    /// reconnect-and-resume path deterministically with this).
+    fault_chunks: Mutex<Option<usize>>,
 }
 
 impl RemoteSource {
     /// Default whole-fetch deadline: generous for a section on a slow
     /// edge link, far below "wedged forever".
     pub const DEFAULT_FETCH_TIMEOUT: Duration = Duration::from_secs(120);
+
+    /// How many pull attempts one fetch makes before giving up (the
+    /// first plus the reconnect-and-resume retries).
+    pub const FETCH_ATTEMPTS: usize = 3;
 
     /// Connect a fresh device session and bind it to `model`.
     pub fn connect(
@@ -419,7 +433,16 @@ impl RemoteSource {
             addr,
             fetch_timeout: Some(RemoteSource::DEFAULT_FETCH_TIMEOUT),
             index: std::sync::OnceLock::new(),
+            fault_chunks: Mutex::new(None),
         }
+    }
+
+    /// Make the next pull attempt drop its connection after `chunks`
+    /// acked chunks (one-shot). The fetch then reconnects and resumes
+    /// from the server's recorded ack — the deterministic stand-in for a
+    /// flaky edge link, used by tests and the fleet demo.
+    pub fn inject_disconnect_after_chunks(&self, chunks: usize) {
+        *self.fault_chunks.lock().unwrap() = Some(chunks);
     }
 
     /// The memoized index, fetching it over the held client connection
@@ -451,57 +474,17 @@ impl RemoteSource {
     pub fn wire(&self) -> (u64, u64) {
         self.client.lock().unwrap().wire()
     }
-}
 
-impl SectionSource for RemoteSource {
-    fn index(&self) -> Result<SectionIndex> {
-        let mut c = self.client.lock().unwrap();
-        self.index_via(&mut c)
-    }
-
-    fn fetch(&self, section: Section) -> Result<Bytes> {
-        let mut c = self.client.lock().unwrap();
-        let mut sink = Vec::new();
-        let deadline = self.fetch_timeout.map(|t| Instant::now() + t);
-        let out = match c.pull_section_deadline(&self.model, section, 0, &mut sink, None, deadline)
-        {
-            Ok(out) => out,
-            Err(e) => {
-                // a failed pull aborts mid-stream (a deadline expiry even
-                // shuts the socket down), so the connection is no longer
-                // on a request/response boundary. Reconnect under the
-                // same device id (the server resumes the session) so the
-                // advertised retry starts clean; if reconnecting fails,
-                // the dead client stays and later fetches error loudly.
-                let device_id = c.device_id.clone();
-                let timeout = c
-                    .sock
-                    .read_timeout()
-                    .ok()
-                    .flatten()
-                    .unwrap_or(RemoteSource::DEFAULT_FETCH_TIMEOUT);
-                if let Ok(fresh) = FleetClient::connect(self.addr, &device_id, timeout) {
-                    *c = fresh;
-                }
-                return Err(e);
-            }
-        };
-        ensure!(
-            out.completed,
-            "section {section} pull of {} incomplete at {}/{}",
-            self.model,
-            out.received_to,
-            out.total_len
-        );
-        // verify the reassembled section against the artifact's
-        // integrity trailer: chunked transfer + resume must hand the
-        // archive exactly the bytes the packer checksummed. An index
-        // failure fails the fetch — silently skipping verification
-        // would defeat the trailer exactly when the link is flaky. (In
-        // practice the index is memoized from archive open, so this
-        // never costs an extra round-trip.)
+    /// Verify a reassembled section against the artifact's integrity
+    /// trailer: chunked transfer + resume must hand the archive exactly
+    /// the bytes the packer checksummed. An index failure fails the
+    /// fetch — silently skipping verification would defeat the trailer
+    /// exactly when the link is flaky. (In practice the index is
+    /// memoized from archive open, so this never costs an extra
+    /// round-trip.)
+    fn verify(&self, c: &mut FleetClient, section: Section, sink: Vec<u8>) -> Result<Bytes> {
         let idx = self
-            .index_via(&mut c)
+            .index_via(c)
             .with_context(|| format!("index for checksum verification of {}", self.model))?;
         if let Some(ck) = idx.checksums {
             let want = match section {
@@ -515,6 +498,84 @@ impl SectionSource for RemoteSource {
             );
         }
         Ok(sink.into())
+    }
+}
+
+impl SectionSource for RemoteSource {
+    fn index(&self) -> Result<SectionIndex> {
+        let mut c = self.client.lock().unwrap();
+        self.index_via(&mut c)
+    }
+
+    fn fetch(&self, section: Section) -> Result<Bytes> {
+        let mut c = self.client.lock().unwrap();
+        let mut sink = Vec::new();
+        let mut last_err = None;
+        for attempt in 0..RemoteSource::FETCH_ATTEMPTS {
+            let deadline = self.fetch_timeout.map(|t| Instant::now() + t);
+            // one-shot fault injection: a capped pull stands in for a
+            // connection dying after that many acked chunks
+            let fault = self.fault_chunks.lock().unwrap().take();
+            let offset = sink.len() as u64;
+            match c.pull_section_deadline(&self.model, section, offset, &mut sink, fault, deadline)
+            {
+                Ok(out) if out.completed => {
+                    return self.verify(&mut c, section, sink);
+                }
+                Ok(out) => {
+                    // the injected fault: cut the socket the way a real
+                    // drop would, then fall through to reconnect/resume
+                    let _ = c.sock.shutdown(std::net::Shutdown::Both);
+                    last_err = Some(anyhow!(
+                        "connection lost pulling section {section} of {} at {}/{}",
+                        self.model,
+                        out.received_to,
+                        out.total_len
+                    ));
+                }
+                Err(e) => last_err = Some(e),
+            }
+            // a failed pull aborts mid-stream (a deadline expiry even
+            // shuts the socket down), so the connection is no longer on
+            // a request/response boundary. Reconnect under the same
+            // device id — the server resumes the session, so its last
+            // recorded ack is this fetch's resume point. If reconnecting
+            // fails, the dead client stays and later fetches error
+            // loudly.
+            let device_id = c.device_id.clone();
+            let timeout = c
+                .sock
+                .read_timeout()
+                .ok()
+                .flatten()
+                .unwrap_or(RemoteSource::DEFAULT_FETCH_TIMEOUT);
+            let Ok(fresh) = FleetClient::connect(self.addr, &device_id, timeout) else {
+                break;
+            };
+            *c = fresh;
+            if attempt + 1 >= RemoteSource::FETCH_ATTEMPTS {
+                break;
+            }
+            // resume from the server's ack, clamped to what the sink
+            // actually holds; everything past it is re-pulled
+            let prev = sink.len() as u64;
+            let acked = c
+                .server_offset(&self.model, section)
+                .unwrap_or(0)
+                .min(prev);
+            sink.truncate(acked as usize);
+            registry().fleet.resumed_bytes.add(acked);
+            registry().fleet.restarted_bytes.add(prev - acked);
+            nq_trace!(
+                TraceKind::ChunkRetry,
+                "retrying section {section} of {} from {acked} (kept {acked} B, rewound {} B)",
+                self.model,
+                prev - acked
+            );
+        }
+        Err(last_err.unwrap_or_else(|| {
+            anyhow!("section {section} fetch of {} failed", self.model)
+        }))
     }
 
     fn describe(&self) -> String {

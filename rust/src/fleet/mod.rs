@@ -46,6 +46,7 @@
 //! | `Control "state"` model          | `Control "state"` variant+held |
 //! | `Control "pull"` sec+off+model   | `Chunk` stream (ack each)      |
 //! | `Control "dropped"` sec+model    | `Control "ok"`                 |
+//! | `Control "metrics"`              | `Control "metrics"` JSON telemetry snapshot |
 //! | `Control "stop"`                 | — (server shuts down)          |
 
 pub mod cache;
@@ -64,9 +65,9 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::container::SectionIndex;
-use crate::coordinator::metrics::LatencyHisto;
 use crate::coordinator::SwitchPolicy;
 use crate::store::{FileSource, SectionSource};
+use crate::telemetry::{registry, LatencyHisto, Snapshot};
 use crate::transport::{
     chunk_frame, parse_ack, recv_frame, send_frame, ChunkHeader, Frame, FrameKind, Meter,
 };
@@ -574,6 +575,18 @@ fn handle_connection(sock: TcpStream, ctx: Ctx) -> Result<()> {
                 let _ = TcpStream::connect(ctx.addr);
                 return Ok(());
             }
+            "metrics" => {
+                // telemetry scrape: allowed pre-hello so monitoring needs
+                // no device identity
+                let snap = Snapshot::gather_full(
+                    &[],
+                    &[("nq_fleet_xfer_latency", &ctx.xfer_latency)],
+                );
+                let body = snap.to_json().into_bytes();
+                if send_frame(&mut writer, &control("metrics", body), &ctx.meter).is_err() {
+                    return Ok(());
+                }
+            }
             "hello" => {
                 match String::from_utf8(frame.payload.clone()).ok().filter(|s| !s.is_empty()) {
                     Some(id) => {
@@ -631,6 +644,15 @@ fn dispatch(
             ensure!(payload.len() == 8, "level payload must be 8 bytes");
             let level = f64::from_le_bytes(payload.try_into().unwrap());
             let decision = ctx.sessions.decide(device, level)?;
+            match decision {
+                crate::coordinator::Decision::Stay => registry().fleet.advice_stay.inc(),
+                crate::coordinator::Decision::SwitchTo(crate::coordinator::Variant::FullBit) => {
+                    registry().fleet.advice_upgrade.inc()
+                }
+                crate::coordinator::Decision::SwitchTo(crate::coordinator::Variant::PartBit) => {
+                    registry().fleet.advice_downgrade.inc()
+                }
+            }
             send_frame(
                 writer,
                 &control("advice", decision.wire().as_bytes().to_vec()),
@@ -785,6 +807,8 @@ fn stream_chunks(
         ensure!(axfer == xfer_id, "ack for transfer {axfer}, expected {xfer_id}");
         ensure!(aend == end, "acked {aend}, expected {end}");
         ctx.sessions.record_ack(device, model, section, aend)?;
+        registry().fleet.chunks_sent.inc();
+        registry().fleet.chunk_bytes_sent.add(end - pos);
         pos = end;
         if pos >= total {
             return Ok(());

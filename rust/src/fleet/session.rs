@@ -87,11 +87,14 @@ impl SessionTable {
     /// policy state, which is exactly what makes transfers resumable).
     pub fn hello(&self, id: &str) {
         let mut g = self.inner.lock().unwrap();
-        g.entry(id.to_string()).or_insert_with(|| DeviceSession {
-            // devices come online part-bit after a Section-A pull
-            policy: PolicyState::new(self.policy, Variant::PartBit),
-            levels_seen: 0,
-            residency: HashMap::new(),
+        g.entry(id.to_string()).or_insert_with(|| {
+            crate::telemetry::registry().fleet.sessions.inc();
+            DeviceSession {
+                // devices come online part-bit after a Section-A pull
+                policy: PolicyState::new(self.policy, Variant::PartBit),
+                levels_seen: 0,
+                residency: HashMap::new(),
+            }
         });
     }
 

@@ -135,6 +135,16 @@ impl Tier {
             Tier::Simd => "simd",
         }
     }
+
+    /// Index into the telemetry registry's per-tier counter rows
+    /// (matches `telemetry::KERNEL_TIERS` order).
+    pub fn index(self) -> usize {
+        match self {
+            Tier::Scalar => 0,
+            Tier::Swar => 1,
+            Tier::Simd => 2,
+        }
+    }
 }
 
 impl std::fmt::Display for Tier {
@@ -195,6 +205,12 @@ impl KernelPlan {
         out.reserve(len);
         (self.unpack_dequant)(words, bits, len, scales, scale_mul, out);
         debug_assert_eq!(out.len(), len);
+        // hot-path telemetry: exactly two relaxed atomic adds
+        crate::telemetry::registry().kernels.record(
+            crate::telemetry::OP_UNPACK_DEQUANT,
+            self.tier.index(),
+            (len * 4) as u64,
+        );
     }
 
     /// Fused one-pass upgrade decode through this tier.
@@ -230,6 +246,12 @@ impl KernelPlan {
         out.reserve(len);
         (self.recompose_dequant)(high_words, h_bits, low_words, low_bits, l, len, scales, out);
         debug_assert_eq!(out.len(), len);
+        // hot-path telemetry: exactly two relaxed atomic adds
+        crate::telemetry::registry().kernels.record(
+            crate::telemetry::OP_RECOMPOSE_DEQUANT,
+            self.tier.index(),
+            (len * 4) as u64,
+        );
     }
 
     /// Plain i32 unpack through this tier.
@@ -247,6 +269,12 @@ impl KernelPlan {
         out.reserve(len);
         (self.unpack_ints)(words, bits, len, out);
         debug_assert_eq!(out.len(), len);
+        // hot-path telemetry: exactly two relaxed atomic adds
+        crate::telemetry::registry().kernels.record(
+            crate::telemetry::OP_UNPACK_INTS,
+            self.tier.index(),
+            (len * 4) as u64,
+        );
     }
 }
 
@@ -567,6 +595,24 @@ mod tests {
         }
         // the active plan is one of the three
         assert!(Tier::all().contains(&active().tier));
+    }
+
+    #[test]
+    fn telemetry_counts_decoded_bytes_per_tier() {
+        use crate::telemetry::{registry, KERNEL_TIERS, OP_UNPACK_DEQUANT};
+        for tier in Tier::all() {
+            assert_eq!(KERNEL_TIERS[tier.index()], tier.label());
+        }
+        let t = PackedTensor::pack(&[1, -2, 3, 4], 8).unwrap();
+        let bytes = t.to_le_bytes();
+        let k = &registry().kernels;
+        let idx = Tier::Scalar.index();
+        let (calls0, bytes0) = (k.calls(OP_UNPACK_DEQUANT, idx), k.bytes(OP_UNPACK_DEQUANT, idx));
+        let mut out = Vec::new();
+        plan_for(Tier::Scalar).unpack_dequant_into(&bytes, 8, 4, &[1.0], 1.0, &mut out);
+        // >= because parallel tests in this binary also decode via scalar
+        assert!(k.calls(OP_UNPACK_DEQUANT, idx) >= calls0 + 1);
+        assert!(k.bytes(OP_UNPACK_DEQUANT, idx) >= bytes0 + 16);
     }
 
     #[test]

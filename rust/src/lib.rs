@@ -36,6 +36,7 @@ pub mod report;
 pub mod runtime;
 pub mod stats;
 pub mod store;
+pub mod telemetry;
 pub mod transport;
 pub mod util;
 

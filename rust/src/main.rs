@@ -8,8 +8,10 @@
 //! nestquant eval --arch cnn_m --n 8 --h 4 [--variant part|full] [--limit N]
 //! nestquant trace --arch cnn_m --n 8 --h 4 [--steps N] [--trace solar|discharge]
 //! nestquant serve --arch cnn_m --n 8 --h 4
-//! nestquant serve --store artifacts/nq [--budget-mb 64] [--batch 4]
+//! nestquant serve --store artifacts/nq [--budget-mb 64] [--batch 4] [--synth N]
 //! nestquant fleet [--devices D] [--steps K] [--budget-mb M] [--chunk-kb C]
+//! nestquant metrics --addr H:P [--prom] [--check] [--require a,b] [--out F]
+//! nestquant top --addr H:P                one-shot human telemetry table
 //! nestquant report <table|fig|all>        regenerate paper tables/figures
 //! ```
 
@@ -31,12 +33,19 @@ fn usage() -> ! {
          \x20 eval   --arch A --n N --h H [--variant part|full] [--limit K]\n\
          \x20 trace  --arch A --n N --h H [--steps K] [--trace solar|discharge] [--reqs R]\n\
          \x20 serve  --arch A --n N --h H        start the inference server (one model)\n\
-         \x20 serve  --store DIR [--budget-mb M] [--batch B]\n\
+         \x20 serve  --store DIR [--budget-mb M] [--batch B] [--synth N]\n\
          \x20                                    host every nest .nq in DIR behind one\n\
          \x20                                    multi-tenant server + shared B budget\n\
+         \x20                                    (--synth N seeds DIR with N synthetic\n\
+         \x20                                    containers first — CI/demo without artifacts)\n\
          \x20 fleet  [--devices D] [--steps K] [--budget-mb M] [--chunk-kb C] [--models M]\n\
          \x20                                    fleet-distribution simulation (synthetic zoo\n\
          \x20                                    when artifacts are missing)\n\
+         \x20 metrics --addr HOST:PORT [--prom] [--check] [--require n1,n2] [--out FILE]\n\
+         \x20                                    scrape a live server's telemetry snapshot\n\
+         \x20                                    (JSON by default, --prom for Prometheus text)\n\
+         \x20 top    --addr HOST:PORT            one-shot telemetry table (tenants, store,\n\
+         \x20                                    kernels, fleet, trace tail)\n\
 \x20 select --arch A [--n N] [--live]   adaptive nesting selection (future-work)\n\
          \x20 bench-guard [BENCH_kernels.json]   fail if the SIMD tier regressed below\n\
          \x20                                    the SWAR baseline on lane-aligned cells\n\
@@ -123,6 +132,8 @@ fn run() -> Result<()> {
         "trace" => cmd_trace(&root, &args),
         "serve" => cmd_serve(&root, &args),
         "fleet" => cmd_fleet(&root, &args),
+        "metrics" => cmd_metrics(&args),
+        "top" => cmd_top(&args),
         "select" => cmd_select(&root, &args),
         "report" => cmd_report(&root, &args),
         "bench-guard" => cmd_bench_guard(&args),
@@ -387,6 +398,13 @@ fn cmd_serve_store(args: &Args) -> Result<()> {
     let dir = std::path::PathBuf::from(args.req("store")?);
     let budget_mb: u64 = args.num("budget-mb", 64)?;
     let batch: usize = args.num("batch", 4)?;
+    let synth: usize = args.num("synth", 0)?;
+    if synth > 0 {
+        // seed the dir with synthetic nest containers: the CI telemetry
+        // scrape (and quick local demos) need a store without artifacts
+        let zoo = nestquant::fleet::synthetic_zoo(&dir, synth, 0xF1EE7)?;
+        println!("seeded {} synthetic INT(8|4) containers into {}", zoo.len(), dir.display());
+    }
     let store = ModelStore::new();
     let budget = std::sync::Arc::new(StoreBudget::new(budget_mb << 20));
     let tenants = nest_tenants_from_dir(&dir, &store, &budget, batch)?;
@@ -552,6 +570,86 @@ fn cmd_fleet(root: &std::path::Path, args: &Args) -> Result<()> {
         latency.quantile_us(0.99),
         latency.max_us()
     );
+    Ok(())
+}
+
+/// Scrape one telemetry snapshot (the `metrics` wire command) from a
+/// live server — coordinator and fleet servers answer the same frame.
+/// Returns the raw JSON payload.
+fn scrape_metrics(addr: &str) -> Result<String> {
+    use nestquant::transport::{recv_frame, send_frame, Frame, FrameKind, Meter};
+
+    let addr: std::net::SocketAddr = addr
+        .parse()
+        .with_context(|| format!("--addr {addr:?} is not HOST:PORT"))?;
+    let mut sock = std::net::TcpStream::connect(addr)
+        .with_context(|| format!("connecting {addr}"))?;
+    sock.set_read_timeout(Some(std::time::Duration::from_secs(10)))?;
+    let meter = Meter::default();
+    send_frame(
+        &mut sock,
+        &Frame {
+            kind: FrameKind::Control,
+            name: "metrics".into(),
+            payload: Vec::new(),
+        },
+        &meter,
+    )?;
+    let (reply, _) = recv_frame(&mut sock, &meter)?;
+    anyhow::ensure!(
+        reply.name == "metrics",
+        "unexpected reply {:?}: {}",
+        reply.name,
+        String::from_utf8_lossy(&reply.payload)
+    );
+    String::from_utf8(reply.payload).context("metrics payload")
+}
+
+/// `nestquant metrics`: scrape a live server, print the snapshot as JSON
+/// (default) or Prometheus text (`--prom`). `--check` validates the
+/// Prometheus grammar, `--require a,b` fails on zeroed counters (the CI
+/// must-move gate), `--out FILE` writes the JSON sidecar.
+fn cmd_metrics(args: &Args) -> Result<()> {
+    use nestquant::telemetry::{validate_prometheus, Snapshot};
+
+    let json = scrape_metrics(args.req("addr")?)?;
+    let snap = Snapshot::from_json(&json)?;
+    if let Some(required) = args.flag("require") {
+        let zeroed: Vec<&str> = required
+            .split(',')
+            .map(str::trim)
+            .filter(|n| !n.is_empty())
+            .filter(|n| snap.counter(n).unwrap_or(0) == 0)
+            .collect();
+        anyhow::ensure!(
+            zeroed.is_empty(),
+            "required counters absent or zero: {}",
+            zeroed.join(", ")
+        );
+    }
+    if let Some(path) = args.flag("out") {
+        std::fs::write(path, &json).with_context(|| format!("writing {path}"))?;
+    }
+    if args.flag("prom").is_some() {
+        let text = snap.prometheus();
+        if args.flag("check").is_some() {
+            validate_prometheus(&text).context("prometheus grammar")?;
+        }
+        print!("{text}");
+    } else {
+        println!("{json}");
+    }
+    Ok(())
+}
+
+/// `nestquant top`: one-shot human table rendered from the same JSON
+/// snapshot the `metrics` command scrapes — identical totals by
+/// construction.
+fn cmd_top(args: &Args) -> Result<()> {
+    use nestquant::telemetry::Snapshot;
+
+    let json = scrape_metrics(args.req("addr")?)?;
+    print!("{}", Snapshot::from_json(&json)?.top_table());
     Ok(())
 }
 

@@ -12,9 +12,11 @@ use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::{Arc, Mutex, OnceLock};
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::container::{self, Container, Kind, SectionIndex};
+use crate::nq_trace;
+use crate::telemetry::{registry, TraceKind};
 
 use super::layout::{FullBitModel, ModelLayout, PartBitModel};
 use super::{Bytes, FileSource, MemorySource, Section, SectionSource};
@@ -67,6 +69,7 @@ impl NqArchive {
         let index = source
             .index()
             .with_context(|| format!("indexing {}", source.describe()))?;
+        registry().store.archive_opens.inc();
         Ok(NqArchive {
             source,
             index,
@@ -147,14 +150,30 @@ impl NqArchive {
         if let Some(ck) = self.index.checksums {
             // integrity trailer present: the fetched payload must match
             // it bit-for-bit (geometry checks can't catch payload flips)
-            ensure!(
-                crate::util::crc64::crc64(&a) == ck.a,
-                "section A checksum mismatch for {} (corrupt fetch)",
-                self.source.describe()
-            );
+            if crate::util::crc64::crc64(&a) != ck.a {
+                registry().store.crc_failures.inc();
+                nq_trace!(
+                    TraceKind::CrcFailure,
+                    "section A of {}",
+                    self.source.describe()
+                );
+                bail!(
+                    "section A checksum mismatch for {} (corrupt fetch)",
+                    self.source.describe()
+                );
+            }
         }
         s.stats.a_fetches += 1;
         s.stats.a_bytes_fetched += a.len() as u64;
+        registry().store.a_fetches.inc();
+        registry().store.a_bytes_fetched.add(a.len() as u64);
+        registry().store.resident_a_bytes.add(a.len() as u64);
+        nq_trace!(
+            TraceKind::PageIn,
+            "section A of {} ({} bytes)",
+            self.source.describe(),
+            a.len()
+        );
         s.a = Some(Arc::clone(&a));
         Ok(a)
     }
@@ -189,14 +208,30 @@ impl NqArchive {
             self.index.section_b_bytes()
         );
         if let Some(ck) = self.index.checksums {
-            ensure!(
-                crate::util::crc64::crc64(&b) == ck.b,
-                "section B checksum mismatch for {} (corrupt fetch)",
-                self.source.describe()
-            );
+            if crate::util::crc64::crc64(&b) != ck.b {
+                registry().store.crc_failures.inc();
+                nq_trace!(
+                    TraceKind::CrcFailure,
+                    "section B of {}",
+                    self.source.describe()
+                );
+                bail!(
+                    "section B checksum mismatch for {} (corrupt fetch)",
+                    self.source.describe()
+                );
+            }
         }
         s.stats.b_fetches += 1;
         s.stats.b_bytes_fetched += b.len() as u64;
+        registry().store.b_fetches.inc();
+        registry().store.b_bytes_fetched.add(b.len() as u64);
+        registry().store.resident_b_bytes.add(b.len() as u64);
+        nq_trace!(
+            TraceKind::PageIn,
+            "section B of {} ({} bytes)",
+            self.source.describe(),
+            b.len()
+        );
         s.b = Some(Arc::clone(&b));
         Ok(b)
     }
@@ -209,6 +244,16 @@ impl NqArchive {
         let was = s.b.take().is_some();
         if was {
             s.stats.b_releases += 1;
+            registry().store.b_releases.inc();
+            registry()
+                .store
+                .resident_b_bytes
+                .sub(self.index.section_b_bytes());
+            nq_trace!(
+                TraceKind::PageOut,
+                "section B of {}",
+                self.source.describe()
+            );
         }
         was
     }
@@ -221,8 +266,25 @@ impl NqArchive {
         let mut s = self.state.lock().unwrap();
         if s.b.take().is_some() {
             s.stats.b_releases += 1;
+            registry().store.b_releases.inc();
+            registry()
+                .store
+                .resident_b_bytes
+                .sub(self.index.section_b_bytes());
         }
-        s.a.take().is_some()
+        let was = s.a.take().is_some();
+        if was {
+            registry()
+                .store
+                .resident_a_bytes
+                .sub(self.index.section_a_bytes());
+            nq_trace!(
+                TraceKind::PageOut,
+                "section A of {}",
+                self.source.describe()
+            );
+        }
+        was
     }
 
     /// The tensor layout, parsed once per archive (fetches section A if

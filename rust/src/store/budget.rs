@@ -25,6 +25,9 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{ensure, Context, Result};
 
+use crate::nq_trace;
+use crate::telemetry::{registry, TraceKind};
+
 use super::NqArchive;
 
 /// One entry in the budget's eviction trace.
@@ -179,6 +182,13 @@ impl StoreBudget {
             r.archive.release_b();
             g.used -= r.bytes;
             g.evictions += 1;
+            registry().store.evictions.inc();
+            registry().store.evicted_bytes.add(r.bytes);
+            nq_trace!(
+                TraceKind::Eviction,
+                "budget evicted {v} ({} B) for {id}",
+                r.bytes
+            );
             push_event(
                 &mut g.events,
                 BudgetEvent::Evicted {

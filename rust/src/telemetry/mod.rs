@@ -1,0 +1,749 @@
+//! Fleet-wide telemetry (S13): one process-global, lock-light registry of
+//! counters, gauges, and latency histograms across the store, kernels,
+//! fleet, and serving subsystems — plus a bounded ring-buffer event trace.
+//!
+//! Design contract:
+//!
+//! - **Lock-light recording.** Every counter/gauge record is exactly one
+//!   relaxed `fetch_add`; the kernel decode hot path records one call and
+//!   one byte count — two relaxed atomics total, nothing else. Histogram
+//!   records are four relaxed atomics and only appear on per-request /
+//!   per-switch paths, never inside decode loops.
+//! - **Const-constructed global.** The registry is a `static` built by
+//!   `const fn`s, so [`registry()`] is a plain reference — no `OnceLock`
+//!   acquire-load on the hot path and no lazy-init branch.
+//! - **Zero-cost-when-disabled tracing.** The [`TraceRing`] is gated by
+//!   one `AtomicBool`; the [`nq_trace!`] macro checks the gate *before*
+//!   evaluating its format arguments, so a disabled ring costs a single
+//!   relaxed load — no formatting, no allocation, no lock.
+//!
+//! Scrape surfaces (see [`Snapshot`]): the `metrics` wire command on both
+//! TCP servers (versioned JSON), `nestquant metrics --prom` (Prometheus
+//! text exposition), and `nestquant top` (human table). All three render
+//! from the same gathered snapshot, so totals are identical by
+//! construction.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+mod snapshot;
+pub use snapshot::{validate_prometheus, HistoSnapshot, Snapshot, TenantSnapshot};
+
+// ---------------------------------------------------------------------------
+// primitives
+// ---------------------------------------------------------------------------
+
+/// Monotonic counter: one relaxed `fetch_add` per record.
+#[derive(Debug)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for Counter {
+    fn default() -> Self {
+        Counter::new()
+    }
+}
+
+/// Instantaneous level (resident bytes, queue depth). Call sites pair
+/// every `sub` with an earlier `add` of the same amount, so the value
+/// never underflows.
+#[derive(Debug)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub const fn new() -> Gauge {
+        Gauge(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn sub(&self, n: u64) {
+        self.0.fetch_sub(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn dec(&self) {
+        self.sub(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Gauge::new()
+    }
+}
+
+/// Log2-bucketed latency histogram from 1µs to ~17min (promoted here
+/// from `coordinator/metrics.rs`; that module is now a thin shim).
+#[derive(Debug)]
+pub struct LatencyHisto {
+    /// bucket i covers [2^i, 2^{i+1}) microseconds.
+    buckets: [AtomicU64; 32],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl LatencyHisto {
+    pub const fn new() -> LatencyHisto {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        LatencyHisto {
+            buckets: [ZERO; 32],
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let bucket = (63 - us.leading_zeros() as usize).min(31);
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Approximate quantile from the log buckets (upper bound of the
+    /// bucket containing the q-th sample).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * q).ceil().max(1.0) as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        self.max_us()
+    }
+}
+
+impl Default for LatencyHisto {
+    fn default() -> Self {
+        LatencyHisto::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// per-tenant metrics (promoted from coordinator/metrics.rs)
+// ---------------------------------------------------------------------------
+
+/// Coordinator-wide metrics: one instance per tenant/coordinator, owned
+/// by the serving layer (NOT process-global, so parallel tests and
+/// tenants never cross-contaminate). The global [`Registry`] aggregates
+/// across tenants; a wire snapshot carries both.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub batch_occupancy_sum: AtomicU64,
+    pub upgrades: AtomicU64,
+    pub downgrades: AtomicU64,
+    pub page_in_bytes: AtomicU64,
+    pub page_out_bytes: AtomicU64,
+    pub errors: AtomicU64,
+    pub request_latency: LatencyHisto,
+    pub execute_latency: LatencyHisto,
+    pub switch_latency: LatencyHisto,
+}
+
+impl Metrics {
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batch_occupancy_sum.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    /// Render a human-readable summary block.
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} batches={} occupancy={:.2} upgrades={} downgrades={} \
+             page_in={}B page_out={}B errors={}\n\
+             latency: exec mean={:.0}us p50={}us p99={}us max={}us | \
+             request mean={:.0}us p99={}us | switch mean={:.0}us max={}us",
+            self.requests.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_occupancy(),
+            self.upgrades.load(Ordering::Relaxed),
+            self.downgrades.load(Ordering::Relaxed),
+            self.page_in_bytes.load(Ordering::Relaxed),
+            self.page_out_bytes.load(Ordering::Relaxed),
+            self.errors.load(Ordering::Relaxed),
+            self.execute_latency.mean_us(),
+            self.execute_latency.quantile_us(0.5),
+            self.execute_latency.quantile_us(0.99),
+            self.execute_latency.max_us(),
+            self.request_latency.mean_us(),
+            self.request_latency.quantile_us(0.99),
+            self.switch_latency.mean_us(),
+            self.switch_latency.max_us(),
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// subsystem groups
+// ---------------------------------------------------------------------------
+
+/// Store (S11) counters: archive lifecycle, section traffic, integrity,
+/// and the shared Section-B budget.
+#[derive(Debug)]
+pub struct StoreTelemetry {
+    pub archive_opens: Counter,
+    pub crc_failures: Counter,
+    pub a_fetches: Counter,
+    pub b_fetches: Counter,
+    pub a_bytes_fetched: Counter,
+    pub b_bytes_fetched: Counter,
+    pub b_releases: Counter,
+    /// `StoreBudget` cross-tenant evictions.
+    pub evictions: Counter,
+    pub evicted_bytes: Counter,
+    /// Section-A bytes currently resident across all archives.
+    pub resident_a_bytes: Gauge,
+    /// Section-B bytes currently resident across all archives.
+    pub resident_b_bytes: Gauge,
+}
+
+impl StoreTelemetry {
+    pub const fn new() -> StoreTelemetry {
+        StoreTelemetry {
+            archive_opens: Counter::new(),
+            crc_failures: Counter::new(),
+            a_fetches: Counter::new(),
+            b_fetches: Counter::new(),
+            a_bytes_fetched: Counter::new(),
+            b_bytes_fetched: Counter::new(),
+            b_releases: Counter::new(),
+            evictions: Counter::new(),
+            evicted_bytes: Counter::new(),
+            resident_a_bytes: Gauge::new(),
+            resident_b_bytes: Gauge::new(),
+        }
+    }
+}
+
+impl Default for StoreTelemetry {
+    fn default() -> Self {
+        StoreTelemetry::new()
+    }
+}
+
+/// Canonical kernel op names, indexed by the `OP_*` constants.
+pub const KERNEL_OPS: [&str; 3] = ["unpack_dequant", "recompose_dequant", "unpack_ints"];
+/// Canonical dispatch-tier names, indexed by `kernels::Tier as usize`.
+pub const KERNEL_TIERS: [&str; 3] = ["scalar", "swar", "simd"];
+
+pub const OP_UNPACK_DEQUANT: usize = 0;
+pub const OP_RECOMPOSE_DEQUANT: usize = 1;
+pub const OP_UNPACK_INTS: usize = 2;
+
+/// Kernel (S12) counters: decoded output bytes and call counts per
+/// (op, dispatch tier), so the SWAR-vs-SIMD share is visible live.
+#[derive(Debug)]
+pub struct KernelTelemetry {
+    /// `calls[op][tier]`
+    calls: [[Counter; 3]; 3],
+    /// `bytes[op][tier]` — decoded *output* bytes (f32 lanes × 4).
+    bytes: [[Counter; 3]; 3],
+}
+
+impl KernelTelemetry {
+    pub const fn new() -> KernelTelemetry {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const C: Counter = Counter::new();
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ROW: [Counter; 3] = [C, C, C];
+        KernelTelemetry {
+            calls: [ROW, ROW, ROW],
+            bytes: [ROW, ROW, ROW],
+        }
+    }
+
+    /// The decode hot-path record: exactly two relaxed atomic adds.
+    #[inline]
+    pub fn record(&self, op: usize, tier: usize, out_bytes: u64) {
+        self.calls[op][tier].inc();
+        self.bytes[op][tier].add(out_bytes);
+    }
+
+    pub fn calls(&self, op: usize, tier: usize) -> u64 {
+        self.calls[op][tier].get()
+    }
+
+    pub fn bytes(&self, op: usize, tier: usize) -> u64 {
+        self.bytes[op][tier].get()
+    }
+
+    /// Decoded bytes summed over every (op, tier) cell.
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes.iter().flatten().map(Counter::get).sum()
+    }
+
+    /// Calls summed over every (op, tier) cell.
+    pub fn total_calls(&self) -> u64 {
+        self.calls.iter().flatten().map(Counter::get).sum()
+    }
+}
+
+impl Default for KernelTelemetry {
+    fn default() -> Self {
+        KernelTelemetry::new()
+    }
+}
+
+/// Fleet (S9) counters: sessions, chunked transfers, resume economics,
+/// the zoo-wide section cache, and policy advice issued per direction.
+#[derive(Debug)]
+pub struct FleetTelemetry {
+    /// Distinct device sessions registered via `hello`.
+    pub sessions: Counter,
+    pub chunks_sent: Counter,
+    pub chunk_bytes_sent: Counter,
+    /// Client bytes *kept* across a reconnect (resumed from the server's
+    /// acked offset instead of re-pulled).
+    pub resumed_bytes: Counter,
+    /// Client bytes discarded on reconnect (past the acked offset, so
+    /// they must be re-pulled — the waste a resume bounds).
+    pub restarted_bytes: Counter,
+    pub cache_hits: Counter,
+    pub cache_misses: Counter,
+    pub cache_evictions: Counter,
+    pub advice_upgrade: Counter,
+    pub advice_downgrade: Counter,
+    pub advice_stay: Counter,
+}
+
+impl FleetTelemetry {
+    pub const fn new() -> FleetTelemetry {
+        FleetTelemetry {
+            sessions: Counter::new(),
+            chunks_sent: Counter::new(),
+            chunk_bytes_sent: Counter::new(),
+            resumed_bytes: Counter::new(),
+            restarted_bytes: Counter::new(),
+            cache_hits: Counter::new(),
+            cache_misses: Counter::new(),
+            cache_evictions: Counter::new(),
+            advice_upgrade: Counter::new(),
+            advice_downgrade: Counter::new(),
+            advice_stay: Counter::new(),
+        }
+    }
+}
+
+impl Default for FleetTelemetry {
+    fn default() -> Self {
+        FleetTelemetry::new()
+    }
+}
+
+/// Serving (S10) counters: cross-tenant aggregates of the per-tenant
+/// [`Metrics`], plus queue depth and eviction-forced downgrades.
+#[derive(Debug)]
+pub struct ServingTelemetry {
+    pub requests: Counter,
+    pub batches: Counter,
+    pub errors: Counter,
+    pub upgrades: Counter,
+    pub downgrades: Counter,
+    /// Downgrades forced by budget eviction (not policy advice).
+    pub forced_downgrades: Counter,
+    pub page_in_bytes: Counter,
+    pub page_out_bytes: Counter,
+    /// Requests enqueued but not yet executed, across all tenants.
+    pub queue_depth: Gauge,
+    pub request_latency: LatencyHisto,
+    pub batch_latency: LatencyHisto,
+    pub switch_latency: LatencyHisto,
+}
+
+impl ServingTelemetry {
+    pub const fn new() -> ServingTelemetry {
+        ServingTelemetry {
+            requests: Counter::new(),
+            batches: Counter::new(),
+            errors: Counter::new(),
+            upgrades: Counter::new(),
+            downgrades: Counter::new(),
+            forced_downgrades: Counter::new(),
+            page_in_bytes: Counter::new(),
+            page_out_bytes: Counter::new(),
+            queue_depth: Gauge::new(),
+            request_latency: LatencyHisto::new(),
+            batch_latency: LatencyHisto::new(),
+            switch_latency: LatencyHisto::new(),
+        }
+    }
+}
+
+impl Default for ServingTelemetry {
+    fn default() -> Self {
+        ServingTelemetry::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// trace ring
+// ---------------------------------------------------------------------------
+
+/// Typed rare-path events carried by the [`TraceRing`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceKind {
+    /// A section became resident (A or B page-in).
+    PageIn,
+    /// A section was released (page-out).
+    PageOut,
+    /// The store budget evicted a victim tenant's Section B.
+    Eviction,
+    /// A bitwidth switch (upgrade/downgrade) was applied.
+    Switch,
+    /// A CRC integrity check refused section bytes.
+    CrcFailure,
+    /// A chunked transfer was interrupted and retried/resumed.
+    ChunkRetry,
+    /// Kernel dispatch-tier selection (plan resolution, not per call).
+    KernelDispatch,
+}
+
+impl TraceKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            TraceKind::PageIn => "page_in",
+            TraceKind::PageOut => "page_out",
+            TraceKind::Eviction => "eviction",
+            TraceKind::Switch => "switch",
+            TraceKind::CrcFailure => "crc_failure",
+            TraceKind::ChunkRetry => "chunk_retry",
+            TraceKind::KernelDispatch => "kernel_dispatch",
+        }
+    }
+
+    pub fn from_label(s: &str) -> Option<TraceKind> {
+        Some(match s {
+            "page_in" => TraceKind::PageIn,
+            "page_out" => TraceKind::PageOut,
+            "eviction" => TraceKind::Eviction,
+            "switch" => TraceKind::Switch,
+            "crc_failure" => TraceKind::CrcFailure,
+            "chunk_retry" => TraceKind::ChunkRetry,
+            "kernel_dispatch" => TraceKind::KernelDispatch,
+            _ => return None,
+        })
+    }
+}
+
+/// One traced event: wall-clock millisecond timestamp + kind + free text.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Milliseconds since the UNIX epoch, stamped at push time.
+    pub at_ms: u64,
+    pub kind: TraceKind,
+    pub detail: String,
+}
+
+/// Ring capacity: old events fall off the front.
+pub const TRACE_CAP: usize = 1024;
+
+/// Bounded ring buffer of rare-path events, gated by one `AtomicBool`.
+/// Disabled (the default), a [`nq_trace!`] call is a single relaxed
+/// load — no formatting, no allocation, no lock.
+#[derive(Debug)]
+pub struct TraceRing {
+    enabled: AtomicBool,
+    events: Mutex<VecDeque<TraceEvent>>,
+}
+
+impl TraceRing {
+    pub const fn new() -> TraceRing {
+        TraceRing {
+            enabled: AtomicBool::new(false),
+            events: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn enable(&self) {
+        self.enabled.store(true, Ordering::Relaxed);
+    }
+
+    pub fn disable(&self) {
+        self.enabled.store(false, Ordering::Relaxed);
+    }
+
+    /// Append one event (drops the oldest at capacity). Callers should
+    /// gate on [`TraceRing::is_enabled`] — [`nq_trace!`] does — so the
+    /// detail string is never built when tracing is off; `push` re-checks
+    /// the gate anyway.
+    pub fn push(&self, kind: TraceKind, detail: String) {
+        if !self.is_enabled() {
+            return;
+        }
+        let at_ms = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0);
+        let mut g = self.events.lock().unwrap();
+        if g.len() == TRACE_CAP {
+            g.pop_front();
+        }
+        g.push_back(TraceEvent { at_ms, kind, detail });
+    }
+
+    /// The most recent `n` events, oldest first.
+    pub fn tail(&self, n: usize) -> Vec<TraceEvent> {
+        let g = self.events.lock().unwrap();
+        g.iter().skip(g.len().saturating_sub(n)).cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.lock().unwrap().is_empty()
+    }
+
+    pub fn clear(&self) {
+        self.events.lock().unwrap().clear();
+    }
+}
+
+impl Default for TraceRing {
+    fn default() -> Self {
+        TraceRing::new()
+    }
+}
+
+/// Record a [`TraceEvent`] into the global ring iff tracing is enabled.
+/// The gate is checked before the format arguments are evaluated, which
+/// is the zero-cost-when-disabled guarantee.
+#[macro_export]
+macro_rules! nq_trace {
+    ($kind:expr, $($arg:tt)*) => {
+        if $crate::telemetry::registry().trace.is_enabled() {
+            $crate::telemetry::registry()
+                .trace
+                .push($kind, format!($($arg)*));
+        }
+    };
+}
+
+// ---------------------------------------------------------------------------
+// the global registry
+// ---------------------------------------------------------------------------
+
+/// The process-global telemetry registry: every subsystem records here,
+/// every scrape surface reads from here.
+#[derive(Debug)]
+pub struct Registry {
+    pub store: StoreTelemetry,
+    pub kernels: KernelTelemetry,
+    pub fleet: FleetTelemetry,
+    pub serving: ServingTelemetry,
+    pub trace: TraceRing,
+}
+
+impl Registry {
+    pub const fn new() -> Registry {
+        Registry {
+            store: StoreTelemetry::new(),
+            kernels: KernelTelemetry::new(),
+            fleet: FleetTelemetry::new(),
+            serving: ServingTelemetry::new(),
+            trace: TraceRing::new(),
+        }
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry::new()
+    }
+}
+
+static REGISTRY: Registry = Registry::new();
+
+/// The process-global registry (const-constructed: no init branch, no
+/// lock — a plain `&'static`).
+#[inline]
+pub fn registry() -> &'static Registry {
+    &REGISTRY
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histo_records_and_quantiles() {
+        let h = LatencyHisto::default();
+        for us in [10u64, 20, 40, 80, 160, 320, 640, 1280, 2560, 100_000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 10);
+        assert!(h.mean_us() > 0.0);
+        assert!(h.quantile_us(0.5) >= 80 && h.quantile_us(0.5) <= 512);
+        assert!(h.quantile_us(0.99) >= 65536);
+        assert_eq!(h.max_us(), 100_000);
+    }
+
+    #[test]
+    fn histo_empty() {
+        let h = LatencyHisto::default();
+        assert_eq!(h.quantile_us(0.99), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn summary_renders() {
+        let m = Metrics::default();
+        m.requests.fetch_add(5, Ordering::Relaxed);
+        m.batches.fetch_add(2, Ordering::Relaxed);
+        m.batch_occupancy_sum.fetch_add(5, Ordering::Relaxed);
+        let s = m.summary();
+        assert!(s.contains("requests=5"));
+        assert!(s.contains("occupancy=2.50"));
+    }
+
+    #[test]
+    fn counters_and_gauges_accumulate() {
+        let c = Counter::new();
+        c.inc();
+        c.add(41);
+        assert_eq!(c.get(), 42);
+        let g = Gauge::new();
+        g.add(100);
+        g.sub(30);
+        g.inc();
+        g.dec();
+        assert_eq!(g.get(), 70);
+    }
+
+    #[test]
+    fn kernel_cells_are_independent() {
+        let k = KernelTelemetry::new();
+        k.record(OP_UNPACK_DEQUANT, 0, 400);
+        k.record(OP_UNPACK_DEQUANT, 2, 800);
+        k.record(OP_RECOMPOSE_DEQUANT, 1, 100);
+        assert_eq!(k.calls(OP_UNPACK_DEQUANT, 0), 1);
+        assert_eq!(k.bytes(OP_UNPACK_DEQUANT, 2), 800);
+        assert_eq!(k.calls(OP_UNPACK_INTS, 0), 0);
+        assert_eq!(k.total_bytes(), 1300);
+        assert_eq!(k.total_calls(), 3);
+    }
+
+    #[test]
+    fn trace_ring_gates_and_bounds() {
+        let t = TraceRing::new();
+        // disabled: pushes are dropped at the gate
+        t.push(TraceKind::Eviction, "dropped".into());
+        assert!(t.is_empty());
+        t.enable();
+        for i in 0..(TRACE_CAP + 10) {
+            t.push(TraceKind::Switch, format!("ev{i}"));
+        }
+        assert_eq!(t.len(), TRACE_CAP);
+        let tail = t.tail(2);
+        assert_eq!(tail.len(), 2);
+        assert_eq!(tail[1].detail, format!("ev{}", TRACE_CAP + 9));
+        assert_eq!(tail[1].kind, TraceKind::Switch);
+        t.disable();
+        t.push(TraceKind::Switch, "late".into());
+        assert_eq!(t.len(), TRACE_CAP);
+        t.clear();
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn trace_kind_labels_roundtrip() {
+        for k in [
+            TraceKind::PageIn,
+            TraceKind::PageOut,
+            TraceKind::Eviction,
+            TraceKind::Switch,
+            TraceKind::CrcFailure,
+            TraceKind::ChunkRetry,
+            TraceKind::KernelDispatch,
+        ] {
+            assert_eq!(TraceKind::from_label(k.label()), Some(k));
+        }
+        assert_eq!(TraceKind::from_label("nope"), None);
+    }
+
+    #[test]
+    fn global_registry_is_reachable() {
+        // one static instance; deltas accumulate across calls
+        let before = registry().store.archive_opens.get();
+        registry().store.archive_opens.inc();
+        assert_eq!(registry().store.archive_opens.get(), before + 1);
+    }
+}

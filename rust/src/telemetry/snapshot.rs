@@ -1,0 +1,702 @@
+//! Scrape surface for the telemetry registry: one gathered [`Snapshot`]
+//! serves all three exposure paths — the versioned JSON `metrics` wire
+//! command, the Prometheus text-exposition renderer, and the human
+//! `nestquant top` table. The CLI scrapes JSON and renders locally from
+//! the parsed snapshot, so every surface reports identical totals.
+
+use std::fmt::Write as _;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::util::json::{self, Value};
+
+use super::{registry, KERNEL_OPS, KERNEL_TIERS, LatencyHisto, Metrics, TraceEvent, TraceKind};
+
+/// Wire format version of the JSON snapshot.
+pub const SNAPSHOT_VERSION: u64 = 1;
+
+/// How many trace events a snapshot carries.
+const TRACE_TAIL: usize = 64;
+
+/// Point-in-time digest of one [`LatencyHisto`] (quantiles are computed
+/// at gather time server-side; buckets never cross the wire).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistoSnapshot {
+    pub name: String,
+    pub count: u64,
+    pub mean_us: f64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+}
+
+/// Point-in-time digest of one tenant's [`Metrics`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSnapshot {
+    pub id: String,
+    pub requests: u64,
+    pub batches: u64,
+    pub errors: u64,
+    pub upgrades: u64,
+    pub downgrades: u64,
+    pub page_in_bytes: u64,
+    pub page_out_bytes: u64,
+    pub request_mean_us: f64,
+    pub request_p50_us: u64,
+    pub request_p99_us: u64,
+    pub request_max_us: u64,
+    pub switch_p99_us: u64,
+}
+
+/// A versioned, self-contained scrape of the global registry plus the
+/// serving layer's per-tenant metrics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Snapshot {
+    pub version: u64,
+    /// Monotonic counters, canonical order, `nq_`-prefixed names.
+    pub counters: Vec<(String, u64)>,
+    /// Instantaneous gauges, same naming scheme.
+    pub gauges: Vec<(String, u64)>,
+    pub histograms: Vec<HistoSnapshot>,
+    pub tenants: Vec<TenantSnapshot>,
+    /// Most recent trace events, oldest first (empty when disabled).
+    pub trace: Vec<TraceEvent>,
+}
+
+fn histo_digest(name: &str, h: &LatencyHisto) -> HistoSnapshot {
+    HistoSnapshot {
+        name: name.to_string(),
+        count: h.count(),
+        mean_us: h.mean_us(),
+        p50_us: h.quantile_us(0.5),
+        p99_us: h.quantile_us(0.99),
+        max_us: h.max_us(),
+    }
+}
+
+impl Snapshot {
+    /// Gather the global registry plus the given per-tenant metrics.
+    pub fn gather(tenants: &[(String, Arc<Metrics>)]) -> Snapshot {
+        Snapshot::gather_full(tenants, &[])
+    }
+
+    /// [`Snapshot::gather`] with extra server-local histograms (e.g. the
+    /// fleet server's transfer latency).
+    pub fn gather_full(
+        tenants: &[(String, Arc<Metrics>)],
+        extra_histograms: &[(&str, &LatencyHisto)],
+    ) -> Snapshot {
+        let r = registry();
+        let mut counters: Vec<(String, u64)> = Vec::with_capacity(64);
+        let mut c = |name: &str, v: u64| counters.push((name.to_string(), v));
+
+        c("nq_store_archive_opens", r.store.archive_opens.get());
+        c("nq_store_crc_failures", r.store.crc_failures.get());
+        c("nq_store_a_fetches", r.store.a_fetches.get());
+        c("nq_store_b_fetches", r.store.b_fetches.get());
+        c("nq_store_a_bytes_fetched", r.store.a_bytes_fetched.get());
+        c("nq_store_b_bytes_fetched", r.store.b_bytes_fetched.get());
+        c("nq_store_b_releases", r.store.b_releases.get());
+        c("nq_store_evictions", r.store.evictions.get());
+        c("nq_store_evicted_bytes", r.store.evicted_bytes.get());
+
+        for (oi, op) in KERNEL_OPS.iter().enumerate() {
+            for (ti, tier) in KERNEL_TIERS.iter().enumerate() {
+                c(
+                    &format!("nq_kernel_{op}_{tier}_calls"),
+                    r.kernels.calls(oi, ti),
+                );
+                c(
+                    &format!("nq_kernel_{op}_{tier}_bytes"),
+                    r.kernels.bytes(oi, ti),
+                );
+            }
+        }
+
+        c("nq_fleet_sessions", r.fleet.sessions.get());
+        c("nq_fleet_chunks_sent", r.fleet.chunks_sent.get());
+        c("nq_fleet_chunk_bytes_sent", r.fleet.chunk_bytes_sent.get());
+        c("nq_fleet_resumed_bytes", r.fleet.resumed_bytes.get());
+        c("nq_fleet_restarted_bytes", r.fleet.restarted_bytes.get());
+        c("nq_fleet_cache_hits", r.fleet.cache_hits.get());
+        c("nq_fleet_cache_misses", r.fleet.cache_misses.get());
+        c("nq_fleet_cache_evictions", r.fleet.cache_evictions.get());
+        c("nq_fleet_advice_upgrade", r.fleet.advice_upgrade.get());
+        c("nq_fleet_advice_downgrade", r.fleet.advice_downgrade.get());
+        c("nq_fleet_advice_stay", r.fleet.advice_stay.get());
+
+        c("nq_serving_requests", r.serving.requests.get());
+        c("nq_serving_batches", r.serving.batches.get());
+        c("nq_serving_errors", r.serving.errors.get());
+        c("nq_serving_upgrades", r.serving.upgrades.get());
+        c("nq_serving_downgrades", r.serving.downgrades.get());
+        c("nq_serving_forced_downgrades", r.serving.forced_downgrades.get());
+        c("nq_serving_page_in_bytes", r.serving.page_in_bytes.get());
+        c("nq_serving_page_out_bytes", r.serving.page_out_bytes.get());
+
+        let gauges = vec![
+            (
+                "nq_store_resident_a_bytes".to_string(),
+                r.store.resident_a_bytes.get(),
+            ),
+            (
+                "nq_store_resident_b_bytes".to_string(),
+                r.store.resident_b_bytes.get(),
+            ),
+            (
+                "nq_serving_queue_depth".to_string(),
+                r.serving.queue_depth.get(),
+            ),
+        ];
+
+        let mut histograms = vec![
+            histo_digest("nq_serving_request_latency", &r.serving.request_latency),
+            histo_digest("nq_serving_batch_latency", &r.serving.batch_latency),
+            histo_digest("nq_serving_switch_latency", &r.serving.switch_latency),
+        ];
+        for (name, h) in extra_histograms {
+            histograms.push(histo_digest(name, h));
+        }
+
+        let mut tsnaps: Vec<TenantSnapshot> = tenants
+            .iter()
+            .map(|(id, m)| TenantSnapshot {
+                id: id.clone(),
+                requests: m.requests.load(std::sync::atomic::Ordering::Relaxed),
+                batches: m.batches.load(std::sync::atomic::Ordering::Relaxed),
+                errors: m.errors.load(std::sync::atomic::Ordering::Relaxed),
+                upgrades: m.upgrades.load(std::sync::atomic::Ordering::Relaxed),
+                downgrades: m.downgrades.load(std::sync::atomic::Ordering::Relaxed),
+                page_in_bytes: m.page_in_bytes.load(std::sync::atomic::Ordering::Relaxed),
+                page_out_bytes: m.page_out_bytes.load(std::sync::atomic::Ordering::Relaxed),
+                request_mean_us: m.request_latency.mean_us(),
+                request_p50_us: m.request_latency.quantile_us(0.5),
+                request_p99_us: m.request_latency.quantile_us(0.99),
+                request_max_us: m.request_latency.max_us(),
+                switch_p99_us: m.switch_latency.quantile_us(0.99),
+            })
+            .collect();
+        tsnaps.sort_by(|a, b| a.id.cmp(&b.id));
+
+        Snapshot {
+            version: SNAPSHOT_VERSION,
+            counters,
+            gauges,
+            histograms,
+            tenants: tsnaps,
+            trace: r.trace.tail(TRACE_TAIL),
+        }
+    }
+
+    /// Look up a counter by canonical name.
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| *v)
+    }
+
+    /// Look up a gauge by canonical name.
+    pub fn gauge(&self, name: &str) -> Option<u64> {
+        self.gauges.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+
+    /// Look up a histogram digest by canonical name.
+    pub fn histogram(&self, name: &str) -> Option<&HistoSnapshot> {
+        self.histograms.iter().find(|h| h.name == name)
+    }
+
+    /// Look up a tenant digest by id.
+    pub fn tenant(&self, id: &str) -> Option<&TenantSnapshot> {
+        self.tenants.iter().find(|t| t.id == id)
+    }
+
+    // -- JSON wire format ---------------------------------------------------
+
+    /// Serialize as compact JSON (the `metrics` wire-command payload).
+    /// Counter values ride as JSON numbers (f64); every value we emit is
+    /// far below 2^53, so the roundtrip is exact.
+    pub fn to_json(&self) -> String {
+        let kv_obj = |kv: &[(String, u64)]| {
+            Value::Object(
+                kv.iter()
+                    .map(|(k, v)| (k.clone(), json::num(*v as f64)))
+                    .collect(),
+            )
+        };
+        let histos = self
+            .histograms
+            .iter()
+            .map(|h| {
+                json::obj(vec![
+                    ("name", json::str_(h.name.clone())),
+                    ("count", json::num(h.count as f64)),
+                    ("mean_us", json::num(h.mean_us)),
+                    ("p50_us", json::num(h.p50_us as f64)),
+                    ("p99_us", json::num(h.p99_us as f64)),
+                    ("max_us", json::num(h.max_us as f64)),
+                ])
+            })
+            .collect();
+        let tenants = self
+            .tenants
+            .iter()
+            .map(|t| {
+                json::obj(vec![
+                    ("id", json::str_(t.id.clone())),
+                    ("requests", json::num(t.requests as f64)),
+                    ("batches", json::num(t.batches as f64)),
+                    ("errors", json::num(t.errors as f64)),
+                    ("upgrades", json::num(t.upgrades as f64)),
+                    ("downgrades", json::num(t.downgrades as f64)),
+                    ("page_in_bytes", json::num(t.page_in_bytes as f64)),
+                    ("page_out_bytes", json::num(t.page_out_bytes as f64)),
+                    ("request_mean_us", json::num(t.request_mean_us)),
+                    ("request_p50_us", json::num(t.request_p50_us as f64)),
+                    ("request_p99_us", json::num(t.request_p99_us as f64)),
+                    ("request_max_us", json::num(t.request_max_us as f64)),
+                    ("switch_p99_us", json::num(t.switch_p99_us as f64)),
+                ])
+            })
+            .collect();
+        let trace = self
+            .trace
+            .iter()
+            .map(|e| {
+                json::obj(vec![
+                    ("at_ms", json::num(e.at_ms as f64)),
+                    ("kind", json::str_(e.kind.label())),
+                    ("detail", json::str_(e.detail.clone())),
+                ])
+            })
+            .collect();
+        json::to_string(&json::obj(vec![
+            ("version", json::num(self.version as f64)),
+            ("counters", kv_obj(&self.counters)),
+            ("gauges", kv_obj(&self.gauges)),
+            ("histograms", json::arr(histos)),
+            ("tenants", json::arr(tenants)),
+            ("trace", json::arr(trace)),
+        ]))
+    }
+
+    /// Parse a snapshot back from its JSON wire form.
+    pub fn from_json(src: &str) -> Result<Snapshot> {
+        let v = json::parse(src)?;
+        let version = v.path(&["version"])?.as_u64()?;
+        ensure!(
+            version == SNAPSHOT_VERSION,
+            "unsupported metrics snapshot version {version} (expected {SNAPSHOT_VERSION})"
+        );
+        let kv_list = |key: &str| -> Result<Vec<(String, u64)>> {
+            v.path(&[key])?
+                .as_object()?
+                .iter()
+                .map(|(k, val)| Ok((k.clone(), val.as_u64()?)))
+                .collect()
+        };
+        let histograms = v
+            .path(&["histograms"])?
+            .as_array()?
+            .iter()
+            .map(|h| {
+                Ok(HistoSnapshot {
+                    name: h.path(&["name"])?.as_str()?.to_string(),
+                    count: h.path(&["count"])?.as_u64()?,
+                    mean_us: h.path(&["mean_us"])?.as_f64()?,
+                    p50_us: h.path(&["p50_us"])?.as_u64()?,
+                    p99_us: h.path(&["p99_us"])?.as_u64()?,
+                    max_us: h.path(&["max_us"])?.as_u64()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let tenants = v
+            .path(&["tenants"])?
+            .as_array()?
+            .iter()
+            .map(|t| {
+                Ok(TenantSnapshot {
+                    id: t.path(&["id"])?.as_str()?.to_string(),
+                    requests: t.path(&["requests"])?.as_u64()?,
+                    batches: t.path(&["batches"])?.as_u64()?,
+                    errors: t.path(&["errors"])?.as_u64()?,
+                    upgrades: t.path(&["upgrades"])?.as_u64()?,
+                    downgrades: t.path(&["downgrades"])?.as_u64()?,
+                    page_in_bytes: t.path(&["page_in_bytes"])?.as_u64()?,
+                    page_out_bytes: t.path(&["page_out_bytes"])?.as_u64()?,
+                    request_mean_us: t.path(&["request_mean_us"])?.as_f64()?,
+                    request_p50_us: t.path(&["request_p50_us"])?.as_u64()?,
+                    request_p99_us: t.path(&["request_p99_us"])?.as_u64()?,
+                    request_max_us: t.path(&["request_max_us"])?.as_u64()?,
+                    switch_p99_us: t.path(&["switch_p99_us"])?.as_u64()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let trace = v
+            .path(&["trace"])?
+            .as_array()?
+            .iter()
+            .map(|e| {
+                let kind = e.path(&["kind"])?.as_str()?;
+                Ok(TraceEvent {
+                    at_ms: e.path(&["at_ms"])?.as_u64()?,
+                    kind: TraceKind::from_label(kind)
+                        .ok_or_else(|| anyhow!("unknown trace kind {kind:?}"))?,
+                    detail: e.path(&["detail"])?.as_str()?.to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Snapshot {
+            version,
+            counters: kv_list("counters")?,
+            gauges: kv_list("gauges")?,
+            histograms,
+            tenants,
+            trace,
+        })
+    }
+
+    // -- Prometheus text exposition -----------------------------------------
+
+    /// Render Prometheus text-exposition format (one HELP + TYPE header
+    /// per metric family, per-tenant families labelled `tenant="..."`).
+    pub fn prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in &self.counters {
+            family(&mut out, name, "counter");
+            let _ = writeln!(out, "{name} {v}");
+        }
+        for (name, v) in &self.gauges {
+            family(&mut out, name, "gauge");
+            let _ = writeln!(out, "{name} {v}");
+        }
+        for h in &self.histograms {
+            let n = &h.name;
+            family(&mut out, &format!("{n}_count"), "counter");
+            let _ = writeln!(out, "{n}_count {}", h.count);
+            for (suffix, v) in [("p50_us", h.p50_us), ("p99_us", h.p99_us), ("max_us", h.max_us)] {
+                family(&mut out, &format!("{n}_{suffix}"), "gauge");
+                let _ = writeln!(out, "{n}_{suffix} {v}");
+            }
+            family(&mut out, &format!("{n}_mean_us"), "gauge");
+            let _ = writeln!(out, "{n}_mean_us {}", h.mean_us);
+        }
+        if !self.tenants.is_empty() {
+            let fields: [(&str, &str, fn(&TenantSnapshot) -> u64); 8] = [
+                ("nq_tenant_requests", "counter", |t| t.requests),
+                ("nq_tenant_errors", "counter", |t| t.errors),
+                ("nq_tenant_upgrades", "counter", |t| t.upgrades),
+                ("nq_tenant_downgrades", "counter", |t| t.downgrades),
+                ("nq_tenant_page_in_bytes", "counter", |t| t.page_in_bytes),
+                ("nq_tenant_page_out_bytes", "counter", |t| t.page_out_bytes),
+                ("nq_tenant_request_p50_us", "gauge", |t| t.request_p50_us),
+                ("nq_tenant_request_p99_us", "gauge", |t| t.request_p99_us),
+            ];
+            for (name, kind, get) in fields {
+                family(&mut out, name, kind);
+                for t in &self.tenants {
+                    let _ = writeln!(
+                        out,
+                        "{name}{{tenant=\"{}\"}} {}",
+                        escape_label(&t.id),
+                        get(t)
+                    );
+                }
+            }
+        }
+        out
+    }
+
+    // -- human table --------------------------------------------------------
+
+    /// Render the one-shot `nestquant top` table.
+    pub fn top_table(&self) -> String {
+        let c = |n: &str| self.counter(n).unwrap_or(0);
+        let g = |n: &str| self.gauge(n).unwrap_or(0);
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{:<16} {:>8} {:>5} {:>5} {:>5} {:>8} {:>8} {:>12}",
+            "TENANT", "REQ", "ERR", "UP", "DOWN", "P50us", "P99us", "RESIDENT_B"
+        );
+        if self.tenants.is_empty() {
+            let _ = writeln!(out, "(no tenants)");
+        }
+        for t in &self.tenants {
+            let _ = writeln!(
+                out,
+                "{:<16} {:>8} {:>5} {:>5} {:>5} {:>8} {:>8} {:>12}",
+                t.id,
+                t.requests,
+                t.errors,
+                t.upgrades,
+                t.downgrades,
+                t.request_p50_us,
+                t.request_p99_us,
+                t.page_in_bytes.saturating_sub(t.page_out_bytes),
+            );
+        }
+        let _ = writeln!(
+            out,
+            "store:   residentA={}B residentB={}B evictions={} evicted={}B crc_failures={}",
+            g("nq_store_resident_a_bytes"),
+            g("nq_store_resident_b_bytes"),
+            c("nq_store_evictions"),
+            c("nq_store_evicted_bytes"),
+            c("nq_store_crc_failures"),
+        );
+        let mut kernels = String::new();
+        for (ti, tier) in KERNEL_TIERS.iter().enumerate() {
+            let (mut calls, mut bytes) = (0u64, 0u64);
+            for op in KERNEL_OPS.iter() {
+                calls += c(&format!("nq_kernel_{op}_{tier}_calls"));
+                bytes += c(&format!("nq_kernel_{op}_{tier}_bytes"));
+            }
+            if ti > 0 {
+                kernels.push_str(" | ");
+            }
+            let _ = write!(kernels, "{tier}={calls}calls/{bytes}B");
+        }
+        let _ = writeln!(out, "kernels: {kernels}");
+        let _ = writeln!(
+            out,
+            "fleet:   sessions={} chunks={} sent={}B resumed={}B restarted={}B cache hit/miss/evict={}/{}/{}",
+            c("nq_fleet_sessions"),
+            c("nq_fleet_chunks_sent"),
+            c("nq_fleet_chunk_bytes_sent"),
+            c("nq_fleet_resumed_bytes"),
+            c("nq_fleet_restarted_bytes"),
+            c("nq_fleet_cache_hits"),
+            c("nq_fleet_cache_misses"),
+            c("nq_fleet_cache_evictions"),
+        );
+        let _ = writeln!(
+            out,
+            "serving: requests={} batches={} errors={} upgrades={} downgrades={} forced={} queue={}",
+            c("nq_serving_requests"),
+            c("nq_serving_batches"),
+            c("nq_serving_errors"),
+            c("nq_serving_upgrades"),
+            c("nq_serving_downgrades"),
+            c("nq_serving_forced_downgrades"),
+            g("nq_serving_queue_depth"),
+        );
+        if !self.trace.is_empty() {
+            let _ = writeln!(out, "trace (last {}):", self.trace.len().min(10));
+            let skip = self.trace.len().saturating_sub(10);
+            for e in self.trace.iter().skip(skip) {
+                let _ = writeln!(out, "  [{}] {} {}", e.at_ms, e.kind.label(), e.detail);
+            }
+        }
+        out
+    }
+}
+
+fn family(out: &mut String, name: &str, kind: &str) {
+    let _ = writeln!(out, "# HELP {name} nestquant telemetry {kind}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+}
+
+fn escape_label(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+// ---------------------------------------------------------------------------
+// Prometheus text-format grammar validation (shared by tests and CI)
+// ---------------------------------------------------------------------------
+
+fn is_name_char(c: u8, first: bool) -> bool {
+    c.is_ascii_alphabetic() || c == b'_' || c == b':' || (!first && c.is_ascii_digit())
+}
+
+fn is_label_char(c: u8, first: bool) -> bool {
+    c.is_ascii_alphabetic() || c == b'_' || (!first && c.is_ascii_digit())
+}
+
+fn valid_metric_name(s: &str) -> bool {
+    !s.is_empty()
+        && s.bytes()
+            .enumerate()
+            .all(|(i, c)| is_name_char(c, i == 0))
+}
+
+/// Validate a Prometheus text-exposition document: metric-name charset,
+/// HELP/TYPE comment structure, TYPE kinds, samples only after their
+/// HELP+TYPE headers, parseable values, and no duplicate series.
+pub fn validate_prometheus(text: &str) -> Result<()> {
+    use std::collections::{HashMap, HashSet};
+    let mut types: HashMap<&str, &str> = HashMap::new();
+    let mut helps: HashSet<&str> = HashSet::new();
+    let mut series: HashSet<String> = HashSet::new();
+    for (idx, line) in text.lines().enumerate() {
+        let ln = idx + 1;
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# ") {
+            if let Some(r) = rest.strip_prefix("HELP ") {
+                let (name, help) = r
+                    .split_once(' ')
+                    .ok_or_else(|| anyhow!("line {ln}: HELP without text"))?;
+                ensure!(valid_metric_name(name), "line {ln}: bad metric name {name:?}");
+                ensure!(!help.trim().is_empty(), "line {ln}: empty HELP text");
+                ensure!(helps.insert(name), "line {ln}: duplicate HELP for {name}");
+            } else if let Some(r) = rest.strip_prefix("TYPE ") {
+                let (name, kind) = r
+                    .split_once(' ')
+                    .ok_or_else(|| anyhow!("line {ln}: TYPE without kind"))?;
+                ensure!(valid_metric_name(name), "line {ln}: bad metric name {name:?}");
+                ensure!(
+                    matches!(kind, "counter" | "gauge" | "histogram" | "summary" | "untyped"),
+                    "line {ln}: bad TYPE kind {kind:?}"
+                );
+                ensure!(
+                    types.insert(name, kind).is_none(),
+                    "line {ln}: duplicate TYPE for {name}"
+                );
+            } else {
+                bail!("line {ln}: unknown comment (only HELP/TYPE emitted): {line:?}");
+            }
+            continue;
+        }
+        // sample line: name[{label="value",...}] value
+        let b = line.as_bytes();
+        let mut i = 0;
+        while i < b.len() && is_name_char(b[i], i == 0) {
+            i += 1;
+        }
+        ensure!(i > 0, "line {ln}: missing metric name: {line:?}");
+        let name = &line[..i];
+        let mut labelset = String::new();
+        if i < b.len() && b[i] == b'{' {
+            i += 1;
+            loop {
+                let start = i;
+                while i < b.len() && is_label_char(b[i], i == start) {
+                    i += 1;
+                }
+                ensure!(i > start, "line {ln}: bad label name");
+                let lname = &line[start..i];
+                ensure!(
+                    i + 1 < b.len() && b[i] == b'=' && b[i + 1] == b'"',
+                    "line {ln}: label {lname:?} missing =\"value\""
+                );
+                i += 2;
+                let vstart = i;
+                while i < b.len() && b[i] != b'"' {
+                    i += if b[i] == b'\\' { 2 } else { 1 };
+                }
+                ensure!(i < b.len(), "line {ln}: unterminated label value");
+                let _ = write!(labelset, "{lname}=\"{}\",", &line[vstart..i]);
+                i += 1; // closing quote
+                if i < b.len() && b[i] == b',' {
+                    i += 1;
+                    continue;
+                }
+                ensure!(
+                    i < b.len() && b[i] == b'}',
+                    "line {ln}: unterminated label set"
+                );
+                i += 1;
+                break;
+            }
+        }
+        ensure!(
+            i < b.len() && b[i] == b' ',
+            "line {ln}: missing sample value: {line:?}"
+        );
+        let value = &line[i + 1..];
+        ensure!(
+            value.parse::<f64>().is_ok(),
+            "line {ln}: unparseable sample value {value:?}"
+        );
+        ensure!(
+            types.contains_key(name),
+            "line {ln}: sample for {name} before its TYPE line"
+        );
+        ensure!(
+            helps.contains(name),
+            "line {ln}: sample for {name} before its HELP line"
+        );
+        ensure!(
+            series.insert(format!("{name}{{{labelset}}}")),
+            "line {ln}: duplicate series {name}{{{labelset}}}"
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn fake_tenants() -> Vec<(String, Arc<Metrics>)> {
+        let m = Arc::new(Metrics::default());
+        m.requests.fetch_add(7, std::sync::atomic::Ordering::Relaxed);
+        m.upgrades.fetch_add(2, std::sync::atomic::Ordering::Relaxed);
+        m.page_in_bytes
+            .fetch_add(4096, std::sync::atomic::Ordering::Relaxed);
+        m.request_latency.record(Duration::from_micros(120));
+        m.request_latency.record(Duration::from_micros(950));
+        vec![("alpha".to_string(), m), ("beta".to_string(), Arc::default())]
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let snap = Snapshot::gather(&fake_tenants());
+        let back = Snapshot::from_json(&snap.to_json()).unwrap();
+        assert_eq!(back, snap);
+        // and re-serialization is byte-identical: one source of truth
+        assert_eq!(back.to_json(), snap.to_json());
+    }
+
+    #[test]
+    fn version_mismatch_is_refused() {
+        let snap = Snapshot::gather(&[]);
+        let bumped = snap.to_json().replacen("\"version\":1", "\"version\":99", 1);
+        assert!(Snapshot::from_json(&bumped).is_err());
+    }
+
+    #[test]
+    fn prometheus_output_passes_grammar() {
+        let snap = Snapshot::gather(&fake_tenants());
+        let text = snap.prometheus();
+        validate_prometheus(&text).unwrap();
+        assert!(text.contains("nq_store_a_fetches"));
+        assert!(text.contains("nq_tenant_requests{tenant=\"alpha\"} 7"));
+    }
+
+    #[test]
+    fn grammar_validator_rejects_violations() {
+        // sample before HELP/TYPE
+        assert!(validate_prometheus("nq_x 1\n").is_err());
+        // bad metric name
+        assert!(validate_prometheus("# HELP 9bad x\n# TYPE 9bad counter\n9bad 1\n").is_err());
+        // bad TYPE kind
+        assert!(validate_prometheus("# HELP nq_x x\n# TYPE nq_x banana\nnq_x 1\n").is_err());
+        // duplicate series
+        let dup = "# HELP nq_x x\n# TYPE nq_x counter\nnq_x 1\nnq_x 2\n";
+        assert!(validate_prometheus(dup).is_err());
+        // duplicate labelled series
+        let dupl = "# HELP nq_x x\n# TYPE nq_x counter\nnq_x{t=\"a\"} 1\nnq_x{t=\"a\"} 2\n";
+        assert!(validate_prometheus(dupl).is_err());
+        // distinct labels are fine
+        let ok = "# HELP nq_x x\n# TYPE nq_x counter\nnq_x{t=\"a\"} 1\nnq_x{t=\"b\"} 2\n";
+        validate_prometheus(ok).unwrap();
+        // unparseable value
+        assert!(validate_prometheus("# HELP nq_x x\n# TYPE nq_x counter\nnq_x one\n").is_err());
+    }
+
+    #[test]
+    fn top_table_lists_tenants_and_sections() {
+        let snap = Snapshot::gather(&fake_tenants());
+        let top = snap.top_table();
+        assert!(top.contains("alpha"));
+        assert!(top.contains("beta"));
+        assert!(top.contains("store:"));
+        assert!(top.contains("kernels:"));
+        assert!(top.contains("serving:"));
+    }
+}

@@ -19,9 +19,32 @@ use nestquant::coordinator::ModelManager;
 use nestquant::device::MemoryLedger;
 use nestquant::fleet::{FleetConfig, FleetServer, RemoteSource, Zoo};
 use nestquant::runtime::{Engine, ModelSpec, ParamSpec};
-use nestquant::store::NqArchive;
+use nestquant::store::{NqArchive, SectionSource};
+use nestquant::telemetry::Snapshot;
+use nestquant::transport::{recv_frame, send_frame, Frame, FrameKind, Meter};
 
 const TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Scrape the fleet server's `metrics` wire command (no `hello` needed:
+/// monitoring carries no device identity).
+fn scrape_fleet_metrics(addr: std::net::SocketAddr) -> Snapshot {
+    let mut sock = std::net::TcpStream::connect(addr).unwrap();
+    sock.set_read_timeout(Some(TIMEOUT)).unwrap();
+    let meter = Meter::default();
+    send_frame(
+        &mut sock,
+        &Frame {
+            kind: FrameKind::Control,
+            name: "metrics".into(),
+            payload: Vec::new(),
+        },
+        &meter,
+    )
+    .unwrap();
+    let (reply, _) = recv_frame(&mut sock, &meter).unwrap();
+    assert_eq!(reply.name, "metrics", "unexpected reply");
+    Snapshot::from_json(std::str::from_utf8(&reply.payload).unwrap()).unwrap()
+}
 
 fn temp_dir(tag: &str) -> std::path::PathBuf {
     let dir = std::env::temp_dir().join(format!("nq_remote_{tag}_{}", std::process::id()));
@@ -75,6 +98,11 @@ fn model_manager_serves_from_remote_archive() {
     )
     .unwrap();
 
+    // scrape the wire command before any section moves: deltas below
+    // are this test's contribution (>= because sibling tests in this
+    // binary share the process-global registry)
+    let before = scrape_fleet_metrics(handle.addr);
+
     let remote = RemoteSource::connect(handle.addr, "dev-remote", "m0", TIMEOUT).unwrap();
     let archive = Arc::new(NqArchive::with_source(Arc::new(remote)).unwrap());
     // the index crossed the wire with checksums intact
@@ -109,6 +137,85 @@ fn model_manager_serves_from_remote_archive() {
 
     mgr.unload(&mut ledger).unwrap();
     assert_eq!(ledger.used(), 0);
+
+    // telemetry satellite: the scraped deltas agree with ArchiveStats —
+    // everything the archive says it fetched crossed the wire in
+    // counted, acked chunks
+    let after = scrape_fleet_metrics(handle.addr);
+    let d = |name: &str| after.counter(name).unwrap() - before.counter(name).unwrap();
+    assert!(d("nq_fleet_sessions") >= 1, "hello registered a session");
+    assert!(d("nq_fleet_chunks_sent") >= 1);
+    assert!(
+        d("nq_fleet_chunk_bytes_sent") >= s.a_bytes_fetched + s.b_bytes_fetched,
+        "chunk bytes {} must cover the archive's fetched bytes {}",
+        d("nq_fleet_chunk_bytes_sent"),
+        s.a_bytes_fetched + s.b_bytes_fetched
+    );
+    // the server-local transfer histogram rode along as an extra
+    let xfer = after.histogram("nq_fleet_xfer_latency").unwrap();
+    assert!(xfer.count >= 1, "completed transfers recorded");
+    handle.stop();
+}
+
+/// Reconnect-and-resume satellite: a pull that dies mid-transfer
+/// resumes from the server's last acked chunk instead of byte zero.
+/// The fetch still completes, checksum-verified, and the registry's
+/// resumed/restarted byte split accounts for every byte of the
+/// interrupted first attempt.
+#[test]
+fn interrupted_fetch_resumes_from_acked_chunk() {
+    const CHUNK: u64 = 256;
+    const FAULT_AFTER: u64 = 3;
+
+    let dir = temp_dir("resume");
+    let c = container::synthetic_nest(43, 8, 4, 128, 16).unwrap();
+    let (_, a_len, _) = container::write(&dir.join("m0.nq"), &c).unwrap();
+    assert!(a_len > FAULT_AFTER * CHUNK, "section A must outlast the fault");
+
+    let mut zoo = Zoo::new();
+    zoo.add("m0", dir.join("m0.nq"));
+    let handle = FleetServer::start(
+        zoo,
+        FleetConfig {
+            chunk_bytes: CHUNK as usize,
+            ..FleetConfig::default()
+        },
+    )
+    .unwrap();
+
+    let remote = Arc::new(RemoteSource::connect(handle.addr, "dev-resume", "m0", TIMEOUT).unwrap());
+    // the NEXT pull drops its connection after 3 acked chunks — the
+    // deterministic stand-in for a flaky edge link
+    remote.inject_disconnect_after_chunks(FAULT_AFTER as usize);
+
+    let reg = nestquant::telemetry::registry();
+    let resumed0 = reg.fleet.resumed_bytes.get();
+    let restarted0 = reg.fleet.restarted_bytes.get();
+
+    let src: Arc<dyn SectionSource> = Arc::clone(&remote);
+    let archive = NqArchive::with_source(src).unwrap();
+    // the section-A fetch hits the fault, reconnects, resumes, completes
+    archive.part_bit().unwrap();
+
+    let s = archive.stats();
+    assert_eq!(s.a_fetches, 1, "one logical fetch despite the retry");
+    assert_eq!(s.a_bytes_fetched, a_len, "reassembled section is complete");
+
+    // every byte of the interrupted attempt is accounted: kept (resumed
+    // from the server's ack) + rewound (re-pulled). No sibling test
+    // injects faults, so these deltas are exactly this test's.
+    let resumed = reg.fleet.resumed_bytes.get() - resumed0;
+    let restarted = reg.fleet.restarted_bytes.get() - restarted0;
+    assert_eq!(
+        resumed + restarted,
+        FAULT_AFTER * CHUNK,
+        "interrupted attempt had acked exactly {FAULT_AFTER} chunks"
+    );
+    assert!(resumed > 0, "resume must keep acked bytes, not restart from zero");
+
+    // and the fleet server's scrape shows the same counters on the wire
+    let snap = scrape_fleet_metrics(handle.addr);
+    assert!(snap.counter("nq_fleet_resumed_bytes").unwrap() >= resumed);
     handle.stop();
 }
 
@@ -128,7 +235,6 @@ fn tampered_remote_artifact_is_refused() {
     let mut bytes = std::fs::read(&path).unwrap();
     let idx = {
         let src = nestquant::store::FileSource::new(&path);
-        use nestquant::store::SectionSource;
         src.index().unwrap()
     };
     let b = idx.section_b();

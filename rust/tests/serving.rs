@@ -29,6 +29,7 @@ use nestquant::coordinator::server::{serve_tenants, Client, ServerConfig, Tenant
 use nestquant::coordinator::tenant::{nest_tenants_from_dir, NestTenant};
 use nestquant::coordinator::{Decision, Variant};
 use nestquant::store::{ModelStore, NqArchive, StoreBudget};
+use nestquant::telemetry::{validate_prometheus, Snapshot};
 use nestquant::util::prng::Rng;
 
 const BATCH: usize = 4;
@@ -357,6 +358,74 @@ fn shared_budget_evictions_stay_under_cap_mid_traffic() {
             .any(|e| matches!(e, nestquant::store::BudgetEvent::Evicted { .. })),
         "eviction trace must record victims"
     );
+    z.handle.stop();
+}
+
+/// Telemetry satellite: scrape the `metrics` wire command mid-run and
+/// hold it to exact account. Per-tenant scraped values equal the
+/// server-side `Metrics` atomics; the switch byte accounting equals the
+/// archives' own `ArchiveStats`; and the scraped snapshot renders valid
+/// Prometheus exposition (the `--prom` CLI path uses this rendering of
+/// this JSON, so the surfaces cannot disagree).
+#[test]
+fn metrics_wire_scrape_agrees_with_archive_stats() {
+    let z = start_zoo("metrics", u64::MAX);
+    let mut client = Client::connect(z.handle.addr).unwrap();
+
+    // scripted traffic: 4 sequential part-bit requests per model, then
+    // one upgrade + one downgrade each
+    for (m, id) in z.ids.iter().enumerate() {
+        for k in 0..4 {
+            let logits = client.infer_model(id, &z.imgs[m][k]).unwrap();
+            assert_eq!(logits, z.part[m][k]);
+        }
+        z.handle.advise(id, Decision::SwitchTo(Variant::FullBit)).unwrap();
+        z.handle.advise(id, Decision::SwitchTo(Variant::PartBit)).unwrap();
+    }
+
+    let json = client.metrics().unwrap();
+    let snap = Snapshot::from_json(&json).unwrap();
+
+    for (m, id) in z.ids.iter().enumerate() {
+        let t = snap.tenant(id).unwrap_or_else(|| panic!("{id} missing from snapshot"));
+        // the scrape quiesced (no in-flight traffic): scraped values ARE
+        // the server-side atomics, exactly
+        let metrics = z.handle.metrics(id).unwrap();
+        assert_eq!(t.requests, metrics.requests.load(Ordering::Relaxed), "{id}");
+        assert_eq!(t.upgrades, metrics.upgrades.load(Ordering::Relaxed), "{id}");
+        assert_eq!(t.downgrades, metrics.downgrades.load(Ordering::Relaxed), "{id}");
+        assert_eq!(
+            t.page_in_bytes,
+            metrics.page_in_bytes.load(Ordering::Relaxed),
+            "{id}"
+        );
+        assert_eq!(t.requests, 4, "{id}: exactly this test's traffic");
+        assert_eq!((t.upgrades, t.downgrades), (1, 1), "{id}");
+
+        // byte accounting vs ArchiveStats: the tenant launched part-bit,
+        // so its one upgrade fetched section B exactly once — the
+        // snapshot's switch bytes must equal the archive's fetched bytes
+        let s = z.archives[m].stats();
+        let b_len = z.archives[m].section_b_bytes();
+        assert_eq!(s.b_fetches, 1, "{id}");
+        assert_eq!(t.page_in_bytes, s.b_bytes_fetched, "{id}: page-in == B fetched");
+        assert_eq!(t.page_in_bytes, b_len, "{id}");
+        assert_eq!(t.page_out_bytes, b_len, "{id}: downgrade paged B back out");
+        assert!(t.request_max_us > 0, "{id}: latency histogram recorded");
+    }
+
+    // global counters include this test's contribution (other tests in
+    // this binary may add to them concurrently, so >= not ==)
+    let n = z.ids.len() as u64;
+    let c = |name: &str| snap.counter(name).unwrap_or_else(|| panic!("missing {name}"));
+    assert!(c("nq_serving_requests") >= 4 * n, "{}", c("nq_serving_requests"));
+    assert!(c("nq_serving_upgrades") >= n);
+    assert!(c("nq_serving_downgrades") >= n);
+    assert!(c("nq_store_b_fetches") >= n);
+    assert_eq!(snap.histogram("nq_serving_request_latency").map(|h| h.count >= 4 * n), Some(true));
+
+    // the CLI's --prom rendering of exactly this JSON passes the grammar
+    validate_prometheus(&snap.prometheus()).unwrap();
     z.handle.stop();
 }
 

@@ -1,0 +1,302 @@
+//! Telemetry integration tests: the process-global registry observed
+//! end-to-end, with exact arithmetic instead of "probably moved".
+//!
+//! What is proven here:
+//!
+//! 1. **Scripted-cycle exactness**: a launch → upgrade → evict →
+//!    downgrade → unload cycle over synthetic archives and a
+//!    `StoreBudget` moves *exactly* the predicted counter deltas, and
+//!    the resident-bytes gauges balance back to their prior level.
+//! 2. **Race-free recording**: N threads hammering one counter, gauge,
+//!    histogram, and kernel cell land exact totals — on private
+//!    instances and on the global registry alike.
+//! 3. **Three-surface identity**: the JSON wire snapshot parses back
+//!    byte-identically, and the Prometheus / `top` renderings of the
+//!    parsed copy equal those of the original — one gathered truth.
+//! 4. **Prometheus grammar**: a real gathered snapshot (tenants, trace
+//!    and all) passes the text-exposition validator.
+//! 5. **Zero-cost-when-disabled tracing**: `nq_trace!` never evaluates
+//!    its format arguments while the ring is disabled.
+//!
+//! The registry is process-global, so tests that assert exact *deltas*
+//! on it serialize behind one mutex; everything else runs in parallel
+//! and only ever asserts on values it gathered itself.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use nestquant::container;
+use nestquant::nq_trace;
+use nestquant::store::{NqArchive, StoreBudget};
+use nestquant::telemetry::{
+    registry, validate_prometheus, Counter, Gauge, LatencyHisto, Metrics, OP_UNPACK_INTS,
+    Snapshot, TraceKind,
+};
+
+/// Serializes the registry-delta tests (the registry is shared by every
+/// test thread in this binary).
+static SEQ: Mutex<()> = Mutex::new(());
+
+fn seq() -> MutexGuard<'static, ()> {
+    SEQ.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn archive(seed: u64) -> Arc<NqArchive> {
+    let c = container::synthetic_nest(seed, 8, 4, 64, 8).unwrap();
+    Arc::new(NqArchive::from_container(&c).unwrap())
+}
+
+/// The ISSUE's scripted cycle: launch (section-A page-in), budgeted
+/// upgrades, an LRU eviction, voluntary downgrades, and a full unload —
+/// every registry delta predicted exactly, gauges balanced.
+#[test]
+fn scripted_cycle_moves_exact_counter_deltas() {
+    let _g = seq();
+    let before = Snapshot::gather(&[]);
+
+    let arcs: Vec<Arc<NqArchive>> = (0..3).map(|i| archive(0x7E1E + i)).collect();
+    let a_len = arcs[0].section_a_bytes();
+    let b_len = arcs[0].section_b_bytes();
+    assert!(arcs.iter().all(|a| a.section_b_bytes() == b_len));
+
+    // launch: archive 0 pages section A in once; the second view is a
+    // cache hit and must not move any counter
+    arcs[0].part_bit().unwrap();
+    arcs[0].part_bit().unwrap();
+
+    // upgrades under a two-section budget, then a third attach that
+    // must evict the LRU victim
+    let budget = StoreBudget::new(2 * b_len);
+    budget.attach_b("m0", &arcs[0]).unwrap();
+    budget.attach_b("m1", &arcs[1]).unwrap();
+    budget.touch("m0"); // m1 becomes LRU
+    let evicted = budget.attach_b("m2", &arcs[2]).unwrap();
+    assert_eq!(evicted, vec!["m1".to_string()]);
+
+    // voluntary downgrades + full unload
+    assert!(budget.release_b("m0"));
+    assert!(budget.release_b("m2"));
+    assert!(arcs[0].release_a());
+
+    let after = Snapshot::gather(&[]);
+    let d = |name: &str| {
+        after.counter(name).unwrap_or_else(|| panic!("missing counter {name}"))
+            - before.counter(name).unwrap_or_else(|| panic!("missing counter {name}"))
+    };
+    assert_eq!(d("nq_store_archive_opens"), 3);
+    assert_eq!(d("nq_store_a_fetches"), 1, "section A crossed exactly once");
+    assert_eq!(d("nq_store_a_bytes_fetched"), a_len);
+    assert_eq!(d("nq_store_b_fetches"), 3, "one B fetch per budgeted attach");
+    assert_eq!(d("nq_store_b_bytes_fetched"), 3 * b_len);
+    assert_eq!(d("nq_store_evictions"), 1);
+    assert_eq!(d("nq_store_evicted_bytes"), b_len);
+    // releases: the eviction of m1 plus the two voluntary downgrades
+    assert_eq!(d("nq_store_b_releases"), 3);
+    assert_eq!(d("nq_store_crc_failures"), 0);
+    // the gauges went up and came all the way back down
+    assert_eq!(
+        after.gauge("nq_store_resident_a_bytes"),
+        before.gauge("nq_store_resident_a_bytes"),
+        "resident-A gauge must balance after unload"
+    );
+    assert_eq!(
+        after.gauge("nq_store_resident_b_bytes"),
+        before.gauge("nq_store_resident_b_bytes"),
+        "resident-B gauge must balance after releases"
+    );
+}
+
+/// N threads hammer private primitives: totals are exact, not
+/// approximate — relaxed atomics lose no increments.
+#[test]
+fn concurrent_recording_totals_are_exact() {
+    const THREADS: u64 = 8;
+    const PER: u64 = 10_000;
+    let c = Counter::new();
+    let g = Gauge::new();
+    let h = LatencyHisto::new();
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            let (c, g, h) = (&c, &g, &h);
+            s.spawn(move || {
+                for i in 0..PER {
+                    c.inc();
+                    g.add(2);
+                    g.sub(1);
+                    h.record(Duration::from_micros(1 + (t * PER + i) % 512));
+                }
+            });
+        }
+    });
+    assert_eq!(c.get(), THREADS * PER);
+    assert_eq!(g.get(), THREADS * PER);
+    assert_eq!(h.count(), THREADS * PER);
+    assert!(h.mean_us() > 0.0);
+    assert!(h.max_us() <= 512);
+}
+
+/// The same exactness on the global registry, including the two-atomic
+/// kernel hot-path record.
+#[test]
+fn global_registry_concurrent_deltas_are_exact() {
+    let _g = seq();
+    const THREADS: u64 = 8;
+    const PER: u64 = 5_000;
+    let r = registry();
+    let before_calls = r.kernels.calls(OP_UNPACK_INTS, 0);
+    let before_bytes = r.kernels.bytes(OP_UNPACK_INTS, 0);
+    let before_chunks = Snapshot::gather(&[]).counter("nq_fleet_chunks_sent").unwrap();
+    std::thread::scope(|s| {
+        for _ in 0..THREADS {
+            s.spawn(|| {
+                for _ in 0..PER {
+                    r.kernels.record(OP_UNPACK_INTS, 0, 64);
+                    r.fleet.chunks_sent.inc();
+                }
+            });
+        }
+    });
+    assert_eq!(r.kernels.calls(OP_UNPACK_INTS, 0), before_calls + THREADS * PER);
+    assert_eq!(
+        r.kernels.bytes(OP_UNPACK_INTS, 0),
+        before_bytes + THREADS * PER * 64
+    );
+    let after = Snapshot::gather(&[]);
+    assert_eq!(
+        after.counter("nq_fleet_chunks_sent").unwrap(),
+        before_chunks + THREADS * PER,
+        "snapshot sees the exact global delta"
+    );
+    // and the per-op/tier cell surfaced under its canonical name
+    assert!(
+        after.counter("nq_kernel_unpack_ints_scalar_calls").unwrap()
+            >= before_calls + THREADS * PER
+    );
+}
+
+/// One gathered truth, three renderings: JSON roundtrip is
+/// byte-identical and the prometheus/top renderings of the parsed copy
+/// equal the original's.
+#[test]
+fn three_surfaces_report_identical_totals() {
+    let m = Arc::new(Metrics::default());
+    m.requests.fetch_add(11, Ordering::Relaxed);
+    m.batches.fetch_add(3, Ordering::Relaxed);
+    m.batch_occupancy_sum.fetch_add(11, Ordering::Relaxed);
+    m.upgrades.fetch_add(2, Ordering::Relaxed);
+    m.downgrades.fetch_add(2, Ordering::Relaxed);
+    m.page_in_bytes.fetch_add(8192, Ordering::Relaxed);
+    m.page_out_bytes.fetch_add(8192, Ordering::Relaxed);
+    for us in [90u64, 180, 360, 720, 1440] {
+        m.request_latency.record(Duration::from_micros(us));
+    }
+    m.switch_latency.record(Duration::from_micros(250));
+    let tenants = vec![("alpha".to_string(), Arc::clone(&m))];
+
+    let snap = Snapshot::gather(&tenants);
+    let json = snap.to_json();
+    let parsed = Snapshot::from_json(&json).unwrap();
+    assert_eq!(parsed, snap, "wire roundtrip is lossless");
+    assert_eq!(parsed.to_json(), json, "re-serialization is byte-identical");
+    assert_eq!(parsed.prometheus(), snap.prometheus());
+    assert_eq!(parsed.top_table(), snap.top_table());
+
+    // the scraped tenant numbers ARE the source atomics
+    let t = parsed.tenant("alpha").unwrap();
+    assert_eq!(t.requests, 11);
+    assert_eq!(t.upgrades, 2);
+    assert_eq!(t.page_in_bytes, 8192);
+    assert_eq!(t.request_max_us, 1440);
+
+    // and all three surfaces carry the same totals
+    let prom = parsed.prometheus();
+    assert!(prom.contains("nq_tenant_requests{tenant=\"alpha\"} 11"));
+    assert!(prom.contains("nq_tenant_page_in_bytes{tenant=\"alpha\"} 8192"));
+    let top = parsed.top_table();
+    assert!(top.contains("alpha"), "{top}");
+}
+
+/// A real gathered snapshot — global counters, gauges, histograms,
+/// labelled tenants — renders valid Prometheus text exposition.
+#[test]
+fn gathered_prometheus_passes_grammar() {
+    let m = Arc::new(Metrics::default());
+    m.requests.fetch_add(5, Ordering::Relaxed);
+    m.request_latency.record(Duration::from_micros(400));
+    let tenants = vec![
+        ("quoted\"tenant".to_string(), Arc::clone(&m)),
+        ("plain".to_string(), Arc::default()),
+    ];
+    let snap = Snapshot::gather(&tenants);
+    let prom = snap.prometheus();
+    validate_prometheus(&prom).unwrap();
+    // label escaping survived the grammar check
+    assert!(prom.contains("tenant=\"quoted\\\"tenant\""));
+}
+
+/// The disabled-path guarantee: `nq_trace!` must not evaluate its
+/// format arguments (let alone allocate) while the ring is off.
+#[test]
+fn disabled_trace_never_evaluates_format_args() {
+    let _g = seq();
+    registry().trace.disable();
+    registry().trace.clear();
+    let evaluated = AtomicU64::new(0);
+    nq_trace!(TraceKind::Switch, "{}", {
+        evaluated.fetch_add(1, Ordering::Relaxed);
+        "side effect"
+    });
+    assert_eq!(evaluated.load(Ordering::Relaxed), 0, "args built while disabled");
+    assert_eq!(registry().trace.len(), 0);
+
+    registry().trace.enable();
+    nq_trace!(TraceKind::Switch, "{}", {
+        evaluated.fetch_add(1, Ordering::Relaxed);
+        "recorded"
+    });
+    registry().trace.disable();
+    assert_eq!(evaluated.load(Ordering::Relaxed), 1);
+    let tail = registry().trace.tail(1);
+    assert_eq!(tail.len(), 1);
+    assert_eq!(tail[0].kind, TraceKind::Switch);
+    assert_eq!(tail[0].detail, "recorded");
+    registry().trace.clear();
+}
+
+/// With the ring enabled, the scripted store events land as typed trace
+/// entries and ride along in the snapshot.
+#[test]
+fn enabled_trace_captures_store_events() {
+    let _g = seq();
+    registry().trace.clear();
+    registry().trace.enable();
+
+    let a = archive(0xACE0);
+    let b = archive(0xACE1);
+    a.part_bit().unwrap(); // PageIn (section A)
+    let budget = StoreBudget::new(a.section_b_bytes());
+    budget.attach_b("ta", &a).unwrap(); // PageIn (section B)
+    budget.attach_b("tb", &b).unwrap(); // Eviction of ta + PageIn
+    budget.release_b("tb"); // PageOut
+
+    registry().trace.disable();
+    let kinds: Vec<TraceKind> = registry().trace.tail(64).iter().map(|e| e.kind).collect();
+    assert!(kinds.contains(&TraceKind::PageIn), "{kinds:?}");
+    assert!(kinds.contains(&TraceKind::PageOut), "{kinds:?}");
+    assert!(kinds.contains(&TraceKind::Eviction), "{kinds:?}");
+    let evict = registry()
+        .trace
+        .tail(64)
+        .into_iter()
+        .find(|e| e.kind == TraceKind::Eviction)
+        .unwrap();
+    assert!(evict.detail.contains("ta"), "victim named: {}", evict.detail);
+
+    // the snapshot carries the tail and survives its wire roundtrip
+    let snap = Snapshot::gather(&[]);
+    assert!(snap.trace.iter().any(|e| e.kind == TraceKind::Eviction));
+    let back = Snapshot::from_json(&snap.to_json()).unwrap();
+    assert_eq!(back.trace, snap.trace);
+    registry().trace.clear();
+}
