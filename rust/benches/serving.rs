@@ -112,6 +112,50 @@ fn main() {
         handle.advise(&ids[0], Decision::SwitchTo(Variant::PartBit)).unwrap();
     });
 
+    // 5. open-loop load: requests fire on a fixed arrival schedule
+    // regardless of completions, so queueing delay shows up in the
+    // latency tail instead of silently throttling the offered rate.
+    // Latency is measured from the *scheduled* send time.
+    let open_threads = 8usize;
+    let open_rps = 2_000.0f64;
+    let open_window = Duration::from_secs(2);
+    let per_thread_n = (open_rps * open_window.as_secs_f64() / open_threads as f64) as usize;
+    let interval = Duration::from_secs_f64(open_threads as f64 / open_rps);
+    let mut lat_joins = Vec::new();
+    for c in 0..open_threads {
+        let id = ids[c % ids.len()].clone();
+        let img = img.clone();
+        let addr = handle.addr;
+        lat_joins.push(std::thread::spawn(move || -> Vec<Duration> {
+            let mut client = Client::connect(addr).unwrap();
+            let start = Instant::now();
+            let mut lats = Vec::with_capacity(per_thread_n);
+            for k in 0..per_thread_n {
+                let scheduled = start + interval * k as u32;
+                if let Some(wait) = scheduled.checked_duration_since(Instant::now()) {
+                    std::thread::sleep(wait);
+                }
+                client.infer_model(&id, &img).unwrap();
+                lats.push(scheduled.elapsed());
+            }
+            lats
+        }));
+    }
+    let mut open_lats: Vec<Duration> = lat_joins
+        .into_iter()
+        .flat_map(|j| j.join().unwrap())
+        .collect();
+    open_lats.sort_unstable();
+    let pct = |p: f64| -> f64 {
+        let i = ((open_lats.len() - 1) as f64 * p).round() as usize;
+        open_lats[i].as_secs_f64() * 1e6
+    };
+    let (open_p50_us, open_p99_us) = (pct(0.50), pct(0.99));
+    println!(
+        "bench: open-loop {open_rps:.0} req/s offered              p50 {open_p50_us:>8.1} us  p99 {open_p99_us:>8.1} us  ({} samples)",
+        open_lats.len()
+    );
+
     let doc = json::obj(vec![
         ("tenants", json::num(ids.len() as f64)),
         ("image_len", json::num(image_len as f64)),
@@ -125,6 +169,9 @@ fn main() {
         ),
         ("mixed_throughput_rps", json::num(rps)),
         ("switches_mid_traffic", json::num(switches as f64)),
+        ("open_loop_offered_rps", json::num(open_rps)),
+        ("open_loop_p50_us", json::num(open_p50_us)),
+        ("open_loop_p99_us", json::num(open_p99_us)),
         (
             "advise_cycle_us",
             json::num(s_advise.mean.as_secs_f64() * 1e6),

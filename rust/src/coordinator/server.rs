@@ -1,48 +1,53 @@
-//! Multi-tenant inference server: one TCP front-end routing
-//! model-id-tagged frames to per-tenant batcher queues + executors.
+//! Multi-tenant inference server: one reactor event loop routing
+//! model-id-tagged frames to a shared weighted-fair worker pool.
 //!
 //! ```text
-//!                        ┌──────────────────────────────────────────┐
-//!   client ──"infer"─────│ router: model id → tenant                │
-//!   client ──(id,image)──│   tenant A: queue ─▶ batcher ─▶ executor │
-//!      ⋮                 │   tenant B: queue ─▶ batcher ─▶ executor │
-//!   client ──"models"────│   shared StoreBudget (Section-B bytes)   │
-//!                        └──────────────────────────────────────────┘
+//!                 ┌────────────────────────────────────────────────┐
+//!   client ──────▶│ reactor loop: conns are slab state, not threads│
+//!      ⋮          │   "infer"  ─▶ FairScheduler (DRR per tenant) ──┼─▶ worker pool
+//!   client ──────▶│   "models"/"metrics" ─▶ control-class queue  ──┘   (shared,
+//!                 │   replies injected back through the loop waker │    ≤ cores)
+//!                 └────────────────────────────────────────────────┘
 //! ```
 //!
-//! Protocol (all `Control` frames): clients send `infer` whose payload
-//! is `u16 id_len | model id | flattened NHWC f32 image`
+//! Protocol (all `Control` frames, unchanged from the thread-per-conn
+//! server): clients send `infer` whose payload is
+//! `u16 id_len | model id | flattened NHWC f32 image`
 //! ([`crate::transport::encode_tagged`]); the server replies `logits`
 //! (same tagged form) or `error` (utf8). `models` lists the hosted
-//! model ids (newline-joined). `stop` shuts the server down; the
-//! handler both sets the stop flag *and* pokes the listener, so a bare
-//! `stop` frame suffices without racing `ServerHandle::stop`.
+//! model ids (newline-joined). `stop` shuts the server down.
 //!
-//! Each hosted model owns its queue and executor thread, so tenants
-//! batch independently (a flood on one model never delays another's
-//! batch close — see `batcher::drain_queue`). Switch advice
+//! Each connection is an explicit state machine on the loop: a request
+//! pauses the connection (dropping read interest) until its reply is
+//! injected, so per-connection request/response ordering is preserved
+//! without a thread. Tenants share the worker pool through the
+//! scheduler's deficit-round-robin infer class with the same batch
+//! deadline semantics the old per-tenant executor threads had; control
+//! traffic (`models`/`metrics`) preempts inference. Switch advice
 //! ([`ServerHandle::advise`]) serializes with execution through the
 //! tenant's executor mutex: a switch lands between batches, never
 //! tearing weights out from under one.
 
-use std::collections::BTreeMap;
-use std::io::BufReader;
+use std::collections::{BTreeMap, HashSet};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::nq_trace;
+use crate::reactor::{
+    self, BatchPolicy, ConnId, Ctl, Entry, FairScheduler, ReactorHandle, ReactorOpts, Remote,
+    Service, Work,
+};
 use crate::telemetry::{registry, Snapshot, TraceKind};
 use crate::transport::{
     decode_model_list, decode_tagged, encode_model_list, encode_tagged, recv_frame, send_frame,
     Frame, FrameKind, Meter,
 };
 
-use super::batcher::{self, BatcherConfig, Request};
 use super::{Coordinator, Decision, Metrics, State, SwitchCost, Variant};
 
 /// Server configuration.
@@ -58,6 +63,10 @@ impl Default for ServerConfig {
         }
     }
 }
+
+/// Abandon a half-received request frame after this long without
+/// progress (generous: coordinator clients send frames whole).
+const PARTIAL_FRAME_TIMEOUT: Duration = Duration::from_secs(30);
 
 // ---------------------------------------------------------------------------
 // tenants
@@ -161,15 +170,17 @@ impl TenantExecutor for SharedCoordinator {
     }
 }
 
-/// Per-tenant runtime shared between the router, the handlers, and the
-/// advice path.
+/// Per-tenant runtime shared between the router service, the worker
+/// pool, and the advice path.
 struct Tenant {
+    /// Position in sorted-id order; doubles as the scheduler's tenant
+    /// index for DRR fairness.
+    index: usize,
     exec: Arc<Mutex<Box<dyn TenantExecutor>>>,
     metrics: Arc<Metrics>,
     image_len: usize,
-    /// Request queue sender; taken (closed) on shutdown so the
-    /// executor's `drain_queue` loop drains and exits.
-    tx: Mutex<Option<mpsc::Sender<Request>>>,
+    batch_size: usize,
+    classes: usize,
 }
 
 // ---------------------------------------------------------------------------
@@ -178,14 +189,15 @@ struct Tenant {
 
 /// Handle to a running server. Dropping it (or calling
 /// [`ServerHandle::stop`]) shuts the server down deterministically:
-/// every acceptor, executor, and connection-handler thread is joined.
+/// the scheduler drains every queued job, the worker pool joins, and
+/// the reactor flushes in-flight replies before its loop thread exits.
 pub struct ServerHandle {
     pub addr: SocketAddr,
     stop: Arc<AtomicBool>,
     tenants: Arc<BTreeMap<String, Tenant>>,
-    acceptor: Option<JoinHandle<()>>,
-    executors: Vec<JoinHandle<()>>,
-    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    sched: Arc<FairScheduler<Job>>,
+    reactor: Option<ReactorHandle>,
+    workers: Vec<JoinHandle<()>>,
 }
 
 impl ServerHandle {
@@ -260,29 +272,21 @@ impl ServerHandle {
     }
 
     fn shutdown(&mut self) {
-        // 1. flag first, THEN poke: the accept loop re-checks the flag
-        //    after every accept (including the poke's), so no connection
-        //    accepted after this line is dispatched to a handler
+        // 1. flag first so stopped() flips immediately
         self.stop.store(true, Ordering::SeqCst);
-        // 2. close every tenant queue so executors drain and exit once
-        //    the last in-flight handler drops its sender clone
-        for t in self.tenants.values() {
-            t.tx.lock().unwrap().take();
+        // 2. close the scheduler: workers drain every queued job
+        //    (injecting its reply) and exit; join them so every claimed
+        //    request has answered before the loop drains
+        self.sched.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
         }
-        // 3. wake the acceptor even when no client ever sent `stop`
-        let _ = TcpStream::connect(self.addr);
-        if let Some(a) = self.acceptor.take() {
-            let _ = a.join();
-        }
-        // 4. handlers observe the flag within their poll interval; join
-        //    them BEFORE executors (a handler may be awaiting a reply
-        //    that an executor still has to produce)
-        let conns: Vec<_> = self.conns.lock().unwrap().drain(..).collect();
-        for c in conns {
-            let _ = c.join();
-        }
-        for e in self.executors.drain(..) {
-            let _ = e.join();
+        // 3. drain the reactor: the listener closes, idle conns close in
+        //    on_stop, conns awaiting a reply flush it first, and the
+        //    loop exits once its slab is empty
+        if let Some(mut r) = self.reactor.take() {
+            r.request_stop();
+            r.join();
         }
     }
 }
@@ -309,19 +313,15 @@ pub fn serve(coordinator: Arc<Mutex<Coordinator>>, config: ServerConfig) -> Resu
 }
 
 /// Start a multi-tenant server hosting `tenants` on a fresh localhost
-/// port. Each tenant gets its own batcher queue and executor thread;
-/// `infer` frames route by model id.
+/// port. All tenants share the reactor loop and worker pool; `infer`
+/// frames route by model id and batch per tenant.
 pub fn serve_tenants(
     tenants: Vec<(String, Box<dyn TenantExecutor>)>,
     config: ServerConfig,
 ) -> Result<ServerHandle> {
     ensure!(!tenants.is_empty(), "serve_tenants needs at least one tenant");
-    let listener = TcpListener::bind("127.0.0.1:0").context("bind")?;
-    let addr = listener.local_addr()?;
-    let stop = Arc::new(AtomicBool::new(false));
 
     let mut map: BTreeMap<String, Tenant> = BTreeMap::new();
-    let mut executors = Vec::new();
     for (id, exec) in tenants {
         ensure!(!map.contains_key(&id), "duplicate tenant id {id:?}");
         ensure!(
@@ -335,100 +335,206 @@ pub fn serve_tenants(
             "{id}: degenerate tenant shape ({batch_size}, {image_len}, {classes})"
         );
         let metrics = exec.metrics().unwrap_or_default();
-        let exec = Arc::new(Mutex::new(exec));
-        let (tx, rx) = mpsc::channel::<Request>();
-        let bcfg = BatcherConfig {
-            batch_size,
-            image_len,
-            max_wait: config.max_wait,
-        };
-        let exec2 = Arc::clone(&exec);
-        let metrics2 = Arc::clone(&metrics);
-        let thread = std::thread::Builder::new()
-            .name(format!("nq-exec-{id}"))
-            .spawn(move || {
-                batcher::drain_queue(&rx, &bcfg, |batch| {
-                    let mut e = exec2.lock().unwrap();
-                    let occupancy = batch.requests.len() as u64;
-                    let t0 = Instant::now();
-                    match e.run_batch(&batch.input) {
-                        Ok(logits) => {
-                            drop(e);
-                            metrics2.requests.fetch_add(occupancy, Ordering::Relaxed);
-                            metrics2.batches.fetch_add(1, Ordering::Relaxed);
-                            metrics2
-                                .batch_occupancy_sum
-                                .fetch_add(occupancy, Ordering::Relaxed);
-                            let s = &registry().serving;
-                            s.requests.add(occupancy);
-                            s.batches.inc();
-                            s.batch_latency.record(t0.elapsed());
-                            for r in &batch.requests {
-                                let waited = r.enqueued.elapsed();
-                                metrics2.request_latency.record(waited);
-                                s.request_latency.record(waited);
-                            }
-                            batcher::respond(batch, &logits, classes);
-                        }
-                        Err(e2) => {
-                            drop(e);
-                            metrics2.errors.fetch_add(occupancy, Ordering::Relaxed);
-                            registry().serving.errors.add(occupancy);
-                            batcher::respond_error(batch, &format!("{e2:#}"));
-                        }
-                    }
-                });
-            })?;
-        executors.push(thread);
         map.insert(
             id,
             Tenant {
-                exec,
+                index: 0, // fixed up below once the id order is final
+                exec: Arc::new(Mutex::new(exec)),
                 metrics,
                 image_len,
-                tx: Mutex::new(Some(tx)),
+                batch_size,
+                classes,
             },
         );
     }
+    let mut order = Vec::with_capacity(map.len());
+    let mut policies = Vec::with_capacity(map.len());
+    let mut weights = Vec::with_capacity(map.len());
+    for (idx, (id, t)) in map.iter_mut().enumerate() {
+        t.index = idx;
+        order.push(id.clone());
+        policies.push(BatchPolicy {
+            batch_size: t.batch_size,
+            max_wait: config.max_wait,
+        });
+        weights.push(1u32);
+    }
     let tenants = Arc::new(map);
+    let sched: Arc<FairScheduler<Job>> = Arc::new(FairScheduler::new(&weights));
+    let inject: Inject = Arc::new(Mutex::new(Vec::new()));
+    let stop = Arc::new(AtomicBool::new(false));
 
-    let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
-    let stop2 = Arc::clone(&stop);
-    let tenants2 = Arc::clone(&tenants);
-    let aconns = Arc::clone(&conns);
-    let acceptor = std::thread::Builder::new()
-        .name("nq-acceptor".into())
-        .spawn(move || {
-            for conn in listener.incoming() {
-                if stop2.load(Ordering::SeqCst) {
-                    break;
-                }
-                let Ok(sock) = conn else { continue };
-                // deterministic shutdown: re-check AFTER the accept, so
-                // a poke connection (or any racer) accepted at stop time
-                // is dropped instead of dispatched to a handler
-                if stop2.load(Ordering::SeqCst) {
-                    break;
-                }
-                let hstop = Arc::clone(&stop2);
-                let htenants = Arc::clone(&tenants2);
-                let handle = std::thread::spawn(move || {
-                    let _ = handle_connection(sock, htenants, hstop, addr);
-                });
-                let mut conns = aconns.lock().unwrap();
-                conns.retain(|h| !h.is_finished());
-                conns.push(handle);
-            }
-        })?;
+    let listener = TcpListener::bind("127.0.0.1:0").context("bind")?;
+    let service = RouterService {
+        tenants: Arc::clone(&tenants),
+        sched: Arc::clone(&sched),
+        inject: Arc::clone(&inject),
+        stop_flag: Arc::clone(&stop),
+        stopping: false,
+        open: HashSet::new(),
+        in_flight: HashSet::new(),
+    };
+    let reactor = reactor::spawn(
+        listener,
+        service,
+        ReactorOpts {
+            name: "coordinator".into(),
+            meter: Arc::new(Meter::default()),
+            partial_frame_timeout: Some(PARTIAL_FRAME_TIMEOUT),
+        },
+    )
+    .context("spawn reactor")?;
+    let addr = reactor.addr;
+
+    let ctx = Arc::new(WorkerCtx {
+        sched: Arc::clone(&sched),
+        tenants: Arc::clone(&tenants),
+        order,
+        policies,
+        inject,
+        remote: reactor.remote(),
+    });
+    let n_workers = ctx
+        .order
+        .len()
+        .max(std::thread::available_parallelism().map_or(2, |n| n.get()))
+        .min(32);
+    let mut workers = Vec::with_capacity(n_workers);
+    for i in 0..n_workers {
+        let ctx = Arc::clone(&ctx);
+        workers.push(
+            std::thread::Builder::new()
+                .name(format!("nq-worker-{i}"))
+                .spawn(move || worker_loop(&ctx))?,
+        );
+    }
 
     Ok(ServerHandle {
         addr,
         stop,
         tenants,
-        acceptor: Some(acceptor),
-        executors,
-        conns,
+        sched,
+        reactor: Some(reactor),
+        workers,
     })
+}
+
+// ---------------------------------------------------------------------------
+// router service (runs on the reactor loop)
+// ---------------------------------------------------------------------------
+
+/// A job claimed from the scheduler by a worker. Infer jobs are
+/// batch-scheduled per tenant; control jobs preempt them.
+enum Job {
+    Infer {
+        conn: ConnId,
+        model: String,
+        image: Vec<f32>,
+    },
+    Models {
+        conn: ConnId,
+    },
+    Metrics {
+        conn: ConnId,
+    },
+}
+
+/// Worker → loop reply channel: finished frames parked here until the
+/// waker nudges the loop to inject them.
+type Inject = Arc<Mutex<Vec<(ConnId, Frame)>>>;
+
+struct RouterService {
+    tenants: Arc<BTreeMap<String, Tenant>>,
+    sched: Arc<FairScheduler<Job>>,
+    inject: Inject,
+    stop_flag: Arc<AtomicBool>,
+    stopping: bool,
+    open: HashSet<ConnId>,
+    in_flight: HashSet<ConnId>,
+}
+
+impl RouterService {
+    /// Enqueue an async job for `conn`, pausing it until the reply
+    /// comes back so per-connection ordering is preserved.
+    fn enqueue(&mut self, conn: ConnId, ctl: &mut Ctl, accepted: bool, id: &str) {
+        if accepted {
+            self.in_flight.insert(conn);
+            ctl.pause(conn);
+        } else {
+            ctl.send(conn, error_frame(format!("{id}: server shutting down").into_bytes()));
+        }
+    }
+}
+
+impl Service for RouterService {
+    fn on_open(&mut self, conn: ConnId, _ctl: &mut Ctl) {
+        self.open.insert(conn);
+    }
+
+    fn on_close(&mut self, conn: ConnId, _ctl: &mut Ctl) {
+        self.open.remove(&conn);
+        // a dead conn's reply is dropped by the reactor's generation
+        // guard; just forget it was waiting
+        self.in_flight.remove(&conn);
+    }
+
+    fn on_frame(&mut self, conn: ConnId, frame: Frame, ctl: &mut Ctl) {
+        match (frame.kind, frame.name.as_str()) {
+            (FrameKind::Control, "stop") => {
+                self.stop_flag.store(true, Ordering::SeqCst);
+                ctl.stop();
+            }
+            (FrameKind::Control, "models") => {
+                let ok = self.sched.push_control(Job::Models { conn });
+                self.enqueue(conn, ctl, ok, "models");
+            }
+            (FrameKind::Control, "metrics") => {
+                let ok = self.sched.push_control(Job::Metrics { conn });
+                self.enqueue(conn, ctl, ok, "metrics");
+            }
+            (FrameKind::Control, "infer") => match route_infer(&frame.payload, &self.tenants) {
+                Ok((tenant, model, image)) => {
+                    let id = model.clone();
+                    let ok = self
+                        .sched
+                        .push_infer(tenant, Job::Infer { conn, model, image });
+                    if ok {
+                        registry().serving.queue_depth.inc();
+                    }
+                    self.enqueue(conn, ctl, ok, &id);
+                }
+                Err(e) => {
+                    ctl.send(conn, error_frame(format!("{e:#}").into_bytes()));
+                }
+            },
+            _ => {
+                ctl.send(conn, error_frame(b"unknown frame".to_vec()));
+            }
+        }
+    }
+
+    fn on_wake(&mut self, ctl: &mut Ctl) {
+        let replies: Vec<(ConnId, Frame)> = std::mem::take(&mut *self.inject.lock().unwrap());
+        for (conn, frame) in replies {
+            self.in_flight.remove(&conn);
+            ctl.send(conn, frame);
+            if self.stopping {
+                ctl.close_after_flush(conn);
+            } else {
+                ctl.resume(conn);
+            }
+        }
+    }
+
+    fn on_stop(&mut self, ctl: &mut Ctl) {
+        self.stopping = true;
+        self.stop_flag.store(true, Ordering::SeqCst);
+        for &conn in &self.open {
+            if !self.in_flight.contains(&conn) {
+                ctl.close_after_flush(conn);
+            }
+        }
+    }
 }
 
 fn error_frame(msg: impl Into<Vec<u8>>) -> Frame {
@@ -460,100 +566,12 @@ fn resolve<'t>(tenants: &'t BTreeMap<String, Tenant>, model: &str) -> Result<(&'
     }
 }
 
-fn handle_connection(
-    sock: TcpStream,
-    tenants: Arc<BTreeMap<String, Tenant>>,
-    stop: Arc<AtomicBool>,
-    addr: SocketAddr,
-) -> Result<()> {
-    let meter = Meter::default();
-    // Poll the socket with a short timeout so handler threads observe
-    // the stop flag and release their batcher senders.
-    sock.set_read_timeout(Some(Duration::from_millis(100)))?;
-    let mut writer = sock.try_clone()?;
-    let mut reader = BufReader::new(sock);
-    loop {
-        if stop.load(Ordering::SeqCst) {
-            return Ok(());
-        }
-        let (frame, _) = match recv_frame(&mut reader, &meter) {
-            Ok(f) => f,
-            Err(e) => {
-                if crate::transport::is_timeout(&e) {
-                    continue; // idle poll: re-check stop and keep waiting
-                }
-                return Ok(()); // client closed / protocol error
-            }
-        };
-        match (frame.kind, frame.name.as_str()) {
-            (FrameKind::Control, "stop") => {
-                stop.store(true, Ordering::SeqCst);
-                // poke the listener ourselves: a bare `stop` frame must
-                // shut the acceptor down without racing ServerHandle::stop
-                let _ = TcpStream::connect(addr);
-                return Ok(());
-            }
-            (FrameKind::Control, "models") => {
-                let ids: Vec<&str> = tenants.keys().map(String::as_str).collect();
-                send_frame(
-                    &mut writer,
-                    &Frame {
-                        kind: FrameKind::Control,
-                        name: "models".into(),
-                        payload: encode_model_list(&ids),
-                    },
-                    &meter,
-                )?;
-            }
-            (FrameKind::Control, "metrics") => {
-                let tm: Vec<(String, Arc<Metrics>)> = tenants
-                    .iter()
-                    .map(|(id, t)| (id.clone(), Arc::clone(&t.metrics)))
-                    .collect();
-                let snap = Snapshot::gather(&tm);
-                send_frame(
-                    &mut writer,
-                    &Frame {
-                        kind: FrameKind::Control,
-                        name: "metrics".into(),
-                        payload: snap.to_json().into_bytes(),
-                    },
-                    &meter,
-                )?;
-            }
-            (FrameKind::Control, "infer") => {
-                match serve_infer(&frame.payload, &tenants) {
-                    Ok((model, logits)) => {
-                        let payload: Vec<u8> =
-                            logits.iter().flat_map(|v| v.to_le_bytes()).collect();
-                        send_frame(
-                            &mut writer,
-                            &Frame {
-                                kind: FrameKind::Control,
-                                name: "logits".into(),
-                                payload: encode_tagged(&model, &payload)?,
-                            },
-                            &meter,
-                        )?;
-                    }
-                    Err(e) => {
-                        let msg = format!("{e:#}").into_bytes();
-                        send_frame(&mut writer, &error_frame(msg), &meter)?;
-                    }
-                }
-            }
-            _ => {
-                send_frame(&mut writer, &error_frame(b"unknown frame".to_vec()), &meter)?;
-            }
-        }
-    }
-}
-
-/// Decode, route, enqueue, and await one `infer` request.
-fn serve_infer(
+/// Decode, route, and validate one `infer` request (cheap, runs on the
+/// loop); returns the tenant index, resolved model id, and image.
+fn route_infer(
     payload: &[u8],
     tenants: &BTreeMap<String, Tenant>,
-) -> Result<(String, Vec<f32>)> {
+) -> Result<(usize, String, Vec<f32>)> {
     let (model, img_bytes) = decode_tagged(payload)?;
     let (tenant, id) = resolve(tenants, model)?;
     ensure!(
@@ -566,29 +584,145 @@ fn serve_infer(
         .chunks_exact(4)
         .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
         .collect();
-    let tx = tenant
-        .tx
-        .lock()
-        .unwrap()
-        .clone()
-        .ok_or_else(|| anyhow::anyhow!("{id}: server shutting down"))?;
-    let (rtx, rrx) = mpsc::channel();
-    registry().serving.queue_depth.inc();
-    let sent = tx
-        .send(Request {
-            image,
-            reply: rtx,
-            enqueued: Instant::now(),
-        })
-        .map_err(|_| anyhow::anyhow!("{id}: executor gone"));
-    drop(tx); // release our sender clone before blocking on the reply
-    let reply = sent.and_then(|()| match rrx.recv() {
-        Ok(Ok(logits)) => Ok((id.clone(), logits)),
-        Ok(Err(msg)) => bail!("{msg}"),
-        Err(_) => bail!("{id}: executor dropped the request"),
-    });
-    registry().serving.queue_depth.dec();
-    reply
+    Ok((tenant.index, id, image))
+}
+
+// ---------------------------------------------------------------------------
+// worker pool
+// ---------------------------------------------------------------------------
+
+struct WorkerCtx {
+    sched: Arc<FairScheduler<Job>>,
+    tenants: Arc<BTreeMap<String, Tenant>>,
+    /// Tenant index → model id (sorted-id order, mirrors `Tenant::index`).
+    order: Vec<String>,
+    /// Tenant index → batch policy.
+    policies: Vec<BatchPolicy>,
+    inject: Inject,
+    remote: Arc<Remote>,
+}
+
+impl WorkerCtx {
+    fn reply(&self, out: Vec<(ConnId, Frame)>) {
+        if out.is_empty() {
+            return;
+        }
+        self.inject.lock().unwrap().extend(out);
+        self.remote.wake();
+    }
+}
+
+fn worker_loop(ctx: &WorkerCtx) {
+    loop {
+        match ctx.sched.next_work(&ctx.policies) {
+            Work::Shutdown => return,
+            Work::One(_, entry) => match entry.payload {
+                Job::Models { conn } => {
+                    let ids: Vec<&str> = ctx.order.iter().map(String::as_str).collect();
+                    ctx.reply(vec![(
+                        conn,
+                        Frame {
+                            kind: FrameKind::Control,
+                            name: "models".into(),
+                            payload: encode_model_list(&ids),
+                        },
+                    )]);
+                }
+                Job::Metrics { conn } => {
+                    let tm: Vec<(String, Arc<Metrics>)> = ctx
+                        .tenants
+                        .iter()
+                        .map(|(id, t)| (id.clone(), Arc::clone(&t.metrics)))
+                        .collect();
+                    let snap = Snapshot::gather(&tm);
+                    ctx.reply(vec![(
+                        conn,
+                        Frame {
+                            kind: FrameKind::Control,
+                            name: "metrics".into(),
+                            payload: snap.to_json().into_bytes(),
+                        },
+                    )]);
+                }
+                Job::Infer { .. } => unreachable!("infer jobs are batch-scheduled"),
+            },
+            Work::Batch(t, entries) => {
+                run_infer_batch(ctx, t, entries);
+                ctx.sched.finish_batch(t);
+            }
+        }
+    }
+}
+
+/// Execute one tenant batch: zero-pad, lock the executor, run, record
+/// metrics, and inject per-request replies.
+fn run_infer_batch(ctx: &WorkerCtx, t: usize, entries: Vec<Entry<Job>>) {
+    if entries.is_empty() {
+        return;
+    }
+    let tenant = &ctx.tenants[&ctx.order[t]];
+    let occupancy = entries.len() as u64;
+    let mut input = vec![0f32; tenant.batch_size * tenant.image_len];
+    for (i, e) in entries.iter().enumerate() {
+        if let Job::Infer { image, .. } = &e.payload {
+            input[i * tenant.image_len..(i + 1) * tenant.image_len].copy_from_slice(image);
+        }
+    }
+    let t0 = Instant::now();
+    let result = {
+        let mut e = tenant.exec.lock().unwrap();
+        e.run_batch(&input)
+    };
+    let mut out = Vec::with_capacity(entries.len());
+    match result {
+        Ok(logits) => {
+            tenant.metrics.requests.fetch_add(occupancy, Ordering::Relaxed);
+            tenant.metrics.batches.fetch_add(1, Ordering::Relaxed);
+            tenant
+                .metrics
+                .batch_occupancy_sum
+                .fetch_add(occupancy, Ordering::Relaxed);
+            let s = &registry().serving;
+            s.requests.add(occupancy);
+            s.batches.inc();
+            s.batch_latency.record(t0.elapsed());
+            for (i, e) in entries.iter().enumerate() {
+                let waited = e.enqueued.elapsed();
+                tenant.metrics.request_latency.record(waited);
+                s.request_latency.record(waited);
+                let Job::Infer { conn, model, .. } = &e.payload else {
+                    continue;
+                };
+                let bytes: Vec<u8> = logits[i * tenant.classes..(i + 1) * tenant.classes]
+                    .iter()
+                    .flat_map(|v| v.to_le_bytes())
+                    .collect();
+                let frame = match encode_tagged(model, &bytes) {
+                    Ok(p) => Frame {
+                        kind: FrameKind::Control,
+                        name: "logits".into(),
+                        payload: p,
+                    },
+                    Err(err) => error_frame(format!("{err:#}").into_bytes()),
+                };
+                out.push((*conn, frame));
+                registry().serving.queue_depth.dec();
+            }
+        }
+        Err(e2) => {
+            tenant.metrics.errors.fetch_add(occupancy, Ordering::Relaxed);
+            registry().serving.errors.add(occupancy);
+            let msg = format!("{e2:#}");
+            for e in &entries {
+                let Job::Infer { conn, .. } = &e.payload else {
+                    continue;
+                };
+                out.push((*conn, error_frame(msg.clone().into_bytes())));
+                registry().serving.queue_depth.dec();
+            }
+        }
+    }
+    ctx.reply(out);
 }
 
 // ---------------------------------------------------------------------------

@@ -53,9 +53,8 @@ pub mod cache;
 pub mod client;
 pub mod session;
 
-use std::collections::BTreeMap;
-use std::io::BufReader;
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::net::{SocketAddr, TcpListener};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -66,15 +65,21 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::container::SectionIndex;
 use crate::coordinator::SwitchPolicy;
-use crate::store::{FileSource, SectionSource};
-use crate::telemetry::{registry, LatencyHisto, Snapshot};
-use crate::transport::{
-    chunk_frame, parse_ack, recv_frame, send_frame, ChunkHeader, Frame, FrameKind, Meter,
+use crate::reactor::{
+    self, BatchPolicy, ConnId, Ctl, FairScheduler, ReactorHandle, ReactorOpts, Remote, Service,
+    TokenBucket, Work,
 };
+use crate::store::{Bytes, FileSource, SectionSource};
+use crate::telemetry::{registry, LatencyHisto, Snapshot};
+use crate::transport::{chunk_frame, parse_ack, ChunkHeader, Frame, FrameKind, Meter};
 
 pub use cache::{CacheStats, SectionCache};
 pub use client::{FleetClient, PlaybackReport, PullOutcome, RemoteSource};
 pub use session::{SessionSummary, SessionTable, TransferProgress};
+
+/// Re-exported so fleet operators can set [`FleetConfig::rate_limit`]
+/// without importing the reactor module.
+pub use crate::reactor::RateLimit;
 
 /// Which `.nq` section a transfer moves (the store's canonical enum;
 /// its tags are part of this wire protocol).
@@ -183,6 +188,10 @@ pub struct FleetConfig {
     pub ack_timeout: Duration,
     /// Hysteresis switching policy applied per device session.
     pub policy: SwitchPolicy,
+    /// Optional per-device token-bucket rate limit on `level` (advice)
+    /// requests; a refused request gets an `error "rate limited"` reply
+    /// and ticks `nq_reactor_rate_limited`. `None`: unlimited.
+    pub rate_limit: Option<RateLimit>,
 }
 
 impl Default for FleetConfig {
@@ -192,6 +201,7 @@ impl Default for FleetConfig {
             cache_budget_bytes: 64 << 20,
             ack_timeout: Duration::from_secs(10),
             policy: SwitchPolicy::default(),
+            rate_limit: None,
         }
     }
 }
@@ -405,38 +415,545 @@ pub(crate) fn control(name: &str, payload: Vec<u8>) -> Frame {
 // server
 // ---------------------------------------------------------------------------
 
-/// Poll interval for idle connections (stop-flag observation latency).
-const IDLE_POLL: Duration = Duration::from_millis(100);
-
-/// Read timeouts that mean "no data yet", as opposed to a dead peer.
-fn is_io_timeout(e: &std::io::Error) -> bool {
-    matches!(
-        e.kind(),
-        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
-    )
+/// One queued unit of fleet work. Anything that touches disk, the
+/// section cache, or the policy table runs on the worker pool; the
+/// reactor loop itself only parses frames and shuffles bytes.
+enum FleetJob {
+    /// `level`: a resource report wanting switch advice (Switch class).
+    Level {
+        conn: ConnId,
+        device: String,
+        level: f64,
+    },
+    /// `metrics`: a telemetry scrape (control class, allowed pre-hello).
+    Metrics { conn: ConnId },
+    /// `models`: the zoo listing (control class).
+    Models { conn: ConnId },
+    /// `index`/`index2`: section layout of one model (control class).
+    Index {
+        conn: ConnId,
+        payload: Vec<u8>,
+        v2: bool,
+    },
+    /// `pull`: open + cache the section, then hand the loop a stream.
+    Pull {
+        conn: ConnId,
+        device: String,
+        model: String,
+        section: Section,
+        offset: u64,
+    },
 }
 
-#[derive(Clone)]
-struct Ctx {
-    addr: SocketAddr,
+/// What a worker hands back to the loop once a job finishes.
+enum InjectMsg {
+    /// Terminal reply; the connection resumes reading afterwards.
+    Reply(ConnId, Frame),
+    /// A validated pull: the loop takes over lockstep chunk/ack
+    /// streaming from `offset`.
+    Start {
+        conn: ConnId,
+        device: String,
+        model: String,
+        section: Section,
+        offset: u64,
+        blob: Bytes,
+        xfer_id: u64,
+    },
+}
+
+type Inject = Arc<Mutex<Vec<InjectMsg>>>;
+
+/// An in-progress section transfer owned by the reactor loop. Chunks go
+/// out one at a time and the next is sent only once the previous ack
+/// arrives, so residency bookkeeping survives a dead connection at the
+/// last acked offset exactly like the blocking server did.
+struct StreamState {
+    device: String,
+    model: String,
+    section: Section,
+    blob: Bytes,
+    xfer_id: u64,
+    /// Resume point: everything below this offset is acknowledged.
+    acked: u64,
+    /// End offset of the chunk currently in flight.
+    sent_to: u64,
+    total: u64,
+    t0: Instant,
+}
+
+/// The per-connection protocol state machine every device talks to.
+/// Cheap lookups (`offset`, `dropped`, `state`, `hello`) answer inline
+/// on the loop; everything else is queued to the worker pool with the
+/// connection paused until its reply comes back.
+struct FleetService {
+    sessions: Arc<SessionTable>,
+    xfer_latency: Arc<LatencyHisto>,
+    sched: Arc<FairScheduler<FleetJob>>,
+    inject: Inject,
+    config: FleetConfig,
+    stop_flag: Arc<AtomicBool>,
+    stopping: bool,
+    /// Connection -> device id (`None` until a valid `hello`).
+    conns: HashMap<ConnId, Option<String>>,
+    streams: HashMap<ConnId, StreamState>,
+    /// Connections paused while a worker owns their reply.
+    in_flight: HashSet<ConnId>,
+    /// Per-device token buckets (only when `config.rate_limit` is set).
+    buckets: HashMap<String, TokenBucket>,
+}
+
+impl FleetService {
+    /// Park the connection until its worker reply comes back, or refuse
+    /// outright when the queue already closed for shutdown.
+    fn gate(&mut self, conn: ConnId, ctl: &mut Ctl, accepted: bool) {
+        if accepted {
+            self.in_flight.insert(conn);
+            ctl.pause(conn);
+        } else {
+            ctl.send(conn, control("error", b"server shutting down".to_vec()));
+        }
+    }
+
+    /// Commands that need a device identity (everything but `hello`,
+    /// `metrics`, and `stop`). An `Err` becomes an `error` reply.
+    fn command(
+        &mut self,
+        conn: ConnId,
+        device: &str,
+        cmd: &str,
+        payload: &[u8],
+        ctl: &mut Ctl,
+    ) -> Result<()> {
+        match cmd {
+            "level" => {
+                ensure!(payload.len() == 8, "level payload must be 8 bytes");
+                let level = f64::from_le_bytes(payload.try_into().unwrap());
+                if let Some(limit) = self.config.rate_limit {
+                    let bucket = self
+                        .buckets
+                        .entry(device.to_string())
+                        .or_insert_with(|| TokenBucket::new(limit, Instant::now()));
+                    if !bucket.admit(Instant::now()) {
+                        registry().reactor.rate_limited.inc();
+                        ctl.send(conn, control("error", b"rate limited".to_vec()));
+                        return Ok(());
+                    }
+                }
+                let ok = self.sched.push_switch(FleetJob::Level {
+                    conn,
+                    device: device.to_string(),
+                    level,
+                });
+                self.gate(conn, ctl, ok);
+            }
+            "index" => {
+                let ok = self.sched.push_control(FleetJob::Index {
+                    conn,
+                    payload: payload.to_vec(),
+                    v2: false,
+                });
+                self.gate(conn, ctl, ok);
+            }
+            "index2" => {
+                let ok = self.sched.push_control(FleetJob::Index {
+                    conn,
+                    payload: payload.to_vec(),
+                    v2: true,
+                });
+                self.gate(conn, ctl, ok);
+            }
+            "models" => {
+                let ok = self.sched.push_control(FleetJob::Models { conn });
+                self.gate(conn, ctl, ok);
+            }
+            "offset" => {
+                let (section, model) = decode_section_req(payload)?;
+                let acked = self.sessions.acked(device, &model, section);
+                ctl.send(conn, control("offset", acked.to_le_bytes().to_vec()));
+            }
+            "dropped" => {
+                let (section, model) = decode_section_req(payload)?;
+                self.sessions.drop_section(device, &model, section)?;
+                ctl.send(conn, control("ok", Vec::new()));
+            }
+            "state" => {
+                // payload = model id; reply = [variant tag, section-B complete]
+                let model = std::str::from_utf8(payload).context("model id")?;
+                let variant = self.sessions.variant(device)?;
+                let complete = self
+                    .sessions
+                    .progress(device, model, Section::B)
+                    .is_some_and(|p| p.complete);
+                let tag = match variant {
+                    crate::coordinator::Variant::PartBit => 0u8,
+                    crate::coordinator::Variant::FullBit => 1u8,
+                };
+                ctl.send(conn, control("state", vec![tag, complete as u8]));
+            }
+            "pull" => {
+                let (section, offset, model) = decode_pull(payload)?;
+                let ok = self.sched.push_infer(
+                    0,
+                    FleetJob::Pull {
+                        conn,
+                        device: device.to_string(),
+                        model,
+                        section,
+                        offset,
+                    },
+                );
+                self.gate(conn, ctl, ok);
+            }
+            other => bail!("unknown command {other:?}"),
+        }
+        Ok(())
+    }
+
+    /// The device acked the chunk in flight: advance the resume point
+    /// and either finish the transfer or put the next chunk on the wire.
+    fn on_ack(&mut self, conn: ConnId, frame: &Frame, ctl: &mut Ctl) {
+        let Some(st) = self.streams.get(&conn) else {
+            ctl.close(conn);
+            return;
+        };
+        let ok = parse_ack(frame)
+            .map(|(axfer, aend)| axfer == st.xfer_id && aend == st.sent_to)
+            .unwrap_or(false);
+        // A bad ack closes the connection; the session table still holds
+        // the last good offset, so the device resumes from there.
+        if !ok {
+            ctl.close(conn);
+            return;
+        }
+        let from = st.acked;
+        let to = st.sent_to;
+        if self
+            .sessions
+            .record_ack(&st.device, &st.model, st.section, to)
+            .is_err()
+        {
+            ctl.close(conn);
+            return;
+        }
+        registry().fleet.chunks_sent.inc();
+        registry().fleet.chunk_bytes_sent.add(to - from);
+        let st = self.streams.get_mut(&conn).expect("stream state");
+        st.acked = to;
+        if st.acked >= st.total {
+            let st = self.streams.remove(&conn).expect("stream state");
+            self.xfer_latency.record(st.t0.elapsed());
+            ctl.set_deadline(conn, None);
+            if self.stopping {
+                ctl.close_after_flush(conn);
+            }
+            return;
+        }
+        self.send_chunk(conn, ctl);
+    }
+
+    /// Queue the next chunk of `conn`'s stream and (re)arm the ack
+    /// deadline, so a dead peer cannot hold its slot past `ack_timeout`.
+    fn send_chunk(&mut self, conn: ConnId, ctl: &mut Ctl) {
+        let Some(st) = self.streams.get_mut(&conn) else {
+            return;
+        };
+        let end = (st.acked + self.config.chunk_bytes as u64).min(st.total);
+        let header = ChunkHeader {
+            xfer_id: st.xfer_id,
+            offset: st.acked,
+            total_len: st.total,
+        };
+        let frame = chunk_frame(&st.model, header, &st.blob[st.acked as usize..end as usize]);
+        st.sent_to = end;
+        if self
+            .sessions
+            .record_send(&st.device, &st.model, st.section, st.acked, end)
+            .is_err()
+        {
+            ctl.close(conn);
+            return;
+        }
+        ctl.send(conn, frame);
+        ctl.set_deadline(conn, Some(Instant::now() + self.config.ack_timeout));
+    }
+}
+
+impl Service for FleetService {
+    fn on_open(&mut self, conn: ConnId, _ctl: &mut Ctl) {
+        self.conns.insert(conn, None);
+    }
+
+    fn on_close(&mut self, conn: ConnId, _ctl: &mut Ctl) {
+        self.conns.remove(&conn);
+        self.streams.remove(&conn);
+        self.in_flight.remove(&conn);
+    }
+
+    fn on_frame(&mut self, conn: ConnId, frame: Frame, ctl: &mut Ctl) {
+        if self.streams.contains_key(&conn) {
+            // mid-transfer the only legal frame is the ack for the chunk
+            // in flight
+            if frame.kind == FrameKind::Ack {
+                self.on_ack(conn, &frame, ctl);
+            } else {
+                ctl.close(conn);
+            }
+            return;
+        }
+        if frame.kind != FrameKind::Control {
+            ctl.send(conn, control("error", b"expected control frame".to_vec()));
+            return;
+        }
+        match frame.name.as_str() {
+            "stop" => {
+                self.stop_flag.store(true, Ordering::SeqCst);
+                ctl.stop();
+            }
+            "metrics" => {
+                // telemetry scrape: allowed pre-hello so monitoring needs
+                // no device identity
+                let ok = self.sched.push_control(FleetJob::Metrics { conn });
+                self.gate(conn, ctl, ok);
+            }
+            "hello" => match String::from_utf8(frame.payload).ok().filter(|s| !s.is_empty()) {
+                Some(id) => {
+                    self.sessions.hello(&id);
+                    self.conns.insert(conn, Some(id));
+                    ctl.send(conn, control("ok", Vec::new()));
+                }
+                None => ctl.send(conn, control("error", b"bad device id".to_vec())),
+            },
+            cmd => {
+                let Some(device) = self.conns.get(&conn).cloned().flatten() else {
+                    ctl.send(conn, control("error", b"hello required".to_vec()));
+                    return;
+                };
+                if let Err(e) = self.command(conn, &device, cmd, &frame.payload, ctl) {
+                    ctl.send(conn, control("error", format!("{e:#}").into_bytes()));
+                }
+            }
+        }
+    }
+
+    fn on_wake(&mut self, ctl: &mut Ctl) {
+        let msgs: Vec<InjectMsg> = std::mem::take(&mut *self.inject.lock().unwrap());
+        for msg in msgs {
+            match msg {
+                InjectMsg::Reply(conn, frame) => {
+                    self.in_flight.remove(&conn);
+                    ctl.send(conn, frame);
+                    if self.stopping {
+                        ctl.close_after_flush(conn);
+                    } else {
+                        ctl.resume(conn);
+                    }
+                }
+                InjectMsg::Start {
+                    conn,
+                    device,
+                    model,
+                    section,
+                    offset,
+                    blob,
+                    xfer_id,
+                } => {
+                    self.in_flight.remove(&conn);
+                    if !self.conns.contains_key(&conn) {
+                        continue; // device hung up while the worker ran
+                    }
+                    let total = blob.len() as u64;
+                    self.streams.insert(
+                        conn,
+                        StreamState {
+                            device,
+                            model,
+                            section,
+                            blob,
+                            xfer_id,
+                            acked: offset,
+                            sent_to: offset,
+                            total,
+                            t0: Instant::now(),
+                        },
+                    );
+                    // the device reads chunks and writes acks, so resume
+                    // reading before the first chunk goes out
+                    ctl.resume(conn);
+                    self.send_chunk(conn, ctl);
+                }
+            }
+        }
+    }
+
+    fn on_stop(&mut self, ctl: &mut Ctl) {
+        self.stopping = true;
+        self.stop_flag.store(true, Ordering::SeqCst);
+        // drain: idle connections close once queued replies flush;
+        // connections awaiting a worker reply or mid-transfer finish
+        // first (their completion paths check `stopping`)
+        for &conn in self.conns.keys() {
+            if !self.in_flight.contains(&conn) && !self.streams.contains_key(&conn) {
+                ctl.close_after_flush(conn);
+            }
+        }
+    }
+}
+
+/// Shared state of the fleet worker pool.
+struct FleetWorkerCtx {
+    sched: Arc<FairScheduler<FleetJob>>,
     zoo: Arc<Zoo>,
     cache: Arc<SectionCache>,
     sessions: Arc<SessionTable>,
-    meter: Arc<Meter>,
-    /// Per-transfer wall latency (reuses the coordinator's histogram).
     xfer_latency: Arc<LatencyHisto>,
     xfer_ids: Arc<AtomicU64>,
-    stop: Arc<AtomicBool>,
-    config: FleetConfig,
+    inject: Inject,
+    remote: Arc<Remote>,
 }
 
-/// The running fleet server: accept loop + one handler thread per device
-/// connection, all sharing the zoo, the section cache, and the session
-/// table.
+impl FleetWorkerCtx {
+    fn reply(&self, msg: InjectMsg) {
+        self.inject.lock().unwrap().push(msg);
+        self.remote.wake();
+    }
+}
+
+/// Pulls ride the Infer class as a single logical tenant with batch
+/// size 1: strict class priority means control and advice never wait
+/// behind a pull setup (disk open + cache fill).
+const FLEET_POLICIES: [BatchPolicy; 1] = [BatchPolicy {
+    batch_size: 1,
+    max_wait: Duration::ZERO,
+}];
+
+fn fleet_worker(ctx: &FleetWorkerCtx) {
+    loop {
+        match ctx.sched.next_work(&FLEET_POLICIES) {
+            Work::Shutdown => return,
+            Work::One(_, e) => run_job(ctx, e.payload),
+            Work::Batch(t, entries) => {
+                for e in entries {
+                    run_job(ctx, e.payload);
+                }
+                ctx.sched.finish_batch(t);
+            }
+        }
+    }
+}
+
+fn run_job(ctx: &FleetWorkerCtx, job: FleetJob) {
+    match job {
+        FleetJob::Level {
+            conn,
+            device,
+            level,
+        } => {
+            let frame = match ctx.sessions.decide(&device, level) {
+                Ok(decision) => {
+                    match decision {
+                        crate::coordinator::Decision::Stay => registry().fleet.advice_stay.inc(),
+                        crate::coordinator::Decision::SwitchTo(
+                            crate::coordinator::Variant::FullBit,
+                        ) => registry().fleet.advice_upgrade.inc(),
+                        crate::coordinator::Decision::SwitchTo(
+                            crate::coordinator::Variant::PartBit,
+                        ) => registry().fleet.advice_downgrade.inc(),
+                    }
+                    control("advice", decision.wire().as_bytes().to_vec())
+                }
+                Err(e) => control("error", format!("{e:#}").into_bytes()),
+            };
+            ctx.reply(InjectMsg::Reply(conn, frame));
+        }
+        FleetJob::Metrics { conn } => {
+            let snap =
+                Snapshot::gather_full(&[], &[("nq_fleet_xfer_latency", &ctx.xfer_latency)]);
+            let body = snap.to_json().into_bytes();
+            ctx.reply(InjectMsg::Reply(conn, control("metrics", body)));
+        }
+        FleetJob::Models { conn } => {
+            // list the zoo's model ids, so a device can discover what it
+            // may open as a `RemoteSource` without knowing paths
+            let ids: Vec<&str> = ctx.zoo.ids().collect();
+            let body = crate::transport::encode_model_list(&ids);
+            ctx.reply(InjectMsg::Reply(conn, control("models", body)));
+        }
+        FleetJob::Index { conn, payload, v2 } => {
+            let frame = match index_reply(ctx, &payload, v2) {
+                Ok(f) => f,
+                Err(e) => control("error", format!("{e:#}").into_bytes()),
+            };
+            ctx.reply(InjectMsg::Reply(conn, frame));
+        }
+        FleetJob::Pull {
+            conn,
+            device,
+            model,
+            section,
+            offset,
+        } => match start_pull(ctx, &device, &model, section, offset) {
+            Ok((blob, xfer_id)) => ctx.reply(InjectMsg::Start {
+                conn,
+                device,
+                model,
+                section,
+                offset,
+                blob,
+                xfer_id,
+            }),
+            Err(e) => ctx.reply(InjectMsg::Reply(
+                conn,
+                control("error", format!("{e:#}").into_bytes()),
+            )),
+        },
+    }
+}
+
+/// Section layout of one model. v1 is the pre-checksum wire form, kept
+/// for mixed-version fleets; v2 adds the integrity-trailer checksums —
+/// what a device-side `RemoteSource` answers `SectionSource::index`
+/// with (falling back to v1 against pre-checksum servers).
+fn index_reply(ctx: &FleetWorkerCtx, payload: &[u8], v2: bool) -> Result<Frame> {
+    let model = std::str::from_utf8(payload).context("model id")?;
+    let idx = ctx.zoo.source(model)?.index()?;
+    Ok(if v2 {
+        control("index2", encode_index2(&idx))
+    } else {
+        control("index", encode_index(&idx))
+    })
+}
+
+/// Pull setup off the reactor loop: resolve the model, fill the section
+/// cache (the disk I/O), validate the resume offset, and register the
+/// transfer — the loop then streams from the shared `Bytes` blob.
+fn start_pull(
+    ctx: &FleetWorkerCtx,
+    device: &str,
+    model: &str,
+    section: Section,
+    offset: u64,
+) -> Result<(Bytes, u64)> {
+    let source = ctx.zoo.source(model)?;
+    let blob = ctx.cache.get(model, source.as_ref(), section)?;
+    let total = blob.len() as u64;
+    ensure!(
+        offset <= total,
+        "pull offset {offset} beyond section {section} length {total}"
+    );
+    let xfer_id = ctx.xfer_ids.fetch_add(1, Ordering::SeqCst) + 1;
+    ctx.sessions.begin(device, model, section, total, offset)?;
+    Ok((blob, xfer_id))
+}
+
+/// The running fleet server: one readiness-driven reactor loop owns
+/// every device connection (sessions are state, not threads) and a
+/// small worker pool runs disk- and policy-bound jobs behind
+/// weighted-fair priority queues (control > advice > pulls).
 pub struct FleetServer;
 
-/// Handle to a running [`FleetServer`]; stopping joins every thread so
-/// wire accounting is exact afterwards.
+/// Handle to a running [`FleetServer`]; stopping drains the reactor and
+/// joins every thread so wire accounting is exact afterwards.
 pub struct FleetHandle {
     pub addr: SocketAddr,
     pub meter: Arc<Meter>,
@@ -445,8 +962,9 @@ pub struct FleetHandle {
     /// Wall latency of completed section transfers.
     pub xfer_latency: Arc<LatencyHisto>,
     stop: Arc<AtomicBool>,
-    acceptor: Option<JoinHandle<()>>,
-    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    sched: Arc<FairScheduler<FleetJob>>,
+    reactor: Option<ReactorHandle>,
+    workers: Vec<JoinHandle<()>>,
 }
 
 impl FleetServer {
@@ -457,71 +975,99 @@ impl FleetServer {
             "chunk_bytes must be positive (zero would live-lock transfers)"
         );
         let listener = TcpListener::bind("127.0.0.1:0").context("bind fleet server")?;
-        let addr = listener.local_addr()?;
-        let ctx = Ctx {
-            addr,
-            zoo: Arc::new(zoo),
-            cache: Arc::new(SectionCache::new(config.cache_budget_bytes)),
-            sessions: Arc::new(SessionTable::new(config.policy)),
-            meter: Arc::new(Meter::default()),
-            xfer_latency: Arc::new(LatencyHisto::default()),
-            xfer_ids: Arc::new(AtomicU64::new(0)),
-            stop: Arc::new(AtomicBool::new(false)),
-            config,
-        };
-        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let zoo = Arc::new(zoo);
+        let cache = Arc::new(SectionCache::new(config.cache_budget_bytes));
+        let sessions = Arc::new(SessionTable::new(config.policy));
+        let meter = Arc::new(Meter::default());
+        let xfer_latency = Arc::new(LatencyHisto::default());
+        let stop = Arc::new(AtomicBool::new(false));
+        let sched: Arc<FairScheduler<FleetJob>> = Arc::new(FairScheduler::new(&[1]));
+        let inject: Inject = Arc::new(Mutex::new(Vec::new()));
 
-        let actx = ctx.clone();
-        let aconns = Arc::clone(&conns);
-        let acceptor = std::thread::Builder::new()
-            .name("nq-fleet-acceptor".into())
-            .spawn(move || {
-                for conn in listener.incoming() {
-                    if actx.stop.load(Ordering::SeqCst) {
-                        break;
-                    }
-                    let Ok(sock) = conn else { continue };
-                    let cctx = actx.clone();
-                    let handle = std::thread::spawn(move || {
-                        let _ = handle_connection(sock, cctx);
-                    });
-                    // reap finished handlers so a long-lived server with
-                    // reconnecting devices doesn't accumulate dead handles
-                    let mut conns = aconns.lock().unwrap();
-                    conns.retain(|h| !h.is_finished());
-                    conns.push(handle);
-                }
-            })?;
+        let service = FleetService {
+            sessions: Arc::clone(&sessions),
+            xfer_latency: Arc::clone(&xfer_latency),
+            sched: Arc::clone(&sched),
+            inject: Arc::clone(&inject),
+            config,
+            stop_flag: Arc::clone(&stop),
+            stopping: false,
+            conns: HashMap::new(),
+            streams: HashMap::new(),
+            in_flight: HashSet::new(),
+            buckets: HashMap::new(),
+        };
+        let reactor = reactor::spawn(
+            listener,
+            service,
+            ReactorOpts {
+                name: "fleet".into(),
+                meter: Arc::clone(&meter),
+                // a stalled half-frame is as dead as a missed ack
+                partial_frame_timeout: Some(config.ack_timeout),
+            },
+        )
+        .context("spawn fleet reactor")?;
+        let addr = reactor.addr;
+
+        let ctx = Arc::new(FleetWorkerCtx {
+            sched: Arc::clone(&sched),
+            zoo,
+            cache: Arc::clone(&cache),
+            sessions: Arc::clone(&sessions),
+            xfer_latency: Arc::clone(&xfer_latency),
+            xfer_ids: Arc::new(AtomicU64::new(0)),
+            inject,
+            remote: reactor.remote(),
+        });
+        let n_workers = std::thread::available_parallelism()
+            .map_or(2, |n| n.get())
+            .clamp(2, 8);
+        let mut workers = Vec::with_capacity(n_workers);
+        for i in 0..n_workers {
+            let ctx = Arc::clone(&ctx);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("nq-fleet-worker-{i}"))
+                    .spawn(move || fleet_worker(&ctx))?,
+            );
+        }
 
         Ok(FleetHandle {
             addr,
-            meter: Arc::clone(&ctx.meter),
-            cache: Arc::clone(&ctx.cache),
-            sessions: Arc::clone(&ctx.sessions),
-            xfer_latency: Arc::clone(&ctx.xfer_latency),
-            stop: ctx.stop,
-            acceptor: Some(acceptor),
-            conns,
+            meter,
+            cache,
+            sessions,
+            xfer_latency,
+            stop,
+            sched,
+            reactor: Some(reactor),
+            workers,
         })
     }
 }
 
 impl FleetHandle {
-    /// Stop the server and join every thread (handler threads observe the
-    /// stop flag within the idle poll interval when idle).
+    /// Stop the server: close the queues, join the workers, drain the
+    /// reactor.
     pub fn stop(mut self) {
         self.shutdown();
     }
 
     fn shutdown(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        let _ = TcpStream::connect(self.addr); // poke accept()
-        if let Some(a) = self.acceptor.take() {
-            let _ = a.join();
+        // 1. refuse new jobs; workers run out what is queued and exit,
+        //    so every gated connection has its reply injected
+        self.sched.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
         }
-        let handles: Vec<_> = self.conns.lock().unwrap().drain(..).collect();
-        for h in handles {
-            let _ = h.join();
+        // 2. drain the reactor: the listener closes, idle connections
+        //    flush and close in on_stop, injected replies and running
+        //    transfers finish first, then the loop exits empty
+        if let Some(mut r) = self.reactor.take() {
+            r.request_stop();
+            r.join();
         }
     }
 }
@@ -529,290 +1075,6 @@ impl FleetHandle {
 impl Drop for FleetHandle {
     fn drop(&mut self) {
         self.shutdown();
-    }
-}
-
-fn handle_connection(sock: TcpStream, ctx: Ctx) -> Result<()> {
-    use std::io::BufRead;
-    sock.set_read_timeout(Some(IDLE_POLL))?;
-    let mut writer = sock.try_clone()?;
-    let mut reader = BufReader::new(sock);
-    let mut device: Option<String> = None;
-    loop {
-        if ctx.stop.load(Ordering::SeqCst) {
-            return Ok(());
-        }
-        // idle wait: poll (without consuming) until the first bytes of a
-        // frame arrive, so the stop flag is observed every IDLE_POLL...
-        match reader.fill_buf() {
-            Ok([]) => return Ok(()), // EOF: client hung up
-            Ok(_) => {}
-            Err(ref e) if is_io_timeout(e) => continue,
-            Err(_) => return Ok(()),
-        }
-        // ...then read the whole frame under the generous ack timeout, so
-        // a slow-but-healthy peer whose frame spans >IDLE_POLL on the
-        // wire is not mistaken for a dead one
-        reader.get_ref().set_read_timeout(Some(ctx.config.ack_timeout))?;
-        let received = recv_frame(&mut reader, &ctx.meter);
-        reader.get_ref().set_read_timeout(Some(IDLE_POLL))?;
-        let frame = match received {
-            Ok((f, _)) => f,
-            Err(_) => return Ok(()), // dead peer / protocol failure
-        };
-        if frame.kind != FrameKind::Control {
-            if send_frame(&mut writer, &control("error", b"expected control frame".to_vec()), &ctx.meter).is_err() {
-                return Ok(());
-            }
-            continue;
-        }
-        match frame.name.as_str() {
-            "stop" => {
-                ctx.stop.store(true, Ordering::SeqCst);
-                // unblock the acceptor so the listener actually closes
-                // (FleetHandle::stop pokes too, but a bare stop_server()
-                // must suffice on its own)
-                let _ = TcpStream::connect(ctx.addr);
-                return Ok(());
-            }
-            "metrics" => {
-                // telemetry scrape: allowed pre-hello so monitoring needs
-                // no device identity
-                let snap = Snapshot::gather_full(
-                    &[],
-                    &[("nq_fleet_xfer_latency", &ctx.xfer_latency)],
-                );
-                let body = snap.to_json().into_bytes();
-                if send_frame(&mut writer, &control("metrics", body), &ctx.meter).is_err() {
-                    return Ok(());
-                }
-            }
-            "hello" => {
-                match String::from_utf8(frame.payload.clone()).ok().filter(|s| !s.is_empty()) {
-                    Some(id) => {
-                        ctx.sessions.hello(&id);
-                        device = Some(id);
-                        if send_frame(&mut writer, &control("ok", Vec::new()), &ctx.meter).is_err() {
-                            return Ok(());
-                        }
-                    }
-                    None => {
-                        if send_frame(&mut writer, &control("error", b"bad device id".to_vec()), &ctx.meter).is_err() {
-                            return Ok(());
-                        }
-                    }
-                }
-            }
-            cmd => {
-                let Some(dev) = device.clone() else {
-                    if send_frame(&mut writer, &control("error", b"hello required".to_vec()), &ctx.meter).is_err() {
-                        return Ok(());
-                    }
-                    continue;
-                };
-                let mut streamed = false;
-                if let Err(e) =
-                    dispatch(cmd, &frame.payload, &dev, &mut writer, &mut reader, &ctx, &mut streamed)
-                {
-                    if streamed {
-                        // the peer died mid-transfer; residency already
-                        // records the last acked chunk for resume
-                        return Ok(());
-                    }
-                    let msg = format!("{e:#}");
-                    if send_frame(&mut writer, &control("error", msg.into_bytes()), &ctx.meter).is_err() {
-                        return Ok(());
-                    }
-                }
-            }
-        }
-    }
-}
-
-#[allow(clippy::too_many_arguments)]
-fn dispatch(
-    cmd: &str,
-    payload: &[u8],
-    device: &str,
-    writer: &mut TcpStream,
-    reader: &mut BufReader<TcpStream>,
-    ctx: &Ctx,
-    streamed: &mut bool,
-) -> Result<()> {
-    match cmd {
-        "level" => {
-            ensure!(payload.len() == 8, "level payload must be 8 bytes");
-            let level = f64::from_le_bytes(payload.try_into().unwrap());
-            let decision = ctx.sessions.decide(device, level)?;
-            match decision {
-                crate::coordinator::Decision::Stay => registry().fleet.advice_stay.inc(),
-                crate::coordinator::Decision::SwitchTo(crate::coordinator::Variant::FullBit) => {
-                    registry().fleet.advice_upgrade.inc()
-                }
-                crate::coordinator::Decision::SwitchTo(crate::coordinator::Variant::PartBit) => {
-                    registry().fleet.advice_downgrade.inc()
-                }
-            }
-            send_frame(
-                writer,
-                &control("advice", decision.wire().as_bytes().to_vec()),
-                &ctx.meter,
-            )?;
-            Ok(())
-        }
-        "index" => {
-            // section layout of one model — the v1 (pre-checksum) wire
-            // form, kept for mixed-version fleets
-            let model = std::str::from_utf8(payload).context("model id")?;
-            let idx = ctx.zoo.source(model)?.index()?;
-            send_frame(writer, &control("index", encode_index(&idx)), &ctx.meter)?;
-            Ok(())
-        }
-        "index2" => {
-            // v2: same layout plus the integrity-trailer checksums —
-            // what a device-side `RemoteSource` answers
-            // `SectionSource::index` with (falling back to `index`
-            // against pre-checksum servers)
-            let model = std::str::from_utf8(payload).context("model id")?;
-            let idx = ctx.zoo.source(model)?.index()?;
-            send_frame(writer, &control("index2", encode_index2(&idx)), &ctx.meter)?;
-            Ok(())
-        }
-        "models" => {
-            // list the zoo's model ids, so a device can discover what
-            // it may open as a `RemoteSource` without knowing paths
-            let ids: Vec<&str> = ctx.zoo.ids().collect();
-            send_frame(
-                writer,
-                &control("models", crate::transport::encode_model_list(&ids)),
-                &ctx.meter,
-            )?;
-            Ok(())
-        }
-        "offset" => {
-            let (section, model) = decode_section_req(payload)?;
-            let acked = ctx.sessions.acked(device, &model, section);
-            send_frame(
-                writer,
-                &control("offset", acked.to_le_bytes().to_vec()),
-                &ctx.meter,
-            )?;
-            Ok(())
-        }
-        "dropped" => {
-            let (section, model) = decode_section_req(payload)?;
-            ctx.sessions.drop_section(device, &model, section)?;
-            send_frame(writer, &control("ok", Vec::new()), &ctx.meter)?;
-            Ok(())
-        }
-        "state" => {
-            // payload = model id; reply = [variant tag, section-B complete]
-            let model = std::str::from_utf8(payload).context("model id")?;
-            let variant = ctx.sessions.variant(device)?;
-            let complete = ctx
-                .sessions
-                .progress(device, model, Section::B)
-                .is_some_and(|p| p.complete);
-            let tag = match variant {
-                crate::coordinator::Variant::PartBit => 0u8,
-                crate::coordinator::Variant::FullBit => 1u8,
-            };
-            send_frame(
-                writer,
-                &control("state", vec![tag, complete as u8]),
-                &ctx.meter,
-            )?;
-            Ok(())
-        }
-        "pull" => {
-            let (section, offset, model) = decode_pull(payload)?;
-            serve_pull(device, &model, section, offset, writer, reader, ctx, streamed)
-        }
-        other => bail!("unknown command {other:?}"),
-    }
-}
-
-/// Stream one section to the device as acked chunks, resuming at
-/// `offset`. Residency bookkeeping happens per chunk, so the last acked
-/// offset survives a dead connection.
-#[allow(clippy::too_many_arguments)]
-fn serve_pull(
-    device: &str,
-    model: &str,
-    section: Section,
-    offset: u64,
-    writer: &mut TcpStream,
-    reader: &mut BufReader<TcpStream>,
-    ctx: &Ctx,
-    streamed: &mut bool,
-) -> Result<()> {
-    let source = ctx.zoo.source(model)?;
-    let blob = ctx.cache.get(model, source.as_ref(), section)?;
-    let total = blob.len() as u64;
-    ensure!(
-        offset <= total,
-        "pull offset {offset} beyond section {section} length {total}"
-    );
-    let xfer_id = ctx.xfer_ids.fetch_add(1, Ordering::SeqCst) + 1;
-    ctx.sessions.begin(device, model, section, total, offset)?;
-
-    // a dead peer must not hold this thread forever: bound the ack wait
-    reader.get_ref().set_read_timeout(Some(ctx.config.ack_timeout))?;
-    let t0 = Instant::now();
-    let result = stream_chunks(
-        device, model, section, offset, xfer_id, &blob, writer, reader, ctx, streamed,
-    );
-    // restore the idle poll regardless of how the transfer ended
-    let _ = reader.get_ref().set_read_timeout(Some(IDLE_POLL));
-    if result.is_ok() {
-        ctx.xfer_latency.record(t0.elapsed());
-    }
-    result
-}
-
-/// The acked chunk loop of [`serve_pull`]; sets `streamed` once bytes
-/// are on the wire so the caller can tell protocol errors (reply) from a
-/// dead peer mid-transfer (hang up, keep the resume point).
-#[allow(clippy::too_many_arguments)]
-fn stream_chunks(
-    device: &str,
-    model: &str,
-    section: Section,
-    offset: u64,
-    xfer_id: u64,
-    blob: &[u8],
-    writer: &mut TcpStream,
-    reader: &mut BufReader<TcpStream>,
-    ctx: &Ctx,
-    streamed: &mut bool,
-) -> Result<()> {
-    let total = blob.len() as u64;
-    let mut pos = offset;
-    loop {
-        let end = (pos + ctx.config.chunk_bytes as u64).min(total);
-        let header = ChunkHeader {
-            xfer_id,
-            offset: pos,
-            total_len: total,
-        };
-        *streamed = true;
-        send_frame(
-            writer,
-            &chunk_frame(model, header, &blob[pos as usize..end as usize]),
-            &ctx.meter,
-        )?;
-        ctx.sessions.record_send(device, model, section, pos, end)?;
-        let (ack, _) = recv_frame(reader, &ctx.meter).context("awaiting chunk ack")?;
-        let (axfer, aend) = parse_ack(&ack)?;
-        ensure!(axfer == xfer_id, "ack for transfer {axfer}, expected {xfer_id}");
-        ensure!(aend == end, "acked {aend}, expected {end}");
-        ctx.sessions.record_ack(device, model, section, aend)?;
-        registry().fleet.chunks_sent.inc();
-        registry().fleet.chunk_bytes_sent.add(end - pos);
-        pos = end;
-        if pos >= total {
-            return Ok(());
-        }
     }
 }
 

@@ -13,9 +13,11 @@
 //!   `SectionSource`) every tier reads models through, the
 //!   runtime-dispatched switching [`kernels`] (one-pass packed → f32
 //!   decode; scalar/SWAR/SIMD tiers behind a per-process `KernelPlan`),
-//!   and every substrate they need (packed bits, `.nq` containers with
-//!   integrity trailers, quantizer, statistics). Python never runs on
-//!   the request path.
+//!   the readiness-driven [`reactor`] serving core (epoll event loop +
+//!   weighted-fair worker queues) both TCP servers run on, and every
+//!   substrate they need (packed bits, `.nq` containers with integrity
+//!   trailers, quantizer, statistics). Python never runs on the
+//!   request path.
 //! - **L2 (python/compile)** — the JAX model zoo + PTQ pipeline, AOT-
 //!   lowered once to `artifacts/*.hlo.txt`.
 //! - **L1 (python/compile/kernels)** — Pallas kernels (interpret=True)
@@ -32,6 +34,7 @@ pub mod fleet;
 pub mod kernels;
 pub mod nest;
 pub mod quant;
+pub mod reactor;
 pub mod report;
 pub mod runtime;
 pub mod stats;

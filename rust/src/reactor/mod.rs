@@ -1,0 +1,917 @@
+//! Reactor (S14): a dependency-free readiness-driven serving core —
+//! sessions are **state, not threads**.
+//!
+//! One loop thread owns every accepted socket: raw `epoll` on Linux
+//! (a `poll(2)` sweep elsewhere on unix) reports readiness, connections
+//! advance explicit state machines over the incremental
+//! [`transport::FrameReader`]/[`transport::FrameWriter`] codec, and CPU
+//! work runs on a shared worker pool fed through the
+//! [`queue::FairScheduler`] (strict class priority, DRR tenant
+//! fairness). Both TCP servers — the coordinator inference router and
+//! the fleet distribution server — are [`Service`] implementations on
+//! this loop, so 10k+ devices cost buffers and slab slots, not OS
+//! threads.
+//!
+//! ## Connection state machine
+//!
+//! ```text
+//!          accept            frame decoded        service op
+//!  (slab insert, EPOLLIN) ──► on_frame(..) ──► Send / Pause / Close /
+//!            ▲                    │              Deadline / Stop
+//!            │                    ▼
+//!   level-triggered readiness; a Paused conn drops read interest
+//!   (backpressure) and keeps already-buffered bytes until Resume.
+//! ```
+//!
+//! Replies queue into the conn's `FrameWriter` and flush as far as the
+//! socket allows; write interest is registered only while bytes remain,
+//! and a frame hits the byte meter exactly when its last byte leaves.
+//!
+//! ## Shutdown drain ordering
+//!
+//! 1. [`Remote::request_stop`] (or a service `Stop` op) flips the flag
+//!    and wakes the loop.
+//! 2. The loop closes the listener, stops parsing new frames, and gives
+//!    every surviving conn a grace deadline.
+//! 3. [`Service::on_stop`] closes idle connections; conns with in-flight
+//!    work stay until their replies flush (the owner joins its worker
+//!    pool first, so every claimed job still answers).
+//! 4. The loop exits once the slab is empty; [`ReactorHandle::join`]
+//!    then returns. Nothing is dropped mid-reply.
+
+pub mod poll;
+pub mod queue;
+pub mod sys;
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::telemetry::registry;
+use crate::transport::{self, Frame, FrameReader, FrameWriter, Meter};
+
+use poll::{Interest, PollEvent, Poller};
+
+pub use queue::{BatchPolicy, Entry, FairScheduler, Priority, RateLimit, TokenBucket, Work};
+pub use sys::raise_nofile_limit;
+
+const TOKEN_LISTENER: usize = 0;
+const TOKEN_WAKER: usize = 1;
+const TOKEN_BASE: usize = 2;
+
+/// How long a connection may linger after a stop before it is closed
+/// regardless of unflushed output.
+const DRAIN_GRACE: Duration = Duration::from_secs(5);
+
+/// Stable connection identity: slab slot plus generation, so a worker's
+/// late reply can never land on a recycled slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ConnId {
+    slot: u32,
+    gen: u32,
+}
+
+/// A connection-level callback module: the coordinator router and the
+/// fleet distributor each implement this and run unchanged wire
+/// protocols over the shared loop.
+///
+/// Callbacks run on the loop thread. They never block on I/O — slow
+/// work goes to the worker pool, whose results come back through a
+/// service-owned queue drained in [`Service::on_wake`].
+pub trait Service: Send + 'static {
+    /// A connection was accepted and registered.
+    fn on_open(&mut self, conn: ConnId, ctl: &mut Ctl) {
+        let _ = (conn, ctl);
+    }
+
+    /// One complete frame arrived (already metered as received).
+    fn on_frame(&mut self, conn: ConnId, frame: Frame, ctl: &mut Ctl);
+
+    /// The connection is gone (peer EOF/error, service close, or drain).
+    /// Always called exactly once per accepted connection.
+    fn on_close(&mut self, conn: ConnId, ctl: &mut Ctl) {
+        let _ = (conn, ctl);
+    }
+
+    /// The loop woke up (cross-thread waker, readiness, or tick): drain
+    /// any worker results queued for injection.
+    fn on_wake(&mut self, ctl: &mut Ctl) {
+        let _ = ctl;
+    }
+
+    /// A connection's deadline expired (service-set or partial-frame).
+    /// Default: close it.
+    fn on_deadline(&mut self, conn: ConnId, ctl: &mut Ctl) {
+        ctl.close(conn);
+    }
+
+    /// Stop observed: the listener is closed and no further frames will
+    /// be parsed. Close everything that is not awaiting an in-flight
+    /// reply; whatever survives is force-closed after [`DRAIN_GRACE`].
+    fn on_stop(&mut self, ctl: &mut Ctl) {
+        let _ = ctl;
+    }
+}
+
+/// Deferred connection operations a [`Service`] callback may emit.
+/// Applied by the loop immediately after the callback returns (and
+/// between successive frames of one read burst, so a `pause` takes
+/// effect before the next frame is parsed).
+#[derive(Debug, Default)]
+pub struct Ctl {
+    ops: Vec<Op>,
+}
+
+#[derive(Debug)]
+enum Op {
+    Send(ConnId, Frame),
+    Close(ConnId),
+    CloseAfterFlush(ConnId),
+    Pause(ConnId),
+    Resume(ConnId),
+    Deadline(ConnId, Option<Instant>),
+    Stop,
+}
+
+impl Ctl {
+    /// Queue a frame to `conn` (flushes as far as the socket allows
+    /// before returning to the loop).
+    pub fn send(&mut self, conn: ConnId, frame: Frame) {
+        self.ops.push(Op::Send(conn, frame));
+    }
+
+    /// Close `conn` now, discarding unflushed output.
+    pub fn close(&mut self, conn: ConnId) {
+        self.ops.push(Op::Close(conn));
+    }
+
+    /// Close `conn` once its outbox drains.
+    pub fn close_after_flush(&mut self, conn: ConnId) {
+        self.ops.push(Op::CloseAfterFlush(conn));
+    }
+
+    /// Stop reading/parsing `conn` (in-flight gating / backpressure).
+    /// Already-buffered bytes are kept and parsed again on resume.
+    pub fn pause(&mut self, conn: ConnId) {
+        self.ops.push(Op::Pause(conn));
+    }
+
+    /// Undo [`Ctl::pause`]; buffered frames are parsed immediately.
+    pub fn resume(&mut self, conn: ConnId) {
+        self.ops.push(Op::Resume(conn));
+    }
+
+    /// Set or clear `conn`'s service deadline (e.g. the fleet ack
+    /// timeout). Expiry triggers [`Service::on_deadline`].
+    pub fn set_deadline(&mut self, conn: ConnId, at: Option<Instant>) {
+        self.ops.push(Op::Deadline(conn, at));
+    }
+
+    /// Begin the shutdown drain (equivalent to
+    /// [`Remote::request_stop`] from inside a callback).
+    pub fn stop(&mut self) {
+        self.ops.push(Op::Stop);
+    }
+}
+
+/// Cross-thread handle into a running loop: workers and owners use it
+/// to wake the loop and to request the stop drain. Wakes are delivered
+/// over an internal loopback socket pair registered like any other fd.
+#[derive(Debug)]
+pub struct Remote {
+    waker_tx: TcpStream,
+    stop: AtomicBool,
+    stopped: AtomicBool,
+}
+
+impl Remote {
+    /// Wake the loop (idempotent; coalesces while the loop is busy).
+    pub fn wake(&self) {
+        // A full pipe means a wake is already pending — both outcomes
+        // leave the loop guaranteed to run another iteration.
+        let _ = (&self.waker_tx).write(&[1]);
+    }
+
+    /// Flip the stop flag and wake the loop into its drain sequence.
+    pub fn request_stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.wake();
+    }
+
+    pub fn stop_requested(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    /// True once the loop thread has fully drained and exited.
+    pub fn is_stopped(&self) -> bool {
+        self.stopped.load(Ordering::SeqCst)
+    }
+}
+
+/// Options for [`spawn`].
+pub struct ReactorOpts {
+    /// Loop thread name (shows up in `/proc/self/task` and panics).
+    pub name: String,
+    /// Byte meter charged for every decoded (received) and fully
+    /// flushed (sent) frame.
+    pub meter: Arc<Meter>,
+    /// Close a connection whose partially received frame makes no
+    /// progress for this long (`None`: wait forever).
+    pub partial_frame_timeout: Option<Duration>,
+}
+
+/// A running reactor: the loop thread plus its cross-thread remote.
+pub struct ReactorHandle {
+    pub addr: SocketAddr,
+    remote: Arc<Remote>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl ReactorHandle {
+    pub fn remote(&self) -> Arc<Remote> {
+        Arc::clone(&self.remote)
+    }
+
+    /// Ask the loop to drain (non-blocking).
+    pub fn request_stop(&self) {
+        self.remote.request_stop();
+    }
+
+    /// Wait for the loop thread to exit. Safe to call more than once.
+    pub fn join(&mut self) {
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for ReactorHandle {
+    fn drop(&mut self) {
+        self.request_stop();
+        self.join();
+    }
+}
+
+#[cfg(unix)]
+fn raw_fd<T: std::os::fd::AsRawFd>(t: &T) -> sys::RawFd {
+    t.as_raw_fd()
+}
+
+#[cfg(not(unix))]
+fn raw_fd<T>(_t: &T) -> sys::RawFd {
+    unreachable!("no reactor backend on this platform")
+}
+
+/// Build the loopback waker pair: `(loop-side read end, remote-side
+/// write end)`. A TCP pair keeps this portable — no unix-only pipes.
+fn waker_pair() -> io::Result<(TcpStream, TcpStream)> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let tx = TcpStream::connect(listener.local_addr()?)?;
+    let (rx, _) = listener.accept()?;
+    rx.set_nonblocking(true)?;
+    tx.set_nonblocking(true)?;
+    Ok((rx, tx))
+}
+
+/// Start a reactor on `listener`, serving `service` from one loop
+/// thread. The listener is switched to nonblocking mode and owned by
+/// the loop until stop.
+pub fn spawn<S: Service>(
+    listener: TcpListener,
+    service: S,
+    opts: ReactorOpts,
+) -> io::Result<ReactorHandle> {
+    listener.set_nonblocking(true)?;
+    let addr = listener.local_addr()?;
+    let mut poller = Poller::new()?;
+    let (waker_rx, waker_tx) = waker_pair()?;
+    poller.register(raw_fd(&listener), TOKEN_LISTENER, Interest::READ)?;
+    poller.register(raw_fd(&waker_rx), TOKEN_WAKER, Interest::READ)?;
+    let remote = Arc::new(Remote {
+        waker_tx,
+        stop: AtomicBool::new(false),
+        stopped: AtomicBool::new(false),
+    });
+    let r2 = Arc::clone(&remote);
+    let meter = Arc::clone(&opts.meter);
+    let partial = opts.partial_frame_timeout;
+    let thread = std::thread::Builder::new()
+        .name(format!("nq-reactor-{}", opts.name))
+        .spawn(move || {
+            let mut lp = EventLoop {
+                poller,
+                listener: Some(listener),
+                waker_rx,
+                service,
+                remote: Arc::clone(&r2),
+                meter,
+                partial_timeout: partial,
+                slots: Vec::new(),
+                free: Vec::new(),
+                live: 0,
+                events: Vec::new(),
+                resume_pending: Vec::new(),
+                draining: false,
+            };
+            lp.run();
+            r2.stopped.store(true, Ordering::SeqCst);
+        })?;
+    Ok(ReactorHandle {
+        addr,
+        remote,
+        thread: Some(thread),
+    })
+}
+
+struct Conn {
+    stream: TcpStream,
+    id: ConnId,
+    reader: FrameReader,
+    writer: FrameWriter,
+    interest: Interest,
+    paused: bool,
+    close_after_flush: bool,
+    /// Service-set deadline (ack timeouts etc.).
+    deadline: Option<Instant>,
+    /// Reactor-managed partial-frame progress deadline.
+    partial_deadline: Option<Instant>,
+}
+
+struct Slot {
+    gen: u32,
+    conn: Option<Conn>,
+}
+
+struct EventLoop<S: Service> {
+    poller: Poller,
+    listener: Option<TcpListener>,
+    waker_rx: TcpStream,
+    service: S,
+    remote: Arc<Remote>,
+    meter: Arc<Meter>,
+    partial_timeout: Option<Duration>,
+    slots: Vec<Slot>,
+    free: Vec<usize>,
+    live: usize,
+    events: Vec<PollEvent>,
+    resume_pending: Vec<usize>,
+    draining: bool,
+}
+
+impl<S: Service> EventLoop<S> {
+    fn run(&mut self) {
+        let mut ctl = Ctl::default();
+        loop {
+            let timeout = self.next_timeout();
+            let mut events = std::mem::take(&mut self.events);
+            if self.poller.wait(&mut events, Some(timeout)).is_err() {
+                // A broken poller is unrecoverable; drain and exit so
+                // joiners do not hang.
+                self.events = events;
+                break;
+            }
+            for i in 0..events.len() {
+                let ev = events[i];
+                match ev.token {
+                    TOKEN_LISTENER => self.accept_all(&mut ctl),
+                    TOKEN_WAKER => self.drain_waker(),
+                    t => self.conn_event(t - TOKEN_BASE, ev, &mut ctl),
+                }
+                self.pump(&mut ctl);
+            }
+            self.events = events;
+            self.service.on_wake(&mut ctl);
+            self.pump(&mut ctl);
+            self.sweep_deadlines(&mut ctl);
+            if self.remote.stop_requested() && !self.draining {
+                self.begin_drain(&mut ctl);
+            }
+            if self.draining && self.live == 0 {
+                break;
+            }
+        }
+    }
+
+    /// Wait no longer than the shared idle tick, or until the soonest
+    /// connection deadline, whichever is first.
+    fn next_timeout(&self) -> Duration {
+        let tick = transport::read_timeout();
+        let now = Instant::now();
+        let mut soonest: Option<Instant> = None;
+        for s in &self.slots {
+            if let Some(c) = &s.conn {
+                for d in [c.deadline, c.partial_deadline].into_iter().flatten() {
+                    soonest = Some(match soonest {
+                        Some(cur) => cur.min(d),
+                        None => d,
+                    });
+                }
+            }
+        }
+        match soonest {
+            Some(at) => tick.min(at.saturating_duration_since(now)),
+            None => tick,
+        }
+    }
+
+    // -- slab ---------------------------------------------------------------
+
+    fn conn_mut(&mut self, slot: usize) -> Option<&mut Conn> {
+        self.slots.get_mut(slot).and_then(|s| s.conn.as_mut())
+    }
+
+    fn valid_slot(&self, id: ConnId) -> Option<usize> {
+        let slot = id.slot as usize;
+        match self.slots.get(slot) {
+            Some(s) if s.gen == id.gen && s.conn.is_some() => Some(slot),
+            _ => None,
+        }
+    }
+
+    fn insert_conn(&mut self, stream: TcpStream) -> io::Result<ConnId> {
+        let slot = match self.free.pop() {
+            Some(i) => i,
+            None => {
+                self.slots.push(Slot { gen: 0, conn: None });
+                self.slots.len() - 1
+            }
+        };
+        let id = ConnId {
+            slot: slot as u32,
+            gen: self.slots[slot].gen,
+        };
+        if let Err(e) = self
+            .poller
+            .register(raw_fd(&stream), slot + TOKEN_BASE, Interest::READ)
+        {
+            self.free.push(slot);
+            return Err(e);
+        }
+        self.slots[slot].conn = Some(Conn {
+            stream,
+            id,
+            reader: FrameReader::new(),
+            writer: FrameWriter::new(),
+            interest: Interest::READ,
+            paused: false,
+            close_after_flush: false,
+            deadline: None,
+            partial_deadline: None,
+        });
+        self.live += 1;
+        registry().reactor.active_connections.inc();
+        Ok(id)
+    }
+
+    /// Tear down a connection and tell the service. The generation bump
+    /// invalidates any in-flight [`ConnId`]s for this slot.
+    fn close_conn(&mut self, slot: usize, ctl: &mut Ctl) {
+        let Some(conn) = self.slots[slot].conn.take() else {
+            return;
+        };
+        let _ = self.poller.deregister(raw_fd(&conn.stream));
+        self.slots[slot].gen = self.slots[slot].gen.wrapping_add(1);
+        self.free.push(slot);
+        self.live -= 1;
+        registry().reactor.active_connections.dec();
+        let id = conn.id;
+        drop(conn);
+        self.service.on_close(id, ctl);
+    }
+
+    // -- event handling -----------------------------------------------------
+
+    fn accept_all(&mut self, ctl: &mut Ctl) {
+        loop {
+            let Some(listener) = &self.listener else { return };
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let Ok(id) = self.insert_conn(stream) else {
+                        continue;
+                    };
+                    registry().reactor.accepts.inc();
+                    self.service.on_open(id, ctl);
+                    self.pump(ctl);
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                // EMFILE and friends: give up for this tick rather than
+                // spinning; level-triggered readiness will retry.
+                Err(_) => return,
+            }
+        }
+    }
+
+    fn drain_waker(&mut self) {
+        registry().reactor.wakeups.inc();
+        let mut buf = [0u8; 64];
+        loop {
+            match self.waker_rx.read(&mut buf) {
+                Ok(0) => return, // remote dropped; stop flag handles the rest
+                Ok(_) => continue,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => return,
+            }
+        }
+    }
+
+    fn conn_event(&mut self, slot: usize, ev: PollEvent, ctl: &mut Ctl) {
+        if ev.hangup {
+            // ERR/HUP are reported regardless of the interest mask. A
+            // paused conn will not read its way to EOF, so close it here
+            // instead of letting a level-triggered HUP spin the loop;
+            // any in-flight reply is dropped by the generation guard.
+            let paused = self.conn_mut(slot).is_some_and(|c| c.paused);
+            if paused {
+                self.close_conn(slot, ctl);
+                return;
+            }
+        }
+        if ev.readable || ev.hangup {
+            self.read_conn(slot, ctl);
+        }
+        if ev.writable {
+            self.flush_conn(slot, ctl);
+        }
+    }
+
+    fn read_conn(&mut self, slot: usize, ctl: &mut Ctl) {
+        let mut buf = [0u8; 16 << 10];
+        loop {
+            let Some(conn) = self.conn_mut(slot) else { return };
+            if conn.paused {
+                return;
+            }
+            match conn.stream.read(&mut buf) {
+                Ok(0) => {
+                    self.close_conn(slot, ctl);
+                    return;
+                }
+                Ok(n) => {
+                    if conn.reader.feed(&buf[..n]).is_err() {
+                        // poisoned stream (bad magic/kind/length)
+                        self.close_conn(slot, ctl);
+                        return;
+                    }
+                    self.parse_frames(slot, ctl);
+                    if n < buf.len() {
+                        break;
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.close_conn(slot, ctl);
+                    return;
+                }
+            }
+        }
+        self.note_partial_progress(slot);
+    }
+
+    /// Refresh the partial-frame deadline: armed while a frame prefix is
+    /// buffered, cleared (and re-armed on the next burst) otherwise.
+    fn note_partial_progress(&mut self, slot: usize) {
+        let Some(timeout) = self.partial_timeout else {
+            return;
+        };
+        let Some(conn) = self.conn_mut(slot) else { return };
+        conn.partial_deadline = if conn.reader.buffered() > 0 {
+            Some(Instant::now() + timeout)
+        } else {
+            None
+        };
+    }
+
+    /// Decode and dispatch every complete frame buffered on `slot`,
+    /// applying service ops between frames so pause/close take effect
+    /// before the next frame is parsed.
+    fn parse_frames(&mut self, slot: usize, ctl: &mut Ctl) {
+        loop {
+            if self.draining {
+                return;
+            }
+            let Some(conn) = self.conn_mut(slot) else { return };
+            if conn.paused {
+                return;
+            }
+            let id = conn.id;
+            match conn.reader.next_frame() {
+                Ok(Some((frame, wire))) => {
+                    self.meter.received.fetch_add(wire, Ordering::Relaxed);
+                    self.service.on_frame(id, frame, ctl);
+                    self.apply_ops(ctl);
+                }
+                Ok(None) => return,
+                Err(_) => {
+                    self.close_conn(slot, ctl);
+                    return;
+                }
+            }
+        }
+    }
+
+    fn flush_conn(&mut self, slot: usize, ctl: &mut Ctl) {
+        let meter = Arc::clone(&self.meter);
+        let Some(conn) = self.conn_mut(slot) else { return };
+        match conn.writer.flush_to(&mut conn.stream, &meter) {
+            Ok(true) => {
+                if conn.close_after_flush {
+                    self.close_conn(slot, ctl);
+                } else {
+                    self.set_interest(slot, false);
+                }
+            }
+            Ok(false) => self.set_interest(slot, true),
+            Err(_) => self.close_conn(slot, ctl),
+        }
+    }
+
+    /// Keep the registered interest in sync with (paused, want_write).
+    fn set_interest(&mut self, slot: usize, want_write: bool) {
+        let Some(conn) = self.conn_mut(slot) else { return };
+        let want = Interest {
+            readable: !conn.paused,
+            writable: want_write,
+        };
+        if want != conn.interest {
+            conn.interest = want;
+            let fd = raw_fd(&conn.stream);
+            let token = slot + TOKEN_BASE;
+            let _ = self.poller.reregister(fd, token, want);
+        }
+    }
+
+    // -- op application -----------------------------------------------------
+
+    /// Settle the op/resume fixpoint after an event or callback.
+    fn pump(&mut self, ctl: &mut Ctl) {
+        loop {
+            self.apply_ops(ctl);
+            let pending = std::mem::take(&mut self.resume_pending);
+            if pending.is_empty() && ctl.ops.is_empty() {
+                return;
+            }
+            for slot in pending {
+                self.parse_frames(slot, ctl);
+            }
+        }
+    }
+
+    fn apply_ops(&mut self, ctl: &mut Ctl) {
+        while !ctl.ops.is_empty() {
+            let batch: Vec<Op> = std::mem::take(&mut ctl.ops);
+            for op in batch {
+                match op {
+                    Op::Send(id, frame) => {
+                        let Some(slot) = self.valid_slot(id) else {
+                            continue; // conn died; reply dropped like a broken write
+                        };
+                        let Some(conn) = self.conn_mut(slot) else {
+                            continue;
+                        };
+                        if conn.writer.queue(&frame).is_err() {
+                            self.close_conn(slot, ctl);
+                            continue;
+                        }
+                        self.flush_conn(slot, ctl);
+                    }
+                    Op::Close(id) => {
+                        if let Some(slot) = self.valid_slot(id) {
+                            self.close_conn(slot, ctl);
+                        }
+                    }
+                    Op::CloseAfterFlush(id) => {
+                        let Some(slot) = self.valid_slot(id) else {
+                            continue;
+                        };
+                        let Some(conn) = self.conn_mut(slot) else {
+                            continue;
+                        };
+                        if conn.writer.is_empty() {
+                            self.close_conn(slot, ctl);
+                        } else {
+                            conn.close_after_flush = true;
+                        }
+                    }
+                    Op::Pause(id) => {
+                        if let Some(slot) = self.valid_slot(id) {
+                            if let Some(conn) = self.conn_mut(slot) {
+                                conn.paused = true;
+                            }
+                            self.set_interest(slot, self.wants_write(slot));
+                        }
+                    }
+                    Op::Resume(id) => {
+                        if let Some(slot) = self.valid_slot(id) {
+                            if let Some(conn) = self.conn_mut(slot) {
+                                conn.paused = false;
+                            }
+                            self.set_interest(slot, self.wants_write(slot));
+                            self.resume_pending.push(slot);
+                        }
+                    }
+                    Op::Deadline(id, at) => {
+                        if let Some(slot) = self.valid_slot(id) {
+                            if let Some(conn) = self.conn_mut(slot) {
+                                conn.deadline = at;
+                            }
+                        }
+                    }
+                    Op::Stop => {
+                        self.remote.stop.store(true, Ordering::SeqCst);
+                    }
+                }
+            }
+        }
+    }
+
+    fn wants_write(&self, slot: usize) -> bool {
+        self.slots[slot]
+            .conn
+            .as_ref()
+            .is_some_and(|c| !c.writer.is_empty())
+    }
+
+    // -- deadlines & drain --------------------------------------------------
+
+    fn sweep_deadlines(&mut self, ctl: &mut Ctl) {
+        let now = Instant::now();
+        let mut expired: Vec<ConnId> = Vec::new();
+        for s in &mut self.slots {
+            if let Some(c) = &mut s.conn {
+                let hit = [c.deadline, c.partial_deadline]
+                    .into_iter()
+                    .flatten()
+                    .any(|d| now >= d);
+                if hit {
+                    // clear both so a service that keeps the conn open
+                    // does not see the same expiry every tick
+                    c.deadline = None;
+                    c.partial_deadline = None;
+                    expired.push(c.id);
+                }
+            }
+        }
+        for id in expired {
+            if self.valid_slot(id).is_some() {
+                self.service.on_deadline(id, ctl);
+                self.pump(ctl);
+            }
+        }
+    }
+
+    fn begin_drain(&mut self, ctl: &mut Ctl) {
+        self.draining = true;
+        if let Some(listener) = self.listener.take() {
+            let _ = self.poller.deregister(raw_fd(&listener));
+        }
+        let grace = Instant::now() + DRAIN_GRACE;
+        for s in &mut self.slots {
+            if let Some(c) = &mut s.conn {
+                c.deadline = Some(match c.deadline {
+                    Some(d) => d.min(grace),
+                    None => grace,
+                });
+            }
+        }
+        self.service.on_stop(ctl);
+        self.pump(ctl);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::{recv_frame, send_frame, FrameKind};
+
+    /// Echoes every frame back with "echo:" prefixed to the name; a
+    /// Control frame named "stop" begins the drain.
+    #[derive(Default)]
+    struct Echo {
+        open: Vec<ConnId>,
+    }
+
+    impl Service for Echo {
+        fn on_open(&mut self, conn: ConnId, _ctl: &mut Ctl) {
+            self.open.push(conn);
+        }
+
+        fn on_close(&mut self, conn: ConnId, _ctl: &mut Ctl) {
+            self.open.retain(|&c| c != conn);
+        }
+
+        fn on_frame(&mut self, conn: ConnId, frame: Frame, ctl: &mut Ctl) {
+            if frame.kind == FrameKind::Control && frame.name == "stop" {
+                ctl.stop();
+                return;
+            }
+            ctl.send(
+                conn,
+                Frame {
+                    kind: frame.kind,
+                    name: format!("echo:{}", frame.name),
+                    payload: frame.payload,
+                },
+            );
+        }
+
+        fn on_stop(&mut self, ctl: &mut Ctl) {
+            for &conn in &self.open {
+                ctl.close_after_flush(conn);
+            }
+        }
+    }
+
+    fn start_echo() -> ReactorHandle {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        spawn(
+            listener,
+            Echo::default(),
+            ReactorOpts {
+                name: "echo-test".into(),
+                meter: Arc::new(Meter::default()),
+                partial_frame_timeout: Some(Duration::from_secs(5)),
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn echo_roundtrip_over_reactor() {
+        let mut handle = start_echo();
+        let meter = Meter::default();
+        let mut sock = TcpStream::connect(handle.addr).unwrap();
+        sock.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        for i in 0..5usize {
+            let f = Frame {
+                kind: FrameKind::Control,
+                name: format!("ping{i}"),
+                payload: vec![i as u8; 100 * i + 1],
+            };
+            send_frame(&mut sock, &f, &meter).unwrap();
+            let (back, _) = recv_frame(&mut sock, &meter).unwrap();
+            assert_eq!(back.name, format!("echo:ping{i}"));
+            assert_eq!(back.payload, f.payload);
+        }
+        handle.request_stop();
+        handle.join();
+    }
+
+    #[test]
+    fn wire_stop_frame_drains_loop() {
+        let mut handle = start_echo();
+        let meter = Meter::default();
+        let mut sock = TcpStream::connect(handle.addr).unwrap();
+        send_frame(
+            &mut sock,
+            &Frame {
+                kind: FrameKind::Control,
+                name: "stop".into(),
+                payload: vec![],
+            },
+            &meter,
+        )
+        .unwrap();
+        // the loop observes the stop, drains, and exits on its own
+        let remote = handle.remote();
+        let t0 = Instant::now();
+        while !remote.is_stopped() && t0.elapsed() < Duration::from_secs(10) {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(remote.is_stopped(), "loop never drained after wire stop");
+        handle.join();
+    }
+
+    #[test]
+    fn partial_frame_is_tolerated_then_completed() {
+        let mut handle = start_echo();
+        let meter = Meter::default();
+        let mut sock = TcpStream::connect(handle.addr).unwrap();
+        sock.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let f = Frame {
+            kind: FrameKind::ModelPart,
+            name: "slow".into(),
+            payload: (0..5000).map(|i| (i % 251) as u8).collect(),
+        };
+        let mut bytes = Vec::new();
+        send_frame(&mut bytes, &f, &meter).unwrap();
+        // dribble the frame across several writes with pauses
+        for chunk in bytes.chunks(bytes.len() / 4 + 1) {
+            sock.write_all(chunk).unwrap();
+            sock.flush().unwrap();
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        let (back, _) = recv_frame(&mut sock, &meter).unwrap();
+        assert_eq!(back.name, "echo:slow");
+        assert_eq!(back.payload, f.payload);
+        handle.request_stop();
+        handle.join();
+    }
+}

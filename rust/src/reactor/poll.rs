@@ -1,0 +1,285 @@
+//! Safe readiness poller: raw `epoll` on Linux, a `poll(2)` sweep on
+//! other unixes, and an explicit "unsupported" stub elsewhere. One
+//! instance is owned by one loop thread (`&mut self` everywhere); the
+//! cross-thread wake path goes through a socketpair registered like any
+//! other fd, so nothing here needs interior locking.
+
+use std::io;
+use std::time::Duration;
+
+use super::sys::RawFd;
+
+/// What a registration wants to hear about.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Interest {
+    pub readable: bool,
+    pub writable: bool,
+}
+
+impl Interest {
+    pub const READ: Interest = Interest {
+        readable: true,
+        writable: false,
+    };
+    pub const WRITE: Interest = Interest {
+        readable: false,
+        writable: true,
+    };
+    pub const READ_WRITE: Interest = Interest {
+        readable: true,
+        writable: true,
+    };
+}
+
+/// One readiness report. `hangup` folds in error conditions: the owner
+/// should read (draining any final bytes) and then close.
+#[derive(Debug, Clone, Copy)]
+pub struct PollEvent {
+    pub token: usize,
+    pub readable: bool,
+    pub writable: bool,
+    pub hangup: bool,
+}
+
+fn timeout_ms(timeout: Option<Duration>) -> i32 {
+    match timeout {
+        // Round up so a 100µs request does not busy-spin as 0 ms.
+        Some(t) => t
+            .as_millis()
+            .max(u128::from(u32::from(!t.is_zero())))
+            .min(i32::MAX as u128) as i32,
+        None => -1,
+    }
+}
+
+#[cfg(target_os = "linux")]
+pub use self::linux::Poller;
+#[cfg(all(unix, not(target_os = "linux")))]
+pub use self::unix_poll::Poller;
+#[cfg(not(unix))]
+pub use self::stub::Poller;
+
+#[cfg(target_os = "linux")]
+mod linux {
+    use super::*;
+    use crate::reactor::sys::{cvt, epoll};
+
+    /// Level-triggered epoll behind a tiny safe wrapper. Level-triggered
+    /// keeps the state machine honest: unread bytes or an unflushed
+    /// outbox re-report until handled, so a missed edge can never strand
+    /// a connection.
+    pub struct Poller {
+        epfd: RawFd,
+        events: Vec<epoll::epoll_event>,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            let epfd = cvt(unsafe { epoll::epoll_create1(epoll::EPOLL_CLOEXEC) })?;
+            Ok(Poller {
+                epfd,
+                events: vec![epoll::epoll_event { events: 0, data: 0 }; 1024],
+            })
+        }
+
+        fn ctl(&mut self, op: i32, fd: RawFd, token: usize, interest: Interest) -> io::Result<()> {
+            let mut flags = 0u32;
+            if interest.readable {
+                flags |= epoll::EPOLLIN;
+            }
+            if interest.writable {
+                flags |= epoll::EPOLLOUT;
+            }
+            let mut ev = epoll::epoll_event {
+                events: flags,
+                data: token as u64,
+            };
+            cvt(unsafe { epoll::epoll_ctl(self.epfd, op, fd, &mut ev) }).map(|_| ())
+        }
+
+        pub fn register(&mut self, fd: RawFd, token: usize, interest: Interest) -> io::Result<()> {
+            self.ctl(epoll::EPOLL_CTL_ADD, fd, token, interest)
+        }
+
+        pub fn reregister(
+            &mut self,
+            fd: RawFd,
+            token: usize,
+            interest: Interest,
+        ) -> io::Result<()> {
+            self.ctl(epoll::EPOLL_CTL_MOD, fd, token, interest)
+        }
+
+        pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+            // The event argument must be non-null for portability with
+            // pre-2.6.9 kernels; reuse a zeroed one.
+            let mut ev = epoll::epoll_event { events: 0, data: 0 };
+            cvt(unsafe { epoll::epoll_ctl(self.epfd, epoll::EPOLL_CTL_DEL, fd, &mut ev) })
+                .map(|_| ())
+        }
+
+        pub fn wait(
+            &mut self,
+            out: &mut Vec<PollEvent>,
+            timeout: Option<Duration>,
+        ) -> io::Result<()> {
+            out.clear();
+            let n = unsafe {
+                epoll::epoll_wait(
+                    self.epfd,
+                    self.events.as_mut_ptr(),
+                    self.events.len() as i32,
+                    timeout_ms(timeout),
+                )
+            };
+            if n < 0 {
+                let err = io::Error::last_os_error();
+                if err.kind() == io::ErrorKind::Interrupted {
+                    return Ok(()); // EINTR: report an empty tick
+                }
+                return Err(err);
+            }
+            for ev in &self.events[..n as usize] {
+                // Copy out of the (possibly packed) struct before use.
+                let flags = ev.events;
+                let data = ev.data;
+                out.push(PollEvent {
+                    token: data as usize,
+                    readable: flags & epoll::EPOLLIN != 0,
+                    writable: flags & epoll::EPOLLOUT != 0,
+                    hangup: flags & (epoll::EPOLLERR | epoll::EPOLLHUP) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            unsafe { crate::reactor::sys::unix::close(self.epfd) };
+        }
+    }
+}
+
+#[cfg(all(unix, not(target_os = "linux")))]
+mod unix_poll {
+    use super::*;
+    use crate::reactor::sys::{cvt, unix};
+    use std::collections::HashMap;
+
+    /// `poll(2)` fallback: O(n) per wait, which is fine for the
+    /// non-Linux dev platforms it exists for.
+    pub struct Poller {
+        registry: HashMap<RawFd, (usize, Interest)>,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            Ok(Poller {
+                registry: HashMap::new(),
+            })
+        }
+
+        pub fn register(&mut self, fd: RawFd, token: usize, interest: Interest) -> io::Result<()> {
+            self.registry.insert(fd, (token, interest));
+            Ok(())
+        }
+
+        pub fn reregister(
+            &mut self,
+            fd: RawFd,
+            token: usize,
+            interest: Interest,
+        ) -> io::Result<()> {
+            self.registry.insert(fd, (token, interest));
+            Ok(())
+        }
+
+        pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+            self.registry.remove(&fd);
+            Ok(())
+        }
+
+        pub fn wait(
+            &mut self,
+            out: &mut Vec<PollEvent>,
+            timeout: Option<Duration>,
+        ) -> io::Result<()> {
+            out.clear();
+            let mut fds: Vec<unix::pollfd> = self
+                .registry
+                .iter()
+                .map(|(&fd, &(_, interest))| unix::pollfd {
+                    fd,
+                    events: if interest.readable { unix::POLLIN } else { 0 }
+                        | if interest.writable { unix::POLLOUT } else { 0 },
+                    revents: 0,
+                })
+                .collect();
+            let n = unsafe {
+                unix::poll(
+                    fds.as_mut_ptr(),
+                    fds.len() as std::os::raw::c_ulong,
+                    timeout_ms(timeout),
+                )
+            };
+            if n < 0 {
+                let err = io::Error::last_os_error();
+                if err.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(err);
+            }
+            let _ = cvt(n);
+            for pfd in &fds {
+                if pfd.revents == 0 {
+                    continue;
+                }
+                let Some(&(token, _)) = self.registry.get(&pfd.fd) else {
+                    continue;
+                };
+                out.push(PollEvent {
+                    token,
+                    readable: pfd.revents & unix::POLLIN != 0,
+                    writable: pfd.revents & unix::POLLOUT != 0,
+                    hangup: pfd.revents & (unix::POLLERR | unix::POLLHUP) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+}
+
+#[cfg(not(unix))]
+mod stub {
+    use super::*;
+
+    /// Non-unix platforms have no reactor backend; construction fails
+    /// with a clear error and the blocking client paths keep working.
+    pub struct Poller;
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            Err(io::Error::new(
+                io::ErrorKind::Unsupported,
+                "the nestquant reactor requires epoll (Linux) or poll(2) (unix)",
+            ))
+        }
+
+        pub fn register(&mut self, _: RawFd, _: usize, _: Interest) -> io::Result<()> {
+            unreachable!("stub poller cannot be constructed")
+        }
+
+        pub fn reregister(&mut self, _: RawFd, _: usize, _: Interest) -> io::Result<()> {
+            unreachable!("stub poller cannot be constructed")
+        }
+
+        pub fn deregister(&mut self, _: RawFd) -> io::Result<()> {
+            unreachable!("stub poller cannot be constructed")
+        }
+
+        pub fn wait(&mut self, _: &mut Vec<PollEvent>, _: Option<Duration>) -> io::Result<()> {
+            unreachable!("stub poller cannot be constructed")
+        }
+    }
+}

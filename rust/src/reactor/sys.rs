@@ -1,0 +1,117 @@
+//! Raw OS bindings for the reactor: the handful of syscalls a
+//! readiness-driven loop needs, declared by hand against the platform
+//! libc that `std` already links (the workspace is dependency-free, so
+//! no `libc` crate). Everything here is `unsafe` plumbing; the safe
+//! wrapper lives in [`super::poll`].
+
+#![allow(non_camel_case_types)]
+
+use std::io;
+
+/// Raw file descriptor (matches `std::os::fd::RawFd` on unix).
+pub type RawFd = i32;
+
+/// Turn a -1 libc return into the calling thread's errno as an
+/// [`io::Error`].
+pub fn cvt(ret: i32) -> io::Result<i32> {
+    if ret < 0 {
+        Err(io::Error::last_os_error())
+    } else {
+        Ok(ret)
+    }
+}
+
+#[cfg(target_os = "linux")]
+pub mod epoll {
+    pub const EPOLLIN: u32 = 0x1;
+    pub const EPOLLOUT: u32 = 0x4;
+    pub const EPOLLERR: u32 = 0x8;
+    pub const EPOLLHUP: u32 = 0x10;
+
+    pub const EPOLL_CTL_ADD: i32 = 1;
+    pub const EPOLL_CTL_DEL: i32 = 2;
+    pub const EPOLL_CTL_MOD: i32 = 3;
+
+    pub const EPOLL_CLOEXEC: i32 = 0o2000000;
+
+    /// Mirrors the kernel's `struct epoll_event`, which is packed on
+    /// x86-64 (and only there) so the 64-bit data field sits at offset 4.
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    pub struct epoll_event {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    extern "C" {
+        pub fn epoll_create1(flags: i32) -> i32;
+        pub fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut epoll_event) -> i32;
+        pub fn epoll_wait(
+            epfd: i32,
+            events: *mut epoll_event,
+            maxevents: i32,
+            timeout_ms: i32,
+        ) -> i32;
+    }
+}
+
+#[cfg(unix)]
+pub mod unix {
+    use std::os::raw::c_ulong;
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct pollfd {
+        pub fd: i32,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    pub const POLLIN: i16 = 0x1;
+    pub const POLLOUT: i16 = 0x4;
+    pub const POLLERR: i16 = 0x8;
+    pub const POLLHUP: i16 = 0x10;
+
+    extern "C" {
+        pub fn poll(fds: *mut pollfd, nfds: c_ulong, timeout_ms: i32) -> i32;
+        pub fn close(fd: i32) -> i32;
+    }
+}
+
+/// Raise the soft `RLIMIT_NOFILE` toward `target` (capped by the hard
+/// limit). Returns the soft limit now in effect. Linux-only helper for
+/// the churn test, which holds >10k sockets in one process; elsewhere
+/// it reports the request as unsupported.
+#[cfg(target_os = "linux")]
+pub fn raise_nofile_limit(target: u64) -> io::Result<u64> {
+    #[repr(C)]
+    struct rlimit {
+        rlim_cur: u64,
+        rlim_max: u64,
+    }
+    const RLIMIT_NOFILE: i32 = 7;
+    extern "C" {
+        fn getrlimit(resource: i32, rlim: *mut rlimit) -> i32;
+        fn setrlimit(resource: i32, rlim: *const rlimit) -> i32;
+    }
+    let mut lim = rlimit {
+        rlim_cur: 0,
+        rlim_max: 0,
+    };
+    cvt(unsafe { getrlimit(RLIMIT_NOFILE, &mut lim) })?;
+    let want = target.min(lim.rlim_max);
+    if want > lim.rlim_cur {
+        lim.rlim_cur = want;
+        cvt(unsafe { setrlimit(RLIMIT_NOFILE, &lim) })?;
+    }
+    Ok(lim.rlim_cur)
+}
+
+#[cfg(not(target_os = "linux"))]
+pub fn raise_nofile_limit(_target: u64) -> io::Result<u64> {
+    Err(io::Error::new(
+        io::ErrorKind::Unsupported,
+        "RLIMIT_NOFILE adjustment is only wired up on Linux",
+    ))
+}

@@ -447,6 +447,57 @@ impl Default for ServingTelemetry {
     }
 }
 
+/// Reactor (S14) counters: accepted/active connections, cross-thread
+/// wakeups, scheduler queue depth per priority class, and token-bucket
+/// rate-limit drops. One block serves both reactor-backed servers (the
+/// coordinator router and the fleet distributor) — the registry is
+/// process-global like every other subsystem here.
+#[derive(Debug)]
+pub struct ReactorTelemetry {
+    /// Sockets accepted by reactor accept loops.
+    pub accepts: Counter,
+    /// Connections currently registered with a reactor.
+    pub active_connections: Gauge,
+    /// Cross-thread wakeups delivered through a reactor's waker pipe.
+    pub wakeups: Counter,
+    /// Jobs queued but not yet claimed, per priority class.
+    pub queue_depth_control: Gauge,
+    pub queue_depth_switch: Gauge,
+    pub queue_depth_infer: Gauge,
+    /// Requests refused by a per-device token bucket.
+    pub rate_limited: Counter,
+}
+
+impl ReactorTelemetry {
+    pub const fn new() -> ReactorTelemetry {
+        ReactorTelemetry {
+            accepts: Counter::new(),
+            active_connections: Gauge::new(),
+            wakeups: Counter::new(),
+            queue_depth_control: Gauge::new(),
+            queue_depth_switch: Gauge::new(),
+            queue_depth_infer: Gauge::new(),
+            rate_limited: Counter::new(),
+        }
+    }
+
+    /// Queue-depth gauge for a priority class index (0 = control,
+    /// 1 = switch, 2 = infer — matching `reactor::queue::Priority`).
+    pub fn queue_depth(&self, class: usize) -> &Gauge {
+        match class {
+            0 => &self.queue_depth_control,
+            1 => &self.queue_depth_switch,
+            _ => &self.queue_depth_infer,
+        }
+    }
+}
+
+impl Default for ReactorTelemetry {
+    fn default() -> Self {
+        ReactorTelemetry::new()
+    }
+}
+
 // ---------------------------------------------------------------------------
 // trace ring
 // ---------------------------------------------------------------------------
@@ -468,6 +519,8 @@ pub enum TraceKind {
     ChunkRetry,
     /// Kernel dispatch-tier selection (plan resolution, not per call).
     KernelDispatch,
+    /// A weighted-fair scheduler decision (tenant pick, deficit state).
+    Fairness,
 }
 
 impl TraceKind {
@@ -480,6 +533,7 @@ impl TraceKind {
             TraceKind::CrcFailure => "crc_failure",
             TraceKind::ChunkRetry => "chunk_retry",
             TraceKind::KernelDispatch => "kernel_dispatch",
+            TraceKind::Fairness => "fairness",
         }
     }
 
@@ -492,6 +546,7 @@ impl TraceKind {
             "crc_failure" => TraceKind::CrcFailure,
             "chunk_retry" => TraceKind::ChunkRetry,
             "kernel_dispatch" => TraceKind::KernelDispatch,
+            "fairness" => TraceKind::Fairness,
             _ => return None,
         })
     }
@@ -609,6 +664,7 @@ pub struct Registry {
     pub kernels: KernelTelemetry,
     pub fleet: FleetTelemetry,
     pub serving: ServingTelemetry,
+    pub reactor: ReactorTelemetry,
     pub trace: TraceRing,
 }
 
@@ -619,6 +675,7 @@ impl Registry {
             kernels: KernelTelemetry::new(),
             fleet: FleetTelemetry::new(),
             serving: ServingTelemetry::new(),
+            reactor: ReactorTelemetry::new(),
             trace: TraceRing::new(),
         }
     }
@@ -733,6 +790,7 @@ mod tests {
             TraceKind::CrcFailure,
             TraceKind::ChunkRetry,
             TraceKind::KernelDispatch,
+            TraceKind::Fairness,
         ] {
             assert_eq!(TraceKind::from_label(k.label()), Some(k));
         }

@@ -135,6 +135,10 @@ impl Snapshot {
         c("nq_serving_page_in_bytes", r.serving.page_in_bytes.get());
         c("nq_serving_page_out_bytes", r.serving.page_out_bytes.get());
 
+        c("nq_reactor_accepts", r.reactor.accepts.get());
+        c("nq_reactor_wakeups", r.reactor.wakeups.get());
+        c("nq_reactor_rate_limited", r.reactor.rate_limited.get());
+
         let gauges = vec![
             (
                 "nq_store_resident_a_bytes".to_string(),
@@ -147,6 +151,22 @@ impl Snapshot {
             (
                 "nq_serving_queue_depth".to_string(),
                 r.serving.queue_depth.get(),
+            ),
+            (
+                "nq_reactor_active_connections".to_string(),
+                r.reactor.active_connections.get(),
+            ),
+            (
+                "nq_reactor_queue_depth_control".to_string(),
+                r.reactor.queue_depth_control.get(),
+            ),
+            (
+                "nq_reactor_queue_depth_switch".to_string(),
+                r.reactor.queue_depth_switch.get(),
+            ),
+            (
+                "nq_reactor_queue_depth_infer".to_string(),
+                r.reactor.queue_depth_infer.get(),
             ),
         ];
 
@@ -482,6 +502,17 @@ impl Snapshot {
             c("nq_serving_forced_downgrades"),
             g("nq_serving_queue_depth"),
         );
+        let _ = writeln!(
+            out,
+            "reactor: conns={} accepts={} wakeups={} queue c/s/i={}/{}/{} rate_limited={}",
+            g("nq_reactor_active_connections"),
+            c("nq_reactor_accepts"),
+            c("nq_reactor_wakeups"),
+            g("nq_reactor_queue_depth_control"),
+            g("nq_reactor_queue_depth_switch"),
+            g("nq_reactor_queue_depth_infer"),
+            c("nq_reactor_rate_limited"),
+        );
         if !self.trace.is_empty() {
             let _ = writeln!(out, "trace (last {}):", self.trace.len().min(10));
             let skip = self.trace.len().saturating_sub(10);
@@ -666,6 +697,11 @@ mod tests {
         validate_prometheus(&text).unwrap();
         assert!(text.contains("nq_store_a_fetches"));
         assert!(text.contains("nq_tenant_requests{tenant=\"alpha\"} 7"));
+        // the reactor family rides through the same grammar-checked doc
+        assert!(text.contains("nq_reactor_accepts"));
+        assert!(text.contains("nq_reactor_active_connections"));
+        assert!(text.contains("nq_reactor_queue_depth_infer"));
+        assert!(text.contains("nq_reactor_rate_limited"));
     }
 
     #[test]
@@ -698,5 +734,6 @@ mod tests {
         assert!(top.contains("store:"));
         assert!(top.contains("kernels:"));
         assert!(top.contains("serving:"));
+        assert!(top.contains("reactor:"));
     }
 }

@@ -59,15 +59,35 @@ pub struct Frame {
 }
 
 const FRAME_MAGIC: u32 = 0x4E51_5458; // "NQTX"
-const MAX_FRAME: u64 = 4 << 30;
+/// Hard ceiling on a single frame's payload length.
+pub const MAX_FRAME: u64 = 4 << 30;
 /// Never pre-allocate more than this from an untrusted length header; the
 /// payload buffer grows as bytes actually arrive.
 const MAX_INITIAL_ALLOC: usize = 1 << 20;
 /// Copy granularity for the incremental payload read.
 const READ_CHUNK: usize = 64 << 10;
+/// Fixed frame-header prefix before the name: magic + kind + name_len.
+const FIXED_HEADER: usize = 7;
 /// Default socket read timeout for pulls: a dead peer cannot hang a
 /// device thread forever.
 pub const DEFAULT_PULL_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Idle read-timeout shared by both servers' accept paths: the blocking
+/// fleet handler's poll tick and the reactor's wait timeout both use
+/// this, so one knob governs how fast either server notices a stop flag
+/// or a deadline. Default 100 ms; override with `NQ_READ_TIMEOUT_MS`
+/// (milliseconds, > 0; read once per process).
+pub fn read_timeout() -> Duration {
+    use std::sync::OnceLock;
+    static MS: OnceLock<u64> = OnceLock::new();
+    Duration::from_millis(*MS.get_or_init(|| {
+        std::env::var("NQ_READ_TIMEOUT_MS")
+            .ok()
+            .and_then(|v| v.trim().parse::<u64>().ok())
+            .filter(|&ms| ms > 0)
+            .unwrap_or(100)
+    }))
+}
 
 /// Bidirectional traffic meter (shared across connections).
 #[derive(Debug, Default)]
@@ -85,63 +105,262 @@ impl Meter {
     }
 }
 
-/// Write one frame; returns wire bytes written.
-pub fn send_frame(stream: &mut impl Write, frame: &Frame, meter: &Meter) -> Result<u64> {
+/// Encode one frame onto the end of `out`; returns its wire length.
+/// The single source of truth for the frame layout — [`send_frame`] and
+/// [`FrameWriter`] both produce exactly these bytes.
+fn encode_frame_into(frame: &Frame, out: &mut Vec<u8>) -> Result<u64> {
     let name = frame.name.as_bytes();
     ensure!(name.len() < 1 << 16, "name too long");
-    let mut header = Vec::with_capacity(16 + name.len());
-    header.extend_from_slice(&FRAME_MAGIC.to_le_bytes());
-    header.push(frame.kind as u8);
-    header.extend_from_slice(&(name.len() as u16).to_le_bytes());
-    header.extend_from_slice(name);
-    header.extend_from_slice(&(frame.payload.len() as u64).to_le_bytes());
-    stream.write_all(&header)?;
-    stream.write_all(&frame.payload)?;
+    let wire = FIXED_HEADER + name.len() + 8 + frame.payload.len();
+    out.reserve(wire);
+    out.extend_from_slice(&FRAME_MAGIC.to_le_bytes());
+    out.push(frame.kind as u8);
+    out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+    out.extend_from_slice(name);
+    out.extend_from_slice(&(frame.payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(&frame.payload);
+    Ok(wire as u64)
+}
+
+/// Write one frame; returns wire bytes written.
+pub fn send_frame(stream: &mut impl Write, frame: &Frame, meter: &Meter) -> Result<u64> {
+    let mut buf = Vec::new();
+    let wire = encode_frame_into(frame, &mut buf)?;
+    stream.write_all(&buf)?;
     stream.flush()?;
-    let wire = (header.len() + frame.payload.len()) as u64;
     meter.sent.fetch_add(wire, Ordering::Relaxed);
     Ok(wire)
 }
 
 /// Read one frame; returns (frame, wire bytes read).
+///
+/// Driven by the same incremental [`FrameReader`] the reactor uses, with
+/// exact-sized blocking reads: the stream is never read past the end of
+/// the returned frame, so callers that interleave `recv_frame` with
+/// their own peeking (e.g. a `BufReader` idle poll) keep their buffers
+/// coherent.
 pub fn recv_frame(stream: &mut impl Read, meter: &Meter) -> Result<(Frame, u64)> {
-    let mut fixed = [0u8; 7];
-    stream.read_exact(&mut fixed).context("frame header")?;
-    let magic = u32::from_le_bytes(fixed[0..4].try_into().unwrap());
-    ensure!(magic == FRAME_MAGIC, "bad frame magic {magic:#x}");
-    let kind = FrameKind::from_u8(fixed[4])?;
-    let name_len = u16::from_le_bytes(fixed[5..7].try_into().unwrap()) as usize;
-    let mut name = vec![0u8; name_len];
-    stream.read_exact(&mut name)?;
-    let mut len8 = [0u8; 8];
-    stream.read_exact(&mut len8)?;
-    let plen = u64::from_le_bytes(len8);
-    ensure!(plen <= MAX_FRAME, "frame too large: {plen}");
-    // The length header is untrusted: cap the initial allocation and grow
-    // the buffer only as bytes actually arrive, so a malicious 4 GiB
-    // header costs at most MAX_INITIAL_ALLOC before the read fails.
-    let plen = plen as usize;
-    let mut payload = Vec::with_capacity(plen.min(MAX_INITIAL_ALLOC));
-    let mut remaining = plen;
-    while remaining > 0 {
-        let take = remaining.min(READ_CHUNK);
-        let old = payload.len();
-        payload.resize(old + take, 0);
-        stream
-            .read_exact(&mut payload[old..])
-            .context("frame payload")?;
-        remaining -= take;
+    let mut fr = FrameReader::new();
+    loop {
+        if let Some((frame, wire)) = fr.next_frame()? {
+            meter.received.fetch_add(wire, Ordering::Relaxed);
+            return Ok((frame, wire));
+        }
+        fr.fill_from(stream)?;
     }
-    let wire = (7 + name_len + 8 + plen) as u64;
-    meter.received.fetch_add(wire, Ordering::Relaxed);
-    Ok((
-        Frame {
-            kind,
-            name: String::from_utf8(name)?,
-            payload,
-        },
-        wire,
-    ))
+}
+
+// ---------------------------------------------------------------------------
+// incremental (partial-read-tolerant) codec
+// ---------------------------------------------------------------------------
+
+/// Result of scanning a buffered frame prefix.
+enum Scan {
+    /// Bytes missing until the next parse milestone.
+    Need(usize),
+    /// A complete frame occupies `buf[..total]`.
+    Ready { total: usize },
+}
+
+/// Validate and measure the frame at the front of `buf`. Rejections are
+/// eager: bad magic at 4 bytes, unknown kind at 5, an oversized length
+/// header as soon as the 8 length bytes are in.
+fn scan(buf: &[u8]) -> Result<Scan> {
+    if buf.len() >= 4 {
+        let magic = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+        ensure!(magic == FRAME_MAGIC, "bad frame magic {magic:#x}");
+    }
+    if buf.len() >= 5 {
+        FrameKind::from_u8(buf[4])?;
+    }
+    if buf.len() < FIXED_HEADER {
+        return Ok(Scan::Need(FIXED_HEADER - buf.len()));
+    }
+    let name_len = u16::from_le_bytes(buf[5..7].try_into().unwrap()) as usize;
+    let len_end = FIXED_HEADER + name_len + 8;
+    if buf.len() < len_end {
+        return Ok(Scan::Need(len_end - buf.len()));
+    }
+    let plen = u64::from_le_bytes(buf[len_end - 8..len_end].try_into().unwrap());
+    ensure!(plen <= MAX_FRAME, "frame too large: {plen}");
+    let total = len_end + plen as usize;
+    if buf.len() < total {
+        return Ok(Scan::Need(total - buf.len()));
+    }
+    Ok(Scan::Ready { total })
+}
+
+/// Incremental frame parser: feed whatever bytes the socket had — any
+/// split point is fine, including mid-magic — and take complete frames
+/// out. The reactor's connection state machines run on this; the
+/// blocking [`recv_frame`] drives the same parser with exact-sized
+/// reads. The length header is untrusted: the buffer grows only as
+/// bytes actually arrive, capped at [`MAX_INITIAL_ALLOC`] of
+/// pre-reservation, so a malicious 4 GiB header costs almost nothing
+/// before the stream dies.
+#[derive(Debug, Default)]
+pub struct FrameReader {
+    buf: Vec<u8>,
+    /// Whether capacity for the current frame was already reserved (one
+    /// capped reservation per frame, once its length header parses).
+    reserved: bool,
+}
+
+impl FrameReader {
+    pub fn new() -> FrameReader {
+        FrameReader::default()
+    }
+
+    /// Bytes buffered but not yet taken out as frames.
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Bytes needed to reach the next parse milestone (header complete,
+    /// length known, frame complete). 0 when a full frame is already
+    /// buffered or the prefix is invalid (then [`Self::next_frame`]
+    /// reports the error). Feeding more than this is fine — the excess
+    /// belongs to the next frame.
+    pub fn need(&self) -> usize {
+        match scan(&self.buf) {
+            Ok(Scan::Need(n)) => n,
+            _ => 0,
+        }
+    }
+
+    /// Append raw socket bytes. Prefix validation is eager, so a
+    /// poisoned connection fails here rather than at frame completion.
+    pub fn feed(&mut self, bytes: &[u8]) -> Result<()> {
+        self.buf.extend_from_slice(bytes);
+        self.after_feed()
+    }
+
+    /// Blocking helper: read exactly the bytes needed to reach the next
+    /// parse milestone (capped at [`READ_CHUNK`]) into the buffer. Never
+    /// consumes bytes past the current frame.
+    pub fn fill_from(&mut self, stream: &mut impl Read) -> Result<()> {
+        let want = self.need().min(READ_CHUNK);
+        let old = self.buf.len();
+        self.buf.resize(old + want, 0);
+        if let Err(e) = stream.read_exact(&mut self.buf[old..]) {
+            self.buf.truncate(old);
+            let stage = if old < FIXED_HEADER {
+                "frame header"
+            } else {
+                "frame payload"
+            };
+            return Err(e).context(stage);
+        }
+        self.after_feed()
+    }
+
+    fn after_feed(&mut self) -> Result<()> {
+        // One capped capacity reservation per frame, as soon as the
+        // (untrusted) length header is parseable and sane.
+        if !self.reserved && self.buf.len() >= FIXED_HEADER {
+            let name_len = u16::from_le_bytes(self.buf[5..7].try_into().unwrap()) as usize;
+            let len_end = FIXED_HEADER + name_len + 8;
+            if self.buf.len() >= len_end {
+                let plen = u64::from_le_bytes(self.buf[len_end - 8..len_end].try_into().unwrap());
+                if plen <= MAX_FRAME {
+                    let total = len_end + plen as usize;
+                    let grow = total
+                        .saturating_sub(self.buf.len())
+                        .min(MAX_INITIAL_ALLOC);
+                    self.buf.reserve(grow);
+                    self.reserved = true;
+                }
+            }
+        }
+        scan(&self.buf).map(|_| ())
+    }
+
+    /// Take the next complete frame, if one is fully buffered. Returns
+    /// `(frame, wire_len)`; metering is the caller's job (the reactor
+    /// meters on decode, the blocking path in [`recv_frame`]).
+    pub fn next_frame(&mut self) -> Result<Option<(Frame, u64)>> {
+        let total = match scan(&self.buf)? {
+            Scan::Need(_) => return Ok(None),
+            Scan::Ready { total } => total,
+        };
+        let kind = FrameKind::from_u8(self.buf[4])?;
+        let name_len = u16::from_le_bytes(self.buf[5..7].try_into().unwrap()) as usize;
+        let name = String::from_utf8(self.buf[FIXED_HEADER..FIXED_HEADER + name_len].to_vec())?;
+        let payload = self.buf[FIXED_HEADER + name_len + 8..total].to_vec();
+        self.buf.drain(..total);
+        self.reserved = false;
+        Ok(Some((Frame { kind, name, payload }, total as u64)))
+    }
+}
+
+/// Incremental frame encoder for nonblocking sinks: frames are queued
+/// whole (byte-identical to [`send_frame`] — both go through the same
+/// private encoder) and flushed as far as the socket will go. A frame
+/// is added to the meter exactly when its final byte leaves the buffer,
+/// so request/response accounting agrees with the blocking path.
+#[derive(Debug, Default)]
+pub struct FrameWriter {
+    buf: Vec<u8>,
+    pos: usize,
+    /// Per queued frame: (absolute flushed-offset at which it ends, wire len).
+    bounds: std::collections::VecDeque<(u64, u64)>,
+    queued_abs: u64,
+    flushed_abs: u64,
+}
+
+impl FrameWriter {
+    pub fn new() -> FrameWriter {
+        FrameWriter::default()
+    }
+
+    /// Queue one frame for writing.
+    pub fn queue(&mut self, frame: &Frame) -> Result<()> {
+        let wire = encode_frame_into(frame, &mut self.buf)?;
+        self.queued_abs += wire;
+        self.bounds.push_back((self.queued_abs, wire));
+        Ok(())
+    }
+
+    /// Unflushed bytes still queued.
+    pub fn pending(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending() == 0
+    }
+
+    /// Write as much as the sink accepts. `Ok(true)` when fully drained,
+    /// `Ok(false)` when the sink would block.
+    pub fn flush_to(&mut self, w: &mut impl Write, meter: &Meter) -> std::io::Result<bool> {
+        while self.pos < self.buf.len() {
+            match w.write(&self.buf[self.pos..]) {
+                Ok(0) => {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::WriteZero,
+                        "sink accepted 0 bytes",
+                    ))
+                }
+                Ok(n) => {
+                    self.pos += n;
+                    self.flushed_abs += n as u64;
+                    while let Some(&(end, wire)) = self.bounds.front() {
+                        if end > self.flushed_abs {
+                            break;
+                        }
+                        meter.sent.fetch_add(wire, Ordering::Relaxed);
+                        self.bounds.pop_front();
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(false),
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        self.buf.clear();
+        self.pos = 0;
+        Ok(true)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -526,6 +745,60 @@ mod tests {
         let n = buf.len();
         buf[n - 8..].copy_from_slice(&(MAX_FRAME + 1).to_le_bytes());
         assert!(recv_frame(&mut buf.as_slice(), &meter).is_err());
+    }
+
+    #[test]
+    fn frame_reader_takes_multiple_frames_from_one_feed() {
+        let meter = Meter::default();
+        let frames = [
+            frame(FrameKind::Control, "hello", 3),
+            frame(FrameKind::ModelDelta, "m.secB", 777),
+            frame(FrameKind::Ack, "ack", 16),
+        ];
+        let mut wire = Vec::new();
+        for f in &frames {
+            send_frame(&mut wire, f, &meter).unwrap();
+        }
+        let mut fr = FrameReader::new();
+        fr.feed(&wire).unwrap();
+        for f in &frames {
+            let (got, _) = fr.next_frame().unwrap().expect("frame buffered");
+            assert_eq!(&got, f);
+        }
+        assert!(fr.next_frame().unwrap().is_none());
+        assert_eq!(fr.buffered(), 0);
+    }
+
+    #[test]
+    fn frame_writer_matches_send_frame_bytes_and_meter() {
+        let f = frame(FrameKind::ModelPart, "m.secA", 4_321);
+        let blocking_meter = Meter::default();
+        let mut blocking = Vec::new();
+        send_frame(&mut blocking, &f, &blocking_meter).unwrap();
+
+        let incremental_meter = Meter::default();
+        let mut fw = FrameWriter::new();
+        fw.queue(&f).unwrap();
+        assert_eq!(fw.pending(), blocking.len());
+        let mut sink = Vec::new();
+        assert!(fw.flush_to(&mut sink, &incremental_meter).unwrap());
+        assert!(fw.is_empty());
+        assert_eq!(sink, blocking);
+        assert_eq!(
+            incremental_meter.snapshot().0,
+            blocking_meter.snapshot().0,
+            "metered exactly once, at frame completion"
+        );
+    }
+
+    #[test]
+    fn frame_reader_rejects_bad_prefix_eagerly() {
+        let mut fr = FrameReader::new();
+        // wrong magic is refused after only 4 bytes, not at frame end
+        assert!(fr.feed(&[0xde, 0xad, 0xbe, 0xef]).is_err());
+        let mut fr = FrameReader::new();
+        fr.feed(&FRAME_MAGIC.to_le_bytes()).unwrap();
+        assert!(fr.feed(&[99]).is_err(), "unknown kind refused at byte 5");
     }
 
     #[test]

@@ -1,0 +1,268 @@
+//! Connection-storm test for the reactor-based fleet server: thousands
+//! of loopback devices connect, hello, trade advice, and drop — while
+//! the server's OS thread count stays bounded by its worker-pool size
+//! (sessions are state, not threads) and every advice reply matches a
+//! client-side replay of the hysteresis policy.
+//!
+//! Linux-only: it raises `RLIMIT_NOFILE` and counts threads through
+//! `/proc/self/task`. The connection target adapts to the file-
+//! descriptor budget actually granted (each loopback connection costs
+//! two descriptors in-process), so a capped sandbox still exercises the
+//! storm at reduced scale.
+
+#![cfg(target_os = "linux")]
+
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use nestquant::coordinator::{PolicyState, SwitchPolicy, Variant};
+use nestquant::fleet::{FleetConfig, FleetServer, RateLimit, Zoo};
+use nestquant::reactor::raise_nofile_limit;
+use nestquant::telemetry::registry;
+use nestquant::transport::{recv_frame, send_frame, Frame, FrameKind, Meter};
+
+const CLIENT_THREADS: usize = 16;
+
+/// Both tests assert over the process-global telemetry registry, so
+/// they must not interleave.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn control(name: &str, payload: Vec<u8>) -> Frame {
+    Frame {
+        kind: FrameKind::Control,
+        name: name.into(),
+        payload,
+    }
+}
+
+/// Server threads alive right now (reactor loop + workers), identified
+/// by the `nq-` prefix every server-side thread name carries.
+fn server_thread_count() -> usize {
+    std::fs::read_dir("/proc/self/task")
+        .unwrap()
+        .filter_map(|e| std::fs::read_to_string(e.unwrap().path().join("comm")).ok())
+        .filter(|comm| comm.starts_with("nq-"))
+        .count()
+}
+
+/// Connect with retries: under a storm the accept backlog can overflow
+/// transiently, which is exactly the condition being exercised.
+fn connect(addr: SocketAddr) -> TcpStream {
+    let mut delay = Duration::from_millis(1);
+    for _ in 0..60 {
+        match TcpStream::connect(addr) {
+            Ok(s) => {
+                s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+                return s;
+            }
+            Err(_) => {
+                std::thread::sleep(delay);
+                delay = (delay * 2).min(Duration::from_millis(100));
+            }
+        }
+    }
+    panic!("could not connect to {addr} after 60 attempts");
+}
+
+fn hello(sock: &mut TcpStream, device: &str, meter: &Meter) {
+    send_frame(sock, &control("hello", device.as_bytes().to_vec()), meter).unwrap();
+    let (reply, _) = recv_frame(sock, meter).unwrap();
+    assert_eq!(reply.name, "ok", "hello({device}) got {:?}", reply.name);
+}
+
+/// Drive `n` advice round-trips over one connection, asserting each
+/// reply against a client-side replay of the same hysteresis policy.
+fn trade_advice(
+    sock: &mut TcpStream,
+    replay: &mut PolicyState,
+    n: usize,
+    seed: usize,
+    meter: &Meter,
+) {
+    for step in 0..n {
+        // a deterministic level walk that crosses both thresholds
+        let level = match (seed + step) % 7 {
+            0 | 1 | 2 => 0.9,
+            3 | 4 | 5 => 0.1,
+            _ => 0.5,
+        };
+        send_frame(sock, &control("level", level.to_le_bytes().to_vec()), meter).unwrap();
+        let (reply, _) = recv_frame(sock, meter).unwrap();
+        assert_eq!(reply.name, "advice", "level reply: {:?}", reply.name);
+        let expected = replay.decide(level).wire();
+        assert_eq!(
+            reply.payload,
+            expected.as_bytes(),
+            "advice diverged from policy replay at step {step}"
+        );
+    }
+}
+
+#[test]
+fn connection_storm_keeps_threads_bounded_and_advice_exact() {
+    let _guard = SERIAL.lock().unwrap();
+    // each loopback connection costs two descriptors in this process;
+    // leave headroom for the suite's own files and sockets
+    let target: usize = match raise_nofile_limit(65_536) {
+        Ok(limit) => (((limit.saturating_sub(512)) / 2) as usize).min(10_000),
+        Err(_) => 1_000,
+    };
+    assert!(target >= 500, "file-descriptor budget too small to storm");
+
+    let policy = SwitchPolicy::default();
+    let handle = FleetServer::start(
+        Zoo::default(),
+        FleetConfig {
+            policy,
+            ..FleetConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = handle.addr;
+    let accepts0 = registry().reactor.accepts.get();
+    let active0 = registry().reactor.active_connections.get();
+
+    // wave 1: every device connects, identifies itself, and stays online
+    let per_thread = target.div_ceil(CLIENT_THREADS);
+    let sockets: Vec<Vec<TcpStream>> = std::thread::scope(|s| {
+        let workers: Vec<_> = (0..CLIENT_THREADS)
+            .map(|t| {
+                s.spawn(move || {
+                    let meter = Meter::default();
+                    let mut mine = Vec::with_capacity(per_thread);
+                    for i in 0..per_thread {
+                        let mut sock = connect(addr);
+                        hello(&mut sock, &format!("dev-{t}-{i}"), &meter);
+                        // a sample of devices trades advice while the
+                        // rest of the fleet is still connecting
+                        if i % 8 == 0 {
+                            let mut replay = PolicyState::new(policy, Variant::PartBit);
+                            trade_advice(&mut sock, &mut replay, 5, t + i, &meter);
+                        }
+                        mine.push(sock);
+                    }
+                    mine
+                })
+            })
+            .collect();
+        workers.into_iter().map(|w| w.join().unwrap()).collect()
+    });
+    let held: usize = sockets.iter().map(|v| v.len()).sum();
+    assert!(held >= target, "only {held} of {target} connections held");
+
+    // the whole fleet is online: sessions are state, not threads
+    let active = registry().reactor.active_connections.get();
+    assert!(
+        active >= active0 + target as u64,
+        "gauge shows {active} active, expected >= {}",
+        active0 + target as u64
+    );
+    assert!(
+        registry().reactor.accepts.get() >= accepts0 + target as u64,
+        "accept counter did not cover the storm"
+    );
+    let threads = server_thread_count();
+    assert!(
+        (1..=9).contains(&threads),
+        "{threads} nq- threads serving {held} connections (want reactor + <=8 workers)"
+    );
+
+    // storm wave: half the fleet drops at once, new devices keep coming
+    let mut sockets = sockets;
+    for v in sockets.iter_mut() {
+        v.truncate(v.len() / 2);
+    }
+    let survivors: usize = sockets.iter().map(|v| v.len()).sum();
+    let meter = Meter::default();
+    let mut fresh = Vec::new();
+    for i in 0..64 {
+        let mut sock = connect(addr);
+        hello(&mut sock, &format!("late-{i}"), &meter);
+        let mut replay = PolicyState::new(policy, Variant::PartBit);
+        trade_advice(&mut sock, &mut replay, 7, i, &meter);
+        fresh.push(sock);
+    }
+
+    // the reactor reaps the dropped half (readiness-driven EOF, no
+    // timeout sweep needed); poll briefly for the gauge to settle
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let want = active0 + (survivors + fresh.len()) as u64;
+    loop {
+        let now = registry().reactor.active_connections.get();
+        if now <= want || Instant::now() > deadline {
+            assert!(
+                now <= want,
+                "gauge stuck at {now}, expected <= {want} after the drop wave"
+            );
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    // survivors still get exact advice after the churn
+    for (t, v) in sockets.iter_mut().enumerate() {
+        if let Some(sock) = v.first_mut() {
+            // fresh device id: the old one's replay state is long gone
+            hello(sock, &format!("survivor-{t}"), &meter);
+        }
+    }
+
+    drop(sockets);
+    drop(fresh);
+    handle.stop();
+
+    // after a full drain every reactor connection is gone
+    assert_eq!(
+        registry().reactor.active_connections.get(),
+        active0,
+        "connections leaked past shutdown"
+    );
+}
+
+#[test]
+fn per_device_rate_limit_refuses_excess_advice_requests() {
+    let _guard = SERIAL.lock().unwrap();
+    let handle = FleetServer::start(
+        Zoo::default(),
+        FleetConfig {
+            // 2-token burst that effectively never refills: exactly two
+            // advice requests per device get through
+            rate_limit: Some(RateLimit {
+                per_sec: 0.000_001,
+                burst: 2.0,
+            }),
+            ..FleetConfig::default()
+        },
+    )
+    .unwrap();
+    let refused0 = registry().reactor.rate_limited.get();
+
+    let meter = Meter::default();
+    let mut sock = connect(handle.addr);
+    hello(&mut sock, "greedy", &meter);
+    let mut replies = Vec::new();
+    for _ in 0..5 {
+        send_frame(&mut sock, &control("level", 0.5f64.to_le_bytes().to_vec()), &meter).unwrap();
+        let (reply, _) = recv_frame(&mut sock, &meter).unwrap();
+        replies.push((reply.name, reply.payload));
+    }
+    assert_eq!(replies[0].0, "advice");
+    assert_eq!(replies[1].0, "advice");
+    for (name, payload) in &replies[2..] {
+        assert_eq!(name, "error");
+        assert_eq!(payload.as_slice(), b"rate limited");
+    }
+    assert_eq!(registry().reactor.rate_limited.get(), refused0 + 3);
+
+    // a second device has its own bucket
+    let mut other = connect(handle.addr);
+    hello(&mut other, "patient", &meter);
+    send_frame(&mut other, &control("level", 0.5f64.to_le_bytes().to_vec()), &meter).unwrap();
+    let (reply, _) = recv_frame(&mut other, &meter).unwrap();
+    assert_eq!(reply.name, "advice");
+
+    drop(sock);
+    drop(other);
+    handle.stop();
+}

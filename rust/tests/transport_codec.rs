@@ -1,0 +1,214 @@
+//! Incremental frame codec (`FrameReader`/`FrameWriter`) vs the
+//! blocking codec: any byte-level split of the stream must parse to the
+//! same frames, the writer must emit byte-identical wire form, and an
+//! oversized length header must be refused as soon as it is readable.
+
+use std::io::{Cursor, Write};
+
+use nestquant::transport::{
+    recv_frame, send_frame, Frame, FrameKind, FrameReader, FrameWriter, Meter, MAX_FRAME,
+};
+
+/// Wire bytes of `frame` as the blocking codec produces them.
+fn blocking_encode(frame: &Frame) -> Vec<u8> {
+    let mut buf = Vec::new();
+    send_frame(&mut buf, frame, &Meter::default()).unwrap();
+    buf
+}
+
+fn sample_frames() -> Vec<Frame> {
+    vec![
+        Frame {
+            kind: FrameKind::Control,
+            name: "advice".into(),
+            payload: b"upgrade".to_vec(),
+        },
+        // empty name + empty payload: the 15-byte minimum frame
+        Frame {
+            kind: FrameKind::Ack,
+            name: String::new(),
+            payload: Vec::new(),
+        },
+        Frame {
+            kind: FrameKind::ModelDelta,
+            name: "cnn_m_n8h4".into(),
+            payload: (0..=255u8).collect(),
+        },
+    ]
+}
+
+#[test]
+fn every_byte_boundary_split_parses_identically() {
+    for frame in sample_frames() {
+        let wire = blocking_encode(&frame);
+        for split in 0..=wire.len() {
+            let mut reader = FrameReader::new();
+            reader.feed(&wire[..split]).unwrap();
+            if split < wire.len() {
+                assert!(
+                    reader.next_frame().unwrap().is_none(),
+                    "frame complete after only {split}/{} bytes",
+                    wire.len()
+                );
+                reader.feed(&wire[split..]).unwrap();
+            }
+            let (got, got_wire) = reader.next_frame().unwrap().expect("complete frame");
+            assert_eq!(got, frame, "split at byte {split}");
+            assert_eq!(got_wire, wire.len() as u64);
+            assert_eq!(reader.buffered(), 0);
+        }
+    }
+}
+
+#[test]
+fn byte_at_a_time_stream_yields_every_frame_in_order() {
+    let frames = sample_frames();
+    let stream: Vec<u8> = frames.iter().flat_map(|f| blocking_encode(f)).collect();
+
+    let mut reader = FrameReader::new();
+    let mut got = Vec::new();
+    for &b in &stream {
+        reader.feed(&[b]).unwrap();
+        while let Some((frame, _)) = reader.next_frame().unwrap() {
+            got.push(frame);
+        }
+    }
+    assert_eq!(got, frames);
+    assert_eq!(reader.buffered(), 0, "no stray bytes after the last frame");
+}
+
+#[test]
+fn need_counts_down_to_frame_completion() {
+    let frame = &sample_frames()[0];
+    let wire = blocking_encode(frame);
+    let mut reader = FrameReader::new();
+    for (i, &b) in wire.iter().enumerate() {
+        let need = reader.need();
+        assert!(need > 0, "need() zero with only {i} bytes fed");
+        assert!(need <= wire.len() - i);
+        reader.feed(&[b]).unwrap();
+    }
+    assert_eq!(reader.need(), 0);
+}
+
+#[test]
+fn oversized_length_header_is_refused_when_readable() {
+    // magic + kind + name_len=1 + name + an 8-byte length just past the
+    // cap: the reader must fail on feeding the header, before any
+    // payload byte arrives
+    let mut header = Vec::new();
+    header.extend_from_slice(&0x4E51_5458u32.to_le_bytes());
+    header.push(4); // Control
+    header.extend_from_slice(&1u16.to_le_bytes());
+    header.push(b'x');
+    header.extend_from_slice(&(MAX_FRAME + 1).to_le_bytes());
+
+    let mut reader = FrameReader::new();
+    let err = reader.feed(&header).unwrap_err();
+    assert!(
+        err.to_string().contains("frame too large"),
+        "unexpected error: {err:#}"
+    );
+
+    // exactly MAX_FRAME is within protocol bounds: the same header with
+    // the cap value must be accepted (the payload then streams in)
+    let len_at = header.len() - 8;
+    header[len_at..].copy_from_slice(&MAX_FRAME.to_le_bytes());
+    let mut reader = FrameReader::new();
+    reader.feed(&header).unwrap();
+    assert!(reader.next_frame().unwrap().is_none());
+}
+
+#[test]
+fn poisoned_prefix_fails_eagerly() {
+    let mut reader = FrameReader::new();
+    let err = reader.feed(b"oops").unwrap_err();
+    assert!(err.to_string().contains("bad frame magic"));
+
+    let mut reader = FrameReader::new();
+    let mut bytes = 0x4E51_5458u32.to_le_bytes().to_vec();
+    bytes.push(9); // no such kind
+    let err = reader.feed(&bytes).unwrap_err();
+    assert!(err.to_string().contains("unknown frame kind"));
+}
+
+#[test]
+fn writer_matches_blocking_codec_byte_for_byte() {
+    let frames = sample_frames();
+    let expected: Vec<u8> = frames.iter().flat_map(|f| blocking_encode(f)).collect();
+
+    let meter = Meter::default();
+    let mut writer = FrameWriter::new();
+    for f in &frames {
+        writer.queue(f).unwrap();
+    }
+    let mut sink = Vec::new();
+    assert!(writer.flush_to(&mut sink, &meter).unwrap());
+    assert!(writer.is_empty());
+    assert_eq!(sink, expected);
+    assert_eq!(meter.snapshot().0, expected.len() as u64);
+}
+
+/// A sink that accepts at most 3 bytes per call and interposes a
+/// `WouldBlock` between accepting calls, like a congested socket.
+struct Throttled {
+    out: Vec<u8>,
+    ready: bool,
+}
+
+impl Write for Throttled {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        if !self.ready {
+            self.ready = true;
+            return Err(std::io::ErrorKind::WouldBlock.into());
+        }
+        self.ready = false;
+        let n = buf.len().min(3);
+        self.out.extend_from_slice(&buf[..n]);
+        Ok(n)
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+#[test]
+fn interleaved_queue_and_throttled_flush_keeps_frames_intact() {
+    let frames = sample_frames();
+    let wire_a = blocking_encode(&frames[0]);
+
+    let meter = Meter::default();
+    let mut writer = FrameWriter::new();
+    let mut sink = Throttled {
+        out: Vec::new(),
+        ready: false,
+    };
+
+    writer.queue(&frames[0]).unwrap();
+    // flush part of frame 0, then queue the rest mid-stream — frames
+    // must come out whole and in order regardless
+    assert!(!writer.flush_to(&mut sink, &meter).unwrap()); // WouldBlock
+    assert!(!writer.flush_to(&mut sink, &meter).unwrap()); // 3 bytes out
+    assert!(sink.out.len() < wire_a.len());
+    assert_eq!(meter.snapshot().0, 0, "no frame fully flushed yet");
+    writer.queue(&frames[1]).unwrap();
+    writer.queue(&frames[2]).unwrap();
+
+    let mut rounds = 0;
+    while !writer.flush_to(&mut sink, &meter).unwrap() {
+        rounds += 1;
+        assert!(rounds < 10_000, "flush never completed");
+    }
+    let expected: Vec<u8> = frames.iter().flat_map(|f| blocking_encode(f)).collect();
+    assert_eq!(sink.out, expected);
+    assert_eq!(meter.snapshot().0, expected.len() as u64);
+
+    // the blocking reader consumes the throttled writer's stream
+    let mut cursor = Cursor::new(sink.out);
+    let rx = Meter::default();
+    for f in &frames {
+        let (got, _) = recv_frame(&mut cursor, &rx).unwrap();
+        assert_eq!(&got, f);
+    }
+    assert_eq!(rx.snapshot().1, expected.len() as u64);
+}
