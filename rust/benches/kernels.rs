@@ -5,20 +5,26 @@
 //! artifact; `nestquant bench-guard` turns the file into a CI gate
 //! (SIMD must not lose to SWAR on any lane-aligned cell).
 //!
-//! Two operations per nesting config:
+//! Four operations per nesting config:
 //!
 //! * **launch** (part-bit): packed `w_high` → f32.
 //! * **upgrade** (full-bit): packed `w_high` + `w_low` → f32.
+//! * **forward_part** / **forward_full**: one whole forward pass —
+//!   int-domain (activation quant + packed-weight i32 GEMM + scale
+//!   epilogue) per tier vs the f32-decode baseline (SIMD fused decode
+//!   + f32 matmul), in tokens/sec.
 //!
-//! Four cells per op: the legacy multi-pass composition
+//! Four cells per decode op: the legacy multi-pass composition
 //! (`unpack_into` [+ `recompose_into`] + `dequant`) and the fused
 //! one-pass kernel pinned to each tier (`scalar` | `swar` | `simd`)
 //! via `kernels::plan_for` — so the file records both the fused-vs-
 //! legacy win and the per-tier ladder on one machine.
 //!
-//! Throughput denominates in *packed input bytes* (the section bytes a
-//! switch actually moves), so the number is comparable across
-//! bitwidths. Artifact-free; iteration budget capped via
+//! Decode throughput denominates in *packed input bytes* (the section
+//! bytes a switch actually moves), so the number is comparable across
+//! bitwidths; forward throughput denominates in tokens (full passes)
+//! per second, comparing the dequantization-free path against decode-
+//! then-matmul end to end. Artifact-free; iteration budget capped via
 //! `NQ_BENCH_BUDGET_MS` (see `Bench::from_env`).
 
 use nestquant::bits::{self, int_range, packed_nbytes, PackedTensor};
@@ -33,6 +39,9 @@ use nestquant::util::prng::Rng;
 /// for a capped CI budget.
 const ELEMS: usize = 1 << 18;
 const CHANNELS: usize = 64;
+/// Forward-pass shape: `ROWS` input features against `CHANNELS`
+/// classes — exactly the `ELEMS` weight tensor, channel-fastest.
+const ROWS: usize = ELEMS / CHANNELS;
 
 struct Cell {
     n: u8,
@@ -43,6 +52,17 @@ struct Cell {
     aligned: bool,
     legacy_bps: f64,
     tier_bps: [f64; 3], // scalar, swar, simd
+}
+
+/// One whole forward pass per measurement: int-domain tier ladder vs
+/// the f32-decode reference, in tokens (passes) per second.
+struct FwdCell {
+    n: u8,
+    h: u8,
+    op: &'static str,
+    aligned: bool,
+    f32_decode_tps: f64,
+    tier_tps: [f64; 3], // scalar, swar, simd
 }
 
 /// One nesting config: build a synthetic tensor, time every cell.
@@ -138,6 +158,121 @@ fn bench_config(b: &Bench, n: u8, h: u8, cells: &mut Vec<Cell>) {
     cells.push(upgrade);
 }
 
+/// Forward-pass cells: the tenant's two inference paths, end to end.
+///
+/// The int-domain side mirrors `NestTenant::forward_int` exactly —
+/// activation RTN quant, packed-weight i32 GEMM per tier, per-class
+/// scale epilogue (part-bit folds `2^l` into the scale; full-bit
+/// recomposes `(hi << l) + lo` on i64 accumulators). The baseline is
+/// what `ForwardMode::F32Decode` runs: the fused SIMD decode followed
+/// by an f32 matmul over the materialized weights.
+fn bench_forward(b: &Bench, n: u8, h: u8, cells: &mut Vec<FwdCell>) {
+    let cfg = NestConfig::new(n, h).unwrap();
+    let mut rng = Rng::new(0xF052D ^ ((n as u64) << 8) ^ h as u64);
+    let (lo, hi) = int_range(n);
+    let w_int: Vec<i32> = (0..ELEMS)
+        .map(|_| rng.int(lo as i64, hi as i64) as i32)
+        .collect();
+    let scales: Vec<f32> = (0..CHANNELS)
+        .map(|_| (rng.f64() * 0.05 + 1e-4) as f32)
+        .collect();
+    let x: Vec<f32> = (0..ROWS).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+    let (hs, ls) = nest::decompose(&w_int, cfg, Rounding::BitShift, true);
+    let th = PackedTensor::pack(&hs, h).unwrap();
+    let tl = PackedTensor::pack(&ls, cfg.low_bits()).unwrap();
+    let (hb, lb) = (th.to_le_bytes(), tl.to_le_bytes());
+    let simd = kernels::plan_for(Tier::Simd);
+
+    let mut x_int: Vec<i32> = Vec::with_capacity(ROWS);
+    let mut acc_hi: Vec<i32> = Vec::with_capacity(CHANNELS);
+    let mut acc_lo: Vec<i32> = Vec::with_capacity(CHANNELS);
+    let mut weights: Vec<f32> = Vec::with_capacity(ELEMS);
+    let mut logits = [0f32; CHANNELS];
+
+    // --- forward_part: x · dequant(w_high) ----------------------------
+    let mut part = FwdCell {
+        n,
+        h,
+        op: "forward_part",
+        aligned: kernels::swar_aligned(h),
+        f32_decode_tps: 0.0,
+        tier_tps: [0.0; 3],
+    };
+    for (i, tier) in Tier::all().into_iter().enumerate() {
+        let plan = kernels::plan_for(tier);
+        let label = format!("INT({n}|{h}) fwd-part INT {}", tier.label().to_uppercase());
+        let s = b.run(&label, || {
+            let sx = quant::quantize_activations(&x, n, &mut x_int);
+            plan.gemm_i32_into(&hb, h, &x_int, CHANNELS, &mut acc_hi);
+            for (o, (&a, &sc)) in logits.iter_mut().zip(acc_hi.iter().zip(scales.iter())) {
+                *o = a as f32 * (sx * (cfg.scale_inflation() * sc));
+            }
+            std::hint::black_box(&logits);
+        });
+        part.tier_tps[i] = 1.0 / s.min.as_secs_f64();
+    }
+    let s = b.run(&format!("INT({n}|{h}) fwd-part F32-DECODE"), || {
+        simd.unpack_dequant_into(&hb, h, ELEMS, &scales, cfg.scale_inflation(), &mut weights);
+        logits.fill(0.0);
+        for (r, &xv) in x.iter().enumerate() {
+            let row = &weights[r * CHANNELS..(r + 1) * CHANNELS];
+            for (o, &w) in logits.iter_mut().zip(row) {
+                *o += xv * w;
+            }
+        }
+        std::hint::black_box(&logits);
+    });
+    part.f32_decode_tps = 1.0 / s.min.as_secs_f64();
+    cells.push(part);
+
+    // --- forward_full: x · dequant(w_high·2^l + w_low) ----------------
+    let mut full = FwdCell {
+        n,
+        h,
+        op: "forward_full",
+        aligned: kernels::swar_aligned(h) && kernels::swar_aligned(cfg.low_bits()),
+        f32_decode_tps: 0.0,
+        tier_tps: [0.0; 3],
+    };
+    for (i, tier) in Tier::all().into_iter().enumerate() {
+        let plan = kernels::plan_for(tier);
+        let label = format!("INT({n}|{h}) fwd-full INT {}", tier.label().to_uppercase());
+        let s = b.run(&label, || {
+            let sx = quant::quantize_activations(&x, n, &mut x_int);
+            plan.gemm_i32_into(&hb, h, &x_int, CHANNELS, &mut acc_hi);
+            plan.gemm_i32_into(&lb, cfg.low_bits(), &x_int, CHANNELS, &mut acc_lo);
+            for (c, o) in logits.iter_mut().enumerate() {
+                let v = ((acc_hi[c] as i64) << cfg.l()) + acc_lo[c] as i64;
+                *o = v as f32 * (sx * scales[c]);
+            }
+            std::hint::black_box(&logits);
+        });
+        full.tier_tps[i] = 1.0 / s.min.as_secs_f64();
+    }
+    let s = b.run(&format!("INT({n}|{h}) fwd-full F32-DECODE"), || {
+        simd.recompose_dequant_into(
+            &hb,
+            h,
+            &lb,
+            cfg.low_bits(),
+            cfg.l(),
+            ELEMS,
+            &scales,
+            &mut weights,
+        );
+        logits.fill(0.0);
+        for (r, &xv) in x.iter().enumerate() {
+            let row = &weights[r * CHANNELS..(r + 1) * CHANNELS];
+            for (o, &w) in logits.iter_mut().zip(row) {
+                *o += xv * w;
+            }
+        }
+        std::hint::black_box(&logits);
+    });
+    full.f32_decode_tps = 1.0 / s.min.as_secs_f64();
+    cells.push(full);
+}
+
 fn main() {
     let b = Bench::from_env();
     // (7|4)/(11|8): both streams lane-aligned (paired SWAR); (8|4)/(16|8):
@@ -146,8 +281,10 @@ fn main() {
     let configs: [(u8, u8); 8] =
         [(8, 4), (8, 5), (8, 6), (6, 3), (16, 8), (7, 3), (7, 4), (11, 8)];
     let mut cells = Vec::new();
+    let mut fwd_cells = Vec::new();
     for (n, h) in configs {
         bench_config(&b, n, h, &mut cells);
+        bench_forward(&b, n, h, &mut fwd_cells);
     }
 
     let mut rows = Vec::new();
@@ -178,8 +315,8 @@ fn main() {
             _ => simd_bps >= 0.9 * c.legacy_bps,
         };
         rows.push(json::obj(vec![
-            ("n", json::num(c.n as f64)),
-            ("h", json::num(c.h as f64)),
+            ("n", json::uint(c.n as u64)),
+            ("h", json::uint(c.h as u64)),
             ("op", json::str_(c.op)),
             ("aligned", json::bool_(c.aligned)),
             ("legacy_bytes_per_s", json::num(c.legacy_bps)),
@@ -191,17 +328,52 @@ fn main() {
         ]));
     }
 
+    for c in &fwd_cells {
+        let [scalar_tps, swar_tps, simd_tps] = c.tier_tps;
+        let vs_f32 = simd_tps / c.f32_decode_tps;
+        let vs_swar = simd_tps / swar_tps;
+        println!(
+            "bench: INT({}|{}) {:<12} f32-decode {:>8.1}  int scalar {:>8.1}  \
+             int swar {:>8.1}  int simd {:>8.1} tok/s  simd/swar {vs_swar:.2}x  \
+             int/f32 {vs_f32:.2}x{}",
+            c.n,
+            c.h,
+            c.op,
+            c.f32_decode_tps,
+            scalar_tps,
+            swar_tps,
+            simd_tps,
+            if c.aligned { "  [aligned]" } else { "" }
+        );
+        rows.push(json::obj(vec![
+            ("n", json::uint(c.n as u64)),
+            ("h", json::uint(c.h as u64)),
+            ("op", json::str_(c.op)),
+            ("aligned", json::bool_(c.aligned)),
+            ("f32_decode_tokens_per_s", json::num(c.f32_decode_tps)),
+            ("scalar_tokens_per_s", json::num(scalar_tps)),
+            ("swar_tokens_per_s", json::num(swar_tps)),
+            ("simd_tokens_per_s", json::num(simd_tps)),
+            ("int_simd_vs_swar", json::num(vs_swar)),
+            ("int_simd_vs_f32_decode", json::num(vs_f32)),
+        ]));
+    }
+
     let doc = json::obj(vec![
-        ("elements", json::num(ELEMS as f64)),
-        ("channels", json::num(CHANNELS as f64)),
+        ("elements", json::uint(ELEMS as u64)),
+        ("channels", json::uint(CHANNELS as u64)),
+        ("rows", json::uint(ROWS as u64)),
         ("simd_path", json::str_(kernels::plan_for(Tier::Simd).path)),
         ("cells", json::arr(rows)),
         (
             "note",
             json::str_(
-                "packed-input bytes/sec per (bitwidth, op, tier): legacy multi-pass \
-                 composition vs the fused kernel pinned to each dispatch tier; \
-                 best-of-iterations per cell. Gate with `nestquant bench-guard`.",
+                "launch/upgrade: packed-input bytes/sec per (bitwidth, op, tier) — \
+                 legacy multi-pass composition vs the fused kernel pinned to each \
+                 dispatch tier. forward_part/forward_full: whole forward passes \
+                 (tokens)/sec — int-domain GEMM per tier vs the f32-decode+matmul \
+                 baseline. Best-of-iterations per cell. Gate with `nestquant \
+                 bench-guard`.",
             ),
         ),
     ]);
@@ -209,13 +381,19 @@ fn main() {
     std::fs::write(out, json::to_string(&doc)).unwrap();
     println!("bench: wrote {out} (simd path: {})", kernels::plan_for(Tier::Simd).path);
 
-    // hard gate #1 (in-bench): the fused one-pass path never loses to
-    // the four-pass composition it replaced. Gate #2 (simd vs swar on
-    // lane-aligned cells) lives in `nestquant bench-guard`, which CI
-    // runs against the file just written.
+    // hard gate #1 (in-bench, launch/upgrade cells only): the fused
+    // one-pass path never loses to the four-pass composition it
+    // replaced. Gate #2 (simd vs swar on lane-aligned cells) and the
+    // forward-cell gates (int simd vs int swar, int vs f32-decode)
+    // live in `nestquant bench-guard`, which CI runs against the file
+    // just written.
     assert!(
         fused_holds,
         "fused kernel lost to the legacy composition on at least one cell — see {out}"
     );
-    println!("bench: fused holds the gate on all {} cells", cells.len());
+    println!(
+        "bench: fused holds the gate on all {} decode cells ({} forward cells recorded)",
+        cells.len(),
+        fwd_cells.len()
+    );
 }

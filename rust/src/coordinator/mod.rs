@@ -34,7 +34,7 @@ pub use manager::{ModelManager, State, SwitchCost, Variant};
 pub use metrics::Metrics;
 pub use policy::{Decision, PolicyState, SwitchPolicy};
 pub use server::TenantExecutor;
-pub use tenant::NestTenant;
+pub use tenant::{ForwardMode, NestTenant};
 
 use crate::device::{DeviceProfile, MemoryLedger, ResourceTrace, RPI_4B};
 use crate::runtime::{Engine, Manifest};

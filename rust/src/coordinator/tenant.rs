@@ -4,16 +4,32 @@
 //!
 //! [`NestTenant`] serves a deterministic *reference forward*: a linear
 //! probe `logits = x·W + b` over the archive's first 2-D quantized
-//! tensor (dequantized exactly the way `ModelManager` does — inflated
-//! scales for part-bit, recomposed `w_high·2^l + w_low` for full-bit).
-//! It is not the paper's CNN; it exists so the serving layer's claims —
-//! id routing, per-tenant batching, switch atomicity, budget eviction —
-//! are *numerically* checkable offline: every reply must equal the
-//! part-bit or the full-bit baseline for its model bit-for-bit, so a
-//! torn switch or a cross-tenant routing slip shows up as a wrong
-//! float, not a narrated assertion (`tests/serving.rs`). With
-//! `--features pjrt` and built artifacts, [`Coordinator`]-backed
+//! tensor. It is not the paper's CNN; it exists so the serving layer's
+//! claims — id routing, per-tenant batching, switch atomicity, budget
+//! eviction — are *numerically* checkable offline: every reply must
+//! equal the part-bit or the full-bit baseline for its model
+//! bit-for-bit, so a torn switch or a cross-tenant routing slip shows
+//! up as a wrong float, not a narrated assertion (`tests/serving.rs`).
+//! With `--features pjrt` and built artifacts, [`Coordinator`]-backed
 //! tenants serve the real graphs through the same router.
+//!
+//! # Forward modes
+//!
+//! The default forward is **integer-domain** ([`ForwardMode::IntDomain`]):
+//! activations are RTN-quantized per image, the matmul runs over the
+//! *packed* weight stream (`store::PackedView::gemm_i32_into` — no
+//! decode pass, no f32 weight vector ever allocated), and the scales
+//! fold into one per-class epilogue — `s_x·2^l·s_w · acc_high` for
+//! part-bit (Eq. 10) and `s_x·s_w · (acc_high·2^l + acc_low)` for
+//! full-bit (Eq. 6), with the recomposition done on the i64
+//! *accumulators* rather than per weight. Upgrade really is "attach
+//! bytes": the full-bit forward reads the same section-B words the
+//! budget just attached. [`ForwardMode::F32Decode`] keeps the legacy
+//! decode-then-matmul path (dequantized exactly the way `ModelManager`
+//! does — inflated scales for part-bit, recomposed `w_high·2^l + w_low`
+//! for full-bit); `NQ_FORWARD=f32` selects it process-wide, and the
+//! differential tests pin both to prove they agree within the
+//! activation-quantization error bound.
 //!
 //! Eviction semantics: when another tenant's upgrade evicts this
 //! tenant's Section-B bytes from the shared budget, the next batch
@@ -34,10 +50,42 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::container::Kind;
 use crate::nest::NestConfig;
+use crate::quant;
 use crate::store::{ModelStore, NqArchive, PayloadView, StoreBudget};
 
 use super::server::TenantExecutor;
 use super::{Decision, SwitchCost, Variant};
+
+/// How a [`NestTenant`] computes its forward (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ForwardMode {
+    /// Dequantization-free: quantized activations × packed weights in
+    /// i32, scales folded into a per-class epilogue. The default.
+    IntDomain,
+    /// Legacy: decode the active variant to f32 once per switch, then
+    /// an f32 matmul per batch. `NQ_FORWARD=f32` selects this.
+    F32Decode,
+}
+
+/// Resolve the `NQ_FORWARD` override (`"f32"` → [`ForwardMode::F32Decode`],
+/// anything else or unset → the integer-domain default).
+fn forward_mode_from_env() -> ForwardMode {
+    match std::env::var("NQ_FORWARD").ok().as_deref() {
+        Some(s) if s.eq_ignore_ascii_case("f32") => ForwardMode::F32Decode,
+        _ => ForwardMode::IntDomain,
+    }
+}
+
+/// Activation bitwidth for the int-domain forward: the layout's
+/// `act_bits` when it names a packable width, else INT8 (archives
+/// written before activation metadata carry 0 there).
+fn act_bits_or_default(layout_bits: u8) -> u8 {
+    if (2..=16).contains(&layout_bits) {
+        layout_bits
+    } else {
+        8
+    }
+}
 
 /// One nest archive served through the reference forward.
 pub struct NestTenant {
@@ -53,24 +101,47 @@ pub struct NestTenant {
     /// Index of the served 2-D quantized tensor in the layout.
     w_idx: usize,
     variant: Variant,
+    mode: ForwardMode,
+    /// Activation quantization width for the int-domain forward.
+    act_bits: u8,
     /// Dequantized serving weights for the active variant
-    /// (`rows * classes`, row-major, channel fastest).
+    /// (`rows * classes`, row-major, channel fastest). **Always empty
+    /// in [`ForwardMode::IntDomain`]** — the whole point.
     weights: Vec<f32>,
     bias: Vec<f32>,
     forced_downgrades: u64,
     /// Raw per-channel scales, reused across switches (the fused
     /// kernels take them as-is — no inflated copy, no i32 scratch).
     scratch_scales: Vec<f32>,
+    /// Int-domain scratch: quantized activations for one image.
+    x_int: Vec<i32>,
+    /// Int-domain scratch: `w_high` accumulators, one per class.
+    acc_hi: Vec<i32>,
+    /// Int-domain scratch: `w_low` accumulators (full-bit only).
+    acc_lo: Vec<i32>,
 }
 
 impl NestTenant {
     /// Serve `archive` as `id` with `batch_size`-padded batches, paging
     /// section B through `budget`. Launches part-bit (section A only).
+    /// The forward mode comes from `NQ_FORWARD` (default: int-domain).
     pub fn from_archive(
         id: impl Into<String>,
         archive: Arc<NqArchive>,
         budget: Arc<StoreBudget>,
         batch_size: usize,
+    ) -> Result<NestTenant> {
+        Self::with_mode(id, archive, budget, batch_size, forward_mode_from_env())
+    }
+
+    /// [`from_archive`](Self::from_archive) with an explicit forward
+    /// mode (differential tests pin both sides regardless of env).
+    pub fn with_mode(
+        id: impl Into<String>,
+        archive: Arc<NqArchive>,
+        budget: Arc<StoreBudget>,
+        batch_size: usize,
+        mode: ForwardMode,
     ) -> Result<NestTenant> {
         let id = id.into();
         ensure!(batch_size > 0, "{id}: batch_size must be positive");
@@ -94,6 +165,7 @@ impl NestTenant {
             .tensors()
             .iter()
             .position(|t| !t.is_quantized() && t.count() == classes);
+        let act_bits = act_bits_or_default(layout.act_bits());
         let mut tenant = NestTenant {
             id,
             archive,
@@ -104,10 +176,15 @@ impl NestTenant {
             classes,
             w_idx,
             variant: Variant::PartBit,
+            mode,
+            act_bits,
             weights: Vec::new(),
             bias: vec![0.0; classes],
             forced_downgrades: 0,
             scratch_scales: Vec::new(),
+            x_int: Vec::new(),
+            acc_hi: Vec::new(),
+            acc_lo: Vec::new(),
         };
         if let Some(b_idx) = bias {
             let part = tenant.archive.part_bit()?;
@@ -117,11 +194,23 @@ impl NestTenant {
             tenant.bias = v.to_vec();
         }
         tenant.rebuild(Variant::PartBit)?;
+        if tenant.mode == ForwardMode::IntDomain && tenant.scratch_scales.len() != tenant.classes {
+            // the int epilogue folds one scale per class; an archive
+            // whose scale vector doesn't line up with the class axis
+            // serves through the decode path instead of failing
+            tenant.mode = ForwardMode::F32Decode;
+            tenant.rebuild(Variant::PartBit)?;
+        }
         Ok(tenant)
     }
 
     pub fn id(&self) -> &str {
         &self.id
+    }
+
+    /// The forward mode this tenant resolved to.
+    pub fn mode(&self) -> ForwardMode {
+        self.mode
     }
 
     /// The shared archive handle (byte accounting, residency).
@@ -134,14 +223,20 @@ impl NestTenant {
         self.forced_downgrades
     }
 
-    /// Dequantize the active variant's weights from the archive views
-    /// into the serving buffer — one fused kernel pass straight from
-    /// the section bytes (`crate::kernels`). Part-bit reads only
-    /// resident section-A bytes; full-bit requires section B already
-    /// attached (through the budget — this method never attaches behind
-    /// its back).
+    /// Activate a variant. In [`ForwardMode::F32Decode`] this
+    /// dequantizes the variant's weights from the archive views into
+    /// the serving buffer — one fused kernel pass straight from the
+    /// section bytes (`crate::kernels`). In [`ForwardMode::IntDomain`]
+    /// no decode happens at all: the views are validated and the scales
+    /// cached, and the per-batch forward reads the packed words
+    /// directly — switching really is just section residency. Part-bit
+    /// reads only resident section-A bytes; full-bit requires section B
+    /// already attached (through the budget — this method never
+    /// attaches behind its back).
     fn rebuild(&mut self, variant: Variant) -> Result<()> {
+        let decode = self.mode == ForwardMode::F32Decode;
         let mut w = std::mem::take(&mut self.weights);
+        w.clear();
         match variant {
             Variant::PartBit => {
                 let model = self.archive.part_bit()?;
@@ -150,8 +245,10 @@ impl NestTenant {
                     bail!("{}: served tensor is not a nest payload", self.id);
                 };
                 scales.read_into(&mut self.scratch_scales);
-                let inflate = self.cfg.scale_inflation();
-                w_high.unpack_dequant_into(&self.scratch_scales, inflate, &mut w);
+                if decode {
+                    let inflate = self.cfg.scale_inflation();
+                    w_high.unpack_dequant_into(&self.scratch_scales, inflate, &mut w);
+                }
             }
             Variant::FullBit => {
                 ensure!(
@@ -169,7 +266,14 @@ impl NestTenant {
                     bail!("{}: full-bit view is missing w_low", self.id);
                 };
                 scales.read_into(&mut self.scratch_scales);
-                w_high.recompose_dequant_into(&w_low, self.cfg.l(), &self.scratch_scales, &mut w);
+                if decode {
+                    w_high.recompose_dequant_into(
+                        &w_low,
+                        self.cfg.l(),
+                        &self.scratch_scales,
+                        &mut w,
+                    );
+                }
             }
         }
         self.weights = w;
@@ -184,6 +288,102 @@ impl NestTenant {
             return self.rebuild(Variant::PartBit);
         }
         Ok(())
+    }
+
+    /// The legacy f32 forward: batch matmul over the decoded weights.
+    fn forward_f32(&self, input: &[f32]) -> Vec<f32> {
+        // reference forward: logits = x · W + b, accumulation order
+        // fixed so replies are bit-comparable against baselines
+        let mut out = vec![0f32; self.batch * self.classes];
+        for (img, row) in input
+            .chunks_exact(self.rows)
+            .zip(out.chunks_exact_mut(self.classes))
+        {
+            row.copy_from_slice(&self.bias);
+            for (r, &x) in img.iter().enumerate() {
+                let wrow = &self.weights[r * self.classes..(r + 1) * self.classes];
+                for (o, &wv) in row.iter_mut().zip(wrow) {
+                    *o += x * wv;
+                }
+            }
+        }
+        out
+    }
+
+    /// The dequantization-free forward: per image, RTN-quantize the
+    /// activations, GEMV over the *packed* weight words, and fold every
+    /// scale into one per-class epilogue. Part-bit computes
+    /// `b + s_x·(2^l·s_w) · acc_high` (Eq. 10); full-bit recomposes on
+    /// the accumulators — `b + s_x·s_w · (acc_high·2^l + acc_low)`
+    /// (Eq. 6) — so upgrade work is one extra GEMV over the attached
+    /// section-B words, never a decode.
+    fn forward_int(&mut self, input: &[f32]) -> Result<Vec<f32>> {
+        let mut out = vec![0f32; self.batch * self.classes];
+        let mut x_int = std::mem::take(&mut self.x_int);
+        let mut acc_hi = std::mem::take(&mut self.acc_hi);
+        let mut acc_lo = std::mem::take(&mut self.acc_lo);
+        let res = (|| -> Result<()> {
+            match self.variant {
+                Variant::PartBit => {
+                    let model = self.archive.part_bit()?;
+                    let PayloadView::Nest { w_high, .. } = model.tensor(self.w_idx).payload()
+                    else {
+                        bail!("{}: served tensor is not a nest payload", self.id);
+                    };
+                    let inflate = self.cfg.scale_inflation();
+                    for (img, row) in input
+                        .chunks_exact(self.rows)
+                        .zip(out.chunks_exact_mut(self.classes))
+                    {
+                        let sx = quant::quantize_activations(img, self.act_bits, &mut x_int);
+                        w_high.gemm_i32_into(&x_int, self.classes, &mut acc_hi);
+                        for (c, o) in row.iter_mut().enumerate() {
+                            *o = self.bias[c]
+                                + acc_hi[c] as f32 * (sx * (inflate * self.scratch_scales[c]));
+                        }
+                    }
+                }
+                Variant::FullBit => {
+                    let model = self.archive.full_bit()?;
+                    let PayloadView::Nest {
+                        w_high,
+                        w_low: Some(w_low),
+                        ..
+                    } = model.tensor(self.w_idx).payload()
+                    else {
+                        bail!("{}: full-bit view is missing w_low", self.id);
+                    };
+                    let l = self.cfg.l();
+                    for (img, row) in input
+                        .chunks_exact(self.rows)
+                        .zip(out.chunks_exact_mut(self.classes))
+                    {
+                        let sx = quant::quantize_activations(img, self.act_bits, &mut x_int);
+                        w_high.gemm_i32_into(&x_int, self.classes, &mut acc_hi);
+                        w_low.gemm_i32_into(&x_int, self.classes, &mut acc_lo);
+                        for (c, o) in row.iter_mut().enumerate() {
+                            // recompose on the accumulators (i64: the
+                            // shifted i32 sum can exceed i32)
+                            let v = ((acc_hi[c] as i64) << l) + acc_lo[c] as i64;
+                            *o = self.bias[c] + v as f32 * (sx * self.scratch_scales[c]);
+                        }
+                    }
+                }
+            }
+            Ok(())
+        })();
+        self.x_int = x_int;
+        self.acc_hi = acc_hi;
+        self.acc_lo = acc_lo;
+        res?;
+        // Mirror rebuild's post-check: if an eviction raced this batch,
+        // `full_bit()` above re-fetched section B outside the budget's
+        // ledger — hand the bytes back; `reconcile` downgrades us before
+        // the next batch.
+        if self.variant == Variant::FullBit && !self.budget.is_resident(&self.id) {
+            self.archive.release_b();
+        }
+        Ok(out)
     }
 
     /// Observe budget eviction: a full-bit tenant whose B bytes are
@@ -220,22 +420,10 @@ impl TenantExecutor for NestTenant {
         if self.variant == Variant::FullBit {
             self.budget.touch(&self.id);
         }
-        // reference forward: logits = x · W + b, accumulation order
-        // fixed so replies are bit-comparable against baselines
-        let mut out = vec![0f32; self.batch * self.classes];
-        for (img, row) in input
-            .chunks_exact(self.rows)
-            .zip(out.chunks_exact_mut(self.classes))
-        {
-            row.copy_from_slice(&self.bias);
-            for (r, &x) in img.iter().enumerate() {
-                let wrow = &self.weights[r * self.classes..(r + 1) * self.classes];
-                for (o, &wv) in row.iter_mut().zip(wrow) {
-                    *o += x * wv;
-                }
-            }
+        match self.mode {
+            ForwardMode::F32Decode => Ok(self.forward_f32(input)),
+            ForwardMode::IntDomain => self.forward_int(input),
         }
-        Ok(out)
     }
 
     fn switch(&mut self, decision: Decision) -> Result<Option<SwitchCost>> {
@@ -339,12 +527,26 @@ pub fn nest_tenants_from_dir(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bits::int_range;
     use crate::container::synthetic_nest;
 
     fn tenant(seed: u64, budget: &Arc<StoreBudget>) -> NestTenant {
         let c = synthetic_nest(seed, 8, 4, 32, 6).unwrap();
         let archive = Arc::new(NqArchive::from_container(&c).unwrap());
         NestTenant::from_archive(format!("t{seed}"), archive, Arc::clone(budget), 2).unwrap()
+    }
+
+    fn tenant_mode(
+        seed: u64,
+        n: u8,
+        h: u8,
+        budget: &Arc<StoreBudget>,
+        mode: ForwardMode,
+    ) -> NestTenant {
+        let c = synthetic_nest(seed, n, h, 32, 6).unwrap();
+        let archive = Arc::new(NqArchive::from_container(&c).unwrap());
+        let id = format!("m{seed}-{n}-{h}-{mode:?}");
+        NestTenant::with_mode(id, archive, Arc::clone(budget), 2, mode).unwrap()
     }
 
     #[test]
@@ -398,5 +600,69 @@ mod tests {
         let s = a.archive().stats();
         assert_eq!(s.a_fetches, 1);
         assert_eq!(s.layout_parses, 1);
+    }
+
+    #[test]
+    fn int_domain_never_materializes_f32_weights() {
+        let budget = Arc::new(StoreBudget::new(u64::MAX));
+        let mut t = tenant_mode(5, 8, 4, &budget, ForwardMode::IntDomain);
+        assert_eq!(t.mode(), ForwardMode::IntDomain);
+        let input: Vec<f32> = (0..64).map(|i| (i as f32 / 40.0) - 0.7).collect();
+        assert!(t.weights.is_empty(), "no f32 weights at launch");
+        t.run_batch(&input).unwrap();
+        t.switch(Decision::SwitchTo(Variant::FullBit)).unwrap();
+        t.run_batch(&input).unwrap();
+        t.switch(Decision::SwitchTo(Variant::PartBit)).unwrap();
+        t.run_batch(&input).unwrap();
+        assert!(
+            t.weights.is_empty() && t.weights.capacity() == 0,
+            "int-domain tenants must never allocate the f32 weight buffer"
+        );
+    }
+
+    /// The int-domain forward against the f32-decode reference, part-
+    /// and full-bit, across nest configs: the only divergence allowed
+    /// is activation quantization, so each logit must sit within the
+    /// analytic RTN bound `0.5·s_x·Σ_r|w̃[r][c]|` (plus f32 slop).
+    #[test]
+    fn int_forward_matches_f32_reference_within_activation_bound() {
+        let budget = Arc::new(StoreBudget::new(u64::MAX));
+        for (seed, n, h) in [(11u64, 8u8, 4u8), (12, 8, 5), (13, 6, 3), (14, 16, 8), (15, 7, 3)] {
+            let mut ti = tenant_mode(seed, n, h, &budget, ForwardMode::IntDomain);
+            let mut tf = tenant_mode(seed, n, h, &budget, ForwardMode::F32Decode);
+            let input: Vec<f32> = (0..64)
+                .map(|i| ((i * 7 + seed as usize) % 29) as f32 / 14.0 - 1.0)
+                .collect();
+            for variant in [Variant::PartBit, Variant::FullBit] {
+                if variant == Variant::FullBit {
+                    ti.switch(Decision::SwitchTo(Variant::FullBit)).unwrap();
+                    tf.switch(Decision::SwitchTo(Variant::FullBit)).unwrap();
+                    assert_eq!(ti.variant(), Variant::FullBit);
+                    assert_eq!(tf.variant(), Variant::FullBit);
+                }
+                let got = ti.run_batch(&input).unwrap();
+                let want = tf.run_batch(&input).unwrap();
+                let (_, act_hi) = int_range(ti.act_bits);
+                let (batch, rows, classes) = ti.shape();
+                for b in 0..batch {
+                    let img = &input[b * rows..(b + 1) * rows];
+                    let amax = img.iter().fold(0f32, |a, &v| a.max(v.abs()));
+                    let sx = amax.max(1e-12) / act_hi as f32;
+                    for c in 0..classes {
+                        // Σ_r |w̃[r][c]| from the f32 tenant's decoded copy
+                        let wsum: f32 = (0..rows)
+                            .map(|r| tf.weights[r * classes + c].abs())
+                            .sum();
+                        let bound = 0.5 * sx * wsum * 1.001 + 1e-4;
+                        let diff = (got[b * classes + c] - want[b * classes + c]).abs();
+                        assert!(
+                            diff <= bound,
+                            "INT({n}|{h}) {variant:?} b={b} c={c}: |{}| > {bound}",
+                            diff
+                        );
+                    }
+                }
+            }
+        }
     }
 }

@@ -1,0 +1,172 @@
+//! Integer-domain GEMV: `acc[c] = Σ_r x[r] · w[r·classes + c]` computed
+//! straight from the packed section bytes — the dequantization-free
+//! forward (DQT-style nested integer arithmetic). The weight matrix is
+//! the usual channel-fastest layout (`rows × classes`, element
+//! `r·classes + c`), exactly the flat element order of the packed
+//! stream, so the matmul walks the stream once, front to back, and no
+//! f32 weight vector and no unpacked i32 vector ever exists.
+//!
+//! Contract shared by every tier (and required for bit-identity):
+//!
+//! * accumulation is **wrapping i32** — SIMD multiply/add lanes wrap,
+//!   so the scalar reference wraps too; all tiers agree on every input,
+//!   including adversarial full-range ones,
+//! * accumulation order per output channel is ascending `r` (each
+//!   channel's sum sees the rows in the same order in every tier —
+//!   integer adds commute, but the wrapping contract is easiest to
+//!   audit when the order is fixed too),
+//! * `acc` arrives zeroed with `acc.len() == classes` (the vtable entry
+//!   in `kernels::mod` owns clearing/validation/telemetry).
+//!
+//! The scale never appears here: callers fold `s_x · s_w` (and the
+//! part-bit `2^l` inflation) into one f32 rescale of the i32
+//! accumulators — Eq. 10's `s·2^l·w_high` and Eq. 6's
+//! `s·(w_high·2^l + w_low)` become epilogues over `classes` values
+//! instead of decode passes over `rows × classes` values.
+//!
+//! This module holds the scalar reference, the mid-stream tail the SIMD
+//! drivers resume with, and the SWAR word-parallel path; the AVX2/NEON
+//! drivers live in `x86.rs`/`neon.rs` beside their decode siblings.
+
+use crate::bits::lanes;
+
+use super::scalar::LaneCursor;
+use super::{swar, swar_aligned, MAX_LANES};
+
+/// Scalar reference: one lane cursor, sequential over the whole stream.
+/// The row index never needs a divide — the channel position wraps at
+/// `classes`, advancing the activation.
+pub(crate) fn gemm(words: &[u8], bits: u8, x: &[i32], classes: usize, acc: &mut [i32]) {
+    debug_assert_eq!(acc.len(), classes);
+    let mut cur = LaneCursor::new(words, bits);
+    for &xv in x {
+        for a in acc.iter_mut() {
+            *a = a.wrapping_add(xv.wrapping_mul(cur.next()));
+        }
+    }
+}
+
+/// Resume a GEMV at flat element `start` (the SIMD tail entry — same
+/// role as `scalar::unpack_dequant_tail`): derives the row/channel
+/// phase and picks the cursor up mid-word.
+pub(crate) fn gemm_tail(
+    words: &[u8],
+    bits: u8,
+    x: &[i32],
+    classes: usize,
+    start: usize,
+    acc: &mut [i32],
+) {
+    let len = x.len() * classes;
+    if start >= len {
+        return;
+    }
+    let mut cur = LaneCursor::new_at(words, bits, start);
+    let (mut r, mut ch) = (start / classes, start % classes);
+    for _ in start..len {
+        acc[ch] = acc[ch].wrapping_add(x[r].wrapping_mul(cur.next()));
+        ch += 1;
+        if ch == classes {
+            ch = 0;
+            r += 1;
+        }
+    }
+}
+
+/// SWAR tier: word-parallel field extraction for lane-aligned widths
+/// (one u64 load + constant-trip shift/mask per `lanes(bits)` MACs),
+/// scalar cursor otherwise. Also the SIMD tier's fallback on targets
+/// without a vector path and the SSE2 baseline's integer path (SSE2
+/// has no packed 32-bit multiply).
+pub(crate) fn gemm_swar(words: &[u8], bits: u8, x: &[i32], classes: usize, acc: &mut [i32]) {
+    if !swar_aligned(bits) {
+        gemm(words, bits, x, classes, acc);
+        return;
+    }
+    let n_lanes = lanes(bits);
+    let len = x.len() * classes;
+    let full = len / n_lanes;
+    let mut buf = [0i32; MAX_LANES];
+    let (mut r, mut ch) = (0usize, 0usize);
+    for w in 0..full {
+        swar::decode_words_swar(words, bits, w, 1, &mut buf[..n_lanes]);
+        for &v in &buf[..n_lanes] {
+            acc[ch] = acc[ch].wrapping_add(x[r].wrapping_mul(v));
+            ch += 1;
+            if ch == classes {
+                ch = 0;
+                r += 1;
+            }
+        }
+    }
+    gemm_tail(words, bits, x, classes, full * n_lanes, acc);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bits::{int_range, PackedTensor};
+
+    /// Brute-force reference straight from the unpacked values.
+    fn naive(vals: &[i32], x: &[i32], classes: usize) -> Vec<i32> {
+        let mut acc = vec![0i32; classes];
+        for (r, &xv) in x.iter().enumerate() {
+            for c in 0..classes {
+                acc[c] = acc[c].wrapping_add(xv.wrapping_mul(vals[r * classes + c]));
+            }
+        }
+        acc
+    }
+
+    #[test]
+    fn scalar_swar_and_tail_match_naive_all_widths() {
+        for bits in 2..=16u8 {
+            let (lo, hi) = int_range(bits);
+            // shapes straddling word boundaries and tiny channel counts
+            for (rows, classes) in [(1usize, 1usize), (3, 5), (7, 8), (13, 6), (33, 3)] {
+                let len = rows * classes;
+                let vals: Vec<i32> = (0..len as i32)
+                    .map(|i| lo + (i * 41) % (hi - lo + 1))
+                    .collect();
+                let x: Vec<i32> = (0..rows as i32).map(|i| (i * 37) % 255 - 127).collect();
+                let bytes = PackedTensor::pack(&vals, bits).unwrap().to_le_bytes();
+                let want = naive(&vals, &x, classes);
+
+                let mut acc = vec![0i32; classes];
+                gemm(&bytes, bits, &x, classes, &mut acc);
+                assert_eq!(acc, want, "scalar bits={bits} {rows}x{classes}");
+
+                acc.iter_mut().for_each(|a| *a = 0);
+                gemm_swar(&bytes, bits, &x, classes, &mut acc);
+                assert_eq!(acc, want, "swar bits={bits} {rows}x{classes}");
+
+                // tail from every resume point equals full minus prefix:
+                // run the prefix scalarly, then hand over mid-stream
+                for start in [0usize, 1, classes, len / 2, len.saturating_sub(1), len] {
+                    let mut acc = vec![0i32; classes];
+                    let mut cur = LaneCursor::new(&bytes, bits);
+                    for e in 0..start {
+                        let (r, c) = (e / classes, e % classes);
+                        acc[c] = acc[c].wrapping_add(x[r].wrapping_mul(cur.next()));
+                    }
+                    gemm_tail(&bytes, bits, &x, classes, start, &mut acc);
+                    assert_eq!(acc, want, "tail bits={bits} start={start}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wrapping_accumulation_is_defined() {
+        // full-range INT16 weights against big activations overflow i32;
+        // all paths must agree on the wrapped value instead of panicking
+        let vals = vec![i16::MAX as i32; 64];
+        let bytes = PackedTensor::pack(&vals, 16).unwrap().to_le_bytes();
+        let x = vec![i32::MAX / 2; 16];
+        let mut scalar_acc = vec![0i32; 4];
+        let mut swar_acc = vec![0i32; 4];
+        gemm(&bytes, 16, &x, 4, &mut scalar_acc);
+        gemm_swar(&bytes, 16, &x, 4, &mut swar_acc);
+        assert_eq!(scalar_acc, swar_acc);
+    }
+}

@@ -23,6 +23,10 @@
 //!   materialization** between the packed bytes and the output f32s.
 //! * [`unpack_ints_into`] — the plain i32 unpack for non-dequantizing
 //!   consumers (`PackedTensor`/`PackedView::unpack_into`).
+//! * [`gemm_i32_into`] — the integer-domain GEMV (`gemm` module): packed
+//!   words × i32 activations → i32 accumulators with **no decode at
+//!   all**; the scale is folded into a per-class f32 epilogue by the
+//!   caller (`NestTenant`'s dequantization-free forward).
 //!
 //! # Dispatch tiers
 //!
@@ -53,6 +57,7 @@
 //! DESIGN.md §4e holds the per-arch tier table and the safety argument
 //! for the `unsafe` intrinsic blocks.
 
+mod gemm;
 mod plan;
 mod scalar;
 mod swar;
@@ -165,6 +170,7 @@ pub fn tier_from_env(value: Option<&str>) -> Tier {
 type UnpackDequantFn = fn(&[u8], u8, usize, &[f32], f32, &mut Vec<f32>);
 type RecomposeDequantFn = fn(&[u8], u8, &[u8], u8, u8, usize, &[f32], &mut Vec<f32>);
 type UnpackIntsFn = fn(&[u8], u8, usize, &mut Vec<i32>);
+type GemmI32Fn = fn(&[u8], u8, &[i32], usize, &mut [i32]);
 
 /// One tier's dispatch table: the function pointers every consumer
 /// (`store::PackedView`, `ModelManager` decode waves, `NestTenant`,
@@ -177,6 +183,7 @@ pub struct KernelPlan {
     unpack_dequant: UnpackDequantFn,
     recompose_dequant: RecomposeDequantFn,
     unpack_ints: UnpackIntsFn,
+    gemm_i32: GemmI32Fn,
 }
 
 impl KernelPlan {
@@ -196,6 +203,12 @@ impl KernelPlan {
             return;
         }
         assert!(!scales.is_empty(), "unpack_dequant_into: empty scales");
+        assert!(
+            len % scales.len() == 0,
+            "unpack_dequant_into: len {len} not a multiple of {} channels — \
+             scales would wrap mid-row",
+            scales.len()
+        );
         assert!(
             words.len() >= 8 * packed_nwords(len, bits),
             "unpack_dequant_into: {} word bytes < {} needed for INT{bits} x {len}",
@@ -231,6 +244,12 @@ impl KernelPlan {
             return;
         }
         assert!(!scales.is_empty(), "recompose_dequant_into: empty scales");
+        assert!(
+            len % scales.len() == 0,
+            "recompose_dequant_into: len {len} not a multiple of {} channels — \
+             scales would wrap mid-row",
+            scales.len()
+        );
         assert!(
             high_words.len() >= 8 * packed_nwords(len, h_bits),
             "recompose_dequant_into: {} w_high bytes < {} needed for INT{h_bits} x {len}",
@@ -276,17 +295,66 @@ impl KernelPlan {
             (len * 4) as u64,
         );
     }
+
+    /// Integer-domain GEMV through this tier:
+    /// `acc[c] = Σ_r x[r] · w[r·classes + c]` over `x.len()` packed rows
+    /// read straight from `words`, **no decode pass and no f32**.
+    /// Accumulation is wrapping i32 and bit-identical across tiers (see
+    /// the `gemm` module docs for the contract). `acc` is cleared and
+    /// resized to `classes` zeros first.
+    pub fn gemm_i32_into(
+        &self,
+        words: &[u8],
+        bits: u8,
+        x: &[i32],
+        classes: usize,
+        acc: &mut Vec<i32>,
+    ) {
+        acc.clear();
+        acc.resize(classes, 0);
+        if x.is_empty() || classes == 0 {
+            return;
+        }
+        let len = x
+            .len()
+            .checked_mul(classes)
+            .expect("gemm_i32_into: rows * classes overflows");
+        assert!(
+            words.len() >= 8 * packed_nwords(len, bits),
+            "gemm_i32_into: {} word bytes < {} needed for INT{bits} x {len}",
+            words.len(),
+            8 * packed_nwords(len, bits)
+        );
+        (self.gemm_i32)(words, bits, x, classes, acc);
+        // hot-path telemetry: exactly two relaxed atomic adds; bytes =
+        // the packed fields the matmul consumed, scaled like the decode
+        // ops (fields × 4) so tiers compare on one axis
+        crate::telemetry::registry().kernels.record(
+            crate::telemetry::OP_GEMM_I32,
+            self.tier.index(),
+            (len * 4) as u64,
+        );
+    }
 }
 
 /// The SIMD tier's fn pointers + path name for this target, resolved
 /// from the one-time capability probe.
+type SimdImpl = (
+    UnpackDequantFn,
+    RecomposeDequantFn,
+    UnpackIntsFn,
+    GemmI32Fn,
+    &'static str,
+);
+
 #[cfg(target_arch = "x86_64")]
-fn simd_impl() -> (UnpackDequantFn, RecomposeDequantFn, UnpackIntsFn, &'static str) {
+fn simd_impl() -> SimdImpl {
     if x86::caps().avx2 {
         (
             x86::unpack_dequant_avx2,
             x86::recompose_dequant_avx2,
             x86::unpack_ints_avx2,
+            x86::gemm_i32_avx2,
             x86::path_name(),
         )
     } else {
@@ -294,17 +362,19 @@ fn simd_impl() -> (UnpackDequantFn, RecomposeDequantFn, UnpackIntsFn, &'static s
             x86::unpack_dequant_sse2,
             x86::recompose_dequant_sse2,
             x86::unpack_ints_sse2,
+            x86::gemm_i32_sse2,
             x86::path_name(),
         )
     }
 }
 
 #[cfg(target_arch = "aarch64")]
-fn simd_impl() -> (UnpackDequantFn, RecomposeDequantFn, UnpackIntsFn, &'static str) {
+fn simd_impl() -> SimdImpl {
     (
         neon::unpack_dequant,
         neon::recompose_dequant,
         neon::unpack_ints,
+        neon::gemm_i32,
         neon::path_name(),
     )
 }
@@ -312,11 +382,12 @@ fn simd_impl() -> (UnpackDequantFn, RecomposeDequantFn, UnpackIntsFn, &'static s
 /// No explicit vector path on this target: the SIMD tier *is* the SWAR
 /// dispatch (graceful fallback, never a failure).
 #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
-fn simd_impl() -> (UnpackDequantFn, RecomposeDequantFn, UnpackIntsFn, &'static str) {
+fn simd_impl() -> SimdImpl {
     (
         swar::unpack_dequant,
         swar::recompose_dequant,
         swar::unpack_ints,
+        gemm::gemm_swar,
         "swar-fallback",
     )
 }
@@ -326,7 +397,7 @@ fn simd_impl() -> (UnpackDequantFn, RecomposeDequantFn, UnpackIntsFn, &'static s
 fn plans() -> &'static [KernelPlan; 3] {
     static PLANS: OnceLock<[KernelPlan; 3]> = OnceLock::new();
     PLANS.get_or_init(|| {
-        let (ud, rd, ui, path) = simd_impl();
+        let (ud, rd, ui, gm, path) = simd_impl();
         [
             KernelPlan {
                 tier: Tier::Scalar,
@@ -334,6 +405,7 @@ fn plans() -> &'static [KernelPlan; 3] {
                 unpack_dequant: scalar::unpack_dequant,
                 recompose_dequant: scalar::recompose_dequant,
                 unpack_ints: scalar::unpack_ints,
+                gemm_i32: gemm::gemm,
             },
             KernelPlan {
                 tier: Tier::Swar,
@@ -341,6 +413,7 @@ fn plans() -> &'static [KernelPlan; 3] {
                 unpack_dequant: swar::unpack_dequant,
                 recompose_dequant: swar::recompose_dequant,
                 unpack_ints: swar::unpack_ints,
+                gemm_i32: gemm::gemm_swar,
             },
             KernelPlan {
                 tier: Tier::Simd,
@@ -348,6 +421,7 @@ fn plans() -> &'static [KernelPlan; 3] {
                 unpack_dequant: ud,
                 recompose_dequant: rd,
                 unpack_ints: ui,
+                gemm_i32: gm,
             },
         ]
     })
@@ -427,6 +501,17 @@ pub fn unpack_ints_into(words: &[u8], bits: u8, len: usize, out: &mut Vec<i32>) 
     active().unpack_ints_into(words, bits, len, out);
 }
 
+/// Integer-domain GEMV routed through the process-wide [`KernelPlan`]:
+/// `acc[c] = Σ_r x[r] · w[r·classes + c]` with `x.len() · classes`
+/// packed `bits`-bit weights consumed straight from `words` — no decode
+/// pass, no f32, wrapping i32 accumulation, bit-identical across tiers.
+/// `acc` is cleared and resized to `classes` zeros first. The caller
+/// folds `s_x · s_w` (and the part-bit `2^l`) into one rescale of the
+/// `classes` accumulators.
+pub fn gemm_i32_into(words: &[u8], bits: u8, x: &[i32], classes: usize, acc: &mut Vec<i32>) {
+    active().gemm_i32_into(words, bits, x, classes, acc);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -467,14 +552,16 @@ mod tests {
     fn unpack_dequant_matches_legacy_all_bits_all_tiers() {
         for bits in 2..=16u8 {
             let (lo, hi) = int_range(bits);
-            // length deliberately NOT a multiple of lanes(bits)
-            let len = 5 * lanes(bits) + 3;
-            let vals: Vec<i32> = (0..len as i32)
-                .map(|i| lo + (i * 37) % (hi - lo + 1))
-                .collect();
-            let t = PackedTensor::pack(&vals, bits).unwrap();
-            let bytes = t.to_le_bytes();
-            for c in [1usize, 2, 3, 7, len] {
+            // base length deliberately NOT a multiple of lanes(bits);
+            // rounded up per channel count so rows are whole
+            let base = 5 * lanes(bits) + 3;
+            for c in [1usize, 2, 3, 7, base] {
+                let len = base.div_ceil(c) * c;
+                let vals: Vec<i32> = (0..len as i32)
+                    .map(|i| lo + (i * 37) % (hi - lo + 1))
+                    .collect();
+                let t = PackedTensor::pack(&vals, bits).unwrap();
+                let bytes = t.to_le_bytes();
                 let scales = toy_scales(c);
                 for mul in [1.0f32, 16.0] {
                     let want = legacy_unpack_dequant(&t, &scales, mul);
@@ -507,15 +594,18 @@ mod tests {
         ] {
             let cfg = nest::NestConfig::new(n, h).unwrap();
             let (lo, hi) = int_range(n);
-            let len = 3 * lanes(h) * lanes(cfg.low_bits()) + 11;
-            let vals: Vec<i32> = (0..len as i32)
-                .map(|i| lo + (i * 101) % (hi - lo + 1))
-                .collect();
-            let (hs, ls) = nest::decompose(&vals, cfg, nest::Rounding::BitShift, true);
-            let th = PackedTensor::pack(&hs, h).unwrap();
-            let tl = PackedTensor::pack(&ls, cfg.low_bits()).unwrap();
-            let (hb, lb) = (th.to_le_bytes(), tl.to_le_bytes());
+            // base length NOT a multiple of either stream's lane count;
+            // rounded up per channel count so rows are whole
+            let base = 3 * lanes(h) * lanes(cfg.low_bits()) + 11;
             for c in [1usize, 4, 5, 64] {
+                let len = base.div_ceil(c) * c;
+                let vals: Vec<i32> = (0..len as i32)
+                    .map(|i| lo + (i * 101) % (hi - lo + 1))
+                    .collect();
+                let (hs, ls) = nest::decompose(&vals, cfg, nest::Rounding::BitShift, true);
+                let th = PackedTensor::pack(&hs, h).unwrap();
+                let tl = PackedTensor::pack(&ls, cfg.low_bits()).unwrap();
+                let (hb, lb) = (th.to_le_bytes(), tl.to_le_bytes());
                 let scales = toy_scales(c);
                 let want = legacy_recompose_dequant(&th, &tl, cfg.l(), &scales);
                 for tier in Tier::all() {
@@ -622,5 +712,81 @@ mod tests {
         assert_eq!(&rep[..3], &[2.0, 4.0, 6.0]);
         // wrapped tail repeats the folded scales
         assert_eq!(&rep[3..], &[2.0, 4.0, 6.0, 2.0, 4.0, 6.0, 2.0]);
+    }
+
+    // channel-count validation (satellite bugfix): a len that is not a
+    // multiple of the channel count used to wrap scales mid-tensor
+    // silently — now it is rejected up front
+
+    #[test]
+    #[should_panic(expected = "not a multiple")]
+    fn unpack_dequant_rejects_mismatched_channel_count() {
+        let t = PackedTensor::pack(&[1, 2, 3, 4, 5, 6, 7], 8).unwrap();
+        let bytes = t.to_le_bytes();
+        let mut out = Vec::new();
+        // 7 values over 2 channels: 3.5 rows — must panic, not mis-scale
+        unpack_dequant_into(&bytes, 8, 7, &[0.5, 0.25], 1.0, &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a multiple")]
+    fn recompose_dequant_rejects_mismatched_channel_count() {
+        let cfg = nest::NestConfig::new(8, 4).unwrap();
+        let vals: Vec<i32> = (0..9).collect();
+        let (hs, ls) = nest::decompose(&vals, cfg, nest::Rounding::BitShift, true);
+        let hb = PackedTensor::pack(&hs, 4).unwrap().to_le_bytes();
+        let lb = PackedTensor::pack(&ls, cfg.low_bits()).unwrap().to_le_bytes();
+        let mut out = Vec::new();
+        recompose_dequant_into(
+            &hb,
+            4,
+            &lb,
+            cfg.low_bits(),
+            cfg.l(),
+            9,
+            &[0.5, 0.25],
+            &mut out,
+        );
+    }
+
+    #[test]
+    fn gemm_i32_matches_scalar_reference_all_bits_all_tiers() {
+        // every width × shapes where 8/4-element SIMD groups straddle
+        // row boundaries (classes not a multiple of the group size)
+        for bits in 2..=16u8 {
+            let (lo, hi) = int_range(bits);
+            for (rows, classes) in [(1usize, 3usize), (4, 6), (9, 5), (17, 13), (3, 64)] {
+                let len = rows * classes;
+                let vals: Vec<i32> = (0..len as i32)
+                    .map(|i| lo + (i * 53) % (hi - lo + 1))
+                    .collect();
+                let bytes = PackedTensor::pack(&vals, bits).unwrap().to_le_bytes();
+                let x: Vec<i32> = (0..rows as i32).map(|i| (i * 29) % 200 - 100).collect();
+                let mut want = Vec::new();
+                plan_for(Tier::Scalar).gemm_i32_into(&bytes, bits, &x, classes, &mut want);
+                // cross-check the scalar tier against naive i64 math
+                // (no wrap at these magnitudes)
+                for c in 0..classes {
+                    let exact: i64 = (0..rows)
+                        .map(|r| x[r] as i64 * vals[r * classes + c] as i64)
+                        .sum();
+                    assert_eq!(want[c] as i64, exact, "bits={bits} c={c}");
+                }
+                for tier in [Tier::Swar, Tier::Simd] {
+                    let mut got = Vec::new();
+                    plan_for(tier).gemm_i32_into(&bytes, bits, &x, classes, &mut got);
+                    assert_eq!(got, want, "tier={tier} bits={bits} {rows}x{classes}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_i32_clears_and_handles_empty() {
+        let mut acc = vec![7i32; 3];
+        gemm_i32_into(&[], 8, &[], 4, &mut acc);
+        assert_eq!(acc, vec![0; 4]);
+        gemm_i32_into(&[], 8, &[1, 2], 0, &mut acc);
+        assert!(acc.is_empty());
     }
 }

@@ -21,7 +21,7 @@
 
 use std::arch::aarch64::*;
 
-use super::plan::{plan4, Group};
+use super::plan::{self, plan4, Group};
 use super::{fold_rep, scalar};
 
 /// Sub-path name for diagnostics and the bench artifact.
@@ -158,6 +158,58 @@ unsafe fn unpack_ints_body(bytes: &[u8], bits: u8, len: usize, dst: *mut i32) ->
     e
 }
 
+/// Integer-domain GEMV body: extract 4 fields per group and
+/// multiply-accumulate into `acc` (`vmulq_s32` + `vaddq_s32`, wrapping
+/// like every tier). A group wholly inside one weight row is a vector
+/// MAC (broadcast activation, load/add/store of `acc[ch..ch+4]` — in
+/// bounds because `ch + 4 <= classes` was just checked); a group that
+/// straddles a row boundary extracts through the same plan windows and
+/// accumulates scalarly. Returns elements consumed (a multiple of 4).
+unsafe fn gemm_i32_body(bytes: &[u8], bits: u8, x: &[i32], classes: usize, acc: &mut [i32]) -> usize {
+    let len = x.len() * classes;
+    let plan = plan4(bits);
+    let mask = (1u32 << bits) - 1;
+    let sign = 1u32 << (bits - 1);
+    let mut buf = [0i32; plan::MAX_GROUP];
+    let mut e = 0usize;
+    let mut pbase = 0usize;
+    let (mut r, mut ch) = (0usize, 0usize);
+    'periods: loop {
+        for g in &plan.groups {
+            if e + 4 > len || pbase + g.span > bytes.len() {
+                break 'periods;
+            }
+            if ch + 4 <= classes {
+                // all 4 fields live in row r: vector MAC
+                let v = extract4(bytes, pbase, g, mask, sign);
+                let prod = vmulq_s32(v, vdupq_n_s32(x[r]));
+                let p = acc.as_mut_ptr().add(ch);
+                vst1q_s32(p, vaddq_s32(vld1q_s32(p), prod));
+                ch += 4;
+                if ch == classes {
+                    ch = 0;
+                    r += 1;
+                }
+            } else {
+                // the activation changes mid-group: same plan windows,
+                // scalar MAC across the row boundary
+                plan::extract_group(bytes, pbase, g, 4, mask, sign, &mut buf);
+                for &v in &buf[..4] {
+                    acc[ch] = acc[ch].wrapping_add(x[r].wrapping_mul(v));
+                    ch += 1;
+                    if ch == classes {
+                        ch = 0;
+                        r += 1;
+                    }
+                }
+            }
+            e += 4;
+        }
+        pbase += plan.period_bytes;
+    }
+    e
+}
+
 // ---------------------------------------------------------------------------
 // safe tier entries (fn-pointer targets for the KernelPlan vtable)
 // ---------------------------------------------------------------------------
@@ -213,4 +265,9 @@ pub(crate) fn unpack_ints(words: &[u8], bits: u8, len: usize, out: &mut Vec<i32>
         out.set_len(d);
     }
     scalar::unpack_ints_tail(words, bits, len, out);
+}
+
+pub(crate) fn gemm_i32(words: &[u8], bits: u8, x: &[i32], classes: usize, acc: &mut [i32]) {
+    let done = unsafe { gemm_i32_body(words, bits, x, classes, acc) };
+    super::gemm::gemm_tail(words, bits, x, classes, done, acc);
 }

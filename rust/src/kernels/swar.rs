@@ -136,7 +136,13 @@ fn decode_words_swar_inner<const BITS: u32>(
     }
 }
 
-fn decode_words_swar(bytes: &[u8], bits: u8, first: usize, n_words: usize, dst: &mut [i32]) {
+pub(crate) fn decode_words_swar(
+    bytes: &[u8],
+    bits: u8,
+    first: usize,
+    n_words: usize,
+    dst: &mut [i32],
+) {
     match bits {
         2 => decode_words_swar_inner::<2>(bytes, first, n_words, dst),
         4 => decode_words_swar_inner::<4>(bytes, first, n_words, dst),

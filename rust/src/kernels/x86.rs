@@ -254,6 +254,71 @@ unsafe fn unpack_ints_avx2_body(bytes: &[u8], bits: u8, len: usize, dst: *mut i3
     e
 }
 
+/// AVX2 integer-domain GEMV body: extract 8 packed fields per group and
+/// multiply-accumulate into `acc` (`vpmulld` + `vpaddd`, wrapping like
+/// every other tier). When all 8 fields share one weight row the MAC is
+/// fully vectorized (one broadcast activation, unaligned load/add/store
+/// of `acc[ch..ch+8]` — in bounds because `ch + 8 <= classes` was just
+/// checked); a group that straddles a row boundary extracts through the
+/// same plan windows and accumulates scalarly. Returns elements
+/// consumed (a multiple of 8); the caller finishes with the stream tail.
+#[target_feature(enable = "avx2")]
+unsafe fn gemm_i32_avx2_body(
+    bytes: &[u8],
+    bits: u8,
+    x: &[i32],
+    classes: usize,
+    acc: &mut [i32],
+) -> usize {
+    let len = x.len() * classes;
+    let plan = plan8(bits);
+    let (m, s) = mask_sign(bits);
+    let mask = _mm256_set1_epi32(m);
+    let sign = _mm256_set1_epi32(s);
+    let (masku, signu) = ((1u32 << bits) - 1, 1u32 << (bits - 1));
+    // gather offsets are i32 lanes: stop vectorizing past 2 GiB
+    let limit = bytes.len().min(i32::MAX as usize);
+    let mut buf = [0i32; plan::MAX_GROUP];
+    let mut e = 0usize;
+    let mut pbase = 0usize;
+    let (mut r, mut ch) = (0usize, 0usize);
+    'periods: loop {
+        for g in &plan.groups {
+            if e + 8 > len || pbase + g.span > limit {
+                break 'periods;
+            }
+            if ch + 8 <= classes {
+                // all 8 fields live in row r: vector MAC
+                let v = extract8(bytes, pbase, g, bits, mask, sign);
+                let prod = _mm256_mullo_epi32(v, _mm256_set1_epi32(x[r]));
+                let p = acc.as_mut_ptr().add(ch);
+                let cur = _mm256_loadu_si256(p as *const __m256i);
+                _mm256_storeu_si256(p as *mut __m256i, _mm256_add_epi32(cur, prod));
+                ch += 8;
+                if ch == classes {
+                    ch = 0;
+                    r += 1;
+                }
+            } else {
+                // the activation changes mid-group: same plan windows,
+                // scalar MAC across the row boundary
+                plan::extract_group(bytes, pbase, g, 8, masku, signu, &mut buf);
+                for &v in &buf[..8] {
+                    acc[ch] = acc[ch].wrapping_add(x[r].wrapping_mul(v));
+                    ch += 1;
+                    if ch == classes {
+                        ch = 0;
+                        r += 1;
+                    }
+                }
+            }
+            e += 8;
+        }
+        pbase += plan.period_bytes;
+    }
+    e
+}
+
 // ---------------------------------------------------------------------------
 // SSE2 sub-path (baseline: no gathers, no per-lane variable shifts)
 // ---------------------------------------------------------------------------
@@ -463,4 +528,16 @@ pub(crate) fn recompose_dequant_sse2(
 /// scalar there); route to the SWAR word-parallel path.
 pub(crate) fn unpack_ints_sse2(words: &[u8], bits: u8, len: usize, out: &mut Vec<i32>) {
     super::swar::unpack_ints(words, bits, len, out);
+}
+
+pub(crate) fn gemm_i32_avx2(words: &[u8], bits: u8, x: &[i32], classes: usize, acc: &mut [i32]) {
+    let done = unsafe { gemm_i32_avx2_body(words, bits, x, classes, acc) };
+    super::gemm::gemm_tail(words, bits, x, classes, done, acc);
+}
+
+/// SSE2 has no packed 32-bit multiply (`pmulld` is SSE4.1), so the
+/// integer MAC would be scalar anyway — route to the SWAR word-parallel
+/// extraction.
+pub(crate) fn gemm_i32_sse2(words: &[u8], bits: u8, x: &[i32], classes: usize, acc: &mut [i32]) {
+    super::gemm::gemm_swar(words, bits, x, classes, acc);
 }

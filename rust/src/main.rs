@@ -47,8 +47,10 @@ fn usage() -> ! {
          \x20 top    --addr HOST:PORT            one-shot telemetry table (tenants, store,\n\
          \x20                                    kernels, fleet, trace tail)\n\
 \x20 select --arch A [--n N] [--live]   adaptive nesting selection (future-work)\n\
-         \x20 bench-guard [BENCH_kernels.json]   fail if the SIMD tier regressed below\n\
-         \x20                                    the SWAR baseline on lane-aligned cells\n\
+         \x20 bench-guard [BENCH_kernels.json]   fail if any expected bench cell is\n\
+         \x20                                    missing, the SIMD tier regressed below\n\
+         \x20                                    SWAR on lane-aligned cells, or the\n\
+         \x20                                    int-domain forward lost to f32-decode\n\
          \x20 report <what>                      one of: errors storage-ideal storage\n\
          \x20                                    switching similarity nesting nesting-test\n\
          \x20                                    cliff combos traffic comparison ptq-cost\n\
@@ -142,17 +144,35 @@ fn run() -> Result<()> {
 }
 
 /// CI bench-regression guard: read a `BENCH_kernels.json` written by
-/// `cargo bench --bench kernels` and fail (exit 1) if the SIMD tier
-/// loses to the SWAR baseline on any lane-aligned cell. A small noise
-/// band (5%) keeps one jittery CI run from flagging a false regression;
-/// a real SIMD regression blows way past it. Unaligned cells — where
-/// the SWAR tier is really the scalar lane cursor — are reported as the
-/// SIMD tier's headline wins but not hard-gated (their ratios swing
-/// more across microarchitectures).
+/// `cargo bench --bench kernels` and fail (exit 1) on a tier
+/// regression. The file must carry every expected (bitwidth, op)
+/// cell — a missing cell fails with its own message naming the cell
+/// (a truncated or stale bench file should never pass as "no
+/// regressions").
+///
+/// Gates, all with a small noise band so one jittery CI run does not
+/// flag a false regression (a real one blows way past it):
+///
+/// * decode cells (`launch`/`upgrade`), lane-aligned: SIMD ≥ 0.95x
+///   SWAR. Unaligned cells — where the SWAR tier is really the scalar
+///   lane cursor — are reported but not hard-gated (their ratios swing
+///   more across microarchitectures).
+/// * forward cells (`forward_part`/`forward_full`), lane-aligned:
+///   int-domain SIMD ≥ 0.95x int-domain SWAR.
+/// * forward cells, every alignment: int-domain SIMD ≥ 0.9x the
+///   f32-decode baseline — the dequantization-free path must never
+///   lose meaningfully to decode-then-matmul, or it has no reason to
+///   be the default `ForwardMode`.
 fn cmd_bench_guard(args: &Args) -> Result<()> {
     use nestquant::util::json;
 
     const NOISE_BAND: f64 = 0.95;
+    const FWD_VS_F32_BAND: f64 = 0.9;
+    /// Must mirror `configs` in `benches/kernels.rs`.
+    const CONFIGS: [(u64, u64); 8] =
+        [(8, 4), (8, 5), (8, 6), (6, 3), (16, 8), (7, 3), (7, 4), (11, 8)];
+    const OPS: [&str; 4] = ["launch", "upgrade", "forward_part", "forward_full"];
+
     let path = args
         .positional
         .get(1)
@@ -165,45 +185,96 @@ fn cmd_bench_guard(args: &Args) -> Result<()> {
         "{path} has no cells — run `cargo bench --bench kernels` first \
          (the committed trajectory seed carries none by design)"
     );
-    let mut losses = Vec::new();
-    let mut unaligned_wins = 0usize;
-    let mut unaligned = 0usize;
+    let mut by_key: HashMap<(u64, u64, String), &json::Value> = HashMap::new();
     for cell in cells {
         let n = cell.path(&["n"])?.as_u64()?;
         let h = cell.path(&["h"])?.as_u64()?;
         let op = cell.path(&["op"])?.as_str()?;
-        let aligned = cell.path(&["aligned"])?.as_bool()?;
-        let swar = cell.path(&["swar_bytes_per_s"])?.as_f64()?;
-        let simd = cell.path(&["simd_bytes_per_s"])?.as_f64()?;
-        let ratio = simd / swar;
-        if aligned {
-            if simd < NOISE_BAND * swar {
-                losses.push(format!(
-                    "INT({n}|{h}) {op}: simd {:.1} MB/s < swar {:.1} MB/s ({ratio:.2}x)",
-                    simd / 1e6,
-                    swar / 1e6
-                ));
+        by_key.insert((n, h, op.to_string()), cell);
+    }
+    let mut missing = Vec::new();
+    let mut losses = Vec::new();
+    let mut unaligned_wins = 0usize;
+    let mut unaligned = 0usize;
+    let mut checked = 0usize;
+    for (n, h) in CONFIGS {
+        for op in OPS {
+            let Some(cell) = by_key.get(&(n, h, op.to_string())) else {
+                missing.push(format!("INT({n}|{h}) {op}"));
+                continue;
+            };
+            checked += 1;
+            let field = |name: &str| -> Result<f64> {
+                cell.path(&[name])
+                    .and_then(|v| v.as_f64())
+                    .with_context(|| format!("INT({n}|{h}) {op}: bad or missing `{name}`"))
+            };
+            let aligned = cell
+                .path(&["aligned"])
+                .and_then(|v| v.as_bool())
+                .with_context(|| format!("INT({n}|{h}) {op}: bad or missing `aligned`"))?;
+            if op.starts_with("forward") {
+                let swar = field("swar_tokens_per_s")?;
+                let simd = field("simd_tokens_per_s")?;
+                let f32_decode = field("f32_decode_tokens_per_s")?;
+                if aligned && simd < NOISE_BAND * swar {
+                    losses.push(format!(
+                        "INT({n}|{h}) {op}: int simd {simd:.1} tok/s < int swar \
+                         {swar:.1} tok/s ({:.2}x)",
+                        simd / swar
+                    ));
+                }
+                if simd < FWD_VS_F32_BAND * f32_decode {
+                    losses.push(format!(
+                        "INT({n}|{h}) {op}: int simd {simd:.1} tok/s < {FWD_VS_F32_BAND}x \
+                         f32-decode {f32_decode:.1} tok/s ({:.2}x)",
+                        simd / f32_decode
+                    ));
+                }
+            } else {
+                let swar = field("swar_bytes_per_s")?;
+                let simd = field("simd_bytes_per_s")?;
+                let ratio = simd / swar;
+                if aligned {
+                    if simd < NOISE_BAND * swar {
+                        losses.push(format!(
+                            "INT({n}|{h}) {op}: simd {:.1} MB/s < swar {:.1} MB/s ({ratio:.2}x)",
+                            simd / 1e6,
+                            swar / 1e6
+                        ));
+                    }
+                } else {
+                    unaligned += 1;
+                    if ratio > 1.0 {
+                        unaligned_wins += 1;
+                    }
+                    println!(
+                        "bench-guard: unaligned INT({n}|{h}) {op}: simd/lane-cursor {ratio:.2}x"
+                    );
+                }
             }
-        } else {
-            unaligned += 1;
-            if ratio > 1.0 {
-                unaligned_wins += 1;
-            }
-            println!(
-                "bench-guard: unaligned INT({n}|{h}) {op}: simd/lane-cursor {ratio:.2}x"
-            );
         }
     }
+    anyhow::ensure!(
+        missing.is_empty(),
+        "{path} is missing {} expected cell(s):\n  {}\n\
+         re-run `cargo bench --bench kernels` to regenerate the full grid",
+        missing.len(),
+        missing.join("\n  ")
+    );
     println!(
-        "bench-guard: {} cells checked ({unaligned} unaligned, {unaligned_wins} simd wins there)",
-        cells.len()
+        "bench-guard: {checked} cells checked ({unaligned} unaligned decode, \
+         {unaligned_wins} simd wins there)"
     );
     anyhow::ensure!(
         losses.is_empty(),
-        "SIMD tier lost to the SWAR baseline on lane-aligned cells:\n  {}",
+        "bench gates failed:\n  {}",
         losses.join("\n  ")
     );
-    println!("bench-guard: SIMD holds ≥{NOISE_BAND}x SWAR on every lane-aligned cell");
+    println!(
+        "bench-guard: SIMD holds ≥{NOISE_BAND}x SWAR on aligned cells; int-domain \
+         forward holds ≥{FWD_VS_F32_BAND}x f32-decode everywhere"
+    );
     Ok(())
 }
 

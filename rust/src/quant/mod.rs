@@ -47,13 +47,21 @@ fn rtn(t: f64) -> f64 {
 
 /// RTN quantization with per-channel scales. Iterates channel-sized row
 /// chunks — the channel index is the position in the chunk, so the hot
-/// loop carries no per-element `i % c` division.
+/// loop carries no per-element `i % c` division. The length must be a
+/// whole number of rows: a trailing partial row used to be silently
+/// quantized against a scale prefix (mis-scaled), now it is rejected.
 pub fn quantize_rtn(w: &[f32], scales: &[f32], bits: u8) -> Vec<i32> {
     let (lo, hi) = int_range(bits);
     let mut out = Vec::with_capacity(w.len());
     if w.is_empty() {
         return out;
     }
+    assert!(
+        !scales.is_empty() && w.len() % scales.len() == 0,
+        "quantize_rtn: {} values not a multiple of {} channels",
+        w.len(),
+        scales.len()
+    );
     for row in w.chunks(scales.len()) {
         for (&v, &s) in row.iter().zip(scales) {
             out.push((rtn((v / s) as f64) as i32).clamp(lo, hi));
@@ -68,6 +76,11 @@ pub fn quantize_rtn(w: &[f32], scales: &[f32], bits: u8) -> Vec<i32> {
 /// Mirrors `quantizer._flip_round` element-for-element.
 pub fn quantize_adaptive(w: &[f32], scales: &[f32], bits: u8) -> Vec<i32> {
     let c = scales.len();
+    assert!(
+        c > 0 && w.len() % c == 0,
+        "quantize_adaptive: {} values not a multiple of {c} channels",
+        w.len()
+    );
     let rows = w.len() / c;
     let (lo, hi) = int_range(bits);
     let mut out = vec![0i32; w.len()];
@@ -129,10 +142,35 @@ pub fn dequant(w_int: &[i32], scales: &[f32], out: &mut Vec<f32>) {
     if w_int.is_empty() {
         return;
     }
+    assert!(
+        !scales.is_empty() && w_int.len() % scales.len() == 0,
+        "dequant: {} values not a multiple of {} channels",
+        w_int.len(),
+        scales.len()
+    );
     out.reserve(w_int.len());
     for row in w_int.chunks(scales.len()) {
         out.extend(row.iter().zip(scales).map(|(&v, &s)| v as f32 * s));
     }
+}
+
+/// Per-tensor symmetric activation quantization for the integer-domain
+/// forward: `out[i] = clamp(rtn(x[i] / s_x))` with one dynamic scale
+/// `s_x = amax / hi` (floored like [`channel_scales`] so an all-zero
+/// input stays finite). Returns `s_x`; the caller folds it into the
+/// accumulator epilogue together with the weight scales. RTN matches
+/// the weight path's rounding so the error model is uniform.
+pub fn quantize_activations(x: &[f32], bits: u8, out: &mut Vec<i32>) -> f32 {
+    let (lo, hi) = int_range(bits);
+    let amax = x.iter().fold(0f32, |a, &v| a.max(v.abs()));
+    let s = amax.max(1e-12) / hi as f32;
+    out.clear();
+    out.reserve(x.len());
+    out.extend(
+        x.iter()
+            .map(|&v| (rtn((v / s) as f64) as i32).clamp(lo, hi)),
+    );
+    s
 }
 
 /// Secondary (nesting) quantization — Step 2 of Algorithm 1: derive
@@ -305,5 +343,43 @@ mod tests {
         for (got, want) in out.iter().zip([-1.28f32, 0.0, 1.27, 0.1]) {
             assert!((got - want).abs() < 1e-6, "{got} vs {want}");
         }
+    }
+
+    // channel-count validation (satellite bugfix): a trailing partial
+    // row used to be silently mis-scaled against a scale prefix
+
+    #[test]
+    #[should_panic(expected = "not a multiple")]
+    fn quantize_rtn_rejects_partial_row() {
+        quantize_rtn(&[1.0, 2.0, 3.0], &[0.5, 0.25], 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a multiple")]
+    fn dequant_rejects_partial_row() {
+        let mut out = Vec::new();
+        dequant(&[1, 2, 3], &[0.5, 0.25], &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a multiple")]
+    fn quantize_adaptive_rejects_partial_row() {
+        quantize_adaptive(&[1.0, 2.0, 3.0], &[0.5, 0.25], 8);
+    }
+
+    #[test]
+    fn activation_quant_bound_and_zero_input() {
+        let x: Vec<f32> = toy(7, 16, 4);
+        let mut q = Vec::new();
+        let s = quantize_activations(&x, 8, &mut q);
+        assert_eq!(q.len(), x.len());
+        for (&v, &qi) in x.iter().zip(&q) {
+            assert!((v - qi as f32 * s).abs() <= s / 2.0 + 1e-6);
+            assert!((-128..=127).contains(&qi));
+        }
+        // all-zero input: finite scale, all-zero codes
+        let s0 = quantize_activations(&[0.0; 8], 8, &mut q);
+        assert!(s0 > 0.0 && s0.is_finite());
+        assert!(q.iter().all(|&v| v == 0));
     }
 }

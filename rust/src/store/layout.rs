@@ -458,6 +458,23 @@ impl<'m> PackedView<'m> {
         );
     }
 
+    /// Integer-domain GEMV straight from the section bytes:
+    /// `acc[c] = Σ_r x[r] · w[r·classes + c]` with the packed stream as
+    /// the row-major weight matrix — no decode pass, no f32, no i32
+    /// weight vector. The caller folds `s_x · s_w` (and the part-bit
+    /// `2^l`) into a per-class rescale of the accumulators; see
+    /// [`crate::kernels::gemm_i32_into`].
+    pub fn gemm_i32_into(&self, x: &[i32], classes: usize, acc: &mut Vec<i32>) {
+        assert_eq!(
+            x.len() * classes,
+            self.count,
+            "gemm_i32_into: {} rows x {classes} classes != {} packed values",
+            x.len(),
+            self.count
+        );
+        crate::kernels::gemm_i32_into(self.bytes, self.bits, x, classes, acc);
+    }
+
     pub fn unpack(&self) -> Vec<i32> {
         let mut out = Vec::with_capacity(self.count);
         self.unpack_into(&mut out);

@@ -294,22 +294,26 @@ impl Default for StoreTelemetry {
 }
 
 /// Canonical kernel op names, indexed by the `OP_*` constants.
-pub const KERNEL_OPS: [&str; 3] = ["unpack_dequant", "recompose_dequant", "unpack_ints"];
+pub const KERNEL_OPS: [&str; 4] =
+    ["unpack_dequant", "recompose_dequant", "unpack_ints", "gemm_i32"];
 /// Canonical dispatch-tier names, indexed by `kernels::Tier as usize`.
 pub const KERNEL_TIERS: [&str; 3] = ["scalar", "swar", "simd"];
 
 pub const OP_UNPACK_DEQUANT: usize = 0;
 pub const OP_RECOMPOSE_DEQUANT: usize = 1;
 pub const OP_UNPACK_INTS: usize = 2;
+pub const OP_GEMM_I32: usize = 3;
 
 /// Kernel (S12) counters: decoded output bytes and call counts per
 /// (op, dispatch tier), so the SWAR-vs-SIMD share is visible live.
 #[derive(Debug)]
 pub struct KernelTelemetry {
     /// `calls[op][tier]`
-    calls: [[Counter; 3]; 3],
-    /// `bytes[op][tier]` — decoded *output* bytes (f32 lanes × 4).
-    bytes: [[Counter; 3]; 3],
+    calls: [[Counter; 3]; 4],
+    /// `bytes[op][tier]` — decoded *output* bytes (f32 lanes × 4; for
+    /// `gemm_i32`, processed packed fields × 4 — the i32s the matmul
+    /// consumed without ever materializing them).
+    bytes: [[Counter; 3]; 4],
 }
 
 impl KernelTelemetry {
@@ -319,8 +323,8 @@ impl KernelTelemetry {
         #[allow(clippy::declare_interior_mutable_const)]
         const ROW: [Counter; 3] = [C, C, C];
         KernelTelemetry {
-            calls: [ROW, ROW, ROW],
-            bytes: [ROW, ROW, ROW],
+            calls: [ROW, ROW, ROW, ROW],
+            bytes: [ROW, ROW, ROW, ROW],
         }
     }
 

@@ -235,13 +235,14 @@ impl Snapshot {
     // -- JSON wire format ---------------------------------------------------
 
     /// Serialize as compact JSON (the `metrics` wire-command payload).
-    /// Counter values ride as JSON numbers (f64); every value we emit is
-    /// far below 2^53, so the roundtrip is exact.
+    /// Counter values ride as [`json::uint`] — exact for the full u64
+    /// range (byte counters can legitimately pass 2^53; the old f64
+    /// detour silently corrupted them there).
     pub fn to_json(&self) -> String {
         let kv_obj = |kv: &[(String, u64)]| {
             Value::Object(
                 kv.iter()
-                    .map(|(k, v)| (k.clone(), json::num(*v as f64)))
+                    .map(|(k, v)| (k.clone(), json::uint(*v)))
                     .collect(),
             )
         };
@@ -251,11 +252,11 @@ impl Snapshot {
             .map(|h| {
                 json::obj(vec![
                     ("name", json::str_(h.name.clone())),
-                    ("count", json::num(h.count as f64)),
+                    ("count", json::uint(h.count)),
                     ("mean_us", json::num(h.mean_us)),
-                    ("p50_us", json::num(h.p50_us as f64)),
-                    ("p99_us", json::num(h.p99_us as f64)),
-                    ("max_us", json::num(h.max_us as f64)),
+                    ("p50_us", json::uint(h.p50_us)),
+                    ("p99_us", json::uint(h.p99_us)),
+                    ("max_us", json::uint(h.max_us)),
                 ])
             })
             .collect();
@@ -265,18 +266,18 @@ impl Snapshot {
             .map(|t| {
                 json::obj(vec![
                     ("id", json::str_(t.id.clone())),
-                    ("requests", json::num(t.requests as f64)),
-                    ("batches", json::num(t.batches as f64)),
-                    ("errors", json::num(t.errors as f64)),
-                    ("upgrades", json::num(t.upgrades as f64)),
-                    ("downgrades", json::num(t.downgrades as f64)),
-                    ("page_in_bytes", json::num(t.page_in_bytes as f64)),
-                    ("page_out_bytes", json::num(t.page_out_bytes as f64)),
+                    ("requests", json::uint(t.requests)),
+                    ("batches", json::uint(t.batches)),
+                    ("errors", json::uint(t.errors)),
+                    ("upgrades", json::uint(t.upgrades)),
+                    ("downgrades", json::uint(t.downgrades)),
+                    ("page_in_bytes", json::uint(t.page_in_bytes)),
+                    ("page_out_bytes", json::uint(t.page_out_bytes)),
                     ("request_mean_us", json::num(t.request_mean_us)),
-                    ("request_p50_us", json::num(t.request_p50_us as f64)),
-                    ("request_p99_us", json::num(t.request_p99_us as f64)),
-                    ("request_max_us", json::num(t.request_max_us as f64)),
-                    ("switch_p99_us", json::num(t.switch_p99_us as f64)),
+                    ("request_p50_us", json::uint(t.request_p50_us)),
+                    ("request_p99_us", json::uint(t.request_p99_us)),
+                    ("request_max_us", json::uint(t.request_max_us)),
+                    ("switch_p99_us", json::uint(t.switch_p99_us)),
                 ])
             })
             .collect();
@@ -285,14 +286,14 @@ impl Snapshot {
             .iter()
             .map(|e| {
                 json::obj(vec![
-                    ("at_ms", json::num(e.at_ms as f64)),
+                    ("at_ms", json::uint(e.at_ms)),
                     ("kind", json::str_(e.kind.label())),
                     ("detail", json::str_(e.detail.clone())),
                 ])
             })
             .collect();
         json::to_string(&json::obj(vec![
-            ("version", json::num(self.version as f64)),
+            ("version", json::uint(self.version)),
             ("counters", kv_obj(&self.counters)),
             ("gauges", kv_obj(&self.gauges)),
             ("histograms", json::arr(histos)),

@@ -2,8 +2,12 @@
 //!
 //! Covers the full JSON grammar we exchange with the Python build path:
 //! `artifacts/manifest.json` and the `artifacts/report/*.json` files.
-//! Numbers parse as f64 (all our values fit), objects preserve insertion
-//! order so report rendering is deterministic.
+//! Integral tokens parse as i64 ([`Value::Int`]) so 64-bit counters
+//! (telemetry bytes, snapshot fields) round-trip losslessly — an f64
+//! detour corrupts above 2^53; everything else parses as f64. Objects
+//! preserve insertion order so report rendering is deterministic. The
+//! writer never emits bare `NaN`/`inf` (not JSON): non-finite f64
+//! serializes as `null`.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -16,6 +20,9 @@ pub enum Value {
     Null,
     Bool(bool),
     Num(f64),
+    /// Integral number token (no `.`/`e`): kept as i64 so u64-scale
+    /// counters survive a snapshot round-trip bit-exactly.
+    Int(i64),
     Str(String),
     Array(Vec<Value>),
     /// Insertion-ordered key/value pairs.
@@ -44,16 +51,48 @@ impl Value {
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Value::Num(n) => Ok(*n),
+            Value::Int(i) => Ok(*i as f64),
             _ => bail!("expected number, got {self:?}"),
         }
     }
 
+    /// Lossless u64: [`Value::Int`] converts exactly (negatives are an
+    /// error, not 0); an f64 is accepted only when it is integral and
+    /// within the exactly-representable range (< 2^53) — silently
+    /// truncating 18446744073709551615.0 was how snapshot counters
+    /// corrupted.
     pub fn as_u64(&self) -> Result<u64> {
-        Ok(self.as_f64()? as u64)
+        match self {
+            Value::Int(i) => u64::try_from(*i)
+                .map_err(|_| anyhow!("expected unsigned integer, got {i}")),
+            Value::Num(n) => {
+                if n.fract() == 0.0 && *n >= 0.0 && *n < 9_007_199_254_740_992.0 {
+                    Ok(*n as u64)
+                } else {
+                    bail!("expected exact unsigned integer, got {n}")
+                }
+            }
+            _ => bail!("expected number, got {self:?}"),
+        }
+    }
+
+    /// Lossless i64 (same contract as [`as_u64`](Self::as_u64)).
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            Value::Int(i) => Ok(*i),
+            Value::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 9_007_199_254_740_992.0 {
+                    Ok(*n as i64)
+                } else {
+                    bail!("expected exact integer, got {n}")
+                }
+            }
+            _ => bail!("expected number, got {self:?}"),
+        }
     }
 
     pub fn as_usize(&self) -> Result<usize> {
-        Ok(self.as_f64()? as usize)
+        Ok(usize::try_from(self.as_u64()?)?)
     }
 
     pub fn as_str(&self) -> Result<&str> {
@@ -226,12 +265,22 @@ impl<'a> Parser<'a> {
 
     fn number(&mut self) -> Result<Value> {
         let start = self.i;
+        let mut integral = true;
         while self.i < self.b.len()
             && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
         {
+            if matches!(self.b[self.i], b'.' | b'e' | b'E') {
+                integral = false;
+            }
             self.i += 1;
         }
         let s = std::str::from_utf8(&self.b[start..self.i])?;
+        // integral tokens stay exact; i64 overflow falls back to f64
+        if integral {
+            if let Ok(i) = s.parse::<i64>() {
+                return Ok(Value::Int(i));
+            }
+        }
         Ok(Value::Num(s.parse::<f64>().context("bad number")?))
     }
 
@@ -308,11 +357,18 @@ fn write_value(out: &mut String, v: &Value) {
         Value::Null => out.push_str("null"),
         Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
         Value::Num(n) => {
-            if n.fract() == 0.0 && n.abs() < 9e15 {
+            if !n.is_finite() {
+                // bare NaN/inf is not JSON — a reader would reject the
+                // whole artifact, so degrade the one value instead
+                out.push_str("null");
+            } else if n.fract() == 0.0 && n.abs() < 9e15 {
                 let _ = write!(out, "{}", *n as i64);
             } else {
                 let _ = write!(out, "{n}");
             }
+        }
+        Value::Int(i) => {
+            let _ = write!(out, "{i}");
         }
         Value::Str(s) => write_str(out, s),
         Value::Array(a) => {
@@ -365,6 +421,19 @@ pub fn obj(pairs: Vec<(&str, Value)>) -> Value {
 
 pub fn num(n: f64) -> Value {
     Value::Num(n)
+}
+
+pub fn int(i: i64) -> Value {
+    Value::Int(i)
+}
+
+/// Lossless u64 builder for counters. Values past i64::MAX (never seen
+/// from real counters) degrade to f64 rather than failing the write.
+pub fn uint(u: u64) -> Value {
+    match i64::try_from(u) {
+        Ok(i) => Value::Int(i),
+        Err(_) => Value::Num(u as f64),
+    }
 }
 
 pub fn bool_(b: bool) -> Value {
@@ -433,5 +502,51 @@ mod tests {
         let v = parse(r#"{"z":1,"a":2,"m":3}"#).unwrap();
         let keys: Vec<_> = v.as_object().unwrap().iter().map(|(k, _)| k.clone()).collect();
         assert_eq!(keys, ["z", "a", "m"]);
+    }
+
+    #[test]
+    fn u64_counters_roundtrip_losslessly() {
+        // 2^53 + 1 is where the old f64 detour started corrupting
+        for u in [0u64, 1, 9_007_199_254_740_993, u64::MAX / 2, i64::MAX as u64] {
+            let v = parse(&to_string(&uint(u))).unwrap();
+            assert_eq!(v.as_u64().unwrap(), u, "u={u}");
+        }
+        assert_eq!(parse("9007199254740993").unwrap().as_u64().unwrap(), 9_007_199_254_740_993);
+        assert_eq!(parse("-5").unwrap().as_i64().unwrap(), -5);
+        // negatives are an error, not 0 (the old cast mapped them to 0)
+        assert!(parse("-5").unwrap().as_u64().is_err());
+        // non-integral f64s don't silently truncate
+        assert!(Value::Num(1.5).as_u64().is_err());
+        // integral f64 in the exact range still converts (legacy artifacts)
+        assert_eq!(Value::Num(42.0).as_u64().unwrap(), 42);
+        assert_eq!(Value::Num(42.0).as_usize().unwrap(), 42);
+        // past 2^53 an f64 is no longer exact — reject instead of guessing
+        assert!(Value::Num(2f64.powi(60)).as_u64().is_err());
+    }
+
+    #[test]
+    fn non_finite_writes_null_not_bare_nan() {
+        let v = obj(vec![
+            ("ok", num(1.5)),
+            ("nan", num(f64::NAN)),
+            ("inf", num(f64::INFINITY)),
+            ("ninf", num(f64::NEG_INFINITY)),
+        ]);
+        let s = to_string(&v);
+        assert_eq!(s, r#"{"ok":1.5,"nan":null,"inf":null,"ninf":null}"#);
+        // and the output is valid JSON again
+        let back = parse(&s).unwrap();
+        assert!(back.get("nan").unwrap().is_null());
+    }
+
+    #[test]
+    fn int_tokens_parse_exact_and_overflow_falls_back() {
+        assert_eq!(parse("7").unwrap(), Value::Int(7));
+        assert_eq!(parse(&i64::MIN.to_string()).unwrap(), Value::Int(i64::MIN));
+        // past i64: still parses (as f64), never errors
+        let big = parse("99999999999999999999999999").unwrap();
+        assert!(matches!(big, Value::Num(_)));
+        // fractional and exponent forms stay f64
+        assert_eq!(parse("2e3").unwrap(), Value::Num(2000.0));
     }
 }

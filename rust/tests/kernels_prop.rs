@@ -4,7 +4,14 @@
 //! `unpack → recompose → dequant` composition — over every legal
 //! `(n, h)`, compensated and uncompensated `w_low`, channel counts that
 //! do and don't divide the lane block, and lengths not divisible by
-//! `lanes(bits)` (the padded-final-word edge).
+//! `lanes(bits)` (the padded-final-word edge). Channel counts always
+//! divide the element count — a mis-dividing count is rejected by the
+//! kernels (pinned by unit tests in `kernels::mod`).
+//!
+//! The int-domain GEMM gets the same treatment: all tiers bitwise
+//! identical (including i32 wraparound), and in the exact float regime
+//! the whole dequantization-free forward is bitwise equal to
+//! decode-then-matmul for every legal `(n, h)`.
 
 use nestquant::bits::{int_range, lanes, PackedTensor};
 use nestquant::container;
@@ -71,11 +78,15 @@ fn fused_unpack_dequant_equals_composition() {
             40,
             move |r: &mut Rng, scale| {
                 let len = gen_len(r, scale, bits);
+                let opts = [1usize, 2, 3, 4, 7, 8, 16, 32, 33, len.max(1)];
+                let c = opts[r.index(opts.len())];
+                // channel count must divide the element count (the
+                // kernels reject a mis-dividing count) — round up to
+                // the next multiple, keeping the word-straddle bias
+                let len = len.div_ceil(c) * c;
                 let (lo, hi) = int_range(bits);
                 let vals: Vec<i32> =
                     (0..len).map(|_| r.int(lo as i64, hi as i64) as i32).collect();
-                let opts = [1usize, 2, 3, 4, 7, 8, 16, 32, 33, len.max(1)];
-                let c = opts[r.index(opts.len())];
                 let scales = gen_scales(r, c);
                 let mul = *[1.0f32, 2.0, 16.0, 0.5].get(r.index(4)).unwrap();
                 (vals, scales, mul)
@@ -120,11 +131,13 @@ fn fused_recompose_dequant_equals_composition_all_nh() {
                     6,
                     move |r: &mut Rng, scale| {
                         let len = gen_len(r, scale, if r.bool() { h } else { low_bits });
+                        let opts = [1usize, 2, 3, 5, 8, 16, 64];
+                        let c = opts[r.index(opts.len())];
+                        let len = len.div_ceil(c) * c;
                         let (lo, hi) = int_range(n);
                         let vals: Vec<i32> =
                             (0..len).map(|_| r.int(lo as i64, hi as i64) as i32).collect();
-                        let opts = [1usize, 2, 3, 5, 8, 16, 64];
-                        let scales = gen_scales(r, opts[r.index(opts.len())]);
+                        let scales = gen_scales(r, c);
                         let method = *[Rounding::BitShift, Rounding::Rtn, Rounding::Up]
                             .get(r.index(3))
                             .unwrap();
@@ -199,16 +212,17 @@ fn env_override_and_graceful_fallback() {
 
     // plan_for never panics for any tier on any host, and whatever
     // sub-path Simd resolved to still decodes bit-identically
-    let t = PackedTensor::pack(&[-3, 1, 4, -1, 5, -2, 6], 5).unwrap();
+    // (8 values over 2 channels — counts must divide)
+    let t = PackedTensor::pack(&[-3, 1, 4, -1, 5, -2, 6, 3], 5).unwrap();
     let scales = [0.25f32, 0.5];
     let mut want = Vec::new();
     kernels::plan_for(Tier::Scalar)
-        .unpack_dequant_into(&t.to_le_bytes(), 5, 7, &scales, 2.0, &mut want);
+        .unpack_dequant_into(&t.to_le_bytes(), 5, 8, &scales, 2.0, &mut want);
     for tier in Tier::all() {
         let plan = kernels::plan_for(tier);
         assert!(!plan.path.is_empty(), "{tier}: path must be resolved");
         let mut got = Vec::new();
-        plan.unpack_dequant_into(&t.to_le_bytes(), 5, 7, &scales, 2.0, &mut got);
+        plan.unpack_dequant_into(&t.to_le_bytes(), 5, 8, &scales, 2.0, &mut got);
         assert_eq!(got, want, "tier {tier} (path {})", plan.path);
     }
 }
@@ -262,6 +276,155 @@ fn packed_view_fused_paths_equal_composition() {
             let mut legacy_full = Vec::new();
             quant::dequant(&rec, &sc, &mut legacy_full);
             assert_eq!(fused_full, legacy_full, "full-bit INT({n}|{h}) {}", t.name());
+        }
+    }
+}
+
+/// The int-domain GEMM is bitwise identical across every dispatch tier
+/// for every packable width — including full-range i32 activations
+/// that force wraparound (the contract is wrapping arithmetic, so
+/// overflow is defined and must agree between the scalar cursor, the
+/// SWAR word decoder, and whatever vector sub-path SIMD resolved to),
+/// and row x class shapes whose tails straddle packed words.
+#[test]
+fn gemm_tiers_bit_identical_all_widths() {
+    for bits in 2..=16u8 {
+        propcheck::check(
+            &format!("kernels-gemm-{bits}"),
+            30,
+            move |r: &mut Rng, scale| {
+                let opts = [1usize, 2, 3, 5, 8, 16, 33];
+                let classes = opts[r.index(opts.len())];
+                let rows = r.index(((40.0 * scale) as usize).max(1)) + 1;
+                let (lo, hi) = int_range(bits);
+                let vals: Vec<i32> = (0..rows * classes)
+                    .map(|_| r.int(lo as i64, hi as i64) as i32)
+                    .collect();
+                let x: Vec<i32> = (0..rows)
+                    .map(|_| r.int(i32::MIN as i64, i32::MAX as i64) as i32)
+                    .collect();
+                (vals, x, classes)
+            },
+            move |(vals, x, classes)| {
+                let t = PackedTensor::pack(vals, bits).unwrap();
+                let bytes = t.to_le_bytes();
+                let mut want = Vec::new();
+                kernels::plan_for(Tier::Scalar)
+                    .gemm_i32_into(&bytes, bits, x, *classes, &mut want);
+                // naive wrapping reference, independent of the cursor
+                let mut naive = vec![0i32; *classes];
+                for (row, &xv) in vals.chunks(*classes).zip(x.iter()) {
+                    for (a, &w) in naive.iter_mut().zip(row) {
+                        *a = a.wrapping_add(xv.wrapping_mul(w));
+                    }
+                }
+                if want != naive {
+                    return false;
+                }
+                let mut got = Vec::new();
+                Tier::all().into_iter().all(|tier| {
+                    kernels::plan_for(tier).gemm_i32_into(&bytes, bits, x, *classes, &mut got);
+                    got == want
+                })
+            },
+        );
+    }
+}
+
+/// In the exact float regime — power-of-two scales, integer-grid
+/// activations on a power-of-two step, partial sums far below 2^24 —
+/// every term of the f32-decode matmul is exactly representable, so
+/// the dequantization-free forward must be *bitwise* equal to
+/// decode-then-matmul: part-bit (`s·2^l·w_high`) and full-bit
+/// (`s·(w_high·2^l + w_low)` recomposed in the i64 epilogue), every
+/// legal `(n, h)`, every tier. Outside this regime the paths differ
+/// only by activation-quantization error (bounded at the tenant
+/// level); in it, any mismatch is a kernel or epilogue bug.
+#[test]
+fn int_domain_forward_equals_f32_decode_in_exact_regime() {
+    for n in 3..=16u8 {
+        for h in 2..n {
+            let cfg = NestConfig::new(n, h).unwrap();
+            if cfg.low_bits() < 2 {
+                continue; // 1-bit residuals are not packable
+            }
+            let mut r = Rng::new(0x6E37 ^ ((n as u64) << 8) ^ h as u64);
+            for (rows, classes) in [(1usize, 1usize), (7, 5), (13, 3), (16, 8)] {
+                let len = rows * classes;
+                let (lo, hi) = int_range(n);
+                let w_int: Vec<i32> =
+                    (0..len).map(|_| r.int(lo as i64, hi as i64) as i32).collect();
+                let (hs, ls) = nest::decompose(&w_int, cfg, Rounding::BitShift, true);
+                let th = PackedTensor::pack(&hs, h).unwrap();
+                let tl = PackedTensor::pack(&ls, cfg.low_bits()).unwrap();
+                let (hb, lb) = (th.to_le_bytes(), tl.to_le_bytes());
+                // pow2 scales and activation step: every f32 product
+                // and partial sum below is exact (|x_int| ≤ 8,
+                // |w| ≤ 2^15, rows ≤ 16 → sums < 2^23 < 2^24)
+                let scales: Vec<f32> =
+                    (0..classes).map(|c| 0.25 / (1u32 << (c % 4)) as f32).collect();
+                let x_int: Vec<i32> = (0..rows).map(|_| r.int(-8, 8) as i32).collect();
+                let sx = 0.0078125f32; // 2^-7
+                let x: Vec<f32> = x_int.iter().map(|&v| v as f32 * sx).collect();
+
+                let mut w_part = Vec::new();
+                kernels::unpack_dequant_into(
+                    &hb,
+                    h,
+                    len,
+                    &scales,
+                    cfg.scale_inflation(),
+                    &mut w_part,
+                );
+                let mut w_full = Vec::new();
+                kernels::recompose_dequant_into(
+                    &hb,
+                    h,
+                    &lb,
+                    cfg.low_bits(),
+                    cfg.l(),
+                    len,
+                    &scales,
+                    &mut w_full,
+                );
+                let matmul = |w: &[f32]| -> Vec<f32> {
+                    let mut out = vec![0f32; classes];
+                    for (row, &xv) in w.chunks(classes).zip(&x) {
+                        for (o, &wv) in out.iter_mut().zip(row) {
+                            *o += xv * wv;
+                        }
+                    }
+                    out
+                };
+                let want_part = matmul(&w_part);
+                let want_full = matmul(&w_full);
+
+                let (mut acc_hi, mut acc_lo) = (Vec::new(), Vec::new());
+                for tier in Tier::all() {
+                    let plan = kernels::plan_for(tier);
+                    plan.gemm_i32_into(&hb, h, &x_int, classes, &mut acc_hi);
+                    let got_part: Vec<f32> = acc_hi
+                        .iter()
+                        .zip(&scales)
+                        .map(|(&a, &s)| a as f32 * (sx * (cfg.scale_inflation() * s)))
+                        .collect();
+                    assert_eq!(
+                        got_part, want_part,
+                        "part-bit INT({n}|{h}) {rows}x{classes} tier {tier}"
+                    );
+                    plan.gemm_i32_into(&lb, cfg.low_bits(), &x_int, classes, &mut acc_lo);
+                    let got_full: Vec<f32> = (0..classes)
+                        .map(|c| {
+                            let v = ((acc_hi[c] as i64) << cfg.l()) + acc_lo[c] as i64;
+                            v as f32 * (sx * scales[c])
+                        })
+                        .collect();
+                    assert_eq!(
+                        got_full, want_full,
+                        "full-bit INT({n}|{h}) {rows}x{classes} tier {tier}"
+                    );
+                }
+            }
         }
     }
 }
