@@ -45,6 +45,7 @@ fn main() {
         boxed,
         ServerConfig {
             max_wait: Duration::from_micros(200),
+            ..ServerConfig::default()
         },
     )
     .unwrap();

@@ -14,8 +14,10 @@
 //! server): clients send `infer` whose payload is
 //! `u16 id_len | model id | flattened NHWC f32 image`
 //! ([`crate::transport::encode_tagged`]); the server replies `logits`
-//! (same tagged form) or `error` (utf8). `models` lists the hosted
-//! model ids (newline-joined). `stop` shuts the server down.
+//! (same tagged form), `error` (utf8), or `busy` (utf8 — typed
+//! overload refusal from queue shedding or an open per-tenant circuit
+//! breaker; the client should back off and retry). `models` lists the
+//! hosted model ids (newline-joined). `stop` shuts the server down.
 //!
 //! Each connection is an explicit state machine on the loop: a request
 //! pauses the connection (dropping read interest) until its reply is
@@ -37,10 +39,11 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context, Result};
 
+use crate::faults::{self, Breaker};
 use crate::nq_trace;
 use crate::reactor::{
-    self, BatchPolicy, ConnId, Ctl, Entry, FairScheduler, ReactorHandle, ReactorOpts, Remote,
-    Service, Work,
+    self, Admit, BatchPolicy, ConnId, Ctl, Entry, FairScheduler, ReactorHandle, ReactorOpts,
+    Remote, Service, Work,
 };
 use crate::telemetry::{registry, Snapshot, TraceKind};
 use crate::transport::{
@@ -54,12 +57,24 @@ use super::{Coordinator, Decision, Metrics, State, SwitchCost, Variant};
 #[derive(Debug, Clone, Copy)]
 pub struct ServerConfig {
     pub max_wait: Duration,
+    /// Per-tenant infer queue depth cap: pushes beyond it are shed
+    /// with a typed `busy` reply instead of queuing without bound.
+    pub infer_queue_cap: usize,
+    /// Consecutive executor failures before a tenant's circuit breaker
+    /// opens (requests then get `busy` until the cooldown elapses and a
+    /// half-open probe succeeds).
+    pub breaker_threshold: u32,
+    /// How long an open breaker refuses traffic before probing.
+    pub breaker_cooldown: Duration,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
             max_wait: Duration::from_millis(5),
+            infer_queue_cap: 1024,
+            breaker_threshold: 5,
+            breaker_cooldown: Duration::from_millis(500),
         }
     }
 }
@@ -144,25 +159,33 @@ impl TenantExecutor for Coordinator {
 /// single-tenant [`serve`] entry point wraps its coordinator in this.
 pub struct SharedCoordinator(pub Arc<Mutex<Coordinator>>);
 
+impl SharedCoordinator {
+    /// Poison-recovering lock: a panic isolated by the worker pool must
+    /// not brick the shared coordinator for out-of-server drivers.
+    fn lock(&self) -> std::sync::MutexGuard<'_, Coordinator> {
+        self.0.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
 impl TenantExecutor for SharedCoordinator {
     fn shape(&self) -> (usize, usize, usize) {
-        self.0.lock().unwrap().shape()
+        self.lock().shape()
     }
 
     fn run_batch(&mut self, input: &[f32]) -> Result<Vec<f32>> {
-        self.0.lock().unwrap().infer_batch(input)
+        self.lock().infer_batch(input)
     }
 
     fn switch(&mut self, decision: Decision) -> Result<Option<SwitchCost>> {
-        self.0.lock().unwrap().apply(decision)
+        self.lock().apply(decision)
     }
 
     fn variant(&self) -> Variant {
-        self.0.lock().unwrap().variant()
+        self.lock().variant()
     }
 
     fn metrics(&self) -> Option<Arc<Metrics>> {
-        Some(Arc::clone(&self.0.lock().unwrap().metrics))
+        Some(Arc::clone(&self.lock().metrics))
     }
 
     fn switch_is_metered(&self) -> bool {
@@ -178,9 +201,31 @@ struct Tenant {
     index: usize,
     exec: Arc<Mutex<Box<dyn TenantExecutor>>>,
     metrics: Arc<Metrics>,
+    /// Per-tenant circuit breaker: opens after consecutive executor
+    /// failures so a persistently broken tenant fails fast with `busy`
+    /// instead of burning worker time, and recovers via a half-open
+    /// probe. Other tenants are unaffected.
+    breaker: Breaker,
     image_len: usize,
     batch_size: usize,
     classes: usize,
+}
+
+impl Tenant {
+    /// Lock the executor, recovering from poison: a worker panic is
+    /// isolated by `catch_unwind`, so the executor state a later batch
+    /// sees is whatever the panicking batch left — the breaker, not the
+    /// mutex, decides whether the tenant keeps taking traffic.
+    fn exec(&self) -> std::sync::MutexGuard<'_, Box<dyn TenantExecutor>> {
+        self.exec.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Publish the breaker state to this tenant's scrape-visible gauge.
+    fn publish_breaker(&self) {
+        self.metrics
+            .breaker_state
+            .store(self.breaker.state().code(), Ordering::Relaxed);
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -213,9 +258,7 @@ impl ServerHandle {
 
     /// Variant one hosted model currently serves.
     pub fn variant(&self, model: &str) -> Option<Variant> {
-        self.tenants
-            .get(model)
-            .map(|t| t.exec.lock().unwrap().variant())
+        self.tenants.get(model).map(|t| t.exec().variant())
     }
 
     /// Apply switch advice to one hosted model. Serialized with that
@@ -226,7 +269,7 @@ impl ServerHandle {
             .get(model)
             .ok_or_else(|| anyhow::anyhow!("unknown model {model:?}"))?;
         let (cost, metered) = {
-            let mut e = t.exec.lock().unwrap();
+            let mut e = t.exec();
             (e.switch(decision)?, e.switch_is_metered())
         };
         if let (Some(c), false) = (&cost, metered) {
@@ -341,6 +384,7 @@ pub fn serve_tenants(
                 index: 0, // fixed up below once the id order is final
                 exec: Arc::new(Mutex::new(exec)),
                 metrics,
+                breaker: Breaker::new(config.breaker_threshold, config.breaker_cooldown),
                 image_len,
                 batch_size,
                 classes,
@@ -360,7 +404,8 @@ pub fn serve_tenants(
         weights.push(1u32);
     }
     let tenants = Arc::new(map);
-    let sched: Arc<FairScheduler<Job>> = Arc::new(FairScheduler::new(&weights));
+    let sched: Arc<FairScheduler<Job>> =
+        Arc::new(FairScheduler::with_infer_cap(&weights, config.infer_queue_cap));
     let inject: Inject = Arc::new(Mutex::new(Vec::new()));
     let stop = Arc::new(AtomicBool::new(false));
 
@@ -405,7 +450,21 @@ pub fn serve_tenants(
         workers.push(
             std::thread::Builder::new()
                 .name(format!("nq-worker-{i}"))
-                .spawn(move || worker_loop(&ctx))?,
+                // Respawn-in-place: a panic escaping the loop (batch
+                // panics are already isolated inside run_infer_batch)
+                // restarts it on the same thread, so the pool never
+                // shrinks and the thread count stays bounded.
+                .spawn(move || loop {
+                    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        worker_loop(&ctx)
+                    })) {
+                        Ok(()) => return, // clean shutdown
+                        Err(_) => {
+                            registry().faults.worker_panics.inc();
+                            nq_trace!(TraceKind::WorkerPanic, "nq-worker-{i} respawned after panic");
+                        }
+                    }
+                })?,
         );
     }
 
@@ -495,13 +554,36 @@ impl Service for RouterService {
             (FrameKind::Control, "infer") => match route_infer(&frame.payload, &self.tenants) {
                 Ok((tenant, model, image)) => {
                     let id = model.clone();
-                    let ok = self
-                        .sched
-                        .push_infer(tenant, Job::Infer { conn, model, image });
-                    if ok {
-                        registry().serving.queue_depth.inc();
+                    let t = &self.tenants[&id];
+                    // Circuit-breaker gate: an open circuit fails fast
+                    // with a typed `busy` before the request costs queue
+                    // space or worker time. `admit` may flip the breaker
+                    // to half-open, so re-publish the gauge either way.
+                    let admitted = t.breaker.admit();
+                    t.publish_breaker();
+                    if !admitted {
+                        ctl.send(conn, busy_frame(format!("{id}: circuit open, retry later")));
+                        return;
                     }
-                    self.enqueue(conn, ctl, ok, &id);
+                    match self
+                        .sched
+                        .push_infer(tenant, Job::Infer { conn, model, image })
+                    {
+                        Admit::Queued => {
+                            registry().serving.queue_depth.inc();
+                            self.in_flight.insert(conn);
+                            ctl.pause(conn);
+                        }
+                        Admit::Shed => {
+                            ctl.send(conn, busy_frame(format!("{id}: queue full, retry later")));
+                        }
+                        Admit::Closed => {
+                            ctl.send(
+                                conn,
+                                error_frame(format!("{id}: server shutting down").into_bytes()),
+                            );
+                        }
+                    }
                 }
                 Err(e) => {
                     ctl.send(conn, error_frame(format!("{e:#}").into_bytes()));
@@ -541,6 +623,16 @@ fn error_frame(msg: impl Into<Vec<u8>>) -> Frame {
     Frame {
         kind: FrameKind::Control,
         name: "error".into(),
+        payload: msg.into(),
+    }
+}
+
+/// Typed overload refusal (shed queue or open breaker): the connection
+/// stays open and the client should back off and retry.
+fn busy_frame(msg: impl Into<Vec<u8>>) -> Frame {
+    Frame {
+        kind: FrameKind::Control,
+        name: "busy".into(),
         payload: msg.into(),
     }
 }
@@ -669,13 +761,33 @@ fn run_infer_batch(ctx: &WorkerCtx, t: usize, entries: Vec<Entry<Job>>) {
         }
     }
     let t0 = Instant::now();
-    let result = {
-        let mut e = tenant.exec.lock().unwrap();
-        e.run_batch(&input)
+    // The `worker.job` failpoint covers the whole executor section, so
+    // an injected panic exercises the same isolation a real one gets:
+    // catch_unwind contains it, every request in the batch receives a
+    // typed error, the poisoned mutex is recovered on the next lock,
+    // and the tenant keeps serving.
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        faults::fail_point("worker.job")?;
+        tenant.exec().run_batch(&input)
+    }));
+    let result = match caught {
+        Ok(r) => r,
+        Err(panic) => {
+            registry().faults.worker_panics.inc();
+            let msg = panic_message(panic.as_ref());
+            nq_trace!(
+                TraceKind::WorkerPanic,
+                "{}: batch panicked: {msg}",
+                ctx.order[t]
+            );
+            Err(anyhow::anyhow!("worker panicked while executing batch: {msg}"))
+        }
     };
     let mut out = Vec::with_capacity(entries.len());
     match result {
         Ok(logits) => {
+            tenant.breaker.on_success();
+            tenant.publish_breaker();
             tenant.metrics.requests.fetch_add(occupancy, Ordering::Relaxed);
             tenant.metrics.batches.fetch_add(1, Ordering::Relaxed);
             tenant
@@ -710,6 +822,8 @@ fn run_infer_batch(ctx: &WorkerCtx, t: usize, entries: Vec<Entry<Job>>) {
             }
         }
         Err(e2) => {
+            tenant.breaker.on_failure();
+            tenant.publish_breaker();
             tenant.metrics.errors.fetch_add(occupancy, Ordering::Relaxed);
             registry().serving.errors.add(occupancy);
             let msg = format!("{e2:#}");
@@ -723,6 +837,18 @@ fn run_infer_batch(ctx: &WorkerCtx, t: usize, entries: Vec<Entry<Job>>) {
         }
     }
     ctx.reply(out);
+}
+
+/// Best-effort text of a caught panic payload (panics carry `&str` or
+/// `String` in practice).
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -771,6 +897,7 @@ impl Client {
                     .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
                     .collect())
             }
+            "busy" => anyhow::bail!("server busy: {}", String::from_utf8_lossy(&reply.payload)),
             "error" => anyhow::bail!("server error: {}", String::from_utf8_lossy(&reply.payload)),
             other => anyhow::bail!("unexpected reply {other:?}"),
         }

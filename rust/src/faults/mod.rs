@@ -1,0 +1,732 @@
+//! Failpoints (S15): process-global, deterministic fault injection plus
+//! the graceful-degradation primitives built on top of it.
+//!
+//! A *failpoint* is a named site in production code — `store.read_b`,
+//! `fleet.chunk`, `worker.job` — that normally does nothing. When armed
+//! (via the `NQ_FAULTS` env var or programmatically from a test), the
+//! site fires a fault: a typed error, an injected delay, or a panic.
+//! Arming is process-global so chaos tests exercise the exact binaries
+//! that ship, and every probabilistic decision comes from a per-site
+//! seeded [`Rng`], so a chaos run replays bit-for-bit from its seed.
+//!
+//! **Zero cost when off**: a disabled check is one relaxed atomic load
+//! — the same discipline as `nq_trace!`. Sites only take the registry
+//! lock once something is armed.
+//!
+//! Grammar (semicolon-separated specs):
+//!
+//! ```text
+//! NQ_FAULTS=store.read_b=err:1;fleet.chunk=delay_ms:50;worker.job=panic:0.01@7
+//!           site        =mode:arg                                       @seed
+//! ```
+//!
+//! - `err:P`      — return a typed error with probability `P` ∈ [0, 1]
+//! - `delay_ms:N` — sleep `N` milliseconds, then continue normally
+//! - `panic:P`    — panic with probability `P` (exercises the worker
+//!   pool's `catch_unwind` isolation)
+//! - `@seed`      — per-site PRNG seed; defaults to a hash of the site
+//!   name so replay is deterministic even unseeded
+//!
+//! Site names follow `layer.verb`: `store.read_a`, `store.read_b`,
+//! `store.crc`, `store.evict`, `transport.send`, `transport.recv`,
+//! `fleet.chunk`, `fleet.ack`, `client.chunk`, `worker.job`.
+//!
+//! The module also hosts the two degradation building blocks the
+//! serving stack composes with failpoints: [`Breaker`], a per-tenant
+//! circuit breaker (N consecutive failures → open with cooldown →
+//! half-open probe), and [`Backoff`], deterministic exponential retry
+//! delays with full jitter.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::nq_trace;
+use crate::telemetry::{registry, TraceKind};
+use crate::util::prng::Rng;
+
+// ---------------------------------------------------------------------------
+// specs and actions
+// ---------------------------------------------------------------------------
+
+/// What an armed failpoint does when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultMode {
+    /// The site returns a typed error.
+    Err,
+    /// The site sleeps for the duration, then proceeds normally.
+    Delay(Duration),
+    /// The site panics (isolated by the worker pool's `catch_unwind`).
+    Panic,
+}
+
+/// The fired outcome a site must enact (see [`check`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Return an injected error.
+    Err,
+    /// Sleep this long, then continue.
+    Delay(Duration),
+    /// Panic now.
+    Panic,
+}
+
+/// One armed fault: what to do, how often, and from which seed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    pub mode: FaultMode,
+    /// Firing probability in [0, 1], evaluated per check from the
+    /// site's PRNG (always consumed, so replays stay aligned).
+    pub prob: f64,
+    /// Checks to pass through untouched before the fault is eligible
+    /// (programmatic arming only — e.g. "fail after N chunks").
+    pub skip: u64,
+    /// Cap on total fires; `None` is unlimited.
+    pub max_fires: Option<u64>,
+    /// PRNG seed for deterministic replay.
+    pub seed: u64,
+}
+
+impl FaultSpec {
+    /// A spec that fires `mode` on every check (prob 1, no skip/cap).
+    pub fn always(mode: FaultMode) -> FaultSpec {
+        FaultSpec {
+            mode,
+            prob: 1.0,
+            skip: 0,
+            max_fires: None,
+            seed: 0,
+        }
+    }
+
+    /// Builder: pass through the first `n` checks before firing.
+    pub fn after(mut self, n: u64) -> FaultSpec {
+        self.skip = n;
+        self
+    }
+
+    /// Builder: fire at most `n` times, then fall dormant.
+    pub fn times(mut self, n: u64) -> FaultSpec {
+        self.max_fires = Some(n);
+        self
+    }
+
+    /// Builder: fire with probability `p` from `seed`.
+    pub fn with_prob(mut self, p: f64, seed: u64) -> FaultSpec {
+        self.prob = p;
+        self.seed = seed;
+        self
+    }
+}
+
+struct SiteState {
+    spec: FaultSpec,
+    rng: Rng,
+    checks: u64,
+    fires: u64,
+}
+
+impl SiteState {
+    fn new(spec: FaultSpec) -> SiteState {
+        SiteState {
+            rng: Rng::new(spec.seed),
+            spec,
+            checks: 0,
+            fires: 0,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the global registry
+// ---------------------------------------------------------------------------
+
+const UNINIT: u8 = 0;
+const OFF: u8 = 1;
+const ON: u8 = 2;
+
+/// Tri-state gate: `UNINIT` until the first check or arm parses
+/// `NQ_FAULTS`, then `OFF`/`ON`. A disabled check is exactly one
+/// relaxed load of this.
+static STATE: AtomicU8 = AtomicU8::new(UNINIT);
+
+fn sites() -> &'static Mutex<HashMap<String, SiteState>> {
+    static SITES: OnceLock<Mutex<HashMap<String, SiteState>>> = OnceLock::new();
+    SITES.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Parse `NQ_FAULTS` exactly once (idempotent; bad specs are reported
+/// on stderr and skipped so a typo degrades instead of aborting).
+/// Must be called with the sites lock held.
+fn init_locked(map: &mut HashMap<String, SiteState>) {
+    if STATE.load(Ordering::Relaxed) != UNINIT {
+        return;
+    }
+    if let Ok(val) = std::env::var("NQ_FAULTS") {
+        for spec in val.split(';').filter(|s| !s.trim().is_empty()) {
+            match parse_spec(spec) {
+                Ok((site, fs)) => {
+                    map.insert(site, SiteState::new(fs));
+                }
+                Err(e) => eprintln!("NQ_FAULTS: ignoring bad spec {spec:?}: {e}"),
+            }
+        }
+    }
+    let armed = !map.is_empty();
+    STATE.store(if armed { ON } else { OFF }, Ordering::Relaxed);
+}
+
+/// Parse one `site=mode:arg[@seed]` spec.
+pub fn parse_spec(spec: &str) -> Result<(String, FaultSpec)> {
+    let spec = spec.trim();
+    let (site, rest) = spec
+        .split_once('=')
+        .with_context(|| format!("fault spec {spec:?}: expected site=mode:arg"))?;
+    let site = site.trim();
+    anyhow::ensure!(
+        !site.is_empty() && site.chars().all(|c| c.is_ascii_alphanumeric() || ".-_".contains(c)),
+        "fault spec {spec:?}: bad site name {site:?}"
+    );
+    let (rest, seed) = match rest.rsplit_once('@') {
+        Some((r, s)) => (
+            r,
+            s.trim()
+                .parse::<u64>()
+                .with_context(|| format!("fault spec {spec:?}: bad seed {s:?}"))?,
+        ),
+        None => (rest, site_seed(site)),
+    };
+    let (mode, arg) = rest
+        .split_once(':')
+        .with_context(|| format!("fault spec {spec:?}: expected mode:arg"))?;
+    let (mode, prob) = match mode.trim() {
+        "err" => (FaultMode::Err, parse_prob(spec, arg)?),
+        "panic" => (FaultMode::Panic, parse_prob(spec, arg)?),
+        "delay_ms" => {
+            let ms: u64 = arg
+                .trim()
+                .parse()
+                .with_context(|| format!("fault spec {spec:?}: bad delay {arg:?}"))?;
+            (FaultMode::Delay(Duration::from_millis(ms)), 1.0)
+        }
+        other => bail!("fault spec {spec:?}: unknown mode {other:?}"),
+    };
+    Ok((
+        site.to_string(),
+        FaultSpec {
+            mode,
+            prob,
+            skip: 0,
+            max_fires: None,
+            seed,
+        },
+    ))
+}
+
+fn parse_prob(spec: &str, arg: &str) -> Result<f64> {
+    let p: f64 = arg
+        .trim()
+        .parse()
+        .with_context(|| format!("fault spec {spec:?}: bad probability {arg:?}"))?;
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&p),
+        "fault spec {spec:?}: probability {p} outside [0, 1]"
+    );
+    Ok(p)
+}
+
+/// Default per-site seed: FNV-1a of the site name, so an unseeded spec
+/// still replays deterministically and distinct sites decorrelate.
+/// Public so degradation helpers (e.g. [`Backoff`] jitter) can derive
+/// stable seeds from names the same way.
+pub fn site_seed(site: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in site.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Arm `site` with `spec` (replacing any existing arming). Used by
+/// chaos tests and the fleet client's disconnect shim; production
+/// arming goes through `NQ_FAULTS`.
+pub fn arm(site: impl Into<String>, spec: FaultSpec) {
+    let mut g = sites().lock().unwrap_or_else(|e| e.into_inner());
+    init_locked(&mut g);
+    g.insert(site.into(), SiteState::new(spec));
+    STATE.store(ON, Ordering::Relaxed);
+}
+
+/// Arm every spec in an `NQ_FAULTS`-grammar string.
+pub fn arm_from_str(s: &str) -> Result<()> {
+    for spec in s.split(';').filter(|s| !s.trim().is_empty()) {
+        let (site, fs) = parse_spec(spec)?;
+        arm(site, fs);
+    }
+    Ok(())
+}
+
+/// Disarm one site. Returns whether it was armed.
+pub fn disarm(site: &str) -> bool {
+    let mut g = sites().lock().unwrap_or_else(|e| e.into_inner());
+    init_locked(&mut g);
+    let was = g.remove(site).is_some();
+    if g.is_empty() {
+        STATE.store(OFF, Ordering::Relaxed);
+    }
+    was
+}
+
+/// Disarm everything; checks return to the one-load fast path.
+pub fn clear() {
+    let mut g = sites().lock().unwrap_or_else(|e| e.into_inner());
+    init_locked(&mut g);
+    g.clear();
+    STATE.store(OFF, Ordering::Relaxed);
+}
+
+/// Currently armed site names (sorted; diagnostics).
+pub fn armed_sites() -> Vec<String> {
+    let mut g = sites().lock().unwrap_or_else(|e| e.into_inner());
+    init_locked(&mut g);
+    let mut v: Vec<String> = g.keys().cloned().collect();
+    v.sort();
+    v
+}
+
+/// Evaluate the failpoint at `site`. `None` means proceed normally —
+/// and costs one relaxed atomic load when nothing is armed anywhere.
+/// A fired fault is counted (`nq_faults_fired_total` + per-site) and
+/// traced before being returned.
+#[inline]
+pub fn check(site: &str) -> Option<FaultAction> {
+    match STATE.load(Ordering::Relaxed) {
+        OFF => None,
+        ON => check_armed(site),
+        _ => {
+            let mut g = sites().lock().unwrap_or_else(|e| e.into_inner());
+            init_locked(&mut g);
+            drop(g);
+            check(site)
+        }
+    }
+}
+
+#[cold]
+fn check_armed(site: &str) -> Option<FaultAction> {
+    let mut g = sites().lock().unwrap_or_else(|e| e.into_inner());
+    let st = g.get_mut(site)?;
+    st.checks += 1;
+    if st.checks <= st.spec.skip {
+        return None;
+    }
+    if st.spec.max_fires.is_some_and(|m| st.fires >= m) {
+        return None;
+    }
+    // the roll is consumed unconditionally so a replay's PRNG stream
+    // stays aligned regardless of prob edits between runs of one seed
+    let roll = st.rng.f64();
+    if roll >= st.spec.prob {
+        return None;
+    }
+    st.fires += 1;
+    let action = match st.spec.mode {
+        FaultMode::Err => FaultAction::Err,
+        FaultMode::Delay(d) => FaultAction::Delay(d),
+        FaultMode::Panic => FaultAction::Panic,
+    };
+    drop(g);
+    registry().faults.site_fired(site);
+    nq_trace!(TraceKind::FaultFired, "{site}: {action:?}");
+    Some(action)
+}
+
+/// Site helper for fallible paths: sleeps through a `Delay`, panics on
+/// a `Panic`, returns a typed error on `Err`, and is a no-op otherwise.
+#[inline]
+pub fn fail_point(site: &str) -> Result<()> {
+    match check(site) {
+        None => Ok(()),
+        Some(FaultAction::Delay(d)) => {
+            std::thread::sleep(d);
+            Ok(())
+        }
+        Some(FaultAction::Panic) => panic!("failpoint {site}: injected panic"),
+        Some(FaultAction::Err) => Err(anyhow!("failpoint {site}: injected fault")),
+    }
+}
+
+/// Site helper for paths that branch on a fault instead of returning
+/// one (e.g. "treat this CRC as corrupt"): `true` when an `Err`-mode
+/// fault fired. Delays sleep, panics panic.
+#[inline]
+pub fn fires(site: &str) -> bool {
+    match check(site) {
+        None => false,
+        Some(FaultAction::Delay(d)) => {
+            std::thread::sleep(d);
+            false
+        }
+        Some(FaultAction::Panic) => panic!("failpoint {site}: injected panic"),
+        Some(FaultAction::Err) => true,
+    }
+}
+
+/// Number of times `site` has fired (from the telemetry ledger, so it
+/// survives [`clear`]).
+pub fn fired(site: &str) -> u64 {
+    registry()
+        .faults
+        .sites()
+        .into_iter()
+        .find(|(s, _)| s == site)
+        .map(|(_, n)| n)
+        .unwrap_or(0)
+}
+
+// ---------------------------------------------------------------------------
+// circuit breaker
+// ---------------------------------------------------------------------------
+
+/// Breaker states, also the gauge encoding surfaced per tenant
+/// (`nq_tenant_breaker_state`): 0 closed, 1 open, 2 half-open.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: requests flow.
+    Closed,
+    /// Tripped: requests are refused until the cooldown elapses.
+    Open,
+    /// Cooldown elapsed: exactly one probe request is in flight.
+    HalfOpen,
+}
+
+impl BreakerState {
+    pub fn code(self) -> u64 {
+        match self {
+            BreakerState::Closed => 0,
+            BreakerState::Open => 1,
+            BreakerState::HalfOpen => 2,
+        }
+    }
+}
+
+struct BreakerInner {
+    state: BreakerState,
+    consecutive_failures: u32,
+    opened_at: Option<Instant>,
+}
+
+/// Per-tenant circuit breaker: `threshold` consecutive executor
+/// failures trip it open; after `cooldown` the next request is
+/// admitted as a half-open probe whose outcome closes or re-opens it.
+///
+/// The caller contract is `admit()` → run → `on_success()` /
+/// `on_failure()`. A refused admit should be answered with a typed
+/// `busy` reply, never silence.
+pub struct Breaker {
+    threshold: u32,
+    cooldown: Duration,
+    inner: Mutex<BreakerInner>,
+}
+
+impl Breaker {
+    pub fn new(threshold: u32, cooldown: Duration) -> Breaker {
+        Breaker {
+            threshold: threshold.max(1),
+            cooldown,
+            inner: Mutex::new(BreakerInner {
+                state: BreakerState::Closed,
+                consecutive_failures: 0,
+                opened_at: None,
+            }),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, BreakerInner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Gate one request. `false` means refuse it (reply `busy`).
+    /// Transitions `Open` → `HalfOpen` when the cooldown has elapsed,
+    /// admitting the caller as the sole probe.
+    pub fn admit(&self) -> bool {
+        let mut g = self.lock();
+        match g.state {
+            BreakerState::Closed => true,
+            BreakerState::HalfOpen => false,
+            BreakerState::Open => {
+                let elapsed = g.opened_at.map(|t| t.elapsed() >= self.cooldown);
+                if elapsed.unwrap_or(true) {
+                    g.state = BreakerState::HalfOpen;
+                    nq_trace!(TraceKind::Breaker, "half-open probe admitted");
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Record a successful execution: closes from any state.
+    pub fn on_success(&self) {
+        let mut g = self.lock();
+        if g.state != BreakerState::Closed {
+            nq_trace!(TraceKind::Breaker, "closed after success");
+        }
+        g.state = BreakerState::Closed;
+        g.consecutive_failures = 0;
+        g.opened_at = None;
+    }
+
+    /// Record a failed execution. A half-open probe failure re-opens
+    /// immediately; otherwise `threshold` consecutive failures trip it.
+    pub fn on_failure(&self) {
+        let mut g = self.lock();
+        match g.state {
+            BreakerState::HalfOpen => {
+                g.state = BreakerState::Open;
+                g.opened_at = Some(Instant::now());
+                nq_trace!(TraceKind::Breaker, "re-opened: probe failed");
+            }
+            _ => {
+                g.consecutive_failures += 1;
+                if g.consecutive_failures >= self.threshold && g.state == BreakerState::Closed {
+                    g.state = BreakerState::Open;
+                    g.opened_at = Some(Instant::now());
+                    nq_trace!(
+                        TraceKind::Breaker,
+                        "opened after {} consecutive failures",
+                        g.consecutive_failures
+                    );
+                }
+            }
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.lock().state
+    }
+}
+
+// ---------------------------------------------------------------------------
+// retry backoff
+// ---------------------------------------------------------------------------
+
+/// Deterministic exponential backoff with full jitter: delay `i` is
+/// uniform in `[0, min(cap, base·2^i))`, drawn from a seeded [`Rng`]
+/// so retry schedules replay in chaos runs.
+#[derive(Debug, Clone)]
+pub struct Backoff {
+    base: Duration,
+    cap: Duration,
+    attempt: u32,
+    rng: Rng,
+}
+
+impl Backoff {
+    pub fn new(base: Duration, cap: Duration, seed: u64) -> Backoff {
+        Backoff {
+            base,
+            cap,
+            attempt: 0,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// The jittered delay to sleep before the next retry.
+    pub fn next_delay(&mut self) -> Duration {
+        let ceil_ms = (self.base.as_millis() as u64)
+            .saturating_mul(1u64 << self.attempt.min(20))
+            .min(self.cap.as_millis() as u64)
+            .max(1);
+        self.attempt = self.attempt.saturating_add(1);
+        Duration::from_millis((self.rng.f64() * ceil_ms as f64) as u64)
+    }
+
+    /// Retries attempted so far.
+    pub fn attempts(&self) -> u32 {
+        self.attempt
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Serializes tests that touch the process-global registry. Site
+    /// names are namespaced `test.*` so armed faults never collide with
+    /// real sites exercised by other lib tests in this process.
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    fn locked() -> std::sync::MutexGuard<'static, ()> {
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn disabled_check_is_none() {
+        let _g = locked();
+        clear();
+        assert_eq!(check("test.nowhere"), None);
+        assert!(fail_point("test.nowhere").is_ok());
+        assert!(!fires("test.nowhere"));
+    }
+
+    #[test]
+    fn grammar_parses_the_documented_examples() {
+        let (site, fs) =
+            parse_spec("store.read_b=err:1").unwrap();
+        assert_eq!(site, "store.read_b");
+        assert_eq!(fs.mode, FaultMode::Err);
+        assert_eq!(fs.prob, 1.0);
+        assert_eq!(fs.seed, site_seed("store.read_b"));
+
+        let (site, fs) = parse_spec("fleet.chunk=delay_ms:50").unwrap();
+        assert_eq!(site, "fleet.chunk");
+        assert_eq!(fs.mode, FaultMode::Delay(Duration::from_millis(50)));
+
+        let (site, fs) = parse_spec("worker.job=panic:0.01@7").unwrap();
+        assert_eq!(site, "worker.job");
+        assert_eq!(fs.mode, FaultMode::Panic);
+        assert_eq!(fs.prob, 0.01);
+        assert_eq!(fs.seed, 7);
+    }
+
+    #[test]
+    fn grammar_rejects_malformed_specs() {
+        assert!(parse_spec("no-equals").is_err());
+        assert!(parse_spec("site=badmode:1").is_err());
+        assert!(parse_spec("site=err:2").is_err(), "prob > 1");
+        assert!(parse_spec("site=err:x").is_err());
+        assert!(parse_spec("site=delay_ms:-5").is_err());
+        assert!(parse_spec("site=err:1@notanum").is_err());
+        assert!(parse_spec("bad site=err:1").is_err());
+        assert!(parse_spec("=err:1").is_err());
+    }
+
+    #[test]
+    fn seeded_fire_pattern_replays_bitwise() {
+        let _g = locked();
+        clear();
+        let spec = FaultSpec::always(FaultMode::Err).with_prob(0.5, 42);
+        let run = |spec: FaultSpec| {
+            arm("test.replay", spec);
+            let pat: Vec<bool> = (0..200).map(|_| check("test.replay").is_some()).collect();
+            clear();
+            pat
+        };
+        let a = run(spec);
+        let b = run(spec);
+        assert_eq!(a, b, "same seed, same schedule");
+        assert!(a.iter().any(|&f| f) && a.iter().any(|&f| !f));
+        let c = run(FaultSpec::always(FaultMode::Err).with_prob(0.5, 43));
+        assert_ne!(a, c, "different seed, different schedule");
+    }
+
+    #[test]
+    fn skip_and_max_fires_bound_the_fault() {
+        let _g = locked();
+        clear();
+        arm(
+            "test.bounded",
+            FaultSpec::always(FaultMode::Err).after(3).times(2),
+        );
+        let fired: Vec<bool> = (0..10).map(|_| check("test.bounded").is_some()).collect();
+        assert_eq!(
+            fired,
+            [false, false, false, true, true, false, false, false, false, false]
+        );
+        clear();
+    }
+
+    #[test]
+    fn fail_point_and_fires_enact_err_mode() {
+        let _g = locked();
+        clear();
+        arm("test.err", FaultSpec::always(FaultMode::Err));
+        let e = fail_point("test.err").unwrap_err();
+        assert!(e.to_string().contains("injected fault"), "{e}");
+        assert!(fires("test.err"));
+        assert!(fired("test.err") >= 2);
+        assert!(disarm("test.err"));
+        assert!(fail_point("test.err").is_ok());
+        clear();
+    }
+
+    #[test]
+    fn arm_from_str_arms_every_spec() {
+        let _g = locked();
+        clear();
+        arm_from_str("test.a=err:1;test.b=delay_ms:1").unwrap();
+        assert_eq!(armed_sites(), ["test.a", "test.b"]);
+        assert!(arm_from_str("test.c=bogus:1").is_err());
+        clear();
+        assert!(armed_sites().is_empty());
+    }
+
+    #[test]
+    fn delay_mode_sleeps_then_proceeds() {
+        let _g = locked();
+        clear();
+        arm(
+            "test.delay",
+            FaultSpec::always(FaultMode::Delay(Duration::from_millis(20))),
+        );
+        let t0 = Instant::now();
+        assert!(fail_point("test.delay").is_ok());
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+        clear();
+    }
+
+    #[test]
+    fn breaker_trips_cools_probes_and_recovers() {
+        let b = Breaker::new(3, Duration::from_millis(30));
+        assert_eq!(b.state(), BreakerState::Closed);
+        for _ in 0..2 {
+            assert!(b.admit());
+            b.on_failure();
+        }
+        assert_eq!(b.state(), BreakerState::Closed, "under threshold");
+        assert!(b.admit());
+        b.on_failure();
+        assert_eq!(b.state(), BreakerState::Open, "tripped at threshold");
+        assert!(!b.admit(), "refused while cooling down");
+        std::thread::sleep(Duration::from_millis(40));
+        assert!(b.admit(), "cooldown elapsed: probe admitted");
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert!(!b.admit(), "only one probe in flight");
+        b.on_failure();
+        assert_eq!(b.state(), BreakerState::Open, "probe failure re-opens");
+        std::thread::sleep(Duration::from_millis(40));
+        assert!(b.admit());
+        b.on_success();
+        assert_eq!(b.state(), BreakerState::Closed, "probe success closes");
+        assert!(b.admit());
+    }
+
+    #[test]
+    fn breaker_state_codes_are_the_gauge_encoding() {
+        assert_eq!(BreakerState::Closed.code(), 0);
+        assert_eq!(BreakerState::Open.code(), 1);
+        assert_eq!(BreakerState::HalfOpen.code(), 2);
+    }
+
+    #[test]
+    fn backoff_is_deterministic_jittered_and_capped() {
+        let base = Duration::from_millis(10);
+        let cap = Duration::from_millis(80);
+        let mut a = Backoff::new(base, cap, 9);
+        let mut b = Backoff::new(base, cap, 9);
+        let da: Vec<Duration> = (0..8).map(|_| a.next_delay()).collect();
+        let db: Vec<Duration> = (0..8).map(|_| b.next_delay()).collect();
+        assert_eq!(da, db, "same seed, same schedule");
+        assert!(da.iter().all(|d| *d < cap), "full jitter stays under cap");
+        assert_eq!(a.attempts(), 8);
+        // ceilings grow 10,20,40,80,80...: late draws can exceed the
+        // first ceiling, proving the exponent actually grows
+        assert!(da.iter().skip(3).any(|d| *d >= base), "{da:?}");
+    }
+}

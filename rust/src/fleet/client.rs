@@ -18,6 +18,7 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 use crate::container::SectionIndex;
 use crate::coordinator::{Decision, Variant};
 use crate::device::{MemoryLedger, ResourceTrace};
+use crate::faults;
 use crate::nq_trace;
 use crate::store::{Bytes, SectionSource};
 use crate::telemetry::{registry, TraceKind};
@@ -195,6 +196,16 @@ impl FleetClient {
         let mut pos = offset;
         let mut chunks = 0usize;
         loop {
+            // Failpoint `client.chunk`: the device-side stand-in for a
+            // flaky edge link — cut the connection exactly as a real
+            // mid-pull death would (acked chunks stay resumable
+            // server-side). `inject_disconnect_after_chunks` arms this.
+            if faults::fires("client.chunk") {
+                let _ = self.sock.shutdown(std::net::Shutdown::Both);
+                bail!(
+                    "connection lost pulling {model} section {section} at offset {pos} (injected)"
+                );
+            }
             if let Some(d) = deadline {
                 if Instant::now() >= d {
                     // the transfer is mid-stream: chunk frames for this
@@ -375,9 +386,11 @@ impl Default for PlaybackReport {
 /// all-or-nothing on the wire: when a pull dies mid-transfer, the fetch
 /// reconnects under the same device id and resumes from the server's
 /// last recorded ack instead of byte zero (up to
-/// [`RemoteSource::FETCH_ATTEMPTS`] attempts per fetch). Resumed vs
-/// rewound bytes are counted in the telemetry registry
-/// (`nq_fleet_resumed_bytes` / `nq_fleet_restarted_bytes`).
+/// [`RemoteSource::FETCH_ATTEMPTS`] attempts per fetch, with jittered
+/// exponential backoff between attempts so a knocked-out fleet does not
+/// stampede back in lockstep). Resumed vs rewound bytes are counted in
+/// the telemetry registry (`nq_fleet_resumed_bytes` /
+/// `nq_fleet_restarted_bytes`).
 ///
 /// Every fetch runs under a whole-transfer deadline
 /// ([`RemoteSource::DEFAULT_FETCH_TIMEOUT`] unless overridden with
@@ -393,10 +406,6 @@ pub struct RemoteSource {
     /// Memoized index (one wire round-trip): section geometry plus the
     /// integrity checksums every completed fetch is verified against.
     index: std::sync::OnceLock<SectionIndex>,
-    /// One-shot fault injection: cap the NEXT pull attempt at this many
-    /// chunks, then treat it as a dropped connection (tests exercise the
-    /// reconnect-and-resume path deterministically with this).
-    fault_chunks: Mutex<Option<usize>>,
 }
 
 impl RemoteSource {
@@ -433,16 +442,23 @@ impl RemoteSource {
             addr,
             fetch_timeout: Some(RemoteSource::DEFAULT_FETCH_TIMEOUT),
             index: std::sync::OnceLock::new(),
-            fault_chunks: Mutex::new(None),
         }
     }
 
-    /// Make the next pull attempt drop its connection after `chunks`
-    /// acked chunks (one-shot). The fetch then reconnects and resumes
-    /// from the server's recorded ack — the deterministic stand-in for a
-    /// flaky edge link, used by tests and the fleet demo.
+    /// Drop the pull connection after `chunks` acked chunks (one-shot).
+    /// The fetch then reconnects and resumes from the server's recorded
+    /// ack — the deterministic stand-in for a flaky edge link, used by
+    /// tests and the fleet demo. Thin shim over the failpoint registry:
+    /// arms the `client.chunk` site, which `pull_section_deadline`
+    /// checks once per chunk (equivalent to
+    /// `NQ_FAULTS=client.chunk=err:1` with a skip count).
     pub fn inject_disconnect_after_chunks(&self, chunks: usize) {
-        *self.fault_chunks.lock().unwrap() = Some(chunks);
+        faults::arm(
+            "client.chunk",
+            faults::FaultSpec::always(faults::FaultMode::Err)
+                .after(chunks as u64)
+                .times(1),
+        );
     }
 
     /// The memoized index, fetching it over the held client connection
@@ -511,20 +527,26 @@ impl SectionSource for RemoteSource {
         let mut c = self.client.lock().unwrap();
         let mut sink = Vec::new();
         let mut last_err = None;
+        // Jittered exponential backoff between resume attempts: a fleet
+        // of devices knocked offline by one server hiccup must not
+        // stampede back in lockstep. Seeded from the model name so a
+        // chaos run replays bitwise.
+        let mut backoff = faults::Backoff::new(
+            Duration::from_millis(10),
+            Duration::from_millis(500),
+            faults::site_seed(&self.model),
+        );
         for attempt in 0..RemoteSource::FETCH_ATTEMPTS {
             let deadline = self.fetch_timeout.map(|t| Instant::now() + t);
-            // one-shot fault injection: a capped pull stands in for a
-            // connection dying after that many acked chunks
-            let fault = self.fault_chunks.lock().unwrap().take();
             let offset = sink.len() as u64;
-            match c.pull_section_deadline(&self.model, section, offset, &mut sink, fault, deadline)
+            match c.pull_section_deadline(&self.model, section, offset, &mut sink, None, deadline)
             {
                 Ok(out) if out.completed => {
                     return self.verify(&mut c, section, sink);
                 }
                 Ok(out) => {
-                    // the injected fault: cut the socket the way a real
-                    // drop would, then fall through to reconnect/resume
+                    // a capped pull (max_chunks) stands in for a
+                    // connection dying after that many acked chunks
                     let _ = c.sock.shutdown(std::net::Shutdown::Both);
                     last_err = Some(anyhow!(
                         "connection lost pulling section {section} of {} at {}/{}",
@@ -537,11 +559,12 @@ impl SectionSource for RemoteSource {
             }
             // a failed pull aborts mid-stream (a deadline expiry even
             // shuts the socket down), so the connection is no longer on
-            // a request/response boundary. Reconnect under the same
-            // device id — the server resumes the session, so its last
-            // recorded ack is this fetch's resume point. If reconnecting
-            // fails, the dead client stays and later fetches error
-            // loudly.
+            // a request/response boundary. Back off (jittered), then
+            // reconnect under the same device id — the server resumes
+            // the session, so its last recorded ack is this fetch's
+            // resume point. If reconnecting fails, the dead client
+            // stays and later fetches error loudly.
+            std::thread::sleep(backoff.next_delay());
             let device_id = c.device_id.clone();
             let timeout = c
                 .sock

@@ -65,9 +65,10 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::container::SectionIndex;
 use crate::coordinator::SwitchPolicy;
+use crate::faults;
 use crate::reactor::{
-    self, BatchPolicy, ConnId, Ctl, FairScheduler, ReactorHandle, ReactorOpts, Remote, Service,
-    TokenBucket, Work,
+    self, Admit, BatchPolicy, ConnId, Ctl, FairScheduler, ReactorHandle, ReactorOpts, Remote,
+    Service, TokenBucket, Work,
 };
 use crate::store::{Bytes, FileSource, SectionSource};
 use crate::telemetry::{registry, LatencyHisto, Snapshot};
@@ -593,7 +594,7 @@ impl FleetService {
             }
             "pull" => {
                 let (section, offset, model) = decode_pull(payload)?;
-                let ok = self.sched.push_infer(
+                match self.sched.push_infer(
                     0,
                     FleetJob::Pull {
                         conn,
@@ -602,8 +603,13 @@ impl FleetService {
                         section,
                         offset,
                     },
-                );
-                self.gate(conn, ctl, ok);
+                ) {
+                    Admit::Queued => self.gate(conn, ctl, true),
+                    Admit::Shed => {
+                        ctl.send(conn, control("busy", b"pull queue full, retry later".to_vec()));
+                    }
+                    Admit::Closed => self.gate(conn, ctl, false),
+                }
             }
             other => bail!("unknown command {other:?}"),
         }
@@ -617,6 +623,13 @@ impl FleetService {
             ctl.close(conn);
             return;
         };
+        // Failpoint `fleet.ack`: forge a bad ack, closing only this
+        // connection — the session table keeps the last good offset, so
+        // the device resumes exactly like after a real corrupt ack.
+        if faults::fires("fleet.ack") {
+            ctl.close(conn);
+            return;
+        }
         let ok = parse_ack(frame)
             .map(|(axfer, aend)| axfer == st.xfer_id && aend == st.sent_to)
             .unwrap_or(false);
@@ -655,6 +668,14 @@ impl FleetService {
     /// Queue the next chunk of `conn`'s stream and (re)arm the ack
     /// deadline, so a dead peer cannot hold its slot past `ack_timeout`.
     fn send_chunk(&mut self, conn: ConnId, ctl: &mut Ctl) {
+        // Failpoint `fleet.chunk`: drop the connection before the chunk
+        // goes out (delay mode stalls it instead) — the transfer stays
+        // resumable from the last acked offset.
+        if faults::fail_point("fleet.chunk").is_err() {
+            self.streams.remove(&conn);
+            ctl.close(conn);
+            return;
+        }
         let Some(st) = self.streams.get_mut(&conn) else {
             return;
         };
@@ -1029,7 +1050,16 @@ impl FleetServer {
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("nq-fleet-worker-{i}"))
-                    .spawn(move || fleet_worker(&ctx))?,
+                    // respawn-in-place: a panicking job restarts the
+                    // loop on the same thread, so the pool never shrinks
+                    .spawn(move || loop {
+                        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            fleet_worker(&ctx)
+                        })) {
+                            Ok(()) => return,
+                            Err(_) => registry().faults.worker_panics.inc(),
+                        }
+                    })?,
             );
         }
 

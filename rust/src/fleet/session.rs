@@ -83,10 +83,18 @@ impl SessionTable {
         }
     }
 
+    /// Poison-recovering lock: the table is the fleet's source of truth
+    /// for resume points, and a panic isolated in a worker must not
+    /// take every device's residency state down with it (updates are
+    /// single-field writes, so any observed state is consistent).
+    fn lock(&self) -> std::sync::MutexGuard<'_, HashMap<String, DeviceSession>> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     /// Register a device (idempotent: a reconnect keeps residency and
     /// policy state, which is exactly what makes transfers resumable).
     pub fn hello(&self, id: &str) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         g.entry(id.to_string()).or_insert_with(|| {
             crate::telemetry::registry().fleet.sessions.inc();
             DeviceSession {
@@ -99,7 +107,7 @@ impl SessionTable {
     }
 
     fn with<T>(&self, id: &str, f: impl FnOnce(&mut DeviceSession) -> T) -> Result<T> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         let s = g
             .get_mut(id)
             .ok_or_else(|| anyhow!("unknown device {id:?} (hello required)"))?;
@@ -156,7 +164,7 @@ impl SessionTable {
     /// Last acked offset for a residency entry (0 when unknown): where a
     /// resumed pull should restart.
     pub fn acked(&self, id: &str, model: &str, section: Section) -> u64 {
-        let g = self.inner.lock().unwrap();
+        let g = self.lock();
         g.get(id)
             .and_then(|s| s.residency.get(&(model.to_string(), section)))
             .map(|p| p.acked)
@@ -165,7 +173,7 @@ impl SessionTable {
 
     /// Full progress snapshot for a residency entry.
     pub fn progress(&self, id: &str, model: &str, section: Section) -> Option<TransferProgress> {
-        let g = self.inner.lock().unwrap();
+        let g = self.lock();
         g.get(id)
             .and_then(|s| s.residency.get(&(model.to_string(), section)))
             .copied()
@@ -185,12 +193,12 @@ impl SessionTable {
     }
 
     pub fn device_count(&self) -> usize {
-        self.inner.lock().unwrap().len()
+        self.lock().len()
     }
 
     /// Summaries of every session, sorted by device id.
     pub fn summaries(&self) -> Vec<SessionSummary> {
-        let g = self.inner.lock().unwrap();
+        let g = self.lock();
         let mut out: Vec<SessionSummary> = g
             .iter()
             .map(|(id, s)| SessionSummary {

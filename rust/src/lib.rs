@@ -14,7 +14,9 @@
 //!   runtime-dispatched switching [`kernels`] (one-pass packed → f32
 //!   decode; scalar/SWAR/SIMD tiers behind a per-process `KernelPlan`),
 //!   the readiness-driven [`reactor`] serving core (epoll event loop +
-//!   weighted-fair worker queues) both TCP servers run on, and every
+//!   weighted-fair worker queues) both TCP servers run on, the
+//!   deterministic [`faults`] failpoint layer (chaos injection plus the
+//!   circuit-breaker/backoff degradation primitives), and every
 //!   substrate they need (packed bits, `.nq` containers with integrity
 //!   trailers, quantizer, statistics). Python never runs on the
 //!   request path.
@@ -30,6 +32,7 @@ pub mod bits;
 pub mod container;
 pub mod coordinator;
 pub mod device;
+pub mod faults;
 pub mod fleet;
 pub mod kernels;
 pub mod nest;

@@ -55,7 +55,10 @@ fn usage() -> ! {
          \x20                                    switching similarity nesting nesting-test\n\
          \x20                                    cliff combos traffic comparison ptq-cost\n\
          \x20                                    hardware libraries all\n\
-         flags: --artifacts DIR overrides the artifacts root"
+         flags: --artifacts DIR overrides the artifacts root\n\
+         env:   NQ_FAULTS=site=mode:arg[@seed];...   deterministic fault injection\n\
+         \x20                                   (e.g. store.read_b=err:1;fleet.chunk=delay_ms:50;\n\
+         \x20                                   worker.job=panic:0.01@7 — see DESIGN.md §4h)"
     );
     std::process::exit(2);
 }
@@ -498,6 +501,10 @@ fn cmd_serve_store(args: &Args) -> Result<()> {
         .map(|(id, t)| (id, Box::new(t) as Box<dyn TenantExecutor>))
         .collect();
     let handle = serve_tenants(boxed, ServerConfig::default())?;
+    let armed = nestquant::faults::armed_sites();
+    if !armed.is_empty() {
+        println!("fault injection armed (NQ_FAULTS): {}", armed.join(", "));
+    }
     println!(
         "serving {n} models from {} on {} (Section-B budget {budget_mb} MiB)",
         dir.display(),

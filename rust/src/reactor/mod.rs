@@ -55,7 +55,7 @@ use crate::transport::{self, Frame, FrameReader, FrameWriter, Meter};
 
 use poll::{Interest, PollEvent, Poller};
 
-pub use queue::{BatchPolicy, Entry, FairScheduler, Priority, RateLimit, TokenBucket, Work};
+pub use queue::{Admit, BatchPolicy, Entry, FairScheduler, Priority, RateLimit, TokenBucket, Work};
 pub use sys::raise_nofile_limit;
 
 const TOKEN_LISTENER: usize = 0;

@@ -53,6 +53,19 @@ pub struct Entry<T> {
     pub enqueued: Instant,
 }
 
+/// Outcome of [`FairScheduler::push_infer`]: admission control turns
+/// overload into a *typed* refusal instead of unbounded queue growth.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admit {
+    /// The job is queued and will execute.
+    Queued,
+    /// The scheduler is closed (shutdown); callers reply `error`.
+    Closed,
+    /// The tenant's queue is at its depth cap; the job is shed and the
+    /// caller replies `busy` so the client can back off and retry.
+    Shed,
+}
+
 /// What a worker gets from [`FairScheduler::next_work`].
 #[derive(Debug)]
 pub enum Work<T> {
@@ -146,11 +159,24 @@ impl<T> Inner<T> {
 pub struct FairScheduler<T> {
     inner: Mutex<Inner<T>>,
     cv: Condvar,
+    /// Per-tenant infer queue depth cap; pushes beyond it are shed.
+    infer_cap: usize,
 }
 
 impl<T> FairScheduler<T> {
-    /// `weights[i]` is tenant i's DRR weight (clamped to >= 1).
+    /// `weights[i]` is tenant i's DRR weight (clamped to >= 1). No
+    /// depth cap: every infer push is admitted until close.
     pub fn new(weights: &[u32]) -> FairScheduler<T> {
+        Self::with_infer_cap(weights, usize::MAX)
+    }
+
+    /// Like [`FairScheduler::new`] but with per-tenant admission
+    /// control: once a tenant has `infer_cap` infer jobs waiting,
+    /// further pushes return [`Admit::Shed`] (counted in
+    /// `nq_shed_total`) instead of growing the queue without bound.
+    /// Control and switch traffic is never shed — it is what an
+    /// operator uses to diagnose the overload.
+    pub fn with_infer_cap(weights: &[u32], infer_cap: usize) -> FairScheduler<T> {
         FairScheduler {
             inner: Mutex::new(Inner {
                 closed: false,
@@ -168,6 +194,7 @@ impl<T> FairScheduler<T> {
                 cursor: 0,
             }),
             cv: Condvar::new(),
+            infer_cap: infer_cap.max(1),
         }
     }
 
@@ -200,11 +227,23 @@ impl<T> FairScheduler<T> {
         true
     }
 
-    /// Queue an infer-class job for `tenant`.
-    pub fn push_infer(&self, tenant: usize, payload: T) -> bool {
+    /// Queue an infer-class job for `tenant`, subject to admission
+    /// control: a closed scheduler refuses it, a tenant at its depth
+    /// cap sheds it (see [`Admit`]).
+    pub fn push_infer(&self, tenant: usize, payload: T) -> Admit {
         let mut g = self.inner.lock().unwrap();
         if g.closed {
-            return false;
+            return Admit::Closed;
+        }
+        if g.tenants[tenant].queue.len() >= self.infer_cap {
+            registry().faults.shed_total.inc();
+            crate::nq_trace!(
+                TraceKind::Shed,
+                "infer shed tenant={tenant} depth={} cap={}",
+                g.tenants[tenant].queue.len(),
+                self.infer_cap
+            );
+            return Admit::Shed;
         }
         g.tenants[tenant].queue.push_back(Entry {
             payload,
@@ -212,7 +251,7 @@ impl<T> FairScheduler<T> {
         });
         registry().reactor.queue_depth(Priority::Infer as usize).inc();
         self.cv.notify_all();
-        true
+        Admit::Queued
     }
 
     /// Block for the next unit of work, honoring class priority and
@@ -368,7 +407,7 @@ mod tests {
     #[test]
     fn strict_class_priority() {
         let s: FairScheduler<&str> = FairScheduler::new(&[1]);
-        assert!(s.push_infer(0, "infer"));
+        assert_eq!(s.push_infer(0, "infer"), Admit::Queued);
         assert!(s.push_switch("advice"));
         assert!(s.push_control("stop"));
         match s.next_work(&[NOW_OR_LATER]) {
@@ -462,7 +501,11 @@ mod tests {
         s.push_infer(0, 7);
         s.push_control(9);
         s.close();
-        assert!(!s.push_infer(0, 8), "closed scheduler refuses work");
+        assert_eq!(
+            s.push_infer(0, 8),
+            Admit::Closed,
+            "closed scheduler refuses work"
+        );
         match s.next_work(&[NOW_OR_LATER]) {
             Work::One(Priority::Control, e) => assert_eq!(e.payload, 9),
             w => panic!("unexpected {w:?}"),
@@ -475,6 +518,36 @@ mod tests {
             w => panic!("unexpected {w:?}"),
         }
         assert!(matches!(s.next_work(&[NOW_OR_LATER]), Work::Shutdown));
+    }
+
+    #[test]
+    fn depth_cap_sheds_infer_but_never_control() {
+        let s: FairScheduler<u32> = FairScheduler::with_infer_cap(&[1, 1], 2);
+        assert_eq!(s.push_infer(0, 1), Admit::Queued);
+        assert_eq!(s.push_infer(0, 2), Admit::Queued);
+        assert_eq!(s.push_infer(0, 3), Admit::Shed, "third push exceeds the cap");
+        // per-tenant cap: tenant 1's queue is independent
+        assert_eq!(s.push_infer(1, 4), Admit::Queued);
+        // control/switch classes are exempt from shedding
+        assert!(s.push_control(9));
+        assert!(s.push_switch(8));
+        // draining tenant 0 re-opens admission
+        match s.next_work(&[NOW_OR_LATER; 2]) {
+            Work::One(Priority::Control, _) => {}
+            w => panic!("unexpected {w:?}"),
+        }
+        match s.next_work(&[NOW_OR_LATER; 2]) {
+            Work::One(Priority::Switch, _) => {}
+            w => panic!("unexpected {w:?}"),
+        }
+        match s.next_work(&[NOW_OR_LATER; 2]) {
+            Work::Batch(t, b) => {
+                assert_eq!(b.len(), 1);
+                s.finish_batch(t);
+            }
+            w => panic!("unexpected {w:?}"),
+        }
+        assert_eq!(s.push_infer(0, 5), Admit::Queued, "drained queue admits again");
     }
 
     #[test]

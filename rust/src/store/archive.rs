@@ -15,6 +15,7 @@ use std::sync::{Arc, Mutex, OnceLock};
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::container::{self, Container, Kind, SectionIndex};
+use crate::faults;
 use crate::nq_trace;
 use crate::telemetry::{registry, TraceKind};
 
@@ -119,24 +120,35 @@ impl NqArchive {
         self.index.section_b_bytes()
     }
 
+    /// The archive's internal state, recovering from lock poisoning: a
+    /// worker panic isolated by `catch_unwind` must not brick a shared
+    /// archive (section caches are `Option`s, so any observed state is
+    /// servable; stats are best-effort across a panic).
+    fn state(&self) -> std::sync::MutexGuard<'_, State> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     pub fn stats(&self) -> ArchiveStats {
-        self.state.lock().unwrap().stats
+        self.state().stats
     }
 
     pub fn a_resident(&self) -> bool {
-        self.state.lock().unwrap().a.is_some()
+        self.state().a.is_some()
     }
 
     pub fn b_resident(&self) -> bool {
-        self.state.lock().unwrap().b.is_some()
+        self.state().b.is_some()
     }
 
     /// Section A, fetching it from the source on first use only.
+    /// Failpoint: `store.read_a`.
     pub fn ensure_a(&self) -> Result<Bytes> {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.state();
         if let Some(a) = &s.a {
             return Ok(Arc::clone(a));
         }
+        faults::fail_point("store.read_a")
+            .with_context(|| format!("fetching section A of {}", self.source.describe()))?;
         let a = self
             .source
             .fetch(Section::A)
@@ -149,8 +161,9 @@ impl NqArchive {
         );
         if let Some(ck) = self.index.checksums {
             // integrity trailer present: the fetched payload must match
-            // it bit-for-bit (geometry checks can't catch payload flips)
-            if crate::util::crc64::crc64(&a) != ck.a {
+            // it bit-for-bit (geometry checks can't catch payload flips).
+            // Failpoint `store.crc` forges a mismatch down the same path.
+            if faults::fires("store.crc") || crate::util::crc64::crc64(&a) != ck.a {
                 registry().store.crc_failures.inc();
                 nq_trace!(
                     TraceKind::CrcFailure,
@@ -193,10 +206,12 @@ impl NqArchive {
             "source has no section-B bytes ({} is part-bit only)",
             self.source.describe()
         );
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.state();
         if let Some(b) = &s.b {
             return Ok(Arc::clone(b));
         }
+        faults::fail_point("store.read_b")
+            .with_context(|| format!("fetching section B of {}", self.source.describe()))?;
         let b = self
             .source
             .fetch(Section::B)
@@ -208,7 +223,7 @@ impl NqArchive {
             self.index.section_b_bytes()
         );
         if let Some(ck) = self.index.checksums {
-            if crate::util::crc64::crc64(&b) != ck.b {
+            if faults::fires("store.crc") || crate::util::crc64::crc64(&b) != ck.b {
                 registry().store.crc_failures.inc();
                 nq_trace!(
                     TraceKind::CrcFailure,
@@ -240,7 +255,7 @@ impl NqArchive {
     /// Returns whether anything was resident. Section A and the layout
     /// are untouched — that is the whole point.
     pub fn release_b(&self) -> bool {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.state();
         let was = s.b.take().is_some();
         if was {
             s.stats.b_releases += 1;
@@ -263,7 +278,7 @@ impl NqArchive {
     /// metadata is tiny and sources are immutable, so a re-load
     /// re-fetches bytes but never re-parses.
     pub fn release_a(&self) -> bool {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.state();
         if s.b.take().is_some() {
             s.stats.b_releases += 1;
             registry().store.b_releases.inc();
@@ -290,7 +305,7 @@ impl NqArchive {
     /// The tensor layout, parsed once per archive (fetches section A if
     /// needed).
     pub fn layout(&self) -> Result<Arc<ModelLayout>> {
-        if let Some(l) = &self.state.lock().unwrap().layout {
+        if let Some(l) = &self.state().layout {
             return Ok(Arc::clone(l));
         }
         let a = self.ensure_a()?;
@@ -298,7 +313,7 @@ impl NqArchive {
             ModelLayout::parse(&a, &self.index)
                 .with_context(|| format!("parsing layout of {}", self.source.describe()))?,
         );
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.state();
         if let Some(l) = &s.layout {
             return Ok(Arc::clone(l)); // a racer parsed first
         }
@@ -390,24 +405,36 @@ impl ModelStore {
     /// existing archive wins (and is returned) — sharing beats
     /// replacing for immutable artifacts.
     pub fn insert(&self, id: impl Into<String>, archive: Arc<NqArchive>) -> Arc<NqArchive> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         Arc::clone(g.entry(id.into()).or_insert(archive))
     }
 
     pub fn get(&self, id: &str) -> Option<Arc<NqArchive>> {
-        self.inner.lock().unwrap().get(id).map(Arc::clone)
+        self.inner
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .get(id)
+            .map(Arc::clone)
     }
 
     pub fn ids(&self) -> Vec<String> {
-        self.inner.lock().unwrap().keys().cloned().collect()
+        self.inner
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .keys()
+            .cloned()
+            .collect()
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().len()
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.inner.lock().unwrap().is_empty()
+        self.inner
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .is_empty()
     }
 }
 

@@ -25,6 +25,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{ensure, Context, Result};
 
+use crate::faults;
 use crate::nq_trace;
 use crate::telemetry::{registry, TraceKind};
 
@@ -112,33 +113,40 @@ impl StoreBudget {
         self.cap
     }
 
+    /// The ledger, recovering from lock poisoning: evict/attach updates
+    /// are ordered so any observed state satisfies the cap invariant
+    /// even if a panic is isolated mid-sequence.
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     /// Sum of currently resident Section-B bytes (≤ cap, always).
     pub fn resident_bytes(&self) -> u64 {
-        self.inner.lock().unwrap().used
+        self.lock().used
     }
 
     /// Ids whose section B is currently resident.
     pub fn resident_ids(&self) -> Vec<String> {
-        self.inner.lock().unwrap().resident.keys().cloned().collect()
+        self.lock().resident.keys().cloned().collect()
     }
 
     /// Whether `id`'s section B is currently resident under this budget.
     pub fn is_resident(&self, id: &str) -> bool {
-        self.inner.lock().unwrap().resident.contains_key(id)
+        self.lock().resident.contains_key(id)
     }
 
     pub fn evictions(&self) -> u64 {
-        self.inner.lock().unwrap().evictions
+        self.lock().evictions
     }
 
     /// Drain the eviction/attach/release trace accumulated so far.
     pub fn drain_events(&self) -> Vec<BudgetEvent> {
-        self.inner.lock().unwrap().events.drain(..).collect()
+        self.lock().events.drain(..).collect()
     }
 
     /// LRU-refresh `id` (called on the serve path of a full-bit tenant).
     pub fn touch(&self, id: &str) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         g.tick += 1;
         let tick = g.tick;
         if let Some(r) = g.resident.get_mut(id) {
@@ -158,7 +166,7 @@ impl StoreBudget {
             "{id}: section B ({need} B) exceeds the shared budget ({} B)",
             self.cap
         );
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         g.tick += 1;
         let tick = g.tick;
         if let Some(r) = g.resident.get_mut(id) {
@@ -169,9 +177,13 @@ impl StoreBudget {
             return Ok(Vec::new());
         }
         // evict BEFORE attaching, so resident bytes never overshoot the
-        // cap at any interleaving an observer can witness
+        // cap at any interleaving an observer can witness.
+        // Failpoint `store.evict`: an injected failure aborts the attach
+        // with the evictions performed so far already ledgered exactly.
         let mut evicted = Vec::new();
         while g.used + need > self.cap {
+            faults::fail_point("store.evict")
+                .with_context(|| format!("evicting under the budget for {id}"))?;
             let victim = g
                 .resident
                 .iter()
@@ -225,7 +237,7 @@ impl StoreBudget {
     /// Release `id`'s section B (voluntary downgrade). Returns whether
     /// it was resident under this budget.
     pub fn release_b(&self, id: &str) -> bool {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         let Some(r) = g.resident.remove(id) else {
             return false;
         };

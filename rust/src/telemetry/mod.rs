@@ -23,7 +23,7 @@
 //! from the same gathered snapshot, so totals are identical by
 //! construction.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
@@ -203,6 +203,9 @@ pub struct Metrics {
     pub page_in_bytes: AtomicU64,
     pub page_out_bytes: AtomicU64,
     pub errors: AtomicU64,
+    /// Circuit-breaker state for this tenant: 0 closed, 1 open,
+    /// 2 half-open (see `faults::BreakerState::code`).
+    pub breaker_state: AtomicU64,
     pub request_latency: LatencyHisto,
     pub execute_latency: LatencyHisto,
     pub switch_latency: LatencyHisto,
@@ -502,6 +505,54 @@ impl Default for ReactorTelemetry {
     }
 }
 
+/// Faults (S15) counters: failpoint fires (total and per site), shed
+/// requests, and isolated worker panics. The per-site ledger survives
+/// `faults::clear()`, so a chaos run's schedule stays scrapeable after
+/// the faults are disarmed.
+#[derive(Debug)]
+pub struct FaultTelemetry {
+    /// Failpoint fires across all sites (`nq_faults_fired_total`).
+    pub fired_total: Counter,
+    /// Requests refused by queue-depth admission control or an open
+    /// circuit breaker (`nq_shed_total`).
+    pub shed_total: Counter,
+    /// Worker-job panics caught and isolated by the pool
+    /// (`nq_worker_panics_total`).
+    pub worker_panics: Counter,
+    /// Per-site fire counts; rare-path only (one short lock per fire).
+    per_site: Mutex<BTreeMap<String, u64>>,
+}
+
+impl FaultTelemetry {
+    pub const fn new() -> FaultTelemetry {
+        FaultTelemetry {
+            fired_total: Counter::new(),
+            shed_total: Counter::new(),
+            worker_panics: Counter::new(),
+            per_site: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Record one fire at `site`.
+    pub fn site_fired(&self, site: &str) {
+        self.fired_total.inc();
+        let mut g = self.per_site.lock().unwrap_or_else(|e| e.into_inner());
+        *g.entry(site.to_string()).or_insert(0) += 1;
+    }
+
+    /// Per-site fire counts, sorted by site name.
+    pub fn sites(&self) -> Vec<(String, u64)> {
+        let g = self.per_site.lock().unwrap_or_else(|e| e.into_inner());
+        g.iter().map(|(k, v)| (k.clone(), *v)).collect()
+    }
+}
+
+impl Default for FaultTelemetry {
+    fn default() -> Self {
+        FaultTelemetry::new()
+    }
+}
+
 // ---------------------------------------------------------------------------
 // trace ring
 // ---------------------------------------------------------------------------
@@ -525,6 +576,14 @@ pub enum TraceKind {
     KernelDispatch,
     /// A weighted-fair scheduler decision (tenant pick, deficit state).
     Fairness,
+    /// An armed failpoint fired (site + action).
+    FaultFired,
+    /// A worker-job panic was caught and isolated by the pool.
+    WorkerPanic,
+    /// A request was shed by admission control (queue depth cap).
+    Shed,
+    /// A circuit-breaker state transition (open / half-open / closed).
+    Breaker,
 }
 
 impl TraceKind {
@@ -538,6 +597,10 @@ impl TraceKind {
             TraceKind::ChunkRetry => "chunk_retry",
             TraceKind::KernelDispatch => "kernel_dispatch",
             TraceKind::Fairness => "fairness",
+            TraceKind::FaultFired => "fault_fired",
+            TraceKind::WorkerPanic => "worker_panic",
+            TraceKind::Shed => "shed",
+            TraceKind::Breaker => "breaker",
         }
     }
 
@@ -551,6 +614,10 @@ impl TraceKind {
             "chunk_retry" => TraceKind::ChunkRetry,
             "kernel_dispatch" => TraceKind::KernelDispatch,
             "fairness" => TraceKind::Fairness,
+            "fault_fired" => TraceKind::FaultFired,
+            "worker_panic" => TraceKind::WorkerPanic,
+            "shed" => TraceKind::Shed,
+            "breaker" => TraceKind::Breaker,
             _ => return None,
         })
     }
@@ -669,6 +736,7 @@ pub struct Registry {
     pub fleet: FleetTelemetry,
     pub serving: ServingTelemetry,
     pub reactor: ReactorTelemetry,
+    pub faults: FaultTelemetry,
     pub trace: TraceRing,
 }
 
@@ -680,6 +748,7 @@ impl Registry {
             fleet: FleetTelemetry::new(),
             serving: ServingTelemetry::new(),
             reactor: ReactorTelemetry::new(),
+            faults: FaultTelemetry::new(),
             trace: TraceRing::new(),
         }
     }
@@ -795,10 +864,27 @@ mod tests {
             TraceKind::ChunkRetry,
             TraceKind::KernelDispatch,
             TraceKind::Fairness,
+            TraceKind::FaultFired,
+            TraceKind::WorkerPanic,
+            TraceKind::Shed,
+            TraceKind::Breaker,
         ] {
             assert_eq!(TraceKind::from_label(k.label()), Some(k));
         }
         assert_eq!(TraceKind::from_label("nope"), None);
+    }
+
+    #[test]
+    fn fault_telemetry_keeps_a_per_site_ledger() {
+        let f = FaultTelemetry::new();
+        f.site_fired("a.b");
+        f.site_fired("a.b");
+        f.site_fired("c.d");
+        assert_eq!(f.fired_total.get(), 3);
+        assert_eq!(
+            f.sites(),
+            vec![("a.b".to_string(), 2), ("c.d".to_string(), 1)]
+        );
     }
 
     #[test]

@@ -47,6 +47,8 @@ pub struct TenantSnapshot {
     pub request_p99_us: u64,
     pub request_max_us: u64,
     pub switch_p99_us: u64,
+    /// Circuit-breaker state: 0 closed, 1 open, 2 half-open.
+    pub breaker_state: u64,
 }
 
 /// A versioned, self-contained scrape of the global registry plus the
@@ -60,6 +62,9 @@ pub struct Snapshot {
     pub gauges: Vec<(String, u64)>,
     pub histograms: Vec<HistoSnapshot>,
     pub tenants: Vec<TenantSnapshot>,
+    /// Per-failpoint-site fire counts, sorted by site name (rendered as
+    /// the labelled `nq_faults_site_fired_total` Prometheus family).
+    pub faults_by_site: Vec<(String, u64)>,
     /// Most recent trace events, oldest first (empty when disabled).
     pub trace: Vec<TraceEvent>,
 }
@@ -139,6 +144,10 @@ impl Snapshot {
         c("nq_reactor_wakeups", r.reactor.wakeups.get());
         c("nq_reactor_rate_limited", r.reactor.rate_limited.get());
 
+        c("nq_faults_fired_total", r.faults.fired_total.get());
+        c("nq_shed_total", r.faults.shed_total.get());
+        c("nq_worker_panics_total", r.faults.worker_panics.get());
+
         let gauges = vec![
             (
                 "nq_store_resident_a_bytes".to_string(),
@@ -195,6 +204,7 @@ impl Snapshot {
                 request_p99_us: m.request_latency.quantile_us(0.99),
                 request_max_us: m.request_latency.max_us(),
                 switch_p99_us: m.switch_latency.quantile_us(0.99),
+                breaker_state: m.breaker_state.load(std::sync::atomic::Ordering::Relaxed),
             })
             .collect();
         tsnaps.sort_by(|a, b| a.id.cmp(&b.id));
@@ -205,6 +215,7 @@ impl Snapshot {
             gauges,
             histograms,
             tenants: tsnaps,
+            faults_by_site: r.faults.sites(),
             trace: r.trace.tail(TRACE_TAIL),
         }
     }
@@ -278,6 +289,7 @@ impl Snapshot {
                     ("request_p99_us", json::uint(t.request_p99_us)),
                     ("request_max_us", json::uint(t.request_max_us)),
                     ("switch_p99_us", json::uint(t.switch_p99_us)),
+                    ("breaker_state", json::uint(t.breaker_state)),
                 ])
             })
             .collect();
@@ -298,6 +310,7 @@ impl Snapshot {
             ("gauges", kv_obj(&self.gauges)),
             ("histograms", json::arr(histos)),
             ("tenants", json::arr(tenants)),
+            ("faults_by_site", kv_obj(&self.faults_by_site)),
             ("trace", json::arr(trace)),
         ]))
     }
@@ -351,6 +364,7 @@ impl Snapshot {
                     request_p99_us: t.path(&["request_p99_us"])?.as_u64()?,
                     request_max_us: t.path(&["request_max_us"])?.as_u64()?,
                     switch_p99_us: t.path(&["switch_p99_us"])?.as_u64()?,
+                    breaker_state: t.path(&["breaker_state"])?.as_u64()?,
                 })
             })
             .collect::<Result<Vec<_>>>()?;
@@ -374,6 +388,7 @@ impl Snapshot {
             gauges: kv_list("gauges")?,
             histograms,
             tenants,
+            faults_by_site: kv_list("faults_by_site")?,
             trace,
         })
     }
@@ -403,8 +418,18 @@ impl Snapshot {
             family(&mut out, &format!("{n}_mean_us"), "gauge");
             let _ = writeln!(out, "{n}_mean_us {}", h.mean_us);
         }
+        if !self.faults_by_site.is_empty() {
+            family(&mut out, "nq_faults_site_fired_total", "counter");
+            for (site, n) in &self.faults_by_site {
+                let _ = writeln!(
+                    out,
+                    "nq_faults_site_fired_total{{site=\"{}\"}} {n}",
+                    escape_label(site)
+                );
+            }
+        }
         if !self.tenants.is_empty() {
-            let fields: [(&str, &str, fn(&TenantSnapshot) -> u64); 8] = [
+            let fields: [(&str, &str, fn(&TenantSnapshot) -> u64); 9] = [
                 ("nq_tenant_requests", "counter", |t| t.requests),
                 ("nq_tenant_errors", "counter", |t| t.errors),
                 ("nq_tenant_upgrades", "counter", |t| t.upgrades),
@@ -413,6 +438,7 @@ impl Snapshot {
                 ("nq_tenant_page_out_bytes", "counter", |t| t.page_out_bytes),
                 ("nq_tenant_request_p50_us", "gauge", |t| t.request_p50_us),
                 ("nq_tenant_request_p99_us", "gauge", |t| t.request_p99_us),
+                ("nq_tenant_breaker_state", "gauge", |t| t.breaker_state),
             ];
             for (name, kind, get) in fields {
                 family(&mut out, name, kind);
@@ -438,16 +464,21 @@ impl Snapshot {
         let mut out = String::new();
         let _ = writeln!(
             out,
-            "{:<16} {:>8} {:>5} {:>5} {:>5} {:>8} {:>8} {:>12}",
-            "TENANT", "REQ", "ERR", "UP", "DOWN", "P50us", "P99us", "RESIDENT_B"
+            "{:<16} {:>8} {:>5} {:>5} {:>5} {:>8} {:>8} {:>12} {:>5}",
+            "TENANT", "REQ", "ERR", "UP", "DOWN", "P50us", "P99us", "RESIDENT_B", "BRK"
         );
         if self.tenants.is_empty() {
             let _ = writeln!(out, "(no tenants)");
         }
         for t in &self.tenants {
+            let brk = match t.breaker_state {
+                0 => "ok",
+                1 => "open",
+                _ => "half",
+            };
             let _ = writeln!(
                 out,
-                "{:<16} {:>8} {:>5} {:>5} {:>5} {:>8} {:>8} {:>12}",
+                "{:<16} {:>8} {:>5} {:>5} {:>5} {:>8} {:>8} {:>12} {:>5}",
                 t.id,
                 t.requests,
                 t.errors,
@@ -456,6 +487,7 @@ impl Snapshot {
                 t.request_p50_us,
                 t.request_p99_us,
                 t.page_in_bytes.saturating_sub(t.page_out_bytes),
+                brk,
             );
         }
         let _ = writeln!(
@@ -513,6 +545,22 @@ impl Snapshot {
             g("nq_reactor_queue_depth_switch"),
             g("nq_reactor_queue_depth_infer"),
             c("nq_reactor_rate_limited"),
+        );
+        let mut sites = String::new();
+        for (site, n) in &self.faults_by_site {
+            if !sites.is_empty() {
+                sites.push(' ');
+            }
+            let _ = write!(sites, "{site}={n}");
+        }
+        let _ = writeln!(
+            out,
+            "faults:  fired={} shed={} worker_panics={}{}{}",
+            c("nq_faults_fired_total"),
+            c("nq_shed_total"),
+            c("nq_worker_panics_total"),
+            if sites.is_empty() { "" } else { " | " },
+            sites,
         );
         if !self.trace.is_empty() {
             let _ = writeln!(out, "trace (last {}):", self.trace.len().min(10));
@@ -703,6 +751,27 @@ mod tests {
         assert!(text.contains("nq_reactor_active_connections"));
         assert!(text.contains("nq_reactor_queue_depth_infer"));
         assert!(text.contains("nq_reactor_rate_limited"));
+        // the faults family and the per-tenant breaker gauge too
+        assert!(text.contains("nq_faults_fired_total"));
+        assert!(text.contains("nq_shed_total"));
+        assert!(text.contains("nq_worker_panics_total"));
+        assert!(text.contains("nq_tenant_breaker_state{tenant=\"alpha\"} 0"));
+    }
+
+    #[test]
+    fn per_site_fault_fires_render_as_a_labelled_family() {
+        let mut snap = Snapshot::gather(&[]);
+        snap.faults_by_site = vec![
+            ("fleet.chunk".to_string(), 3),
+            ("worker.job".to_string(), 1),
+        ];
+        let text = snap.prometheus();
+        validate_prometheus(&text).unwrap();
+        assert!(text.contains("nq_faults_site_fired_total{site=\"fleet.chunk\"} 3"));
+        assert!(text.contains("nq_faults_site_fired_total{site=\"worker.job\"} 1"));
+        let back = Snapshot::from_json(&snap.to_json()).unwrap();
+        assert_eq!(back.faults_by_site, snap.faults_by_site);
+        assert!(snap.top_table().contains("fleet.chunk=3"));
     }
 
     #[test]
@@ -736,5 +805,7 @@ mod tests {
         assert!(top.contains("kernels:"));
         assert!(top.contains("serving:"));
         assert!(top.contains("reactor:"));
+        assert!(top.contains("faults:"));
+        assert!(top.contains("BRK"));
     }
 }

@@ -122,8 +122,10 @@ fn encode_frame_into(frame: &Frame, out: &mut Vec<u8>) -> Result<u64> {
     Ok(wire as u64)
 }
 
-/// Write one frame; returns wire bytes written.
+/// Write one frame; returns wire bytes written. Failpoint:
+/// `transport.send` (an injected error poses as a broken socket).
 pub fn send_frame(stream: &mut impl Write, frame: &Frame, meter: &Meter) -> Result<u64> {
+    crate::faults::fail_point("transport.send")?;
     let mut buf = Vec::new();
     let wire = encode_frame_into(frame, &mut buf)?;
     stream.write_all(&buf)?;
@@ -139,7 +141,10 @@ pub fn send_frame(stream: &mut impl Write, frame: &Frame, meter: &Meter) -> Resu
 /// the returned frame, so callers that interleave `recv_frame` with
 /// their own peeking (e.g. a `BufReader` idle poll) keep their buffers
 /// coherent.
+///
+/// Failpoint: `transport.recv` (an injected error poses as a torn read).
 pub fn recv_frame(stream: &mut impl Read, meter: &Meter) -> Result<(Frame, u64)> {
+    crate::faults::fail_point("transport.recv")?;
     let mut fr = FrameReader::new();
     loop {
         if let Some((frame, wire)) = fr.next_frame()? {

@@ -1,0 +1,528 @@
+//! Chaos: deterministic fault schedules against live servers, proving
+//! graceful degradation end to end.
+//!
+//! What is proven here:
+//!
+//! 1. **Panic isolation**: an injected `worker.job` panic is contained
+//!    by the batch-level `catch_unwind` — the client gets a typed error
+//!    naming the panic, the same connection keeps working, and results
+//!    after the panic are byte-identical to before it.
+//! 2. **Admission control**: with every worker wedged and the infer
+//!    queue at its depth cap, further requests get a typed `busy`
+//!    refusal, and refusals equal the shed-counter delta exactly.
+//! 3. **Circuit breaking**: consecutive executor failures open the
+//!    per-tenant breaker (refusals without touching the executor), the
+//!    cooldown half-opens it, one successful probe closes it.
+//! 4. **The seeded storm**: an `NQ_FAULTS`-grammar schedule against a
+//!    live coordinator plus a deterministic mid-transfer abort on a
+//!    live fleet server. Every request ends in a reply or a typed
+//!    error, byte accounting stays exact, the thread population stays
+//!    bounded (panicked workers respawn in place), and once faults
+//!    clear the same requests return byte-identical results.
+//! 5. **Wire robustness**: mid-frame EOF and garbage frames close only
+//!    the offending connection; truncated artifacts yield typed errors.
+//!
+//! Failpoints are process-global, so every test here serializes behind
+//! one mutex and brackets itself with `faults::clear()`.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use nestquant::container;
+use nestquant::coordinator::server::{
+    serve_tenants, Client, ServerConfig, ServerHandle, TenantExecutor,
+};
+use nestquant::coordinator::{Decision, SwitchCost, Variant};
+use nestquant::faults::{self, FaultMode, FaultSpec};
+use nestquant::fleet::{FleetConfig, FleetServer, RemoteSource, Zoo};
+use nestquant::store::{FileSource, NqArchive, SectionSource, StoreBudget};
+use nestquant::telemetry::registry;
+
+const TIMEOUT: Duration = Duration::from_secs(30);
+const IMAGE_LEN: usize = 16;
+const CLASSES: usize = 4;
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("nq_chaos_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A deterministic request image: fault-free logits for it are
+/// byte-reproducible across runs.
+fn image(k: usize) -> Vec<f32> {
+    (0..IMAGE_LEN)
+        .map(|i| ((i * 7 + k * 13) % 31) as f32 * 0.125)
+        .collect()
+}
+
+/// Live thread count of this process (`/proc/self/task`); elsewhere 0,
+/// degrading the bound check to trivially true.
+fn thread_count() -> usize {
+    std::fs::read_dir("/proc/self/task").map(|d| d.count()).unwrap_or(0)
+}
+
+fn archive(seed: u64) -> Arc<NqArchive> {
+    let c = container::synthetic_nest(seed, 8, 4, 64, 8).unwrap();
+    Arc::new(NqArchive::from_container(&c).unwrap())
+}
+
+/// Knobs into one hosted [`SyntheticTenant`]: (fail, gate, batches).
+type Knobs = (Arc<AtomicBool>, Arc<AtomicBool>, Arc<AtomicU64>);
+
+/// Deterministic, dependency-free tenant: logits are a fixed function
+/// of the input, so fault-free replies are byte-reproducible. `gate`
+/// wedges batches (overload tests); `fail` makes them error (breaker
+/// tests); `batches` counts executor entries.
+struct SyntheticTenant {
+    variant: Variant,
+    fail: Arc<AtomicBool>,
+    gate: Arc<AtomicBool>,
+    batches: Arc<AtomicU64>,
+}
+
+impl SyntheticTenant {
+    fn new() -> SyntheticTenant {
+        SyntheticTenant {
+            variant: Variant::PartBit,
+            fail: Arc::new(AtomicBool::new(false)),
+            gate: Arc::new(AtomicBool::new(false)),
+            batches: Arc::new(AtomicU64::new(0)),
+        }
+    }
+}
+
+impl TenantExecutor for SyntheticTenant {
+    fn shape(&self) -> (usize, usize, usize) {
+        (1, IMAGE_LEN, CLASSES)
+    }
+
+    fn run_batch(&mut self, input: &[f32]) -> Result<Vec<f32>> {
+        self.batches.fetch_add(1, Ordering::SeqCst);
+        while self.gate.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        if self.fail.load(Ordering::SeqCst) {
+            anyhow::bail!("synthetic executor failure");
+        }
+        let sum: f32 = input.iter().sum();
+        Ok((0..CLASSES)
+            .map(|c| sum * (c as f32 + 1.0) + input[c])
+            .collect())
+    }
+
+    fn switch(&mut self, decision: Decision) -> Result<Option<SwitchCost>> {
+        if let Decision::SwitchTo(v) = decision {
+            self.variant = v;
+        }
+        Ok(None)
+    }
+
+    fn variant(&self) -> Variant {
+        self.variant
+    }
+}
+
+fn serve_synthetic(ids: &[&str], config: ServerConfig) -> (ServerHandle, Vec<Knobs>) {
+    let mut tenants = Vec::new();
+    let mut knobs = Vec::new();
+    for id in ids {
+        let t = SyntheticTenant::new();
+        knobs.push((
+            Arc::clone(&t.fail),
+            Arc::clone(&t.gate),
+            Arc::clone(&t.batches),
+        ));
+        tenants.push((id.to_string(), Box::new(t) as Box<dyn TenantExecutor>));
+    }
+    let handle = serve_tenants(tenants, config).unwrap();
+    (handle, knobs)
+}
+
+/// An injected `worker.job` panic is contained by the batch-level
+/// `catch_unwind`: typed error out, tenant stays live, results after
+/// the panic are byte-identical to before it.
+#[test]
+fn worker_panic_is_isolated_and_tenant_stays_live() {
+    let _g = serial();
+    faults::clear();
+    let panics0 = registry().faults.worker_panics.get();
+    let (handle, _) = serve_synthetic(
+        &["m0"],
+        ServerConfig {
+            max_wait: Duration::from_millis(1),
+            ..ServerConfig::default()
+        },
+    );
+    let mut client = Client::connect(handle.addr).unwrap();
+    let img = image(0);
+    let baseline = client.infer_model("m0", &img).unwrap();
+    assert_eq!(baseline.len(), CLASSES);
+
+    faults::arm("worker.job", FaultSpec::always(FaultMode::Panic).times(1));
+    let err = client.infer_model("m0", &img).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("panicked"),
+        "typed panic reply, got: {err:#}"
+    );
+    assert_eq!(
+        registry().faults.worker_panics.get() - panics0,
+        1,
+        "exactly one contained panic"
+    );
+    // same connection, same tenant, same bytes: nothing leaked
+    assert_eq!(client.infer_model("m0", &img).unwrap(), baseline);
+    faults::clear();
+    handle.stop();
+}
+
+/// Queue-depth admission control under a real overload: refusals are
+/// typed `busy` replies and equal the shed-counter delta exactly.
+#[test]
+fn overload_sheds_with_typed_busy_and_exact_accounting() {
+    let _g = serial();
+    faults::clear();
+    const CLIENTS: usize = 48;
+    let shed0 = registry().faults.shed_total.get();
+    let (handle, knobs) = serve_synthetic(
+        &["m0"],
+        ServerConfig {
+            max_wait: Duration::from_micros(100),
+            infer_queue_cap: 1,
+            ..ServerConfig::default()
+        },
+    );
+    let (_, gate, _) = &knobs[0];
+    gate.store(true, Ordering::SeqCst);
+
+    let addr = handle.addr;
+    let joins: Vec<_> = (0..CLIENTS)
+        .map(|k| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                match c.infer_model("m0", &image(k)) {
+                    Ok(v) => {
+                        assert_eq!(v.len(), CLASSES);
+                        true
+                    }
+                    Err(e) => {
+                        let msg = format!("{e:#}");
+                        assert!(msg.contains("busy"), "only typed busy refusals: {msg}");
+                        assert!(msg.contains("queue full"), "{msg}");
+                        false
+                    }
+                }
+            })
+        })
+        .collect();
+
+    // overload is observable before anything completes: wait for the
+    // first shed (worker count < CLIENTS, so one must occur), then
+    // unblock the wedged workers
+    let t0 = Instant::now();
+    while registry().faults.shed_total.get() == shed0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(20),
+            "no shed under overload"
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    gate.store(false, Ordering::SeqCst);
+
+    let results: Vec<bool> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    let ok = results.iter().filter(|r| **r).count() as u64;
+    let busy = results.len() as u64 - ok;
+    assert!(ok >= 1, "queued and in-flight jobs still complete");
+    assert!(busy >= 1);
+    assert_eq!(
+        registry().faults.shed_total.get() - shed0,
+        busy,
+        "every busy reply is one shed, counted exactly"
+    );
+    handle.stop();
+}
+
+/// The per-tenant circuit breaker: consecutive executor failures open
+/// it (typed `busy` without touching the executor), the cooldown
+/// half-opens it, and one successful probe closes it again.
+#[test]
+fn circuit_breaker_opens_and_recovers_after_cooldown() {
+    let _g = serial();
+    faults::clear();
+    let (handle, knobs) = serve_synthetic(
+        &["m0"],
+        ServerConfig {
+            max_wait: Duration::from_millis(1),
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_millis(250),
+            ..ServerConfig::default()
+        },
+    );
+    let (fail, _, batches) = &knobs[0];
+    let mut client = Client::connect(handle.addr).unwrap();
+    let img = image(1);
+
+    fail.store(true, Ordering::SeqCst);
+    for _ in 0..3 {
+        let err = client.infer_model("m0", &img).unwrap_err();
+        assert!(format!("{err:#}").contains("server error"), "{err:#}");
+    }
+    // threshold reached: the breaker now refuses BEFORE the executor
+    let ran = batches.load(Ordering::SeqCst);
+    let msg = format!("{:#}", client.infer_model("m0", &img).unwrap_err());
+    assert!(msg.contains("busy") && msg.contains("circuit open"), "{msg}");
+    assert_eq!(
+        batches.load(Ordering::SeqCst),
+        ran,
+        "an open breaker never reaches the executor"
+    );
+
+    // cooldown elapses; the half-open probe succeeds and closes it
+    fail.store(false, Ordering::SeqCst);
+    std::thread::sleep(Duration::from_millis(400));
+    let out = client.infer_model("m0", &img).unwrap();
+    assert_eq!(out.len(), CLASSES);
+    assert_eq!(
+        client.infer_model("m0", &img).unwrap(),
+        out,
+        "steady state restored"
+    );
+    handle.stop();
+}
+
+/// The headline storm: a seeded `NQ_FAULTS`-grammar schedule (worker
+/// panics + wire delays) against a live coordinator, plus a
+/// deterministic mid-transfer abort on a live fleet server.
+#[test]
+fn seeded_chaos_schedule_degrades_gracefully_and_recovers() {
+    let _g = serial();
+    faults::clear();
+    const ROUNDS: usize = 20;
+    const CHUNK: usize = 256;
+
+    let (handle, _) = serve_synthetic(
+        &["m0", "m1"],
+        ServerConfig {
+            max_wait: Duration::from_millis(1),
+            ..ServerConfig::default()
+        },
+    );
+    let dir = temp_dir("storm");
+    let c = container::synthetic_nest(43, 8, 4, 128, 16).unwrap();
+    let (_, a_len, _) = container::write(&dir.join("m0.nq"), &c).unwrap();
+    assert!(
+        a_len > 3 * CHUNK as u64,
+        "section A must outlast the injected abort"
+    );
+    let mut zoo = Zoo::new();
+    zoo.add("m0", dir.join("m0.nq"));
+    let fleet = FleetServer::start(
+        zoo,
+        FleetConfig {
+            chunk_bytes: CHUNK,
+            ..FleetConfig::default()
+        },
+    )
+    .unwrap();
+
+    // fault-free baseline over a fixed request set
+    let mut client = Client::connect(handle.addr).unwrap();
+    let imgs: Vec<Vec<f32>> = (0..4).map(image).collect();
+    let mut baseline = Vec::new();
+    for id in ["m0", "m1"] {
+        for img in &imgs {
+            baseline.push(client.infer_model(id, img).unwrap());
+        }
+    }
+
+    let threads0 = thread_count();
+
+    // the documented NQ_FAULTS grammar, armed through the same parser.
+    // Seed 101 is pinned: over these 160 batch checks it fires some
+    // panics and spares most, never 5 in a row (the breaker threshold).
+    faults::arm_from_str("worker.job=panic:0.08@101;transport.send=delay_ms:1").unwrap();
+    let (mut ok, mut errs) = (0u64, 0u64);
+    for _ in 0..ROUNDS {
+        for id in ["m0", "m1"] {
+            for img in &imgs {
+                match client.infer_model(id, img) {
+                    Ok(v) => {
+                        assert_eq!(v.len(), CLASSES);
+                        ok += 1;
+                    }
+                    Err(e) => {
+                        let msg = format!("{e:#}");
+                        assert!(
+                            msg.contains("server error")
+                                || msg.contains("server busy")
+                                || msg.contains("injected"),
+                            "typed failures only: {msg}"
+                        );
+                        errs += 1;
+                    }
+                }
+            }
+        }
+    }
+    assert_eq!(
+        ok + errs,
+        (ROUNDS * 2 * imgs.len()) as u64,
+        "no request vanished"
+    );
+    assert!(ok > 0 && errs > 0, "seed 101 fires and spares (ok={ok} errs={errs})");
+    assert!(faults::fired("worker.job") >= 1, "the schedule is scrapeable");
+
+    // fleet under chaos: the server aborts the transfer at the third
+    // chunk; the client backs off, reconnects, resumes from the acked
+    // offset, and the reassembled section is complete and exact.
+    let reg = registry();
+    let resumed0 = reg.fleet.resumed_bytes.get();
+    let restarted0 = reg.fleet.restarted_bytes.get();
+    faults::arm("fleet.chunk", FaultSpec::always(FaultMode::Err).after(2).times(1));
+    let remote = RemoteSource::connect(fleet.addr, "dev-chaos", "m0", TIMEOUT).unwrap();
+    let arch = NqArchive::with_source(Arc::new(remote)).unwrap();
+    arch.part_bit().unwrap();
+    let s = arch.stats();
+    assert_eq!(s.a_fetches, 1, "one logical fetch despite the abort");
+    assert_eq!(s.a_bytes_fetched, a_len, "byte accounting exact under faults");
+    assert_eq!(faults::fired("fleet.chunk"), 1);
+    let resumed = reg.fleet.resumed_bytes.get() - resumed0;
+    let restarted = reg.fleet.restarted_bytes.get() - restarted0;
+    assert_eq!(
+        resumed + restarted,
+        2 * CHUNK as u64,
+        "the aborted attempt had acked exactly 2 chunks"
+    );
+    assert!(resumed > 0, "resume keeps acked bytes, not restart from zero");
+
+    // panicked workers respawned in place: thread population is flat
+    let threads1 = thread_count();
+    assert!(
+        threads1 <= threads0 + 2,
+        "thread population bounded: {threads0} -> {threads1}"
+    );
+
+    // faults off: the exact same requests are byte-identical to the
+    // fault-free baseline — degradation left no residue
+    faults::clear();
+    let mut after = Vec::new();
+    for id in ["m0", "m1"] {
+        for img in &imgs {
+            after.push(client.infer_model(id, img).unwrap());
+        }
+    }
+    assert_eq!(after, baseline, "byte-identical once faults clear");
+    fleet.stop();
+    handle.stop();
+}
+
+/// Wire robustness: a connection that dies mid-frame (or talks garbage)
+/// is closed alone — the server neither panics nor takes healthy
+/// connections down with it.
+#[test]
+fn mid_frame_eof_closes_only_the_offending_connection() {
+    let _g = serial();
+    faults::clear();
+    let (handle, _) = serve_synthetic(
+        &["m0"],
+        ServerConfig {
+            max_wait: Duration::from_millis(1),
+            ..ServerConfig::default()
+        },
+    );
+    let mut good = Client::connect(handle.addr).unwrap();
+    let img = image(2);
+    let baseline = good.infer_model("m0", &img).unwrap();
+
+    // half a frame header, then EOF ("NQTX" magic + Control kind + a
+    // dangling name-length byte)
+    let mut torn = TcpStream::connect(handle.addr).unwrap();
+    torn.write_all(&[0x58, 0x54, 0x51, 0x4E, 4, 5]).unwrap();
+    drop(torn);
+
+    // outright garbage: the server must reject and close this conn
+    let mut garbage = TcpStream::connect(handle.addr).unwrap();
+    garbage
+        .write_all(&[0xde, 0xad, 0xbe, 0xef, 0xff, 0xff, 0xff, 0xff])
+        .unwrap();
+    garbage.set_read_timeout(Some(TIMEOUT)).unwrap();
+    let mut buf = [0u8; 64];
+    // the peer either closes cleanly (EOF) or resets; both are fine —
+    // what matters is that it answers instead of wedging
+    let _ = garbage.read(&mut buf);
+
+    // the healthy connection and a brand-new one are untouched
+    assert_eq!(good.infer_model("m0", &img).unwrap(), baseline);
+    let mut fresh = Client::connect(handle.addr).unwrap();
+    assert_eq!(fresh.infer_model("m0", &img).unwrap(), baseline);
+    handle.stop();
+}
+
+/// A `.nq` artifact truncated mid-section (trailer gone, section B cut
+/// short) yields a typed, descriptive error — never a panic, never
+/// silently-short bytes.
+#[test]
+fn truncated_artifact_yields_typed_error_not_panic() {
+    let _g = serial();
+    faults::clear();
+    let dir = temp_dir("trunc");
+    let path = dir.join("m0.nq");
+    let c = container::synthetic_nest(47, 8, 4, 64, 8).unwrap();
+    container::write(&path, &c).unwrap();
+    let idx = FileSource::new(&path).index().unwrap();
+    let b = idx.section_b();
+    let keep = (b.start + (b.end - b.start) / 2) as usize;
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &bytes[..keep]).unwrap();
+
+    let outcome = (|| -> Result<()> {
+        let src: Arc<dyn SectionSource> = Arc::new(FileSource::new(&path));
+        let arch = NqArchive::with_source(src)?;
+        arch.part_bit()?; // section A is intact
+        arch.attach_b()?; // section B is cut short
+        Ok(())
+    })();
+    let msg = format!("{:#}", outcome.unwrap_err());
+    assert!(
+        msg.contains("section B") || msg.contains("reading") || msg.contains("truncated"),
+        "typed + descriptive: {msg}"
+    );
+}
+
+/// An injected eviction failure aborts the attach atomically: the
+/// ledger still balances, the resident set is untouched, and the same
+/// attach succeeds once the fault clears.
+#[test]
+fn injected_evict_failure_keeps_budget_ledger_exact() {
+    let _g = serial();
+    faults::clear();
+    let a0 = archive(0xB0B0);
+    let a1 = archive(0xB0B1);
+    let b_len = a0.section_b_bytes();
+    let budget = StoreBudget::new(b_len); // room for exactly one tenant
+    budget.attach_b("m0", &a0).unwrap();
+    assert_eq!(budget.resident_bytes(), b_len);
+
+    faults::arm("store.evict", FaultSpec::always(FaultMode::Err).times(1));
+    let err = budget.attach_b("m1", &a1).unwrap_err();
+    assert!(format!("{err:#}").contains("evicting"), "{err:#}");
+    assert_eq!(budget.resident_bytes(), b_len, "failed attach moved no bytes");
+    assert!(budget.is_resident("m0") && !budget.is_resident("m1"));
+    let evictions0 = budget.evictions();
+
+    faults::clear();
+    let evicted = budget.attach_b("m1", &a1).unwrap();
+    assert_eq!(evicted, vec!["m0".to_string()]);
+    assert_eq!(budget.resident_bytes(), b_len, "ledger exact after recovery");
+    assert_eq!(budget.evictions(), evictions0 + 1);
+}

@@ -25,6 +25,16 @@ use nestquant::transport::{recv_frame, send_frame, Frame, FrameKind, Meter};
 
 const TIMEOUT: Duration = Duration::from_secs(30);
 
+/// Failpoints are process-global (`inject_disconnect_after_chunks` arms
+/// the `client.chunk` site, and *every* chunk pull checks it), so the
+/// tests in this binary serialize instead of racing the registry's
+/// per-site skip/fire counters.
+static SERIAL: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 /// Scrape the fleet server's `metrics` wire command (no `hello` needed:
 /// monitoring carries no device identity).
 fn scrape_fleet_metrics(addr: std::net::SocketAddr) -> Snapshot {
@@ -82,6 +92,7 @@ fn toy_spec(rows: usize, channels: usize) -> ModelSpec {
 /// re-pulls exactly section B, downgrades move nothing.
 #[test]
 fn model_manager_serves_from_remote_archive() {
+    let _serial = serial();
     let dir = temp_dir("serve");
     let c = container::synthetic_nest(41, 8, 4, 128, 16).unwrap();
     let (_, a_len, b_len) = container::write(&dir.join("m0.nq"), &c).unwrap();
@@ -164,6 +175,8 @@ fn model_manager_serves_from_remote_archive() {
 /// interrupted first attempt.
 #[test]
 fn interrupted_fetch_resumes_from_acked_chunk() {
+    let _serial = serial();
+    nestquant::faults::clear();
     const CHUNK: u64 = 256;
     const FAULT_AFTER: u64 = 3;
 
@@ -216,6 +229,7 @@ fn interrupted_fetch_resumes_from_acked_chunk() {
     // and the fleet server's scrape shows the same counters on the wire
     let snap = scrape_fleet_metrics(handle.addr);
     assert!(snap.counter("nq_fleet_resumed_bytes").unwrap() >= resumed);
+    nestquant::faults::clear();
     handle.stop();
 }
 
@@ -225,6 +239,7 @@ fn interrupted_fetch_resumes_from_acked_chunk() {
 /// loudly instead of serving flipped weights.
 #[test]
 fn tampered_remote_artifact_is_refused() {
+    let _serial = serial();
     let dir = temp_dir("tamper");
     let c = container::synthetic_nest(42, 8, 4, 64, 8).unwrap();
     let path = dir.join("m0.nq");

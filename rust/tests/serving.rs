@@ -130,7 +130,11 @@ fn start_zoo(tag: &str, cap: u64) -> Hosted {
         .into_iter()
         .map(|(id, t)| (id, Box::new(t) as Box<dyn TenantExecutor>))
         .collect();
-    let handle = serve_tenants(boxed, ServerConfig { max_wait: Duration::from_millis(2) }).unwrap();
+    let handle = serve_tenants(
+        boxed,
+        ServerConfig { max_wait: Duration::from_millis(2), ..ServerConfig::default() },
+    )
+    .unwrap();
     Hosted { ids, archives, part, full, imgs, budget, handle }
 }
 

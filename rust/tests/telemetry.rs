@@ -27,7 +27,9 @@ use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Duration;
 
 use nestquant::container;
+use nestquant::faults::{self, FaultMode, FaultSpec};
 use nestquant::nq_trace;
+use nestquant::reactor::{Admit, FairScheduler};
 use nestquant::store::{NqArchive, StoreBudget};
 use nestquant::telemetry::{
     registry, validate_prometheus, Counter, Gauge, LatencyHisto, Metrics, OP_UNPACK_INTS,
@@ -262,6 +264,74 @@ fn disabled_trace_never_evaluates_format_args() {
     assert_eq!(tail[0].kind, TraceKind::Switch);
     assert_eq!(tail[0].detail, "recorded");
     registry().trace.clear();
+}
+
+/// Fault-layer counters move exactly: every armed fire lands in the
+/// global total AND the per-site ledger (which survives `clear()`), a
+/// depth-cap shed lands in `nq_shed_total`, and all of it renders as
+/// grammar-valid Prometheus with the labelled site family.
+#[test]
+fn fault_counters_land_on_every_scrape_surface() {
+    let _g = seq();
+    faults::clear();
+    let before = Snapshot::gather(&[]);
+    let site_of = |s: &Snapshot| {
+        s.faults_by_site
+            .iter()
+            .find(|(site, _)| site == "test.telemetry")
+            .map(|&(_, n)| n)
+            .unwrap_or(0)
+    };
+    let site_before = site_of(&before);
+
+    faults::arm("test.telemetry", FaultSpec::always(FaultMode::Err));
+    assert!(faults::fail_point("test.telemetry").is_err());
+    assert!(faults::fail_point("test.telemetry").is_err());
+    faults::clear();
+    // disarmed: the site no longer fires, but its ledger survives
+    assert!(faults::fail_point("test.telemetry").is_ok());
+
+    // a depth-capped scheduler sheds the overflow push
+    let s: FairScheduler<&str> = FairScheduler::with_infer_cap(&[1], 1);
+    assert_eq!(s.push_infer(0, "a"), Admit::Queued);
+    assert_eq!(s.push_infer(0, "b"), Admit::Shed);
+
+    let after = Snapshot::gather(&[]);
+    let d = |name: &str| after.counter(name).unwrap() - before.counter(name).unwrap();
+    assert_eq!(d("nq_faults_fired_total"), 2);
+    assert_eq!(d("nq_shed_total"), 1);
+    assert_eq!(site_of(&after) - site_before, 2, "per-site ledger is exact");
+    assert!(
+        after.counter("nq_worker_panics_total").is_some(),
+        "panic counter is always scrapeable (chaos.rs moves it)"
+    );
+
+    let prom = after.prometheus();
+    validate_prometheus(&prom).unwrap();
+    assert!(prom.contains(&format!(
+        "nq_faults_site_fired_total{{site=\"test.telemetry\"}} {}",
+        site_of(&after)
+    )));
+
+    // the wire roundtrip carries the ledger unchanged
+    let back = Snapshot::from_json(&after.to_json()).unwrap();
+    assert_eq!(back.faults_by_site, after.faults_by_site);
+}
+
+/// The per-tenant breaker state rides the tenant snapshot: gauge value,
+/// Prometheus family, and the `top` BRK column all show the same state.
+#[test]
+fn breaker_state_reaches_all_three_surfaces() {
+    let m = Arc::new(Metrics::default());
+    m.breaker_state.store(1, Ordering::Relaxed); // open
+    let snap = Snapshot::gather(&[("edge".to_string(), Arc::clone(&m))]);
+    assert_eq!(snap.tenant("edge").unwrap().breaker_state, 1);
+    let prom = snap.prometheus();
+    validate_prometheus(&prom).unwrap();
+    assert!(prom.contains("nq_tenant_breaker_state{tenant=\"edge\"} 1"));
+    assert!(snap.top_table().contains("open"));
+    let back = Snapshot::from_json(&snap.to_json()).unwrap();
+    assert_eq!(back.tenant("edge").unwrap().breaker_state, 1);
 }
 
 /// With the ring enabled, the scripted store events land as typed trace
