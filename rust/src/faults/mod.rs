@@ -28,8 +28,9 @@
 //!   name so replay is deterministic even unseeded
 //!
 //! Site names follow `layer.verb`: `store.read_a`, `store.read_b`,
-//! `store.crc`, `store.evict`, `transport.send`, `transport.recv`,
-//! `fleet.chunk`, `fleet.ack`, `client.chunk`, `worker.job`.
+//! `store.crc`, `store.map`, `store.evict`, `transport.send`,
+//! `transport.recv`, `fleet.chunk`, `fleet.ack`, `client.chunk`,
+//! `worker.job`.
 //!
 //! The module also hosts the two degradation building blocks the
 //! serving stack composes with failpoints: [`Breaker`], a per-tenant

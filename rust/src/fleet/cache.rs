@@ -104,7 +104,7 @@ impl SectionCache {
                 e.last_used = tick;
                 g.hits += 1;
                 registry().fleet.cache_hits.inc();
-                return Ok(Arc::clone(&e.bytes));
+                return Ok(e.bytes.clone());
             }
             if g.loading.contains(&key) {
                 guard = self.loaded.wait(guard).unwrap();
@@ -134,7 +134,7 @@ impl SectionCache {
         g.map.insert(
             key.clone(),
             Entry {
-                bytes: Arc::clone(&bytes),
+                bytes: bytes.clone(),
                 last_used: tick,
             },
         );
@@ -201,7 +201,7 @@ mod tests {
         let b1 = cache.get("m", src.as_ref(), Section::B).unwrap();
         assert_eq!(a1.len() as u64, a_len);
         assert_eq!(b1.len() as u64, b_len);
-        assert!(Arc::ptr_eq(&a1, &a2), "hit must share bytes");
+        assert!(a1.ptr_eq(&a2), "hit must share bytes");
         let s = cache.stats();
         assert_eq!((s.hits, s.misses, s.evictions), (1, 2, 0));
         assert_eq!(s.disk_bytes, a_len + b_len);

@@ -22,10 +22,10 @@
 //!   interrupted page-in restarts from the last acked chunk, not byte
 //!   zero.
 //! * **Zoo-wide section cache** — one RAM budget over section-granular
-//!   `.nq` reads, served through the store's [`crate::store::FileSource`]
-//!   (memoized header probe + positioned range reads), so N devices
-//!   pulling M models never re-read or duplicate section bytes
-//!   server-side.
+//!   `.nq` reads, served through the store's [`crate::store::MmapSource`]
+//!   (memoized header probe + OS-paged section windows, positioned
+//!   reads as fallback), so N devices pulling M models never re-read or
+//!   duplicate section bytes server-side.
 //!
 //! The device side closes the loop: [`RemoteSource`] implements
 //! [`crate::store::SectionSource`] over this protocol, so a device can
@@ -70,7 +70,7 @@ use crate::reactor::{
     self, Admit, BatchPolicy, ConnId, Ctl, FairScheduler, ReactorHandle, ReactorOpts, Remote,
     Service, TokenBucket, Work,
 };
-use crate::store::{Bytes, FileSource, SectionSource};
+use crate::store::{Bytes, MmapSource, SectionSource};
 use crate::telemetry::{registry, LatencyHisto, Snapshot};
 use crate::transport::{chunk_frame, parse_ack, ChunkHeader, Frame, FrameKind, Meter};
 
@@ -86,12 +86,15 @@ pub use crate::reactor::RateLimit;
 /// its tags are part of this wire protocol).
 pub use crate::store::Section;
 
-/// The model zoo: model id → shared [`FileSource`]. Immutable once the
+/// The model zoo: model id → shared [`MmapSource`]. Immutable once the
 /// server starts; each source memoizes its header probe, so section
-/// layouts are read from disk at most once per model.
+/// layouts are read from disk at most once per model — and with the
+/// `mmap` feature, section bytes are OS-paged windows of the artifact
+/// (positioned reads elsewhere), so registering a 1000-model zoo costs
+/// no eager section reads at all.
 #[derive(Debug, Clone, Default)]
 pub struct Zoo {
-    entries: BTreeMap<String, Arc<FileSource>>,
+    entries: BTreeMap<String, Arc<MmapSource>>,
 }
 
 impl Zoo {
@@ -102,7 +105,7 @@ impl Zoo {
     /// Register one container under `id`.
     pub fn add(&mut self, id: impl Into<String>, path: impl Into<PathBuf>) {
         self.entries
-            .insert(id.into(), Arc::new(FileSource::new(path.into())));
+            .insert(id.into(), Arc::new(MmapSource::new(path.into())));
     }
 
     /// Register every `*.nq` file in `dir` under its file stem; returns
@@ -116,7 +119,7 @@ impl Zoo {
             if p.extension().is_some_and(|x| x == "nq") {
                 if let Some(stem) = p.file_stem().and_then(|s| s.to_str()) {
                     self.entries
-                        .insert(stem.to_string(), Arc::new(FileSource::new(p.clone())));
+                        .insert(stem.to_string(), Arc::new(MmapSource::new(p.clone())));
                     added += 1;
                 }
             }
@@ -135,7 +138,7 @@ impl Zoo {
         {
             let p = entry?.path();
             if p.extension().is_some_and(|x| x == "nq") {
-                let src = FileSource::new(&p);
+                let src = MmapSource::new(&p);
                 let Ok(idx) = src.index() else { continue };
                 if idx.kind != crate::container::Kind::Nest {
                     continue;
@@ -150,7 +153,7 @@ impl Zoo {
     }
 
     /// The shared byte source for a model (what the cache fetches from).
-    pub fn source(&self, id: &str) -> Result<Arc<FileSource>> {
+    pub fn source(&self, id: &str) -> Result<Arc<MmapSource>> {
         self.entries
             .get(id)
             .map(Arc::clone)
@@ -1127,7 +1130,7 @@ mod tests {
         let path = dir.join("m.nq");
         let c = crate::container::synthetic_nest(21, 8, 4, 32, 8).unwrap();
         crate::container::write(&path, &c).unwrap();
-        let idx = FileSource::new(&path).index().unwrap();
+        let idx = crate::store::FileSource::new(&path).index().unwrap();
         assert!(idx.checksums.is_some(), "writer emits the trailer");
         // v2 carries the checksums through
         let back2 = decode_index2(&encode_index2(&idx)).unwrap();

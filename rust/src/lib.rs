@@ -9,8 +9,10 @@
 //!   batcher, PJRT runtime (feature `pjrt`, with a pure-Rust offline
 //!   fallback), device simulator, transmission system, the fleet
 //!   distribution subsystem (resumable delta paging + zoo-wide section
-//!   cache), the zero-copy [`store`] access layer (`NqArchive` +
-//!   `SectionSource`) every tier reads models through, the
+//!   cache), the open-loop [`loadgen`] fleet driver (seeded synthetic
+//!   load against a live server), the zero-copy [`store`] access layer
+//!   (`NqArchive` + `SectionSource`, mmap-backed with lazy first-touch
+//!   CRC) every tier reads models through, the
 //!   runtime-dispatched switching [`kernels`] (one-pass packed → f32
 //!   decode; scalar/SWAR/SIMD tiers behind a per-process `KernelPlan`),
 //!   the readiness-driven [`reactor`] serving core (epoll event loop +
@@ -35,6 +37,7 @@ pub mod device;
 pub mod faults;
 pub mod fleet;
 pub mod kernels;
+pub mod loadgen;
 pub mod nest;
 pub mod quant;
 pub mod reactor;

@@ -1,0 +1,743 @@
+//! Open-loop synthetic fleet driver: the load generator that earns the
+//! zoo-scale claim.
+//!
+//! `nestquant loadgen` replays a **deterministic seeded schedule** of
+//! device arrivals against a live fleet server through the real
+//! [`FleetClient`] wire protocol — no shortcuts around the transport.
+//! The schedule mixes three scenarios:
+//!
+//! * **cold-start waves** — the whole fleet (re)connects in bursts and
+//!   provisions Section A, the worst case for archive opens and the
+//!   section cache;
+//! * **steady state** — Poisson arrivals of `level` reports at a
+//!   configured offered rate, devices following the server's policy
+//!   advice (upgrade → pull Section B, downgrade → drop it);
+//! * **switch storms** — windows where a fraction of the fleet
+//!   oscillates between extreme resource levels, hammering the
+//!   bitwidth-switch path (B pulls + drops back to back).
+//!
+//! Device → model assignment is Zipf-tailed (`1/rank^s`), so a handful
+//! of popular models absorb most traffic while the tail keeps the cache
+//! honest — the access pattern a real zoo serves.
+//!
+//! The driver is **open-loop**: events fire at their scheduled wall
+//! time whether or not earlier ones finished, so a slow server shows up
+//! as queueing delay in the recorded latencies instead of silently
+//! throttling the offered load (closed-loop drivers measure their own
+//! backoff, not the server). Latency is measured from the *scheduled*
+//! instant, not the send instant.
+//!
+//! Determinism contract: [`Schedule::generate`] is a pure function of
+//! `(LoadgenConfig, n_models)` — same seed, same config ⇒ byte-identical
+//! event list (asserted by test). Wall-clock execution of that schedule
+//! is of course timing-dependent; the *schedule* is not.
+//!
+//! Output is a schema-versioned report (`nq-load-v1`, written to
+//! `BENCH_load.json` by the CLI): sustained RPS, bytes paged over the
+//! wire, per-scenario latency cells, switch p50/p99, shed count, and —
+//! when the server answers a `metrics` scrape — the server-side deltas
+//! (chunk bytes, cache evictions, mapped bytes, map faults) over the
+//! run. `nestquant bench-guard --load` gates CI on cell completeness
+//! and a bounded shed rate.
+
+use std::net::SocketAddr;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Decision, Variant};
+use crate::fleet::{FleetClient, Section};
+use crate::util::json::{self, Value};
+use crate::util::prng::Rng;
+
+/// Knobs of one loadgen run. Everything that shapes the schedule is
+/// here, so the (config, model-count) pair fully determines it.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Device population size.
+    pub devices: u32,
+    /// Schedule horizon (events are generated in `[0, duration)`).
+    pub duration: Duration,
+    /// Offered steady-state rate of `level` reports, fleet-wide.
+    pub rps: f64,
+    /// Schedule seed — same seed, same schedule.
+    pub seed: u64,
+    /// Zipf exponent for model popularity (higher ⇒ heavier head).
+    pub zipf_s: f64,
+    /// Cold-start waves in the first ~30% of the run.
+    pub waves: u32,
+    /// Bitwidth-switch storm windows in the 40–90% span of the run.
+    pub storms: u32,
+    /// Fraction of the fleet participating in each storm.
+    pub storm_frac: f64,
+    /// Driver threads (devices are partitioned across them).
+    pub threads: usize,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> LoadgenConfig {
+        LoadgenConfig {
+            devices: 16,
+            duration: Duration::from_secs(10),
+            rps: 50.0,
+            seed: 42,
+            zipf_s: 1.1,
+            waves: 2,
+            storms: 2,
+            storm_frac: 0.5,
+            threads: 8,
+        }
+    }
+}
+
+/// Which traffic pattern an event belongs to — the report keeps a
+/// latency cell per scenario so a storm can't hide inside the steady
+/// average.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scenario {
+    Steady,
+    Storm,
+    ColdStart,
+}
+
+impl Scenario {
+    pub const ALL: [Scenario; 3] = [Scenario::Steady, Scenario::Storm, Scenario::ColdStart];
+
+    /// Stable label used in `BENCH_load.json` cells (and gated on by
+    /// `bench-guard --load`).
+    pub fn label(self) -> &'static str {
+        match self {
+            Scenario::Steady => "steady",
+            Scenario::Storm => "storm",
+            Scenario::ColdStart => "coldstart",
+        }
+    }
+}
+
+/// One scheduled device action.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Action {
+    /// (Re)connect and provision Section A from scratch.
+    Connect,
+    /// Report a resource level and follow the server's advice.
+    Level(f64),
+}
+
+/// One entry of the schedule: at offset `at` from run start, device
+/// `device` performs `action`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    pub at: Duration,
+    pub device: u32,
+    pub action: Action,
+    pub scenario: Scenario,
+}
+
+/// The full deterministic run plan: time-sorted events plus the Zipf
+/// device → model-index assignment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Schedule {
+    pub events: Vec<Event>,
+    /// `device_model[d]` is the model *index* device `d` pulls from
+    /// (mod the actual zoo size at run time).
+    pub device_model: Vec<u32>,
+}
+
+impl Schedule {
+    /// Pure function of `(cfg, n_models)`: same inputs ⇒ identical
+    /// schedule. All randomness flows through one seeded [`Rng`].
+    pub fn generate(cfg: &LoadgenConfig, n_models: usize) -> Schedule {
+        let mut rng = Rng::new(cfg.seed);
+        let n_models = n_models.max(1);
+        let devices = cfg.devices.max(1);
+        let dur = cfg.duration.as_secs_f64().max(0.001);
+
+        // Zipf-tailed popularity: weight 1/rank^s, sampled by inverse CDF.
+        let weights: Vec<f64> = (0..n_models)
+            .map(|i| 1.0 / ((i + 1) as f64).powf(cfg.zipf_s))
+            .collect();
+        let total: f64 = weights.iter().sum();
+        let mut device_model = Vec::with_capacity(devices as usize);
+        for _ in 0..devices {
+            let mut u = rng.f64() * total;
+            let mut pick = n_models - 1;
+            for (i, w) in weights.iter().enumerate() {
+                if u < *w {
+                    pick = i;
+                    break;
+                }
+                u -= w;
+            }
+            device_model.push(pick as u32);
+        }
+
+        let mut events = Vec::new();
+
+        // Cold-start waves: every device (re)connects in a jittered
+        // burst; waves land inside the first 30% of the horizon so the
+        // steady tail measures a warm fleet.
+        for w in 0..cfg.waves.max(1) {
+            let base = 0.3 * dur * w as f64 / cfg.waves.max(1) as f64;
+            for d in 0..devices {
+                let at = base + rng.f64() * 0.05 * dur;
+                events.push(Event {
+                    at: Duration::from_secs_f64(at),
+                    device: d,
+                    action: Action::Connect,
+                    scenario: Scenario::ColdStart,
+                });
+            }
+        }
+
+        // Steady state: Poisson arrivals (exponential gaps) of level
+        // reports at the offered rate, uniform over devices, levels in
+        // the hysteresis mid-band so advice stays data-dependent.
+        let rps = cfg.rps.max(0.1);
+        let mut t = 0.0;
+        loop {
+            t += -(1.0 - rng.f64()).ln() / rps;
+            let at = Duration::from_secs_f64(t);
+            // nanosecond rounding can nudge a value just under `dur`
+            // onto it — compare the rounded Duration, not the f64
+            if at >= cfg.duration {
+                break;
+            }
+            events.push(Event {
+                at,
+                device: rng.index(devices as usize) as u32,
+                action: Action::Level(0.2 + 0.6 * rng.f64()),
+                scenario: Scenario::Steady,
+            });
+        }
+
+        // Switch storms: short windows in the 40–90% span where a
+        // fraction of the fleet alternates extreme levels — every
+        // oscillation is a potential B pull or drop.
+        let storm_devs =
+            ((devices as f64 * cfg.storm_frac.clamp(0.0, 1.0)).ceil() as u32).clamp(1, devices);
+        for s in 0..cfg.storms {
+            let start = dur * (0.4 + 0.5 * s as f64 / cfg.storms.max(1) as f64);
+            let width = dur * 0.05;
+            let mut ids: Vec<u32> = (0..devices).collect();
+            rng.shuffle(&mut ids);
+            for d in ids.into_iter().take(storm_devs as usize) {
+                for i in 0..6u32 {
+                    let level = if i % 2 == 0 { 0.95 } else { 0.05 };
+                    events.push(Event {
+                        at: Duration::from_secs_f64(start + width * i as f64 / 6.0),
+                        device: d,
+                        action: Action::Level(level),
+                        scenario: Scenario::Storm,
+                    });
+                }
+            }
+        }
+
+        // Stable sort: ties keep generation order, so the sorted list
+        // is as deterministic as the unsorted one.
+        events.sort_by_key(|e| e.at);
+        Schedule {
+            events,
+            device_model,
+        }
+    }
+}
+
+/// One per-scenario latency cell of the report.
+#[derive(Debug, Clone, Default)]
+pub struct Cell {
+    pub requests: u64,
+    pub completed: u64,
+    pub shed: u64,
+    latencies_us: Vec<u64>,
+}
+
+impl Cell {
+    pub fn p50_us(&self) -> u64 {
+        percentile(&self.latencies_us, 50)
+    }
+
+    pub fn p99_us(&self) -> u64 {
+        percentile(&self.latencies_us, 99)
+    }
+}
+
+/// Server-side counter deltas over the run (from two `metrics` scrapes;
+/// absent when the server refuses the scrape).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServerDelta {
+    pub chunk_bytes_sent: u64,
+    pub cache_evictions: u64,
+    pub rate_limited: u64,
+    /// Gauge at end of run, not a delta: live mmap'd bytes.
+    pub mapped_bytes: u64,
+    pub map_faults: u64,
+}
+
+/// Everything `BENCH_load.json` carries.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub seed: u64,
+    pub devices: u32,
+    pub duration: Duration,
+    pub offered_rps: f64,
+    pub models: usize,
+    pub requests: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub sustained_rps: f64,
+    /// Section payload bytes pulled over the wire by all devices.
+    pub bytes_paged: u64,
+    /// Completed full-bit upgrades (timed Section-B pulls).
+    pub switches: u64,
+    pub switch_p50_us: u64,
+    pub switch_p99_us: u64,
+    pub eviction_rate_per_s: f64,
+    pub cells: Vec<(Scenario, Cell)>,
+    pub server: Option<ServerDelta>,
+}
+
+impl LoadReport {
+    /// The `nq-load-v1` document `bench-guard --load` checks.
+    pub fn to_json(&self) -> Value {
+        let cells = self
+            .cells
+            .iter()
+            .map(|(sc, c)| {
+                json::obj(vec![
+                    ("scenario", json::str_(sc.label())),
+                    ("requests", json::uint(c.requests)),
+                    ("completed", json::uint(c.completed)),
+                    ("shed", json::uint(c.shed)),
+                    ("p50_us", json::uint(c.p50_us())),
+                    ("p99_us", json::uint(c.p99_us())),
+                ])
+            })
+            .collect();
+        let mut doc = vec![
+            ("schema", json::str_("nq-load-v1")),
+            ("seed", json::uint(self.seed)),
+            ("devices", json::uint(self.devices as u64)),
+            ("duration_s", json::num(self.duration.as_secs_f64())),
+            ("offered_rps", json::num(self.offered_rps)),
+            ("models", json::uint(self.models as u64)),
+            ("requests", json::uint(self.requests)),
+            ("completed", json::uint(self.completed)),
+            ("shed", json::uint(self.shed)),
+            ("sustained_rps", json::num(self.sustained_rps)),
+            ("bytes_paged", json::uint(self.bytes_paged)),
+            ("switches", json::uint(self.switches)),
+            ("switch_p50_us", json::uint(self.switch_p50_us)),
+            ("switch_p99_us", json::uint(self.switch_p99_us)),
+            ("eviction_rate_per_s", json::num(self.eviction_rate_per_s)),
+            ("cells", json::arr(cells)),
+        ];
+        if let Some(s) = &self.server {
+            doc.push((
+                "server",
+                json::obj(vec![
+                    ("chunk_bytes_sent", json::uint(s.chunk_bytes_sent)),
+                    ("cache_evictions", json::uint(s.cache_evictions)),
+                    ("rate_limited", json::uint(s.rate_limited)),
+                    ("mapped_bytes", json::uint(s.mapped_bytes)),
+                    ("map_faults", json::uint(s.map_faults)),
+                ]),
+            ));
+        }
+        json::obj(doc)
+    }
+}
+
+fn percentile(sorted_or_not: &[u64], p: u64) -> u64 {
+    if sorted_or_not.is_empty() {
+        return 0;
+    }
+    let mut v = sorted_or_not.to_vec();
+    v.sort_unstable();
+    let idx = ((v.len() as u64 * p) / 100).min(v.len() as u64 - 1) as usize;
+    v[idx]
+}
+
+/// Per-device live state inside a driver thread.
+struct DeviceState {
+    client: Option<FleetClient>,
+    model: String,
+    b_resident: bool,
+}
+
+/// Per-thread measurement accumulator, merged after join.
+#[derive(Default)]
+struct ThreadStats {
+    cells: Vec<Cell>, // indexed by Scenario::ALL position
+    bytes_paged: u64,
+    switches: u64,
+    switch_us: Vec<u64>,
+}
+
+impl ThreadStats {
+    fn new() -> ThreadStats {
+        ThreadStats {
+            cells: vec![Cell::default(); Scenario::ALL.len()],
+            ..ThreadStats::default()
+        }
+    }
+
+    fn cell(&mut self, sc: Scenario) -> &mut Cell {
+        let i = Scenario::ALL.iter().position(|s| *s == sc).unwrap();
+        &mut self.cells[i]
+    }
+}
+
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Provision a device from scratch: hello + full Section-A pull (the
+/// part-bit launch path). Returns payload bytes pulled.
+fn provision(addr: SocketAddr, device: u32, model: &str) -> Result<(FleetClient, u64)> {
+    let mut client = FleetClient::connect(addr, &format!("lg-{device:04}"), CONNECT_TIMEOUT)?;
+    let mut sink = Vec::new();
+    let out = client.pull_section(model, Section::A, 0, &mut sink, None)?;
+    Ok((client, out.payload_bytes))
+}
+
+/// Execute one event against live state. Returns payload bytes moved;
+/// an `Err` is recorded as a shed request and drops the connection (the
+/// next event on the device reconnects).
+fn execute(
+    addr: SocketAddr,
+    ev: &Event,
+    dev: &mut DeviceState,
+    stats: &mut ThreadStats,
+) -> Result<u64> {
+    match ev.action {
+        Action::Connect => {
+            // A cold start is a *fresh* provision even when connected:
+            // drop the old session first so the wave measures real opens.
+            dev.client = None;
+            dev.b_resident = false;
+            let (client, paged) = provision(addr, ev.device, &dev.model)?;
+            dev.client = Some(client);
+            Ok(paged)
+        }
+        Action::Level(level) => {
+            if dev.client.is_none() {
+                let (client, paged) = provision(addr, ev.device, &dev.model)?;
+                dev.client = Some(client);
+                dev.b_resident = false;
+                stats.bytes_paged += paged;
+            }
+            let client = dev.client.as_mut().unwrap();
+            match client.report_level(level)? {
+                Decision::Stay => Ok(0),
+                Decision::SwitchTo(Variant::FullBit) => {
+                    if dev.b_resident {
+                        return Ok(0);
+                    }
+                    let t0 = Instant::now();
+                    let mut sink = Vec::new();
+                    let out = client.pull_section(&dev.model, Section::B, 0, &mut sink, None)?;
+                    dev.b_resident = true;
+                    stats.switches += 1;
+                    stats.switch_us.push(t0.elapsed().as_micros() as u64);
+                    Ok(out.payload_bytes)
+                }
+                Decision::SwitchTo(Variant::PartBit) => {
+                    if dev.b_resident {
+                        client.notify_dropped(&dev.model, Section::B)?;
+                        dev.b_resident = false;
+                    }
+                    Ok(0)
+                }
+            }
+        }
+    }
+}
+
+/// Scrape `nq_*` counters the report wants off a live server.
+fn scrape(addr: SocketAddr) -> Result<crate::telemetry::Snapshot> {
+    use crate::transport::{recv_frame, send_frame, Frame, FrameKind, Meter};
+    let mut sock = std::net::TcpStream::connect(addr)?;
+    sock.set_read_timeout(Some(Duration::from_secs(10)))?;
+    let meter = Meter::default();
+    send_frame(
+        &mut sock,
+        &Frame {
+            kind: FrameKind::Control,
+            name: "metrics".into(),
+            payload: Vec::new(),
+        },
+        &meter,
+    )?;
+    let (reply, _) = recv_frame(&mut sock, &meter)?;
+    anyhow::ensure!(reply.name == "metrics", "unexpected reply {:?}", reply.name);
+    crate::telemetry::Snapshot::from_json(std::str::from_utf8(&reply.payload)?)
+}
+
+/// Drive the schedule against a live fleet server and measure.
+///
+/// Open-loop: each driver thread owns a device partition
+/// (`device % threads`) and fires that partition's events at their
+/// scheduled wall time, sleeping only *forward* — when the driver falls
+/// behind, events fire back-to-back and the delay lands in the recorded
+/// latency, which is the honest open-loop accounting.
+pub fn run(addr: SocketAddr, cfg: &LoadgenConfig) -> Result<LoadReport> {
+    let models = FleetClient::connect(addr, "lg-probe", CONNECT_TIMEOUT)
+        .and_then(|mut c| c.models())
+        .context("listing models on the target server")?;
+    anyhow::ensure!(!models.is_empty(), "target server hosts no models");
+
+    let schedule = Schedule::generate(cfg, models.len());
+    let threads = cfg.threads.clamp(1, cfg.devices.max(1) as usize);
+    let before = scrape(addr).ok();
+    let start = Instant::now();
+
+    let mut joins = Vec::new();
+    for tid in 0..threads {
+        let events: Vec<Event> = schedule
+            .events
+            .iter()
+            .filter(|e| e.device as usize % threads == tid)
+            .copied()
+            .collect();
+        let mut devices: std::collections::HashMap<u32, DeviceState> = schedule
+            .device_model
+            .iter()
+            .enumerate()
+            .filter(|(d, _)| d % threads == tid)
+            .map(|(d, m)| {
+                (
+                    d as u32,
+                    DeviceState {
+                        client: None,
+                        model: models[*m as usize % models.len()].clone(),
+                        b_resident: false,
+                    },
+                )
+            })
+            .collect();
+        joins.push(std::thread::spawn(move || -> ThreadStats {
+            let mut stats = ThreadStats::new();
+            for ev in &events {
+                let scheduled = start + ev.at;
+                if let Some(wait) = scheduled.checked_duration_since(Instant::now()) {
+                    std::thread::sleep(wait);
+                }
+                let dev = devices.get_mut(&ev.device).unwrap();
+                let r = execute(addr, ev, dev, &mut stats);
+                let latency_us = scheduled.elapsed().as_micros() as u64;
+                let cell = stats.cell(ev.scenario);
+                cell.requests += 1;
+                match r {
+                    Ok(paged) => {
+                        cell.completed += 1;
+                        cell.latencies_us.push(latency_us);
+                        stats.bytes_paged += paged;
+                    }
+                    Err(_) => {
+                        // shed: drop the session; the next event on this
+                        // device provisions a fresh one
+                        cell.shed += 1;
+                        dev.client = None;
+                        dev.b_resident = false;
+                    }
+                }
+            }
+            stats
+        }));
+    }
+
+    let mut cells = vec![Cell::default(); Scenario::ALL.len()];
+    let mut bytes_paged = 0u64;
+    let mut switches = 0u64;
+    let mut switch_us = Vec::new();
+    for j in joins {
+        let s = j.join().expect("loadgen driver thread panicked");
+        for (acc, c) in cells.iter_mut().zip(s.cells) {
+            acc.requests += c.requests;
+            acc.completed += c.completed;
+            acc.shed += c.shed;
+            acc.latencies_us.extend(c.latencies_us);
+        }
+        bytes_paged += s.bytes_paged;
+        switches += s.switches;
+        switch_us.extend(s.switch_us);
+    }
+    let elapsed = start.elapsed().as_secs_f64().max(0.001);
+    let after = scrape(addr).ok();
+
+    let server = match (&before, &after) {
+        (Some(b), Some(a)) => {
+            let delta = |name: &str| {
+                a.counter(name)
+                    .unwrap_or(0)
+                    .saturating_sub(b.counter(name).unwrap_or(0))
+            };
+            Some(ServerDelta {
+                chunk_bytes_sent: delta("nq_fleet_chunk_bytes_sent"),
+                cache_evictions: delta("nq_fleet_cache_evictions"),
+                rate_limited: delta("nq_reactor_rate_limited"),
+                mapped_bytes: a.gauge("nq_store_mapped_bytes").unwrap_or(0),
+                map_faults: delta("nq_store_map_faults"),
+            })
+        }
+        _ => None,
+    };
+    let eviction_rate_per_s = server
+        .map(|s| s.cache_evictions as f64 / elapsed)
+        .unwrap_or(0.0);
+
+    let (requests, completed, shed) = cells.iter().fold((0, 0, 0), |(r, c, s), cell| {
+        (r + cell.requests, c + cell.completed, s + cell.shed)
+    });
+    Ok(LoadReport {
+        seed: cfg.seed,
+        devices: cfg.devices,
+        duration: cfg.duration,
+        offered_rps: cfg.rps,
+        models: models.len(),
+        requests,
+        completed,
+        shed,
+        sustained_rps: completed as f64 / elapsed,
+        bytes_paged,
+        switches,
+        switch_p50_us: percentile(&switch_us, 50),
+        switch_p99_us: percentile(&switch_us, 99),
+        eviction_rate_per_s,
+        cells: Scenario::ALL.into_iter().zip(cells).collect(),
+        server,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> LoadgenConfig {
+        LoadgenConfig {
+            devices: 8,
+            duration: Duration::from_secs(5),
+            rps: 40.0,
+            seed: 7,
+            ..LoadgenConfig::default()
+        }
+    }
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let cfg = small_cfg();
+        let a = Schedule::generate(&cfg, 3);
+        let b = Schedule::generate(&cfg, 3);
+        assert_eq!(a, b, "schedule must be a pure function of (cfg, n_models)");
+    }
+
+    #[test]
+    fn different_seed_different_schedule() {
+        let a = Schedule::generate(&small_cfg(), 3);
+        let mut cfg = small_cfg();
+        cfg.seed = 8;
+        let b = Schedule::generate(&cfg, 3);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn schedule_is_sorted_in_horizon_and_covers_all_scenarios() {
+        let cfg = small_cfg();
+        let s = Schedule::generate(&cfg, 3);
+        assert!(!s.events.is_empty());
+        assert_eq!(s.device_model.len(), cfg.devices as usize);
+        let mut last = Duration::ZERO;
+        for ev in &s.events {
+            assert!(ev.at >= last, "events must be time-sorted");
+            assert!(ev.at < cfg.duration, "event at {:?} past horizon", ev.at);
+            assert!(ev.device < cfg.devices);
+            last = ev.at;
+        }
+        for sc in Scenario::ALL {
+            assert!(
+                s.events.iter().any(|e| e.scenario == sc),
+                "schedule missing scenario {sc:?}"
+            );
+        }
+        // Zipf head: model 0 must own at least one device at s > 1
+        assert!(s.device_model.iter().any(|m| *m == 0));
+    }
+
+    #[test]
+    fn storm_events_oscillate_extremes() {
+        let s = Schedule::generate(&small_cfg(), 2);
+        let storm_levels: Vec<f64> = s
+            .events
+            .iter()
+            .filter(|e| e.scenario == Scenario::Storm)
+            .filter_map(|e| match e.action {
+                Action::Level(l) => Some(l),
+                Action::Connect => None,
+            })
+            .collect();
+        assert!(storm_levels.iter().any(|l| *l > 0.9));
+        assert!(storm_levels.iter().any(|l| *l < 0.1));
+    }
+
+    #[test]
+    fn report_json_has_every_cell_and_schema() {
+        let report = LoadReport {
+            seed: 42,
+            devices: 4,
+            duration: Duration::from_secs(2),
+            offered_rps: 10.0,
+            models: 2,
+            requests: 20,
+            completed: 19,
+            shed: 1,
+            sustained_rps: 9.5,
+            bytes_paged: 1 << 20,
+            switches: 3,
+            switch_p50_us: 100,
+            switch_p99_us: 900,
+            eviction_rate_per_s: 0.5,
+            cells: Scenario::ALL
+                .into_iter()
+                .map(|sc| {
+                    (
+                        sc,
+                        Cell {
+                            requests: 5,
+                            completed: 5,
+                            shed: 0,
+                            latencies_us: vec![50, 100, 200],
+                        },
+                    )
+                })
+                .collect(),
+            server: Some(ServerDelta::default()),
+        };
+        let doc = json::parse(&json::to_string(&report.to_json())).unwrap();
+        assert_eq!(
+            doc.path(&["schema"]).unwrap().as_str().unwrap(),
+            "nq-load-v1"
+        );
+        assert_eq!(doc.path(&["completed"]).unwrap().as_u64().unwrap(), 19);
+        let cells = doc.path(&["cells"]).unwrap().as_array().unwrap();
+        let labels: Vec<&str> = cells
+            .iter()
+            .map(|c| c.path(&["scenario"]).unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(labels, ["steady", "storm", "coldstart"]);
+        for c in cells {
+            let p99 = c.path(&["p99_us"]).unwrap().as_u64().unwrap();
+            let p50 = c.path(&["p50_us"]).unwrap().as_u64().unwrap();
+            assert!(p99 >= p50);
+        }
+        assert!(doc.get("server").is_some());
+    }
+
+    #[test]
+    fn percentile_handles_edges() {
+        assert_eq!(percentile(&[], 99), 0);
+        assert_eq!(percentile(&[7], 50), 7);
+        assert_eq!(percentile(&[7], 99), 7);
+        let v: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile(&v, 50), 51);
+        assert_eq!(percentile(&v, 99), 100);
+    }
+}

@@ -10,6 +10,7 @@
 //! nestquant serve --arch cnn_m --n 8 --h 4
 //! nestquant serve --store artifacts/nq [--budget-mb 64] [--batch 4] [--synth N]
 //! nestquant fleet [--devices D] [--steps K] [--budget-mb M] [--chunk-kb C]
+//! nestquant loadgen (--addr H:P | --store DIR [--synth N]) [--devices D] [--rps R]
 //! nestquant metrics --addr H:P [--prom] [--check] [--require a,b] [--out F]
 //! nestquant top --addr H:P                one-shot human telemetry table
 //! nestquant report <table|fig|all>        regenerate paper tables/figures
@@ -41,6 +42,15 @@ fn usage() -> ! {
          \x20 fleet  [--devices D] [--steps K] [--budget-mb M] [--chunk-kb C] [--models M]\n\
          \x20                                    fleet-distribution simulation (synthetic zoo\n\
          \x20                                    when artifacts are missing)\n\
+         \x20 loadgen (--addr HOST:PORT | --store DIR [--synth N])\n\
+         \x20        [--devices D] [--rps R] [--duration-s S] [--seed N]\n\
+         \x20        [--threads T] [--out FILE]\n\
+         \x20                                    open-loop synthetic fleet load (Poisson\n\
+         \x20                                    steady state + cold-start waves + switch\n\
+         \x20                                    storms, Zipf model popularity) replaying a\n\
+         \x20                                    deterministic seeded schedule; writes\n\
+         \x20                                    BENCH_load.json (--store boots a local\n\
+         \x20                                    fleet server over DIR first)\n\
          \x20 metrics --addr HOST:PORT [--prom] [--check] [--require n1,n2] [--out FILE]\n\
          \x20                                    scrape a live server's telemetry snapshot\n\
          \x20                                    (JSON by default, --prom for Prometheus text)\n\
@@ -48,9 +58,11 @@ fn usage() -> ! {
          \x20                                    kernels, fleet, trace tail)\n\
 \x20 select --arch A [--n N] [--live]   adaptive nesting selection (future-work)\n\
          \x20 bench-guard [BENCH_kernels.json]   fail if any expected bench cell is\n\
-         \x20                                    missing, the SIMD tier regressed below\n\
+         \x20        [--load BENCH_load.json]    missing, the SIMD tier regressed below\n\
          \x20                                    SWAR on lane-aligned cells, or the\n\
-         \x20                                    int-domain forward lost to f32-decode\n\
+         \x20                                    int-domain forward lost to f32-decode;\n\
+         \x20                                    --load also gates a loadgen report\n\
+         \x20                                    (all scenario cells, bounded shed)\n\
          \x20 report <what>                      one of: errors storage-ideal storage\n\
          \x20                                    switching similarity nesting nesting-test\n\
          \x20                                    cliff combos traffic comparison ptq-cost\n\
@@ -137,6 +149,7 @@ fn run() -> Result<()> {
         "trace" => cmd_trace(&root, &args),
         "serve" => cmd_serve(&root, &args),
         "fleet" => cmd_fleet(&root, &args),
+        "loadgen" => cmd_loadgen(&args),
         "metrics" => cmd_metrics(&args),
         "top" => cmd_top(&args),
         "select" => cmd_select(&root, &args),
@@ -166,8 +179,23 @@ fn run() -> Result<()> {
 ///   f32-decode baseline — the dequantization-free path must never
 ///   lose meaningfully to decode-then-matmul, or it has no reason to
 ///   be the default `ForwardMode`.
+///
+/// `--load FILE` additionally (or, without a kernels path, *only*)
+/// checks a `BENCH_load.json` written by `nestquant loadgen`: schema
+/// `nq-load-v1`, every scenario cell present and exercised, a bounded
+/// shed rate, and sane latency ordering — a truncated or idle load run
+/// should never pass as "the fleet held up".
 fn cmd_bench_guard(args: &Args) -> Result<()> {
     use nestquant::util::json;
+
+    if let Some(load_path) = args.flag("load") {
+        check_load_report(load_path)?;
+        // --load alone gates only the load run; kernels still checked
+        // when a kernels file is named explicitly
+        if args.positional.get(1).is_none() {
+            return Ok(());
+        }
+    }
 
     const NOISE_BAND: f64 = 0.95;
     const FWD_VS_F32_BAND: f64 = 0.9;
@@ -281,6 +309,62 @@ fn cmd_bench_guard(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The `bench-guard --load` gate over a `nestquant loadgen` report:
+/// completeness (every scenario cell present *and* exercised — a
+/// schedule that skipped cold starts proves nothing about opens) and
+/// health (shed rate bounded, sustained throughput nonzero, per-cell
+/// p99 ≥ p50).
+fn check_load_report(path: &str) -> Result<()> {
+    use nestquant::util::json;
+
+    /// An open-loop driver sheds when the server can't keep up; some
+    /// shed under storms is expected, a majority means collapse.
+    const MAX_SHED_RATE: f64 = 0.5;
+
+    let doc = json::parse_file(std::path::Path::new(path))?;
+    let schema = doc.path(&["schema"])?.as_str()?;
+    anyhow::ensure!(
+        schema == "nq-load-v1",
+        "{path}: unexpected load report schema {schema:?} (expected \"nq-load-v1\")"
+    );
+    let cells = doc.path(&["cells"])?.as_array()?;
+    let mut by_scenario: HashMap<&str, &json::Value> = HashMap::new();
+    for cell in cells {
+        by_scenario.insert(cell.path(&["scenario"])?.as_str()?, cell);
+    }
+    for want in ["steady", "storm", "coldstart"] {
+        let cell = by_scenario.get(want).with_context(|| {
+            format!("{path}: missing load cell {want:?} — the schedule must exercise every scenario")
+        })?;
+        let requests = cell.path(&["requests"])?.as_u64()?;
+        anyhow::ensure!(
+            requests > 0,
+            "{path}: load cell {want:?} recorded zero requests"
+        );
+        let p50 = cell.path(&["p50_us"])?.as_u64()?;
+        let p99 = cell.path(&["p99_us"])?.as_u64()?;
+        anyhow::ensure!(
+            p99 >= p50,
+            "{path}: load cell {want:?} has p99 {p99}us < p50 {p50}us"
+        );
+    }
+    let requests = doc.path(&["requests"])?.as_u64()?;
+    let shed = doc.path(&["shed"])?.as_u64()?;
+    anyhow::ensure!(requests > 0, "{path}: load run recorded zero requests");
+    let shed_rate = shed as f64 / requests as f64;
+    anyhow::ensure!(
+        shed_rate <= MAX_SHED_RATE,
+        "{path}: shed rate {shed_rate:.3} exceeds {MAX_SHED_RATE} ({shed}/{requests} requests)"
+    );
+    let sustained = doc.path(&["sustained_rps"])?.as_f64()?;
+    anyhow::ensure!(sustained > 0.0, "{path}: sustained_rps is zero");
+    println!(
+        "bench-guard: load report ok — sustained {sustained:.1} rps, \
+         shed rate {shed_rate:.3}, all scenario cells present"
+    );
+    Ok(())
+}
+
 fn cmd_info(root: &std::path::Path) -> Result<()> {
     let manifest = nestquant::runtime::Manifest::load(root)?;
     println!("artifacts: {}", root.display());
@@ -337,7 +421,7 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     match idx.checksums {
         // decimal on purpose: the golden fixture normalizes digit runs
         Some(ck) => println!(
-            "  checksums crc64 A={} B={} (A verified at fetch; B checked at upgrade)",
+            "  checksums crc64 A={} B={} (each section verified lazily on first touch)",
             ck.a, ck.b
         ),
         None => println!("  checksums absent (pre-trailer artifact; fetches unverified)"),
@@ -648,6 +732,112 @@ fn cmd_fleet(root: &std::path::Path, args: &Args) -> Result<()> {
         latency.quantile_us(0.99),
         latency.max_us()
     );
+    Ok(())
+}
+
+/// `nestquant loadgen`: open-loop synthetic fleet load against a live
+/// server (`--addr`), or against a fleet server booted in-process over a
+/// store directory (`--store`, optionally seeded with `--synth N`
+/// synthetic containers first). Replays a deterministic seeded schedule
+/// (Poisson steady state, cold-start waves, bitwidth-switch storms,
+/// Zipf-tailed model popularity) through the real `FleetClient` wire
+/// protocol and writes the schema-versioned `BENCH_load.json` that
+/// `bench-guard --load` gates on.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    use nestquant::fleet::{FleetConfig, FleetServer, Zoo};
+    use nestquant::loadgen::{self, LoadgenConfig};
+    use nestquant::util::json;
+
+    let defaults = LoadgenConfig::default();
+    let cfg = LoadgenConfig {
+        devices: args.num("devices", defaults.devices)?,
+        duration: std::time::Duration::from_secs_f64(
+            args.num("duration-s", defaults.duration.as_secs_f64())?,
+        ),
+        rps: args.num("rps", defaults.rps)?,
+        seed: args.num("seed", defaults.seed)?,
+        zipf_s: args.num("zipf", defaults.zipf_s)?,
+        threads: args.num("threads", defaults.threads)?,
+        ..defaults
+    };
+    let out = args.flag("out").unwrap_or("BENCH_load.json");
+
+    // target: an external server, or one booted here over a store dir
+    let (addr, local) = if let Some(addr) = args.flag("addr") {
+        let addr = addr
+            .parse()
+            .with_context(|| format!("--addr {addr:?} is not HOST:PORT"))?;
+        (addr, None)
+    } else if let Some(dir) = args.flag("store") {
+        let dir = std::path::PathBuf::from(dir);
+        let synth: usize = args.num("synth", 0)?;
+        let mut zoo = Zoo::new();
+        if synth > 0 {
+            zoo = nestquant::fleet::synthetic_zoo(&dir, synth, 0xF1EE7)?;
+            println!(
+                "loadgen: seeded {} synthetic containers into {}",
+                zoo.len(),
+                dir.display()
+            );
+        } else {
+            zoo.scan_nest_dir(&dir)?;
+        }
+        anyhow::ensure!(!zoo.is_empty(), "no nest .nq artifacts in {}", dir.display());
+        let handle = FleetServer::start(zoo, FleetConfig::default())?;
+        println!("loadgen: booted fleet server on {}", handle.addr);
+        (handle.addr, Some(handle))
+    } else {
+        bail!("loadgen needs --addr HOST:PORT or --store DIR");
+    };
+
+    println!(
+        "loadgen: {} devices, {:.0} offered rps for {:.0}s (seed {}) against {addr}",
+        cfg.devices,
+        cfg.rps,
+        cfg.duration.as_secs_f64(),
+        cfg.seed
+    );
+    let report = loadgen::run(addr, &cfg)?;
+    println!(
+        "loadgen: {} requests, {} completed, {} shed — sustained {:.1} rps, {:.2} MB paged",
+        report.requests,
+        report.completed,
+        report.shed,
+        report.sustained_rps,
+        report.bytes_paged as f64 / 1e6
+    );
+    println!(
+        "loadgen: {} upgrades (switch p50 {}us p99 {}us), evictions {:.2}/s",
+        report.switches, report.switch_p50_us, report.switch_p99_us, report.eviction_rate_per_s
+    );
+    for (sc, cell) in &report.cells {
+        println!(
+            "  {:<10} {:>6} reqs  {:>6} ok  {:>4} shed  p50 {:>7}us  p99 {:>7}us",
+            sc.label(),
+            cell.requests,
+            cell.completed,
+            cell.shed,
+            cell.p50_us(),
+            cell.p99_us()
+        );
+    }
+    if let Some(s) = &report.server {
+        println!(
+            "loadgen: server Δ — chunk bytes {:.2} MB, cache evictions {}, rate-limited {}, \
+             mapped {:.2} MB, map faults {}",
+            s.chunk_bytes_sent as f64 / 1e6,
+            s.cache_evictions,
+            s.rate_limited,
+            s.mapped_bytes as f64 / 1e6,
+            s.map_faults
+        );
+    }
+    std::fs::write(out, json::to_string(&report.to_json()))
+        .with_context(|| format!("writing {out}"))?;
+    println!("loadgen: wrote {out}");
+    if let Some(handle) = local {
+        handle.stop();
+    }
     Ok(())
 }
 

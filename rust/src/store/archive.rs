@@ -2,11 +2,19 @@
 //! id → shared-archive registry.
 //!
 //! The archive is the single owner of an artifact's bytes: section A is
-//! fetched once and shared (`Arc<[u8]>`), the tensor layout is parsed
-//! once, and section B attaches/detaches as one `Arc` — so the
-//! coordinator's upgrade path moves exactly the section-B bytes and the
-//! downgrade path moves nothing. [`ArchiveStats`] counts every fetch
-//! and parse; tests assert the zeros instead of trusting comments.
+//! fetched once and shared (a [`Bytes`] handle — owned heap bytes, or
+//! an OS-paged mmap window from the default [`MmapSource`]), the tensor
+//! layout is parsed once, and section B attaches/detaches as one handle
+//! — so the coordinator's upgrade path moves exactly the section-B
+//! bytes and the downgrade path moves nothing. [`ArchiveStats`] counts
+//! every fetch and parse; tests assert the zeros instead of trusting
+//! comments.
+//!
+//! Integrity is lazy: when the artifact carries a CRC-64 trailer, each
+//! section is hashed on its *first touch* and the verdict memoized —
+//! opening a 1000-archive zoo costs one header probe per archive, and a
+//! part↔full switch storm re-hashes nothing. A memoized failure keeps
+//! failing (without re-reading); the untouched section keeps serving.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -20,7 +28,7 @@ use crate::nq_trace;
 use crate::telemetry::{registry, TraceKind};
 
 use super::layout::{FullBitModel, ModelLayout, PartBitModel};
-use super::{Bytes, FileSource, MemorySource, Section, SectionSource};
+use super::{Bytes, MemorySource, MmapSource, Section, SectionSource};
 
 /// Byte-accounting counters of one archive. Monotonic; snapshot via
 /// [`NqArchive::stats`].
@@ -40,6 +48,11 @@ pub struct ArchiveStats {
     pub layout_parses: u64,
     /// Section-B releases (downgrades / unloads).
     pub b_releases: u64,
+    /// Of `a_bytes_fetched`, bytes that arrived as mmap windows (OS-
+    /// paged — no heap copy, not counted in the resident gauges).
+    pub a_bytes_mapped: u64,
+    /// Of `b_bytes_fetched`, bytes that arrived as mmap windows.
+    pub b_bytes_mapped: u64,
 }
 
 struct State {
@@ -47,6 +60,11 @@ struct State {
     b: Option<Bytes>,
     layout: Option<Arc<ModelLayout>>,
     stats: ArchiveStats,
+    /// Memoized CRC verdicts (lazy first-touch integrity): `None` =
+    /// never hashed, `Some(ok)` = hashed once, verdict stands for the
+    /// archive's lifetime (sources are immutable by contract).
+    crc_a: Option<bool>,
+    crc_b: Option<bool>,
 }
 
 /// One opened `.nq` artifact over a [`SectionSource`].
@@ -79,13 +97,18 @@ impl NqArchive {
                 b: None,
                 layout: None,
                 stats: ArchiveStats::default(),
+                crc_a: None,
+                crc_b: None,
             }),
         })
     }
 
-    /// Open a `.nq` file (header probe only; no payload reads).
+    /// Open a `.nq` file (header probe only; no payload reads). The
+    /// default source is [`MmapSource`]: sections arrive as OS-paged
+    /// windows where `mmap(2)` is available and as positioned reads
+    /// everywhere else.
     pub fn open(path: impl AsRef<Path>) -> Result<NqArchive> {
-        NqArchive::with_source(Arc::new(FileSource::new(path.as_ref())))
+        NqArchive::with_source(Arc::new(MmapSource::new(path.as_ref())))
     }
 
     /// Wrap a whole in-memory artifact.
@@ -145,7 +168,7 @@ impl NqArchive {
     pub fn ensure_a(&self) -> Result<Bytes> {
         let mut s = self.state();
         if let Some(a) = &s.a {
-            return Ok(Arc::clone(a));
+            return Ok(a.clone());
         }
         faults::fail_point("store.read_a")
             .with_context(|| format!("fetching section A of {}", self.source.describe()))?;
@@ -160,16 +183,29 @@ impl NqArchive {
             self.index.section_a_bytes()
         );
         if let Some(ck) = self.index.checksums {
-            // integrity trailer present: the fetched payload must match
-            // it bit-for-bit (geometry checks can't catch payload flips).
-            // Failpoint `store.crc` forges a mismatch down the same path.
-            if faults::fires("store.crc") || crate::util::crc64::crc64(&a) != ck.a {
-                registry().store.crc_failures.inc();
-                nq_trace!(
-                    TraceKind::CrcFailure,
-                    "section A of {}",
-                    self.source.describe()
-                );
+            // integrity trailer present: the payload must match it bit-
+            // for-bit (geometry checks can't catch payload flips). The
+            // hash runs on first touch only and the verdict is memoized
+            // — a re-fetch after release never re-hashes, and a failed
+            // section keeps failing without re-reading. Failpoint
+            // `store.crc` forges a mismatch down the same path.
+            let ok = match s.crc_a {
+                Some(v) => v,
+                None => {
+                    let v = !faults::fires("store.crc") && crate::util::crc64::crc64(&a) == ck.a;
+                    if !v {
+                        registry().store.crc_failures.inc();
+                        nq_trace!(
+                            TraceKind::CrcFailure,
+                            "section A of {}",
+                            self.source.describe()
+                        );
+                    }
+                    s.crc_a = Some(v);
+                    v
+                }
+            };
+            if !ok {
                 bail!(
                     "section A checksum mismatch for {} (corrupt fetch)",
                     self.source.describe()
@@ -180,14 +216,19 @@ impl NqArchive {
         s.stats.a_bytes_fetched += a.len() as u64;
         registry().store.a_fetches.inc();
         registry().store.a_bytes_fetched.add(a.len() as u64);
-        registry().store.resident_a_bytes.add(a.len() as u64);
+        if a.is_mapped() {
+            // OS-paged window: the heap-residency gauge stays untouched
+            s.stats.a_bytes_mapped += a.len() as u64;
+        } else {
+            registry().store.resident_a_bytes.add(a.len() as u64);
+        }
         nq_trace!(
             TraceKind::PageIn,
             "section A of {} ({} bytes)",
             self.source.describe(),
             a.len()
         );
-        s.a = Some(Arc::clone(&a));
+        s.a = Some(a.clone());
         Ok(a)
     }
 
@@ -208,7 +249,7 @@ impl NqArchive {
         );
         let mut s = self.state();
         if let Some(b) = &s.b {
-            return Ok(Arc::clone(b));
+            return Ok(b.clone());
         }
         faults::fail_point("store.read_b")
             .with_context(|| format!("fetching section B of {}", self.source.describe()))?;
@@ -223,13 +264,25 @@ impl NqArchive {
             self.index.section_b_bytes()
         );
         if let Some(ck) = self.index.checksums {
-            if faults::fires("store.crc") || crate::util::crc64::crc64(&b) != ck.b {
-                registry().store.crc_failures.inc();
-                nq_trace!(
-                    TraceKind::CrcFailure,
-                    "section B of {}",
-                    self.source.describe()
-                );
+            // lazy first-touch hash, memoized verdict (see `ensure_a`) —
+            // this is what makes a switch storm re-hash nothing
+            let ok = match s.crc_b {
+                Some(v) => v,
+                None => {
+                    let v = !faults::fires("store.crc") && crate::util::crc64::crc64(&b) == ck.b;
+                    if !v {
+                        registry().store.crc_failures.inc();
+                        nq_trace!(
+                            TraceKind::CrcFailure,
+                            "section B of {}",
+                            self.source.describe()
+                        );
+                    }
+                    s.crc_b = Some(v);
+                    v
+                }
+            };
+            if !ok {
                 bail!(
                     "section B checksum mismatch for {} (corrupt fetch)",
                     self.source.describe()
@@ -240,14 +293,18 @@ impl NqArchive {
         s.stats.b_bytes_fetched += b.len() as u64;
         registry().store.b_fetches.inc();
         registry().store.b_bytes_fetched.add(b.len() as u64);
-        registry().store.resident_b_bytes.add(b.len() as u64);
+        if b.is_mapped() {
+            s.stats.b_bytes_mapped += b.len() as u64;
+        } else {
+            registry().store.resident_b_bytes.add(b.len() as u64);
+        }
         nq_trace!(
             TraceKind::PageIn,
             "section B of {} ({} bytes)",
             self.source.describe(),
             b.len()
         );
-        s.b = Some(Arc::clone(&b));
+        s.b = Some(b.clone());
         Ok(b)
     }
 
@@ -256,21 +313,25 @@ impl NqArchive {
     /// are untouched — that is the whole point.
     pub fn release_b(&self) -> bool {
         let mut s = self.state();
-        let was = s.b.take().is_some();
-        if was {
-            s.stats.b_releases += 1;
-            registry().store.b_releases.inc();
+        let Some(b) = s.b.take() else { return false };
+        s.stats.b_releases += 1;
+        registry().store.b_releases.inc();
+        if b.is_mapped() {
+            // the OS owns these pages: hint them out rather than
+            // pretending to free heap memory the gauge never counted
+            b.advise_dontneed();
+        } else {
             registry()
                 .store
                 .resident_b_bytes
                 .sub(self.index.section_b_bytes());
-            nq_trace!(
-                TraceKind::PageOut,
-                "section B of {}",
-                self.source.describe()
-            );
         }
-        was
+        nq_trace!(
+            TraceKind::PageOut,
+            "section B of {}",
+            self.source.describe()
+        );
+        true
     }
 
     /// Drop the resident section-A bytes too (full unload; releases a
@@ -279,27 +340,33 @@ impl NqArchive {
     /// re-fetches bytes but never re-parses.
     pub fn release_a(&self) -> bool {
         let mut s = self.state();
-        if s.b.take().is_some() {
+        if let Some(b) = s.b.take() {
             s.stats.b_releases += 1;
             registry().store.b_releases.inc();
-            registry()
-                .store
-                .resident_b_bytes
-                .sub(self.index.section_b_bytes());
+            if b.is_mapped() {
+                b.advise_dontneed();
+            } else {
+                registry()
+                    .store
+                    .resident_b_bytes
+                    .sub(self.index.section_b_bytes());
+            }
         }
-        let was = s.a.take().is_some();
-        if was {
+        let Some(a) = s.a.take() else { return false };
+        if a.is_mapped() {
+            a.advise_dontneed();
+        } else {
             registry()
                 .store
                 .resident_a_bytes
                 .sub(self.index.section_a_bytes());
-            nq_trace!(
-                TraceKind::PageOut,
-                "section A of {}",
-                self.source.describe()
-            );
         }
-        was
+        nq_trace!(
+            TraceKind::PageOut,
+            "section A of {}",
+            self.source.describe()
+        );
+        true
     }
 
     /// The tensor layout, parsed once per archive (fetches section A if
@@ -478,9 +545,9 @@ mod tests {
         let arch = toy_archive(2, 8, 5);
         let p1 = arch.part_bit().unwrap();
         let p2 = arch.part_bit().unwrap();
-        assert!(Arc::ptr_eq(&p1.section_a(), &p2.section_a()), "one A arc");
+        assert!(p1.section_a().ptr_eq(&p2.section_a()), "one A handle");
         let f = arch.full_bit().unwrap();
-        assert!(Arc::ptr_eq(&f.section_a(), &p1.section_a()));
+        assert!(f.section_a().ptr_eq(&p1.section_a()));
         // a dropped full-bit view keeps its B bytes alive through the Arc
         let b = f.section_b();
         arch.release_b();

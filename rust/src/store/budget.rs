@@ -65,11 +65,21 @@ struct Resident {
     archive: Arc<NqArchive>,
     bytes: u64,
     last_used: u64,
+    /// Whether the attached bytes are an OS-paged mmap window. Kept per
+    /// entry so the eviction ledger decrements the side it credited —
+    /// evicting a mapped tenant must never claim to free heap memory
+    /// the budget does not own.
+    mapped: bool,
 }
 
 struct Inner {
     resident: BTreeMap<String, Resident>,
+    /// Owned (heap) resident Section-B bytes.
     used: u64,
+    /// Mapped (OS-paged) resident Section-B bytes — accounted against
+    /// the same cap (a mapped window still occupies address space and
+    /// page cache) but ledgered separately from owned bytes.
+    mapped: u64,
     tick: u64,
     evictions: u64,
     events: VecDeque<BudgetEvent>,
@@ -102,6 +112,7 @@ impl StoreBudget {
             inner: Mutex::new(Inner {
                 resident: BTreeMap::new(),
                 used: 0,
+                mapped: 0,
                 tick: 0,
                 evictions: 0,
                 events: VecDeque::new(),
@@ -120,9 +131,23 @@ impl StoreBudget {
         self.inner.lock().unwrap_or_else(|e| e.into_inner())
     }
 
-    /// Sum of currently resident Section-B bytes (≤ cap, always).
+    /// Sum of currently resident Section-B bytes, owned + mapped
+    /// (≤ cap, always).
     pub fn resident_bytes(&self) -> u64 {
+        let g = self.lock();
+        g.used + g.mapped
+    }
+
+    /// Resident Section-B bytes the budget actually owns (heap copies —
+    /// the memory an eviction genuinely frees).
+    pub fn owned_bytes(&self) -> u64 {
         self.lock().used
+    }
+
+    /// Resident Section-B bytes that are OS-paged mmap windows (counted
+    /// against the cap, but freed by the OS, not by eviction).
+    pub fn mapped_bytes(&self) -> u64 {
+        self.lock().mapped
     }
 
     /// Ids whose section B is currently resident.
@@ -181,7 +206,7 @@ impl StoreBudget {
         // Failpoint `store.evict`: an injected failure aborts the attach
         // with the evictions performed so far already ledgered exactly.
         let mut evicted = Vec::new();
-        while g.used + need > self.cap {
+        while g.used + g.mapped + need > self.cap {
             faults::fail_point("store.evict")
                 .with_context(|| format!("evicting under the budget for {id}"))?;
             let victim = g
@@ -192,7 +217,12 @@ impl StoreBudget {
             let Some(v) = victim else { break };
             let r = g.resident.remove(&v).unwrap();
             r.archive.release_b();
-            g.used -= r.bytes;
+            // decrement the ledger side this entry was credited to
+            if r.mapped {
+                g.mapped -= r.bytes;
+            } else {
+                g.used -= r.bytes;
+            }
             g.evictions += 1;
             registry().store.evictions.inc();
             registry().store.evicted_bytes.add(r.bytes);
@@ -215,13 +245,19 @@ impl StoreBudget {
             .attach_b()
             .with_context(|| format!("attaching section B of {id}"))?;
         debug_assert_eq!(bytes.len() as u64, need);
-        g.used += need;
+        let mapped = bytes.is_mapped();
+        if mapped {
+            g.mapped += need;
+        } else {
+            g.used += need;
+        }
         g.resident.insert(
             id.to_string(),
             Resident {
                 archive: Arc::clone(archive),
                 bytes: need,
                 last_used: tick,
+                mapped,
             },
         );
         push_event(
@@ -242,7 +278,11 @@ impl StoreBudget {
             return false;
         };
         r.archive.release_b();
-        g.used -= r.bytes;
+        if r.mapped {
+            g.mapped -= r.bytes;
+        } else {
+            g.used -= r.bytes;
+        }
         push_event(
             &mut g.events,
             BudgetEvent::Released {
@@ -287,6 +327,9 @@ mod tests {
         assert!(!b.b_resident(), "victim's bytes actually released");
         assert!(a.b_resident() && c.b_resident());
         assert_eq!(budget.resident_bytes(), 2 * b_len);
+        // ledger-exact: memory-backed sections are owned, never mapped
+        assert_eq!(budget.owned_bytes(), 2 * b_len);
+        assert_eq!(budget.mapped_bytes(), 0);
         assert_eq!(budget.evictions(), 1);
         // the victim's release is counted on ITS archive stats
         assert_eq!(b.stats().b_releases, 1);
@@ -321,12 +364,43 @@ mod tests {
         assert!(budget.release_b("a"));
         assert!(!budget.release_b("a"), "second release is a no-op");
         assert_eq!(budget.resident_bytes(), 0);
+        assert_eq!(budget.owned_bytes() + budget.mapped_bytes(), 0);
         assert!(!a.b_resident());
         let events = budget.drain_events();
         assert_eq!(events.len(), 2, "{events:?}");
         assert!(matches!(events[0], BudgetEvent::Attached { .. }));
         assert!(matches!(events[1], BudgetEvent::Released { .. }));
         assert!(budget.drain_events().is_empty(), "drain drains");
+    }
+
+    /// File-backed archives attach mmap windows (with the feature on):
+    /// the cap still binds, evictions still fire, but the bytes land in
+    /// the *mapped* ledger — an eviction never "frees" owned memory the
+    /// budget doesn't hold.
+    #[cfg(all(unix, feature = "mmap"))]
+    #[test]
+    fn mapped_sections_are_ledgered_separately_and_still_evict() {
+        let dir = std::env::temp_dir().join(format!("nq_budget_map_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let open = |seed: u64| -> Arc<NqArchive> {
+            let c = synthetic_nest(seed, 8, 4, 64, 8).unwrap();
+            let path = dir.join(format!("m{seed}.nq"));
+            crate::container::write(&path, &c).unwrap();
+            Arc::new(NqArchive::open(&path).unwrap())
+        };
+        let (a, b) = (open(21), open(22));
+        let b_len = a.section_b_bytes();
+        let budget = StoreBudget::new(b_len); // room for exactly one
+        budget.attach_b("a", &a).unwrap();
+        assert_eq!(budget.mapped_bytes(), b_len, "file-backed B is a mapped window");
+        assert_eq!(budget.owned_bytes(), 0);
+        assert_eq!(a.stats().b_bytes_mapped, b_len);
+        let evicted = budget.attach_b("b", &b).unwrap();
+        assert_eq!(evicted, vec!["a".to_string()], "cap binds mapped bytes too");
+        assert_eq!(budget.mapped_bytes(), b_len);
+        assert_eq!(budget.owned_bytes(), 0);
+        assert!(budget.release_b("b"));
+        assert_eq!(budget.resident_bytes(), 0);
     }
 
     #[test]

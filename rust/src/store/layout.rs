@@ -618,7 +618,7 @@ impl PartBitModel {
 
     /// The resident section-A bytes (shared).
     pub fn section_a(&self) -> Bytes {
-        Arc::clone(&self.a)
+        self.a.clone()
     }
 }
 
@@ -670,11 +670,11 @@ impl FullBitModel {
 
     /// The resident section-A bytes (shared).
     pub fn section_a(&self) -> Bytes {
-        Arc::clone(&self.a)
+        self.a.clone()
     }
 
     /// The resident section-B bytes (shared).
     pub fn section_b(&self) -> Bytes {
-        Arc::clone(&self.b)
+        self.b.clone()
     }
 }

@@ -1,0 +1,316 @@
+//! [`MmapSource`]: a `.nq` artifact on disk served through `mmap(2)`,
+//! so section fetches hand out OS-paged windows instead of heap copies.
+//!
+//! The zoo-scale story: a [`super::FileSource`] fetch reads the whole
+//! section into owned memory, so a 1000-model zoo pays full RAM for
+//! every resident section. Mapping the artifact instead makes a fetch a
+//! pointer-window over the file — the kernel pages bytes in on first
+//! touch (`madvise(MADV_SEQUENTIAL)` hints the sequential decode) and
+//! drops them on memory pressure or an explicit
+//! `madvise(MADV_DONTNEED)` at release. Residency ledgers must treat
+//! such bytes as *not theirs to free* — hence [`super::Bytes::is_mapped`]
+//! and the separate `nq_store_mapped_bytes` gauge.
+//!
+//! Portability and failure policy: the mapping path exists on unix with
+//! the `mmap` cargo feature (default); elsewhere — and whenever the map
+//! attempt fails (failpoint `store.map`, exotic filesystems, fd
+//! pressure) — the source degrades *gracefully* to positioned reads,
+//! byte-identical to `FileSource`, with a `map_fault` trace event and a
+//! `nq_store_map_faults` counter bump instead of an error. The degrade
+//! verdict is memoized: one attempt per source, never one per fetch.
+//!
+//! The syscall bindings are hand-declared (same idiom as
+//! `reactor::sys`): the workspace links no libc crate.
+
+use std::path::{Path, PathBuf};
+use std::sync::OnceLock;
+#[cfg(all(unix, feature = "mmap"))]
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::container::{self, SectionIndex};
+
+use super::{Bytes, Section, SectionSource};
+
+#[cfg(all(unix, feature = "mmap"))]
+mod sys {
+    //! Minimal raw `mmap`/`munmap`/`madvise` declarations (linux/macOS
+    //! share these constant values for the subset used here).
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 0x1;
+    pub const MAP_PRIVATE: c_int = 0x2;
+    pub const MADV_SEQUENTIAL: c_int = 2;
+    pub const MADV_DONTNEED: c_int = 4;
+
+    pub const MAP_FAILED: *mut c_void = usize::MAX as *mut c_void;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+        pub fn madvise(addr: *mut c_void, len: usize, advice: c_int) -> c_int;
+    }
+}
+
+/// One live read-only mapping of a whole artifact. Shared by every
+/// [`Bytes`] window cut from it; unmapped when the last window drops.
+/// The `nq_store_mapped_bytes` gauge tracks the mapping's lifetime.
+#[cfg(all(unix, feature = "mmap"))]
+pub(crate) struct MapRegion {
+    ptr: *mut u8,
+    len: usize,
+}
+
+// Safety: the mapping is PROT_READ-only and owned exclusively by this
+// struct until Drop; aliasing shared `&[u8]` views across threads over
+// immutable pages is sound.
+#[cfg(all(unix, feature = "mmap"))]
+unsafe impl Send for MapRegion {}
+#[cfg(all(unix, feature = "mmap"))]
+unsafe impl Sync for MapRegion {}
+
+#[cfg(all(unix, feature = "mmap"))]
+impl MapRegion {
+    fn map(file: &std::fs::File, len: usize) -> std::io::Result<MapRegion> {
+        use std::os::unix::io::AsRawFd;
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr == sys::MAP_FAILED {
+            return Err(std::io::Error::last_os_error());
+        }
+        crate::telemetry::registry().store.mapped_bytes.add(len as u64);
+        Ok(MapRegion {
+            ptr: ptr as *mut u8,
+            len,
+        })
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.len
+    }
+
+    pub(crate) fn as_slice(&self) -> &[u8] {
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    /// `madvise` over a window, start aligned down to the page (the
+    /// kernel rejects unaligned addresses). Advisory: errors ignored —
+    /// a refused hint changes behavior, never correctness.
+    fn advise(&self, offset: usize, len: usize, advice: i32) {
+        const PAGE: usize = 4096;
+        let start = offset & !(PAGE - 1);
+        let end = (offset + len).min(self.len);
+        if end <= start {
+            return;
+        }
+        let _ = unsafe { sys::madvise(self.ptr.add(start).cast(), end - start, advice) };
+    }
+
+    pub(crate) fn advise_sequential(&self, offset: usize, len: usize) {
+        self.advise(offset, len, sys::MADV_SEQUENTIAL);
+    }
+
+    pub(crate) fn advise_dontneed(&self, offset: usize, len: usize) {
+        self.advise(offset, len, sys::MADV_DONTNEED);
+    }
+}
+
+#[cfg(all(unix, feature = "mmap"))]
+impl Drop for MapRegion {
+    fn drop(&mut self) {
+        crate::telemetry::registry().store.mapped_bytes.sub(self.len as u64);
+        unsafe {
+            sys::munmap(self.ptr.cast(), self.len);
+        }
+    }
+}
+
+#[cfg(all(unix, feature = "mmap"))]
+impl std::fmt::Debug for MapRegion {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "MapRegion({} B)", self.len)
+    }
+}
+
+/// The memoized outcome of this source's single map attempt.
+#[cfg(all(unix, feature = "mmap"))]
+enum MapState {
+    Untried,
+    Ready(Arc<MapRegion>),
+    /// Mapping failed once — every fetch uses positioned reads from now
+    /// on (one fault counted, not one per fetch).
+    Degraded,
+}
+
+/// A `.nq` artifact on disk, sections served as `mmap(2)` windows with
+/// graceful degrade to positioned reads (see the module docs). Drop-in
+/// for [`super::FileSource`]: same memoized header probe, byte-identical
+/// fetches, same `describe()` (the path).
+pub struct MmapSource {
+    path: PathBuf,
+    index: OnceLock<SectionIndex>,
+    #[cfg(all(unix, feature = "mmap"))]
+    map: Mutex<MapState>,
+}
+
+impl MmapSource {
+    pub fn new(path: impl Into<PathBuf>) -> MmapSource {
+        MmapSource {
+            path: path.into(),
+            index: OnceLock::new(),
+            #[cfg(all(unix, feature = "mmap"))]
+            map: Mutex::new(MapState::Untried),
+        }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Map the whole artifact (first fetch only). Failpoint `store.map`
+    /// forges a failure down the same degrade path a real ENOMEM takes.
+    #[cfg(all(unix, feature = "mmap"))]
+    fn try_map(&self) -> Result<Arc<MapRegion>> {
+        crate::faults::fail_point("store.map")?;
+        let file = std::fs::File::open(&self.path)?;
+        let len = file.metadata()?.len();
+        anyhow::ensure!(len > 0, "empty artifact cannot be mapped");
+        Ok(Arc::new(MapRegion::map(&file, len as usize)?))
+    }
+
+    /// A mapped window for `range`, or `None` when this source runs (or
+    /// now degrades to) positioned reads.
+    #[cfg(all(unix, feature = "mmap"))]
+    fn window(&self, range: &std::ops::Range<u64>) -> Option<Bytes> {
+        let mut g = self.map.lock().unwrap_or_else(|e| e.into_inner());
+        if matches!(*g, MapState::Untried) {
+            *g = match self.try_map() {
+                Ok(region) => MapState::Ready(region),
+                Err(e) => {
+                    crate::telemetry::registry().store.map_faults.inc();
+                    crate::nq_trace!(
+                        crate::telemetry::TraceKind::MapFault,
+                        "mmap of {} failed ({e:#}); degrading to positioned reads",
+                        self.path.display()
+                    );
+                    MapState::Degraded
+                }
+            };
+        }
+        match &*g {
+            MapState::Ready(region) if range.end as usize <= region.len() => Some(Bytes::mapped(
+                Arc::clone(region),
+                range.start as usize,
+                (range.end - range.start) as usize,
+            )),
+            _ => None,
+        }
+    }
+}
+
+impl SectionSource for MmapSource {
+    fn index(&self) -> Result<SectionIndex> {
+        if let Some(i) = self.index.get() {
+            return Ok(i.clone());
+        }
+        let idx = container::probe_impl(&self.path)?;
+        // a racer may have probed concurrently; first insert wins
+        Ok(self.index.get_or_init(|| idx).clone())
+    }
+
+    fn fetch(&self, section: Section) -> Result<Bytes> {
+        let idx = SectionSource::index(self)?;
+        let range = match section {
+            Section::A => idx.section_a(),
+            Section::B => idx.section_b(),
+        };
+        // empty sections (A-only artifacts) never justify a mapping
+        #[cfg(all(unix, feature = "mmap"))]
+        if range.start < range.end {
+            if let Some(bytes) = self.window(&range) {
+                bytes.advise_sequential();
+                return Ok(bytes);
+            }
+        }
+        Ok(container::read_range_impl(&self.path, range)?.into())
+    }
+
+    fn describe(&self) -> String {
+        self.path.display().to_string()
+    }
+}
+
+impl std::fmt::Debug for MmapSource {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MmapSource").field("path", &self.path).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::synthetic_nest;
+
+    fn temp_nq(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("nq_mmap_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let c = synthetic_nest(11, 8, 4, 48, 8).unwrap();
+        let path = dir.join("m.nq");
+        container::write(&path, &c).unwrap();
+        path
+    }
+
+    #[test]
+    fn mmap_source_matches_file_source() {
+        let path = temp_nq("ident");
+        let ms = MmapSource::new(&path);
+        let fs = super::super::FileSource::new(&path);
+        assert_eq!(ms.index().unwrap(), fs.index().unwrap());
+        for s in [Section::A, Section::B] {
+            let mb = ms.fetch(s).unwrap();
+            let fb = fs.fetch(s).unwrap();
+            assert_eq!(&mb[..], &fb[..], "section {s}");
+            #[cfg(all(unix, feature = "mmap"))]
+            assert!(mb.is_mapped(), "section {s} should be a mapped window");
+            assert!(!fb.is_mapped());
+        }
+        assert_eq!(ms.describe(), fs.describe());
+    }
+
+    #[cfg(all(unix, feature = "mmap"))]
+    #[test]
+    fn windows_share_one_region_and_advise_is_harmless() {
+        let path = temp_nq("share");
+        let ms = MmapSource::new(&path);
+        let a1 = ms.fetch(Section::A).unwrap();
+        let a2 = ms.fetch(Section::A).unwrap();
+        assert!(a1.ptr_eq(&a2), "one mapping, windows are pointer-equal");
+        a1.advise_sequential();
+        a1.advise_dontneed();
+        // bytes remain readable after DONTNEED (file-backed: refault)
+        assert_eq!(&a1[..], &a2[..]);
+    }
+
+    #[test]
+    fn missing_file_is_a_probe_error_not_a_panic() {
+        let ms = MmapSource::new("/nonexistent/not_there.nq");
+        assert!(ms.index().is_err());
+        assert!(ms.fetch(Section::A).is_err());
+    }
+}

@@ -5,14 +5,16 @@
 //! that economy is visible in the types:
 //!
 //! * [`SectionSource`] — *where bytes come from*: a local file
-//!   ([`FileSource`], positioned reads, memoized header probe), an
+//!   ([`FileSource`], positioned reads, memoized header probe; or
+//!   [`MmapSource`], the same artifact OS-paged through `mmap(2)`), an
 //!   in-memory blob ([`MemorySource`], synthetic zoos and transport
 //!   hand-offs), or a fleet server (`fleet::RemoteSource`).
-//! * [`NqArchive`] — *one open artifact*: fetch section A once into an
-//!   `Arc<[u8]>`, parse the tensor layout once, and hand out borrowed
-//!   views. Section B attaches as a second `Arc` and detaches by
-//!   dropping it — an upgrade is "attach a view", a downgrade is "drop
-//!   a view"; no re-parse, no re-read of section A, ever.
+//! * [`NqArchive`] — *one open artifact*: fetch section A once into a
+//!   shared [`Bytes`] handle, parse the tensor layout once, and hand
+//!   out borrowed views. Section B attaches as a second handle and
+//!   detaches by dropping it — an upgrade is "attach a view", a
+//!   downgrade is "drop a view"; no re-parse, no re-read of section A,
+//!   ever.
 //! * [`PartBitModel`] / [`FullBitModel`] — typed views whose existence
 //!   proves which sections are resident; their [`TensorView`]s decode
 //!   packed weights straight from the shared bytes (no intermediate
@@ -42,6 +44,7 @@
 mod archive;
 mod budget;
 mod layout;
+mod mmap;
 
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, OnceLock};
@@ -56,9 +59,127 @@ pub use layout::{
     F32View, FullBitModel, ModelLayout, PackedView, PartBitModel, PayloadView, TensorLayout,
     TensorView,
 };
+pub use mmap::MmapSource;
 
 /// Shared immutable bytes (one section, or one whole artifact).
-pub type Bytes = Arc<[u8]>;
+///
+/// One cheap-to-clone handle over two representations: heap bytes in an
+/// `Arc<[u8]>` (*owned* — the process pays RAM for them), or a window of
+/// an `mmap(2)`-ed artifact (*mapped*, `mmap` feature on unix — the OS
+/// pages them in and out; see [`MmapSource`]). Everything above the
+/// source layer treats both the same through `Deref<Target = [u8]>`;
+/// only residency accounting cares, via [`Bytes::is_mapped`]: a
+/// [`StoreBudget`] eviction must never claim to "free" memory the OS
+/// owns.
+#[derive(Clone)]
+pub struct Bytes(Repr);
+
+#[derive(Clone)]
+enum Repr {
+    Owned(Arc<[u8]>),
+    #[cfg(all(unix, feature = "mmap"))]
+    Mapped {
+        region: Arc<mmap::MapRegion>,
+        offset: usize,
+        len: usize,
+    },
+}
+
+impl Bytes {
+    fn as_slice(&self) -> &[u8] {
+        match &self.0 {
+            Repr::Owned(a) => a,
+            #[cfg(all(unix, feature = "mmap"))]
+            Repr::Mapped { region, offset, len } => &region.as_slice()[*offset..*offset + *len],
+        }
+    }
+
+    /// Whether these bytes are OS-paged (a live mmap window) rather than
+    /// owned heap memory. Mapped bytes are accounted separately in every
+    /// residency ledger ([`ArchiveStats`], [`StoreBudget`], the
+    /// `nq_store_mapped_bytes` gauge).
+    pub fn is_mapped(&self) -> bool {
+        match &self.0 {
+            Repr::Owned(_) => false,
+            #[cfg(all(unix, feature = "mmap"))]
+            Repr::Mapped { .. } => true,
+        }
+    }
+
+    /// Pointer identity: do two handles view the exact same memory?
+    /// (The newtype's replacement for `Arc::ptr_eq` on the old alias.)
+    pub fn ptr_eq(&self, other: &Bytes) -> bool {
+        let (a, b) = (self.as_slice(), other.as_slice());
+        std::ptr::eq(a.as_ptr(), b.as_ptr()) && a.len() == b.len()
+    }
+
+    /// Wrap a window of a mapped region (the [`MmapSource`] fetch path).
+    #[cfg(all(unix, feature = "mmap"))]
+    pub(crate) fn mapped(region: Arc<mmap::MapRegion>, offset: usize, len: usize) -> Bytes {
+        debug_assert!(offset + len <= region.len());
+        Bytes(Repr::Mapped { region, offset, len })
+    }
+
+    /// `madvise(MADV_SEQUENTIAL)` over a mapped window — the read-ahead
+    /// hint before a front-to-back decode. No-op for owned bytes;
+    /// advisory, so refusals are ignored.
+    pub fn advise_sequential(&self) {
+        match &self.0 {
+            Repr::Owned(_) => {}
+            #[cfg(all(unix, feature = "mmap"))]
+            Repr::Mapped { region, offset, len } => region.advise_sequential(*offset, *len),
+        }
+    }
+
+    /// `madvise(MADV_DONTNEED)` over a mapped window — tells the OS the
+    /// pages can go (the mmap analogue of dropping owned section bytes
+    /// on `release_b`). No-op for owned bytes; advisory.
+    pub fn advise_dontneed(&self) {
+        match &self.0 {
+            Repr::Owned(_) => {}
+            #[cfg(all(unix, feature = "mmap"))]
+            Repr::Mapped { region, offset, len } => region.advise_dontneed(*offset, *len),
+        }
+    }
+}
+
+impl std::ops::Deref for Bytes {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl AsRef<[u8]> for Bytes {
+    fn as_ref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl From<Vec<u8>> for Bytes {
+    fn from(v: Vec<u8>) -> Bytes {
+        Bytes(Repr::Owned(v.into()))
+    }
+}
+
+impl From<&[u8]> for Bytes {
+    fn from(v: &[u8]) -> Bytes {
+        Bytes(Repr::Owned(v.into()))
+    }
+}
+
+impl From<Arc<[u8]>> for Bytes {
+    fn from(a: Arc<[u8]>) -> Bytes {
+        Bytes(Repr::Owned(a))
+    }
+}
+
+impl std::fmt::Debug for Bytes {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let tag = if self.is_mapped() { "mapped" } else { "owned" };
+        write!(f, "Bytes({} B, {tag})", self.as_slice().len())
+    }
+}
 
 /// Which `.nq` section a byte range or transfer refers to.
 ///
@@ -219,8 +340,8 @@ impl SectionSource for MemorySource {
 
     fn fetch(&self, section: Section) -> Result<Bytes> {
         Ok(match section {
-            Section::A => Arc::clone(&self.a),
-            Section::B => Arc::clone(&self.b),
+            Section::A => self.a.clone(),
+            Section::B => self.b.clone(),
         })
     }
 

@@ -270,6 +270,12 @@ pub struct StoreTelemetry {
     pub resident_a_bytes: Gauge,
     /// Section-B bytes currently resident across all archives.
     pub resident_b_bytes: Gauge,
+    /// Bytes currently under live `mmap` regions (OS-paged, not owned —
+    /// disjoint from the resident gauges, which count heap bytes only).
+    pub mapped_bytes: Gauge,
+    /// `MmapSource` map attempts that failed and degraded to positioned
+    /// reads (failpoint `store.map` fires down the same path).
+    pub map_faults: Counter,
 }
 
 impl StoreTelemetry {
@@ -286,6 +292,8 @@ impl StoreTelemetry {
             evicted_bytes: Counter::new(),
             resident_a_bytes: Gauge::new(),
             resident_b_bytes: Gauge::new(),
+            mapped_bytes: Gauge::new(),
+            map_faults: Counter::new(),
         }
     }
 }
@@ -570,6 +578,9 @@ pub enum TraceKind {
     Switch,
     /// A CRC integrity check refused section bytes.
     CrcFailure,
+    /// An `mmap` attempt failed; the source degraded to positioned
+    /// reads.
+    MapFault,
     /// A chunked transfer was interrupted and retried/resumed.
     ChunkRetry,
     /// Kernel dispatch-tier selection (plan resolution, not per call).
@@ -594,6 +605,7 @@ impl TraceKind {
             TraceKind::Eviction => "eviction",
             TraceKind::Switch => "switch",
             TraceKind::CrcFailure => "crc_failure",
+            TraceKind::MapFault => "map_fault",
             TraceKind::ChunkRetry => "chunk_retry",
             TraceKind::KernelDispatch => "kernel_dispatch",
             TraceKind::Fairness => "fairness",
@@ -611,6 +623,7 @@ impl TraceKind {
             "eviction" => TraceKind::Eviction,
             "switch" => TraceKind::Switch,
             "crc_failure" => TraceKind::CrcFailure,
+            "map_fault" => TraceKind::MapFault,
             "chunk_retry" => TraceKind::ChunkRetry,
             "kernel_dispatch" => TraceKind::KernelDispatch,
             "fairness" => TraceKind::Fairness,
@@ -861,6 +874,7 @@ mod tests {
             TraceKind::Eviction,
             TraceKind::Switch,
             TraceKind::CrcFailure,
+            TraceKind::MapFault,
             TraceKind::ChunkRetry,
             TraceKind::KernelDispatch,
             TraceKind::Fairness,

@@ -105,6 +105,7 @@ impl Snapshot {
         c("nq_store_b_releases", r.store.b_releases.get());
         c("nq_store_evictions", r.store.evictions.get());
         c("nq_store_evicted_bytes", r.store.evicted_bytes.get());
+        c("nq_store_map_faults", r.store.map_faults.get());
 
         for (oi, op) in KERNEL_OPS.iter().enumerate() {
             for (ti, tier) in KERNEL_TIERS.iter().enumerate() {
@@ -156,6 +157,10 @@ impl Snapshot {
             (
                 "nq_store_resident_b_bytes".to_string(),
                 r.store.resident_b_bytes.get(),
+            ),
+            (
+                "nq_store_mapped_bytes".to_string(),
+                r.store.mapped_bytes.get(),
             ),
             (
                 "nq_serving_queue_depth".to_string(),
@@ -492,12 +497,15 @@ impl Snapshot {
         }
         let _ = writeln!(
             out,
-            "store:   residentA={}B residentB={}B evictions={} evicted={}B crc_failures={}",
+            "store:   residentA={}B residentB={}B mapped={}B evictions={} evicted={}B \
+             crc_failures={} map_faults={}",
             g("nq_store_resident_a_bytes"),
             g("nq_store_resident_b_bytes"),
+            g("nq_store_mapped_bytes"),
             c("nq_store_evictions"),
             c("nq_store_evicted_bytes"),
             c("nq_store_crc_failures"),
+            c("nq_store_map_faults"),
         );
         let mut kernels = String::new();
         for (ti, tier) in KERNEL_TIERS.iter().enumerate() {

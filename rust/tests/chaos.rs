@@ -39,7 +39,7 @@ use nestquant::coordinator::server::{
 use nestquant::coordinator::{Decision, SwitchCost, Variant};
 use nestquant::faults::{self, FaultMode, FaultSpec};
 use nestquant::fleet::{FleetConfig, FleetServer, RemoteSource, Zoo};
-use nestquant::store::{FileSource, NqArchive, SectionSource, StoreBudget};
+use nestquant::store::{FileSource, MmapSource, NqArchive, SectionSource, StoreBudget};
 use nestquant::telemetry::registry;
 
 const TIMEOUT: Duration = Duration::from_secs(30);
@@ -525,4 +525,83 @@ fn injected_evict_failure_keeps_budget_ledger_exact() {
     assert_eq!(evicted, vec!["m0".to_string()]);
     assert_eq!(budget.resident_bytes(), b_len, "ledger exact after recovery");
     assert_eq!(budget.evictions(), evictions0 + 1);
+    // in-memory sources yield owned bytes: the whole ledger is on the
+    // owned side, and the mapped side never went negative-by-proxy
+    assert_eq!(budget.owned_bytes(), b_len, "owned side carries the ledger");
+    assert_eq!(budget.mapped_bytes(), 0, "no mmap windows from MemorySource");
+}
+
+/// Lazy CRC with an injected `store.crc` failure: the first touch fails
+/// and the verdict is **memoized** — the section keeps failing after
+/// the fault clears (no silent self-heal on a corrupt read), the
+/// failure counter ticks exactly once, and the untouched section's
+/// verdict is independent and clean.
+#[test]
+fn injected_crc_failure_memoizes_verdict_per_section() {
+    let _g = serial();
+    faults::clear();
+    let arch = archive(0xC4C0);
+    let crc0 = registry().store.crc_failures.get();
+
+    // fires on the first hash only; section B's later first touch
+    // consults an exhausted spec and verifies for real
+    faults::arm("store.crc", FaultSpec::always(FaultMode::Err).times(1));
+    let err = format!("{:#}", arch.ensure_a().unwrap_err());
+    assert!(err.contains("section A checksum mismatch"), "{err}");
+    assert_eq!(registry().store.crc_failures.get() - crc0, 1);
+
+    faults::clear();
+    // memoized: still failing, but WITHOUT re-hashing or re-counting
+    let err2 = format!("{:#}", arch.ensure_a().unwrap_err());
+    assert!(err2.contains("section A checksum mismatch"), "{err2}");
+    assert_eq!(
+        registry().store.crc_failures.get() - crc0,
+        1,
+        "memoized failure re-bails without re-counting"
+    );
+
+    // section B's verdict is its own: it verifies and attaches cleanly
+    let b = arch.attach_b().unwrap();
+    assert_eq!(b.len() as u64, arch.section_b_bytes());
+    let s = arch.stats();
+    assert_eq!(s.a_fetches, 0, "a failed A never counts as fetched");
+    assert_eq!(s.b_fetches, 1);
+}
+
+/// `store.map` failpoint: an injected mmap failure degrades the source
+/// to positioned reads — same bytes, owned instead of mapped, one
+/// `map_faults` tick — and the degraded verdict is memoized (no
+/// remap attempt per fetch).
+#[cfg(all(unix, feature = "mmap"))]
+#[test]
+fn injected_map_failure_degrades_to_positioned_reads() {
+    use nestquant::store::Section;
+
+    let _g = serial();
+    faults::clear();
+    let dir = temp_dir("mapfault");
+    let path = dir.join("m.nq");
+    let c = container::synthetic_nest(0x3A90, 8, 4, 64, 8).unwrap();
+    container::write(&path, &c).unwrap();
+    let faults0 = registry().store.map_faults.get();
+
+    faults::arm("store.map", FaultSpec::always(FaultMode::Err).times(1));
+    let src = MmapSource::new(&path);
+    let a = src.fetch(Section::A).unwrap();
+    assert!(!a.is_mapped(), "degraded fetch must be owned bytes");
+    assert_eq!(registry().store.map_faults.get() - faults0, 1);
+
+    faults::clear();
+    // the degrade verdict is memoized: no second map attempt, still
+    // serving owned bytes, and they are byte-identical to a FileSource
+    let b = src.fetch(Section::B).unwrap();
+    assert!(!b.is_mapped());
+    assert_eq!(
+        registry().store.map_faults.get() - faults0,
+        1,
+        "one fault recorded for the source's single map attempt"
+    );
+    let file = FileSource::new(&path);
+    assert_eq!(&a[..], &file.fetch(Section::A).unwrap()[..]);
+    assert_eq!(&b[..], &file.fetch(Section::B).unwrap()[..]);
 }
